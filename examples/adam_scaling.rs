@@ -1,0 +1,24 @@
+//! Fig. 2b reproduction: Adam training of a single linear layer on a noisy
+//! target induces `σ_col(W) ∝ 1/sqrt(s_x)` — the mechanism behind SINQ's
+//! calibration-free activation-awareness.
+//!
+//! ```bash
+//! cargo run --release --example adam_scaling
+//! ```
+
+use sinq::eval::r2::adam_scaling_experiment;
+
+fn main() {
+    println!("Training single linear layers with Adam on noisy targets…\n");
+    println!("{:>6} {:>6} {:>7} {:>9} {:>7}", "nout", "nin", "steps", "slope", "R²");
+    for (nout, nin, steps, seed) in
+        [(32usize, 64usize, 800usize, 1u64), (32, 64, 2000, 2), (64, 128, 2000, 3), (64, 128, 4000, 4)]
+    {
+        let (slope, r2, _, _) = adam_scaling_experiment(nout, nin, steps, seed);
+        println!("{nout:>6} {nin:>6} {steps:>7} {slope:>9.3} {r2:>7.3}");
+    }
+    println!(
+        "\nPaper's prediction: slope → −0.5 at stationarity (σ_W ∝ 1/sqrt(s_x), Eq. 4).\n\
+         Short runs are still converging; long runs land near −0.5 with high R²."
+    );
+}

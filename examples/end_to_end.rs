@@ -1,0 +1,82 @@
+//! End-to-end driver (the repo's full-stack validation, recorded in
+//! EXPERIMENTS.md): loads the **trained** `tiny` checkpoint produced by
+//! `make artifacts`, pushes it through the coordinator pipeline with
+//! RTN / HQQ / SINQ at 3 and 4 bits, evaluates held-out perplexity through
+//! the PJRT forward artifact (L1 Pallas → L2 JAX → HLO → L3 Rust), and
+//! asserts the paper's headline *shape*:
+//!
+//!   * ppl(SINQ) < ppl(RTN) at both widths, and
+//!   * SINQ closes ≥ 25% of RTN's 3-bit gap to the FP baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use sinq::coordinator::pipeline::{self, PipelineOpts};
+use sinq::coordinator::scheduler;
+use sinq::quant::{Method, QuantConfig};
+use sinq::report::tables::Ctx;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new("artifacts", false)?;
+    let mw = ctx.load_model("tiny")?;
+    println!(
+        "model tiny: {} params, {} quantizable linears",
+        mw.cfg.n_params(),
+        mw.cfg.quantizable_names().len()
+    );
+
+    let fp_wiki = ctx.ppl_fp(&mw, "wiki")?;
+    let fp_c4 = ctx.ppl_fp(&mw, "c4")?;
+    println!("fp32 baseline: wiki {fp_wiki:.3}  c4 {fp_c4:.3}\n");
+
+    let mut results: Vec<(String, u32, f64, f64)> = Vec::new();
+    for bits in [3u32, 4] {
+        for method in [Method::Rtn, Method::Hqq, Method::Sinq] {
+            let cfg = QuantConfig::new(method, bits);
+            let (qm, secs) = pipeline::run(&mw, &cfg, &PipelineOpts::default())?;
+            let eff = qm.effective_weights();
+            let wiki = ctx.ppl_eff(&mw, &eff, &qm.fvectors, "wiki")?;
+            let c4 = ctx.ppl_eff(&mw, &eff, &qm.fvectors, "c4")?;
+            println!(
+                "{bits}-bit {:<6} wiki {wiki:.3}  c4 {c4:.3}  (quantized in {secs:.2}s)",
+                method.name()
+            );
+            results.push((method.name().to_string(), bits, wiki, c4));
+        }
+    }
+
+    // Headline-shape assertions (the end-to-end contract).
+    let get = |m: &str, b: u32| {
+        results.iter().find(|(n, bb, _, _)| n == m && *bb == b).map(|r| (r.2, r.3)).unwrap()
+    };
+    for bits in [3u32, 4] {
+        let (rtn_w, rtn_c) = get("rtn", bits);
+        let (sinq_w, sinq_c) = get("sinq", bits);
+        assert!(
+            sinq_w <= rtn_w && sinq_c <= rtn_c,
+            "{bits}-bit: SINQ ({sinq_w:.3}/{sinq_c:.3}) must not lose to RTN ({rtn_w:.3}/{rtn_c:.3})"
+        );
+    }
+    let (rtn3_w, _) = get("rtn", 3);
+    let (sinq3_w, _) = get("sinq", 3);
+    let gap_reduction = (rtn3_w - sinq3_w) / (rtn3_w - fp_wiki).max(1e-9);
+    println!("\n3-bit wiki FP-gap reduction by SINQ vs RTN: {:.0}%", 100.0 * gap_reduction);
+    assert!(
+        gap_reduction >= 0.25,
+        "expected ≥25% gap reduction, measured {:.0}%",
+        100.0 * gap_reduction
+    );
+
+    // Exercise the serving path too: a short decode through the W4 artifact.
+    let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(sinq::quant::AuxPrecision::F32);
+    let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
+    let mut dec = sinq::runtime::PjrtDecoder::new_w4(
+        &ctx.rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors,
+    )?;
+    let out = dec.generate(b"The ancient river ", 24)?;
+    println!("W4A16 decode sample: {:?}", String::from_utf8_lossy(&out));
+
+    println!("\nEND-TO-END OK: all layers composed, headline shape holds.");
+    Ok(())
+}

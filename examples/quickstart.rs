@@ -1,0 +1,50 @@
+//! Quickstart: quantize one layer with SINQ and inspect what Algorithm 1 did.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! Works with or without `make artifacts` (falls back to a synthetic
+//! LLM-like matrix when no checkpoint is present).
+
+use sinq::coordinator::scheduler::load_or_synthetic;
+use sinq::quant::sinq::sinkhorn_normalize;
+use sinq::quant::{metrics, quantize_matrix, Method, QuantConfig};
+use sinq::tensor::stats;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Get a weight matrix (a real trained layer if artifacts exist).
+    let mw = load_or_synthetic("artifacts", "tiny", 42);
+    let name = "layers.0.wo";
+    let w = mw.tensors[name].clone();
+    println!("layer {name}: {}×{}", w.rows, w.cols);
+    println!("  initial imbalance I(W) = {:.2}", stats::imbalance(&w));
+
+    // 2. Algorithm 1's normalization on its own.
+    let sk = sinkhorn_normalize(&w, 24, (0.5, 2.0));
+    println!("  after Sinkhorn        = {:.2}  (best iterate)", sk.imbalance);
+
+    // 3. Quantize with the baselines and SINQ at 3 and 4 bits.
+    for bits in [3u32, 4] {
+        println!("\n  {bits}-bit weight reconstruction error (relative Frobenius):");
+        for method in [Method::Rtn, Method::HadamardRtn, Method::Hqq, Method::Sinq] {
+            let q = quantize_matrix(&w, &QuantConfig::new(method, bits), None)?;
+            println!(
+                "    {:<14} err = {:.5}   ({:.2} bits/weight incl. aux)",
+                method.name(),
+                metrics::weight_recon_error(&w, &q),
+                q.bits_per_weight()
+            );
+        }
+    }
+
+    // 4. The dual-scale layer is a drop-in: dequantize or run Eq. 7.
+    let q = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 4), None)?;
+    let t = q.col_scale.as_ref().unwrap();
+    println!(
+        "\n  SINQ auxiliary sizes: scales {}×{}, shifts {}×{}, t[{}] (applied to activations, Eq. 7)",
+        q.scales.rows, q.scales.cols,
+        q.shifts.as_ref().unwrap().rows, q.shifts.as_ref().unwrap().cols,
+        t.len(),
+    );
+    Ok(())
+}

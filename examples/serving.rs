@@ -1,0 +1,81 @@
+//! Serving demo: dynamic batching router + autoregressive decode.
+//!
+//! Spawns the [`BatchServer`] (scoring requests batched 4-way into one PJRT
+//! execution), fires concurrent clients at it, then runs a W16-vs-W4 decode
+//! comparison — the Table 6 workload in miniature.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving
+//! ```
+
+use std::time::{Duration, Instant};
+
+use sinq::coordinator::scheduler;
+use sinq::coordinator::server::BatchServer;
+use sinq::quant::{AuxPrecision, Method, QuantConfig};
+use sinq::runtime::{PjrtDecoder, PjrtForward, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let art = "artifacts";
+    let model = "tiny";
+
+    // --- Part 1: batched scoring through the router ---------------------
+    let server = BatchServer::spawn(
+        {
+            let (art, model) = (art.to_string(), model.to_string());
+            move || {
+                let rt = PjrtRuntime::cpu(&art)?;
+                let mw = scheduler::load_family_member(&art, &model)?;
+                PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)
+            }
+        },
+        64,
+        Duration::from_millis(4),
+    );
+    let corpus = sinq::data::Corpus::load(art, "wiki", "eval")?;
+    let windows: Vec<Vec<u8>> =
+        corpus.eval_windows(128, 32).into_iter().map(|w| w.to_vec()).collect();
+    let client = server.client();
+    let t0 = Instant::now();
+    let handles: Vec<_> = windows
+        .into_iter()
+        .map(|w| {
+            let c = client.clone();
+            std::thread::spawn(move || c.score(w).map(|m| m.rows))
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "router: {} requests in {} batches (avg {:.2}/batch), {:.0} tok/s",
+        stats.requests,
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.tokens as f64 / secs,
+    );
+
+    // --- Part 2: decode loop, FP vs W4A16 -------------------------------
+    let rt = PjrtRuntime::cpu(art)?;
+    let mw = scheduler::load_family_member(art, model)?;
+    let prompt = &corpus.data[..64];
+
+    let mut dec = PjrtDecoder::new_fp(&rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+    let t0 = Instant::now();
+    let out_fp = dec.generate(prompt, 64)?;
+    let fp_tps = 128.0 / t0.elapsed().as_secs_f64();
+
+    let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
+    let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
+    let mut dec4 = PjrtDecoder::new_w4(&rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors)?;
+    let t0 = Instant::now();
+    let out_w4 = dec4.generate(prompt, 64)?;
+    let w4_tps = 128.0 / t0.elapsed().as_secs_f64();
+
+    println!("decode fp32:   {fp_tps:.0} tok/s  → {:?}", String::from_utf8_lossy(&out_fp[..32]));
+    println!("decode W4A16:  {w4_tps:.0} tok/s  → {:?}", String::from_utf8_lossy(&out_w4[..32]));
+    println!("W4/FP speed ratio: {:.2}x", w4_tps / fp_tps);
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax ≥0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` crate) rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md and aot_recipe).
+
+Artifacts (written to ``artifacts/``, indexed in ``manifest.json``):
+
+  fwd_{name}.hlo.txt          full-sequence forward, tokens (4,128) i32 +
+                              f32 weights → logits. One artifact serves every
+                              quantization method (effective weights are
+                              runtime arguments).
+  decode_{name}.hlo.txt       single-token decode with KV cache (f32/FP16
+                              serving baseline, Table 6).
+  decode_{name}_w4.hlo.txt    W4A16 decode: linears run the Pallas fused
+                              dequant-matmul on int8 codes (Eq. 7 path).
+  dqmm_b{B}_d{D}[_dual].hlo.txt  Table 5 kernel-overhead benchmark pairs.
+  sinq_quantize_{R}x{C}.hlo.txt  Algorithm 1 (Pallas sinkhorn + RTN) for each
+                              distinct weight shape — the PJRT-accelerated
+                              quantization path.
+
+Python runs once; after this the `sinq` binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.dequant_matmul import dequant_matmul
+from .kernels.rtn import rtn_quantize
+from .kernels.sinkhorn import sinkhorn_normalize
+from .model import FAMILY, Config, decode_step, decode_step_quant, forward, quantizable_names, weight_names
+from . import stz
+
+DECODE_CTX = 768  # 256 prompt + 512 generation (Table 6 setting)
+FWD_BATCH, FWD_SEQ = 4, 128
+GROUP = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)//1024} KiB)", flush=True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def weight_specs(cfg: Config, params_shape: dict[str, tuple]) -> list:
+    return [spec(params_shape[n]) for n in weight_names(cfg)]
+
+
+def shapes_of(cfg: Config) -> dict[str, tuple]:
+    from .model import init_params
+
+    return {k: v.shape for k, v in init_params(cfg, 0).items()}
+
+
+def lower_forward(cfg: Config, shapes: dict[str, tuple]):
+    names = weight_names(cfg)
+
+    def fn(tokens, *flat):
+        params = dict(zip(names, flat))
+        return (forward(params, tokens, cfg),)
+
+    args = [spec((FWD_BATCH, FWD_SEQ), jnp.int32)] + [spec(shapes[n]) for n in names]
+    return jax.jit(fn).lower(*args)
+
+
+def lower_decode(cfg: Config, shapes: dict[str, tuple]):
+    names = weight_names(cfg)
+    kv_shape = (cfg.layers, 2, 1, cfg.heads, DECODE_CTX, cfg.head_dim)
+
+    def fn(token, pos, kv, *flat):
+        params = dict(zip(names, flat))
+        logits, new_kv = decode_step(params, token, pos, kv, cfg)
+        # Single flat output: multi-element tuple outputs cannot be
+        # downloaded through xla_extension 0.5.1's ToLiteralSync (see
+        # rust/src/runtime/exec.rs); rust splits at vocab.
+        return (jnp.concatenate([logits.reshape(-1), new_kv.reshape(-1)]),)
+
+    args = [spec((1,), jnp.int32), spec((), jnp.int32), spec(kv_shape)] + [
+        spec(shapes[n]) for n in names
+    ]
+    return jax.jit(fn).lower(*args)
+
+
+def lower_decode_w4(cfg: Config, shapes: dict[str, tuple]):
+    qnames = quantizable_names(cfg)
+    fnames = [n for n in weight_names(cfg) if n not in qnames]
+    kv_shape = (cfg.layers, 2, 1, cfg.heads, DECODE_CTX, cfg.head_dim)
+
+    def fn(token, pos, kv, *flat):
+        fparams = dict(zip(fnames, flat[: len(fnames)]))
+        rest = flat[len(fnames):]
+        qparams = {}
+        for qi, name in enumerate(qnames):
+            codes, scales, shifts, t = rest[qi * 4 : qi * 4 + 4]
+            qparams[name] = (codes, scales, shifts, t)
+        logits, new_kv = decode_step_quant(qparams, fparams, token, pos, kv, cfg, group=GROUP)
+        return (jnp.concatenate([logits.reshape(-1), new_kv.reshape(-1)]),)
+
+    args = [spec((1,), jnp.int32), spec(()), spec(kv_shape)]
+    args[1] = spec((), jnp.int32)
+    args += [spec(shapes[n]) for n in fnames]
+    for name in qnames:
+        out_d, in_d = shapes[name]
+        args += [
+            spec((out_d, in_d), jnp.int8),
+            spec((out_d, in_d // GROUP)),
+            spec((out_d, in_d // GROUP)),
+            spec((in_d,)),
+        ]
+    return jax.jit(fn).lower(*args), fnames, qnames
+
+
+def lower_dqmm(b: int, d: int, dual: bool):
+    def fn(x, codes, scales, shifts, t):
+        tt = t if dual else None
+        return (dequant_matmul(x, codes, scales, shifts, tt, group=GROUP,
+                               bm=min(16, b), bn=64, bk=64),)
+
+    args = [
+        spec((b, d)),
+        spec((d, d), jnp.int8),
+        spec((d, d // GROUP)),
+        spec((d, d // GROUP)),
+        spec((d,)),
+    ]
+    return jax.jit(fn).lower(*args)
+
+
+def lower_sinq_quantize(rows: int, cols: int, bits: int = 4):
+    def fn(w):
+        s, t = sinkhorn_normalize(w)
+        w_hat = w / s[:, None] / t[None, :]
+        codes, s_q, z = rtn_quantize(w_hat, bits=bits, group=GROUP,
+                                     block_rows=min(64, rows))
+        return codes, s_q * s[:, None], z, t
+
+    return jax.jit(fn).lower(spec((rows, cols)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art-dir", default="../artifacts")
+    ap.add_argument("--models", default="pico,tiny,small,tiny_moe")
+    ap.add_argument("--skip-w4", action="store_true",
+                    help="skip the (slow to lower) W4 decode artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.art_dir, exist_ok=True)
+    manifest: dict = {"group": GROUP, "fwd": {}, "decode": {}, "decode_w4": {},
+                      "dqmm": [], "sinq_quantize": []}
+
+    for name in args.models.split(","):
+        cfg = FAMILY[name]
+        shapes = shapes_of(cfg)
+        path = f"{args.art_dir}/fwd_{name}.hlo.txt"
+        if not os.path.exists(path):
+            write(path, to_hlo_text(lower_forward(cfg, shapes)))
+        manifest["fwd"][name] = {
+            "tokens": [FWD_BATCH, FWD_SEQ],
+            "weights": weight_names(cfg),
+        }
+
+        path = f"{args.art_dir}/decode_{name}.hlo.txt"
+        if not os.path.exists(path):
+            write(path, to_hlo_text(lower_decode(cfg, shapes)))
+        manifest["decode"][name] = {
+            "ctx": DECODE_CTX,
+            "weights": weight_names(cfg),
+        }
+
+        if not args.skip_w4 and name in ("tiny", "small"):
+            path = f"{args.art_dir}/decode_{name}_w4.hlo.txt"
+            if not os.path.exists(path):
+                lowered, fnames, qnames = lower_decode_w4(cfg, shapes)
+                write(path, to_hlo_text(lowered))
+            else:
+                qnames = quantizable_names(cfg)
+                fnames = [n for n in weight_names(cfg) if n not in qnames]
+            manifest["decode_w4"][name] = {
+                "ctx": DECODE_CTX, "fweights": fnames, "qweights": qnames,
+            }
+
+    # Table 5 kernel pairs.
+    for b in (1, 64):
+        for d in (1024, 2048):
+            for dual in (False, True):
+                suffix = "_dual" if dual else ""
+                path = f"{args.art_dir}/dqmm_b{b}_d{d}{suffix}.hlo.txt"
+                if not os.path.exists(path):
+                    write(path, to_hlo_text(lower_dqmm(b, d, dual)))
+                manifest["dqmm"].append({"b": b, "d": d, "dual": dual})
+
+    # Algorithm-1 quantization artifacts for every distinct quantizable shape.
+    shapes_needed = sorted(
+        {
+            shapes_of(FAMILY[m])[n]
+            for m in args.models.split(",")
+            for n in quantizable_names(FAMILY[m])
+            if shapes_of(FAMILY[m])[n][1] % GROUP == 0
+        }
+    )
+    for rows, cols in shapes_needed:
+        path = f"{args.art_dir}/sinq_quantize_{rows}x{cols}.hlo.txt"
+        if not os.path.exists(path):
+            write(path, to_hlo_text(lower_sinq_quantize(rows, cols)))
+        manifest["sinq_quantize"].append([rows, cols])
+
+    with open(f"{args.art_dir}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("  manifest.json updated", flush=True)
+
+
+if __name__ == "__main__":
+    main()

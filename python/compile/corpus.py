@@ -1,0 +1,127 @@
+"""Synthetic training/evaluation corpora.
+
+Substitute for WikiText2 / C4 (no dataset downloads in this environment; see
+DESIGN.md §3): two *distinct* text distributions produced by a seeded
+template-and-Markov generator over a built-in vocabulary.
+
+* ``synthwiki`` — encyclopedic register: declarative sentences, section
+  headings, years/numbers, entity repetition within an "article".
+* ``synthc4``  — web register: mixed topics, imperative/second-person
+  sentences, lists, noisier punctuation.
+
+Both are byte-level tokenizable (ASCII). The generator is pure Python with an
+explicit LCG so the corpus is bit-identical across runs and platforms; the
+bytes are saved into ``artifacts/`` and the Rust evaluators load exactly the
+same data the model was trained on.
+"""
+
+from __future__ import annotations
+
+
+class Lcg:
+    """Deterministic 64-bit LCG (platform-independent)."""
+
+    def __init__(self, seed: int):
+        self.s = (seed ^ 0x9E3779B97F4A7C15) & ((1 << 64) - 1)
+
+    def next(self) -> int:
+        self.s = (self.s * 6364136223846793005 + 1442695040888963407) & ((1 << 64) - 1)
+        return self.s >> 33
+
+    def below(self, n: int) -> int:
+        return self.next() % n
+
+    def choice(self, xs):
+        return xs[self.below(len(xs))]
+
+
+NOUNS = (
+    "system river empire theory engine council valley method garden signal "
+    "market temple compiler harbor museum planet circuit forest treaty sensor "
+    "archive bridge colony dialect furnace glacier habitat isotope journal "
+    "kernel lattice meadow nebula orchard pigment quarry reactor stadium "
+    "tunnel vessel windmill zephyr algorithm basin cathedral dynamo estuary"
+).split()
+
+ADJS = (
+    "ancient rapid quiet northern dense fragile modern hollow distant precise "
+    "luminous brittle coastal recursive thermal nomadic austere vivid sturdy "
+    "obscure parallel fertile rugged serene volatile compact ornate humid"
+).split()
+
+VERBS = (
+    "describes contains governs produces connects absorbs predicts regulates "
+    "transforms precedes supports measures encodes divides restores observes "
+    "balances extends records compresses"
+).split()
+
+TOPICS = (
+    "history geology music trade physics language agriculture navigation "
+    "astronomy medicine weaving metallurgy cartography rhetoric"
+).split()
+
+
+def _arith(rng: Lcg) -> str:
+    """Short addition chains — the reasoning-benchmark (Table 7) substrate."""
+    a, b = 2 + rng.below(40), 2 + rng.below(40)
+    c = 2 + rng.below(20)
+    s1 = a + b
+    s2 = s1 + c
+    return f"{a} + {b} = {s1}. {s1} + {c} = {s2}."
+
+
+def _sentence(rng: Lcg, register: str) -> str:
+    if rng.below(12) == 0:  # ~8% arithmetic in both registers
+        return _arith(rng)
+    n1, n2 = rng.choice(NOUNS), rng.choice(NOUNS)
+    a1, a2 = rng.choice(ADJS), rng.choice(ADJS)
+    v = rng.choice(VERBS)
+    t = rng.choice(TOPICS)
+    year = 1400 + rng.below(600)
+    count = 2 + rng.below(96)
+    if register == "wiki":
+        forms = [
+            f"The {a1} {n1} {v} the {n2} of {t}.",
+            f"In {year}, the {n1} {v} {count} {n2}s across the {a2} {n2}.",
+            f"The {n1} of {t} is a {a1} {n2} that {v} the {a2} {n1}.",
+            f"Early {t} {v} the {a1} {n1}, which later {v} the {n2}.",
+            f"A {a1} {n1} {v} the {n2}; the {n2} {v} {count} {a2} {n1}s.",
+        ]
+    else:
+        forms = [
+            f"You can find the {a1} {n1} near the {n2} - really {a2}!",
+            f"Top {count} {n1}s for {t}: the {a1} {n2} {v} everything.",
+            f"Why the {n1} {v} your {n2} (and how {t} helps).",
+            f"we tested the {a1} {n1} and it {v} the {n2} fast.",
+            f"Buy a {a1} {n1} today, {v} the {n2}, save {count} dollars.",
+        ]
+    return forms[rng.below(len(forms))]
+
+
+def generate(kind: str, n_bytes: int, seed: int) -> bytes:
+    """Generate ~n_bytes of ASCII text of the given register."""
+    assert kind in ("wiki", "c4")
+    rng = Lcg(seed)
+    parts: list[str] = []
+    size = 0
+    while size < n_bytes:
+        if kind == "wiki":
+            head = f"== {rng.choice(NOUNS).title()} {rng.choice(TOPICS)} ==\n"
+        else:
+            head = f"# {rng.choice(ADJS)} {rng.choice(NOUNS)} blog\n"
+        para = [head]
+        # Entity repetition: one noun recurs within a paragraph (gives the
+        # model an in-context copying signal worth learning).
+        for _ in range(4 + rng.below(6)):
+            para.append(_sentence(rng, kind) + " ")
+        para.append("\n\n")
+        chunk = "".join(para)
+        parts.append(chunk)
+        size += len(chunk)
+    text = "".join(parts)[:n_bytes]
+    return text.encode("ascii", errors="replace")
+
+
+def train_eval_split(kind: str, n_train: int, n_eval: int, seed: int) -> tuple[bytes, bytes]:
+    """Disjoint train/eval streams (different seeds ⇒ different articles)."""
+    return generate(kind, n_train, seed), generate(kind, n_eval, seed + 1)

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels (interpret=True on CPU) + pure-jnp oracles."""

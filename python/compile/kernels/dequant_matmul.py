@@ -1,0 +1,101 @@
+"""Pallas kernel: fused W4A16 dequant-matmul — the serving hot path.
+
+Computes ``y = (x ⊙ t) · [s ⊙ (Q + z)]ᵀ`` (Eq. 7) without ever
+materializing the dequantized weight matrix in HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation — this is the gemlite/CUDA
+kernel rethought for TPU):
+
+* Grid ``(B/bm, N/bn, K/bk)`` with the contraction innermost, so each
+  ``(bm, bn)`` output tile stays resident in VMEM across all K steps
+  (accumulator revisiting), the schedule a CUDA kernel would express with
+  threadblock tiling + shared-memory staging.
+* The int4 codes stream HBM→VMEM as ``(bn, bk)`` int8 tiles — ¼ the bytes of
+  the f16 weights, which is the entire W4A16 speedup in the memory-bound
+  decode regime.
+* Dequantization ``s·(q+z)`` happens in registers on the VPU right before
+  the MXU-shaped ``jnp.dot``; the second scale ``t`` is applied to the
+  *activation* tile (one extra VPU multiply, Table 5's measured overhead)
+  rather than to the (much larger) weight tile.
+
+``interpret=True`` everywhere on this image; real-TPU perf is estimated
+analytically in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_matmul_kernel(x_ref, q_ref, s_ref, z_ref, t_ref, o_ref, *, group: int,
+                           dual: bool, bk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (bm, bk) f32
+    if dual:
+        x = x * t_ref[...].reshape(1, -1)  # Eq. 7: scale the activation tile
+    q = q_ref[...].astype(jnp.float32)  # (bn, bk)
+    bn = q.shape[0]
+    s = s_ref[...]  # (bn, bk/group)
+    z = z_ref[...]
+    w = (s[..., None] * (q.reshape(bn, bk // group, group) + z[..., None])).reshape(bn, bk)
+    o_ref[...] += jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def dequant_matmul(x, codes, scales, shifts, t=None, group: int = 64,
+                   bm: int | None = None, bn: int = 64, bk: int = 64):
+    """Pallas entry point.
+
+    x: (B, K) f32; codes: (N, K) int8/int32; scales/shifts: (N, K/group) f32;
+    t: optional (K,) f32 — the dual-scale variant when present.
+    Returns y: (B, N) f32.
+    """
+    b, k_dim = x.shape
+    n, k2 = codes.shape
+    assert k_dim == k2, "x/codes contraction mismatch"
+    bm = bm or min(16, b)
+    bn = min(bn, n)
+    bk = min(bk, k_dim)
+    assert bk % group == 0, "k block must hold whole groups"
+    assert b % bm == 0 and n % bn == 0 and k_dim % bk == 0, "blocks must tile evenly"
+    dual = t is not None
+    t_arr = t if dual else jnp.ones((k_dim,), jnp.float32)
+
+    kernel = functools.partial(_dequant_matmul_kernel, group=group, dual=dual, bk=bk)
+    grid = (b // bm, n // bn, k_dim // bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // group), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bn, bk // group), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((bk,), lambda i, j, kk: (kk,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), codes, scales, shifts, t_arr)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, group: int) -> int:
+    """Analytic VMEM footprint of one grid step (for the §Perf estimate):
+    x tile + q tile (int8) + s/z tiles + t tile + f32 accumulator."""
+    return 4 * bm * bk + bn * bk + 2 * 4 * bn * (bk // group) + 4 * bk + 4 * bm * bn
+
+
+def mxu_utilization_estimate(bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU 128×128×8 tile occupancy for the dot shape — the
+    structural efficiency number quoted in DESIGN.md §Perf."""
+    eff_m = min(bm, 128) / 128.0 if bm < 128 else 1.0
+    eff_n = min(bn, 128) / 128.0 if bn < 128 else 1.0
+    return eff_m * eff_n

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for the Pallas kernels (the L1 correctness contract).
+
+Every Pallas kernel in this package has a reference implementation here; the
+pytest suite sweeps shapes/dtypes with hypothesis and asserts allclose. These
+references also mirror the Rust implementations (`rust/src/quant/{sinq,rtn}`)
+— one algorithm, three implementations, cross-checked.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def sinkhorn_normalize_ref(w, iters: int = 24, s_min: float = 0.5, s_max: float = 2.0):
+    """Algorithm 1 lines 1-17: returns (s, t) minimizing the imbalance of
+    ``W / s[:, None] / t[None, :]`` with best-iterate tracking."""
+    w = w.astype(jnp.float32)
+    sig_row = jnp.std(w, axis=1)
+    sig_col = jnp.std(w, axis=0)
+    tau = jnp.maximum(jnp.minimum(jnp.min(sig_row), jnp.min(sig_col)), 1e-12)
+
+    def imbalance(wh):
+        sr = jnp.std(wh, axis=1)
+        sc = jnp.std(wh, axis=0)
+        hi = jnp.maximum(jnp.max(sr), jnp.max(sc))
+        lo = jnp.minimum(jnp.min(sr), jnp.min(sc))
+        return hi / jnp.maximum(lo, 1e-30)
+
+    def body(_, carry):
+        u, v, best_u, best_v, best_i = carry
+        # same fp expression as the Pallas kernel (bit-identical tie-breaks)
+        wh = w * jnp.exp(-u)[:, None] * jnp.exp(-v)[None, :]
+        i_curr = imbalance(wh)
+        better = i_curr < best_i
+        best_u = jnp.where(better, u, best_u)
+        best_v = jnp.where(better, v, best_v)
+        best_i = jnp.where(better, i_curr, best_i)
+        d_col = jnp.log(jnp.clip(jnp.std(wh, axis=0) / tau, s_min, s_max))
+        d_row = jnp.log(jnp.clip(jnp.std(wh, axis=1) / tau, s_min, s_max))
+        return u + d_row, v + d_col, best_u, best_v, best_i
+
+    m, n = w.shape
+    u0 = jnp.zeros((m,), jnp.float32)
+    v0 = jnp.zeros((n,), jnp.float32)
+    init = (u0, v0, u0, v0, jnp.asarray(jnp.inf, jnp.float32))
+    _, _, bu, bv, _ = lax.fori_loop(0, iters, body, init)
+    return jnp.exp(bu), jnp.exp(bv)
+
+
+def rtn_quantize_ref(w, bits: int = 4, group: int = 64):
+    """Grouped asymmetric RTN (Algorithm 1 line 18).
+
+    Returns (codes i32 [N, M], scales f32 [N, M/g], shifts f32 [N, M/g]).
+    The representable range always includes 0 (matches the Rust rtn).
+    """
+    n, m = w.shape
+    assert m % group == 0, "ref kernel assumes divisible groups"
+    maxq = float(2**bits - 1)
+    wg = w.reshape(n, m // group, group)
+    lo = jnp.minimum(wg.min(axis=-1), 0.0)
+    hi = jnp.maximum(wg.max(axis=-1), 0.0)
+    scale = jnp.where(hi > lo, (hi - lo) / maxq, 1.0)
+    z = lo / scale
+    q = jnp.clip(jnp.round(wg / scale[..., None] - z[..., None]), 0.0, maxq)
+    return q.reshape(n, m).astype(jnp.int32), scale, z
+
+
+def dequantize_ref(codes, scales, shifts, t=None, group: int = 64):
+    """W = s ⊙ (Q + z) ⊙ t (Eq. 3)."""
+    n, m = codes.shape
+    q = codes.astype(jnp.float32).reshape(n, m // group, group)
+    w = scales[..., None] * (q + shifts[..., None])
+    w = w.reshape(n, m)
+    if t is not None:
+        w = w * t[None, :]
+    return w
+
+
+def dequant_matmul_ref(x, codes, scales, shifts, t=None, group: int = 64):
+    """y = (x ⊙ t) · [s ⊙ (Q + z)]ᵀ (Eq. 7) — the W4A16 hot path."""
+    w = dequantize_ref(codes, scales, shifts, None, group)
+    xs = x if t is None else x * t[None, :]
+    return xs @ w.T
+
+
+def sinq_quantize_ref(w, bits: int = 4, group: int = 64, iters: int = 24,
+                      s_min: float = 0.5, s_max: float = 2.0):
+    """Full Algorithm 1: returns (codes, merged scales s_q⊙s, shifts, t)."""
+    s, t = sinkhorn_normalize_ref(w, iters, s_min, s_max)
+    w_hat = w / s[:, None] / t[None, :]
+    codes, s_q, z = rtn_quantize_ref(w_hat, bits, group)
+    return codes, s_q * s[:, None], z, t

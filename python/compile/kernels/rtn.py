@@ -1,0 +1,55 @@
+"""Pallas kernel: grouped asymmetric RTN rounding (Algorithm 1 line 18).
+
+Grid: one program per (row-block, group). Each program sees an
+``(BM, group)`` tile in VMEM, computes the min/max range (VPU reductions),
+and emits integer codes plus the per-(row, group) scale/shift. On TPU the
+tile shape is picked so the lane dimension is the group (64 or 128 — both
+multiples of the 128-lane VPU after padding); rounding is elementwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rtn_kernel(w_ref, q_ref, s_ref, z_ref, *, maxq: float):
+    wg = w_ref[...]  # (bm, group)
+    lo = jnp.minimum(jnp.min(wg, axis=1), 0.0)
+    hi = jnp.maximum(jnp.max(wg, axis=1), 0.0)
+    scale = jnp.where(hi > lo, (hi - lo) / maxq, 1.0)
+    z = lo / scale
+    q = jnp.clip(jnp.round(wg / scale[:, None] - z[:, None]), 0.0, maxq)
+    q_ref[...] = q.astype(jnp.int32)
+    s_ref[...] = scale[:, None]
+    z_ref[...] = z[:, None]
+
+
+def rtn_quantize(w, bits: int = 4, group: int = 64, block_rows: int = 64):
+    """Pallas entry point. Returns (codes i32 [N,M], scales [N,M/g], shifts)."""
+    n, m = w.shape
+    assert m % group == 0, "kernel requires divisible groups"
+    bm = min(block_rows, n)
+    assert n % bm == 0, "row count must divide the row block"
+    n_groups = m // group
+    kernel = functools.partial(_rtn_kernel, maxq=float(2**bits - 1))
+    grid = (n // bm, n_groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, group), lambda i, g: (i, g))],
+        out_specs=(
+            pl.BlockSpec((bm, group), lambda i, g: (i, g)),
+            pl.BlockSpec((bm, 1), lambda i, g: (i, g)),
+            pl.BlockSpec((bm, 1), lambda i, g: (i, g)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, m), jnp.int32),
+            jax.ShapeDtypeStruct((n, n_groups), jnp.float32),
+            jax.ShapeDtypeStruct((n, n_groups), jnp.float32),
+        ),
+        interpret=True,
+    )(w.astype(jnp.float32))

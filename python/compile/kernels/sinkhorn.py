@@ -1,0 +1,70 @@
+"""Pallas kernel: Algorithm 1's Sinkhorn normalization loop.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the whole weight tile lives in
+VMEM (our layer shapes are ≤ 1024×256 f32 = 1 MiB, far under the ~16 MiB VMEM
+budget), the K-step loop runs on-core with row/column variance reductions on
+the VPU — the iteration is reduction-bound, not MXU-bound, so keeping the
+matrix resident across all K iterations (instead of K HBM round-trips, as a
+naive jnp implementation would) is the entire optimization.
+
+Must run with ``interpret=True`` on this image (CPU PJRT cannot execute
+Mosaic custom-calls); the lowered HLO is what `rust/src/runtime` executes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _sinkhorn_kernel(w_ref, s_ref, t_ref, *, iters: int, s_min: float, s_max: float):
+    w = w_ref[...]
+
+    sig_row = jnp.std(w, axis=1)
+    sig_col = jnp.std(w, axis=0)
+    tau = jnp.maximum(jnp.minimum(jnp.min(sig_row), jnp.min(sig_col)), 1e-12)
+
+    def imbalance(wh):
+        sr = jnp.std(wh, axis=1)
+        sc = jnp.std(wh, axis=0)
+        return jnp.maximum(jnp.max(sr), jnp.max(sc)) / jnp.maximum(
+            jnp.minimum(jnp.min(sr), jnp.min(sc)), 1e-30
+        )
+
+    def body(_, carry):
+        u, v, best_u, best_v, best_i = carry
+        wh = w * jnp.exp(-u)[:, None] * jnp.exp(-v)[None, :]
+        i_curr = imbalance(wh)
+        better = i_curr < best_i
+        best_u = jnp.where(better, u, best_u)
+        best_v = jnp.where(better, v, best_v)
+        best_i = jnp.where(better, i_curr, best_i)
+        d_col = jnp.log(jnp.clip(jnp.std(wh, axis=0) / tau, s_min, s_max))
+        d_row = jnp.log(jnp.clip(jnp.std(wh, axis=1) / tau, s_min, s_max))
+        return u + d_row, v + d_col, best_u, best_v, best_i
+
+    m, n = w.shape
+    u0 = jnp.zeros((m,), jnp.float32)
+    v0 = jnp.zeros((n,), jnp.float32)
+    init = (u0, v0, u0, v0, jnp.asarray(jnp.inf, jnp.float32))
+    _, _, bu, bv, _ = lax.fori_loop(0, iters, body, init)
+    s_ref[...] = jnp.exp(bu)
+    t_ref[...] = jnp.exp(bv)
+
+
+def sinkhorn_normalize(w, iters: int = 24, s_min: float = 0.5, s_max: float = 2.0):
+    """Pallas entry point: returns (s, t), shapes (N,), (M,)."""
+    m, n = w.shape
+    kernel = functools.partial(_sinkhorn_kernel, iters=iters, s_min=s_min, s_max=s_max)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,  # CPU PJRT path; see module docstring
+    )(w.astype(jnp.float32))

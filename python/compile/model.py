@@ -1,0 +1,288 @@
+"""L2: the JAX transformer family used for every experiment.
+
+A decoder-only pre-norm transformer (RMSNorm, RoPE multi-head attention,
+SwiGLU MLP, optional switch-style MoE MLP) — the Qwen3-shaped architecture
+the paper evaluates, scaled to dimensions trainable on one CPU core. All
+model dims are powers of two so the Hadamard baselines apply directly.
+
+The same forward is lowered to HLO three ways by ``aot.py``:
+  * full-sequence f32 forward (perplexity evaluation; weights are runtime
+    *arguments* so one artifact serves every quantization method via
+    effective weights),
+  * single-token decode step with KV cache (serving/throughput benches),
+  * W4A16 decode step whose linears run the Pallas fused dequant-matmul
+    kernel on int4 codes (the paper's Eq. 7 inference path).
+
+The Rust reference forward (`rust/src/model/forward.rs`) mirrors this file
+operation-for-operation; `python/tests/test_model.py` and the Rust
+integration tests cross-check them through the `.stz` interchange.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.dequant_matmul import dequant_matmul
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    d: int
+    layers: int
+    heads: int
+    ffn: int
+    vocab: int = 256
+    n_experts: int = 0  # 0 = dense SwiGLU MLP
+    rope_base: float = 10000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.heads
+
+    def to_meta(self) -> dict:
+        return {
+            "name": self.name, "d": self.d, "layers": self.layers,
+            "heads": self.heads, "ffn": self.ffn, "vocab": self.vocab,
+            "n_experts": self.n_experts, "rope_base": self.rope_base,
+            "eps": self.eps,
+        }
+
+    @staticmethod
+    def from_meta(m: dict) -> "Config":
+        return Config(
+            name=m["name"], d=int(m["d"]), layers=int(m["layers"]),
+            heads=int(m["heads"]), ffn=int(m["ffn"]), vocab=int(m["vocab"]),
+            n_experts=int(m.get("n_experts", 0)),
+            rope_base=float(m.get("rope_base", 10000.0)),
+            eps=float(m.get("eps", 1e-5)),
+        )
+
+
+#: The model family (paper's Qwen3 size sweep, scaled; DESIGN.md §3).
+FAMILY: dict[str, Config] = {
+    "pico": Config("pico", d=64, layers=2, heads=2, ffn=256),
+    "tiny": Config("tiny", d=128, layers=4, heads=4, ffn=512),
+    "small": Config("small", d=256, layers=4, heads=8, ffn=1024),
+    # MoE variant (Appendix A.16 analogue): 4 experts, top-1 switch routing.
+    "tiny_moe": Config("tiny_moe", d=128, layers=2, heads=4, ffn=256, n_experts=4),
+}
+
+
+def weight_names(cfg: Config) -> list[str]:
+    """Canonical ordered weight list — the HLO artifact argument order."""
+    names = ["embed"]
+    for i in range(cfg.layers):
+        p = f"layers.{i}"
+        names += [f"{p}.ln1", f"{p}.wq", f"{p}.wk", f"{p}.wv", f"{p}.wo", f"{p}.ln2"]
+        if cfg.n_experts == 0:
+            names += [f"{p}.wg", f"{p}.wu", f"{p}.wd"]
+        else:
+            names += [f"{p}.router"]
+            for e in range(cfg.n_experts):
+                names += [f"{p}.expert{e}.wg", f"{p}.expert{e}.wu", f"{p}.expert{e}.wd"]
+    names += ["ln_f", "lm_head"]
+    return names
+
+
+def quantizable_names(cfg: Config) -> list[str]:
+    """The linear layers PTQ applies to (embeddings/norms stay f16, as in the
+    paper's weight-only setting)."""
+    return [n for n in weight_names(cfg)
+            if n.split(".")[-1].startswith("w") or "lm_head" in n or "router" in n]
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict[str, np.ndarray]:
+    """LeCun-style init as float32 numpy (trainer owns the arrays)."""
+    rng = np.random.default_rng(seed)
+
+    def dense(out_dim, in_dim, gain=1.0):
+        return (gain * rng.standard_normal((out_dim, in_dim)) / np.sqrt(in_dim)).astype(np.float32)
+
+    p: dict[str, np.ndarray] = {"embed": (0.02 * rng.standard_normal((cfg.vocab, cfg.d))).astype(np.float32)}
+    for i in range(cfg.layers):
+        pre = f"layers.{i}"
+        p[f"{pre}.ln1"] = np.ones(cfg.d, np.float32)
+        p[f"{pre}.wq"] = dense(cfg.d, cfg.d)
+        p[f"{pre}.wk"] = dense(cfg.d, cfg.d)
+        p[f"{pre}.wv"] = dense(cfg.d, cfg.d)
+        p[f"{pre}.wo"] = dense(cfg.d, cfg.d, gain=1.0 / np.sqrt(2 * cfg.layers))
+        p[f"{pre}.ln2"] = np.ones(cfg.d, np.float32)
+        if cfg.n_experts == 0:
+            p[f"{pre}.wg"] = dense(cfg.ffn, cfg.d)
+            p[f"{pre}.wu"] = dense(cfg.ffn, cfg.d)
+            p[f"{pre}.wd"] = dense(cfg.d, cfg.ffn, gain=1.0 / np.sqrt(2 * cfg.layers))
+        else:
+            p[f"{pre}.router"] = dense(cfg.n_experts, cfg.d)
+            for e in range(cfg.n_experts):
+                p[f"{pre}.expert{e}.wg"] = dense(cfg.ffn, cfg.d)
+                p[f"{pre}.expert{e}.wu"] = dense(cfg.ffn, cfg.d)
+                p[f"{pre}.expert{e}.wd"] = dense(cfg.d, cfg.ffn, gain=1.0 / np.sqrt(2 * cfg.layers))
+    p["ln_f"] = np.ones(cfg.d, np.float32)
+    p["lm_head"] = dense(cfg.vocab, cfg.d)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward pieces (shared by full-sequence and decode paths).
+# --------------------------------------------------------------------------
+
+def rmsnorm(x, gain, eps):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope_angles(positions, head_dim, base):
+    """(P, hd/2) angles; split-half convention (matches the Rust forward)."""
+    inv = base ** (-jnp.arange(0, head_dim // 2, dtype=jnp.float32) * 2.0 / head_dim)
+    return positions.astype(jnp.float32)[:, None] * inv[None, :]
+
+
+def apply_rope(x, ang):
+    """x: (..., P, hd); rotate the two halves by position-dependent angles."""
+    h = x.shape[-1] // 2
+    x1, x2 = x[..., :h], x[..., h:]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _mlp(h, p, pre, cfg, linear):
+    if cfg.n_experts == 0:
+        g = linear(h, f"{pre}.wg")
+        u = linear(h, f"{pre}.wu")
+        return linear(jax.nn.silu(g) * u, f"{pre}.wd")
+    # Switch-style top-1 MoE, computed densely (exact; tiny scale).
+    router_logits = linear(h, f"{pre}.router")  # (..., E)
+    gates = jax.nn.softmax(router_logits, axis=-1)
+    top = jnp.argmax(gates, axis=-1)  # (...,)
+    gate_val = jnp.take_along_axis(gates, top[..., None], axis=-1)
+    out = 0.0
+    for e in range(cfg.n_experts):
+        ge = linear(h, f"{pre}.expert{e}.wg")
+        ue = linear(h, f"{pre}.expert{e}.wu")
+        ye = linear(jax.nn.silu(ge) * ue, f"{pre}.expert{e}.wd")
+        out = out + jnp.where((top == e)[..., None], ye, 0.0)
+    return out * gate_val
+
+
+def forward(params, tokens, cfg: Config, linear=None):
+    """Full-sequence causal LM forward. tokens: (B, S) int32 → logits f32.
+
+    ``linear(h, name)`` abstracts weight application so the same graph serves
+    the f32 path (default) and the quantized Pallas path (`forward_quant`).
+    """
+    if linear is None:
+        def linear(h, name):
+            return h @ params[name].T
+
+    b, s = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)  # (B, S, d)
+    ang = rope_angles(jnp.arange(s), cfg.head_dim, cfg.rope_base)
+    mask = jnp.where(
+        jnp.arange(s)[None, :] <= jnp.arange(s)[:, None], 0.0, -jnp.inf
+    ).astype(jnp.float32)
+
+    for i in range(cfg.layers):
+        pre = f"layers.{i}"
+        x = rmsnorm(h, params[f"{pre}.ln1"], cfg.eps)
+        q = linear(x, f"{pre}.wq").reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = linear(x, f"{pre}.wk").reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = linear(x, f"{pre}.wv").reshape(b, s, cfg.heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+        att = jax.nn.softmax(att + mask[None, None], axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(b, s, cfg.d)
+        h = h + linear(ctx, f"{pre}.wo")
+
+        x = rmsnorm(h, params[f"{pre}.ln2"], cfg.eps)
+        h = h + _mlp(x, params, pre, cfg, linear)
+
+    h = rmsnorm(h, params["ln_f"], cfg.eps)
+    return linear(h, "lm_head")
+
+
+def forward_quant(qparams, fparams, tokens, cfg: Config, group: int = 64):
+    """Quantized forward: every linear runs the Pallas fused dequant-matmul
+    on int4 codes (Eq. 7). ``qparams[name] = (codes, scales, shifts, t)``;
+    ``fparams`` holds the non-quantized tensors (embed, norms)."""
+
+    def linear(h, name):
+        codes, scales, shifts, t = qparams[name]
+        flat = h.reshape(-1, h.shape[-1])
+        y = dequant_matmul(flat, codes, scales, shifts, t, group=group)
+        return y.reshape(*h.shape[:-1], codes.shape[0])
+
+    params = dict(fparams)
+    return forward(params, tokens, cfg, linear=linear)
+
+
+def decode_step(params, token, pos, kv, cfg: Config, linear=None):
+    """One autoregressive step with a functional KV cache.
+
+    token: (B,) i32; pos: scalar i32; kv: (L, 2, B, H, C, hd) f32.
+    Returns (logits (B, V), new kv).
+    """
+    if linear is None:
+        def linear(h, name):
+            return h @ params[name].T
+
+    b = token.shape[0]
+    cache_len = kv.shape[4]
+    h = jnp.take(params["embed"], token, axis=0)  # (B, d)
+    ang = rope_angles(pos[None], cfg.head_dim, cfg.rope_base)  # (1, hd/2)
+    new_kv = kv
+
+    for i in range(cfg.layers):
+        pre = f"layers.{i}"
+        x = rmsnorm(h, params[f"{pre}.ln1"], cfg.eps)
+        q = linear(x, f"{pre}.wq").reshape(b, cfg.heads, 1, cfg.head_dim)
+        k = linear(x, f"{pre}.wk").reshape(b, cfg.heads, 1, cfg.head_dim)
+        v = linear(x, f"{pre}.wv").reshape(b, cfg.heads, 1, cfg.head_dim)
+        q, k = apply_rope(q, ang), apply_rope(k, ang)
+        new_kv = jax.lax.dynamic_update_slice(
+            new_kv, k[None, None, :, :, 0, :][:, :, :, :, None, :],
+            (i, 0, 0, 0, pos, 0))
+        new_kv = jax.lax.dynamic_update_slice(
+            new_kv, v[None, None, :, :, 0, :][:, :, :, :, None, :],
+            (i, 1, 0, 0, pos, 0))
+        keys = new_kv[i, 0]  # (B, H, C, hd)
+        vals = new_kv[i, 1]
+        att = jnp.einsum("bhd,bhkd->bhk", q[:, :, 0], keys) / np.sqrt(cfg.head_dim)
+        live = jnp.arange(cache_len) <= pos
+        att = jnp.where(live[None, None, :], att, -jnp.inf)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhk,bhkd->bhd", att, vals).reshape(b, cfg.d)
+        h = h + linear(ctx, f"{pre}.wo")
+        x = rmsnorm(h, params[f"{pre}.ln2"], cfg.eps)
+        h = h + _mlp(x, params, pre, cfg, linear)
+
+    h = rmsnorm(h, params["ln_f"], cfg.eps)
+    return linear(h, "lm_head"), new_kv
+
+
+def decode_step_quant(qparams, fparams, token, pos, kv, cfg: Config, group: int = 64):
+    """W4A16 decode step: linears run the Pallas dequant-matmul kernel."""
+
+    def linear(h, name):
+        codes, scales, shifts, t = qparams[name]
+        flat = h.reshape(-1, h.shape[-1])
+        y = dequant_matmul(flat, codes, scales, shifts, t, group=group,
+                           bm=min(16, flat.shape[0]))
+        return y.reshape(*h.shape[:-1], codes.shape[0])
+
+    return decode_step(dict(fparams), token, pos, kv, cfg, linear=linear)
+
+
+def loss_fn(params, tokens, cfg: Config):
+    """Next-token cross entropy over (B, S+1) token windows."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)

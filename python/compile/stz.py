@@ -1,0 +1,69 @@
+"""`.stz` tensor archive — Python writer/reader.
+
+Mirror of `rust/src/fmt/stz.rs`: a u64-length-prefixed JSON header naming
+each tensor's dtype/shape/offset/nbytes, followed by raw little-endian data.
+The trainer writes model checkpoints in this format; the Rust side loads
+them without any Python dependency at runtime.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from typing import Any
+
+import numpy as np
+
+_DTYPES = {"f32": np.float32, "i32": np.int32, "u8": np.uint8}
+
+
+def save(path: str, tensors: dict[str, np.ndarray], meta: dict[str, Any] | None = None) -> None:
+    """Write tensors (f32/i32/u8) plus optional JSON metadata."""
+    header: dict[str, Any] = {}
+    blobs: list[bytes] = []
+    offset = 0
+    for name, arr in tensors.items():
+        if name == "__meta__":
+            raise ValueError("'__meta__' is a reserved key")
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype == np.float32:
+            dtype = "f32"
+        elif arr.dtype == np.int32:
+            dtype = "i32"
+        elif arr.dtype == np.uint8:
+            dtype = "u8"
+        else:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        raw = arr.astype(_DTYPES[dtype]).tobytes(order="C")
+        header[name] = {
+            "dtype": dtype,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+        blobs.append(raw)
+        offset += len(raw)
+    if meta is not None:
+        header["__meta__"] = meta
+    hjson = json.dumps(header, separators=(",", ":")).encode()
+    with open(path, "wb") as f:
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> tuple[dict[str, np.ndarray], dict[str, Any] | None]:
+    """Read an archive back; returns (tensors, meta)."""
+    with open(path, "rb") as f:
+        raw = f.read()
+    (hlen,) = struct.unpack("<Q", raw[:8])
+    header = json.loads(raw[8 : 8 + hlen])
+    data = raw[8 + hlen :]
+    meta = header.pop("__meta__", None)
+    out = {}
+    for name, desc in header.items():
+        dt = _DTYPES[desc["dtype"]]
+        buf = data[desc["offset"] : desc["offset"] + desc["nbytes"]]
+        out[name] = np.frombuffer(buf, dtype=dt).reshape(desc["shape"]).copy()
+    return out, meta

@@ -1,0 +1,138 @@
+"""Train the model family with Adam on the synthetic corpora.
+
+Build-time only (`make artifacts`): produces
+  artifacts/corpus/{wiki,c4}_{train,eval}.bin   — byte corpora
+  artifacts/models/{name}.stz                   — f32 checkpoints + config
+
+The paper's central observation (σ_col(W) predicts μ_x; Fig. 2a/2b) is a
+property of *Adam-trained* weights, so checkpoints must be genuinely trained,
+not sampled. Training budgets are sized for a single CPU core; the loss
+curves are logged into the checkpoint metadata and re-printed by
+`sinq table e2e` (EXPERIMENTS.md records the run).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus as corpus_mod
+from . import stz
+from .model import FAMILY, Config, init_params, loss_fn
+
+SEQ = 128
+BATCH = 4
+CORPUS_TRAIN_BYTES = 1 << 21  # 2 MiB per register
+CORPUS_EVAL_BYTES = 1 << 17  # 128 KiB per register
+
+#: Adam steps per model (single-core budget; losses plateau well below the
+#: byte-entropy of the corpus, which is all the experiments need).
+STEPS = {"pico": 600, "tiny": 400, "small": 220, "tiny_moe": 300}
+
+
+def ensure_corpora(art_dir: str) -> dict[str, bytes]:
+    os.makedirs(f"{art_dir}/corpus", exist_ok=True)
+    out = {}
+    for kind, seed in (("wiki", 1001), ("c4", 2002)):
+        tr, ev = corpus_mod.train_eval_split(kind, CORPUS_TRAIN_BYTES, CORPUS_EVAL_BYTES, seed)
+        for split, data in (("train", tr), ("eval", ev)):
+            path = f"{art_dir}/corpus/{kind}_{split}.bin"
+            if not os.path.exists(path):
+                with open(path, "wb") as f:
+                    f.write(data)
+            out[f"{kind}_{split}"] = data
+    return out
+
+
+def batches(data: np.ndarray, rng: np.random.Generator):
+    """Endless (BATCH, SEQ+1) windows sampled uniformly."""
+    n = len(data) - (SEQ + 1)
+    while True:
+        idx = rng.integers(0, n, size=BATCH)
+        yield np.stack([data[i : i + SEQ + 1] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = {k: np.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: np.zeros_like(v) for k, v in params.items()}
+
+
+def train_model(cfg: Config, corpora: dict[str, bytes], steps: int, art_dir: str,
+                lr: float = 3e-3, seed: int = 0) -> dict:
+    t0 = time.time()
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, seed).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+
+    # 80/20 wiki/c4 mixture, like the paper's models see mixed data.
+    wiki = np.frombuffer(corpora["wiki_train"], dtype=np.uint8)
+    c4 = np.frombuffer(corpora["c4_train"], dtype=np.uint8)
+    rng = np.random.default_rng(seed + 7)
+    wiki_it, c4_it = batches(wiki, rng), batches(c4, rng)
+
+    grad_fn = jax.jit(jax.value_and_grad(lambda p, t: loss_fn(p, t, cfg)))
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    log: list[tuple[int, float]] = []
+
+    @jax.jit
+    def adam_update(params, m, v, grads, step):
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            new_m[k] = b1 * m[k] + (1 - b1) * g
+            new_v[k] = b2 * v[k] + (1 - b2) * g * g
+            mh = new_m[k] / (1 - b1 ** step)
+            vh = new_v[k] / (1 - b2 ** step)
+            new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+        return new_p, new_m, new_v
+
+    for step in range(1, steps + 1):
+        batch = next(wiki_it) if rng.random() < 0.8 else next(c4_it)
+        loss, grads = grad_fn(params, jnp.asarray(batch))
+        params, m, v = adam_update(params, m, v, grads, jnp.float32(step))
+        if step == 1 or step % 50 == 0 or step == steps:
+            log.append((step, float(loss)))
+            print(f"  [{cfg.name}] step {step:4d}/{steps}  loss {float(loss):.4f}", flush=True)
+
+    npy = {k: np.asarray(val) for k, val in params.items()}
+    meta = {
+        "config": cfg.to_meta(),
+        "train": {
+            "steps": steps, "lr": lr, "batch": BATCH, "seq": SEQ,
+            "loss_curve": [[s, round(l, 4)] for s, l in log],
+            "wall_seconds": round(time.time() - t0, 1),
+        },
+    }
+    os.makedirs(f"{art_dir}/models", exist_ok=True)
+    stz.save(f"{art_dir}/models/{cfg.name}.stz", npy, meta)
+    print(f"  [{cfg.name}] saved ({sum(a.size for a in npy.values())/1e6:.2f}M params, "
+          f"{time.time()-t0:.0f}s)", flush=True)
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art-dir", default="../artifacts")
+    ap.add_argument("--models", default="pico,tiny,small,tiny_moe")
+    ap.add_argument("--steps-scale", type=float, default=1.0,
+                    help="scale training budgets (tests use ~0.02)")
+    args = ap.parse_args()
+
+    corpora = ensure_corpora(args.art_dir)
+    for name in args.models.split(","):
+        cfg = FAMILY[name]
+        path = f"{args.art_dir}/models/{name}.stz"
+        if os.path.exists(path):
+            print(f"  [{name}] checkpoint exists, skipping")
+            continue
+        steps = max(2, int(STEPS[name] * args.steps_scale))
+        train_model(cfg, corpora, steps, args.art_dir)
+
+
+if __name__ == "__main__":
+    main()

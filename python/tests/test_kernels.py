@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.dequant_matmul import dequant_matmul, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.rtn import rtn_quantize
+from compile.kernels.sinkhorn import sinkhorn_normalize
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def llm_like(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_t(4, (rows, cols)) * 0.02
+    w *= 0.3 + 3.0 * rng.random((1, cols))
+    w *= 0.5 + 2.0 * rng.random((rows, 1))
+    return w.astype(np.float32)
+
+
+# ---------------------------------------------------------------- sinkhorn --
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([8, 16, 48, 64]),
+    cols=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_sinkhorn_matches_ref(rows, cols, seed):
+    w = llm_like(rows, cols, seed)
+    s1, t1 = ref.sinkhorn_normalize_ref(w)
+    s2, t2 = sinkhorn_normalize(jnp.asarray(w))
+
+    def imb(s, t):
+        wh = w / np.asarray(s)[:, None] / np.asarray(t)[None, :]
+        sr, sc = wh.std(axis=1), wh.std(axis=0)
+        return max(sr.max(), sc.max()) / min(sr.min(), sc.min())
+
+    if np.allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5, atol=1e-6):
+        assert_allclose(np.asarray(t1), np.asarray(t2), rtol=1e-5, atol=1e-6)
+    else:
+        # f32 noise can flip the best-iterate argmin between the Pallas and
+        # jnp paths when two iterates tie; both are valid Algorithm-1
+        # solutions — require equal solution *quality* instead.
+        assert abs(imb(s1, t1) - imb(s2, t2)) / imb(s1, t1) < 0.05
+
+
+def test_sinkhorn_reduces_imbalance():
+    w = llm_like(64, 128, 0)
+    s, t = sinkhorn_normalize(jnp.asarray(w))
+    wh = w / np.asarray(s)[:, None] / np.asarray(t)[None, :]
+
+    def imb(m):
+        sr, sc = m.std(axis=1), m.std(axis=0)
+        return max(sr.max(), sc.max()) / min(sr.min(), sc.min())
+
+    assert imb(wh) < imb(w) * 0.6
+
+
+def test_sinkhorn_iters_parameter():
+    w = llm_like(32, 64, 1)
+    s0, t0 = sinkhorn_normalize(jnp.asarray(w), iters=1)
+    s1, t1 = sinkhorn_normalize(jnp.asarray(w), iters=24)
+    assert not np.allclose(np.asarray(s0), np.asarray(s1))
+
+
+# --------------------------------------------------------------------- rtn --
+
+@settings(**SETTINGS)
+@given(
+    rows=st.sampled_from([4, 16, 64]),
+    groups=st.sampled_from([1, 2, 4]),
+    bits=st.sampled_from([3, 4, 8]),
+    seed=st.integers(0, 2**31),
+)
+def test_rtn_matches_ref(rows, groups, bits, seed):
+    cols = 64 * groups
+    w = llm_like(rows, cols, seed)
+    q1, s1, z1 = ref.rtn_quantize_ref(w, bits=bits)
+    q2, s2, z2 = rtn_quantize(jnp.asarray(w), bits=bits, block_rows=min(64, rows))
+    assert np.array_equal(np.asarray(q1), np.asarray(q2))
+    assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-5, atol=1e-6)
+
+
+def test_rtn_codes_in_range():
+    w = llm_like(16, 128, 3)
+    q, s, z = rtn_quantize(jnp.asarray(w), bits=4)
+    q = np.asarray(q)
+    assert q.min() >= 0 and q.max() <= 15
+
+
+def test_rtn_reconstruction_error_small():
+    w = llm_like(16, 128, 4)
+    q, s, z = rtn_quantize(jnp.asarray(w), bits=8)
+    rec = np.asarray(ref.dequantize_ref(q, s, z))
+    rel = np.abs(rec - w).max() / np.abs(w).max()
+    assert rel < 0.01
+
+
+# ----------------------------------------------------------- dequant matmul --
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([64, 128]),
+    k=st.sampled_from([64, 128, 256]),
+    dual=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_dequant_matmul_matches_ref(b, n, k, dual, seed):
+    rng = np.random.default_rng(seed)
+    w = llm_like(n, k, seed)
+    codes, scales, shifts = ref.rtn_quantize_ref(w, bits=4)
+    x = rng.standard_normal((b, k)).astype(np.float32)
+    t = (0.5 + rng.random(k)).astype(np.float32) if dual else None
+    y_ref = np.asarray(ref.dequant_matmul_ref(x, codes, scales, shifts, t))
+    y = np.asarray(
+        dequant_matmul(
+            jnp.asarray(x), jnp.asarray(codes, jnp.int8), scales, shifts,
+            None if t is None else jnp.asarray(t), bm=1 if b == 1 else 4,
+        )
+    )
+    assert_allclose(y, y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_dequant_matmul_equals_dense_matmul():
+    # End-to-end: fused kernel == x @ dequantized_Wᵀ.
+    w = llm_like(64, 128, 9)
+    codes, scales, shifts = ref.rtn_quantize_ref(w, bits=4)
+    w_hat = np.asarray(ref.dequantize_ref(codes, scales, shifts))
+    x = np.random.default_rng(9).standard_normal((8, 128)).astype(np.float32)
+    y = np.asarray(dequant_matmul(jnp.asarray(x), jnp.asarray(codes, jnp.int8),
+                                  scales, shifts, None, bm=8))
+    assert_allclose(y, x @ w_hat.T, rtol=2e-4, atol=2e-4)
+
+
+def test_dqmm_rejects_bad_blocks():
+    w = llm_like(64, 128, 10)
+    codes, scales, shifts = ref.rtn_quantize_ref(w, bits=4)
+    x = np.zeros((3, 128), np.float32)  # 3 % bm(16→3?)  — b=3, bm=16→min→3? 3%3==0 ok
+    with pytest.raises(AssertionError):
+        dequant_matmul(jnp.asarray(x), jnp.asarray(codes, jnp.int8), scales,
+                       shifts, None, bm=2)  # 3 % 2 != 0
+
+
+def test_vmem_estimate_within_budget():
+    # The §Perf structural target: one grid step fits in 16 MiB VMEM easily.
+    assert vmem_bytes(16, 64, 64, 64) < 16 * 1024 * 1024
+    assert 0.0 < mxu_utilization_estimate(16, 64, 64) <= 1.0
+
+
+# ----------------------------------------------------------- full Algorithm 1
+
+def test_sinq_quantize_ref_improves_over_rtn():
+    w = llm_like(64, 128, 11)
+    q, s, z = ref.rtn_quantize_ref(w, bits=4)
+    rtn_err = float(((np.asarray(ref.dequantize_ref(q, s, z)) - w) ** 2).mean())
+    qq, ss, zz, tt = ref.sinq_quantize_ref(w, bits=4)
+    sinq_rec = np.asarray(ref.dequantize_ref(qq, ss, zz, tt))
+    sinq_err = float(((sinq_rec - w) ** 2).mean())
+    assert sinq_err < rtn_err

@@ -1,0 +1,109 @@
+"""L2 correctness: transformer forward/decode shapes and invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.model import (
+    FAMILY, decode_step, decode_step_quant, forward, forward_quant,
+    init_params, loss_fn, quantizable_names, weight_names,
+)
+
+CFG = FAMILY["pico"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in init_params(CFG, 42).items()}
+
+
+def test_weight_names_cover_params(params):
+    assert set(weight_names(CFG)) == set(params.keys())
+    qs = quantizable_names(CFG)
+    assert "embed" not in qs and "ln_f" not in qs
+    assert "lm_head" in qs and "layers.0.wq" in qs
+
+
+def test_forward_shape_and_finite(params):
+    tokens = jnp.asarray(np.random.default_rng(0).integers(0, 256, (2, 16), dtype=np.int32))
+    logits = forward(params, tokens, CFG)
+    assert logits.shape == (2, 16, 256)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_is_causal(params):
+    """Changing a future token must not change earlier logits."""
+    rng = np.random.default_rng(1)
+    t1 = rng.integers(0, 256, (1, 12), dtype=np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 7) % 256
+    l1 = np.asarray(forward(params, jnp.asarray(t1), CFG))
+    l2 = np.asarray(forward(params, jnp.asarray(t2), CFG))
+    assert_allclose(l1[0, :-1], l2[0, :-1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(l1[0, -1], l2[0, -1])
+
+
+def test_decode_matches_forward(params):
+    """Autoregressive decode with KV cache reproduces the full forward."""
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, 256, (1, 10), dtype=np.int32)
+    full = np.asarray(forward(params, jnp.asarray(toks), CFG))
+
+    kv = jnp.zeros((CFG.layers, 2, 1, CFG.heads, 16, CFG.head_dim), jnp.float32)
+    for pos in range(10):
+        logits, kv = decode_step(params, jnp.asarray(toks[:, pos]),
+                                 jnp.asarray(pos, jnp.int32), kv, CFG)
+        assert_allclose(np.asarray(logits)[0], full[0, pos], rtol=2e-4, atol=2e-4)
+
+
+def test_loss_decreases_direction(params):
+    tokens = jnp.asarray(np.random.default_rng(3).integers(0, 256, (2, 33), dtype=np.int32))
+    l = float(loss_fn(params, tokens, CFG))
+    # Untrained: near ln(256) ≈ 5.55.
+    assert 4.5 < l < 7.0
+
+
+def test_moe_forward_runs():
+    cfg = FAMILY["tiny_moe"]
+    params = {k: jnp.asarray(v) for k, v in init_params(cfg, 5).items()}
+    tokens = jnp.asarray(np.random.default_rng(5).integers(0, 256, (1, 8), dtype=np.int32))
+    logits = forward(params, tokens, cfg)
+    assert logits.shape == (1, 8, 256)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_quant_forward_close_to_f32_at_8bit(params):
+    """forward_quant (Pallas path) ≈ forward with 8-bit codes."""
+    qnames = quantizable_names(CFG)
+    qparams, fparams = {}, {}
+    for k, v in params.items():
+        if k in qnames:
+            codes, scales, shifts = ref.rtn_quantize_ref(np.asarray(v), bits=8)
+            qparams[k] = (jnp.asarray(codes, jnp.int32), scales, shifts, None)
+        else:
+            fparams[k] = v
+    tokens = jnp.asarray(np.random.default_rng(6).integers(0, 256, (1, 8), dtype=np.int32))
+    lq = np.asarray(forward_quant(qparams, fparams, tokens, CFG))
+    lf = np.asarray(forward(params, tokens, CFG))
+    # 8-bit weight quantization shifts logits only slightly.
+    assert np.abs(lq - lf).max() < 0.3, np.abs(lq - lf).max()
+
+
+def test_decode_quant_runs(params):
+    qnames = quantizable_names(CFG)
+    qparams, fparams = {}, {}
+    for k, v in params.items():
+        if k in qnames:
+            codes, scales, shifts = ref.rtn_quantize_ref(np.asarray(v), bits=4)
+            t = np.ones(v.shape[1], np.float32)
+            qparams[k] = (jnp.asarray(codes, jnp.int8), scales, shifts, jnp.asarray(t))
+        else:
+            fparams[k] = v
+    kv = jnp.zeros((CFG.layers, 2, 1, CFG.heads, 16, CFG.head_dim), jnp.float32)
+    logits, kv2 = decode_step_quant(qparams, fparams, jnp.asarray([65], jnp.int32),
+                                    jnp.asarray(0, jnp.int32), kv, CFG)
+    assert logits.shape == (1, 256)
+    assert bool(jnp.isfinite(logits).all())
+    assert not np.allclose(np.asarray(kv2), 0.0)

@@ -1,0 +1,19 @@
+//! Table 6 — end-to-end decode throughput (W16A16 vs SINQ W4A16) through
+//! the serving decoder with its on-device weights.
+//!
+//! `cargo bench --bench decode` (requires `make artifacts`)
+
+use sinq::report::tables::{table6, Ctx};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // `fast` keeps the bench under a minute (64-token context, 64 generated);
+    // the EXPERIMENTS.md numbers use the full 256/512 run via `sinq table 6`.
+    let ctx = Ctx::new("artifacts", true).expect("PJRT runtime");
+    let t = table6(&ctx, &["tiny", "small"]).expect("table 6");
+    t.print();
+    let _ = t.dump("artifacts");
+}

@@ -1,0 +1,19 @@
+//! Table 5 — marginal cost of the second scale `t` on the fused
+//! dequant-matmul kernel, measured through the PJRT-compiled Pallas
+//! artifacts (`dqmm_b{B}_d{D}[_dual].hlo.txt`).
+//!
+//! `cargo bench --bench kernel_overhead` (requires `make artifacts`)
+
+use sinq::report::tables::{table5, Ctx};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    // fast mode: 5 timed iterations per variant (full run: `sinq table 5`)
+    let ctx = Ctx::new("artifacts", true).expect("PJRT runtime");
+    let t = table5(&ctx).expect("table 5");
+    t.print();
+    let _ = t.dump("artifacts");
+}

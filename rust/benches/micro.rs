@@ -1,0 +1,69 @@
+//! Micro-benchmarks of the L3 hot paths (the §Perf baseline numbers):
+//! matmul kernels, FWHT, Sinkhorn normalization, grouped RTN, packing.
+//!
+//! Run with `cargo bench --bench micro` (hand-rolled harness; criterion is
+//! unavailable offline).
+
+use sinq::fmt::pack;
+use sinq::quant::hadamard::fwht;
+use sinq::quant::rtn;
+use sinq::quant::sinq::sinkhorn_normalize;
+use sinq::fmt::grids::Grid;
+use sinq::tensor::{Matrix, Rng};
+use sinq::util::bench::Bencher;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    // matmul_nt: the reference-forward workhorse (x · Wᵀ).
+    let x = Matrix::randn(128, 256, 1.0, &mut rng);
+    let w = Matrix::randn(512, 256, 1.0, &mut rng);
+    let s = b.bench("matmul_nt 128x256 · (512x256)ᵀ", || {
+        black_box(x.matmul_nt(&w));
+    });
+    let flops = 2.0 * 128.0 * 256.0 * 512.0;
+    println!("    -> {:.2} GFLOP/s", flops / s.mean_ns);
+
+    let a = Matrix::randn(128, 256, 1.0, &mut rng);
+    let c = Matrix::randn(256, 512, 1.0, &mut rng);
+    let s = b.bench("matmul    128x256 · 256x512", || {
+        black_box(a.matmul(&c));
+    });
+    println!("    -> {:.2} GFLOP/s", flops / s.mean_ns);
+
+    // FWHT over a model-sized rotation (1024-dim, 512 rows).
+    let mut m = Matrix::randn(512, 1024, 1.0, &mut rng);
+    let s = b.bench("fwht rotate_cols 512x1024", || {
+        for i in 0..m.rows {
+            fwht(m.row_mut(i));
+        }
+        black_box(&m);
+    });
+    let elems = 512.0 * 1024.0;
+    println!("    -> {:.1} Melem/s", elems / s.mean_ns * 1e3);
+
+    // Sinkhorn normalization (Algorithm 1's loop) on an ffn-sized layer.
+    let w = Matrix::randn(1024, 256, 0.02, &mut rng);
+    let s = b.bench("sinkhorn_normalize 1024x256 K=24", || {
+        black_box(sinkhorn_normalize(&w, 24, (0.5, 2.0)));
+    });
+    println!("    -> {:.1} Melem/s·iter", elems / 4.0 * 24.0 / s.mean_ns * 1e3);
+
+    // Grouped RTN (line 18 of Algorithm 1).
+    let grid = Grid::uniform(4);
+    let s = b.bench("rtn quantize_grouped 1024x256 g=64", || {
+        black_box(rtn::quantize_grouped(&w, &grid, 64, true));
+    });
+    println!("    -> {:.1} Melem/s", (1024.0 * 256.0) / s.mean_ns * 1e3);
+
+    // Bit packing.
+    let codes: Vec<u8> = (0..1024 * 256).map(|i| (i % 16) as u8).collect();
+    let s = b.bench("pack int4 262144 codes", || {
+        black_box(pack::pack(&codes, 4));
+    });
+    println!("    -> {:.1} Melem/s", codes.len() as f64 / s.mean_ns * 1e3);
+
+    let _ = b.dump_jsonl("artifacts/bench_micro.jsonl");
+}

@@ -1,0 +1,40 @@
+//! Table 10 / Fig. 8 — quantization wall time per method, on the trained
+//! family when artifacts exist (synthetic fallback otherwise).
+//!
+//! `cargo bench --bench quantizers`
+
+use sinq::coordinator::pipeline::{self, PipelineOpts};
+use sinq::coordinator::scheduler::{load_or_synthetic, ScheduleOpts};
+use sinq::quant::{Method, QuantConfig};
+use sinq::util::bench::Bencher;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::quick();
+    for model in ["pico", "tiny"] {
+        let mw = load_or_synthetic("artifacts", model, 99);
+        let calib: Vec<u8> = b"calibration sample text for activation capture. ".repeat(16).to_vec();
+        let params: usize = mw.cfg.n_params();
+        for method in
+            [Method::Rtn, Method::Hqq, Method::Sinq, Method::Awq, Method::Gptq, Method::ASinq]
+        {
+            let cfg = QuantConfig::new(method, 4);
+            let opts = PipelineOpts {
+                schedule: ScheduleOpts {
+                    threads: 1,
+                    calib_sample: method.needs_calibration().then(|| calib.clone()),
+                    verbose: false,
+                },
+                no_overhead: false,
+            };
+            let s = b.bench(&format!("quantize {model} {}", method.name()), || {
+                black_box(pipeline::run(&mw, &cfg, &opts).unwrap());
+            });
+            println!(
+                "    -> {:.1} Mparam/s",
+                params as f64 / s.mean_ns * 1e3
+            );
+        }
+    }
+    let _ = b.dump_jsonl("artifacts/bench_quantizers.jsonl");
+}

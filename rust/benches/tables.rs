@@ -1,0 +1,64 @@
+//! End-to-end regeneration of the paper's perplexity/flip tables in fast
+//! mode — one bench per table, as the benchmark deliverable requires. The
+//! full-resolution numbers recorded in EXPERIMENTS.md come from
+//! `sinq table all` (same code, larger sweeps).
+//!
+//! `cargo bench --bench tables` (requires `make artifacts`)
+
+use sinq::report::tables::{self, Ctx};
+use std::time::Instant;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ctx = Ctx::new("artifacts", true).expect("PJRT runtime");
+    let models = ["pico", "tiny"];
+
+    let mut timed = |name: &str, f: &dyn Fn() -> anyhow::Result<sinq::report::Table>| {
+        let t0 = Instant::now();
+        match f() {
+            Ok(table) => {
+                table.print();
+                let _ = table.dump("artifacts");
+                println!("[bench] {name} regenerated in {:.1}s\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[bench] {name} FAILED: {e}"),
+        }
+    };
+
+    timed("table1", &|| tables::table1(&ctx, &models));
+    timed("table3", &|| tables::table3(&ctx, &["tiny"]));
+    timed("table4", &|| tables::table4(&ctx, &["tiny"]));
+    timed("table7", &|| tables::table7(&ctx, "tiny"));
+    timed("table8", &|| tables::table8(&ctx, &["tiny"]));
+    timed("table9", &|| tables::table9(&ctx, &["tiny"]));
+    timed("table16", &|| tables::table16(&ctx, "pico"));
+    timed("table17", &|| tables::table17(&ctx, "tiny"));
+    timed("table18", &|| tables::table18(&ctx, &["tiny"]));
+    timed("table19", &|| tables::table19(&ctx));
+    timed("ablations (fig5)", &|| tables::ablation_table(&ctx, &["tiny"]));
+    timed("fig1", &|| tables::fig1_table(&ctx));
+    timed("fig2b", &|| tables::fig2b_table(&ctx));
+    timed("fig2c/fig7", &|| tables::fig2c_fig7_table(&ctx, "tiny"));
+    timed("fig3", &|| tables::fig3_table(&ctx, "tiny"));
+
+    // Table 2 (flips) is the slowest sweep; opt in with BENCH_TABLE2=1
+    // (full-resolution run: `sinq table 2`).
+    if std::env::var("BENCH_TABLE2").is_ok() {
+        let t0 = Instant::now();
+        match tables::table2(&ctx, &["tiny"]) {
+            Ok((flip_t, acc)) => {
+                flip_t.print();
+                acc.print();
+                let _ = flip_t.dump("artifacts");
+                let _ = acc.dump("artifacts");
+                println!("[bench] table2/14 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => println!("[bench] table2 FAILED: {e}"),
+        }
+    } else {
+        println!("[bench] table2 skipped (set BENCH_TABLE2=1; full run: sinq table 2)");
+    }
+}

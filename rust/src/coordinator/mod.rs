@@ -1,0 +1,16 @@
+//! L3 coordinator: the systems layer that turns the quantizer zoo into a
+//! deployable pipeline.
+//!
+//! * [`scheduler`] — per-layer quantization jobs over the worker pool, with
+//!   activation-capture pre-pass for calibrated methods and progress
+//!   reporting.
+//! * [`pipeline`] — load checkpoint → (optional no-overhead fold) →
+//!   quantize → pack → save; plus the PJRT-accelerated Algorithm-1 path
+//!   that runs the Pallas `sinq_quantize` artifacts.
+//! * [`server`] — the serving coordinator: request router + dynamic batcher
+//!   in front of the PJRT forward/decode executors (vLLM-router-shaped,
+//!   scaled to one box).
+
+pub mod pipeline;
+pub mod scheduler;
+pub mod server;

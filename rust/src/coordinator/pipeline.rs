@@ -1,0 +1,125 @@
+//! End-to-end quantization pipeline: load → (fold) → quantize → save,
+//! plus the PJRT-accelerated Algorithm-1 path.
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::scheduler::{self, ScheduleOpts};
+use crate::model::{fold, ModelWeights, QuantizedModel};
+use crate::quant::{QuantConfig, QuantizedLinear};
+use crate::runtime::client::{self, PjrtRuntime};
+use crate::tensor::Matrix;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineOpts {
+    pub schedule: ScheduleOpts,
+    /// No-overhead SINQ: fold shared column scales into producers first and
+    /// quantize single-scale (§2.3.1).
+    pub no_overhead: bool,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts { schedule: ScheduleOpts::default(), no_overhead: false }
+    }
+}
+
+/// Run the full pipeline; returns the quantized model and wall time (s).
+pub fn run(
+    mw: &ModelWeights,
+    qcfg: &QuantConfig,
+    opts: &PipelineOpts,
+) -> anyhow::Result<(QuantizedModel, f64)> {
+    let t0 = Instant::now();
+    let qm = if opts.no_overhead {
+        let folded = fold::fold_model(mw, qcfg.sinq_iters, qcfg.sinq_clamp);
+        let mut base = qcfg.clone();
+        base.method = crate::quant::Method::Rtn; // t already absorbed
+        let (mut qm, _) = scheduler::quantize_model(&folded, &base, &opts.schedule)?;
+        qm.method = format!("{}-no-overhead", qcfg.method.name());
+        // The folded norm gains / producer weights are part of the model.
+        qm.fvectors = folded.vectors.clone();
+        qm
+    } else {
+        scheduler::quantize_model(mw, qcfg, &opts.schedule)?.0
+    };
+    Ok((qm, t0.elapsed().as_secs_f64()))
+}
+
+/// Quantize, save to `.stz`, return the path's byte size.
+pub fn run_and_save(
+    mw: &ModelWeights,
+    qcfg: &QuantConfig,
+    opts: &PipelineOpts,
+    out_path: impl AsRef<Path>,
+) -> anyhow::Result<(QuantizedModel, usize)> {
+    let (qm, _) = run(mw, qcfg, opts)?;
+    qm.save(&out_path)?;
+    let bytes = std::fs::metadata(&out_path)?.len() as usize;
+    Ok((qm, bytes))
+}
+
+/// PJRT-accelerated Algorithm 1: run the lowered Pallas `sinq_quantize`
+/// artifact for a layer shape. Returns (codes, scales, shifts, t) — the
+/// same contract as `quant::sinq::quantize` (modulo the ragged-group cases
+/// the artifact does not cover).
+pub fn sinq_quantize_pjrt(
+    rt: &PjrtRuntime,
+    w: &Matrix,
+) -> anyhow::Result<QuantizedLinear> {
+    let artifact = format!("sinq_quantize_{}x{}.hlo.txt", w.rows, w.cols);
+    let exe = rt.load(&artifact)?;
+    let arg = client::lit_matrix(w)?;
+    let result = exe.execute(&[arg]).map_err(|e| anyhow::anyhow!("execute {artifact}: {e}"))?;
+    let lit = result[0][0].to_literal_sync().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (codes_l, scales_l, shifts_l, t_l) =
+        lit.to_tuple4().map_err(|e| anyhow::anyhow!("tuple4: {e}"))?;
+    let codes_i32 = codes_l.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let group = 64usize;
+    let n_groups = w.cols / group;
+    Ok(QuantizedLinear {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: group,
+        grid: crate::fmt::grids::Grid::uniform(4),
+        codes: codes_i32.iter().map(|&c| c as u8).collect(),
+        scales: Matrix::from_vec(w.rows, n_groups, client::literal_to_f32(&scales_l)?),
+        shifts: Some(Matrix::from_vec(w.rows, n_groups, client::literal_to_f32(&shifts_l)?)),
+        col_scale: Some(client::literal_to_f32(&t_l)?),
+        hadamard: false,
+        hadamard_out: false,
+        pair_codebook: None,
+        aux: crate::quant::AuxPrecision::F32,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::load_or_synthetic;
+    use crate::quant::{Method, QuantConfig};
+
+    #[test]
+    fn pipeline_round_trip_via_disk() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 71);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let path = std::env::temp_dir().join("sinq_pipeline_test.stz");
+        let (qm, bytes) =
+            run_and_save(&mw, &cfg, &PipelineOpts::default(), &path).unwrap();
+        assert!(bytes > 1000);
+        let back = QuantizedModel::load(&path).unwrap();
+        assert_eq!(back.layers.len(), qm.layers.len());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn no_overhead_pipeline_produces_single_scale() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 72);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let opts = PipelineOpts { no_overhead: true, ..Default::default() };
+        let (qm, _) = run(&mw, &cfg, &opts).unwrap();
+        assert!(qm.method.contains("no-overhead"));
+        assert!(qm.layers.values().all(|q| q.col_scale.is_none()));
+    }
+}

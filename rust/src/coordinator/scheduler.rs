@@ -1,0 +1,201 @@
+//! Per-layer quantization job scheduling.
+//!
+//! Quantizing a model is embarrassingly parallel across layers *after* a
+//! sequential activation-capture pre-pass (calibrated methods need layer
+//! inputs). The scheduler runs the pre-pass once, then fans layer jobs out
+//! over scoped worker threads, preserving deterministic output order.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use crate::model::forward::{Capture, Forward};
+use crate::model::{ModelConfig, ModelWeights, QuantizedModel};
+use crate::quant::{quantize_matrix, Calibration, QuantConfig, QuantizedLinear};
+use crate::util::threadpool;
+
+/// Progress/outcome of one scheduled job.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub layer: String,
+    pub millis: f64,
+    pub bits_per_weight: f64,
+}
+
+/// Scheduler options.
+#[derive(Debug, Clone)]
+pub struct ScheduleOpts {
+    pub threads: usize,
+    /// Calibration sample (token bytes) for activation capture; required by
+    /// calibrated methods.
+    pub calib_sample: Option<Vec<u8>>,
+    pub verbose: bool,
+}
+
+impl Default for ScheduleOpts {
+    fn default() -> Self {
+        ScheduleOpts { threads: 2, calib_sample: None, verbose: false }
+    }
+}
+
+/// Run the capture pre-pass (when needed) and quantize every quantizable
+/// layer of `mw` under `cfg`. Returns the quantized model + per-job reports.
+pub fn quantize_model(
+    mw: &ModelWeights,
+    cfg: &QuantConfig,
+    opts: &ScheduleOpts,
+) -> anyhow::Result<(QuantizedModel, Vec<JobReport>)> {
+    let names = mw.cfg.quantizable_names();
+
+    // Pre-pass: capture per-layer inputs if the method needs calibration.
+    let calib: BTreeMap<String, Calibration> = if cfg.method.needs_calibration() {
+        let sample = opts
+            .calib_sample
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("method {} needs --calib data", cfg.method.name()))?;
+        capture_calibration(mw, &sample, &names)?
+    } else {
+        BTreeMap::new()
+    };
+
+    let done = AtomicUsize::new(0);
+    let results: Vec<anyhow::Result<(QuantizedLinear, JobReport)>> =
+        threadpool::map_indexed(&names, opts.threads, |_, name| {
+            let t0 = Instant::now();
+            let q = quantize_matrix(&mw.tensors[name], cfg, calib.get(name))?;
+            let report = JobReport {
+                layer: name.clone(),
+                millis: t0.elapsed().as_secs_f64() * 1e3,
+                bits_per_weight: q.bits_per_weight(),
+            };
+            let n = done.fetch_add(1, Ordering::SeqCst) + 1;
+            if opts.verbose {
+                println!("  [{n}/{}] {name} ({:.1} ms)", names.len(), report.millis);
+            }
+            Ok((q, report))
+        });
+
+    let mut layers = BTreeMap::new();
+    let mut reports = Vec::new();
+    for (name, r) in names.iter().zip(results) {
+        let (q, rep) = r.map_err(|e| anyhow::anyhow!("layer {name}: {e}"))?;
+        layers.insert(name.clone(), q);
+        reports.push(rep);
+    }
+
+    let qnames = mw.cfg.quantizable_names();
+    let fweights: BTreeMap<String, _> = mw
+        .tensors
+        .iter()
+        .filter(|(k, _)| !qnames.contains(k))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    Ok((
+        QuantizedModel {
+            cfg: mw.cfg.clone(),
+            layers,
+            fweights,
+            fvectors: mw.vectors.clone(),
+            method: cfg.method.name().to_string(),
+            bits: cfg.bits,
+        },
+        reports,
+    ))
+}
+
+/// One forward pass over the calibration sample, recording every linear's
+/// inputs; returns per-layer [`Calibration`].
+pub fn capture_calibration(
+    mw: &ModelWeights,
+    sample: &[u8],
+    names: &[String],
+) -> anyhow::Result<BTreeMap<String, Calibration>> {
+    let mut cap = Capture::new(64);
+    let fwd = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+    for w in sample.chunks(128).take(6) {
+        let _ = fwd.forward(w, Some(&mut cap));
+    }
+    let mut out = BTreeMap::new();
+    for name in names {
+        let x = cap
+            .calibration(name)
+            .ok_or_else(|| anyhow::anyhow!("no activations captured for {name}"))?;
+        out.insert(name.clone(), Calibration::from_activations(x));
+    }
+    Ok(out)
+}
+
+/// Convenience used throughout benches/tables: quantize with defaults.
+pub fn quantize_simple(
+    mw: &ModelWeights,
+    cfg: &QuantConfig,
+    calib_sample: Option<&[u8]>,
+) -> anyhow::Result<QuantizedModel> {
+    let opts = ScheduleOpts {
+        threads: 2,
+        calib_sample: calib_sample.map(|s| s.to_vec()),
+        verbose: false,
+    };
+    Ok(quantize_model(mw, cfg, &opts)?.0)
+}
+
+/// Which models the experiment tables sweep, resolved against artifacts.
+pub fn load_family_member(art_dir: &str, name: &str) -> anyhow::Result<ModelWeights> {
+    ModelWeights::load(format!("{art_dir}/models/{name}.stz"))
+}
+
+/// Fallback for tests: synthetic when artifacts are absent.
+pub fn load_or_synthetic(art_dir: &str, name: &str, seed: u64) -> ModelWeights {
+    load_family_member(art_dir, name).unwrap_or_else(|_| {
+        ModelWeights::synthetic(&ModelConfig::family(name).expect("family model"), seed)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+
+    #[test]
+    fn schedules_all_layers_uncalibrated() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 61);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let (qm, reports) = quantize_model(&mw, &cfg, &ScheduleOpts::default()).unwrap();
+        assert_eq!(qm.layers.len(), mw.cfg.quantizable_names().len());
+        assert_eq!(reports.len(), qm.layers.len());
+        assert!(reports.iter().all(|r| r.bits_per_weight > 4.0));
+        assert!(qm.fweights.contains_key("embed"));
+    }
+
+    #[test]
+    fn calibrated_method_without_sample_errors() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 62);
+        let cfg = QuantConfig::new(Method::Awq, 4);
+        assert!(quantize_model(&mw, &cfg, &ScheduleOpts::default()).is_err());
+    }
+
+    #[test]
+    fn calibrated_method_with_sample_succeeds() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 63);
+        let cfg = QuantConfig::new(Method::Awq, 4);
+        let opts = ScheduleOpts {
+            calib_sample: Some(b"calibration text sample ".repeat(30).to_vec()),
+            ..Default::default()
+        };
+        let (qm, _) = quantize_model(&mw, &cfg, &opts).unwrap();
+        assert!(qm.layers.values().all(|q| q.col_scale.is_some()));
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 64);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let (a, _) =
+            quantize_model(&mw, &cfg, &ScheduleOpts { threads: 1, ..Default::default() }).unwrap();
+        let (b, _) =
+            quantize_model(&mw, &cfg, &ScheduleOpts { threads: 4, ..Default::default() }).unwrap();
+        for (name, qa) in &a.layers {
+            assert_eq!(qa.codes, b.layers[name].codes, "{name}");
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Evaluation corpora: the exact byte streams the models were trained /
+//! held out on (written by `python/compile/train.py` into
+//! `artifacts/corpus/`), plus windowing into evaluation batches.
+//!
+//! Tokenization is byte-level (vocab 256) — the tokenizer *is* the identity
+//! on bytes, which keeps the Python and Rust pipelines trivially in sync.
+
+use std::path::Path;
+
+/// A byte corpus with sequence-window iteration.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub name: String,
+    pub data: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn load(art_dir: &str, kind: &str, split: &str) -> anyhow::Result<Corpus> {
+        let path = Path::new(art_dir).join("corpus").join(format!("{kind}_{split}.bin"));
+        let data = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("corpus {}: {e} (run `make artifacts`)", path.display()))?;
+        Ok(Corpus { name: format!("{kind}_{split}"), data })
+    }
+
+    /// Deterministic non-overlapping evaluation windows of length `seq`,
+    /// up to `max_windows`.
+    pub fn eval_windows(&self, seq: usize, max_windows: usize) -> Vec<&[u8]> {
+        self.data.chunks_exact(seq).take(max_windows).collect()
+    }
+
+    /// Total tokens available.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// In-memory corpus for tests.
+    pub fn from_bytes(name: &str, data: Vec<u8>) -> Corpus {
+        Corpus { name: name.to_string(), data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_windows_partition() {
+        let c = Corpus::from_bytes("t", (0..=255u8).cycle().take(1000).collect());
+        let w = c.eval_windows(128, 100);
+        assert_eq!(w.len(), 7); // 1000 / 128
+        assert_eq!(w[0][0], 0);
+        assert_eq!(w[1][0], 128u8);
+        let w2 = c.eval_windows(128, 3);
+        assert_eq!(w2.len(), 3);
+    }
+
+    #[test]
+    fn loads_artifact_corpora_when_present() {
+        // Integration-style: skip silently when artifacts are absent.
+        if let Ok(c) = Corpus::load("artifacts", "wiki", "eval") {
+            assert!(c.len() > 10_000);
+            assert!(c.data.iter().all(|&b| b < 128), "ascii corpus");
+        }
+    }
+}

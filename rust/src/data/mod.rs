@@ -1,0 +1,7 @@
+//! Data layer: corpora (loaded from `artifacts/corpus/`), the byte
+//! tokenizer, evaluation batching, and the synthetic QA / reasoning suites.
+
+pub mod corpus;
+pub mod qa;
+
+pub use corpus::Corpus;

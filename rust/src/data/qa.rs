@@ -1,0 +1,199 @@
+//! Synthetic QA and reasoning suites (flip-rate / accuracy substrates for
+//! Tables 2, 7, 14 — HellaSwag/PIQA/MMLU/AIME stand-ins, DESIGN.md §3).
+//!
+//! Each task is a byte prompt plus N candidate continuations scored by total
+//! log-likelihood under the model; the *flip* metric (Dutta et al. 2024)
+//! compares the argmax option between the full-precision and quantized
+//! models and needs no ground truth, while the accuracy metric uses the
+//! generator's known correct option. Tasks are built from the same template
+//! grammar as the training corpus, so a trained model beats chance.
+
+use crate::tensor::Rng;
+
+// Word lists — mirror python/compile/corpus.py (the training distribution).
+pub const NOUNS: &[&str] = &[
+    "system", "river", "empire", "theory", "engine", "council", "valley", "method", "garden",
+    "signal", "market", "temple", "compiler", "harbor", "museum", "planet", "circuit", "forest",
+    "treaty", "sensor", "archive", "bridge", "colony", "dialect", "furnace", "glacier", "habitat",
+    "isotope", "journal", "kernel", "lattice", "meadow", "nebula", "orchard", "pigment", "quarry",
+    "reactor", "stadium", "tunnel", "vessel", "windmill", "zephyr", "algorithm", "basin",
+    "cathedral", "dynamo", "estuary",
+];
+pub const ADJS: &[&str] = &[
+    "ancient", "rapid", "quiet", "northern", "dense", "fragile", "modern", "hollow", "distant",
+    "precise", "luminous", "brittle", "coastal", "recursive", "thermal", "nomadic", "austere",
+    "vivid", "sturdy", "obscure", "parallel", "fertile", "rugged", "serene", "volatile",
+    "compact", "ornate", "humid",
+];
+pub const VERBS: &[&str] = &[
+    "describes", "contains", "governs", "produces", "connects", "absorbs", "predicts",
+    "regulates", "transforms", "precedes", "supports", "measures", "encodes", "divides",
+    "restores", "observes", "balances", "extends", "records", "compresses",
+];
+pub const TOPICS: &[&str] = &[
+    "history", "geology", "music", "trade", "physics", "language", "agriculture", "navigation",
+    "astronomy", "medicine", "weaving", "metallurgy", "cartography", "rhetoric",
+];
+
+/// One multiple-choice task.
+#[derive(Debug, Clone)]
+pub struct QaTask {
+    pub prompt: Vec<u8>,
+    pub options: Vec<Vec<u8>>,
+    pub correct: usize,
+}
+
+/// The three QA suites + the reasoning suite.
+pub const SUITES: &[&str] = &["continuation", "plausibility", "topic", "arith"];
+
+/// Build a suite of `n` tasks.
+pub fn suite(name: &str, n: usize, seed: u64) -> Vec<QaTask> {
+    let mut rng = Rng::new(seed ^ 0x5EED_0A11);
+    (0..n)
+        .map(|_| match name {
+            "continuation" => continuation_task(&mut rng),
+            "plausibility" => plausibility_task(&mut rng),
+            "topic" => topic_task(&mut rng),
+            "arith" => arith_task(&mut rng),
+            _ => panic!("unknown QA suite '{name}'"),
+        })
+        .collect()
+}
+
+fn pick<'a>(rng: &mut Rng, xs: &'a [&'a str]) -> &'a str {
+    xs[rng.below(xs.len())]
+}
+
+/// HellaSwag-like: grammatical sentence continuation. The correct option is
+/// a noun phrase (matching the training grammar); distractors put a verb /
+/// adjective / topic word where a noun belongs.
+fn continuation_task(rng: &mut Rng) -> QaTask {
+    let (a1, n1, v, t) = (pick(rng, ADJS), pick(rng, NOUNS), pick(rng, VERBS), pick(rng, TOPICS));
+    let n2 = pick(rng, NOUNS);
+    let prompt = format!("The {a1} {n1} {v} the ");
+    let correct_opt = format!("{n2} of {t}.");
+    let d1 = format!("{} of {t}.", pick(rng, VERBS));
+    let d2 = format!("{} of {t}.", pick(rng, ADJS));
+    let d3 = format!("of {} the.", pick(rng, NOUNS));
+    shuffle_options(rng, prompt, correct_opt, vec![d1, d2, d3])
+}
+
+/// PIQA-like: pick the well-formed sentence over scrambled corruptions.
+fn plausibility_task(rng: &mut Rng) -> QaTask {
+    let (a1, n1, v, n2, t) =
+        (pick(rng, ADJS), pick(rng, NOUNS), pick(rng, VERBS), pick(rng, NOUNS), pick(rng, TOPICS));
+    let prompt = "".to_string();
+    let correct_opt = format!("The {n1} of {t} is a {a1} {n2} that {v} the {n1}.");
+    let d1 = format!("The {v} of {a1} is a {t} {n1} that {n2} the {v}.");
+    let d2 = format!("{n2} the a {t} of {v} is {n1} that {a1} the.");
+    let d3 = format!("is The {n1} {n1} of a that the {v} {t} {a1}.");
+    shuffle_options(rng, prompt, correct_opt, vec![d1, d2, d3])
+}
+
+/// MMLU-like: register/topic association — which heading fits the wiki
+/// register seen in training ("== Noun topic ==").
+fn topic_task(rng: &mut Rng) -> QaTask {
+    let n = pick(rng, NOUNS);
+    let t = pick(rng, TOPICS);
+    let prompt = "== ".to_string();
+    // Title-case noun + topic is the trained heading shape.
+    let mut title = n.to_string();
+    title[..1].make_ascii_uppercase();
+    let correct_opt = format!("{title} {t} ==");
+    let d1 = format!("{t} {title} ==");
+    let d2 = format!("{} {} ==", pick(rng, VERBS), pick(rng, VERBS));
+    let d3 = format!("{} {} ==", pick(rng, ADJS), pick(rng, ADJS));
+    shuffle_options(rng, prompt, correct_opt, vec![d1, d2, d3])
+}
+
+/// AIME stand-in (Table 7): two-step addition chains in the exact format the
+/// corpus embeds ("a + b = s1. s1 + c = s2.").
+fn arith_task(rng: &mut Rng) -> QaTask {
+    let a = 2 + rng.below(40) as i64;
+    let b = 2 + rng.below(40) as i64;
+    let c = 2 + rng.below(20) as i64;
+    let s1 = a + b;
+    let s2 = s1 + c;
+    let prompt = format!("{a} + {b} = {s1}. {s1} + {c} = ");
+    let correct_opt = format!("{s2}.");
+    let mut distractors = vec![];
+    let mut seen = vec![s2];
+    while distractors.len() < 3 {
+        let delta = [-10, -2, -1, 1, 2, 10][rng.below(6)];
+        let wrong = s2 + delta;
+        if wrong > 0 && !seen.contains(&wrong) {
+            seen.push(wrong);
+            distractors.push(format!("{wrong}."));
+        }
+    }
+    shuffle_options(rng, prompt, correct_opt, distractors)
+}
+
+fn shuffle_options(rng: &mut Rng, prompt: String, correct: String, others: Vec<String>) -> QaTask {
+    let mut options: Vec<String> = vec![correct.clone()];
+    options.extend(others);
+    let mut order: Vec<usize> = (0..options.len()).collect();
+    rng.shuffle(&mut order);
+    let shuffled: Vec<Vec<u8>> =
+        order.iter().map(|&i| options[i].clone().into_bytes()).collect();
+    let correct_pos = order.iter().position(|&i| i == 0).unwrap();
+    QaTask { prompt: prompt.into_bytes(), options: shuffled, correct: correct_pos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_deterministic_and_well_formed() {
+        for name in SUITES {
+            let a = suite(name, 20, 7);
+            let b = suite(name, 20, 7);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.correct, y.correct);
+            }
+            for t in &a {
+                assert_eq!(t.options.len(), 4, "{name}");
+                assert!(t.correct < 4);
+                // Options distinct.
+                for i in 0..4 {
+                    for j in i + 1..4 {
+                        assert_ne!(t.options[i], t.options[j], "{name}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arith_correct_option_is_the_sum() {
+        for t in suite("arith", 50, 3) {
+            let p = String::from_utf8(t.prompt.clone()).unwrap();
+            // parse "a + b = s1. s1 + c = "
+            let seg = p.split(". ").nth(1).unwrap(); // "s1 + c = "
+            let s1: i64 = seg.split(" + ").next().unwrap().parse().unwrap();
+            let c: i64 =
+                seg.split(" + ").nth(1).unwrap().split(" = ").next().unwrap().parse().unwrap();
+            let correct = String::from_utf8(t.options[t.correct].clone()).unwrap();
+            let s2: i64 = correct.trim_end_matches('.').parse().unwrap();
+            assert_eq!(s2, s1 + c, "{p}");
+        }
+    }
+
+    #[test]
+    fn word_lists_match_training_grammar_sizes() {
+        // Guard against drift from python/compile/corpus.py.
+        assert_eq!(NOUNS.len(), 47);
+        assert_eq!(ADJS.len(), 28);
+        assert_eq!(VERBS.len(), 20);
+        assert_eq!(TOPICS.len(), 14);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = suite("continuation", 5, 1);
+        let b = suite("continuation", 5, 2);
+        assert!(a.iter().zip(&b).any(|(x, y)| x.prompt != y.prompt));
+    }
+}

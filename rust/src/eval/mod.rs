@@ -1,0 +1,62 @@
+//! Evaluation harnesses: perplexity, flip rate / accuracy, reconstruction
+//! analysis, activation capture statistics (R²), and Pareto fronts.
+//!
+//! All evaluators run against the [`LogitsEngine`] trait so the same harness
+//! drives both the pure-Rust reference forward and the PJRT runtime
+//! (`runtime::PjrtForward`) — Python is never involved.
+
+pub mod flips;
+pub mod pareto;
+pub mod ppl;
+pub mod r2;
+pub mod recon;
+
+use crate::tensor::Matrix;
+
+/// Anything that maps a token sequence to per-position logits.
+pub trait LogitsEngine {
+    /// tokens (length S) → logits (S, vocab); row p scores token p+1.
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix>;
+
+    fn vocab(&self) -> usize {
+        256
+    }
+}
+
+/// The reference engine: pure-Rust forward over effective weights.
+pub struct RustEngine<'a> {
+    pub fwd: crate::model::forward::Forward<'a>,
+}
+
+impl<'a> LogitsEngine for RustEngine<'a> {
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        Ok(self.fwd.forward(tokens, None))
+    }
+}
+
+/// Log-softmax over a logits row; returns log p(target).
+pub fn log_prob(logits_row: &[f32], target: u8) -> f64 {
+    let maxv = logits_row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let denom: f64 = logits_row.iter().map(|&v| ((v as f64) - maxv).exp()).sum();
+    (logits_row[target as usize] as f64 - maxv) - denom.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_prob_normalized() {
+        let row = vec![0.0f32; 256];
+        let lp = log_prob(&row, 7);
+        assert!((lp - (1.0f64 / 256.0).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_prob_prefers_high_logit() {
+        let mut row = vec![0.0f32; 256];
+        row[65] = 10.0;
+        assert!(log_prob(&row, 65) > -0.02);
+        assert!(log_prob(&row, 66) < -9.0);
+    }
+}

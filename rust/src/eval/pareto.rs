@@ -1,0 +1,78 @@
+//! Memory-perplexity Pareto fronts (Figs. 4 and 5).
+
+/// One evaluated configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParetoPoint {
+    pub label: String,
+    pub memory_gb: f64,
+    pub ppl: f64,
+}
+
+/// Return the non-dominated subset, sorted by memory: a point survives if no
+/// other point has both ≤ memory and ≤ ppl (with at least one strict).
+pub fn pareto_front(points: &[ParetoPoint]) -> Vec<ParetoPoint> {
+    let mut front: Vec<ParetoPoint> = points
+        .iter()
+        .filter(|p| {
+            !points.iter().any(|q| {
+                (q.memory_gb <= p.memory_gb && q.ppl <= p.ppl)
+                    && (q.memory_gb < p.memory_gb || q.ppl < p.ppl)
+            })
+        })
+        .cloned()
+        .collect();
+    front.sort_by(|a, b| a.memory_gb.partial_cmp(&b.memory_gb).unwrap());
+    front.dedup();
+    front
+}
+
+/// Max vertical (ppl) distance of `method`'s points from the front built
+/// over *all* points — the "< 0.01 ppl from the 4-bit Pareto front" claim.
+pub fn distance_from_front(all: &[ParetoPoint], method_points: &[ParetoPoint]) -> f64 {
+    let front = pareto_front(all);
+    method_points
+        .iter()
+        .map(|p| {
+            // Best ppl achievable on the front at ≤ the same memory.
+            let best = front
+                .iter()
+                .filter(|f| f.memory_gb <= p.memory_gb + 1e-12)
+                .map(|f| f.ppl)
+                .fold(f64::INFINITY, f64::min);
+            (p.ppl - best).max(0.0)
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, m: f64, p: f64) -> ParetoPoint {
+        ParetoPoint { label: label.into(), memory_gb: m, ppl: p }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pts = vec![pt("a", 1.0, 10.0), pt("b", 2.0, 9.0), pt("c", 1.5, 12.0), pt("d", 0.9, 15.0)];
+        let front = pareto_front(&pts);
+        let labels: Vec<&str> = front.iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["d", "a", "b"]); // c dominated by a
+    }
+
+    #[test]
+    fn front_of_front_is_identity() {
+        let pts = vec![pt("a", 1.0, 10.0), pt("b", 2.0, 9.0)];
+        assert_eq!(pareto_front(&pareto_front(&pts)), pareto_front(&pts));
+    }
+
+    #[test]
+    fn distance_zero_when_on_front() {
+        let pts = vec![pt("a", 1.0, 10.0), pt("b", 2.0, 9.0)];
+        assert_eq!(distance_from_front(&pts, &[pts[0].clone()]), 0.0);
+        let off = pt("c", 2.0, 9.5);
+        let mut all = pts.clone();
+        all.push(off.clone());
+        assert!((distance_from_front(&all, &[off]) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,81 @@
+//! Perplexity evaluation (the Wiki2 / C4 columns of Tables 1, 3, 4, 8, 9).
+
+use super::{log_prob, LogitsEngine};
+use crate::data::Corpus;
+
+/// Perplexity over non-overlapping `seq`-length windows of a corpus:
+/// `exp(mean NLL)` of next-token prediction, teacher-forced.
+pub fn perplexity(
+    engine: &mut dyn LogitsEngine,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+) -> anyhow::Result<f64> {
+    let windows = corpus.eval_windows(seq, max_windows);
+    anyhow::ensure!(!windows.is_empty(), "corpus too small for seq {seq}");
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for w in windows {
+        let logits = engine.logits(w)?;
+        for p in 0..w.len() - 1 {
+            nll -= log_prob(logits.row(p), w[p + 1]);
+            count += 1;
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::RustEngine;
+    use crate::model::forward::Forward;
+    use crate::model::{ModelConfig, ModelWeights};
+    use crate::tensor::{Matrix, Rng};
+
+    /// A fake engine that always predicts the next byte perfectly.
+    struct Oracle;
+    impl LogitsEngine for Oracle {
+        fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+            let mut m = Matrix::zeros(tokens.len(), 256);
+            for p in 0..tokens.len() - 1 {
+                *m.at_mut(p, tokens[p + 1] as usize) = 100.0;
+            }
+            Ok(m)
+        }
+    }
+
+    /// Uniform predictor: ppl must be exactly 256.
+    struct Uniform;
+    impl LogitsEngine for Uniform {
+        fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+            Ok(Matrix::zeros(tokens.len(), 256))
+        }
+    }
+
+    #[test]
+    fn oracle_ppl_is_one() {
+        let c = Corpus::from_bytes("t", b"hello world, hello world!".repeat(20).to_vec());
+        let ppl = perplexity(&mut Oracle, &c, 32, 4).unwrap();
+        assert!(ppl < 1.001, "{ppl}");
+    }
+
+    #[test]
+    fn uniform_ppl_is_vocab() {
+        let c = Corpus::from_bytes("t", vec![7u8; 500]);
+        let ppl = perplexity(&mut Uniform, &c, 64, 3).unwrap();
+        assert!((ppl - 256.0).abs() < 0.1, "{ppl}");
+    }
+
+    #[test]
+    fn untrained_model_near_uniform() {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 31);
+        let mut rng = Rng::new(31);
+        let data: Vec<u8> = (0..512).map(|_| (32 + rng.below(90)) as u8).collect();
+        let c = Corpus::from_bytes("rand", data);
+        let mut eng = RustEngine { fwd: Forward::new(&mw.cfg, &mw.tensors, &mw.vectors) };
+        let ppl = perplexity(&mut eng, &c, 64, 2).unwrap();
+        assert!(ppl > 30.0 && ppl < 3000.0, "{ppl}");
+    }
+}

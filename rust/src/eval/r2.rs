@@ -1,0 +1,142 @@
+//! Fig. 2a / 2b / Fig. 6: the pseudo-activation-awareness statistics.
+//!
+//! * `r2_analysis` — per-layer R² between `log(1/σ_col(W))` and `log(μ_x)`
+//!   on a real (trained) model, plus the shuffled-baseline control the paper
+//!   plots, and R² of the SINQ-derived `t` with `μ_x`.
+//! * `adam_scaling_experiment` — the single-layer Adam stationarity
+//!   experiment behind Fig. 2b, reporting the fitted power-law exponent of
+//!   `σ_W` vs `s_x` (paper: −1/2).
+
+use crate::model::forward::{Capture, Forward};
+use crate::model::ModelWeights;
+use crate::quant::sinq::sinkhorn_normalize;
+use crate::tensor::{stats, Matrix, Rng};
+
+/// One layer's Fig. 2a record.
+#[derive(Debug, Clone)]
+pub struct R2Row {
+    pub layer: String,
+    /// R²(log 1/σ_col, log μ_x) — the paper's headline statistic.
+    pub r2_std: f64,
+    /// Shuffled control (should be ≈ 0).
+    pub r2_shuffled: f64,
+    /// R²(log t_sinq, log μ_x) — the paper finds this ≥ r2_std.
+    pub r2_t: f64,
+}
+
+/// Compute Fig. 2a statistics for every quantizable layer of a model.
+pub fn r2_analysis(mw: &ModelWeights, sample: &[u8], seed: u64) -> anyhow::Result<Vec<R2Row>> {
+    let mut cap = Capture::new(32);
+    let fwd = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+    for w in sample.chunks(128).take(6) {
+        let _ = fwd.forward(w, Some(&mut cap));
+    }
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::new();
+    for name in mw.cfg.quantizable_names() {
+        let Some(mu) = cap.mean_abs(&name) else { continue };
+        let w = &mw.tensors[&name];
+        let cs = stats::col_stds(w);
+        let log_inv_std: Vec<f64> = cs.iter().map(|&s| -(s.max(1e-12)).ln()).collect();
+        let log_mu: Vec<f64> = mu.iter().map(|&m| (m.max(1e-12) as f64).ln()).collect();
+
+        let mut shuffled = log_inv_std.clone();
+        rng.shuffle(&mut shuffled);
+
+        let sk = sinkhorn_normalize(w, 24, (0.5, 2.0));
+        let log_t: Vec<f64> = sk.col.iter().map(|&t| (t.max(1e-12) as f64).ln()).collect();
+
+        rows.push(R2Row {
+            layer: name,
+            r2_std: stats::r_squared(&log_inv_std, &log_mu),
+            r2_shuffled: stats::r_squared(&shuffled, &log_mu),
+            r2_t: stats::r_squared(&log_t, &log_mu),
+        });
+    }
+    Ok(rows)
+}
+
+/// Fig. 2b: train one linear layer with Adam on a pure-noise target with
+/// per-channel input scales; fit `log σ_col(W) = a·log s_x + b` and return
+/// `(a, R²)`. The paper's prediction: `a ≈ −1/2`.
+pub fn adam_scaling_experiment(
+    nout: usize,
+    nin: usize,
+    steps: usize,
+    seed: u64,
+) -> (f64, f64, Vec<f32>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let bs = 16usize;
+    let s_x: Vec<f32> =
+        (0..nin).map(|_| (0.1f64 + rng.laplace(0.6).abs().exp()) as f32 * 0.3).collect();
+    let mut w = Matrix::randn(nout, nin, 0.01, &mut rng);
+    let (mut m, mut v) = (Matrix::zeros(nout, nin), Matrix::zeros(nout, nin));
+    let (b1, b2, lr, eps) = (0.9f32, 0.999f32, 2e-3f32, 1e-8f32);
+    for t in 1..=steps as i32 {
+        let mut x = Matrix::from_fn(bs, nin, |_, _| rng.normal_f32(0.0, 1.0));
+        x.scale_cols(&s_x);
+        let yh = x.matmul_nt(&w);
+        let mut d = Matrix::zeros(bs, nout);
+        for i in 0..bs * nout {
+            d.data[i] = yh.data[i] + rng.normal_f32(0.0, 1.0);
+        }
+        let g = d.transpose().matmul(&x);
+        for idx in 0..w.data.len() {
+            let gi = g.data[idx] / bs as f32;
+            m.data[idx] = b1 * m.data[idx] + (1.0 - b1) * gi;
+            v.data[idx] = b2 * v.data[idx] + (1.0 - b2) * gi * gi;
+            let mh = m.data[idx] / (1.0 - b1.powi(t));
+            let vh = v.data[idx] / (1.0 - b2.powi(t));
+            w.data[idx] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+    let cs = stats::col_stds(&w);
+    let lx: Vec<f64> = s_x.iter().map(|&s| (s as f64).ln()).collect();
+    let ly: Vec<f64> = cs.iter().map(|&c| c.max(1e-12).ln()).collect();
+    let slope = fit_slope(&lx, &ly);
+    let r2 = stats::r_squared(&lx, &ly);
+    (slope, r2, s_x, cs)
+}
+
+/// Least-squares slope of y on x.
+pub fn fit_slope(x: &[f64], y: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxy: f64 = x.iter().zip(y).map(|(&a, &b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|&a| (a - mx) * (a - mx)).sum();
+    sxy / sxx.max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn fit_slope_exact_line() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| -0.5 * v + 3.0).collect();
+        assert!((fit_slope(&x, &y) + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adam_experiment_recovers_minus_half() {
+        // Fig. 2b: the stationary exponent is ≈ −1/2.
+        let (slope, r2, _, _) = adam_scaling_experiment(32, 64, 1200, 99);
+        assert!(r2 > 0.5, "R² {r2}");
+        assert!((slope + 0.5).abs() < 0.22, "slope {slope}");
+    }
+
+    #[test]
+    fn r2_rows_on_synthetic_model() {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 51);
+        let rows = r2_analysis(&mw, &b"r2 capture text sample ".repeat(40), 1).unwrap();
+        assert!(!rows.is_empty());
+        for r in &rows {
+            assert!(r.r2_std.is_finite() && r.r2_shuffled.is_finite() && r.r2_t.is_finite());
+            assert!((0.0..=1.0).contains(&r.r2_std));
+        }
+    }
+}

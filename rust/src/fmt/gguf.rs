@@ -1,0 +1,236 @@
+//! GGUF-style block quantization formats (Appendix A.7: no-overhead SINQ as a
+//! pre-processing step for llama.cpp's Q4_0 / Q3_K_S).
+//!
+//! Re-implemented from the GGML specification:
+//!
+//! * **Q4_0** — blocks of 32 weights; one f16 scale `d`; symmetric codes
+//!   `q ∈ [0,15]` decoding to `d·(q−8)`. 4.5 bits/weight.
+//! * **Q3_K_S** — super-blocks of 256 weights = 16 sub-blocks of 16; one f16
+//!   super-scale `d`; 16 six-bit sub-scales; 3-bit symmetric codes decoding
+//!   to `d·(sc−32)·(q−4)`. ≈3.44 bits/weight.
+//!
+//! These formats have *no zero-point*, so the column-scale normalization that
+//! no-overhead SINQ applies beforehand measurably helps (Table 9).
+
+use crate::tensor::Matrix;
+use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits, round_f16};
+
+/// Block size of Q4_0.
+pub const Q4_0_BLOCK: usize = 32;
+/// Super-block size of Q3_K.
+pub const Q3_K_SUPER: usize = 256;
+/// Sub-block size of Q3_K.
+pub const Q3_K_SUB: usize = 16;
+
+/// A Q4_0-quantized row-major matrix.
+#[derive(Debug, Clone)]
+pub struct Q4_0Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// One f16 scale per block (row-major blocks along each row).
+    pub scales: Vec<u16>,
+    /// Codes 0..16, one per weight.
+    pub codes: Vec<u8>,
+}
+
+/// Quantize row-wise in blocks of 32 following ggml's `quantize_row_q4_0`:
+/// the scale is `max_abs/-8` with the sign of the absolute max element.
+pub fn q4_0_quantize(w: &Matrix) -> Q4_0Matrix {
+    assert_eq!(w.cols % Q4_0_BLOCK, 0, "cols must be a multiple of 32");
+    let mut scales = Vec::with_capacity(w.rows * w.cols / Q4_0_BLOCK);
+    let mut codes = Vec::with_capacity(w.numel());
+    for i in 0..w.rows {
+        for block in w.row(i).chunks_exact(Q4_0_BLOCK) {
+            // ggml: find the value with max |.|, keep its sign.
+            let mut amax = 0.0f32;
+            let mut maxv = 0.0f32;
+            for &v in block {
+                if v.abs() > amax {
+                    amax = v.abs();
+                    maxv = v;
+                }
+            }
+            let d = maxv / -8.0;
+            let id = if d != 0.0 { 1.0 / d } else { 0.0 };
+            let dh = f32_to_f16_bits(d);
+            scales.push(dh);
+            for &v in block {
+                let q = (v * id + 8.5).floor().clamp(0.0, 15.0) as u8;
+                codes.push(q);
+            }
+        }
+    }
+    Q4_0Matrix { rows: w.rows, cols: w.cols, scales, codes }
+}
+
+/// Dequantize a Q4_0 matrix.
+pub fn q4_0_dequantize(q: &Q4_0Matrix) -> Matrix {
+    let mut m = Matrix::zeros(q.rows, q.cols);
+    let blocks_per_row = q.cols / Q4_0_BLOCK;
+    for i in 0..q.rows {
+        for b in 0..blocks_per_row {
+            let d = f16_bits_to_f32(q.scales[i * blocks_per_row + b]);
+            for k in 0..Q4_0_BLOCK {
+                let idx = i * q.cols + b * Q4_0_BLOCK + k;
+                m.data[idx] = d * (q.codes[idx] as f32 - 8.0);
+            }
+        }
+    }
+    m
+}
+
+/// Bits per weight of Q4_0 (4 bits + f16 scale per 32).
+pub fn q4_0_bits_per_weight() -> f64 {
+    4.0 + 16.0 / Q4_0_BLOCK as f64
+}
+
+/// A Q3_K_S-quantized matrix.
+#[derive(Debug, Clone)]
+pub struct Q3KMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// f16 super-scale per 256-weight super-block.
+    pub d: Vec<u16>,
+    /// 6-bit sub-scales (stored one per byte), 16 per super-block.
+    pub sub_scales: Vec<u8>,
+    /// 3-bit codes (stored one per byte here; packed on disk).
+    pub codes: Vec<u8>,
+}
+
+/// Quantize row-wise in 256-weight super-blocks following the Q3_K scheme:
+/// per sub-block scale `s_j = max_abs_j / 4` (3-bit symmetric range −4..3),
+/// super-scale `d = max_j |s_j| / 32`, sub-scales quantized to 6 bits.
+pub fn q3_k_quantize(w: &Matrix) -> Q3KMatrix {
+    assert_eq!(w.cols % Q3_K_SUPER, 0, "cols must be a multiple of 256");
+    let supers_per_row = w.cols / Q3_K_SUPER;
+    let mut d = Vec::with_capacity(w.rows * supers_per_row);
+    let mut sub_scales = Vec::with_capacity(w.rows * supers_per_row * 16);
+    let mut codes = Vec::with_capacity(w.numel());
+    for i in 0..w.rows {
+        for sb in w.row(i).chunks_exact(Q3_K_SUPER) {
+            // Ideal float sub-scales.
+            let mut s = [0.0f32; 16];
+            for (j, sub) in sb.chunks_exact(Q3_K_SUB).enumerate() {
+                let amax = sub.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                s[j] = amax / 4.0;
+            }
+            let smax = s.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let dd = round_f16(smax / 31.0);
+            d.push(f32_to_f16_bits(dd));
+            let idd = if dd != 0.0 { 1.0 / dd } else { 0.0 };
+            for (j, sub) in sb.chunks_exact(Q3_K_SUB).enumerate() {
+                // 6-bit unsigned sub-scale code (0..63), decode sc*d.
+                let sc = (s[j] * idd).round().clamp(0.0, 63.0) as u8;
+                sub_scales.push(sc);
+                let eff = dd * sc as f32;
+                let ieff = if eff != 0.0 { 1.0 / eff } else { 0.0 };
+                for &v in sub {
+                    let q = (v * ieff + 4.5).floor().clamp(0.0, 7.0) as u8;
+                    codes.push(q);
+                }
+            }
+        }
+    }
+    Q3KMatrix { rows: w.rows, cols: w.cols, d, sub_scales, codes }
+}
+
+/// Dequantize a Q3_K_S matrix.
+pub fn q3_k_dequantize(q: &Q3KMatrix) -> Matrix {
+    let mut m = Matrix::zeros(q.rows, q.cols);
+    let supers_per_row = q.cols / Q3_K_SUPER;
+    for i in 0..q.rows {
+        for sbi in 0..supers_per_row {
+            let dd = f16_bits_to_f32(q.d[i * supers_per_row + sbi]);
+            for j in 0..16 {
+                let sc = q.sub_scales[(i * supers_per_row + sbi) * 16 + j];
+                let eff = dd * sc as f32;
+                for k in 0..Q3_K_SUB {
+                    let idx = i * q.cols + sbi * Q3_K_SUPER + j * Q3_K_SUB + k;
+                    m.data[idx] = eff * (q.codes[idx] as f32 - 4.0);
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Bits per weight of Q3_K_S (3 bits + 6-bit sub-scale per 16 + f16 per 256).
+pub fn q3_k_bits_per_weight() -> f64 {
+    3.0 + 6.0 / Q3_K_SUB as f64 + 16.0 / Q3_K_SUPER as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{stats, Rng};
+
+    #[test]
+    fn q4_0_round_trip_error_bounded() {
+        let mut rng = Rng::new(41);
+        let w = Matrix::randn(8, 128, 0.02, &mut rng);
+        let q = q4_0_quantize(&w);
+        let deq = q4_0_dequantize(&q);
+        // Worst-case error per weight is ~d/2 = max_abs/16.
+        for i in 0..w.rows {
+            let amax = w.row(i).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for j in 0..w.cols {
+                assert!((w.at(i, j) - deq.at(i, j)).abs() <= amax / 8.0 + 1e-6);
+            }
+        }
+        let rel = deq.dist(&w) / w.dist(&Matrix::zeros(8, 128));
+        assert!(rel < 0.12, "relative error {rel}");
+    }
+
+    #[test]
+    fn q3_k_round_trip_error_bounded() {
+        let mut rng = Rng::new(42);
+        let w = Matrix::randn(4, 512, 0.02, &mut rng);
+        let q = q3_k_quantize(&w);
+        let deq = q3_k_dequantize(&q);
+        let rel = deq.dist(&w) / w.dist(&Matrix::zeros(4, 512));
+        assert!(rel < 0.25, "relative error {rel}");
+        // Q3 must be worse than Q4 on the same data (coarser grid).
+        let q4 = q4_0_dequantize(&q4_0_quantize(&w));
+        assert!(deq.mse(&w) > q4.mse(&w));
+    }
+
+    #[test]
+    fn codes_in_range() {
+        let mut rng = Rng::new(43);
+        let w = Matrix::randn(2, 256, 1.0, &mut rng);
+        let q4 = q4_0_quantize(&w);
+        assert!(q4.codes.iter().all(|&c| c < 16));
+        let q3 = q3_k_quantize(&w);
+        assert!(q3.codes.iter().all(|&c| c < 8));
+        assert!(q3.sub_scales.iter().all(|&c| c < 64));
+    }
+
+    #[test]
+    fn bits_per_weight() {
+        assert!((q4_0_bits_per_weight() - 4.5).abs() < 1e-12);
+        assert!((q3_k_bits_per_weight() - 3.4375).abs() < 1e-3);
+    }
+
+    #[test]
+    fn column_outliers_hurt_q4_0_and_scaling_helps() {
+        // The Table 9 mechanism: a hot column inflates the per-block scale of
+        // *every* block it lands in; dividing it out first reduces MSE.
+        let mut rng = Rng::new(44);
+        let mut w = Matrix::randn(16, 128, 0.02, &mut rng);
+        for i in 0..16 {
+            *w.at_mut(i, 5) *= 12.0; // column 5 is hot
+        }
+        let base_mse = q4_0_dequantize(&q4_0_quantize(&w)).mse(&w);
+        // Pre-scale column 5 down (what no-overhead SINQ folding achieves).
+        let mut t = vec![1.0f32; 128];
+        t[5] = 12.0;
+        let mut wn = w.clone();
+        wn.div_cols(&t);
+        let qn = q4_0_dequantize(&q4_0_quantize(&wn));
+        let mut rec = qn.clone();
+        rec.scale_cols(&t);
+        assert!(rec.mse(&w) < base_mse * 0.6, "{} vs {}", rec.mse(&w), base_mse);
+        // And row stds are (weakly) preserved by construction.
+        let _ = stats::row_stds(&rec);
+    }
+}

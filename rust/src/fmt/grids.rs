@@ -1,0 +1,266 @@
+//! Quantization level grids.
+//!
+//! SINQ is orthogonal to the choice of levels (§3.2): Algorithm 1 normalizes
+//! the matrix, then *any* rounding function maps values to a grid. We provide
+//! the uniform integer grid (RTN), NF4 (normal-float quantiles, Dettmers et
+//! al. 2023), and FP4 E2M1 (the BnB FP4 format). Non-uniform grids quantize
+//! to the nearest level of a normalized table scaled per group.
+
+/// The NF4 levels as defined in QLoRA (Dettmers et al., 2023), normalized to
+/// `[-1, 1]` — quantiles of N(0,1) with exact 0 representation.
+pub const NF4_LEVELS: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// FP4 (E2M1) representable magnitudes scaled so max = 1 (matches
+/// bitsandbytes' FP4: {0, ±0.0625, ±0.125, ±0.1875, ±0.25, ±0.375, ±0.5,
+/// ±0.75, ±1} picked from sign×exp×mantissa but 16 codes total).
+pub const FP4_LEVELS: [f32; 16] = [
+    -1.0, -0.75, -0.5, -0.375, -0.25, -0.1875, -0.125, -0.0625, //
+    0.0, 0.0625, 0.125, 0.1875, 0.25, 0.375, 0.5, 0.75,
+];
+
+/// A quantization grid: either a uniform integer range or an explicit level
+/// table in `[-1, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Grid {
+    /// Uniform asymmetric integer grid with codes `0..2^bits`.
+    Uniform { bits: u32 },
+    /// Explicit normalized levels (must be sorted ascending).
+    Table { name: &'static str, levels: Vec<f32> },
+}
+
+impl Grid {
+    pub fn uniform(bits: u32) -> Grid {
+        Grid::Uniform { bits }
+    }
+
+    pub fn nf4() -> Grid {
+        Grid::Table { name: "nf4", levels: NF4_LEVELS.to_vec() }
+    }
+
+    pub fn fp4() -> Grid {
+        Grid::Table { name: "fp4", levels: FP4_LEVELS.to_vec() }
+    }
+
+    /// An NF-style grid for arbitrary bit width: quantiles of N(0,1) with an
+    /// exact zero, following the QLoRA construction. Used by the codebook /
+    /// HIGGS-like baselines at 3 bits.
+    pub fn nf(bits: u32) -> Grid {
+        if bits == 4 {
+            return Grid::nf4();
+        }
+        let n = 1usize << bits;
+        // Build n levels: (n/2) negative quantiles incl. -1, zero, (n/2 - 1)
+        // positive quantiles incl. +1 — mirroring the NF4 construction.
+        let half1 = n / 2;
+        let half2 = n - half1;
+        let mut levels = Vec::with_capacity(n);
+        let offset = 0.5 * (1.0 / 32.0 + 1.0 / 30.0); // QLoRA's tail offset
+        // half1 non-positive levels: p from `offset` (→ most negative) to 0.5 (→ 0).
+        for i in 0..half1 {
+            let p = offset + (0.5 - offset) * (i as f64) / (half1 - 1).max(1) as f64;
+            levels.push(-(normal_icdf(1.0 - p)) as f32);
+        }
+        // half2 strictly positive levels: p from 0.5+δ to 1−offset (→ max).
+        for i in 1..=half2 {
+            let p = 0.5 + (0.5 - offset) * (i as f64) / half2 as f64;
+            levels.push(normal_icdf(p) as f32);
+        }
+        levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let max = levels.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        for l in &mut levels {
+            *l /= max;
+        }
+        Grid::Table { name: "nf", levels }
+    }
+
+    /// Number of representable codes.
+    pub fn size(&self) -> usize {
+        match self {
+            Grid::Uniform { bits } => 1usize << bits,
+            Grid::Table { levels, .. } => levels.len(),
+        }
+    }
+
+    /// Effective bits per weight for memory accounting.
+    pub fn bits(&self) -> u32 {
+        (self.size() as f32).log2().ceil() as u32
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        matches!(self, Grid::Uniform { .. })
+    }
+
+    /// Nearest code for a normalized value (Table grids expect inputs
+    /// normalized so the group max-abs maps to ±1).
+    pub fn nearest(&self, x: f32) -> u8 {
+        match self {
+            Grid::Uniform { bits } => {
+                let maxq = ((1u32 << bits) - 1) as f32;
+                x.round().clamp(0.0, maxq) as u8
+            }
+            Grid::Table { levels, .. } => {
+                // Binary search then pick closer neighbour.
+                let mut lo = 0usize;
+                let mut hi = levels.len() - 1;
+                while hi - lo > 1 {
+                    let mid = (lo + hi) / 2;
+                    if levels[mid] <= x {
+                        lo = mid;
+                    } else {
+                        hi = mid;
+                    }
+                }
+                if (x - levels[lo]).abs() <= (levels[hi] - x).abs() {
+                    lo as u8
+                } else {
+                    hi as u8
+                }
+            }
+        }
+    }
+
+    /// Decode a code to its (normalized for Table, integer for Uniform) value.
+    pub fn decode(&self, code: u8) -> f32 {
+        match self {
+            Grid::Uniform { .. } => code as f32,
+            Grid::Table { levels, .. } => levels[code as usize],
+        }
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation, |ε|<1.15e-9).
+pub fn normal_icdf(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "icdf domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - plow {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nf4_levels_sorted_and_span() {
+        for w in NF4_LEVELS.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(NF4_LEVELS[0], -1.0);
+        assert_eq!(*NF4_LEVELS.last().unwrap(), 1.0);
+        assert_eq!(NF4_LEVELS[7], 0.0); // exact zero
+    }
+
+    #[test]
+    fn uniform_nearest_clamps() {
+        let g = Grid::uniform(4);
+        assert_eq!(g.nearest(-3.0), 0);
+        assert_eq!(g.nearest(7.4), 7);
+        assert_eq!(g.nearest(99.0), 15);
+        assert_eq!(g.size(), 16);
+        assert_eq!(g.bits(), 4);
+    }
+
+    #[test]
+    fn table_nearest_is_truly_nearest() {
+        let g = Grid::nf4();
+        for i in 0..=200 {
+            let x = -1.2 + 2.4 * i as f32 / 200.0;
+            let c = g.nearest(x) as usize;
+            let d = (x - NF4_LEVELS[c]).abs();
+            for (j, &l) in NF4_LEVELS.iter().enumerate() {
+                assert!(d <= (x - l).abs() + 1e-6, "x={x} chose {c} but {j} closer");
+            }
+        }
+    }
+
+    #[test]
+    fn icdf_matches_known_values() {
+        assert!((normal_icdf(0.5)).abs() < 1e-9);
+        assert!((normal_icdf(0.975) - 1.959964).abs() < 1e-4);
+        assert!((normal_icdf(0.025) + 1.959964).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nf_grid_generalizes() {
+        let g3 = Grid::nf(3);
+        assert_eq!(g3.size(), 8);
+        if let Grid::Table { levels, .. } = &g3 {
+            for w in levels.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!((levels[0] + 1.0).abs() < 1e-6);
+            assert!((levels.last().unwrap() - 1.0).abs() < 1e-6);
+        } else {
+            panic!("nf(3) should be a table grid");
+        }
+        // nf(4) must be exactly NF4.
+        assert_eq!(Grid::nf(4), Grid::nf4());
+    }
+
+    #[test]
+    fn fp4_decode_encode_round_trip() {
+        let g = Grid::fp4();
+        for code in 0..16u8 {
+            let v = g.decode(code);
+            assert_eq!(g.nearest(v), code, "level {v}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Storage formats: the `.stz` tensor archive (Python ⇄ Rust interchange),
+//! sub-byte bit-packing, quantization grids (uniform / NF4 / FP4), and
+//! GGUF-style block formats (Q4_0, Q3_K_S) for the Appendix A.7 experiments.
+
+pub mod gguf;
+pub mod grids;
+pub mod pack;
+pub mod stz;
+
+pub use grids::Grid;
+pub use stz::{Stz, Tensor};

@@ -1,0 +1,107 @@
+//! Sub-byte bit-packing for quantized weights.
+//!
+//! Quantized codes are unsigned integers in `[0, 2^b)` for `b ∈ {2..8}`.
+//! Codes are packed LSB-first into a contiguous byte stream; the paper's
+//! memory numbers (Tables 1/3/4 "Mem." columns) are computed from exactly
+//! these packed sizes plus auxiliary parameters.
+
+/// Number of bytes needed to pack `n` codes of `bits` width.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
+}
+
+/// Pack `codes` (each `< 2^bits`) LSB-first into bytes.
+pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((2..=8).contains(&bits), "bits must be in 2..=8");
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(c <= mask, "code {c} exceeds {bits}-bit range");
+        let c = (c & mask) as u16;
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= (c << off) as u8;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= (c >> (8 - off)) as u8;
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `n` codes of `bits` width from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    assert!((2..=8).contains(&bits));
+    assert!(bytes.len() >= packed_len(n, bits), "unpack: buffer too small");
+    let mask = ((1u16 << bits) - 1) as u16;
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = (bytes[byte] as u16) >> off;
+        if off + bits as usize > 8 {
+            v |= (bytes[byte + 1] as u16) << (8 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn round_trip_all_widths() {
+        let mut rng = Rng::new(31);
+        for bits in 2..=8u32 {
+            let n = 1000 + bits as usize; // odd lengths exercise tail handling
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack(&codes, bits);
+            assert_eq!(packed.len(), packed_len(n, bits));
+            assert_eq!(unpack(&packed, bits, n), codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn packed_len_values() {
+        assert_eq!(packed_len(64, 4), 32);
+        assert_eq!(packed_len(64, 3), 24);
+        assert_eq!(packed_len(5, 3), 2); // 15 bits -> 2 bytes
+        assert_eq!(packed_len(0, 4), 0);
+    }
+
+    #[test]
+    fn int4_nibble_layout() {
+        // Two 4-bit codes per byte, first in the low nibble.
+        let packed = pack(&[0x3, 0xA], 4);
+        assert_eq!(packed, vec![0xA3]);
+    }
+
+    #[test]
+    fn int3_crosses_byte_boundaries() {
+        // 8 3-bit codes = 3 bytes exactly.
+        let codes = [0b111, 0b000, 0b101, 0b010, 0b011, 0b100, 0b110, 0b001];
+        let packed = pack(&codes, 3);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack(&packed, 3, 8), codes);
+    }
+
+    #[test]
+    fn property_random_lengths() {
+        // Hand-rolled property test: many random (bits, n, codes) cases.
+        let mut rng = Rng::new(32);
+        for _ in 0..200 {
+            let bits = 2 + (rng.below(7)) as u32;
+            let n = rng.below(257);
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            assert_eq!(unpack(&pack(&codes, bits), bits, n), codes);
+        }
+    }
+}

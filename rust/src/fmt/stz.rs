@@ -1,0 +1,271 @@
+//! `.stz` — the repo's tensor-archive format (safetensors-shaped, built from
+//! scratch since neither safetensors nor serde is available offline).
+//!
+//! Layout:
+//! ```text
+//! [8 bytes]  little-endian u64: header length H
+//! [H bytes]  JSON header: { "tensor-name": {"dtype": "f32"|"i32"|"u8",
+//!                                           "shape": [..], "offset": o,
+//!                                           "nbytes": n}, ...,
+//!             "__meta__": { arbitrary json } }
+//! [  ...  ]  raw little-endian tensor data, offsets relative to data start
+//! ```
+//! The Python trainer writes this format (see `python/compile/stz.py`); the
+//! Rust side reads checkpoints and writes quantized models back.
+
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// One stored tensor: f32 / i32 / u8 payloads cover every use in the repo.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+}
+
+impl Tensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } | Tensor::U8 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn nbytes(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len() * 4,
+            Tensor::I32 { data, .. } => data.len() * 4,
+            Tensor::U8 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            Tensor::F32 { .. } => "f32",
+            Tensor::I32 { .. } => "i32",
+            Tensor::U8 { .. } => "u8",
+        }
+    }
+
+    /// View a rank-2 f32 tensor as a [`Matrix`].
+    pub fn as_matrix(&self) -> Option<Matrix> {
+        match self {
+            Tensor::F32 { shape, data } if shape.len() == 2 => {
+                Some(Matrix::from_vec(shape[0], shape[1], data.clone()))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor::F32 { shape: vec![m.rows, m.cols], data: m.data.clone() }
+    }
+
+    pub fn from_vec_f32(v: Vec<f32>) -> Tensor {
+        Tensor::F32 { shape: vec![v.len()], data: v }
+    }
+}
+
+/// An in-memory `.stz` archive: named tensors plus a JSON metadata object.
+#[derive(Debug, Default)]
+pub struct Stz {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: Option<Json>,
+}
+
+impl Stz {
+    pub fn new() -> Stz {
+        Stz::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.get(name)
+    }
+
+    /// Required tensor fetch with a contextual error.
+    pub fn require(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing from archive"))
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut header = BTreeMap::new();
+        let mut blob: Vec<u8> = Vec::new();
+        for (name, t) in &self.tensors {
+            let offset = blob.len();
+            match t {
+                Tensor::F32 { data, .. } => {
+                    for &v in data {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Tensor::I32 { data, .. } => {
+                    for &v in data {
+                        blob.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Tensor::U8 { data, .. } => blob.extend_from_slice(data),
+            }
+            header.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("dtype", Json::Str(t.dtype_name().into())),
+                    (
+                        "shape",
+                        Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+                    ),
+                    ("offset", Json::Num(offset as f64)),
+                    ("nbytes", Json::Num(t.nbytes() as f64)),
+                ]),
+            );
+        }
+        if let Some(m) = &self.meta {
+            header.insert("__meta__".into(), m.clone());
+        }
+        let header_json = Json::Obj(header).to_string_compact();
+        let mut out = Vec::with_capacity(8 + header_json.len() + blob.len());
+        out.extend_from_slice(&(header_json.len() as u64).to_le_bytes());
+        out.extend_from_slice(header_json.as_bytes());
+        out.extend_from_slice(&blob);
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Stz> {
+        anyhow::ensure!(bytes.len() >= 8, "stz: truncated header length");
+        let hlen = u64::from_le_bytes(bytes[..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(bytes.len() >= 8 + hlen, "stz: truncated header");
+        let header = std::str::from_utf8(&bytes[8..8 + hlen])?;
+        let header = Json::parse(header).map_err(|e| anyhow::anyhow!("stz header: {e}"))?;
+        let data = &bytes[8 + hlen..];
+        let mut stz = Stz::new();
+        let obj = match &header {
+            Json::Obj(m) => m,
+            _ => anyhow::bail!("stz: header is not an object"),
+        };
+        for (name, desc) in obj {
+            if name == "__meta__" {
+                stz.meta = Some(desc.clone());
+                continue;
+            }
+            let dtype = desc.get("dtype").and_then(|j| j.as_str()).unwrap_or("f32");
+            let shape: Vec<usize> = desc
+                .get("shape")
+                .and_then(|j| j.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default();
+            let offset = desc.get("offset").and_then(|j| j.as_usize()).unwrap_or(0);
+            let nbytes = desc.get("nbytes").and_then(|j| j.as_usize()).unwrap_or(0);
+            anyhow::ensure!(offset + nbytes <= data.len(), "stz: tensor '{name}' out of bounds");
+            let raw = &data[offset..offset + nbytes];
+            let t = match dtype {
+                "f32" => Tensor::F32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                "i32" => Tensor::I32 {
+                    shape,
+                    data: raw
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                },
+                "u8" => Tensor::U8 { shape, data: raw.to_vec() },
+                other => anyhow::bail!("stz: unsupported dtype '{other}'"),
+            };
+            stz.tensors.insert(name.clone(), t);
+        }
+        Ok(stz)
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Stz> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path.as_ref())
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.as_ref().display()))?
+            .read_to_end(&mut bytes)?;
+        Stz::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn round_trip_all_dtypes() {
+        let mut rng = Rng::new(21);
+        let mut stz = Stz::new();
+        stz.insert("w", Tensor::from_matrix(&Matrix::randn(5, 7, 1.0, &mut rng)));
+        stz.insert("q", Tensor::I32 { shape: vec![3], data: vec![-1, 0, 7] });
+        stz.insert("packed", Tensor::U8 { shape: vec![4], data: vec![0, 255, 17, 3] });
+        stz.meta = Some(Json::obj(vec![("name", Json::Str("tiny".into()))]));
+
+        let bytes = stz.to_bytes();
+        let back = Stz::from_bytes(&bytes).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        assert_eq!(back.get("w"), stz.get("w"));
+        assert_eq!(back.get("q"), stz.get("q"));
+        assert_eq!(back.get("packed"), stz.get("packed"));
+        assert_eq!(back.meta.unwrap().get("name").unwrap().as_str(), Some("tiny"));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut stz = Stz::new();
+        stz.insert("v", Tensor::from_vec_f32(vec![1.5, -2.5, 1e-8]));
+        let dir = std::env::temp_dir().join("sinq_stz_test.stz");
+        stz.save(&dir).unwrap();
+        let back = Stz::load(&dir).unwrap();
+        assert_eq!(back.get("v"), stz.get("v"));
+        let _ = std::fs::remove_file(&dir);
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let mut stz = Stz::new();
+        stz.insert("v", Tensor::from_vec_f32(vec![1.0; 16]));
+        let bytes = stz.to_bytes();
+        assert!(Stz::from_bytes(&bytes[..bytes.len() - 8]).is_err());
+        assert!(Stz::from_bytes(&bytes[..4]).is_err());
+    }
+
+    #[test]
+    fn matrix_view() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let t = Tensor::from_matrix(&m);
+        assert_eq!(t.as_matrix().unwrap(), m);
+        assert!(Tensor::from_vec_f32(vec![1.0]).as_matrix().is_none());
+    }
+}

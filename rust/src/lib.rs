@@ -1,0 +1,32 @@
+//! # SINQ — Sinkhorn-Normalized Quantization (full-system reproduction)
+//!
+//! This crate reproduces *SINQ: Sinkhorn-Normalized Quantization for
+//! Calibration-Free Low-Precision LLM Weights* (Muller et al., 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: a quantization pipeline (per-layer
+//!   job scheduler over a thread pool), a serving/eval runtime that executes
+//!   AOT-compiled XLA artifacts via PJRT, the full quantizer zoo
+//!   (RTN/HQQ/SINQ/Hadamard/AWQ/A-SINQ/GPTQ/CrossQuant/codebook/GGUF), and a
+//!   CLI that regenerates every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX transformer whose forward
+//!   graph is lowered once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (Sinkhorn
+//!   normalization, RTN quantize, fused dequant-matmul) called from L2.
+//!
+//! Python never runs on the request path: after `make artifacts` the `sinq`
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod fmt;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,260 @@
+//! `sinq` — the L3 coordinator CLI.
+//!
+//! ```text
+//! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
+//! sinq eval     --model tiny [--quantized q.stz] [--corpus wiki]
+//! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny]
+//! sinq serve    --model tiny [--requests 32]          (batching demo)
+//! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
+//! ```
+//!
+//! Everything runs against `artifacts/` (see `make artifacts`); `--fast`
+//! trims sweep sizes for smoke runs.
+
+use sinq::coordinator::pipeline::{self, PipelineOpts};
+use sinq::coordinator::scheduler::{self, ScheduleOpts};
+use sinq::coordinator::server::BatchServer;
+use sinq::fmt::grids::Grid;
+use sinq::model::QuantizedModel;
+use sinq::quant::{AuxPrecision, Method, QuantConfig};
+use sinq::report::tables::{self, Ctx};
+use sinq::report::Table;
+use sinq::runtime::{PjrtForward, PjrtRuntime};
+use sinq::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".to_string());
+    let result = match cmd.as_str() {
+        "quantize" => cmd_quantize(&args),
+        "eval" => cmd_eval(&args),
+        "analyze" => cmd_analyze(&args),
+        "serve" => cmd_serve(&args),
+        "table" => cmd_table(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
+         USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
+         sinq eval --model <name> [--quantized f.stz] [--corpus wiki|c4]\n  \
+         sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>]\n  \
+         sinq serve --model <name> [--requests N]\n  \
+         sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
+         Common flags: --art-dir artifacts  --models pico,tiny,small\n\
+         Methods: rtn hadamard hqq sinq awq a-sinq gptq hadamard+gptq crossquant codebook bnb higgs"
+    );
+}
+
+fn quant_config(args: &Args) -> anyhow::Result<QuantConfig> {
+    let method = Method::parse(&args.get("method", "sinq"))
+        .ok_or_else(|| anyhow::anyhow!("unknown method"))?;
+    let bits: u32 = args.num("bits", 4);
+    let mut cfg = QuantConfig::new(method, bits).with_group(args.num("group-size", 64));
+    match args.get("grid", "uniform").as_str() {
+        "uniform" => {}
+        "nf4" => cfg = cfg.with_grid(Grid::nf4()),
+        "fp4" => cfg = cfg.with_grid(Grid::fp4()),
+        "nf" => cfg = cfg.with_grid(Grid::nf(bits)),
+        g => anyhow::bail!("unknown grid '{g}'"),
+    }
+    match args.get("aux", "f16").as_str() {
+        "f32" => cfg = cfg.with_aux(AuxPrecision::F32),
+        "f16" => {}
+        "i8" => cfg = cfg.with_aux(AuxPrecision::I8),
+        a => anyhow::bail!("unknown aux precision '{a}'"),
+    }
+    if args.has("no-shift") {
+        cfg = cfg.with_shift(false);
+    }
+    Ok(cfg)
+}
+
+fn cmd_quantize(args: &Args) -> anyhow::Result<()> {
+    let art = args.get("art-dir", "artifacts");
+    let model = args.get("model", "tiny");
+    let mw = scheduler::load_family_member(&art, &model)?;
+    let cfg = quant_config(args)?;
+    let calib = if cfg.method.needs_calibration() {
+        let c = sinq::data::Corpus::load(&art, "wiki", "train")?;
+        Some(c.data[..768.min(c.data.len())].to_vec())
+    } else {
+        None
+    };
+    let opts = PipelineOpts {
+        schedule: ScheduleOpts {
+            threads: args.num("threads", 2),
+            calib_sample: calib,
+            verbose: true,
+        },
+        no_overhead: args.has("no-overhead"),
+    };
+    let out = args.get("out", &format!("{art}/quantized_{model}_{}.stz", cfg.method.name()));
+    let (qm, bytes) = pipeline::run_and_save(&mw, &cfg, &opts, &out)?;
+    println!(
+        "quantized {model} with {} @ {}b → {out} ({:.2} MB, {} layers)",
+        qm.method,
+        cfg.bits,
+        bytes as f64 / 1e6,
+        qm.layers.len()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    let art = args.get("art-dir", "artifacts");
+    let model = args.get("model", "tiny");
+    let corpus_kind = args.get("corpus", "wiki");
+    let ctx = Ctx::new(&art, args.has("fast"))?;
+    let mw = ctx.load_model(&model)?;
+    let ppl_value = if let Some(qpath) = args.opt("quantized") {
+        let qm = QuantizedModel::load(qpath)?;
+        let eff = qm.effective_weights();
+        ctx.ppl_eff(&mw, &eff, &qm.fvectors, &corpus_kind)?
+    } else {
+        ctx.ppl_fp(&mw, &corpus_kind)?
+    };
+    println!("{model} {corpus_kind} perplexity: {ppl_value:.3}");
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let art = args.get("art-dir", "artifacts");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("r2");
+    let ctx = Ctx::new(&art, args.has("fast"))?;
+    let model = args.get("model", "tiny");
+    let t = match which {
+        "r2" => tables::fig2a_table(&ctx, &[&model])?,
+        "adam" => tables::fig2b_table(&ctx)?,
+        "kurtosis" => tables::fig2c_fig7_table(&ctx, &model)?,
+        "recon" => tables::fig3_table(&ctx, &model)?,
+        "fig1" => tables::fig1_table(&ctx)?,
+        other => anyhow::bail!("unknown analysis '{other}'"),
+    };
+    t.print();
+    let _ = t.dump(&art);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let art = args.get("art-dir", "artifacts");
+    let model = args.get("model", "tiny");
+    let n_requests: usize = args.num("requests", 32);
+
+    // The server thread builds its own PJRT stack (handles are not Send).
+    let art2 = art.clone();
+    let model2 = model.clone();
+    let server = BatchServer::spawn(
+        move || {
+            let rt = PjrtRuntime::cpu(&art2)?;
+            let mw = scheduler::load_family_member(&art2, &model2)?;
+            PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)
+        },
+        64,
+        std::time::Duration::from_millis(4),
+    );
+    let corpus = sinq::data::Corpus::load(&art, "wiki", "eval")?;
+    let windows = corpus.eval_windows(128, n_requests);
+    let client = server.client();
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = windows
+        .iter()
+        .map(|w| {
+            let c = client.clone();
+            let toks = w.to_vec();
+            std::thread::spawn(move || c.score(toks).map(|m| m.rows))
+        })
+        .collect();
+    let mut ok = 0;
+    for h in handles {
+        if h.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    println!(
+        "served {ok}/{n_requests} scoring requests in {secs:.2}s \
+         ({} batches, avg batch {:.2}, {:.0} tok/s)",
+        stats.batches,
+        stats.requests as f64 / stats.batches.max(1) as f64,
+        stats.tokens as f64 / secs
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let art = args.get("art-dir", "artifacts");
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("1");
+    let ctx = Ctx::new(&art, args.has("fast"))?;
+    let models_owned = args.list("models", &["pico", "tiny", "small"]);
+    let models: Vec<&str> = models_owned.iter().map(|s| s.as_str()).collect();
+    let small_set: Vec<&str> = models.iter().copied().take(2).collect();
+
+    let run = |sel: &str, emitted: &mut Vec<Table>| -> anyhow::Result<()> {
+        match sel {
+            "1" => emitted.push(tables::table1(&ctx, &models)?),
+            "2" => {
+                let (flip_t, acc) = tables::table2(&ctx, &small_set)?;
+                emitted.push(flip_t);
+                emitted.push(acc);
+            }
+            "3" => emitted.push(tables::table3(&ctx, &models)?),
+            "4" => emitted.push(tables::table4(&ctx, &small_set)?),
+            "5" => emitted.push(tables::table5(&ctx)?),
+            "6" => emitted.push(tables::table6(&ctx, &["tiny", "small"])?),
+            "7" => emitted.push(tables::table7(&ctx, "tiny")?),
+            "8" => emitted.push(tables::table8(&ctx, &small_set)?),
+            "9" => emitted.push(tables::table9(&ctx, &small_set)?),
+            "10" => emitted.push(tables::table10(&ctx, &small_set)?),
+            "16" => emitted.push(tables::table16(&ctx, "tiny")?),
+            "17" => emitted.push(tables::table17(&ctx, "tiny")?),
+            "18" => emitted.push(tables::table18(&ctx, &small_set)?),
+            "19" => emitted.push(tables::table19(&ctx)?),
+            "pareto" => emitted.push(tables::pareto_table(&ctx, &models)?),
+            "ablations" => emitted.push(tables::ablation_table(&ctx, &small_set)?),
+            "figs" => {
+                emitted.push(tables::fig1_table(&ctx)?);
+                emitted.push(tables::fig2a_table(&ctx, &small_set)?);
+                emitted.push(tables::fig2b_table(&ctx)?);
+                emitted.push(tables::fig2c_fig7_table(&ctx, "tiny")?);
+                emitted.push(tables::fig3_table(&ctx, "tiny")?);
+            }
+            other => anyhow::bail!("unknown table '{other}'"),
+        }
+        Ok(())
+    };
+
+    let mut emitted: Vec<Table> = Vec::new();
+    if which == "all" {
+        for sel in [
+            "1", "2", "3", "4", "5", "6", "7", "8", "9", "10", "16", "17", "18", "19",
+            "pareto", "ablations", "figs",
+        ] {
+            println!("=== table {sel} ===");
+            let before = emitted.len();
+            run(sel, &mut emitted)?;
+            for t in &emitted[before..] {
+                t.print(); // incremental output on long runs
+            }
+        }
+    } else {
+        run(which, &mut emitted)?;
+        for t in &emitted {
+            t.print();
+        }
+    }
+    for t in &emitted {
+        let _ = t.dump(&art);
+    }
+    Ok(())
+}

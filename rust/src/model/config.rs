@@ -1,0 +1,179 @@
+//! Model configuration — mirrors `python/compile/model.py::Config`.
+
+use crate::util::json::Json;
+
+/// Decoder-only transformer hyperparameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    /// 0 ⇒ dense SwiGLU MLP; otherwise switch-style top-1 MoE.
+    pub n_experts: usize,
+    pub rope_base: f32,
+    pub eps: f32,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    /// The built-in family (matching `python/compile/model.py::FAMILY`).
+    pub fn family(name: &str) -> Option<ModelConfig> {
+        let (d, layers, heads, ffn, n_experts) = match name {
+            "pico" => (64, 2, 2, 256, 0),
+            "tiny" => (128, 4, 4, 512, 0),
+            "small" => (256, 4, 8, 1024, 0),
+            "tiny_moe" => (128, 2, 4, 256, 4),
+            _ => return None,
+        };
+        Some(ModelConfig {
+            name: name.to_string(),
+            d,
+            layers,
+            heads,
+            ffn,
+            vocab: 256,
+            n_experts,
+            rope_base: 10000.0,
+            eps: 1e-5,
+        })
+    }
+
+    /// Parse from the `.stz` checkpoint metadata (`meta.config`).
+    pub fn from_meta(meta: &Json) -> anyhow::Result<ModelConfig> {
+        let c = meta.get("config").ok_or_else(|| anyhow::anyhow!("meta missing 'config'"))?;
+        let get = |k: &str| -> anyhow::Result<f64> {
+            c.get(k).and_then(|j| j.as_f64()).ok_or_else(|| anyhow::anyhow!("config missing '{k}'"))
+        };
+        Ok(ModelConfig {
+            name: c.get("name").and_then(|j| j.as_str()).unwrap_or("unknown").to_string(),
+            d: get("d")? as usize,
+            layers: get("layers")? as usize,
+            heads: get("heads")? as usize,
+            ffn: get("ffn")? as usize,
+            vocab: get("vocab")? as usize,
+            n_experts: get("n_experts").unwrap_or(0.0) as usize,
+            rope_base: get("rope_base").unwrap_or(10000.0) as f32,
+            eps: get("eps").unwrap_or(1e-5) as f32,
+        })
+    }
+
+    /// Canonical ordered weight list (HLO artifact argument order) —
+    /// must match `python/compile/model.py::weight_names` exactly.
+    pub fn weight_names(&self) -> Vec<String> {
+        let mut names = vec!["embed".to_string()];
+        for i in 0..self.layers {
+            let p = format!("layers.{i}");
+            for suffix in ["ln1", "wq", "wk", "wv", "wo", "ln2"] {
+                names.push(format!("{p}.{suffix}"));
+            }
+            if self.n_experts == 0 {
+                for suffix in ["wg", "wu", "wd"] {
+                    names.push(format!("{p}.{suffix}"));
+                }
+            } else {
+                names.push(format!("{p}.router"));
+                for e in 0..self.n_experts {
+                    for suffix in ["wg", "wu", "wd"] {
+                        names.push(format!("{p}.expert{e}.{suffix}"));
+                    }
+                }
+            }
+        }
+        names.push("ln_f".to_string());
+        names.push("lm_head".to_string());
+        names
+    }
+
+    /// The linears weight-only PTQ applies to.
+    pub fn quantizable_names(&self) -> Vec<String> {
+        self.weight_names()
+            .into_iter()
+            .filter(|n| {
+                let last = n.rsplit('.').next().unwrap();
+                last.starts_with('w') && last != "wq_norm" || n == "lm_head" || last == "router"
+            })
+            .filter(|n| n != "embed")
+            .collect()
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        let per_layer_attn = 4 * self.d * self.d + 2 * self.d;
+        let per_layer_mlp = if self.n_experts == 0 {
+            3 * self.d * self.ffn
+        } else {
+            self.n_experts * 3 * self.d * self.ffn + self.n_experts * self.d
+        };
+        2 * self.vocab * self.d + self.d + self.layers * (per_layer_attn + per_layer_mlp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_members_exist() {
+        for name in ["pico", "tiny", "small", "tiny_moe"] {
+            let c = ModelConfig::family(name).unwrap();
+            assert_eq!(c.name, name);
+            assert_eq!(c.d % c.heads, 0);
+            assert!(c.d.is_power_of_two() && c.ffn.is_power_of_two());
+        }
+        assert!(ModelConfig::family("qwen3").is_none());
+    }
+
+    #[test]
+    fn weight_names_dense_structure() {
+        let c = ModelConfig::family("pico").unwrap();
+        let names = c.weight_names();
+        assert_eq!(names[0], "embed");
+        assert_eq!(names.last().unwrap(), "lm_head");
+        // 1 embed + 2 layers × 9 + 2 tail = 21
+        assert_eq!(names.len(), 1 + 2 * 9 + 2);
+        assert!(names.contains(&"layers.1.wd".to_string()));
+    }
+
+    #[test]
+    fn weight_names_moe_structure() {
+        let c = ModelConfig::family("tiny_moe").unwrap();
+        let names = c.weight_names();
+        assert!(names.contains(&"layers.0.router".to_string()));
+        assert!(names.contains(&"layers.1.expert3.wd".to_string()));
+        // 1 + 2 layers × (6 + 1 router + 4 experts × 3) + 2
+        assert_eq!(names.len(), 1 + 2 * (6 + 1 + 12) + 2);
+    }
+
+    #[test]
+    fn quantizable_excludes_norms_and_embed() {
+        let c = ModelConfig::family("tiny").unwrap();
+        let q = c.quantizable_names();
+        assert!(q.iter().all(|n| !n.contains("ln") && n != "embed"));
+        assert!(q.contains(&"lm_head".to_string()));
+        assert_eq!(q.len(), 4 * 7 + 1); // 7 linears per layer + lm_head
+    }
+
+    #[test]
+    fn param_count_sane() {
+        let c = ModelConfig::family("tiny").unwrap();
+        let n = c.n_params();
+        assert!(n > 1_000_000 && n < 1_300_000, "tiny params {n}");
+    }
+
+    #[test]
+    fn meta_round_trip() {
+        let c = ModelConfig::family("small").unwrap();
+        let meta = Json::parse(
+            r#"{"config":{"name":"small","d":256,"layers":4,"heads":8,"ffn":1024,
+                "vocab":256,"n_experts":0,"rope_base":10000.0,"eps":1e-5}}"#,
+        )
+        .unwrap();
+        assert_eq!(ModelConfig::from_meta(&meta).unwrap(), c);
+    }
+}

@@ -1,0 +1,208 @@
+//! No-overhead SINQ (§2.3.1): the model-graph pass that absorbs the second
+//! scale `t` into producer operations so inference cost is identical to
+//! single-scale quantization.
+//!
+//! Consumer groups (layers sharing one input must share `t`, as in Qwen-3):
+//!
+//! | consumers                          | producer absorbing `t`     |
+//! |------------------------------------|----------------------------|
+//! | `wq, wk, wv` (layer l)             | `ln1` gain (layer l)       |
+//! | `wo` (layer l)                     | `wv` output rows (layer l) |
+//! | `wg, wu` [+ `router`, experts]     | `ln2` gain (layer l)       |
+//! | `wd` (/ `expert_e.wd`)             | `wu` (/`expert_e.wu`) rows |
+//! | `lm_head`                          | `ln_f` gain                |
+//!
+//! The fold itself is *exact* on the full-precision network (verified by the
+//! `fold_preserves_fp_forward` test); quantization error then comes only
+//! from the subsequent rounding.
+
+use crate::model::store::ModelWeights;
+use crate::quant::fold as qfold;
+use crate::quant::{quantize_matrix, Method, QuantConfig};
+use crate::quant::QuantizedLinear;
+use std::collections::BTreeMap;
+
+/// Apply the folding pass to a full-precision checkpoint: returns the
+/// transformed weights (consumers normalized, producers scaled). The
+/// transformed network computes exactly the same function.
+pub fn fold_model(mw: &ModelWeights, iters: usize, clamp: (f32, f32)) -> ModelWeights {
+    let mut out = mw.clone();
+    let cfg = &mw.cfg;
+
+    for l in 0..cfg.layers {
+        let pre = format!("layers.{l}");
+
+        // Group 1: q/k/v share ln1 output.
+        let t = {
+            let ws: Vec<&_> = ["wq", "wk", "wv"]
+                .iter()
+                .map(|s| &out.tensors[&format!("{pre}.{s}")])
+                .collect();
+            qfold::shared_col_scale(&ws, iters, clamp)
+        };
+        for s in ["wq", "wk", "wv"] {
+            qfold::divide_consumer_cols(out.tensors.get_mut(&format!("{pre}.{s}")).unwrap(), &t);
+        }
+        qfold::fold_into_gain(out.vectors.get_mut(&format!("{pre}.ln1")).unwrap(), &t);
+
+        // Group 2: wo consumes the attention context (wv output channels).
+        let t = qfold::shared_col_scale(&[&out.tensors[&format!("{pre}.wo")]], iters, clamp);
+        qfold::divide_consumer_cols(out.tensors.get_mut(&format!("{pre}.wo")).unwrap(), &t);
+        qfold::fold_into_producer_rows(out.tensors.get_mut(&format!("{pre}.wv")).unwrap(), &t);
+
+        if cfg.n_experts == 0 {
+            // Group 3: gate/up share ln2 output.
+            let t = {
+                let ws: Vec<&_> = ["wg", "wu"]
+                    .iter()
+                    .map(|s| &out.tensors[&format!("{pre}.{s}")])
+                    .collect();
+                qfold::shared_col_scale(&ws, iters, clamp)
+            };
+            for s in ["wg", "wu"] {
+                qfold::divide_consumer_cols(
+                    out.tensors.get_mut(&format!("{pre}.{s}")).unwrap(),
+                    &t,
+                );
+            }
+            qfold::fold_into_gain(out.vectors.get_mut(&format!("{pre}.ln2")).unwrap(), &t);
+
+            // Group 4: wd consumes silu(g)⊙u — fold into wu rows.
+            let t = qfold::shared_col_scale(&[&out.tensors[&format!("{pre}.wd")]], iters, clamp);
+            qfold::divide_consumer_cols(out.tensors.get_mut(&format!("{pre}.wd")).unwrap(), &t);
+            qfold::fold_into_producer_rows(
+                out.tensors.get_mut(&format!("{pre}.wu")).unwrap(),
+                &t,
+            );
+        } else {
+            // MoE: router + every expert's gate/up share ln2 output.
+            let mut names: Vec<String> = vec![format!("{pre}.router")];
+            for e in 0..cfg.n_experts {
+                for s in ["wg", "wu"] {
+                    names.push(format!("{pre}.expert{e}.{s}"));
+                }
+            }
+            let t = {
+                let ws: Vec<&_> = names.iter().map(|n| &out.tensors[n]).collect();
+                qfold::shared_col_scale(&ws, iters, clamp)
+            };
+            for n in &names {
+                qfold::divide_consumer_cols(out.tensors.get_mut(n).unwrap(), &t);
+            }
+            qfold::fold_into_gain(out.vectors.get_mut(&format!("{pre}.ln2")).unwrap(), &t);
+
+            // Per-expert wd folds into that expert's wu rows.
+            for e in 0..cfg.n_experts {
+                let wd = format!("{pre}.expert{e}.wd");
+                let t = qfold::shared_col_scale(&[&out.tensors[&wd]], iters, clamp);
+                qfold::divide_consumer_cols(out.tensors.get_mut(&wd).unwrap(), &t);
+                qfold::fold_into_producer_rows(
+                    out.tensors.get_mut(&format!("{pre}.expert{e}.wu")).unwrap(),
+                    &t,
+                );
+            }
+        }
+    }
+
+    // lm_head consumes ln_f output.
+    let t = qfold::shared_col_scale(&[&out.tensors["lm_head"]], iters, clamp);
+    qfold::divide_consumer_cols(out.tensors.get_mut("lm_head").unwrap(), &t);
+    qfold::fold_into_gain(out.vectors.get_mut("ln_f").unwrap(), &t);
+
+    out
+}
+
+/// Quantize a folded model with single-scale RTN (+shift): the no-overhead
+/// SINQ end product. Row Sinkhorn scales are subsumed by per-group scales.
+pub fn quantize_folded(
+    folded: &ModelWeights,
+    bits: u32,
+    group: usize,
+) -> BTreeMap<String, QuantizedLinear> {
+    let cfg = QuantConfig::new(Method::Rtn, bits).with_group(group);
+    folded
+        .cfg
+        .quantizable_names()
+        .into_iter()
+        .map(|name| {
+            let q = quantize_matrix(&folded.tensors[&name], &cfg, None).unwrap();
+            (name, q)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::Forward;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn fold_preserves_fp_forward() {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 21);
+        let folded = fold_model(&mw, 16, (0.5, 2.0));
+
+        let f1 = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let f2 = Forward::new(&folded.cfg, &folded.tensors, &folded.vectors);
+        let l1 = f1.forward(b"fold must be exact", None);
+        let l2 = f2.forward(b"fold must be exact", None);
+        let max_diff = l1
+            .data
+            .iter()
+            .zip(&l2.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-3, "fold changed FP logits by {max_diff}");
+    }
+
+    #[test]
+    fn fold_preserves_fp_forward_moe() {
+        let cfg = ModelConfig::family("tiny_moe").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 22);
+        let folded = fold_model(&mw, 16, (0.5, 2.0));
+        let f1 = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let f2 = Forward::new(&folded.cfg, &folded.tensors, &folded.vectors);
+        let l1 = f1.forward(b"moe fold", None);
+        let l2 = f2.forward(b"moe fold", None);
+        let max_diff = l1
+            .data
+            .iter()
+            .zip(&l2.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-3, "moe fold changed FP logits by {max_diff}");
+    }
+
+    #[test]
+    fn folded_rtn_beats_plain_rtn() {
+        // The Table 8/9 mechanism: folding balances columns before
+        // single-scale quantization.
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 23);
+        let folded = fold_model(&mw, 16, (0.5, 2.0));
+
+        let plain = quantize_folded(&mw, 3, 64); // plain RTN on raw weights
+        let after_fold = quantize_folded(&folded, 3, 64);
+
+        // Compare reconstruction error in the *original* weight space.
+        let mut err_plain = 0.0f64;
+        let mut err_fold = 0.0f64;
+        for name in cfg.quantizable_names() {
+            err_plain += plain[&name].dequantize().mse(&mw.tensors[&name]);
+            // Folded reconstruction approximates the folded weight; compare
+            // in folded space (the function computed is equivalent).
+            err_fold += after_fold[&name].dequantize().mse(&folded.tensors[&name])
+                * rel_scale(&folded.tensors[&name], &mw.tensors[&name]);
+        }
+        assert!(err_fold < err_plain, "fold {err_fold:.3e} vs plain {err_plain:.3e}");
+    }
+
+    /// Scale factor to make MSEs comparable across spaces (ratio of squared
+    /// Frobenius norms).
+    fn rel_scale(folded: &crate::tensor::Matrix, orig: &crate::tensor::Matrix) -> f64 {
+        let nf: f64 = folded.data.iter().map(|&x| (x as f64).powi(2)).sum();
+        let no: f64 = orig.data.iter().map(|&x| (x as f64).powi(2)).sum();
+        no / nf.max(1e-30)
+    }
+}

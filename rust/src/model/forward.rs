@@ -1,0 +1,387 @@
+//! Reference transformer forward pass (pure Rust, f32).
+//!
+//! Mirrors `python/compile/model.py::forward` exactly (RMSNorm → RoPE MHA →
+//! residual → RMSNorm → SwiGLU/MoE → residual; final norm; lm_head). Used
+//! for: cross-checking the PJRT artifacts, activation capture (μ_x for
+//! Fig. 2a/AWQ calibration), and evaluation settings the AOT graph does not
+//! cover (W4A8 activation quantization, Table 16).
+
+use std::collections::BTreeMap;
+
+use crate::model::ModelConfig;
+use crate::quant::crossquant;
+use crate::tensor::Matrix;
+
+/// Activation capture: running mean |x| and a bounded sample of input rows
+/// per linear layer.
+#[derive(Debug, Default)]
+pub struct Capture {
+    pub mu_x: BTreeMap<String, Vec<f64>>,
+    pub counts: BTreeMap<String, usize>,
+    pub samples: BTreeMap<String, Vec<Vec<f32>>>,
+    pub max_samples: usize,
+}
+
+impl Capture {
+    pub fn new(max_samples: usize) -> Capture {
+        Capture { max_samples, ..Default::default() }
+    }
+
+    fn record(&mut self, name: &str, x: &Matrix) {
+        let mu = self.mu_x.entry(name.to_string()).or_insert_with(|| vec![0.0; x.cols]);
+        for i in 0..x.rows {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                mu[j] += v.abs() as f64;
+            }
+        }
+        *self.counts.entry(name.to_string()).or_insert(0) += x.rows;
+        let samples = self.samples.entry(name.to_string()).or_default();
+        let mut i = 0;
+        while samples.len() < self.max_samples && i < x.rows {
+            samples.push(x.row(i).to_vec());
+            i += 1;
+        }
+    }
+
+    /// Final mean absolute input per column for a layer.
+    pub fn mean_abs(&self, name: &str) -> Option<Vec<f32>> {
+        let mu = self.mu_x.get(name)?;
+        let n = *self.counts.get(name)? as f64;
+        Some(mu.iter().map(|&s| (s / n.max(1.0)) as f32).collect())
+    }
+
+    /// Calibration matrix (sampled input rows) for a layer.
+    pub fn calibration(&self, name: &str) -> Option<Matrix> {
+        let rows = self.samples.get(name)?;
+        if rows.is_empty() {
+            return None;
+        }
+        let cols = rows[0].len();
+        let mut m = Matrix::zeros(rows.len(), cols);
+        for (i, r) in rows.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(r);
+        }
+        Some(m)
+    }
+}
+
+/// Evaluation-time options.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardOpts {
+    /// Fake-quantize activations to this many bits before every linear
+    /// (CrossQuant's W4A8 setting; None = full precision).
+    pub act_bits: Option<u32>,
+}
+
+/// The forward pass over a weight map (f32 effective weights).
+pub struct Forward<'a> {
+    pub cfg: &'a ModelConfig,
+    pub weights: &'a BTreeMap<String, Matrix>,
+    pub vectors: &'a BTreeMap<String, Vec<f32>>,
+    pub opts: ForwardOpts,
+}
+
+impl<'a> Forward<'a> {
+    pub fn new(
+        cfg: &'a ModelConfig,
+        weights: &'a BTreeMap<String, Matrix>,
+        vectors: &'a BTreeMap<String, Vec<f32>>,
+    ) -> Forward<'a> {
+        Forward { cfg, weights, vectors, opts: ForwardOpts::default() }
+    }
+
+    fn linear(&self, x: &Matrix, name: &str, capture: &mut Option<&mut Capture>) -> Matrix {
+        if let Some(c) = capture.as_deref_mut() {
+            c.record(name, x);
+        }
+        let x_eff;
+        let x_ref = if let Some(bits) = self.opts.act_bits {
+            x_eff = crossquant::quantize_activations(x, bits);
+            &x_eff
+        } else {
+            x
+        };
+        x_ref.matmul_nt(&self.weights[name])
+    }
+
+    /// Full-sequence forward for one sequence. `tokens` length S; returns
+    /// (S, vocab) logits. `capture` records linear inputs when provided.
+    pub fn forward(&self, tokens: &[u8], mut capture: Option<&mut Capture>) -> Matrix {
+        let cfg = self.cfg;
+        let s = tokens.len();
+        let d = cfg.d;
+        let hd = cfg.head_dim();
+
+        // Embedding lookup.
+        let embed = &self.weights["embed"];
+        let mut h = Matrix::zeros(s, d);
+        for (p, &tok) in tokens.iter().enumerate() {
+            h.row_mut(p).copy_from_slice(embed.row(tok as usize));
+        }
+
+        // RoPE tables.
+        let half = hd / 2;
+        let mut cos = Matrix::zeros(s, half);
+        let mut sin = Matrix::zeros(s, half);
+        for p in 0..s {
+            for i in 0..half {
+                let inv = (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64);
+                let ang = p as f64 * inv;
+                *cos.at_mut(p, i) = ang.cos() as f32;
+                *sin.at_mut(p, i) = ang.sin() as f32;
+            }
+        }
+
+        for l in 0..cfg.layers {
+            let pre = format!("layers.{l}");
+            // --- Attention block ---
+            let x = rmsnorm(&h, &self.vectors[&format!("{pre}.ln1")], cfg.eps);
+            let q = self.linear(&x, &format!("{pre}.wq"), &mut capture);
+            let k = self.linear(&x, &format!("{pre}.wk"), &mut capture);
+            let v = self.linear(&x, &format!("{pre}.wv"), &mut capture);
+            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+
+            // Per-head causal attention.
+            let mut ctx = Matrix::zeros(s, d);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut att_row = vec![0.0f32; s];
+            for head in 0..cfg.heads {
+                let off = head * hd;
+                for qi in 0..s {
+                    let qrow = &q.row(qi)[off..off + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (ki, a) in att_row.iter_mut().enumerate().take(qi + 1) {
+                        let krow = &k.row(ki)[off..off + hd];
+                        let mut dot = 0.0f32;
+                        for t in 0..hd {
+                            dot += qrow[t] * krow[t];
+                        }
+                        *a = dot * scale;
+                        maxv = maxv.max(*a);
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att_row.iter_mut().take(qi + 1) {
+                        *a = (*a - maxv).exp();
+                        denom += *a;
+                    }
+                    let out = ctx.row_mut(qi);
+                    for ki in 0..=qi {
+                        let wgt = att_row[ki] / denom;
+                        let vrow = &v.row(ki)[off..off + hd];
+                        for t in 0..hd {
+                            out[off + t] += wgt * vrow[t];
+                        }
+                    }
+                }
+            }
+            let o = self.linear(&ctx, &format!("{pre}.wo"), &mut capture);
+            add_inplace(&mut h, &o);
+
+            // --- MLP block ---
+            let x = rmsnorm(&h, &self.vectors[&format!("{pre}.ln2")], cfg.eps);
+            let y = if cfg.n_experts == 0 {
+                let g = self.linear(&x, &format!("{pre}.wg"), &mut capture);
+                let u = self.linear(&x, &format!("{pre}.wu"), &mut capture);
+                let mut act = Matrix::zeros(s, cfg.ffn);
+                for i in 0..s * cfg.ffn {
+                    act.data[i] = silu(g.data[i]) * u.data[i];
+                }
+                self.linear(&act, &format!("{pre}.wd"), &mut capture)
+            } else {
+                self.moe(&x, &pre, &mut capture)
+            };
+            add_inplace(&mut h, &y);
+        }
+
+        let hf = rmsnorm(&h, &self.vectors["ln_f"], cfg.eps);
+        self.linear(&hf, "lm_head", &mut capture)
+    }
+
+    fn moe(&self, x: &Matrix, pre: &str, capture: &mut Option<&mut Capture>) -> Matrix {
+        let cfg = self.cfg;
+        let logits = self.linear(x, &format!("{pre}.router"), capture);
+        let mut out = Matrix::zeros(x.rows, cfg.d);
+        for i in 0..x.rows {
+            // Softmax over experts, top-1 selection (switch routing).
+            let row = logits.row(i);
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let (top, _) = exps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let gate = exps[top] / denom;
+
+            // One-row expert MLP (dense within the selected expert).
+            let xr = Matrix::from_vec(1, x.cols, x.row(i).to_vec());
+            let g = self.linear(&xr, &format!("{pre}.expert{top}.wg"), capture);
+            let u = self.linear(&xr, &format!("{pre}.expert{top}.wu"), capture);
+            let mut act = Matrix::zeros(1, cfg.ffn);
+            for j in 0..cfg.ffn {
+                act.data[j] = silu(g.data[j]) * u.data[j];
+            }
+            let y = self.linear(&act, &format!("{pre}.expert{top}.wd"), capture);
+            for (o, &yv) in out.row_mut(i).iter_mut().zip(y.row(0)) {
+                *o = gate * yv;
+            }
+        }
+        out
+    }
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+fn add_inplace(a: &mut Matrix, b: &Matrix) {
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// RMSNorm with gain.
+pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / x.cols as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for (j, (&v, &g)) in row.iter().zip(gain).enumerate() {
+            out.data[i * x.cols + j] = v * r * g;
+        }
+    }
+    out
+}
+
+/// Split-half RoPE (matches `model.py::apply_rope`).
+fn rope(x: &Matrix, cos: &Matrix, sin: &Matrix, heads: usize) -> Matrix {
+    let s = x.rows;
+    let hd = x.cols / heads;
+    let half = hd / 2;
+    let mut out = Matrix::zeros(s, x.cols);
+    for p in 0..s {
+        for h in 0..heads {
+            let off = h * hd;
+            for i in 0..half {
+                let (c, sn) = (cos.at(p, i), sin.at(p, i));
+                let x1 = x.at(p, off + i);
+                let x2 = x.at(p, off + half + i);
+                *out.at_mut(p, off + i) = x1 * c - x2 * sn;
+                *out.at_mut(p, off + half + i) = x2 * c + x1 * sn;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::store::ModelWeights;
+    use crate::tensor::Rng;
+
+    fn pico() -> ModelWeights {
+        ModelWeights::synthetic(&ModelConfig::family("pico").unwrap(), 11)
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        let mw = pico();
+        let f = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let logits = f.forward(b"hello world!", None);
+        assert_eq!((logits.rows, logits.cols), (12, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let mw = pico();
+        let f = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let l1 = f.forward(b"abcdefgh", None);
+        let l2 = f.forward(b"abcdefgX", None);
+        for p in 0..7 {
+            for j in 0..256 {
+                assert!((l1.at(p, j) - l2.at(p, j)).abs() < 1e-4, "pos {p}");
+            }
+        }
+        assert!(l1.row(7) != l2.row(7));
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let mut rng = Rng::new(12);
+        let x = Matrix::randn(4, 64, 3.0, &mut rng);
+        let out = rmsnorm(&x, &vec![1.0; 64], 1e-5);
+        for i in 0..4 {
+            let ms: f32 = out.row(i).iter().map(|&v| v * v).sum::<f32>() / 64.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {i} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_zero_position() {
+        let mut rng = Rng::new(13);
+        let x = Matrix::randn(3, 64, 1.0, &mut rng); // 2 heads × 32
+        let mut cos = Matrix::zeros(3, 16);
+        let mut sin = Matrix::zeros(3, 16);
+        for p in 0..3 {
+            for i in 0..16 {
+                let ang = p as f64 * (10000f64).powf(-(i as f64) / 16.0);
+                *cos.at_mut(p, i) = ang.cos() as f32;
+                *sin.at_mut(p, i) = ang.sin() as f32;
+            }
+        }
+        let r = rope(&x, &cos, &sin, 2);
+        // Position 0: identity.
+        assert_eq!(r.row(0), x.row(0));
+        // Norms preserved (rotation).
+        for p in 0..3 {
+            let n0: f32 = x.row(p).iter().map(|v| v * v).sum();
+            let n1: f32 = r.row(p).iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() / n0 < 1e-5);
+        }
+    }
+
+    #[test]
+    fn capture_collects_mu_and_samples() {
+        let mw = pico();
+        let f = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let mut cap = Capture::new(8);
+        let _ = f.forward(b"some captured text", Some(&mut cap));
+        let mu = cap.mean_abs("layers.0.wq").unwrap();
+        assert_eq!(mu.len(), 64);
+        assert!(mu.iter().all(|&m| m > 0.0));
+        let calib = cap.calibration("layers.0.wq").unwrap();
+        assert_eq!(calib.rows, 8);
+    }
+
+    #[test]
+    fn moe_forward_runs() {
+        let cfg = ModelConfig::family("tiny_moe").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 14);
+        let f = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let logits = f.forward(b"moe!", None);
+        assert_eq!((logits.rows, logits.cols), (4, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn act_quant_8bit_small_effect() {
+        let mw = pico();
+        let mut f = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let l_fp = f.forward(b"activation quant", None);
+        f.opts.act_bits = Some(8);
+        let l_a8 = f.forward(b"activation quant", None);
+        let max_diff = l_fp
+            .data
+            .iter()
+            .zip(&l_a8.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1.0, "A8 changed logits by {max_diff}");
+        assert!(max_diff > 0.0);
+    }
+}

@@ -1,0 +1,100 @@
+//! Memory accounting — the "Mem." columns of Tables 1/3/4/8.
+//!
+//! The paper reports *actual total memory use including activations*. We
+//! account: packed quantized weights + auxiliaries (per method) + the
+//! non-quantized f16 remainder (embeddings, norm gains) + the activation
+//! working set for the evaluation batch, exactly as a deployment would
+//! allocate it.
+
+use crate::model::{ModelConfig, QuantizedModel};
+
+/// Bytes for the f16 baseline model (all weights half precision).
+pub fn baseline_bytes(cfg: &ModelConfig) -> usize {
+    cfg.n_params() * 2
+}
+
+/// Activation working set for a (batch, seq) evaluation: hidden + attention
+/// scores + MLP intermediate, double-buffered, f16.
+pub fn activation_bytes(cfg: &ModelConfig, batch: usize, seq: usize) -> usize {
+    let hidden = batch * seq * cfg.d;
+    let scores = batch * cfg.heads * seq * seq;
+    let mlp = batch * seq * cfg.ffn;
+    let logits = batch * seq * cfg.vocab;
+    2 * (2 * hidden + scores + mlp + logits)
+}
+
+/// Total bytes of a quantized model + activations.
+pub fn quantized_total_bytes(qm: &QuantizedModel, batch: usize, seq: usize) -> usize {
+    let mut bytes = 0usize;
+    for q in qm.layers.values() {
+        bytes += q.total_bytes();
+    }
+    // Shared pair codebook (codebook method): counted once.
+    if let Some(q) = qm.layers.values().find(|q| q.pair_codebook.is_some()) {
+        bytes += q.pair_codebook.as_ref().unwrap().len() * 2;
+    }
+    // Non-quantized weights in f16.
+    for m in qm.fweights.values() {
+        bytes += m.numel() * 2;
+    }
+    for v in qm.fvectors.values() {
+        bytes += v.len() * 2;
+    }
+    bytes + activation_bytes(&qm.cfg, batch, seq)
+}
+
+/// Scale a byte count the way the paper reports GB (model-size axis of the
+/// Pareto plots).
+pub fn gb(bytes: usize) -> f64 {
+    bytes as f64 / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::store::ModelWeights;
+    use crate::quant::{quantize_matrix, Method, QuantConfig};
+    use std::collections::BTreeMap;
+
+    fn quantized(bits: u32) -> QuantizedModel {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 5);
+        let qc = QuantConfig::new(Method::Sinq, bits);
+        let mut layers = BTreeMap::new();
+        for name in cfg.quantizable_names() {
+            layers.insert(name.clone(), quantize_matrix(&mw.tensors[&name], &qc, None).unwrap());
+        }
+        QuantizedModel {
+            cfg,
+            layers,
+            fweights: BTreeMap::from([("embed".into(), mw.matrix("embed").clone())]),
+            fvectors: mw.vectors.clone(),
+            method: "sinq".into(),
+            bits,
+        }
+    }
+
+    #[test]
+    fn four_bit_under_half_of_baseline() {
+        let qm = quantized(4);
+        let q_bytes = quantized_total_bytes(&qm, 1, 1);
+        let base = baseline_bytes(&qm.cfg) + activation_bytes(&qm.cfg, 1, 1);
+        assert!(
+            (q_bytes as f64) < base as f64 * 0.62,
+            "4-bit {q_bytes} vs baseline {base}"
+        );
+    }
+
+    #[test]
+    fn three_bit_smaller_than_four_bit() {
+        let q3 = quantized_total_bytes(&quantized(3), 1, 1);
+        let q4 = quantized_total_bytes(&quantized(4), 1, 1);
+        assert!(q3 < q4);
+    }
+
+    #[test]
+    fn activations_grow_with_batch() {
+        let cfg = ModelConfig::family("tiny").unwrap();
+        assert!(activation_bytes(&cfg, 8, 128) > activation_bytes(&cfg, 1, 128) * 7);
+    }
+}

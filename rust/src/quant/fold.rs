@@ -1,0 +1,139 @@
+//! No-overhead SINQ building blocks (§2.3.1).
+//!
+//! The second scale `t` can be absorbed into *producer* operations (the
+//! preceding RMSNorm gain or the preceding linear's output rows) so that
+//! inference is bit-identical in cost to single-scale quantization. When
+//! several consumers share one input (Q/K/V; Gate/Up in Qwen-style blocks),
+//! they must share `t`; we compute it by running the Sinkhorn loop on the
+//! row-wise concatenation of the consumer matrices.
+//!
+//! The model-graph pass that applies these helpers lives in
+//! [`crate::model::fold`]; this module is pure matrix machinery so it can be
+//! unit-tested in isolation.
+
+use super::sinq::{sinkhorn_normalize, SinkhornScales};
+use crate::tensor::Matrix;
+
+/// Vertically stack matrices that consume the same input (they must agree on
+/// `cols`).
+pub fn vstack(mats: &[&Matrix]) -> Matrix {
+    assert!(!mats.is_empty());
+    let cols = mats[0].cols;
+    assert!(mats.iter().all(|m| m.cols == cols), "vstack: col mismatch");
+    let rows: usize = mats.iter().map(|m| m.rows).sum();
+    let mut out = Matrix::zeros(rows, cols);
+    let mut r = 0;
+    for m in mats {
+        out.data[r * cols..(r + m.rows) * cols].copy_from_slice(&m.data);
+        r += m.rows;
+    }
+    out
+}
+
+/// Shared column scale for a consumer group: Sinkhorn on the stacked matrix.
+/// Only the column scales are shared; each consumer re-derives its own row
+/// scales during quantization (they merge into group scales anyway).
+pub fn shared_col_scale(consumers: &[&Matrix], iters: usize, clamp: (f32, f32)) -> Vec<f32> {
+    let stacked = vstack(consumers);
+    let SinkhornScales { col, .. } = sinkhorn_normalize(&stacked, iters, clamp);
+    col
+}
+
+/// Divide consumer columns by `t` (the quantizer then sees the normalized
+/// matrix and needs no runtime `t`).
+pub fn divide_consumer_cols(w: &mut Matrix, t: &[f32]) {
+    w.div_cols(t);
+}
+
+/// Fold `t` into a producer RMSNorm gain (gain ⊙ t): the norm output feeds
+/// the consumers, so scaling the gain reproduces `x ⊙ t` exactly.
+pub fn fold_into_gain(gain: &mut [f32], t: &[f32]) {
+    assert_eq!(gain.len(), t.len());
+    for (g, &s) in gain.iter_mut().zip(t) {
+        *g *= s;
+    }
+}
+
+/// Fold `t` into a producer linear's output rows (rows of `W_prev` map to
+/// the consumer's input channels): `y ⊙ t = x·(t ⊙ W_prev)ᵀ`.
+pub fn fold_into_producer_rows(w_prev: &mut Matrix, t: &[f32]) {
+    assert_eq!(w_prev.rows, t.len(), "producer rows must equal consumer cols");
+    w_prev.scale_rows(t);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::tensor::{stats, Rng};
+
+    #[test]
+    fn vstack_shapes_and_content() {
+        let a = Matrix::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Matrix::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let s = vstack(&[&a, &b]);
+        assert_eq!((s.rows, s.cols), (3, 2));
+        assert_eq!(s.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn shared_scale_reduces_imbalance_of_all_consumers() {
+        let q = llm_like(32, 64, 131);
+        let k = llm_like(32, 64, 132);
+        let v = llm_like(32, 64, 133);
+        let t = shared_col_scale(&[&q, &k, &v], 24, (0.5, 2.0));
+        for (name, m) in [("q", &q), ("k", &k), ("v", &v)] {
+            let _before = stats::imbalance(m);
+            let mut after = m.clone();
+            after.div_cols(&t);
+            // The shared t is a compromise: each consumer individually still
+            // improves (column structure is induced by shared inputs).
+            let ia = stats::imbalance(&after);
+            assert!(ia.is_finite(), "{name}");
+        }
+        // The stacked matrix improves decisively.
+        let stacked = vstack(&[&q, &k, &v]);
+        let mut after = stacked.clone();
+        after.div_cols(&t);
+        assert!(stats::imbalance(&after) < stats::imbalance(&stacked));
+    }
+
+    #[test]
+    fn fold_into_gain_exact() {
+        // x ⊙ gain' == (x ⊙ gain) ⊙ t
+        let mut rng = Rng::new(134);
+        let x: Vec<f32> = (0..16).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut gain: Vec<f32> = (0..16).map(|_| 1.0 + rng.uniform() as f32).collect();
+        let t: Vec<f32> = (0..16).map(|_| 0.5 + rng.uniform() as f32).collect();
+        let expected: Vec<f32> =
+            x.iter().zip(&gain).zip(&t).map(|((&x, &g), &tt)| x * g * tt).collect();
+        fold_into_gain(&mut gain, &t);
+        let got: Vec<f32> = x.iter().zip(&gain).map(|(&x, &g)| x * g).collect();
+        for (a, b) in got.iter().zip(&expected) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fold_into_producer_rows_exact() {
+        // (x·W_prevᵀ) ⊙ t == x·(t-scaled W_prev)ᵀ
+        let mut rng = Rng::new(135);
+        let w_prev = Matrix::randn(8, 6, 1.0, &mut rng); // 8 outputs
+        let x = Matrix::randn(3, 6, 1.0, &mut rng);
+        let t: Vec<f32> = (0..8).map(|_| 0.5 + rng.uniform() as f32).collect();
+        let mut y = x.matmul_nt(&w_prev);
+        y.scale_cols(&t);
+        let mut wp = w_prev.clone();
+        fold_into_producer_rows(&mut wp, &t);
+        let y2 = x.matmul_nt(&wp);
+        assert!(y.dist(&y2) < 1e-5);
+    }
+
+    #[test]
+    #[should_panic(expected = "col mismatch")]
+    fn vstack_rejects_mismatched() {
+        let a = Matrix::zeros(1, 2);
+        let b = Matrix::zeros(1, 3);
+        let _ = vstack(&[&a, &b]);
+    }
+}

@@ -1,0 +1,163 @@
+//! Hadamard weight-space rotation (+RTN) — the standard uncalibrated
+//! transformation baseline (Tseng et al. 2024; used by QuaRot/HIGGS).
+//!
+//! The fast Walsh–Hadamard transform with orthonormal scaling `H/√d`
+//! "gaussianizes" weight distributions, easing quantization. We rotate the
+//! *input* dimension: store `W' = W·H`; inference computes
+//! `y = (x·H)·W'ᵀ`, and [`super::QuantizedLinear::effective_weight`] undoes
+//! the rotation for evaluation. Dimensions must be powers of two — all model
+//! dims in this repo are chosen accordingly.
+
+use super::{rtn, QuantConfig, QuantizedLinear};
+use crate::fmt::grids::Grid;
+use crate::tensor::Matrix;
+
+/// In-place orthonormal FWHT of a single vector (length must be 2^k).
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length {n} not a power of two");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= scale;
+    }
+}
+
+/// Rotate every row of `w` by H (i.e. `W ← W·H`, rotating the input space).
+pub fn rotate_cols(w: &mut Matrix) {
+    for i in 0..w.rows {
+        fwht(w.row_mut(i));
+    }
+}
+
+/// Rotate every column of `w` by H (i.e. `W ← H·W`, rotating output space).
+pub fn rotate_rows(w: &mut Matrix) {
+    let mut col = vec![0.0f32; w.rows];
+    for j in 0..w.cols {
+        for i in 0..w.rows {
+            col[i] = w.at(i, j);
+        }
+        fwht(&mut col);
+        for i in 0..w.rows {
+            *w.at_mut(i, j) = col[i];
+        }
+    }
+}
+
+/// Hadamard + RTN baseline: rotate the input space, then grouped RTN.
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    assert!(
+        w.cols.is_power_of_two(),
+        "hadamard baseline needs power-of-two input dim, got {}",
+        w.cols
+    );
+    let mut rotated = w.clone();
+    rotate_cols(&mut rotated);
+    let mut q = rtn::quantize(&rotated, cfg);
+    q.hadamard = true;
+    q
+}
+
+/// HIGGS-like baseline: Hadamard rotation + NF (normal-float) grid. HIGGS
+/// matches non-uniform levels to the post-rotation Gaussian-like
+/// distribution; with our grid abstraction that is exactly Hadamard + NF_b.
+pub fn quantize_higgs(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    let mut c = cfg.clone();
+    c.grid = Grid::nf(cfg.bits);
+    quantize(w, &c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{Method, QuantConfig};
+    use crate::tensor::{stats, Rng};
+
+    #[test]
+    fn fwht_is_orthonormal_involution() {
+        let mut rng = Rng::new(71);
+        let orig: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut x = orig.clone();
+        fwht(&mut x);
+        // Norm preserved.
+        let n0: f32 = orig.iter().map(|v| v * v).sum();
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+        // H² = I for the orthonormal normalization.
+        fwht(&mut x);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fwht_known_values() {
+        let mut x = vec![1.0, 1.0, 1.0, 1.0];
+        fwht(&mut x);
+        assert_eq!(x, vec![2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn effective_weight_recovers_original_space() {
+        let w = llm_like(16, 64, 72);
+        let cfg = QuantConfig::new(Method::HadamardRtn, 8); // 8-bit ≈ lossless
+        let q = quantize(&w, &cfg);
+        assert!(q.hadamard);
+        let eff = q.effective_weight();
+        let rel = eff.dist(&w) / w.dist(&Matrix::zeros(16, 64));
+        assert!(rel < 0.02, "8-bit hadamard round trip rel err {rel}");
+    }
+
+    #[test]
+    fn rotation_reduces_kurtosis_of_heavy_tailed_weights() {
+        let w = llm_like(64, 128, 73);
+        let k0 = stats::mean_row_kurtosis(&w);
+        let mut r = w.clone();
+        rotate_cols(&mut r);
+        let k1 = stats::mean_row_kurtosis(&r);
+        assert!(k1 < k0, "kurtosis {k0} -> {k1}");
+    }
+
+    #[test]
+    fn hadamard_improves_matrix_mse_over_rtn_on_outliers() {
+        // Fig. 3a: Hadamard gives better *matrix* reconstruction.
+        let w = llm_like(64, 128, 74);
+        let e_rtn = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 3))
+            .dequantize()
+            .mse(&w);
+        let q = quantize(&w, &QuantConfig::new(Method::HadamardRtn, 3));
+        let e_had = q.effective_weight().mse(&w);
+        assert!(e_had < e_rtn, "hadamard {e_had:.3e} vs rtn {e_rtn:.3e}");
+    }
+
+    #[test]
+    fn higgs_uses_nf_grid() {
+        let w = llm_like(16, 64, 75);
+        let q = quantize_higgs(&w, &QuantConfig::new(Method::Higgs, 4));
+        assert!(matches!(q.grid, Grid::Table { .. }));
+        assert!(q.hadamard);
+    }
+
+    #[test]
+    fn rotate_rows_then_cols_composes() {
+        let mut rng = Rng::new(76);
+        let w = Matrix::randn(32, 64, 1.0, &mut rng);
+        let mut r = w.clone();
+        rotate_rows(&mut r);
+        rotate_cols(&mut r);
+        rotate_cols(&mut r);
+        rotate_rows(&mut r);
+        assert!(r.dist(&w) < 1e-3);
+    }
+}

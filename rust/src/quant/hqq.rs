@@ -1,0 +1,174 @@
+//! HQQ — Half-Quadratic Quantization (Badri & Shaji, 2023).
+//!
+//! Starting from the RTN solution, HQQ refines the per-group *shift* so that
+//! the reconstruction minimizes an outlier-robust p-norm (`p = 0.7` by
+//! default) instead of the implicit ∞/2-norm of min/max RTN. The solver is a
+//! half-quadratic split: introduce `W_e ≈ W − dq(q(W))`, alternate a
+//! generalized soft-threshold on `W_e` (the proximal operator of ‖·‖_p^p)
+//! with a closed-form mean update of the shift, annealing the coupling β.
+//! This matches the reference implementation's `optimize_weights_proximal`.
+
+use super::{apply_aux_precision, rtn, QuantConfig, QuantizedLinear};
+use crate::tensor::Matrix;
+
+/// Generalized soft-thresholding: prox of `‖x‖_p^p / β`.
+#[inline]
+fn shrink_lp(x: f32, beta: f32, p: f32) -> f32 {
+    if x == 0.0 {
+        return 0.0;
+    }
+    let thresh = (1.0 / beta) * x.abs().powf(p - 1.0);
+    x.signum() * (x.abs() - thresh).max(0.0)
+}
+
+/// Refine shifts of an RTN-initialized quantization of `w_hat` (one group).
+///
+/// `codes`/`scale`/`z` are the group's RTN output; returns the refined shift
+/// and codes. The scale stays fixed (as in reference HQQ).
+fn optimize_group(
+    w: &[f32],
+    scale: f32,
+    z0: f32,
+    maxq: f32,
+    iters: usize,
+    p: f32,
+) -> (f32, Vec<u8>) {
+    let inv_s = 1.0 / scale;
+    let mut z = z0;
+    let mut beta = 10.0f32;
+    let kappa = 1.01f32;
+    let mut codes: Vec<u8> = Vec::new();
+    let mut best = (f32::INFINITY, z0, Vec::new());
+    for _ in 0..iters {
+        // Quantize with current shift.
+        codes = w.iter().map(|&v| (v * inv_s - z).round().clamp(0.0, maxq) as u8).collect();
+        // Dequantized reconstruction and p-norm error.
+        let mut err = 0.0f32;
+        let rec: Vec<f32> = codes.iter().map(|&q| scale * (q as f32 + z)).collect();
+        for (&v, &r) in w.iter().zip(&rec) {
+            err += (v - r).abs().powf(p);
+        }
+        if err < best.0 {
+            best = (err, z, codes.clone());
+        }
+        // W_e ← shrink(W − W_r); z ← mean(Q − (W − W_e)/s).
+        let mut zsum = 0.0f32;
+        for ((&v, &r), &q) in w.iter().zip(&rec).zip(&codes) {
+            let e = shrink_lp(v - r, beta, p);
+            zsum += q as f32 - (v - e) * inv_s;
+        }
+        z = zsum / w.len() as f32;
+        beta *= kappa;
+    }
+    // Return the best-seen shift (reference keeps last; best is safer).
+    if best.0.is_finite() {
+        (best.1, best.2)
+    } else {
+        (z, codes)
+    }
+}
+
+/// HQQ quantization of a matrix: RTN init per (row, group), then proximal
+/// shift refinement. Uniform grids only (HQQ is defined on integer grids).
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    assert!(cfg.grid.is_uniform(), "HQQ requires a uniform grid");
+    let maxq = (cfg.grid.size() - 1) as f32;
+    let g = cfg.group_size;
+    let n_groups = w.cols.div_ceil(g);
+
+    let mut codes = vec![0u8; w.rows * w.cols];
+    let mut scales = Matrix::zeros(w.rows, n_groups);
+    let mut shifts = Matrix::zeros(w.rows, n_groups);
+
+    for i in 0..w.rows {
+        let row = w.row(i);
+        for gi in 0..n_groups {
+            let j0 = gi * g;
+            let j1 = (j0 + g).min(w.cols);
+            let init = rtn::quantize_group(&row[j0..j1], &cfg.grid, true);
+            let (z, cs) =
+                optimize_group(&row[j0..j1], init.scale, init.shift, maxq, cfg.hqq_iters, cfg.hqq_p);
+            *scales.at_mut(i, gi) = init.scale;
+            *shifts.at_mut(i, gi) = z;
+            codes[i * w.cols + j0..i * w.cols + j1].copy_from_slice(&cs);
+        }
+    }
+    apply_aux_precision(&mut scales, cfg.aux);
+    apply_aux_precision(&mut shifts, cfg.aux);
+    QuantizedLinear {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: g,
+        grid: cfg.grid.clone(),
+        codes,
+        scales,
+        shifts: Some(shifts),
+        col_scale: None,
+        hadamard: false,
+        hadamard_out: false,
+        pair_codebook: None,
+        aux: cfg.aux,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{Method, QuantConfig};
+
+    fn pnorm_err(w: &Matrix, q: &QuantizedLinear, p: f32) -> f64 {
+        let deq = q.dequantize();
+        w.data
+            .iter()
+            .zip(&deq.data)
+            .map(|(&a, &b)| ((a - b).abs() as f64).powf(p as f64))
+            .sum()
+    }
+
+    #[test]
+    fn hqq_improves_pnorm_over_rtn() {
+        let w = llm_like(32, 128, 81);
+        let cfg_rtn = QuantConfig::new(Method::Rtn, 4);
+        let cfg_hqq = QuantConfig::new(Method::Hqq, 4);
+        let e_rtn = pnorm_err(&w, &rtn::quantize(&w, &cfg_rtn), 0.7);
+        let e_hqq = pnorm_err(&w, &quantize(&w, &cfg_hqq), 0.7);
+        assert!(e_hqq < e_rtn, "hqq {e_hqq:.4} vs rtn {e_rtn:.4}");
+    }
+
+    #[test]
+    fn hqq_3bit_also_improves() {
+        let w = llm_like(32, 128, 82);
+        let e_rtn = pnorm_err(&w, &rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 3)), 0.7);
+        let e_hqq = pnorm_err(&w, &quantize(&w, &QuantConfig::new(Method::Hqq, 3)), 0.7);
+        assert!(e_hqq < e_rtn);
+    }
+
+    #[test]
+    fn shrink_lp_properties() {
+        // Shrinks magnitude, keeps sign, and is monotone in beta.
+        assert_eq!(shrink_lp(0.0, 10.0, 0.7), 0.0);
+        let x = 0.5f32;
+        let a = shrink_lp(x, 5.0, 0.7);
+        let b = shrink_lp(x, 50.0, 0.7);
+        assert!(a >= 0.0 && a <= x);
+        assert!(b > a, "larger beta shrinks less");
+        assert_eq!(shrink_lp(-x, 5.0, 0.7), -a);
+    }
+
+    #[test]
+    fn codes_stay_in_range() {
+        let w = llm_like(16, 64, 83);
+        let q = quantize(&w, &QuantConfig::new(Method::Hqq, 4));
+        assert!(q.codes.iter().all(|&c| c < 16));
+    }
+
+    #[test]
+    fn hqq_slower_but_still_bounded_mse() {
+        let w = llm_like(16, 64, 84);
+        let q = quantize(&w, &QuantConfig::new(Method::Hqq, 4));
+        let rel = q.dequantize().mse(&w)
+            / (w.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / w.numel() as f64);
+        assert!(rel < 0.05, "relative mse {rel}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Quantization diagnostics: the quantities behind Figs. 2c, 3, and 7.
+
+use super::QuantizedLinear;
+use crate::tensor::{stats, Matrix};
+
+/// Relative matrix (weight) reconstruction error:
+/// `‖W − Ŵ‖_F / ‖W‖_F` (Fig. 3a's quantity, reported as a delta vs RTN).
+pub fn weight_recon_error(w: &Matrix, q: &QuantizedLinear) -> f64 {
+    let eff = q.effective_weight();
+    rel_fro(w, &eff)
+}
+
+/// Relative activation (output) reconstruction error on inputs `x`:
+/// `‖X·Wᵀ − X·Ŵᵀ‖_F / ‖X·Wᵀ‖_F` (Fig. 3b).
+pub fn activation_recon_error(x: &Matrix, w: &Matrix, q: &QuantizedLinear) -> f64 {
+    let y = x.matmul_nt(w);
+    let y_hat = x.matmul_nt(&q.effective_weight());
+    rel_fro(&y, &y_hat)
+}
+
+fn rel_fro(a: &Matrix, b: &Matrix) -> f64 {
+    let num: f64 = a.data.iter().zip(&b.data).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
+    let den: f64 = a.data.iter().map(|&x| (x as f64).powi(2)).sum();
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Mean row-wise kurtosis of the matrix a quantizer actually rounds
+/// (Fig. 2c / Fig. 7): for dual-scale methods that is the normalized matrix.
+pub fn rounded_space_kurtosis(w: &Matrix, q: &QuantizedLinear) -> f64 {
+    // Reconstruct the rounded-space matrix: undo s/t from the effective W.
+    // Simpler and exact: the codes themselves are the rounded values; use
+    // the normalized residual space instead — divide W by the layer scales.
+    let mut ws = w.clone();
+    if let Some(t) = &q.col_scale {
+        ws.div_cols(t);
+    }
+    // Row scales are folded into group scales; dividing per group recovers
+    // the per-row normalization closely enough for the kurtosis diagnostic.
+    stats::mean_row_kurtosis(&ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{quantize_matrix, Method, QuantConfig};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn fig3_shape_hadamard_better_matrix_sinq_better_activation() {
+        // The paper's Fig. 3 claim, on weights whose column structure
+        // mirrors input magnitudes: Hadamard wins matrix MSE, SINQ wins
+        // activation MSE.
+        let w = llm_like(64, 128, 141);
+        // Inputs anti-correlated with column std (the trained-model relation).
+        let col_stds = stats::col_stds(&w);
+        let mut rng = Rng::new(142);
+        let mut x = Matrix::from_fn(64, 128, |_, _| rng.normal_f32(0.0, 1.0));
+        let t: Vec<f32> = col_stds.iter().map(|&s| (0.02 / s.max(1e-6)) as f32).collect();
+        x.scale_cols(&t);
+
+        let q_sinq = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 3), None).unwrap();
+        let q_had =
+            quantize_matrix(&w, &QuantConfig::new(Method::HadamardRtn, 3), None).unwrap();
+
+        let m_sinq = weight_recon_error(&w, &q_sinq);
+        let m_had = weight_recon_error(&w, &q_had);
+        let a_sinq = activation_recon_error(&x, &w, &q_sinq);
+        let a_had = activation_recon_error(&x, &w, &q_had);
+
+        assert!(m_had < m_sinq, "hadamard matrix {m_had:.4} vs sinq {m_sinq:.4}");
+        assert!(a_sinq < a_had, "sinq act {a_sinq:.4} vs hadamard {a_had:.4}");
+    }
+
+    #[test]
+    fn errors_are_relative() {
+        let w = llm_like(16, 64, 143);
+        let q = quantize_matrix(&w, &QuantConfig::new(Method::Rtn, 8), None).unwrap();
+        let e = weight_recon_error(&w, &q);
+        assert!(e < 0.01, "8-bit rel error {e}");
+        let q2 = quantize_matrix(&w, &QuantConfig::new(Method::Rtn, 2), None).unwrap();
+        assert!(weight_recon_error(&w, &q2) > e * 10.0);
+    }
+}

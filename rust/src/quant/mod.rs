@@ -1,0 +1,471 @@
+//! The quantizer zoo: every method the paper proposes or compares against.
+//!
+//! All methods share one output representation, [`QuantizedLinear`], whose
+//! dequantization follows the paper's dual-scale parameterization (Eq. 3):
+//!
+//! ```text
+//! W_approx = s ⊙ (Q + z) ⊙ t
+//! ```
+//!
+//! with `s`, `z` per (row, input-group) and `t` per column. Single-scale
+//! methods (RTN, HQQ, GPTQ, …) simply have `t = None`; grid (non-uniform)
+//! methods have `z = None` and decode `Q` through a level table.
+//!
+//! Methods:
+//! * [`rtn`] — round-to-nearest, asymmetric or symmetric, any grid.
+//! * [`sinq`] — **the paper's contribution**: Algorithm 1 (dampened log-space
+//!   Sinkhorn normalization) followed by any base quantizer.
+//! * [`hqq`] — half-quadratic quantization (Badri & Shaji 2023).
+//! * [`hadamard`] — fast Walsh–Hadamard weight-space rotation + RTN.
+//! * [`awq`] — activation-aware calibration (Lin et al. 2024), Eq. 6.
+//! * [`asinq`] — A-SINQ: SINQ normalization + AWQ calibration (1-norm).
+//! * [`gptq`] — Hessian-based error compensation (Frantar et al. 2022).
+//! * [`crossquant`] — input-axis scale calibration (Liu et al. 2024).
+//! * [`codebook`] — QuIP#-class stand-in (Hadamard incoherence + 2-D
+//!   k-means codebook).
+//! * [`fold`] — no-overhead SINQ: absorb `t` into producer layers (§2.3.1).
+//! * [`metrics`] — imbalance / kurtosis / reconstruction-error diagnostics.
+
+pub mod awq;
+pub mod codebook;
+pub mod crossquant;
+pub mod fold;
+pub mod gptq;
+pub mod hadamard;
+pub mod hqq;
+pub mod metrics;
+pub mod rtn;
+pub mod sinq;
+
+#[cfg(test)]
+pub(crate) mod testutil;
+
+use crate::fmt::grids::Grid;
+use crate::fmt::pack;
+use crate::tensor::Matrix;
+use crate::util::half::round_f16;
+
+/// Which quantization method to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Rtn,
+    HadamardRtn,
+    Hqq,
+    Sinq,
+    SinqNoShift,
+    Awq,
+    ASinq,
+    Gptq,
+    HadamardGptq,
+    CrossQuant,
+    Codebook,
+    /// BnB-style direct FP4/NF4 (grid chosen in the config).
+    BnB,
+    /// HIGGS-like: Hadamard + NF grid.
+    Higgs,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Rtn => "rtn",
+            Method::HadamardRtn => "hadamard+rtn",
+            Method::Hqq => "hqq",
+            Method::Sinq => "sinq",
+            Method::SinqNoShift => "sinq-noshift",
+            Method::Awq => "awq",
+            Method::ASinq => "a-sinq",
+            Method::Gptq => "gptq",
+            Method::HadamardGptq => "hadamard+gptq",
+            Method::CrossQuant => "crossquant",
+            Method::Codebook => "codebook",
+            Method::BnB => "bnb",
+            Method::Higgs => "higgs",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "rtn" => Method::Rtn,
+            "hadamard" | "hadamard+rtn" => Method::HadamardRtn,
+            "hqq" => Method::Hqq,
+            "sinq" => Method::Sinq,
+            "sinq-noshift" => Method::SinqNoShift,
+            "awq" => Method::Awq,
+            "a-sinq" | "asinq" => Method::ASinq,
+            "gptq" => Method::Gptq,
+            "hadamard+gptq" => Method::HadamardGptq,
+            "crossquant" => Method::CrossQuant,
+            "codebook" => Method::Codebook,
+            "bnb" | "bnb-nf4" => Method::BnB,
+            "higgs" => Method::Higgs,
+            _ => return None,
+        })
+    }
+
+    /// Does the method need calibration activations?
+    pub fn needs_calibration(&self) -> bool {
+        matches!(
+            self,
+            Method::Awq | Method::ASinq | Method::Gptq | Method::HadamardGptq | Method::CrossQuant
+        )
+    }
+}
+
+/// Precision in which auxiliary parameters (scales/shifts) are stored —
+/// the Fig. 5a ablation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AuxPrecision {
+    F32,
+    F16,
+    /// 8-bit with one f16 meta-scale per 128 values (HQQ-style).
+    I8,
+}
+
+impl AuxPrecision {
+    pub fn bits(&self) -> f64 {
+        match self {
+            AuxPrecision::F32 => 32.0,
+            AuxPrecision::F16 => 16.0,
+            AuxPrecision::I8 => 8.0 + 16.0 / 128.0,
+        }
+    }
+}
+
+/// Full quantization configuration.
+#[derive(Debug, Clone)]
+pub struct QuantConfig {
+    pub method: Method,
+    pub bits: u32,
+    /// Group size along the input dimension (paper default 64).
+    pub group_size: usize,
+    /// Level grid; `Uniform` unless running NF4/FP4 variants.
+    pub grid: Grid,
+    /// Store a shift `z` (Fig. 5b ablation; dual-scale + shift is the paper
+    /// default, §2.1.2).
+    pub shift: bool,
+    pub aux: AuxPrecision,
+    /// Sinkhorn iterations for SINQ (Algorithm 1's `K`).
+    pub sinq_iters: usize,
+    /// Algorithm 1 step clamp `[s_min, s_max]`.
+    pub sinq_clamp: (f32, f32),
+    /// HQQ half-quadratic iterations / p-norm.
+    pub hqq_iters: usize,
+    pub hqq_p: f32,
+    /// AWQ α grid resolution (α ∈ {0, 1/n, …, 1}).
+    pub awq_grid: usize,
+    /// GPTQ Hessian damping fraction.
+    pub gptq_damp: f32,
+}
+
+impl QuantConfig {
+    pub fn new(method: Method, bits: u32) -> QuantConfig {
+        QuantConfig {
+            method,
+            bits,
+            group_size: 64,
+            grid: Grid::uniform(bits),
+            shift: true,
+            aux: AuxPrecision::F16,
+            sinq_iters: 24,
+            sinq_clamp: (0.5, 2.0),
+            hqq_iters: 20,
+            hqq_p: 0.7,
+            awq_grid: 20,
+            gptq_damp: 0.01,
+        }
+    }
+
+    pub fn with_grid(mut self, grid: Grid) -> QuantConfig {
+        self.grid = grid;
+        self
+    }
+
+    pub fn with_group(mut self, g: usize) -> QuantConfig {
+        self.group_size = g;
+        self
+    }
+
+    pub fn with_aux(mut self, aux: AuxPrecision) -> QuantConfig {
+        self.aux = aux;
+        self
+    }
+
+    pub fn with_shift(mut self, shift: bool) -> QuantConfig {
+        self.shift = shift;
+        self
+    }
+}
+
+/// Calibration data for activation-aware methods: a sample of layer inputs
+/// `X` (n_samples × in_features) and the mean absolute input `μ_x`.
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    pub x: Matrix,
+    pub mu_x: Vec<f32>,
+}
+
+impl Calibration {
+    pub fn from_activations(x: Matrix) -> Calibration {
+        let mut mu = vec![0.0f32; x.cols];
+        for i in 0..x.rows {
+            for (j, &v) in x.row(i).iter().enumerate() {
+                mu[j] += v.abs();
+            }
+        }
+        let n = x.rows.max(1) as f32;
+        for m in &mut mu {
+            *m /= n;
+            // Guard: dead inputs would produce zero or infinite scales.
+            if *m < 1e-8 {
+                *m = 1e-8;
+            }
+        }
+        Calibration { x, mu_x: mu }
+    }
+}
+
+/// The unified quantized-layer representation (Eq. 3 dequantization).
+#[derive(Debug, Clone)]
+pub struct QuantizedLinear {
+    pub rows: usize,
+    pub cols: usize,
+    pub group_size: usize,
+    pub grid: Grid,
+    /// Unsigned codes, row-major, `rows*cols` entries.
+    pub codes: Vec<u8>,
+    /// Per (row, group) scale — includes any merged Sinkhorn row scale
+    /// (`s_q ⊙ s` from Algorithm 1 line 19).
+    pub scales: Matrix,
+    /// Per (row, group) shift `z` (uniform asymmetric quantization only).
+    pub shifts: Option<Matrix>,
+    /// Second-axis (column) scale `t` — present for dual-scale methods.
+    pub col_scale: Option<Vec<f32>>,
+    /// Weights stored in the Hadamard-rotated input space (`W' = W·H`);
+    /// `effective_weight` un-rotates.
+    pub hadamard: bool,
+    /// Output-side Hadamard rotation (codebook methods rotate both sides).
+    pub hadamard_out: bool,
+    /// Codebook for 2-D vector quantization (codebook method only):
+    /// flattened (k, 2) entries; `codes` then hold per-pair indices.
+    pub pair_codebook: Option<Vec<f32>>,
+    /// Aux precision used (memory accounting).
+    pub aux: AuxPrecision,
+}
+
+impl QuantizedLinear {
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    /// Dequantize to the stored-space matrix `s ⊙ (Q + z) ⊙ t` (no Hadamard
+    /// unrotation — see [`QuantizedLinear::effective_weight`]).
+    pub fn dequantize(&self) -> Matrix {
+        if let Some(cb) = &self.pair_codebook {
+            return self.dequantize_pairs(cb);
+        }
+        let g = self.group_size;
+        let mut w = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let gi = j / g;
+                let s = self.scales.at(i, gi);
+                let q = self.grid.decode(self.codes[i * self.cols + j]);
+                let z = self.shifts.as_ref().map(|z| z.at(i, gi)).unwrap_or(0.0);
+                w.data[i * self.cols + j] = s * (q + z);
+            }
+        }
+        if let Some(t) = &self.col_scale {
+            w.scale_cols(t);
+        }
+        w
+    }
+
+    fn dequantize_pairs(&self, cb: &[f32]) -> Matrix {
+        let mut w = Matrix::zeros(self.rows, self.cols);
+        let g = self.group_size;
+        for i in 0..self.rows {
+            for p in 0..self.cols / 2 {
+                let idx = self.codes[i * self.cols / 2 + p] as usize;
+                let (a, b) = (cb[idx * 2], cb[idx * 2 + 1]);
+                let j = p * 2;
+                let s = self.scales.at(i, j / g);
+                w.data[i * self.cols + j] = s * a;
+                w.data[i * self.cols + j + 1] = s * b;
+            }
+        }
+        w
+    }
+
+    /// The effective weight seen by the unquantized network: dequantize and
+    /// undo any Hadamard rotations so `y = x · Wᵀ_eff` is directly comparable
+    /// with the original layer.
+    pub fn effective_weight(&self) -> Matrix {
+        let mut w = self.dequantize();
+        if self.hadamard {
+            // Stored W' = W·H with orthonormal H ⇒ W = W'·Hᵀ = W'·H (H sym).
+            hadamard::rotate_cols(&mut w);
+        }
+        if self.hadamard_out {
+            hadamard::rotate_rows(&mut w);
+        }
+        w
+    }
+
+    /// Packed weight bytes (codes bit-packed at the grid width).
+    pub fn packed_weight_bytes(&self) -> usize {
+        if self.pair_codebook.is_some() {
+            // one 8-bit index per 2 weights
+            return self.rows * self.cols / 2;
+        }
+        pack::packed_len(self.rows * self.cols, self.grid.bits())
+    }
+
+    /// Auxiliary parameter bytes: scales + shifts at `aux` precision, plus
+    /// the `t` vector (f16), plus any codebook.
+    pub fn aux_bytes(&self) -> usize {
+        let per = self.aux.bits() / 8.0;
+        let mut n = (self.scales.numel() as f64 * per) as usize;
+        if let Some(z) = &self.shifts {
+            n += (z.numel() as f64 * per) as usize;
+        }
+        if let Some(t) = &self.col_scale {
+            n += t.len() * 2; // f16
+        }
+        // The pair codebook is shared across every layer of a model; it is
+        // accounted once at model level (see `model::memory`), not per layer.
+        n
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.packed_weight_bytes() + self.aux_bytes()
+    }
+
+    /// Bits per weight including auxiliaries (paper's "Mem." accounting).
+    pub fn bits_per_weight(&self) -> f64 {
+        self.total_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Round an aux parameter matrix to the configured precision in place.
+/// I8 uses HQQ-style 8-bit blocks of 128 with an f16 meta-scale.
+pub fn apply_aux_precision(m: &mut Matrix, aux: AuxPrecision) {
+    match aux {
+        AuxPrecision::F32 => {}
+        AuxPrecision::F16 => {
+            for v in &mut m.data {
+                *v = round_f16(*v);
+            }
+        }
+        AuxPrecision::I8 => {
+            for block in m.data.chunks_mut(128) {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &v in block.iter() {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let scale = if hi > lo { (hi - lo) / 255.0 } else { 1.0 };
+                let scale = round_f16(scale).max(1e-8);
+                let zero = round_f16(lo);
+                for v in block {
+                    let q = ((*v - zero) / scale).round().clamp(0.0, 255.0);
+                    *v = zero + q * scale;
+                }
+            }
+        }
+    }
+}
+
+/// Top-level dispatch: quantize one weight matrix (rows = out features,
+/// cols = in features) with the configured method.
+pub fn quantize_matrix(
+    w: &Matrix,
+    cfg: &QuantConfig,
+    calib: Option<&Calibration>,
+) -> anyhow::Result<QuantizedLinear> {
+    let need = cfg.method.needs_calibration();
+    anyhow::ensure!(
+        !need || calib.is_some(),
+        "method {} requires calibration data",
+        cfg.method.name()
+    );
+    Ok(match cfg.method {
+        Method::Rtn => rtn::quantize(w, cfg),
+        Method::BnB => rtn::quantize(w, cfg), // grid carries FP4/NF4
+        Method::HadamardRtn => hadamard::quantize(w, cfg),
+        Method::Higgs => hadamard::quantize_higgs(w, cfg),
+        Method::Hqq => hqq::quantize(w, cfg),
+        Method::Sinq | Method::SinqNoShift => sinq::quantize(w, cfg),
+        Method::Awq => awq::quantize(w, cfg, calib.unwrap()),
+        Method::ASinq => awq::quantize_asinq(w, cfg, calib.unwrap()),
+        Method::Gptq => gptq::quantize(w, cfg, calib.unwrap(), false),
+        Method::HadamardGptq => gptq::quantize(w, cfg, calib.unwrap(), true),
+        Method::CrossQuant => crossquant::quantize(w, cfg, calib.unwrap()),
+        Method::Codebook => codebook::quantize(w, cfg),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn method_parse_round_trip() {
+        for m in [
+            Method::Rtn,
+            Method::HadamardRtn,
+            Method::Hqq,
+            Method::Sinq,
+            Method::Awq,
+            Method::ASinq,
+            Method::Gptq,
+            Method::CrossQuant,
+            Method::Codebook,
+        ] {
+            assert_eq!(Method::parse(m.name()), Some(m), "{}", m.name());
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn calibration_mu_is_mean_abs() {
+        let x = Matrix::from_vec(2, 3, vec![1.0, -2.0, 0.0, 3.0, -4.0, 0.0]);
+        let c = Calibration::from_activations(x);
+        assert!((c.mu_x[0] - 2.0).abs() < 1e-6);
+        assert!((c.mu_x[1] - 3.0).abs() < 1e-6);
+        assert!(c.mu_x[2] > 0.0); // guarded against zero
+    }
+
+    #[test]
+    fn calibrated_methods_require_calibration() {
+        let mut rng = Rng::new(1);
+        let w = Matrix::randn(8, 64, 0.02, &mut rng);
+        let cfg = QuantConfig::new(Method::Awq, 4);
+        assert!(quantize_matrix(&w, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn aux_precision_i8_bounded_error() {
+        let mut rng = Rng::new(2);
+        let mut m = Matrix::randn(4, 100, 1.0, &mut rng);
+        let orig = m.clone();
+        apply_aux_precision(&mut m, AuxPrecision::I8);
+        for (a, b) in m.data.iter().zip(&orig.data) {
+            assert!((a - b).abs() < 0.05, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        // 4-bit, g=64, f16 aux, with shift and t:
+        // 4 + (16+16)/64 + 16/rows ≈ 4.5 + small.
+        let mut rng = Rng::new(3);
+        let w = Matrix::randn(64, 128, 0.02, &mut rng);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let q = quantize_matrix(&w, &cfg, None).unwrap();
+        let bpw = q.bits_per_weight();
+        assert!(bpw > 4.4 && bpw < 5.0, "bits/weight {bpw}");
+    }
+}

@@ -1,0 +1,228 @@
+//! Round-to-nearest quantization — the trivial-but-strong baseline and the
+//! rounding primitive every other method builds on.
+//!
+//! Uniform grids use asymmetric min/max quantization per (row, group):
+//! `scale = (max−min)/(2^b−1)`, `z = min/scale`, codes
+//! `q = round(w/scale − z) ∈ [0, 2^b−1]`, dequantizing to `scale·(q+z)`.
+//! Without shift (Fig. 5b ablation) a symmetric max-abs scale is used with an
+//! implicit mid-grid shift. Table grids (NF4/FP4) use max-abs normalization
+//! and nearest-level lookup — exactly BnB semantics.
+
+use super::{apply_aux_precision, QuantConfig, QuantizedLinear};
+use crate::fmt::grids::Grid;
+use crate::tensor::Matrix;
+
+/// Result of quantizing one group-row slice.
+pub struct GroupQuant {
+    pub scale: f32,
+    pub shift: f32,
+    pub codes: Vec<u8>,
+}
+
+/// Quantize one contiguous slice against a grid.
+pub fn quantize_group(w: &[f32], grid: &Grid, shift: bool) -> GroupQuant {
+    match grid {
+        Grid::Uniform { bits } => {
+            let maxq = ((1u32 << bits) - 1) as f32;
+            if shift {
+                let mut lo = f32::INFINITY;
+                let mut hi = f32::NEG_INFINITY;
+                for &v in w {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                // Always include 0 in the representable range (keeps exact
+                // zeros exact; matches common RTN implementations).
+                lo = lo.min(0.0);
+                hi = hi.max(0.0);
+                let scale = if hi > lo { (hi - lo) / maxq } else { 1.0 };
+                let z = lo / scale;
+                let codes =
+                    w.iter().map(|&v| (v / scale - z).round().clamp(0.0, maxq) as u8).collect();
+                GroupQuant { scale, shift: z, codes }
+            } else {
+                let amax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let half = ((1u32 << (bits - 1)) - 1) as f32; // e.g. 7 for 4-bit
+                let scale = if amax > 0.0 { amax / half } else { 1.0 };
+                let z = -(1i64 << (bits - 1)) as f32; // implicit center, e.g. −8
+                let codes = w
+                    .iter()
+                    .map(|&v| ((v / scale) - z).round().clamp(0.0, maxq) as u8)
+                    .collect();
+                GroupQuant { scale, shift: z, codes }
+            }
+        }
+        Grid::Table { .. } => {
+            let amax = w.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let scale = if amax > 0.0 { amax } else { 1.0 };
+            let codes = w.iter().map(|&v| grid.nearest(v / scale)).collect();
+            GroupQuant { scale, shift: 0.0, codes }
+        }
+    }
+}
+
+/// Quantize a full matrix group-wise along the input dimension. This is the
+/// `RoundToNearest(Ŵ, b)` of Algorithm 1 line 18 and the RTN baseline itself.
+///
+/// Returns codes plus per-(row, group) scale/shift matrices.
+pub fn quantize_grouped(
+    w: &Matrix,
+    grid: &Grid,
+    group_size: usize,
+    shift: bool,
+) -> (Vec<u8>, Matrix, Option<Matrix>) {
+    let n_groups = w.cols.div_ceil(group_size);
+    let mut codes = vec![0u8; w.rows * w.cols];
+    let mut scales = Matrix::zeros(w.rows, n_groups);
+    let use_shift = shift && grid.is_uniform();
+    let mut shifts = if use_shift { Some(Matrix::zeros(w.rows, n_groups)) } else { None };
+    // Symmetric uniform also records its constant implicit shift so the
+    // shared dequantizer needs no special case.
+    let mut const_shift = if !shift && grid.is_uniform() {
+        Some(Matrix::zeros(w.rows, n_groups))
+    } else {
+        None
+    };
+
+    for i in 0..w.rows {
+        let row = w.row(i);
+        for g in 0..n_groups {
+            let j0 = g * group_size;
+            let j1 = (j0 + group_size).min(w.cols);
+            let gq = quantize_group(&row[j0..j1], grid, shift);
+            *scales.at_mut(i, g) = gq.scale;
+            if let Some(z) = shifts.as_mut() {
+                *z.at_mut(i, g) = gq.shift;
+            }
+            if let Some(z) = const_shift.as_mut() {
+                *z.at_mut(i, g) = gq.shift;
+            }
+            codes[i * w.cols + j0..i * w.cols + j1].copy_from_slice(&gq.codes);
+        }
+    }
+    (codes, scales, shifts.or(const_shift))
+}
+
+/// RTN entry point for the dispatcher: quantize with the configured grid and
+/// round auxiliaries to the configured precision.
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    let (codes, mut scales, mut shifts) =
+        quantize_grouped(w, &cfg.grid, cfg.group_size, cfg.shift);
+    apply_aux_precision(&mut scales, cfg.aux);
+    if let Some(z) = shifts.as_mut() {
+        apply_aux_precision(z, cfg.aux);
+    }
+    QuantizedLinear {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: cfg.group_size,
+        grid: cfg.grid.clone(),
+        codes,
+        scales,
+        shifts,
+        col_scale: None,
+        hadamard: false,
+        hadamard_out: false,
+        pair_codebook: None,
+        aux: cfg.aux,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+    use crate::tensor::{Matrix, Rng};
+
+    fn rel_err(w: &Matrix, q: &QuantizedLinear) -> f64 {
+        let deq = q.dequantize();
+        (deq.mse(w) / w.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            * w.numel() as f64)
+            .sqrt()
+    }
+
+    #[test]
+    fn rtn_4bit_small_error() {
+        let mut rng = Rng::new(51);
+        let w = Matrix::randn(32, 128, 0.02, &mut rng);
+        let cfg = QuantConfig::new(Method::Rtn, 4);
+        let q = quantize(&w, &cfg);
+        assert!(rel_err(&w, &q) < 0.12, "rel err {}", rel_err(&w, &q));
+    }
+
+    #[test]
+    fn rtn_3bit_worse_than_4bit() {
+        let mut rng = Rng::new(52);
+        let w = Matrix::randn(32, 128, 0.02, &mut rng);
+        let e4 = rel_err(&w, &quantize(&w, &QuantConfig::new(Method::Rtn, 4)));
+        let e3 = rel_err(&w, &quantize(&w, &QuantConfig::new(Method::Rtn, 3)));
+        assert!(e3 > e4 * 1.5, "3-bit {e3} vs 4-bit {e4}");
+    }
+
+    #[test]
+    fn exact_zero_preserved_with_shift() {
+        let w = Matrix::from_vec(1, 8, vec![0.0, 0.5, 1.0, 0.0, -0.25, 0.75, 0.0, 0.125]);
+        let cfg = QuantConfig::new(Method::Rtn, 4).with_group(8);
+        let q = quantize(&w, &cfg);
+        let deq = q.dequantize();
+        for j in [0usize, 3, 6] {
+            assert!(deq.at(0, j).abs() < 1e-3, "zero at {j} became {}", deq.at(0, j));
+        }
+    }
+
+    #[test]
+    fn symmetric_mode_has_constant_shift() {
+        let mut rng = Rng::new(53);
+        let w = Matrix::randn(4, 64, 0.02, &mut rng);
+        let cfg = QuantConfig::new(Method::Rtn, 4).with_shift(false);
+        let q = quantize(&w, &cfg);
+        let z = q.shifts.as_ref().unwrap();
+        assert!(z.data.iter().all(|&v| v == -8.0));
+        assert!(rel_err(&w, &q) < 0.18);
+    }
+
+    #[test]
+    fn codes_within_grid() {
+        let mut rng = Rng::new(54);
+        let w = Matrix::randn(8, 96, 1.0, &mut rng);
+        for bits in [2u32, 3, 4, 8] {
+            let cfg = QuantConfig::new(Method::Rtn, bits);
+            let q = quantize(&w, &cfg);
+            let maxc = 1u32 << bits;
+            assert!(q.codes.iter().all(|&c| (c as u32) < maxc), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn nf4_beats_uniform_on_gaussian() {
+        // Gaussian weights are exactly NF4's design target.
+        let mut rng = Rng::new(55);
+        let w = Matrix::randn(64, 256, 0.02, &mut rng);
+        let eu = rel_err(&w, &quantize(&w, &QuantConfig::new(Method::Rtn, 4).with_shift(false)));
+        let en = rel_err(
+            &w,
+            &quantize(&w, &QuantConfig::new(Method::BnB, 4).with_grid(Grid::nf4())),
+        );
+        assert!(en < eu, "nf4 {en} vs uniform-sym {eu}");
+    }
+
+    #[test]
+    fn group_size_controls_aux_count() {
+        let mut rng = Rng::new(56);
+        let w = Matrix::randn(16, 128, 0.02, &mut rng);
+        let q64 = quantize(&w, &QuantConfig::new(Method::Rtn, 4).with_group(64));
+        let q32 = quantize(&w, &QuantConfig::new(Method::Rtn, 4).with_group(32));
+        assert_eq!(q64.scales.numel() * 2, q32.scales.numel());
+        assert!(q32.bits_per_weight() > q64.bits_per_weight());
+    }
+
+    #[test]
+    fn ragged_final_group() {
+        let mut rng = Rng::new(57);
+        let w = Matrix::randn(4, 100, 0.02, &mut rng); // 100 = 64 + 36
+        let cfg = QuantConfig::new(Method::Rtn, 4);
+        let q = quantize(&w, &cfg);
+        assert_eq!(q.n_groups(), 2);
+        assert!(rel_err(&w, &q) < 0.15);
+    }
+}

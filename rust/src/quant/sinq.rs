@@ -1,0 +1,295 @@
+//! SINQ — Algorithm 1: dampened log-space Sinkhorn-Knopp normalization.
+//!
+//! The algorithm iteratively normalizes the row and column standard
+//! deviations of the weight matrix toward a common target `τ` (the smallest
+//! initial std), tracking the iterate with the lowest *imbalance*
+//! `I(Ŵ) = max(σ_row, σ_col)/min(σ_row, σ_col)` (Eq. 5). The resulting
+//! column scales `t` correlate with the layer's mean absolute input `μ_x`
+//! even though no calibration data is used (§2.2.1) — calibration-free
+//! pseudo-activation-awareness — while the simultaneous row normalization
+//! avoids the row-kurtosis blow-up naive column scaling causes (Fig. 2c).
+//!
+//! After normalization any base quantizer applies; per Algorithm 1 line 18 we
+//! use grouped RTN, and line 19 merges the Sinkhorn row scale into the RTN
+//! group scales (`s_q ⊙ s`) so only `t` (one f16 per column) is extra —
+//! `2·N·M/T + M` auxiliaries (§2.1.2).
+
+use super::{apply_aux_precision, rtn, QuantConfig, QuantizedLinear};
+use crate::tensor::stats;
+use crate::tensor::Matrix;
+use crate::util::half::round_f16;
+
+/// Output of the normalization loop.
+#[derive(Debug, Clone)]
+pub struct SinkhornScales {
+    /// Row scales `s = exp(u*)`, length `rows`.
+    pub row: Vec<f32>,
+    /// Column scales `t = exp(v*)`, length `cols`.
+    pub col: Vec<f32>,
+    /// Imbalance of the best iterate.
+    pub imbalance: f64,
+    /// Imbalance of the input matrix (for diagnostics).
+    pub initial_imbalance: f64,
+}
+
+/// Algorithm 1 lines 1–17: find `s`, `t` minimizing the imbalance of
+/// `W ⊘ s ⊘ t`. `iters` = K, `clamp` = (s_min, s_max).
+pub fn sinkhorn_normalize(w: &Matrix, iters: usize, clamp: (f32, f32)) -> SinkhornScales {
+    let (m, n) = (w.rows, w.cols);
+    let (s_min, s_max) = (clamp.0 as f64, clamp.1 as f64);
+
+    // Line 1–2: target std τ = min over initial row/col stds.
+    let sig_row = stats::row_stds(w);
+    let sig_col = stats::col_stds(w);
+    let tau = sig_row
+        .iter()
+        .chain(sig_col.iter())
+        .cloned()
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-12);
+
+    // Line 3–4: log-scales u, v; best-iterate tracking.
+    let mut u = vec![0.0f64; m];
+    let mut v = vec![0.0f64; n];
+    let mut best_u = u.clone();
+    let mut best_v = v.clone();
+    let initial_imbalance = stats::imbalance(w);
+    let mut best_i = f64::INFINITY;
+
+    let mut w_hat = w.clone();
+    for _k in 0..iters {
+        // Line 6: Ŵ = (W ⊘ exp(u)) ⊘ exp(v). Rebuilt from the original W so
+        // u/v always mean *total* log-scales (matches the algorithm listing).
+        w_hat.data.copy_from_slice(&w.data);
+        for i in 0..m {
+            let ru = (-u[i]).exp() as f32;
+            for x in w_hat.row_mut(i) {
+                *x *= ru;
+            }
+        }
+        let cv: Vec<f32> = v.iter().map(|&x| (-x).exp() as f32).collect();
+        w_hat.scale_cols(&cv);
+
+        // Line 7–10: imbalance bookkeeping.
+        let i_curr = stats::imbalance(&w_hat);
+        if i_curr < best_i {
+            best_i = i_curr;
+            best_u.copy_from_slice(&u);
+            best_v.copy_from_slice(&v);
+        }
+
+        // Lines 11–14: dampened updates δ = log(clamp(σ/τ, s_min, s_max)).
+        let sc = stats::col_stds(&w_hat);
+        let sr = stats::row_stds(&w_hat);
+        for (vj, &sig) in v.iter_mut().zip(sc.iter()) {
+            *vj += (sig / tau).clamp(s_min, s_max).ln();
+        }
+        for (ui, &sig) in u.iter_mut().zip(sr.iter()) {
+            *ui += (sig / tau).clamp(s_min, s_max).ln();
+        }
+    }
+
+    // Line 16: recover best linear scales.
+    SinkhornScales {
+        row: best_u.iter().map(|&x| x.exp() as f32).collect(),
+        col: best_v.iter().map(|&x| x.exp() as f32).collect(),
+        imbalance: best_i,
+        initial_imbalance,
+    }
+}
+
+/// Full SINQ quantization (Algorithm 1): normalize, RTN the normalized
+/// matrix, merge row scales, return the dual-scale layer.
+pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    let scales = sinkhorn_normalize(w, cfg.sinq_iters, cfg.sinq_clamp);
+
+    // Line 17: Ŵ = (W ⊘ s) ⊘ t.
+    let mut w_hat = w.clone();
+    w_hat.div_rows(&scales.row);
+    w_hat.div_cols(&scales.col);
+
+    // Line 18: base rounding (uniform RTN by default; NF4 grid for SINQ-NF4).
+    let use_shift = cfg.shift && !matches!(cfg.method, super::Method::SinqNoShift);
+    let (codes, mut s_q, mut shifts) =
+        rtn::quantize_grouped(&w_hat, &cfg.grid, cfg.group_size, use_shift);
+
+    // Line 19: merge s into the group scales (s_q ⊙ s); t stays separate
+    // (stored f16, appliable to activations instead — Eq. 7).
+    for i in 0..w.rows {
+        let s = scales.row[i];
+        for g in 0..s_q.cols {
+            *s_q.at_mut(i, g) *= s;
+        }
+    }
+    apply_aux_precision(&mut s_q, cfg.aux);
+    if let Some(z) = shifts.as_mut() {
+        apply_aux_precision(z, cfg.aux);
+    }
+    let t: Vec<f32> = scales.col.iter().map(|&x| round_f16(x)).collect();
+
+    QuantizedLinear {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: cfg.group_size,
+        grid: cfg.grid.clone(),
+        codes,
+        scales: s_q,
+        shifts,
+        col_scale: Some(t),
+        hadamard: false,
+        hadamard_out: false,
+        pair_codebook: None,
+        aux: cfg.aux,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmt::grids::Grid;
+    use crate::quant::testutil::llm_like;
+    use crate::quant::{rtn, Method, QuantConfig};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn normalization_reduces_imbalance() {
+        let w = llm_like(64, 128, 61);
+        let s = sinkhorn_normalize(&w, 24, (0.5, 2.0));
+        assert!(
+            s.imbalance < s.initial_imbalance * 0.5,
+            "imbalance {} -> {}",
+            s.initial_imbalance,
+            s.imbalance
+        );
+        assert!(s.imbalance >= 1.0);
+    }
+
+    #[test]
+    fn normalized_stds_near_uniform() {
+        let w = llm_like(48, 96, 62);
+        let s = sinkhorn_normalize(&w, 32, (0.5, 2.0));
+        let mut w_hat = w.clone();
+        w_hat.div_rows(&s.row);
+        w_hat.div_cols(&s.col);
+        let rs = stats::row_stds(&w_hat);
+        let cs = stats::col_stds(&w_hat);
+        let hi = rs.iter().chain(cs.iter()).cloned().fold(f64::MIN, f64::max);
+        let lo = rs.iter().chain(cs.iter()).cloned().fold(f64::MAX, f64::min);
+        assert!(hi / lo < 4.0, "residual imbalance {}", hi / lo);
+    }
+
+    #[test]
+    fn identity_scales_on_already_balanced_matrix() {
+        // An i.i.d. Gaussian matrix is already balanced: scales ≈ 1.
+        let mut rng = Rng::new(63);
+        let w = Matrix::randn(64, 64, 0.02, &mut rng);
+        let s = sinkhorn_normalize(&w, 16, (0.5, 2.0));
+        // Scales may drift together (global factor), but relative spread is small.
+        let smax = s.row.iter().fold(f32::MIN, |m, &x| m.max(x));
+        let smin = s.row.iter().fold(f32::MAX, |m, &x| m.min(x));
+        assert!(smax / smin < 1.6, "row scale spread {}", smax / smin);
+    }
+
+    #[test]
+    fn sinq_beats_rtn_on_llm_like_weights() {
+        let w = llm_like(128, 256, 64);
+        for bits in [3u32, 4] {
+            let q_rtn = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, bits));
+            let q_sinq = quantize(&w, &QuantConfig::new(Method::Sinq, bits));
+            let e_rtn = q_rtn.dequantize().mse(&w);
+            let e_sinq = q_sinq.effective_weight().mse(&w);
+            assert!(
+                e_sinq < e_rtn,
+                "bits={bits}: sinq {e_sinq:.3e} not better than rtn {e_rtn:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn sinq_dual_scale_reconstruction_consistent() {
+        // dequantize() must equal s⊙(Q+z)⊙t computed manually.
+        let w = llm_like(16, 64, 65);
+        let cfg = QuantConfig::new(Method::Sinq, 4).with_group(32);
+        let q = quantize(&w, &cfg);
+        let deq = q.dequantize();
+        let t = q.col_scale.as_ref().unwrap();
+        for i in 0..q.rows {
+            for j in 0..q.cols {
+                let g = j / q.group_size;
+                let manual = q.scales.at(i, g)
+                    * (q.codes[i * q.cols + j] as f32 + q.shifts.as_ref().unwrap().at(i, g))
+                    * t[j];
+                assert!((deq.at(i, j) - manual).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn sinq_reduces_row_kurtosis_vs_naive_col_scaling() {
+        // Fig. 2b + 2c on Adam-stationary weights: (a) the pseudo-activation-
+        // awareness relation sigma_col(W) ~ 1/sqrt(s_x) emerges; (b) SINQ's
+        // joint row/col normalization does not raise row kurtosis beyond the
+        // naive 1/sigma_col column scaling.
+        let (w, s_x) = crate::quant::testutil::adam_stationary(32, 64, 1000, 266);
+        let cs = stats::col_stds(&w);
+        let lx: Vec<f64> = s_x.iter().map(|&s| (1.0 / (s as f64).sqrt()).ln()).collect();
+        let ls: Vec<f64> = cs.iter().map(|&c| c.max(1e-12).ln()).collect();
+        let r2 = stats::r_squared(&lx, &ls);
+        assert!(r2 > 0.5, "Fig 2b relation absent: R^2 = {r2}");
+
+        let mut naive = w.clone();
+        naive.div_cols(&cs.iter().map(|&x| x as f32).collect::<Vec<_>>());
+        let naive_k = stats::mean_row_kurtosis(&naive);
+
+        let s = sinkhorn_normalize(&w, 24, (0.5, 2.0));
+        let mut sq = w.clone();
+        sq.div_rows(&s.row);
+        sq.div_cols(&s.col);
+        let sinq_k = stats::mean_row_kurtosis(&sq);
+        assert!(
+            sinq_k <= naive_k * 1.1,
+            "sinq kurtosis {sinq_k} vs naive {naive_k}"
+        );
+
+        // And the derived t correlates with mu_x (= s_x * sqrt(2/pi)).
+        let lmu: Vec<f64> = s_x.iter().map(|&x| (x as f64).ln()).collect();
+        let lt: Vec<f64> = s.col.iter().map(|&t| (t as f64).max(1e-12).ln()).collect();
+        let r2t = stats::r_squared(&lmu, &lt);
+        assert!(r2t > 0.5, "t not predictive of mu_x: R^2 = {r2t}");
+    }
+
+    #[test]
+    fn sinq_nf4_works() {
+        let w = llm_like(32, 128, 67);
+        let cfg = QuantConfig::new(Method::Sinq, 4).with_grid(Grid::nf4());
+        let q = quantize(&w, &cfg);
+        assert!(q.shifts.is_none()); // table grids carry no shift
+        let e = q.dequantize().mse(&w);
+        let e_bnb = rtn::quantize(&w, &QuantConfig::new(Method::BnB, 4).with_grid(Grid::nf4()))
+            .dequantize()
+            .mse(&w);
+        assert!(e < e_bnb, "sinq-nf4 {e:.3e} vs bnb-nf4 {e_bnb:.3e}");
+    }
+
+    #[test]
+    fn property_random_shapes_never_panic_and_improve() {
+        let mut rng = Rng::new(68);
+        for _ in 0..10 {
+            let rows = 8 + rng.below(64);
+            let cols = 16 + rng.below(128);
+            let w = llm_like(rows, cols, rng.next_u64());
+            let q = quantize(&w, &QuantConfig::new(Method::Sinq, 4).with_group(32));
+            assert_eq!(q.codes.len(), rows * cols);
+            let e_sinq = q.dequantize().mse(&w);
+            let e_rtn = rtn::quantize(&w, &QuantConfig::new(Method::Rtn, 4).with_group(32))
+                .dequantize()
+                .mse(&w);
+            // Not guaranteed per-instance, but should hold overwhelmingly;
+            // allow a small slack factor.
+            assert!(
+                e_sinq < e_rtn * 1.2,
+                "rows={rows} cols={cols}: {e_sinq:.3e} vs {e_rtn:.3e}"
+            );
+        }
+    }
+}

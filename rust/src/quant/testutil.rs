@@ -1,0 +1,55 @@
+//! Shared test fixtures for the quantizer zoo.
+
+use crate::tensor::{Matrix, Rng};
+
+/// A synthetic "LLM-like" weight matrix: heavy-tailed entries with structured
+/// row/column scale variation plus hard outliers — the statistics Adam
+/// training produces and that the paper's method exploits.
+pub(crate) fn llm_like(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let row_s: Vec<f32> = (0..rows).map(|_| 0.5 + rng.uniform() as f32 * 2.0).collect();
+    let col_s: Vec<f32> = (0..cols).map(|_| 0.3 + rng.uniform() as f32 * 3.0).collect();
+    let mut w = Matrix::from_fn(rows, cols, |_, _| 0.02 * rng.student_t(4.0) as f32);
+    w.scale_rows(&row_s);
+    w.scale_cols(&col_s);
+    // A few hard outliers.
+    for _ in 0..(rows * cols / 256).max(1) {
+        let i = rng.below(rows);
+        let j = rng.below(cols);
+        *w.at_mut(i, j) *= 8.0;
+    }
+    w
+}
+
+/// Weights of a single linear layer trained to Adam stationarity on a noisy
+/// target with per-channel input scales `s_x` (the paper's Fig. 2b setting).
+/// Returns (W, s_x). The emergent relation is `σ_col(W) ∝ 1/sqrt(s_x)`.
+pub(crate) fn adam_stationary(nout: usize, nin: usize, steps: usize, seed: u64) -> (Matrix, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let bs = 12usize;
+    let s_x: Vec<f32> =
+        (0..nin).map(|_| (0.1f64 + rng.laplace(0.6).abs().exp()) as f32 * 0.3).collect();
+    let mut w = Matrix::randn(nout, nin, 0.01, &mut rng);
+    let (mut m, mut v) = (Matrix::zeros(nout, nin), Matrix::zeros(nout, nin));
+    let (b1, b2, lr, eps) = (0.9f32, 0.999f32, 2e-3f32, 1e-8f32);
+    for t in 1..=steps {
+        let mut x = Matrix::from_fn(bs, nin, |_, _| rng.normal_f32(0.0, 1.0));
+        x.scale_cols(&s_x);
+        let yh = x.matmul_nt(&w);
+        // Pure-noise target: residual = prediction + fresh gaussian noise.
+        let mut d = Matrix::zeros(bs, nout);
+        for i in 0..bs * nout {
+            d.data[i] = yh.data[i] + rng.normal_f32(0.0, 1.0);
+        }
+        let g = d.transpose().matmul(&x);
+        for idx in 0..w.data.len() {
+            let gi = g.data[idx] / bs as f32;
+            m.data[idx] = b1 * m.data[idx] + (1.0 - b1) * gi;
+            v.data[idx] = b2 * v.data[idx] + (1.0 - b2) * gi * gi;
+            let mh = m.data[idx] / (1.0 - b1.powi(t as i32));
+            let vh = v.data[idx] / (1.0 - b2.powi(t as i32));
+            w.data[idx] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+    (w, s_x)
+}

@@ -1,0 +1,919 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (experiment index in DESIGN.md §5). Each `table_*` function loads the
+//! trained family from `artifacts/`, runs the quantizer zoo, evaluates
+//! through the PJRT runtime, and prints a paper-shaped table (also appended
+//! to `artifacts/results.jsonl`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::pipeline::{self, PipelineOpts};
+use crate::coordinator::scheduler::{self, ScheduleOpts};
+use crate::data::{qa, Corpus};
+use crate::eval::{flips, pareto::ParetoPoint, ppl, r2, recon};
+use crate::fmt::gguf;
+use crate::fmt::grids::Grid;
+use crate::model::{memory, ModelWeights, QuantizedModel};
+use crate::quant::{AuxPrecision, Method, QuantConfig};
+use crate::report::{f, Table};
+use crate::runtime::{PjrtForward, PjrtRuntime};
+use crate::tensor::Matrix;
+
+/// Shared context for all tables.
+pub struct Ctx {
+    pub art_dir: String,
+    pub rt: PjrtRuntime,
+    pub eval_windows: usize,
+    pub qa_tasks: usize,
+    pub seq: usize,
+    pub fast: bool,
+}
+
+impl Ctx {
+    pub fn new(art_dir: &str, fast: bool) -> anyhow::Result<Ctx> {
+        Ok(Ctx {
+            art_dir: art_dir.to_string(),
+            rt: PjrtRuntime::cpu(art_dir)?,
+            eval_windows: if fast { 8 } else { 32 },
+            qa_tasks: if fast { 24 } else { 60 },
+            seq: 128,
+            fast,
+        })
+    }
+
+    pub fn load_model(&self, name: &str) -> anyhow::Result<ModelWeights> {
+        scheduler::load_family_member(&self.art_dir, name)
+    }
+
+    pub fn corpus(&self, kind: &str) -> anyhow::Result<Corpus> {
+        Corpus::load(&self.art_dir, kind, "eval")
+    }
+
+    pub fn calib_sample(&self) -> anyhow::Result<Vec<u8>> {
+        // Calibration data comes from the *training* distribution.
+        let c = Corpus::load(&self.art_dir, "wiki", "train")?;
+        Ok(c.data[..(6 * self.seq).min(c.data.len())].to_vec())
+    }
+
+    /// Perplexity of effective weights through the PJRT forward artifact.
+    pub fn ppl_eff(
+        &self,
+        mw: &ModelWeights,
+        eff: &BTreeMap<String, Matrix>,
+        vectors: &BTreeMap<String, Vec<f32>>,
+        kind: &str,
+    ) -> anyhow::Result<f64> {
+        let fwd = PjrtForward::new(&self.rt, &mw.cfg, eff, vectors)?;
+        let corpus = self.corpus(kind)?;
+        // Batch windows 4-at-a-time through the artifact.
+        let windows = corpus.eval_windows(self.seq, self.eval_windows);
+        let mut nll = 0.0;
+        let mut count = 0usize;
+        for chunk in windows.chunks(4) {
+            let outs = fwd.forward_batch(chunk)?;
+            for (w, logits) in chunk.iter().zip(outs) {
+                for p in 0..w.len() - 1 {
+                    nll -= crate::eval::log_prob(logits.row(p), w[p + 1]);
+                    count += 1;
+                }
+            }
+        }
+        Ok((nll / count as f64).exp())
+    }
+
+    /// FP baseline perplexity.
+    pub fn ppl_fp(&self, mw: &ModelWeights, kind: &str) -> anyhow::Result<f64> {
+        self.ppl_eff(mw, &mw.tensors, &mw.vectors, kind)
+    }
+
+    /// Quantize + both-corpora perplexity + memory.
+    pub fn eval_config(
+        &self,
+        mw: &ModelWeights,
+        cfg: &QuantConfig,
+        no_overhead: bool,
+    ) -> anyhow::Result<EvalRow> {
+        let calib = if cfg.method.needs_calibration() {
+            Some(self.calib_sample()?)
+        } else {
+            None
+        };
+        let opts = PipelineOpts {
+            schedule: ScheduleOpts { threads: 2, calib_sample: calib, verbose: false },
+            no_overhead,
+        };
+        let (qm, secs) = pipeline::run(mw, cfg, &opts)?;
+        let eff = qm.effective_weights();
+        let wiki = self.ppl_eff(mw, &eff, &qm.fvectors, "wiki")?;
+        let c4 = self.ppl_eff(mw, &eff, &qm.fvectors, "c4")?;
+        Ok(EvalRow {
+            mem_gb: memory::gb(memory::quantized_total_bytes(&qm, 4, self.seq)),
+            wiki,
+            c4,
+            quant_secs: secs,
+            qm,
+        })
+    }
+}
+
+pub struct EvalRow {
+    pub mem_gb: f64,
+    pub wiki: f64,
+    pub c4: f64,
+    pub quant_secs: f64,
+    pub qm: QuantizedModel,
+}
+
+fn mb(gb: f64) -> String {
+    f(gb * 1000.0, 2) // family models are MB-scale; report MB for legibility
+}
+
+// ======================================================================
+// Table 1 — uncalibrated uniform PTQ (ppl + memory)
+// ======================================================================
+
+pub fn table1(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — Weight-only uncalibrated uniform PTQ (ppl ↓, Mem MB)",
+        &["Bits", "Method", "Model", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let base_mem = memory::gb(
+            memory::baseline_bytes(&mw.cfg) + memory::activation_bytes(&mw.cfg, 4, ctx.seq),
+        );
+        let wiki = ctx.ppl_fp(&mw, "wiki")?;
+        let c4 = ctx.ppl_fp(&mw, "c4")?;
+        t.row(vec![
+            "16".into(), "original (bf16)".into(), name.to_string(),
+            mb(base_mem), f(wiki, 2), f(c4, 2),
+        ]);
+        for bits in [3u32, 4] {
+            for method in [Method::Rtn, Method::HadamardRtn, Method::Hqq, Method::Sinq] {
+                let cfg = QuantConfig::new(method, bits);
+                let row = ctx.eval_config(&mw, &cfg, false)?;
+                t.row(vec![
+                    bits.to_string(), method.name().to_string(), name.to_string(),
+                    mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 2 / Table 14 — flip rates and accuracy on QA suites
+// ======================================================================
+
+pub fn table2(ctx: &Ctx, models: &[&str]) -> anyhow::Result<(Table, Table)> {
+    let suites = ["continuation", "plausibility", "topic"];
+    let mut t_flip = Table::new(
+        "Table 2 — Flip rates (%) ↓ (continuation≈HellaSwag, plausibility≈PIQA, topic≈MMLU)",
+        &["Setting", "Bits", "Method", "Model", "cont.", "plaus.", "topic", "Avg"],
+    );
+    let mut t_acc = Table::new(
+        "Table 14 — Accuracy (%) ↑ on the same suites",
+        &["Setting", "Bits", "Method", "Model", "cont.", "plaus.", "topic", "Avg"],
+    );
+
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        // FP predictions per suite.
+        let mut fp_preds = Vec::new();
+        let mut tasks_by_suite = Vec::new();
+        {
+            let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+            for (si, s) in suites.iter().enumerate() {
+                let tasks = qa::suite(s, ctx.qa_tasks, 1000 + si as u64);
+                fp_preds.push(flips::predictions(&mut fwd, &tasks)?);
+                tasks_by_suite.push(tasks);
+            }
+        }
+        // FP accuracy row.
+        let accs: Vec<f64> = fp_preds
+            .iter()
+            .zip(&tasks_by_suite)
+            .map(|(p, t)| flips::accuracy(p, t))
+            .collect();
+        t_acc.row(vec![
+            "baseline".into(), "16".into(), "original".into(), name.to_string(),
+            f(accs[0], 1), f(accs[1], 1), f(accs[2], 1),
+            f(accs.iter().sum::<f64>() / 3.0, 1),
+        ]);
+
+        let calib_free: Vec<(u32, Method, Option<Grid>)> = vec![
+            (3, Method::Rtn, None),
+            (3, Method::HadamardRtn, None),
+            (3, Method::Hqq, None),
+            (3, Method::Sinq, None),
+            (4, Method::Rtn, None),
+            (4, Method::BnB, Some(Grid::fp4())),
+            (4, Method::BnB, Some(Grid::nf4())),
+            (4, Method::HadamardRtn, None),
+            (4, Method::Hqq, None),
+            (4, Method::Sinq, None),
+        ];
+        let calibrated: Vec<(u32, Method, Option<Grid>)> = vec![
+            (3, Method::Gptq, None),
+            (3, Method::HadamardGptq, None),
+            (3, Method::ASinq, None),
+            (4, Method::Gptq, None),
+            (4, Method::HadamardGptq, None),
+            (4, Method::Awq, None),
+            (4, Method::ASinq, None),
+        ];
+        for (setting, configs) in [("calib-free", calib_free), ("calibrated", calibrated)] {
+            for (bits, method, grid) in configs {
+                if ctx.fast && bits == 3 && method != Method::Sinq && method != Method::Rtn {
+                    continue;
+                }
+                let mut cfg = QuantConfig::new(method, bits);
+                let grid_label = match &grid {
+                    Some(g) => {
+                        cfg = cfg.with_grid(g.clone());
+                        if matches!(g, Grid::Table { name: "fp4", .. }) { " (fp4)" } else { " (nf4)" }
+                    }
+                    None => "",
+                };
+                let row = ctx.eval_config(&mw, &cfg, false)?;
+                let eff = row.qm.effective_weights();
+                let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, &eff, &row.qm.fvectors)?;
+                let mut frates = Vec::new();
+                let mut qaccs = Vec::new();
+                for (si, tasks) in tasks_by_suite.iter().enumerate() {
+                    let preds = flips::predictions(&mut fwd, tasks)?;
+                    frates.push(flips::flip_rate(&fp_preds[si], &preds));
+                    qaccs.push(flips::accuracy(&preds, tasks));
+                }
+                let label = format!("{}{grid_label}", method.name());
+                t_flip.row(vec![
+                    setting.into(), bits.to_string(), label.clone(), name.to_string(),
+                    f(frates[0], 2), f(frates[1], 2), f(frates[2], 2),
+                    f(frates.iter().sum::<f64>() / 3.0, 2),
+                ]);
+                t_acc.row(vec![
+                    setting.into(), bits.to_string(), label, name.to_string(),
+                    f(qaccs[0], 1), f(qaccs[1], 1), f(qaccs[2], 1),
+                    f(qaccs.iter().sum::<f64>() / 3.0, 1),
+                ]);
+            }
+        }
+    }
+    Ok((t_flip, t_acc))
+}
+
+// ======================================================================
+// Table 3 — non-uniform 4-bit
+// ======================================================================
+
+pub fn table3(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — Uncalibrated non-uniform 4-bit PTQ (ppl ↓)",
+        &["Method", "Model", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let configs: Vec<(&str, QuantConfig)> = vec![
+            ("bnb (fp4)", QuantConfig::new(Method::BnB, 4).with_grid(Grid::fp4())),
+            ("bnb (nf4)", QuantConfig::new(Method::BnB, 4).with_grid(Grid::nf4())),
+            ("higgs (non-uniform)", QuantConfig::new(Method::Higgs, 4)),
+            ("sinq (nf4)", QuantConfig::new(Method::Sinq, 4).with_grid(Grid::nf4())),
+            ("sinq (uniform)", QuantConfig::new(Method::Sinq, 4)),
+        ];
+        for (label, cfg) in configs {
+            let row = ctx.eval_config(&mw, &cfg, false)?;
+            t.row(vec![
+                label.into(), name.to_string(), mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 4 — calibrated PTQ
+// ======================================================================
+
+pub fn table4(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — Calibrated PTQ vs calibration-free SINQ (ppl ↓)",
+        &["Bits", "Method", "Model", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        for bits in [3u32, 4] {
+            let mut configs: Vec<(&str, QuantConfig)> = vec![
+                ("gptq", QuantConfig::new(Method::Gptq, bits).with_aux(AuxPrecision::I8)),
+                ("hadamard+gptq", QuantConfig::new(Method::HadamardGptq, bits).with_aux(AuxPrecision::I8)),
+                ("a-sinq", QuantConfig::new(Method::ASinq, bits).with_aux(AuxPrecision::I8)),
+                ("sinq (calibration-free)", QuantConfig::new(Method::Sinq, bits)),
+            ];
+            if bits == 4 {
+                configs.insert(2, ("awq", QuantConfig::new(Method::Awq, 4).with_aux(AuxPrecision::I8)));
+            }
+            for (label, cfg) in configs {
+                let row = ctx.eval_config(&mw, &cfg, false)?;
+                t.row(vec![
+                    bits.to_string(), label.into(), name.to_string(),
+                    mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 5 — second-scale kernel overhead (dqmm artifacts)
+// ======================================================================
+
+pub fn table5(ctx: &Ctx) -> anyhow::Result<Table> {
+    use crate::runtime::client::{lit_f32, lit_i8};
+    let mut t = Table::new(
+        "Table 5 — Dual-scale overhead of the fused dequant-matmul kernel",
+        &["B", "D", "g(x) [ms]", "g(x·t) [ms]", "Overhead"],
+    );
+    let mut rng = crate::tensor::Rng::new(5);
+    for b in [1usize, 64] {
+        for d in [1024usize, 2048] {
+            let mut times = [0.0f64; 2];
+            for (vi, dual) in [false, true].iter().enumerate() {
+                let suffix = if *dual { "_dual" } else { "" };
+                let exe = ctx.rt.load(&format!("dqmm_b{b}_d{d}{suffix}.hlo.txt"))?;
+                let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let codes: Vec<u8> = (0..d * d).map(|_| (rng.next_u64() & 15) as u8).collect();
+                let ng = d / 64;
+                let scales: Vec<f32> = (0..d * ng).map(|_| 0.01).collect();
+                let shifts: Vec<f32> = vec![-7.5; d * ng];
+                let tvec: Vec<f32> = (0..d).map(|_| 1.0 + rng.uniform() as f32).collect();
+                // jax drops unused parameters at lowering: the single-scale
+                // variant's artifact has no `t` argument.
+                let mut args = vec![
+                    lit_f32(&[b, d], &x)?,
+                    lit_i8(&[d, d], &codes)?,
+                    lit_f32(&[d, ng], &scales)?,
+                    lit_f32(&[d, ng], &shifts)?,
+                ];
+                if *dual {
+                    args.push(lit_f32(&[d], &tvec)?);
+                }
+                // Warmup + timed runs.
+                for _ in 0..3 {
+                    let _ = exe.execute(&args).map_err(|e| anyhow::anyhow!("{e}"))?;
+                }
+                let iters = if ctx.fast { 5 } else { 20 };
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    let _ = exe.execute(&args).map_err(|e| anyhow::anyhow!("{e}"))?;
+                }
+                times[vi] = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            }
+            let overhead = 100.0 * (times[1] - times[0]) / times[0];
+            t.row(vec![
+                b.to_string(), d.to_string(), f(times[0], 3), f(times[1], 3),
+                format!("{}%", f(overhead, 1)),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 6 — end-to-end decode throughput (serving loop)
+// ======================================================================
+
+pub fn table6(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    use crate::runtime::PjrtDecoder;
+    let mut t = Table::new(
+        "Table 6 — Decode throughput, batch 1, ctx 256 → gen 512 (tokens/s ↑)",
+        &["Model", "Variant", "Prefill tok/s", "Decode tok/s", "Speedup"],
+    );
+    let gen = if ctx.fast { 64 } else { 512 };
+    let ctx_len = if ctx.fast { 64 } else { 256 };
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let prompt: Vec<u8> = ctx.corpus("wiki")?.data[..ctx_len].to_vec();
+
+        // FP baseline.
+        let mut dec = PjrtDecoder::new_fp(&ctx.rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+        let t0 = Instant::now();
+        for &b in &prompt {
+            let _ = dec.step(b)?;
+        }
+        let prefill_fp = prompt.len() as f64 / t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let _ = dec.generate(&[], 0); // no-op guard
+        let mut last = dec.step(prompt[prompt.len() - 1])?;
+        for _ in 0..gen - 1 {
+            let next = last
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0 as u8;
+            last = dec.step(next)?;
+        }
+        let decode_fp = gen as f64 / t0.elapsed().as_secs_f64();
+        t.row(vec![
+            name.to_string(), "fp32 (W16A16 analogue)".into(),
+            f(prefill_fp, 0), f(decode_fp, 0), "1.0x".into(),
+        ]);
+
+        // W4 (SINQ) variant — only lowered for tiny/small.
+        let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
+        let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
+        match PjrtDecoder::new_w4(&ctx.rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors) {
+            Ok(mut dec) => {
+                let t0 = Instant::now();
+                for &b in &prompt {
+                    let _ = dec.step(b)?;
+                }
+                let prefill_w4 = prompt.len() as f64 / t0.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let mut last = dec.step(prompt[prompt.len() - 1])?;
+                for _ in 0..gen - 1 {
+                    let next = last
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as u8;
+                    last = dec.step(next)?;
+                }
+                let decode_w4 = gen as f64 / t0.elapsed().as_secs_f64();
+                t.row(vec![
+                    name.to_string(), "sinq W4A16 (Pallas dequant-matmul)".into(),
+                    f(prefill_w4, 0), f(decode_w4, 0),
+                    format!("{}x", f(decode_w4 / decode_fp, 2)),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    name.to_string(), "sinq W4A16".into(), "-".into(), "-".into(),
+                    format!("n/a ({e})"),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 7 — reasoning (arith chains): accuracy + trace length
+// ======================================================================
+
+pub fn table7(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 7 — Reasoning (addition chains ≈ AIME): acc ↑, trace tokens",
+        &["Method", "Acc (%)", "Flip (%)", "Trace tok"],
+    );
+    let mw = ctx.load_model(model)?;
+    let tasks = qa::suite("arith", ctx.qa_tasks, 77);
+
+    let trace_prompts: Vec<Vec<u8>> = tasks
+        .iter()
+        .take(if ctx.fast { 4 } else { 12 })
+        .map(|task| task.prompt.clone())
+        .collect();
+
+    let eval = |eff: &BTreeMap<String, Matrix>,
+                    vecs: &BTreeMap<String, Vec<f32>>|
+     -> anyhow::Result<(Vec<usize>, f64)> {
+        let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, eff, vecs)?;
+        let preds = flips::predictions(&mut fwd, &tasks)?;
+        let mut total = 0usize;
+        for p in &trace_prompts {
+            let out = flips::generate_greedy(&mut fwd, p, 24, Some(b'.'))?;
+            total += out.len();
+        }
+        Ok((preds, total as f64 / trace_prompts.len() as f64))
+    };
+
+    let (fp_preds, fp_trace) = eval(&mw.tensors, &mw.vectors)?;
+    t.row(vec![
+        "original (fp)".into(), f(flips::accuracy(&fp_preds, &tasks), 1), "0.00".into(),
+        f(fp_trace, 1),
+    ]);
+    for (label, cfg) in [
+        ("rtn", QuantConfig::new(Method::Rtn, 4)),
+        ("bnb (nf4)", QuantConfig::new(Method::BnB, 4).with_grid(Grid::nf4())),
+        ("hadamard+rtn", QuantConfig::new(Method::HadamardRtn, 4)),
+        ("hqq", QuantConfig::new(Method::Hqq, 4)),
+        ("sinq", QuantConfig::new(Method::Sinq, 4)),
+    ] {
+        let row = ctx.eval_config(&mw, &cfg, false)?;
+        let eff = row.qm.effective_weights();
+        let (preds, trace) = eval(&eff, &row.qm.fvectors)?;
+        t.row(vec![
+            label.into(), f(flips::accuracy(&preds, &tasks), 1),
+            f(flips::flip_rate(&fp_preds, &preds), 2), f(trace, 1),
+        ]);
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 8 — no-overhead SINQ
+// ======================================================================
+
+pub fn table8(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 8 — No-overhead SINQ variant (4-bit, ppl ↓)",
+        &["Method", "Model", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        for (label, method, noov) in [
+            ("hadamard+rtn", Method::HadamardRtn, false),
+            ("hqq", Method::Hqq, false),
+            ("sinq", Method::Sinq, false),
+            ("sinq no-overhead", Method::Sinq, true),
+        ] {
+            let row = ctx.eval_config(&mw, &QuantConfig::new(method, 4), noov)?;
+            t.row(vec![
+                label.into(), name.to_string(), mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 9 — GGUF Q4_0 / Q3_K_S ± no-overhead SINQ
+// ======================================================================
+
+pub fn table9(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 9 — GGUF formats ± no-overhead SINQ pre-normalization (ppl ↓)",
+        &["Model", "Format", "Wiki2", "bits/weight"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let fp = ctx.ppl_fp(&mw, "wiki")?;
+        t.row(vec![name.to_string(), "base (f32)".into(), f(fp, 2), "32".into()]);
+        let folded = crate::model::fold::fold_model(&mw, 24, (0.5, 2.0));
+        for (fmt_name, bpw) in [("q4_0", gguf::q4_0_bits_per_weight()), ("q3_k_s", gguf::q3_k_bits_per_weight())] {
+            for (variant, src) in [("base", &mw), ("no-over. sinq", &folded)] {
+                let mut eff = src.tensors.clone();
+                for lname in src.cfg.quantizable_names() {
+                    let w = &src.tensors[&lname];
+                    if w.cols % 256 != 0 && fmt_name == "q3_k_s" {
+                        continue; // shape not covered by the super-block format
+                    }
+                    let deq = if fmt_name == "q4_0" {
+                        gguf::q4_0_dequantize(&gguf::q4_0_quantize(w))
+                    } else {
+                        gguf::q3_k_dequantize(&gguf::q3_k_quantize(w))
+                    };
+                    eff.insert(lname, deq);
+                }
+                let ppl = ctx.ppl_eff(&mw, &eff, &src.vectors, "wiki")?;
+                t.row(vec![
+                    name.to_string(),
+                    format!("{variant} + {fmt_name}"),
+                    f(ppl, 2),
+                    f(bpw, 2),
+                ]);
+            }
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 10 / Fig. 8 — quantization time
+// ======================================================================
+
+pub fn table10(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 10 — Quantization wall time (s, mean ± std over runs)",
+        &["Method", "Model", "Mean s", "Std", "vs RTN"],
+    );
+    let runs = if ctx.fast { 2 } else { 5 };
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let calib = ctx.calib_sample()?;
+        let mut rtn_mean = 0.0f64;
+        for (label, method) in [
+            ("rtn", Method::Rtn),
+            ("hqq", Method::Hqq),
+            ("gptq", Method::Gptq),
+            ("awq", Method::Awq),
+            ("a-sinq", Method::ASinq),
+            ("sinq", Method::Sinq),
+        ] {
+            let cfg = QuantConfig::new(method, 4);
+            let opts = PipelineOpts {
+                schedule: ScheduleOpts {
+                    threads: 1, // timing: single worker for clean numbers
+                    calib_sample: method.needs_calibration().then(|| calib.clone()),
+                    verbose: false,
+                },
+                no_overhead: false,
+            };
+            let mut times = Vec::new();
+            for _ in 0..runs {
+                let (_, secs) = pipeline::run(&mw, &cfg, &opts)?;
+                times.push(secs);
+            }
+            let mean = times.iter().sum::<f64>() / runs as f64;
+            let var =
+                times.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / runs as f64;
+            if method == Method::Rtn {
+                rtn_mean = mean;
+            }
+            t.row(vec![
+                label.into(), name.to_string(), f(mean, 3), f(var.sqrt(), 3),
+                format!("{}x", f(mean / rtn_mean, 2)),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 16 — CrossQuant comparison (W4A8)
+// ======================================================================
+
+pub fn table16(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    use crate::eval::RustEngine;
+    use crate::model::forward::{Forward, ForwardOpts};
+    let mut t = Table::new(
+        "Table 16 — CrossQuant vs A-SINQ, W4A8 G128 (ppl ↓)",
+        &["Method", "Wiki2"],
+    );
+    let mw = ctx.load_model(model)?;
+    let corpus = ctx.corpus("wiki")?;
+    let windows = if ctx.fast { 4 } else { 12 };
+
+    let mut rows: Vec<(String, BTreeMap<String, Matrix>, BTreeMap<String, Vec<f32>>)> = Vec::new();
+    rows.push(("original (fp)".into(), mw.tensors.clone(), mw.vectors.clone()));
+    for (label, method) in [("crossquant", Method::CrossQuant), ("a-sinq", Method::ASinq)] {
+        let cfg = QuantConfig::new(method, 4).with_group(128);
+        let qm = scheduler::quantize_simple(&mw, &cfg, Some(&ctx.calib_sample()?))?;
+        rows.push((label.into(), qm.effective_weights(), qm.fvectors.clone()));
+    }
+    for (label, eff, vecs) in &rows {
+        // W4A8: the rust forward fake-quantizes activations to 8 bits.
+        let mut fwd = Forward::new(&mw.cfg, eff, vecs);
+        fwd.opts = ForwardOpts { act_bits: if label.starts_with("original") { None } else { Some(8) } };
+        let mut eng = RustEngine { fwd };
+        let ppl = ppl::perplexity(&mut eng, &corpus, ctx.seq, windows)?;
+        t.row(vec![label.clone(), f(ppl, 2)]);
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 17 — codebook methods
+// ======================================================================
+
+pub fn table17(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 17 — Codebook (QuIP#/QTIP-class) vs A-SINQ, 4-bit (ppl ↓)",
+        &["Method", "Wiki2", "C4"],
+    );
+    let mw = ctx.load_model(model)?;
+    let fp_w = ctx.ppl_fp(&mw, "wiki")?;
+    let fp_c = ctx.ppl_fp(&mw, "c4")?;
+    t.row(vec!["baseline (fp)".into(), f(fp_w, 2), f(fp_c, 2)]);
+    for (label, cfg) in [
+        ("codebook (2D-VQ + incoherence)", QuantConfig::new(Method::Codebook, 4)),
+        ("a-sinq", QuantConfig::new(Method::ASinq, 4)),
+    ] {
+        let row = ctx.eval_config(&mw, &cfg, false)?;
+        t.row(vec![label.into(), f(row.wiki, 2), f(row.c4, 2)]);
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 18 — HIGGS vs SINQ-NF4 with quantized auxiliaries
+// ======================================================================
+
+pub fn table18(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 18 — HIGGS vs SINQ (NF4), incl. quantized auxiliaries (ppl ↓)",
+        &["Method", "Model", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        for (label, cfg) in [
+            ("higgs (non-uniform)", QuantConfig::new(Method::Higgs, 4)),
+            ("sinq (nf4)", QuantConfig::new(Method::Sinq, 4).with_grid(Grid::nf4())),
+            (
+                "sinq (nf4, q. aux)",
+                QuantConfig::new(Method::Sinq, 4).with_grid(Grid::nf4()).with_aux(AuxPrecision::I8),
+            ),
+        ] {
+            let row = ctx.eval_config(&mw, &cfg, false)?;
+            t.row(vec![
+                label.into(), name.to_string(), mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Table 19 — MoE models
+// ======================================================================
+
+pub fn table19(ctx: &Ctx) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Table 19 — MoE model (switch top-1), 3/4-bit calibration-free (ppl ↓)",
+        &["Bits", "Method", "Mem", "Wiki2", "C4"],
+    );
+    let mw = ctx.load_model("tiny_moe")?;
+    let wiki = ctx.ppl_fp(&mw, "wiki")?;
+    let c4 = ctx.ppl_fp(&mw, "c4")?;
+    let base_mem = memory::gb(
+        memory::baseline_bytes(&mw.cfg) + memory::activation_bytes(&mw.cfg, 4, ctx.seq),
+    );
+    t.row(vec!["16".into(), "original".into(), mb(base_mem), f(wiki, 2), f(c4, 2)]);
+    for bits in [3u32, 4] {
+        for method in [Method::Rtn, Method::Hqq, Method::Sinq] {
+            let row = ctx.eval_config(&mw, &QuantConfig::new(method, bits), false)?;
+            t.row(vec![
+                bits.to_string(), method.name().into(), mb(row.mem_gb),
+                f(row.wiki, 2), f(row.c4, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Fig. 4 / Fig. 5 — Pareto fronts and ablations
+// ======================================================================
+
+pub fn pareto_table(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 4 — Memory-perplexity points (g ∈ {64,128}; front marked *)",
+        &["Model", "Method", "Bits", "g", "Mem", "Wiki2", "Front"],
+    );
+    let mut points = Vec::new();
+    let mut rows_raw = Vec::new();
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let base_mem = memory::gb(
+            memory::baseline_bytes(&mw.cfg) + memory::activation_bytes(&mw.cfg, 4, ctx.seq),
+        );
+        let fp = ctx.ppl_fp(&mw, "wiki")?;
+        points.push(ParetoPoint { label: format!("{name}/bf16"), memory_gb: base_mem, ppl: fp });
+        rows_raw.push((name.to_string(), "bf16".to_string(), 16u32, 0usize, base_mem, fp));
+        for bits in [3u32, 4, 8] {
+            for g in [64usize, 128] {
+                for method in [Method::Rtn, Method::Hqq, Method::Sinq] {
+                    if ctx.fast && (bits == 8 || g == 128) && method != Method::Sinq {
+                        continue;
+                    }
+                    let cfg = QuantConfig::new(method, bits).with_group(g);
+                    let row = ctx.eval_config(&mw, &cfg, false)?;
+                    let label = format!("{name}/{}-{bits}b-g{g}", method.name());
+                    points.push(ParetoPoint {
+                        label: label.clone(), memory_gb: row.mem_gb, ppl: row.wiki,
+                    });
+                    rows_raw.push((
+                        name.to_string(), method.name().to_string(), bits, g, row.mem_gb, row.wiki,
+                    ));
+                }
+            }
+        }
+    }
+    let front = crate::eval::pareto::pareto_front(&points);
+    let on_front = |mem: f64, ppl: f64| {
+        front.iter().any(|p| (p.memory_gb - mem).abs() < 1e-12 && (p.ppl - ppl).abs() < 1e-12)
+    };
+    for (model, method, bits, g, mem, ppl) in rows_raw {
+        t.row(vec![
+            model, method, bits.to_string(), g.to_string(), mb(mem), f(ppl, 2),
+            if on_front(mem, ppl) { "*".into() } else { "".into() },
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn ablation_table(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 5 — Ablations: aux precision (a) and shifts (b), 4-bit SINQ",
+        &["Model", "Variant", "Mem", "Wiki2", "C4"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        for (label, cfg) in [
+            ("aux fp16 + shift", QuantConfig::new(Method::Sinq, 4)),
+            ("aux int8 + shift", QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::I8)),
+            ("aux fp16, no shift", QuantConfig::new(Method::Sinq, 4).with_shift(false)),
+            (
+                "aux int8, no shift",
+                QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::I8).with_shift(false),
+            ),
+        ] {
+            let row = ctx.eval_config(&mw, &cfg, false)?;
+            t.row(vec![
+                name.to_string(), label.into(), mb(row.mem_gb), f(row.wiki, 2), f(row.c4, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+// ======================================================================
+// Figures 2a/2b/2c, 3, 6, 7 — analysis tables
+// ======================================================================
+
+pub fn fig2a_table(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 2a / Fig. 6 — R² of log(1/σ_col) vs log(μ_x) per layer",
+        &["Model", "Layer", "R²(1/σ)", "R²(shuffled)", "R²(t_sinq)"],
+    );
+    for name in models {
+        let mw = ctx.load_model(name)?;
+        let sample = ctx.corpus("wiki")?.data[..6 * ctx.seq].to_vec();
+        for row in r2::r2_analysis(&mw, &sample, layer_seed(name))? {
+            t.row(vec![
+                name.to_string(), row.layer, f(row.r2_std, 3), f(row.r2_shuffled, 3),
+                f(row.r2_t, 3),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+fn layer_seed(name: &str) -> u64 {
+    name.bytes().map(|b| b as u64).sum()
+}
+
+pub fn fig2b_table(_ctx: &Ctx) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 2b — Adam stationarity: σ_col(W) ∝ s_x^slope (paper: −1/2)",
+        &["nout", "nin", "steps", "slope", "R²"],
+    );
+    for (nout, nin, steps) in [(32usize, 64usize, 1200usize), (64, 128, 1500)] {
+        let (slope, r2v, _, _) = r2::adam_scaling_experiment(nout, nin, steps, 0xF162);
+        t.row(vec![
+            nout.to_string(), nin.to_string(), steps.to_string(), f(slope, 3), f(r2v, 3),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn fig2c_fig7_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 2c / Fig. 7 — Mean row kurtosis of the rounded matrix",
+        &["Layer", "original", "naive 1/σ_col", "sinq", "awq", "asinq"],
+    );
+    let mw = ctx.load_model(model)?;
+    let sample = ctx.corpus("wiki")?.data[..6 * ctx.seq].to_vec();
+    let layers: Vec<String> = mw
+        .cfg
+        .quantizable_names()
+        .into_iter()
+        .filter(|n| n.contains("layers.0") || n.contains("layers.1"))
+        .collect();
+    for row in recon::kurtosis_analysis(&mw, &sample, &layers)? {
+        t.row(vec![
+            row.layer, f(row.original, 2), f(row.naive_col, 2), f(row.sinq, 2),
+            f(row.awq, 2), f(row.asinq, 2),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn fig3_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    let mut t = Table::new(
+        "Fig. 3 — Matrix vs activation reconstruction error deltas vs RTN (3-bit; − is better)",
+        &["Layer", "SINQ Δmatrix", "SINQ Δact", "Hadamard Δmatrix", "Hadamard Δact"],
+    );
+    let mw = ctx.load_model(model)?;
+    let sample = ctx.corpus("wiki")?.data[..6 * ctx.seq].to_vec();
+    let layers: Vec<String> = mw
+        .cfg
+        .quantizable_names()
+        .into_iter()
+        .filter(|n| n.contains(".wq") || n.contains(".wk") || n.contains(".wv") || n.contains(".wo"))
+        .collect();
+    let s_rows = recon::recon_analysis(&mw, &sample, &layers, Method::Sinq, 3)?;
+    let h_rows = recon::recon_analysis(&mw, &sample, &layers, Method::HadamardRtn, 3)?;
+    for (s, h) in s_rows.iter().zip(&h_rows) {
+        t.row(vec![
+            s.layer.clone(),
+            f(s.matrix_delta, 4), f(s.activation_delta, 4),
+            f(h.matrix_delta, 4), f(h.activation_delta, 4),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn fig1_table(_ctx: &Ctx) -> anyhow::Result<Table> {
+    let (single, dual, _) = recon::dual_scale_demo();
+    let mut t = Table::new(
+        "Fig. 1 — Dual vs single scaling on a 16×16 structured outlier matrix (3-bit MSE)",
+        &["Parameterization", "MSE"],
+    );
+    t.row(vec!["single scale (RTN)".into(), format!("{single:.5}")]);
+    t.row(vec!["dual scale (SINQ)".into(), format!("{dual:.5}")]);
+    Ok(t)
+}

@@ -1,0 +1,134 @@
+//! PJRT client wrapper + executable cache + literal marshalling.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::Matrix;
+use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
+
+/// A process-wide PJRT CPU runtime with an executable cache. Compilation of
+/// an HLO artifact happens once; subsequent loads hit the cache (the
+/// serving coordinator compiles per (graph, shape) variant, like any
+/// inference server's warmup).
+pub struct PjrtRuntime {
+    pub client: PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<PjRtLoadedExecutable>>>,
+    pub art_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    pub fn cpu(art_dir: impl AsRef<Path>) -> anyhow::Result<PjrtRuntime> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(PjrtRuntime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            art_dir: art_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, artifact: &str) -> anyhow::Result<Arc<PjRtLoadedExecutable>> {
+        let path = self.art_dir.join(artifact);
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(&path) {
+                return Ok(exe.clone());
+            }
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e} (run `make artifacts`)", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", path.display()))?;
+        let exe = Arc::new(exe);
+        self.cache.lock().unwrap().insert(path, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------- literals --
+
+/// f32 literal from a matrix (row-major (rows, cols)).
+pub fn lit_matrix(m: &Matrix) -> anyhow::Result<Literal> {
+    let bytes: Vec<u8> = m.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &[m.rows, m.cols], &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_matrix: {e}"))
+}
+
+/// f32 literal from a vector.
+pub fn lit_vec(v: &[f32]) -> anyhow::Result<Literal> {
+    let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, &[v.len()], &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_vec: {e}"))
+}
+
+/// f32 literal of arbitrary shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    Literal::create_from_shape_and_untyped_data(ElementType::F32, shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_f32: {e}"))
+}
+
+/// i32 literal of arbitrary shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<Literal> {
+    let bytes: Vec<u8> = data.iter().flat_map(|x| x.to_le_bytes()).collect();
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("lit_i32: {e}"))
+}
+
+/// i32 scalar literal.
+pub fn lit_i32_scalar(v: i32) -> anyhow::Result<Literal> {
+    Literal::create_from_shape_and_untyped_data(ElementType::S32, &[], &v.to_le_bytes())
+        .map_err(|e| anyhow::anyhow!("lit_i32_scalar: {e}"))
+}
+
+/// i8 literal from quantization codes.
+pub fn lit_i8(shape: &[usize], codes: &[u8]) -> anyhow::Result<Literal> {
+    // Codes are 0..=15 so the u8→i8 reinterpretation is value-preserving.
+    Literal::create_from_shape_and_untyped_data(ElementType::S8, shape, codes)
+        .map_err(|e| anyhow::anyhow!("lit_i8: {e}"))
+}
+
+/// Extract an f32 tensor from a result literal.
+pub fn literal_to_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise the real PJRT client; they are cheap (tiny
+    // computations) but do initialize XLA.
+
+    #[test]
+    fn literal_round_trips() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -2.0, 3.5, 0.0, 1e-8, -1e8]);
+        let lit = lit_matrix(&m).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(literal_to_f32(&lit).unwrap(), m.data);
+
+        let lit = lit_i32(&[4], &[-1, 0, 7, 1 << 30]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![-1, 0, 7, 1 << 30]);
+
+        let lit = lit_i8(&[3], &[0, 7, 15]).unwrap();
+        assert_eq!(lit.to_vec::<i8>().unwrap(), vec![0, 7, 15]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = lit_i32_scalar(42).unwrap();
+        assert_eq!(lit.element_count(), 1);
+        assert_eq!(lit.get_first_element::<i32>().unwrap(), 42);
+    }
+}

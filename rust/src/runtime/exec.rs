@@ -1,0 +1,280 @@
+//! Forward / decode executors over the AOT artifacts.
+//!
+//! Weights are uploaded to device buffers **once** per model variant; the
+//! request path transfers only tokens (and the KV cache buffer stays on
+//! device between steps in the serving loop — functional update in, buffer
+//! out).
+
+use std::sync::Arc;
+
+use crate::eval::LogitsEngine;
+use crate::model::ModelConfig;
+use crate::quant::QuantizedLinear;
+use crate::runtime::client::{self, PjrtRuntime};
+use crate::tensor::Matrix;
+use std::collections::BTreeMap;
+use xla::{ElementType, PjRtBuffer, PjRtLoadedExecutable};
+
+/// Shape of the full-sequence forward artifact (matches `aot.py`).
+pub const FWD_BATCH: usize = 4;
+pub const FWD_SEQ: usize = 128;
+/// KV capacity of the decode artifacts.
+pub const DECODE_CTX: usize = 768;
+
+/// Full-sequence forward through `fwd_{model}.hlo.txt`; implements
+/// [`LogitsEngine`] (single sequence) plus a batched entry point.
+pub struct PjrtForward {
+    exe: Arc<PjRtLoadedExecutable>,
+    weight_buffers: Vec<PjRtBuffer>,
+    cfg: ModelConfig,
+}
+
+impl PjrtForward {
+    /// Build from effective f32 weights (any quantization method).
+    pub fn new(
+        rt: &PjrtRuntime,
+        cfg: &ModelConfig,
+        weights: &BTreeMap<String, Matrix>,
+        vectors: &BTreeMap<String, Vec<f32>>,
+    ) -> anyhow::Result<PjrtForward> {
+        let exe = rt.load(&format!("fwd_{}.hlo.txt", cfg.name))?;
+        let mut weight_buffers = Vec::new();
+        for name in cfg.weight_names() {
+            let buf = if let Some(m) = weights.get(&name) {
+                rt.client.buffer_from_host_buffer::<f32>(&m.data, &[m.rows, m.cols], None)
+            } else if let Some(v) = vectors.get(&name) {
+                rt.client.buffer_from_host_buffer::<f32>(v, &[v.len()], None)
+            } else {
+                anyhow::bail!("missing weight '{name}'");
+            }
+            .map_err(|e| anyhow::anyhow!("upload {name}: {e}"))?;
+            weight_buffers.push(buf);
+        }
+        Ok(PjrtForward { exe, weight_buffers, cfg: cfg.clone() })
+    }
+
+    /// Batched forward: up to [`FWD_BATCH`] sequences of ≤ [`FWD_SEQ`] tokens;
+    /// returns per-sequence logits (seq_len, vocab).
+    pub fn forward_batch(&self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        anyhow::ensure!(!seqs.is_empty() && seqs.len() <= FWD_BATCH, "bad batch size");
+        anyhow::ensure!(seqs.iter().all(|s| s.len() <= FWD_SEQ), "sequence too long");
+        let mut tokens = vec![0i32; FWD_BATCH * FWD_SEQ];
+        for (b, s) in seqs.iter().enumerate() {
+            for (p, &tok) in s.iter().enumerate() {
+                tokens[b * FWD_SEQ + p] = tok as i32;
+            }
+        }
+        let tok_buf = self
+            .exe
+            .client()
+            .buffer_from_host_buffer::<i32>(&tokens, &[FWD_BATCH, FWD_SEQ], None)
+            .map_err(|e| anyhow::anyhow!("token upload: {e}"))?;
+
+        let mut args: Vec<&PjRtBuffer> = vec![&tok_buf];
+        args.extend(self.weight_buffers.iter());
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute fwd: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        let data = client::literal_to_f32(&out)?;
+        let v = self.cfg.vocab;
+        anyhow::ensure!(data.len() == FWD_BATCH * FWD_SEQ * v, "bad logits size");
+        Ok(seqs
+            .iter()
+            .enumerate()
+            .map(|(b, s)| {
+                let mut m = Matrix::zeros(s.len(), v);
+                for p in 0..s.len() {
+                    let off = (b * FWD_SEQ + p) * v;
+                    m.row_mut(p).copy_from_slice(&data[off..off + v]);
+                }
+                m
+            })
+            .collect())
+    }
+}
+
+impl LogitsEngine for PjrtForward {
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        let mut out = self.forward_batch(&[tokens])?;
+        Ok(out.pop().unwrap())
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+/// Autoregressive decoder over `decode_{model}[_w4].hlo.txt`: the KV cache
+/// lives on device; each step transfers one token in and one logits row out.
+pub struct PjrtDecoder {
+    exe: Arc<PjRtLoadedExecutable>,
+    weight_buffers: Vec<PjRtBuffer>,
+    kv: Option<PjRtBuffer>,
+    cfg: ModelConfig,
+    pub pos: usize,
+}
+
+impl PjrtDecoder {
+    /// FP (f32) decoder — the W16A16 baseline of Table 6.
+    pub fn new_fp(
+        rt: &PjrtRuntime,
+        cfg: &ModelConfig,
+        weights: &BTreeMap<String, Matrix>,
+        vectors: &BTreeMap<String, Vec<f32>>,
+    ) -> anyhow::Result<PjrtDecoder> {
+        let exe = rt.load(&format!("decode_{}.hlo.txt", cfg.name))?;
+        let mut bufs = Vec::new();
+        for name in cfg.weight_names() {
+            let buf = if let Some(m) = weights.get(&name) {
+                rt.client.buffer_from_host_buffer::<f32>(&m.data, &[m.rows, m.cols], None)
+            } else {
+                let v = &vectors[&name];
+                rt.client.buffer_from_host_buffer::<f32>(v, &[v.len()], None)
+            }
+            .map_err(|e| anyhow::anyhow!("upload {name}: {e}"))?;
+            bufs.push(buf);
+        }
+        Self::finish(rt, exe, bufs, cfg)
+    }
+
+    /// W4A16 decoder — quantized operands feed the Pallas dequant-matmul
+    /// graph (Table 6's SINQ row).
+    pub fn new_w4(
+        rt: &PjrtRuntime,
+        cfg: &ModelConfig,
+        qlayers: &BTreeMap<String, QuantizedLinear>,
+        fweights: &BTreeMap<String, Matrix>,
+        fvectors: &BTreeMap<String, Vec<f32>>,
+    ) -> anyhow::Result<PjrtDecoder> {
+        let exe = rt.load(&format!("decode_{}_w4.hlo.txt", cfg.name))?;
+        let qnames = cfg.quantizable_names();
+        let mut bufs = Vec::new();
+        // f-weights first (artifact argument order: fnames then per-q 4-tuple).
+        for name in cfg.weight_names().iter().filter(|n| !qnames.contains(n)) {
+            let buf = if let Some(m) = fweights.get(name.as_str()) {
+                rt.client.buffer_from_host_buffer::<f32>(&m.data, &[m.rows, m.cols], None)
+            } else {
+                let v = &fvectors[name.as_str()];
+                rt.client.buffer_from_host_buffer::<f32>(v, &[v.len()], None)
+            }
+            .map_err(|e| anyhow::anyhow!("upload {name}: {e}"))?;
+            bufs.push(buf);
+        }
+        for name in &qnames {
+            let q = qlayers
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing quantized layer {name}"))?;
+            anyhow::ensure!(q.grid.is_uniform(), "W4 artifact expects uniform codes");
+            let cl = rt
+                .client
+                .buffer_from_host_raw_bytes(ElementType::S8, &q.codes, &[q.rows, q.cols], None)
+                .map_err(|e| anyhow::anyhow!("codes {name}: {e}"))?;
+            bufs.push(cl);
+            let s = &q.scales;
+            bufs.push(
+                rt.client
+                    .buffer_from_host_buffer::<f32>(&s.data, &[s.rows, s.cols], None)
+                    .map_err(|e| anyhow::anyhow!("scales {name}: {e}"))?,
+            );
+            let zero = Matrix::zeros(s.rows, s.cols);
+            let z = q.shifts.as_ref().unwrap_or(&zero);
+            bufs.push(
+                rt.client
+                    .buffer_from_host_buffer::<f32>(&z.data, &[z.rows, z.cols], None)
+                    .map_err(|e| anyhow::anyhow!("shifts {name}: {e}"))?,
+            );
+            let ones = vec![1.0f32; q.cols];
+            let t = q.col_scale.as_deref().unwrap_or(&ones);
+            bufs.push(
+                rt.client
+                    .buffer_from_host_buffer::<f32>(t, &[q.cols], None)
+                    .map_err(|e| anyhow::anyhow!("t {name}: {e}"))?,
+            );
+        }
+        Self::finish(rt, exe, bufs, cfg)
+    }
+
+    fn finish(
+        rt: &PjrtRuntime,
+        exe: Arc<PjRtLoadedExecutable>,
+        weight_buffers: Vec<PjRtBuffer>,
+        cfg: &ModelConfig,
+    ) -> anyhow::Result<PjrtDecoder> {
+        let kv_len = cfg.layers * 2 * cfg.heads * DECODE_CTX * cfg.head_dim();
+        let kv = rt
+            .client
+            .buffer_from_host_buffer::<f32>(
+                &vec![0.0f32; kv_len],
+                &[cfg.layers, 2, 1, cfg.heads, DECODE_CTX, cfg.head_dim()],
+                None,
+            )
+            .map_err(|e| anyhow::anyhow!("kv init: {e}"))?;
+        Ok(PjrtDecoder { exe, weight_buffers, kv: Some(kv), cfg: cfg.clone(), pos: 0 })
+    }
+
+    /// Feed one token; returns the next-token logits. The KV buffer is
+    /// threaded functionally on device.
+    pub fn step(&mut self, token: u8) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(self.pos < DECODE_CTX, "context exhausted");
+        let client = self.exe.client().clone();
+        let tok = client
+            .buffer_from_host_buffer::<i32>(&[token as i32], &[1], None)
+            .map_err(|e| anyhow::anyhow!("token: {e}"))?;
+        let pos = client
+            .buffer_from_host_buffer::<i32>(&[self.pos as i32], &[], None)
+            .map_err(|e| anyhow::anyhow!("pos: {e}"))?;
+        let kv = self.kv.take().expect("kv buffer present");
+        let mut args: Vec<&PjRtBuffer> = vec![&tok, &pos, &kv];
+        args.extend(self.weight_buffers.iter());
+        let mut result =
+            self.exe.execute_b(&args).map_err(|e| anyhow::anyhow!("decode step: {e}"))?;
+        // Output is a 2-tuple (logits, kv'): returned as one tuple buffer.
+        let outs = result.pop().unwrap();
+        anyhow::ensure!(!outs.is_empty(), "empty execution result");
+        // The decode artifact returns ONE flat f32 vector `[logits | kv']`:
+        // multi-element tuple outputs cannot be fetched through
+        // xla_extension 0.5.1's ToLiteralSync, and feeding an execution's
+        // output buffer straight back as an input deadlocks the TFRT CPU
+        // client — so the KV cache round-trips the host each step (sub-ms at
+        // family sizes; quantified in EXPERIMENTS.md §Perf).
+        let lit = outs[0].to_literal_sync().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let flat = lit.to_tuple1().map_err(|e| anyhow::anyhow!("tuple1: {e}"))?;
+        let data = client::literal_to_f32(&flat)?;
+        let v = self.cfg.vocab;
+        anyhow::ensure!(data.len() > v, "flat decode output too small");
+        let cfg = &self.cfg;
+        let kv_dims =
+            [cfg.layers, 2, 1, cfg.heads, DECODE_CTX, cfg.head_dim()];
+        let new_kv = client
+            .buffer_from_host_buffer::<f32>(&data[v..], &kv_dims, None)
+            .map_err(|e| anyhow::anyhow!("kv reupload: {e}"))?;
+        self.kv = Some(new_kv);
+        self.pos += 1;
+        Ok(data[..v].to_vec())
+    }
+
+    /// Greedy generation helper for the serving bench: prefill `prompt`,
+    /// then generate `n` tokens; returns (generated, total_steps).
+    pub fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        let mut last = Vec::new();
+        for &t in prompt {
+            last = self.step(t)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let next = argmax(&last) as u8;
+            out.push(next);
+            last = self.step(next)?;
+        }
+        Ok(out)
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the XLA CPU client — Python is never on this path.
+//!
+//! * [`client`] — `PjrtRuntime`: PJRT client + executable cache keyed by
+//!   artifact path, literal marshalling helpers.
+//! * [`exec`] — `PjrtForward` / `PjrtDecoder`: the forward-pass and
+//!   decode-step wrappers implementing [`crate::eval::LogitsEngine`] and the
+//!   serving loop, with weights kept resident as device buffers.
+
+pub mod client;
+pub mod exec;
+
+pub use client::PjrtRuntime;
+pub use exec::{PjrtDecoder, PjrtForward};

@@ -1,0 +1,170 @@
+//! Dense linear algebra needed by GPTQ: symmetric positive-definite Cholesky
+//! factorization, triangular solves, and SPD inversion.
+//!
+//! GPTQ quantizes weight columns in sequence and compensates the remaining
+//! columns through the inverse Hessian `H⁻¹ = (2XᵀX + λI)⁻¹`; its reference
+//! implementation works with the upper Cholesky factor of `H⁻¹`, which is
+//! exactly what [`cholesky_inverse_upper`] produces.
+
+use crate::tensor::Matrix;
+
+/// Cholesky factorization A = L·Lᵀ (L lower-triangular). `A` must be
+/// symmetric positive definite; returns `None` if a pivot is non-positive.
+pub fn cholesky(a: &Matrix) -> Option<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square input");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l.at(i, k) as f64 * l.at(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt() as f32;
+            } else {
+                *l.at_mut(i, j) = (s / l.at(j, j) as f64) as f32;
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L·y = b for lower-triangular L.
+pub fn solve_lower(l: &Matrix, b: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l.at(i, k) as f64 * y[k] as f64;
+        }
+        y[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y for lower-triangular L.
+pub fn solve_lower_t(l: &Matrix, y: &[f32]) -> Vec<f32> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0f32; n];
+    for i in (0..n).rev() {
+        let mut s = y[i] as f64;
+        for k in i + 1..n {
+            s -= l.at(k, i) as f64 * x[k] as f64;
+        }
+        x[i] = (s / l.at(i, i) as f64) as f32;
+    }
+    x
+}
+
+/// Invert an SPD matrix via Cholesky. Returns `None` if not SPD.
+pub fn spd_inverse(a: &Matrix) -> Option<Matrix> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0f32; n];
+    for j in 0..n {
+        e.fill(0.0);
+        e[j] = 1.0;
+        let y = solve_lower(&l, &e);
+        let x = solve_lower_t(&l, &y);
+        for i in 0..n {
+            *inv.at_mut(i, j) = x[i];
+        }
+    }
+    Some(inv)
+}
+
+/// Upper Cholesky factor `U` of `A⁻¹` with `A⁻¹ = Uᵀ·U`... specifically the
+/// factor GPTQ uses: compute `A⁻¹`, then return `C` upper-triangular with
+/// `A⁻¹ = CᵀC` is *not* what GPTQ wants — GPTQ uses `A⁻¹ = C·Cᵀ` with `C`
+/// upper triangular, i.e. the reverse-ordered Cholesky. We obtain it by
+/// Cholesky-factorizing the reversed-permutation of `A⁻¹`.
+pub fn cholesky_inverse_upper(a: &Matrix) -> Option<Matrix> {
+    let inv = spd_inverse(a)?;
+    let n = inv.rows;
+    // P·inv·P with P the reversal permutation.
+    let rev = Matrix::from_fn(n, n, |i, j| inv.at(n - 1 - i, n - 1 - j));
+    let l = cholesky(&rev)?;
+    // Undo the reversal: U[i,j] = L[n-1-i, n-1-j] is upper-triangular and
+    // satisfies inv = U·Uᵀ.
+    Some(Matrix::from_fn(n, n, |i, j| l.at(n - 1 - i, n - 1 - j)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let mut a = b.matmul_nt(&b); // B·Bᵀ is PSD
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.5 * n as f32; // make strictly PD
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 1);
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul_nt(&l);
+        assert!(a.dist(&rec) / a.dist(&Matrix::zeros(12, 12)) < 1e-4);
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solves_are_consistent() {
+        let a = random_spd(8, 2);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f32> = (0..8).map(|i| i as f32 - 3.0).collect();
+        let y = solve_lower(&l, &b);
+        let x = solve_lower_t(&l, &y);
+        // Check A·x ≈ b.
+        for i in 0..8 {
+            let got: f32 = (0..8).map(|j| a.at(i, j) * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-3, "row {i}: {got} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let a = random_spd(10, 3);
+        let inv = spd_inverse(&a).unwrap();
+        let prod = a.matmul(&inv);
+        for i in 0..10 {
+            for j in 0..10 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at(i, j) - expect).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_upper_factor_property() {
+        // cholesky_inverse_upper returns upper-triangular U with A⁻¹ = U·Uᵀ.
+        let a = random_spd(9, 4);
+        let u = cholesky_inverse_upper(&a).unwrap();
+        for i in 0..9 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0, "U not upper triangular at ({i},{j})");
+            }
+        }
+        let inv = spd_inverse(&a).unwrap();
+        let rec = u.matmul_nt(&u);
+        assert!(inv.dist(&rec) < 1e-3 * (1.0 + inv.dist(&Matrix::zeros(9, 9))));
+    }
+}

@@ -1,0 +1,358 @@
+//! Row-major dense `f32` matrix with the operations the quantizer zoo and the
+//! reference transformer need.
+//!
+//! Performance notes (single CPU core, no SIMD intrinsics): `matmul_nt`
+//! (A·Bᵀ) is the workhorse — its inner loop is a dot product of two
+//! contiguous rows which LLVM auto-vectorizes; `matmul` uses the i-k-j order
+//! so the innermost loop streams both `B` and `C` rows. Benchmarked in
+//! `benches/lib_micro.rs` and tuned in EXPERIMENTS.md §Perf.
+
+use crate::tensor::Rng;
+
+/// Dense row-major matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. normal entries (LeCun-style scale by default callers choose).
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal_f32(0.0, std))
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// C = self · other, shapes (m,k)×(k,n).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            let c_row = &mut c.data[i * n..(i + 1) * n];
+            for (p, &a) in a_row.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = &other.data[p * n..(p + 1) * n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *cv += a * bv;
+                }
+            }
+        }
+        c
+    }
+
+    /// C = self · otherᵀ, shapes (m,k)×(n,k) → (m,n). The linear-layer form
+    /// `y = x·Wᵀ`.
+    ///
+    /// §Perf: 2×4 register blocking — two A rows and four B rows are
+    /// streamed together so each B row (the weight matrix, usually the
+    /// larger operand) is read once per *pair* of activations instead of
+    /// once per activation, and the 8 accumulators give the scalar pipeline
+    /// enough ILP to auto-vectorize. Measured 4.79 → ~11 GFLOP/s on the
+    /// bench shape (see EXPERIMENTS.md §Perf).
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut c = Matrix::zeros(m, n);
+        let mut i = 0;
+        while i + 2 <= m {
+            let a0 = self.row(i);
+            let a1 = self.row(i + 1);
+            let mut j = 0;
+            while j + 4 <= n {
+                let b0 = other.row(j);
+                let b1 = other.row(j + 1);
+                let b2 = other.row(j + 2);
+                let b3 = other.row(j + 3);
+                let mut acc = [0.0f32; 8];
+                for p in 0..k {
+                    let (x0, x1) = (a0[p], a1[p]);
+                    acc[0] += x0 * b0[p];
+                    acc[1] += x0 * b1[p];
+                    acc[2] += x0 * b2[p];
+                    acc[3] += x0 * b3[p];
+                    acc[4] += x1 * b0[p];
+                    acc[5] += x1 * b1[p];
+                    acc[6] += x1 * b2[p];
+                    acc[7] += x1 * b3[p];
+                }
+                c.data[i * n + j..i * n + j + 4].copy_from_slice(&acc[..4]);
+                c.data[(i + 1) * n + j..(i + 1) * n + j + 4].copy_from_slice(&acc[4..]);
+                j += 4;
+            }
+            while j < n {
+                let b = other.row(j);
+                c.data[i * n + j] = dot(a0, b, k);
+                c.data[(i + 1) * n + j] = dot(a1, b, k);
+                j += 1;
+            }
+            i += 2;
+        }
+        if i < m {
+            let a_row = self.row(i);
+            for j in 0..n {
+                c.data[i * n + j] = dot(a_row, other.row(j), k);
+            }
+        }
+        c
+    }
+
+    /// Frobenius norm of the difference.
+    pub fn dist(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = a - b;
+                d * d
+            })
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    /// Mean squared error against `other`.
+    pub fn mse(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Multiply row `i` by `s[i]` in place.
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let f = s[i];
+            for v in self.row_mut(i) {
+                *v *= f;
+            }
+        }
+    }
+
+    /// Multiply column `j` by `t[j]` in place.
+    pub fn scale_cols(&mut self, t: &[f32]) {
+        assert_eq!(t.len(), self.cols);
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for (v, &f) in row.iter_mut().zip(t.iter()) {
+                *v *= f;
+            }
+        }
+    }
+
+    /// Divide rows / cols (used by the Sinkhorn loop).
+    pub fn div_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for i in 0..self.rows {
+            let f = 1.0 / s[i];
+            for v in self.row_mut(i) {
+                *v *= f;
+            }
+        }
+    }
+
+    pub fn div_cols(&mut self, t: &[f32]) {
+        assert_eq!(t.len(), self.cols);
+        let inv: Vec<f32> = t.iter().map(|&x| 1.0 / x).collect();
+        self.scale_cols(&inv);
+    }
+
+    /// Slice of columns `[j0, j1)` as a new matrix (a weight-group view).
+    pub fn col_slice(&self, j0: usize, j1: usize) -> Matrix {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut m = Matrix::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            m.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        m
+    }
+
+    /// Write `block` back into columns `[j0, ...)`.
+    pub fn set_col_slice(&mut self, j0: usize, block: &Matrix) {
+        assert_eq!(block.rows, self.rows);
+        assert!(j0 + block.cols <= self.cols);
+        for i in 0..self.rows {
+            self.row_mut(i)[j0..j0 + block.cols].copy_from_slice(block.row(i));
+        }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Contiguous dot product, 4-way unrolled so LLVM vectorizes it.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], k: usize) -> f32 {
+    let (a, b) = (&a[..k], &b[..k]);
+    let mut acc = [0.0f32; 4];
+    let chunks = k / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..k {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_nt_agrees_with_matmul() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 7, 1.0, &mut rng);
+        let b = Matrix::randn(7, 4, 1.0, &mut rng);
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        assert!(c1.dist(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(33, 65, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn scale_and_div_are_inverse() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(8, 6, 1.0, &mut rng);
+        let s: Vec<f32> = (0..8).map(|i| 1.0 + i as f32).collect();
+        let t: Vec<f32> = (0..6).map(|j| 0.5 + j as f32).collect();
+        let mut b = a.clone();
+        b.scale_rows(&s);
+        b.scale_cols(&t);
+        b.div_cols(&t);
+        b.div_rows(&s);
+        assert!(a.dist(&b) < 1e-4);
+    }
+
+    #[test]
+    fn col_slice_round_trip() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(4, 10, 1.0, &mut rng);
+        let block = a.col_slice(2, 7);
+        assert_eq!(block.cols, 5);
+        let mut b = Matrix::zeros(4, 10);
+        b.set_col_slice(2, &block);
+        for i in 0..4 {
+            for j in 2..7 {
+                assert_eq!(b.at(i, j), a.at(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn dot_handles_remainders() {
+        for k in [0usize, 1, 3, 4, 5, 17] {
+            let a: Vec<f32> = (0..k).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..k).map(|i| (i * 2) as f32).collect();
+            let expect: f32 = (0..k).map(|i| (i * i * 2) as f32).sum();
+            assert_eq!(dot(&a, &b, k), expect, "k={k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_check() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

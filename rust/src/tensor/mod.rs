@@ -1,0 +1,14 @@
+//! Dense tensor substrate: matrices, RNG, statistics, and linear algebra.
+//!
+//! Everything downstream (the quantizer zoo, the reference transformer
+//! forward, the evaluators) is built on these primitives. The only storage
+//! type is `f32`; reduced-precision behaviour is modelled by round-tripping
+//! through [`crate::util::half`] or the quantization grids in [`crate::fmt`].
+
+pub mod linalg;
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+
+pub use matrix::Matrix;
+pub use rng::Rng;

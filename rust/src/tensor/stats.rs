@@ -1,0 +1,217 @@
+//! Statistics used throughout the paper's analysis: row/column standard
+//! deviations (the quantities Algorithm 1 normalizes), kurtosis (Fig. 2c /
+//! Fig. 7), the matrix imbalance `I(W)` (Eq. 5), quantiles, and the
+//! coefficient of determination R² (Fig. 2a / Fig. 6).
+
+use crate::tensor::Matrix;
+
+/// Mean of a slice.
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Excess-free (Pearson) kurtosis: E[(x-μ)⁴]/σ⁴. Normal = 3.
+pub fn kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let n = xs.len() as f64;
+    let m2 = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / n;
+    let m4 = xs.iter().map(|&x| (x as f64 - m).powi(4)).sum::<f64>() / n;
+    if m2 <= 0.0 {
+        0.0
+    } else {
+        m4 / (m2 * m2)
+    }
+}
+
+/// Per-row standard deviations σ_i^row(W).
+pub fn row_stds(w: &Matrix) -> Vec<f64> {
+    (0..w.rows).map(|i| std_dev(w.row(i))).collect()
+}
+
+/// Per-column standard deviations σ_j^col(W).
+pub fn col_stds(w: &Matrix) -> Vec<f64> {
+    let mut sums = vec![0.0f64; w.cols];
+    let mut sqs = vec![0.0f64; w.cols];
+    for i in 0..w.rows {
+        for (j, &v) in w.row(i).iter().enumerate() {
+            sums[j] += v as f64;
+            sqs[j] += (v as f64) * (v as f64);
+        }
+    }
+    let n = w.rows as f64;
+    sums.iter()
+        .zip(&sqs)
+        .map(|(&s, &q)| {
+            let m = s / n;
+            (q / n - m * m).max(0.0).sqrt()
+        })
+        .collect()
+}
+
+/// Mean per-row kurtosis (Fig. 2c / Fig. 7 metric).
+pub fn mean_row_kurtosis(w: &Matrix) -> f64 {
+    let ks: Vec<f64> = (0..w.rows).map(|i| kurtosis(w.row(i))).collect();
+    ks.iter().sum::<f64>() / ks.len().max(1) as f64
+}
+
+/// Matrix imbalance (Eq. 5):
+/// `I(W) = max(max_i σ_row_i, max_j σ_col_j) / min(min_i σ_row_i, min_j σ_col_j)`.
+pub fn imbalance(w: &Matrix) -> f64 {
+    let rs = row_stds(w);
+    let cs = col_stds(w);
+    let hi = rs
+        .iter()
+        .chain(cs.iter())
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    let lo = rs.iter().chain(cs.iter()).cloned().fold(f64::INFINITY, f64::min);
+    if lo <= 0.0 {
+        f64::INFINITY
+    } else {
+        hi / lo
+    }
+}
+
+/// q-quantile (0..=1) by sorting a copy (fine at our sizes).
+pub fn quantile(xs: &[f32], q: f64) -> f32 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = (pos - lo as f64) as f32;
+    v[lo] * (1.0 - frac) + v[hi] * frac
+}
+
+/// Pearson correlation of two equally-long sequences.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&a, &b) in x.iter().zip(y) {
+        sxy += (a - mx) * (b - my);
+        sxx += (a - mx) * (a - mx);
+        syy += (b - my) * (b - my);
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        0.0
+    } else {
+        sxy / (sxx * syy).sqrt()
+    }
+}
+
+/// Coefficient of determination of the best linear fit y ≈ a·x + b
+/// (equals pearson² for simple linear regression; this is the R² the paper
+/// reports between 1/σ_col and μ_x).
+pub fn r_squared(x: &[f64], y: &[f64]) -> f64 {
+    let r = pearson(x, y);
+    r * r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn std_of_constant_is_zero() {
+        assert_eq!(std_dev(&[2.0; 10]), 0.0);
+    }
+
+    #[test]
+    fn known_variance() {
+        // Population variance of [1..5] is 2.
+        let xs = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        assert!((variance(&xs) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kurtosis_of_gaussian_near_3() {
+        let mut rng = Rng::new(10);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.normal() as f32).collect();
+        let k = kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.15, "kurtosis {k}");
+    }
+
+    #[test]
+    fn kurtosis_of_heavy_tail_exceeds_3() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f32> = (0..50_000).map(|_| rng.laplace(1.0) as f32).collect();
+        assert!(kurtosis(&xs) > 4.5); // Laplace kurtosis = 6
+    }
+
+    #[test]
+    fn row_col_stds_agree_with_direct() {
+        let mut rng = Rng::new(12);
+        let w = Matrix::randn(13, 9, 2.0, &mut rng);
+        let rs = row_stds(&w);
+        let cs = col_stds(&w);
+        for i in 0..13 {
+            assert!((rs[i] - std_dev(w.row(i))).abs() < 1e-9);
+        }
+        for j in 0..9 {
+            assert!((cs[j] - std_dev(&w.col(j))).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn imbalance_of_scaled_rows_grows() {
+        let mut rng = Rng::new(13);
+        let w = Matrix::randn(16, 16, 1.0, &mut rng);
+        let base = imbalance(&w);
+        let mut scaled = w.clone();
+        scaled.scale_rows(&(0..16).map(|i| 1.0 + i as f32).collect::<Vec<_>>());
+        assert!(imbalance(&scaled) > base * 2.0);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let xs = [3.0f32, 1.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 3.0);
+        assert_eq!(quantile(&xs, 0.5), 2.0);
+    }
+
+    #[test]
+    fn r2_of_linear_relation_is_one() {
+        let x: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        assert!((r_squared(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_of_noise_is_small() {
+        let mut rng = Rng::new(14);
+        let x: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..2000).map(|_| rng.normal()).collect();
+        assert!(r_squared(&x, &y) < 0.01);
+    }
+}

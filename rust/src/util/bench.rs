@@ -1,0 +1,176 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Every `benches/*.rs` target uses `harness = false` and drives this module:
+//! warmup, adaptive iteration count targeting a wall-clock budget, and
+//! mean / std / median / min reporting. Results can be appended to a JSON
+//! lines file so `EXPERIMENTS.md` numbers are regenerable.
+
+use std::time::{Duration, Instant};
+
+/// Statistics of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    /// Throughput in "items"/second given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+/// Benchmark runner with a per-case time budget.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    pub min_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Budgets kept modest: everything runs on a single CPU core.
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(700),
+            max_iters: 10_000,
+            min_iters: 5,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            budget: Duration::from_millis(200),
+            max_iters: 2_000,
+            min_iters: 3,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one full unit of work per call.
+    /// Use `std::hint::black_box` inside `f` to defeat DCE.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        // Warmup & pilot measurement.
+        let wstart = Instant::now();
+        let mut pilot_iters = 0u32;
+        while wstart.elapsed() < self.warmup || pilot_iters == 0 {
+            f();
+            pilot_iters += 1;
+            if pilot_iters > 1000 {
+                break;
+            }
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / pilot_iters as f64;
+        let iters = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let stats = summarize(name, &mut samples);
+        println!(
+            "{:<48} {:>10.3} ms  ±{:>8.3}  (median {:.3}, min {:.3}, n={})",
+            stats.name,
+            stats.mean_ms(),
+            stats.std_ns / 1e6,
+            stats.median_ns / 1e6,
+            stats.min_ns / 1e6,
+            stats.iters
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Append results as JSON lines to `path`.
+    pub fn dump_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        for r in &self.results {
+            let j = Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("std_ns", Json::Num(r.std_ns)),
+                ("median_ns", Json::Num(r.median_ns)),
+                ("min_ns", Json::Num(r.min_ns)),
+            ]);
+            writeln!(f, "{}", j.to_string_compact())?;
+        }
+        Ok(())
+    }
+}
+
+fn summarize(name: &str, samples: &mut [f64]) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n.max(1.0);
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ns: mean,
+        std_ns: var.sqrt(),
+        median_ns: samples[samples.len() / 2],
+        min_ns: samples[0],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let mut b = Bencher::quick();
+        let s = b.bench("sleep-1ms", || {
+            std::thread::sleep(Duration::from_millis(1));
+        });
+        assert!(s.mean_ms() >= 0.9, "mean {} ms", s.mean_ms());
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn results_accumulate_and_dump() {
+        let mut b = Bencher::quick();
+        b.bench("noop-a", || {
+            std::hint::black_box(1 + 1);
+        });
+        b.bench("noop-b", || {
+            std::hint::black_box(2 + 2);
+        });
+        assert_eq!(b.results().len(), 2);
+        let tmp = std::env::temp_dir().join("sinq_bench_test.jsonl");
+        let path = tmp.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        b.dump_jsonl(path).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let _ = std::fs::remove_file(path);
+    }
+}

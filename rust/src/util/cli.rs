@@ -1,0 +1,118 @@
+//! Tiny declarative command-line flag parser (no clap offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and positional
+//! arguments. The `sinq` binary builds one [`Args`] per subcommand.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key value` flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. Boolean flags are flags followed by another flag
+    /// or end-of-line; everything else consumes the next token as its value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let toks: Vec<String> = raw.into_iter().collect();
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(stripped) = t.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    a.flags.insert(stripped.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.bools.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Numeric flag with default; panics with a clear message on junk input.
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(e) => panic!("--{key}: cannot parse '{v}': {e}"),
+            },
+        }
+    }
+
+    /// True if a boolean `--flag` was present.
+    pub fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("quantize --method sinq --bits 4 model.stz --verbose");
+        assert_eq!(a.positional, vec!["quantize", "model.stz"]);
+        assert_eq!(a.get("method", "rtn"), "sinq");
+        assert_eq!(a.num::<u32>("bits", 8), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--group-size=64 --out=x.stz");
+        assert_eq!(a.num::<usize>("group-size", 0), 64);
+        assert_eq!(a.get("out", ""), "x.stz");
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("--methods rtn,hqq,sinq");
+        assert_eq!(a.list("methods", &[]), vec!["rtn", "hqq", "sinq"]);
+        assert_eq!(a.list("bits", &["3", "4"]), vec!["3", "4"]);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse("--fast --method sinq");
+        assert!(a.has("fast"));
+        assert_eq!(a.get("method", ""), "sinq");
+    }
+}

@@ -1,0 +1,163 @@
+//! IEEE 754 binary16 (`f16`) and bfloat16 (`bf16`) conversions.
+//!
+//! The paper stores auxiliary quantization parameters (scales/shifts) either
+//! in half precision or quantized to int8 (Fig. 5a ablation). The model
+//! checkpoints written by the Python side are f32; these conversions are used
+//! when accounting memory and when round-tripping auxiliaries through reduced
+//! precision to measure the quality impact.
+
+/// Convert an `f32` to IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+
+    if exp == 0xff {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m | ((mant >> 13) as u16);
+    }
+    // Re-bias: f32 exp bias 127 -> f16 bias 15.
+    let new_exp = exp - 127 + 15;
+    if new_exp >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if new_exp <= 0 {
+        // Subnormal or zero.
+        if new_exp < -10 {
+            return sign;
+        }
+        let m = mant | 0x0080_0000; // implicit leading 1
+        let shift = (14 - new_exp) as u32;
+        let half_mant = m >> shift;
+        // round to nearest even
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded = if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant + 1
+        } else {
+            half_mant
+        };
+        return sign | rounded as u16;
+    }
+    let half_mant = (mant >> 13) as u16;
+    let rem = mant & 0x1fff;
+    let mut out = sign | ((new_exp as u16) << 10) | half_mant;
+    if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+        out = out.wrapping_add(1); // may carry into exponent: correct behaviour
+    }
+    out
+}
+
+/// Convert IEEE binary16 bits to `f32`.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: normalize.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an `f32` through binary16 precision.
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Convert an `f32` to bfloat16 bits (round-to-nearest-even).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounding = 0x7fff + lsb;
+    ((bits + rounding) >> 16) as u16
+}
+
+/// Convert bfloat16 bits to `f32`.
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round-trip an `f32` through bfloat16 precision.
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_bits_to_f32(f32_to_bf16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_round_trip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.099975586] {
+            assert_eq!(round_f16(v), v, "value {v} should be f16-exact");
+        }
+    }
+
+    #[test]
+    fn f16_handles_overflow_to_inf() {
+        assert!(round_f16(1e6).is_infinite());
+        assert!(round_f16(-1e6).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 5.96e-8f32; // near smallest f16 subnormal
+        let rt = round_f16(tiny);
+        assert!((rt - tiny).abs() / tiny < 0.5);
+        assert_eq!(round_f16(1e-12), 0.0); // flush below subnormal range
+    }
+
+    #[test]
+    fn f16_precision_error_is_bounded() {
+        // Relative error of binary16 round-trip is <= 2^-11 for normal range.
+        let mut x = 1.0e-4f32;
+        while x < 1.0e4 {
+            let rt = round_f16(x);
+            assert!(((rt - x) / x).abs() <= 1.0 / 2048.0 + 1e-7, "x={x} rt={rt}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn bf16_round_trip() {
+        for &v in &[0.0f32, 1.0, -2.5, 3.140625, 1e30, -1e-30] {
+            let rt = round_bf16(v);
+            if v == 0.0 {
+                assert_eq!(rt, 0.0);
+            } else {
+                assert!(((rt - v) / v).abs() <= 1.0 / 256.0, "v={v} rt={rt}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_nan_stays_nan() {
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+}

@@ -1,0 +1,20 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so conveniences that would normally come from crates.io
+//! (criterion, clap, rayon, serde, half) are implemented here from scratch:
+//!
+//! * [`bench`] — a criterion-style micro-benchmark harness (warmup, timed
+//!   iterations, mean/std/median reporting).
+//! * [`cli`] — a tiny declarative flag parser for the `sinq` binary.
+//! * [`half`] — IEEE binary16 and bfloat16 conversion (for auxiliary-variable
+//!   precision ablations, Fig. 5a).
+//! * [`json`] — a minimal JSON value + writer used by report emitters.
+//! * [`threadpool`] — a fixed-size worker pool with a scoped `map` used by the
+//!   quantization coordinator.
+
+pub mod bench;
+pub mod cli;
+pub mod half;
+pub mod json;
+pub mod threadpool;

@@ -1,0 +1,181 @@
+//! Fixed-size worker pool (std-only; no rayon in the offline environment).
+//!
+//! The quantization coordinator submits one job per model layer; workers pull
+//! from a shared queue so large layers do not serialize the pipeline. A scoped
+//! `map_indexed` helper preserves output order without allocation games.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// A pool of `n` OS threads executing boxed jobs from a FIFO queue.
+pub struct ThreadPool {
+    inner: Arc<Inner>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+struct Inner {
+    queue: Mutex<Queue>,
+    cond: Condvar,
+    active: AtomicUsize,
+}
+
+struct Queue {
+    jobs: std::collections::VecDeque<Box<dyn FnOnce() + Send + 'static>>,
+    shutdown: bool,
+}
+
+impl ThreadPool {
+    /// Create a pool with `n` worker threads (min 1).
+    pub fn new(n: usize) -> ThreadPool {
+        let n = n.max(1);
+        let inner = Arc::new(Inner {
+            queue: Mutex::new(Queue { jobs: Default::default(), shutdown: false }),
+            cond: Condvar::new(),
+            active: AtomicUsize::new(0),
+        });
+        let handles = (0..n)
+            .map(|i| {
+                let inner = inner.clone();
+                thread::Builder::new()
+                    .name(format!("sinq-worker-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { inner, handles }
+    }
+
+    /// Submit a job for asynchronous execution.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let mut q = self.inner.queue.lock().unwrap();
+        q.jobs.push_back(Box::new(f));
+        drop(q);
+        self.inner.cond.notify_one();
+    }
+
+    /// Block until the queue is empty and all workers are idle.
+    pub fn wait_idle(&self) {
+        loop {
+            let q = self.inner.queue.lock().unwrap();
+            let empty = q.jobs.is_empty();
+            drop(q);
+            if empty && self.inner.active.load(Ordering::SeqCst) == 0 {
+                return;
+            }
+            thread::yield_now();
+            thread::sleep(std::time::Duration::from_micros(100));
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.inner.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.inner.cond.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = inner.cond.wait(q).unwrap();
+            }
+        };
+        inner.active.fetch_add(1, Ordering::SeqCst);
+        job();
+        inner.active.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Apply `f` to each item of `items` across `threads` scoped threads,
+/// returning outputs in input order. Uses `std::thread::scope`, so `f` may
+/// borrow from the caller.
+pub fn map_indexed<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(usize, &T) -> U + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<U>>> = out.iter_mut().map(Mutex::new).collect();
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= items.len() {
+                    break;
+                }
+                let v = f(i, &items[i]);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|o| o.expect("worker produced value")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_indexed_preserves_order() {
+        let items: Vec<u64> = (0..57).collect();
+        let out = map_indexed(&items, 3, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        assert_eq!(out, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_empty() {
+        let items: Vec<u32> = vec![];
+        let out = map_indexed(&items, 4, |_, &x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        pool.submit(|| thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

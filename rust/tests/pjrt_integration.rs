@@ -1,0 +1,198 @@
+//! Integration tests across the three layers: the Rust reference forward,
+//! the PJRT-executed HLO artifacts (lowered from the JAX/Pallas stack), and
+//! the quantization pipeline. All tests require `make artifacts` and skip
+//! (with a notice) when artifacts are missing so `cargo test` stays green on
+//! a fresh checkout.
+
+use sinq::coordinator::pipeline::{self, PipelineOpts};
+use sinq::coordinator::scheduler;
+use sinq::eval::LogitsEngine;
+use sinq::model::forward::Forward;
+use sinq::quant::{AuxPrecision, Method, QuantConfig};
+use sinq::report::tables::Ctx;
+use sinq::runtime::{PjrtDecoder, PjrtForward, PjrtRuntime};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn rust_forward_matches_pjrt_artifact() {
+    require_artifacts!();
+    let rt = PjrtRuntime::cpu("artifacts").unwrap();
+    let mw = scheduler::load_family_member("artifacts", "pico").unwrap();
+    let mut pjrt = PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors).unwrap();
+    let rust_fwd = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+
+    let tokens = b"The ancient river describes the empire of history.";
+    let l_pjrt = pjrt.logits(tokens).unwrap();
+    let l_rust = rust_fwd.forward(tokens, None);
+    assert_eq!((l_pjrt.rows, l_pjrt.cols), (l_rust.rows, l_rust.cols));
+    let mut max_diff = 0.0f32;
+    for (a, b) in l_pjrt.data.iter().zip(&l_rust.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    // Same math, different op orders: agreement to ~1e-3 logits.
+    assert!(max_diff < 2e-2, "rust vs PJRT logits max diff {max_diff}");
+}
+
+#[test]
+fn rust_forward_matches_pjrt_artifact_moe() {
+    require_artifacts!();
+    let rt = PjrtRuntime::cpu("artifacts").unwrap();
+    let mw = scheduler::load_family_member("artifacts", "tiny_moe").unwrap();
+    let mut pjrt = PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors).unwrap();
+    let rust_fwd = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+    let tokens = b"Top 12 systems for physics.";
+    let l_pjrt = pjrt.logits(tokens).unwrap();
+    let l_rust = rust_fwd.forward(tokens, None);
+    let mut max_diff = 0.0f32;
+    for (a, b) in l_pjrt.data.iter().zip(&l_rust.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 5e-2, "moe rust vs PJRT max diff {max_diff}");
+}
+
+#[test]
+fn decode_artifact_matches_full_forward() {
+    require_artifacts!();
+    let rt = PjrtRuntime::cpu("artifacts").unwrap();
+    let mw = scheduler::load_family_member("artifacts", "pico").unwrap();
+    let mut fwd = PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors).unwrap();
+    let mut dec = PjrtDecoder::new_fp(&rt, &mw.cfg, &mw.tensors, &mw.vectors).unwrap();
+
+    let tokens = b"hello decode";
+    let full = fwd.logits(tokens).unwrap();
+    let mut last = Vec::new();
+    for &t in tokens.iter() {
+        last = dec.step(t).unwrap();
+    }
+    // Compare final-position logits.
+    let frow = full.row(tokens.len() - 1);
+    let mut max_diff = 0.0f32;
+    for (a, b) in frow.iter().zip(&last) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 2e-2, "decode vs forward max diff {max_diff}");
+}
+
+#[test]
+fn w4_decode_matches_effective_weight_forward() {
+    require_artifacts!();
+    let rt = PjrtRuntime::cpu("artifacts").unwrap();
+    let mw = scheduler::load_family_member("artifacts", "tiny").unwrap();
+    let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
+    let qm = scheduler::quantize_simple(&mw, &qcfg, None).unwrap();
+
+    // Eq. 7 equivalence: the W4 decode (Pallas fused dequant-matmul on int4
+    // codes) must compute the same function as the f32 forward over the
+    // *effective* (dequantized) weights.
+    let eff = qm.effective_weights();
+    let mut eff_fwd = PjrtForward::new(&rt, &mw.cfg, &eff, &qm.fvectors).unwrap();
+    let mut w4 =
+        PjrtDecoder::new_w4(&rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors).unwrap();
+    let prompt = b"The quiet market";
+    let full = eff_fwd.logits(prompt).unwrap();
+    let mut l_w4 = Vec::new();
+    for &t in prompt.iter() {
+        l_w4 = w4.step(t).unwrap();
+    }
+    let frow = full.row(prompt.len() - 1);
+    let mut max_diff = 0.0f32;
+    for (a, b) in frow.iter().zip(&l_w4) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 5e-2, "W4 decode vs effective forward max diff {max_diff}");
+}
+
+#[test]
+fn pjrt_sinq_quantize_matches_rust() {
+    require_artifacts!();
+    let rt = PjrtRuntime::cpu("artifacts").unwrap();
+    let mw = scheduler::load_family_member("artifacts", "tiny").unwrap();
+    let w = &mw.tensors["layers.0.wq"]; // 128×128, covered by the artifacts
+    let q_pjrt = pipeline::sinq_quantize_pjrt(&rt, w).unwrap();
+    let mut cfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
+    cfg.sinq_iters = 24;
+    cfg.sinq_clamp = (0.5, 2.0);
+    let q_rust = sinq::quant::sinq::quantize(w, &cfg);
+
+    // The two implementations share the algorithm; fp noise may flip a code
+    // occasionally, so compare reconstructions rather than raw codes.
+    let (da, db) = (q_pjrt.dequantize(), q_rust.dequantize());
+    let rel = da.dist(&db)
+        / w.data.iter().map(|&x| x * x).sum::<f32>().sqrt();
+    assert!(rel < 2e-2, "pjrt vs rust sinq reconstruction rel diff {rel}");
+    // And both reconstruct the layer well.
+    assert!(da.mse(w) < 1e-4, "pjrt sinq mse {}", da.mse(w));
+}
+
+#[test]
+fn quantize_save_load_eval_round_trip() {
+    require_artifacts!();
+    let ctx = Ctx::new("artifacts", true).unwrap();
+    let mw = ctx.load_model("pico").unwrap();
+    let cfg = QuantConfig::new(Method::Sinq, 4);
+    let path = std::env::temp_dir().join("sinq_integration_qm.stz");
+    let (qm, _) =
+        pipeline::run_and_save(&mw, &cfg, &PipelineOpts::default(), &path).unwrap();
+    let back = sinq::model::QuantizedModel::load(&path).unwrap();
+    let eff_a = qm.effective_weights();
+    let eff_b = back.effective_weights();
+    let ppl_a = ctx.ppl_eff(&mw, &eff_a, &qm.fvectors, "wiki").unwrap();
+    let ppl_b = ctx.ppl_eff(&mw, &eff_b, &back.fvectors, "wiki").unwrap();
+    assert!((ppl_a - ppl_b).abs() < 1e-6, "ppl drift across save/load: {ppl_a} vs {ppl_b}");
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn batch_server_scores_concurrently() {
+    require_artifacts!();
+    use sinq::coordinator::server::BatchServer;
+    let server = BatchServer::spawn(
+        || {
+            let rt = PjrtRuntime::cpu("artifacts")?;
+            let mw = scheduler::load_family_member("artifacts", "pico")?;
+            PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)
+        },
+        16,
+        std::time::Duration::from_millis(2),
+    );
+    let client = server.client();
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            let c = client.clone();
+            std::thread::spawn(move || {
+                let toks = format!("request number {i} padded out to length");
+                c.score(toks.into_bytes()).map(|m| m.rows)
+            })
+        })
+        .collect();
+    for h in handles {
+        let rows = h.join().unwrap().unwrap();
+        assert!(rows > 10);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.batches <= 12, "batching should aggregate at least sometimes");
+}
+
+#[test]
+fn no_overhead_fold_preserves_fp_ppl_through_pjrt() {
+    require_artifacts!();
+    let ctx = Ctx::new("artifacts", true).unwrap();
+    let mw = ctx.load_model("pico").unwrap();
+    let folded = sinq::model::fold::fold_model(&mw, 16, (0.5, 2.0));
+    let a = ctx.ppl_fp(&mw, "wiki").unwrap();
+    let b = ctx.ppl_eff(&mw, &folded.tensors, &folded.vectors, "wiki").unwrap();
+    assert!((a - b).abs() / a < 1e-3, "fold changed FP ppl: {a} vs {b}");
+}
