@@ -1,38 +1,50 @@
-//! Serving demo: dynamic batching router + autoregressive decode.
+//! Serving demo: dynamic batching router + autoregressive decode on the
+//! **native** backend — runs on any machine with zero artifacts (a
+//! synthetic checkpoint/corpus stand in when `artifacts/` is absent).
 //!
-//! Spawns the [`BatchServer`] (scoring requests batched 4-way into one PJRT
-//! execution), fires concurrent clients at it, then runs a W16-vs-W4 decode
-//! comparison — the Table 6 workload in miniature.
+//! Part 1 spawns the [`BatchServer`] over a SINQ-4bit [`NativeBackend`]
+//! (scoring requests batched through the fused dequant-matmul kernels) and
+//! fires concurrent clients at it. Part 2 compares autoregressive decode
+//! throughput, f32 dense vs fused W4 — the Table 6 workload in miniature,
+//! no XLA required.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serving
+//! cargo run --release --example serving            # works without artifacts
 //! ```
 
 use std::time::{Duration, Instant};
 
-use sinq::coordinator::scheduler;
+use sinq::backend::{InferenceBackend, NativeBackend};
+use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::coordinator::server::BatchServer;
-use sinq::quant::{AuxPrecision, Method, QuantConfig};
-use sinq::runtime::{PjrtDecoder, PjrtForward, PjrtRuntime};
+use sinq::data::Corpus;
+use sinq::quant::{Method, QuantConfig};
 
 fn main() -> anyhow::Result<()> {
     let art = "artifacts";
     let model = "tiny";
 
+    // Quantize once; NativeBackend is plain data, so the same packed model
+    // feeds both the router (Part 1) and the decode comparison (Part 2).
+    let mw = load_or_synthetic(art, model, 42);
+    let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None)?;
+    let mut w4 = NativeBackend::from_quantized(&qm);
+    println!(
+        "quantized: {}/{} linears packed (SINQ 4-bit)",
+        w4.quantized_layer_count(),
+        mw.cfg.quantizable_names().len()
+    );
+
     // --- Part 1: batched scoring through the router ---------------------
     let server = BatchServer::spawn(
         {
-            let (art, model) = (art.to_string(), model.to_string());
-            move || {
-                let rt = PjrtRuntime::cpu(&art)?;
-                let mw = scheduler::load_family_member(&art, &model)?;
-                PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)
-            }
+            let qm = qm.clone();
+            move || Ok(NativeBackend::from_quantized(&qm))
         },
         64,
         Duration::from_millis(4),
     );
-    let corpus = sinq::data::Corpus::load(art, "wiki", "eval")?;
+    let corpus = Corpus::load_or_synthetic(art, "wiki", "eval");
     let windows: Vec<Vec<u8>> =
         corpus.eval_windows(128, 32).into_iter().map(|w| w.to_vec()).collect();
     let client = server.client();
@@ -50,29 +62,26 @@ fn main() -> anyhow::Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
     println!(
-        "router: {} requests in {} batches (avg {:.2}/batch), {:.0} tok/s",
+        "router (native W4): {} requests in {} batches (avg {:.2}/batch), {:.0} tok/s",
         stats.requests,
         stats.batches,
         stats.requests as f64 / stats.batches.max(1) as f64,
         stats.tokens as f64 / secs,
     );
 
-    // --- Part 2: decode loop, FP vs W4A16 -------------------------------
-    let rt = PjrtRuntime::cpu(art)?;
-    let mw = scheduler::load_family_member(art, model)?;
+    // --- Part 2: decode loop, FP32 dense vs fused W4 --------------------
     let prompt = &corpus.data[..64];
+    let gen_tokens = 64usize;
+    let total = (prompt.len() + gen_tokens) as f64;
 
-    let mut dec = PjrtDecoder::new_fp(&rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+    let mut fp = NativeBackend::from_weights(&mw);
     let t0 = Instant::now();
-    let out_fp = dec.generate(prompt, 64)?;
-    let fp_tps = 128.0 / t0.elapsed().as_secs_f64();
+    let out_fp = fp.generate(prompt, gen_tokens)?;
+    let fp_tps = total / t0.elapsed().as_secs_f64();
 
-    let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
-    let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
-    let mut dec4 = PjrtDecoder::new_w4(&rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors)?;
     let t0 = Instant::now();
-    let out_w4 = dec4.generate(prompt, 64)?;
-    let w4_tps = 128.0 / t0.elapsed().as_secs_f64();
+    let out_w4 = w4.generate(prompt, gen_tokens)?;
+    let w4_tps = total / t0.elapsed().as_secs_f64();
 
     println!("decode fp32:   {fp_tps:.0} tok/s  → {:?}", String::from_utf8_lossy(&out_fp[..32]));
     println!("decode W4A16:  {w4_tps:.0} tok/s  → {:?}", String::from_utf8_lossy(&out_w4[..32]));

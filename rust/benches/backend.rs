@@ -1,0 +1,104 @@
+//! Fused dequant-matmul vs dequantize-then-matmul across bit widths — the
+//! native backend's reason to exist, measured.
+//!
+//! For each `bits ∈ {2, 3, 4, 8}` on the tiny model's largest linear shape
+//! (ffn×d = 512×128) this times:
+//!
+//! * `fused`    — `QuantizedTensor::dequant_matmul` (tile-wise unpack +
+//!   multiply in one pass, codes stay packed);
+//! * `baseline` — materialize the full f32 weight matrix (`to_dense`) then
+//!   `matmul_nt`, i.e. what `model/forward.rs` over effective weights does;
+//! * the same pair for the single-vector decode path (`dequant_matvec`).
+//!
+//! Results append to `artifacts/bench_backend.jsonl` (raw samples) and a
+//! summary with fused-vs-baseline speedups is written to
+//! `BENCH_backend.json` at the repository root for the perf trajectory.
+//!
+//! Run with `cargo bench --bench backend`.
+
+use sinq::backend::QuantizedTensor;
+use sinq::quant::{quantize_matrix, Method, QuantConfig};
+use sinq::tensor::{Matrix, Rng};
+use sinq::util::bench::Bencher;
+use sinq::util::json::Json;
+use std::hint::black_box;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(2025);
+
+    // Tiny-model shapes: x is a 128-token window of d=128 activations; W is
+    // the ffn→d projection (512×128), the model's largest linear.
+    let (seq, d, ffn) = (128usize, 128usize, 512usize);
+    let x = Matrix::randn(seq, d, 1.0, &mut rng);
+    let xv = x.row(0).to_vec();
+    let w = Matrix::randn(ffn, d, 0.05, &mut rng);
+
+    let mut summary: Vec<Json> = Vec::new();
+    for bits in [2u32, 3, 4, 8] {
+        let cfg = QuantConfig::new(Method::Sinq, bits);
+        let q = quantize_matrix(&w, &cfg, None).expect("quantize");
+        let qt = QuantizedTensor::from_linear(&q).expect("packable");
+
+        // Sanity: fused and baseline agree before we time them.
+        let dense = qt.to_dense();
+        let y_fused = qt.dequant_matmul(&x, 1);
+        let y_base = x.matmul_nt(&dense);
+        let max_diff = y_fused
+            .data
+            .iter()
+            .zip(&y_base.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "{bits}b fused/baseline disagree: {max_diff}");
+
+        let fused = b.bench(&format!("dequant_matmul fused {bits}b 128x128·(512x128)ᵀ"), || {
+            black_box(qt.dequant_matmul(&x, 1));
+        });
+        let base = b.bench(&format!("dequantize-then-matmul {bits}b"), || {
+            let dense = qt.to_dense();
+            black_box(x.matmul_nt(&dense));
+        });
+        let fused_mv = b.bench(&format!("dequant_matvec fused {bits}b 512x128"), || {
+            black_box(qt.dequant_matvec(&xv));
+        });
+        let base_mv = b.bench(&format!("dequantize-then-matvec {bits}b"), || {
+            let dense = qt.to_dense();
+            let xr = Matrix::from_vec(1, d, xv.clone());
+            black_box(xr.matmul_nt(&dense));
+        });
+
+        let speedup = base.mean_ns / fused.mean_ns;
+        let speedup_mv = base_mv.mean_ns / fused_mv.mean_ns;
+        println!(
+            "    -> {bits}b: matmul speedup {speedup:.2}x, matvec speedup {speedup_mv:.2}x, \
+             packed {} KiB vs dense {} KiB",
+            qt.packed_bytes() / 1024,
+            (ffn * d * 4) / 1024,
+        );
+        summary.push(Json::obj(vec![
+            ("bits", Json::Num(bits as f64)),
+            ("fused_matmul_ns", Json::Num(fused.mean_ns)),
+            ("baseline_matmul_ns", Json::Num(base.mean_ns)),
+            ("matmul_speedup", Json::Num(speedup)),
+            ("fused_matvec_ns", Json::Num(fused_mv.mean_ns)),
+            ("baseline_matvec_ns", Json::Num(base_mv.mean_ns)),
+            ("matvec_speedup", Json::Num(speedup_mv)),
+            ("packed_bytes", Json::Num(qt.packed_bytes() as f64)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("backend".to_string())),
+        ("shape", Json::Str(format!("x({seq},{d}) · W({ffn},{d})ᵀ"))),
+        ("method", Json::Str("sinq".to_string())),
+        ("results", Json::Arr(summary)),
+    ]);
+    // Repo root, resolved from the package dir so cwd does not matter.
+    let out = format!("{}/../BENCH_backend.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&out, report.to_string_compact()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+    let _ = b.dump_jsonl("artifacts/bench_backend.jsonl");
+}

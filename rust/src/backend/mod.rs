@@ -1,0 +1,225 @@
+//! Inference backends: one trait, two engines.
+//!
+//! [`InferenceBackend`] abstracts "a thing that turns token sequences into
+//! logits (and optionally generates)", so the serving coordinator, the
+//! evaluators, and the CLI dispatch without caring what executes the model:
+//!
+//! * [`NativeBackend`] — pure Rust, runs **directly on bit-packed SINQ/RTN
+//!   weights** via the fused kernels in [`quantized`]; works on any box
+//!   with zero artifacts, zero XLA, zero Python.
+//! * [`crate::runtime::PjrtForward`] — executes AOT-compiled HLO artifacts
+//!   through PJRT (requires `make artifacts` and a real `xla` binding).
+//!
+//! [`build`] is the one-stop factory the CLI's `--backend native|pjrt` flag
+//! resolves through; it handles checkpoint loading (with a synthetic-model
+//! fallback so fresh machines still run), `.stz` quantized models, and
+//! on-the-fly quantization via the coordinator pipeline.
+
+pub mod native;
+pub mod quantized;
+
+pub use native::{NativeBackend, NativeDecoder};
+pub use quantized::QuantizedTensor;
+
+use crate::coordinator::{pipeline, scheduler};
+use crate::data::Corpus;
+use crate::eval::LogitsEngine;
+use crate::model::QuantizedModel;
+use crate::quant::QuantConfig;
+use crate::runtime::{PjrtForward, PjrtRuntime};
+use crate::tensor::Matrix;
+
+/// A model execution engine: scoring (logits) plus optional generation.
+///
+/// Extends [`LogitsEngine`] (single-sequence scoring) with the batch and
+/// decode entry points the serving path needs. Implementations must be
+/// deterministic for a fixed weight set.
+pub trait InferenceBackend: LogitsEngine {
+    /// Short identifier ("native", "pjrt") for logs and error messages.
+    fn name(&self) -> &'static str;
+
+    /// Largest batch `forward_batch` can exploit; the dynamic batcher
+    /// groups up to this many requests per dispatch.
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    /// Score a batch of sequences. The default loops `logits`; backends
+    /// with true batched execution override it.
+    fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        seqs.iter().map(|s| self.logits(s)).collect()
+    }
+
+    /// Greedy autoregressive generation from a prompt.
+    fn generate(&mut self, _prompt: &[u8], _n: usize) -> anyhow::Result<Vec<u8>> {
+        anyhow::bail!("backend '{}' does not support autoregressive generation", self.name())
+    }
+}
+
+impl<T: InferenceBackend + ?Sized> LogitsEngine for Box<T> {
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        (**self).logits(tokens)
+    }
+
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+}
+
+impl<T: InferenceBackend + ?Sized> InferenceBackend for Box<T> {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn max_batch(&self) -> usize {
+        (**self).max_batch()
+    }
+
+    fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        (**self).forward_batch(seqs)
+    }
+
+    fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        (**self).generate(prompt, n)
+    }
+}
+
+/// Which engine executes the model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust fused-kernel engine (default; artifact-free).
+    Native,
+    /// PJRT execution of AOT artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Everything [`build`] needs to assemble a backend. Plain data
+/// (`Clone + Send`) so it can cross into the serving thread.
+#[derive(Debug, Clone)]
+pub struct BackendSpec {
+    pub kind: BackendKind,
+    pub art_dir: String,
+    pub model: String,
+    /// Load a pre-quantized `.stz` model instead of the f32 checkpoint.
+    pub quantized: Option<String>,
+    /// Quantize the checkpoint in-process before serving (native only).
+    pub quantize: Option<QuantConfig>,
+}
+
+impl BackendSpec {
+    pub fn new(kind: BackendKind, art_dir: &str, model: &str) -> BackendSpec {
+        BackendSpec {
+            kind,
+            art_dir: art_dir.to_string(),
+            model: model.to_string(),
+            quantized: None,
+            quantize: None,
+        }
+    }
+}
+
+/// Build the backend described by `spec`.
+pub fn build(spec: &BackendSpec) -> anyhow::Result<Box<dyn InferenceBackend>> {
+    match spec.kind {
+        BackendKind::Native => {
+            if let Some(path) = &spec.quantized {
+                let qm = QuantizedModel::load(path)?;
+                return Ok(Box::new(NativeBackend::from_quantized(&qm)));
+            }
+            let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
+            if let Some(qcfg) = &spec.quantize {
+                let calib = if qcfg.method.needs_calibration() {
+                    let c = Corpus::load_or_synthetic(&spec.art_dir, "wiki", "train");
+                    Some(c.data[..768.min(c.data.len())].to_vec())
+                } else {
+                    None
+                };
+                let opts = pipeline::PipelineOpts {
+                    schedule: scheduler::ScheduleOpts {
+                        threads: 2,
+                        calib_sample: calib,
+                        verbose: false,
+                    },
+                    no_overhead: false,
+                };
+                return Ok(Box::new(pipeline::run_to_backend(&mw, qcfg, &opts)?));
+            }
+            Ok(Box::new(NativeBackend::from_weights(&mw)))
+        }
+        BackendKind::Pjrt => {
+            anyhow::ensure!(
+                spec.quantize.is_none(),
+                "on-the-fly quantization is only supported by the native backend; \
+                 quantize to .stz first and pass it via `quantized`"
+            );
+            let rt = PjrtRuntime::cpu(&spec.art_dir)?;
+            let mw = scheduler::load_family_member(&spec.art_dir, &spec.model)?;
+            let fwd = if let Some(path) = &spec.quantized {
+                let qm = QuantizedModel::load(path)?;
+                let eff = qm.effective_weights();
+                PjrtForward::new(&rt, &mw.cfg, &eff, &qm.fvectors)?
+            } else {
+                PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)?
+            };
+            Ok(Box::new(fwd))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::Method;
+
+    #[test]
+    fn kind_parse_round_trip() {
+        for k in [BackendKind::Native, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn build_native_without_artifacts() {
+        let spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+        let mut be = build(&spec).unwrap();
+        assert_eq!(be.name(), "native");
+        let logits = be.logits(b"hello backend").unwrap();
+        assert_eq!((logits.rows, logits.cols), (13, 256));
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn build_native_quantized_on_the_fly() {
+        let mut spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+        spec.quantize = Some(QuantConfig::new(Method::Sinq, 4));
+        let mut be = build(&spec).unwrap();
+        let logits = be.logits(b"quantized").unwrap();
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        let gen = be.generate(b"abc", 4).unwrap();
+        assert_eq!(gen.len(), 4);
+    }
+
+    #[test]
+    fn build_unknown_model_errors() {
+        let spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "qwen3");
+        assert!(build(&spec).is_err());
+    }
+}

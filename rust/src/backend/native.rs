@@ -1,0 +1,690 @@
+//! The native inference engine: a pure-Rust transformer forward/decode that
+//! executes **directly on packed quantized weights**.
+//!
+//! Where [`crate::model::forward::Forward`] is the f32 reference (it wants a
+//! map of dense effective weights), [`NativeBackend`] holds each linear as a
+//! [`LayerWeight`] — either a dense matrix or a bit-packed
+//! [`QuantizedTensor`] — and routes every projection through the fused
+//! dequant kernels. The layer-by-layer math (RMSNorm → RoPE MHA → residual →
+//! SwiGLU / switch-MoE → residual → final norm → lm_head) mirrors the
+//! reference operation-for-operation so logits agree to float tolerance.
+//!
+//! [`NativeDecoder`] adds the autoregressive path: per-layer K/V caches are
+//! preallocated at construction and each step runs single-row matvecs
+//! against the packed weights — `generate` needs no artifacts, no XLA, and
+//! no Python.
+
+use std::collections::BTreeMap;
+
+use crate::backend::quantized::QuantizedTensor;
+use crate::backend::InferenceBackend;
+use crate::eval::LogitsEngine;
+use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
+use crate::model::{ModelConfig, ModelWeights, QuantizedModel};
+use crate::tensor::matrix::dot;
+use crate::tensor::Matrix;
+use crate::util::threadpool;
+
+/// One linear layer's runtime representation.
+#[derive(Debug, Clone)]
+pub enum LayerWeight {
+    /// Dense f32 (embeddings, FP serving, or fallback for representations
+    /// the fused kernels cannot execute, e.g. Hadamard-rotated storage).
+    Dense(Matrix),
+    /// Bit-packed quantized weights executed by the fused kernels.
+    Quant(QuantizedTensor),
+}
+
+impl LayerWeight {
+    pub fn out_features(&self) -> usize {
+        match self {
+            LayerWeight::Dense(w) => w.rows,
+            LayerWeight::Quant(q) => q.rows,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self, LayerWeight::Quant(_))
+    }
+
+    /// `y = x · Wᵀ` for a batch of activation rows.
+    fn matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        match self {
+            LayerWeight::Dense(w) => x.matmul_nt(w),
+            LayerWeight::Quant(q) => q.dequant_matmul(x, threads),
+        }
+    }
+
+    /// `y = W · x` for one activation vector.
+    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        match self {
+            LayerWeight::Dense(w) => (0..w.rows).map(|r| dot(x, w.row(r), x.len())).collect(),
+            LayerWeight::Quant(q) => q.dequant_matvec(x),
+        }
+    }
+}
+
+/// Pure-Rust inference backend over dense or packed-quantized weights.
+pub struct NativeBackend {
+    pub cfg: ModelConfig,
+    layers: BTreeMap<String, LayerWeight>,
+    vectors: BTreeMap<String, Vec<f32>>,
+    /// Worker threads for the fused matmul tiles.
+    pub threads: usize,
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+impl NativeBackend {
+    /// FP backend: every weight dense f32 (bitwise-identical math to the
+    /// reference forward — the `--backend native` baseline).
+    pub fn from_weights(mw: &ModelWeights) -> NativeBackend {
+        let layers = mw
+            .tensors
+            .iter()
+            .map(|(n, m)| (n.clone(), LayerWeight::Dense(m.clone())))
+            .collect();
+        NativeBackend {
+            cfg: mw.cfg.clone(),
+            layers,
+            vectors: mw.vectors.clone(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Quantized backend: packs every packable layer; Hadamard/codebook
+    /// layers fall back to a dense dequantized copy so any `.stz` serves.
+    pub fn from_quantized(qm: &QuantizedModel) -> NativeBackend {
+        let mut layers: BTreeMap<String, LayerWeight> = qm
+            .fweights
+            .iter()
+            .map(|(n, m)| (n.clone(), LayerWeight::Dense(m.clone())))
+            .collect();
+        for (n, q) in &qm.layers {
+            let lw = match QuantizedTensor::from_linear(q) {
+                Some(t) => LayerWeight::Quant(t),
+                None => LayerWeight::Dense(q.effective_weight()),
+            };
+            layers.insert(n.clone(), lw);
+        }
+        NativeBackend {
+            cfg: qm.cfg.clone(),
+            layers,
+            vectors: qm.fvectors.clone(),
+            threads: default_threads(),
+        }
+    }
+
+    /// How many linears run on packed codes (vs dense fallback).
+    pub fn quantized_layer_count(&self) -> usize {
+        self.layers.values().filter(|l| l.is_quantized()).count()
+    }
+
+    fn layer(&self, name: &str) -> anyhow::Result<&LayerWeight> {
+        self.layers
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("native backend missing weight '{name}'"))
+    }
+
+    fn gain(&self, name: &str) -> anyhow::Result<&[f32]> {
+        self.vectors
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("native backend missing vector '{name}'"))
+    }
+
+    fn linear(&self, name: &str, x: &Matrix, threads: usize) -> anyhow::Result<Matrix> {
+        Ok(self.layer(name)?.matmul(x, threads))
+    }
+
+    fn embedding(&self) -> anyhow::Result<&Matrix> {
+        match self.layer("embed")? {
+            LayerWeight::Dense(m) => Ok(m),
+            LayerWeight::Quant(_) => anyhow::bail!("embedding table must stay dense"),
+        }
+    }
+
+    /// Full-sequence forward: `tokens` (length S) → logits `(S, vocab)`.
+    /// Mirrors `model::forward::Forward::forward` with linears dispatched
+    /// through [`LayerWeight`].
+    pub fn forward(&self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        self.forward_with(tokens, self.threads)
+    }
+
+    /// [`NativeBackend::forward`] with an explicit tile-thread count —
+    /// `forward_batch` runs one sequence per worker with `threads = 1` so
+    /// total concurrency stays at the pool width.
+    fn forward_with(&self, tokens: &[u8], threads: usize) -> anyhow::Result<Matrix> {
+        anyhow::ensure!(!tokens.is_empty(), "empty token sequence");
+        let cfg = &self.cfg;
+        let s = tokens.len();
+        let d = cfg.d;
+        let hd = cfg.head_dim();
+
+        let embed = self.embedding()?;
+        let mut h = Matrix::zeros(s, d);
+        for (p, &tok) in tokens.iter().enumerate() {
+            h.row_mut(p).copy_from_slice(embed.row(tok as usize));
+        }
+
+        let half = hd / 2;
+        let mut cos = Matrix::zeros(s, half);
+        let mut sin = Matrix::zeros(s, half);
+        for p in 0..s {
+            for i in 0..half {
+                let inv = (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64);
+                let ang = p as f64 * inv;
+                *cos.at_mut(p, i) = ang.cos() as f32;
+                *sin.at_mut(p, i) = ang.sin() as f32;
+            }
+        }
+
+        for l in 0..cfg.layers {
+            let pre = format!("layers.{l}");
+            // --- Attention block ---
+            let x = rmsnorm(&h, self.gain(&format!("{pre}.ln1"))?, cfg.eps);
+            let q = self.linear(&format!("{pre}.wq"), &x, threads)?;
+            let k = self.linear(&format!("{pre}.wk"), &x, threads)?;
+            let v = self.linear(&format!("{pre}.wv"), &x, threads)?;
+            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+
+            let mut ctx = Matrix::zeros(s, d);
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut att_row = vec![0.0f32; s];
+            for head in 0..cfg.heads {
+                let off = head * hd;
+                for qi in 0..s {
+                    let qrow = &q.row(qi)[off..off + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (ki, a) in att_row.iter_mut().enumerate().take(qi + 1) {
+                        let krow = &k.row(ki)[off..off + hd];
+                        let mut dotv = 0.0f32;
+                        for t in 0..hd {
+                            dotv += qrow[t] * krow[t];
+                        }
+                        *a = dotv * scale;
+                        maxv = maxv.max(*a);
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att_row.iter_mut().take(qi + 1) {
+                        *a = (*a - maxv).exp();
+                        denom += *a;
+                    }
+                    let out = ctx.row_mut(qi);
+                    for ki in 0..=qi {
+                        let wgt = att_row[ki] / denom;
+                        let vrow = &v.row(ki)[off..off + hd];
+                        for t in 0..hd {
+                            out[off + t] += wgt * vrow[t];
+                        }
+                    }
+                }
+            }
+            let o = self.linear(&format!("{pre}.wo"), &ctx, threads)?;
+            add_inplace(&mut h, &o);
+
+            // --- MLP block ---
+            let x = rmsnorm(&h, self.gain(&format!("{pre}.ln2"))?, cfg.eps);
+            let y = if cfg.n_experts == 0 {
+                let g = self.linear(&format!("{pre}.wg"), &x, threads)?;
+                let u = self.linear(&format!("{pre}.wu"), &x, threads)?;
+                let mut act = Matrix::zeros(s, cfg.ffn);
+                for i in 0..s * cfg.ffn {
+                    act.data[i] = silu(g.data[i]) * u.data[i];
+                }
+                self.linear(&format!("{pre}.wd"), &act, threads)?
+            } else {
+                self.moe(&x, &pre, threads)?
+            };
+            add_inplace(&mut h, &y);
+        }
+
+        let hf = rmsnorm(&h, self.gain("ln_f")?, cfg.eps);
+        self.linear("lm_head", &hf, threads)
+    }
+
+    fn moe(&self, x: &Matrix, pre: &str, threads: usize) -> anyhow::Result<Matrix> {
+        let cfg = &self.cfg;
+        let logits = self.linear(&format!("{pre}.router"), x, threads)?;
+        let mut out = Matrix::zeros(x.rows, cfg.d);
+        for i in 0..x.rows {
+            let row = logits.row(i);
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let (top, _) = exps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let gate = exps[top] / denom;
+
+            let xr = Matrix::from_vec(1, x.cols, x.row(i).to_vec());
+            let g = self.linear(&format!("{pre}.expert{top}.wg"), &xr, threads)?;
+            let u = self.linear(&format!("{pre}.expert{top}.wu"), &xr, threads)?;
+            let mut act = Matrix::zeros(1, cfg.ffn);
+            for j in 0..cfg.ffn {
+                act.data[j] = silu(g.data[j]) * u.data[j];
+            }
+            let y = self.linear(&format!("{pre}.expert{top}.wd"), &act, threads)?;
+            for (o, &yv) in out.row_mut(i).iter_mut().zip(y.row(0)) {
+                *o = gate * yv;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl LogitsEngine for NativeBackend {
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        self.forward(tokens)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+impl InferenceBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        if seqs.len() <= 1 {
+            return seqs.iter().map(|s| self.forward(s)).collect();
+        }
+        // One worker per sequence; per-sequence tile parallelism is disabled
+        // so total concurrency stays at the pool width.
+        let be = &*self;
+        threadpool::map_indexed(seqs, self.threads, |_, s| be.forward_with(s, 1))
+            .into_iter()
+            .collect()
+    }
+
+    fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        let mut dec = NativeDecoder::new(self, prompt.len() + n + 1)?;
+        dec.generate(prompt, n)
+    }
+}
+
+/// Per-MLP (dense or one expert) weight references resolved at build time.
+struct MlpWeights<'a> {
+    wg: &'a LayerWeight,
+    wu: &'a LayerWeight,
+    wd: &'a LayerWeight,
+}
+
+enum MlpRefs<'a> {
+    Dense(MlpWeights<'a>),
+    Moe { router: &'a LayerWeight, experts: Vec<MlpWeights<'a>> },
+}
+
+/// One layer's weights, resolved once so the per-token loop does no name
+/// formatting or map lookups.
+struct DecoderLayer<'a> {
+    ln1: &'a [f32],
+    ln2: &'a [f32],
+    wq: &'a LayerWeight,
+    wk: &'a LayerWeight,
+    wv: &'a LayerWeight,
+    wo: &'a LayerWeight,
+    mlp: MlpRefs<'a>,
+}
+
+/// Autoregressive decoder with preallocated per-layer K/V caches.
+///
+/// Every weight/gain reference and the rotary frequency table are resolved
+/// once at construction; `step` — the decode hot path — touches only
+/// resolved references and the fused matvec kernels.
+pub struct NativeDecoder<'a> {
+    cfg: &'a ModelConfig,
+    embed: &'a Matrix,
+    ln_f: &'a [f32],
+    lm_head: &'a LayerWeight,
+    layers: Vec<DecoderLayer<'a>>,
+    /// Rotary inverse frequencies, length `head_dim / 2`.
+    inv_freq: Vec<f64>,
+    /// Per-layer key cache, shape `(capacity, d)`.
+    kcache: Vec<Matrix>,
+    /// Per-layer value cache, shape `(capacity, d)`.
+    vcache: Vec<Matrix>,
+    pub pos: usize,
+    capacity: usize,
+}
+
+impl<'a> NativeDecoder<'a> {
+    /// Resolve every weight reference and preallocate caches for
+    /// `capacity` positions; errors if the backend is missing a weight.
+    pub fn new(be: &'a NativeBackend, capacity: usize) -> anyhow::Result<NativeDecoder<'a>> {
+        let cfg = &be.cfg;
+        let mlp_refs = |pre: &str| -> anyhow::Result<MlpWeights<'a>> {
+            Ok(MlpWeights {
+                wg: be.layer(&format!("{pre}.wg"))?,
+                wu: be.layer(&format!("{pre}.wu"))?,
+                wd: be.layer(&format!("{pre}.wd"))?,
+            })
+        };
+        let mut layers = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let pre = format!("layers.{l}");
+            let mlp = if cfg.n_experts == 0 {
+                MlpRefs::Dense(mlp_refs(&pre)?)
+            } else {
+                MlpRefs::Moe {
+                    router: be.layer(&format!("{pre}.router"))?,
+                    experts: (0..cfg.n_experts)
+                        .map(|e| mlp_refs(&format!("{pre}.expert{e}")))
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                }
+            };
+            layers.push(DecoderLayer {
+                ln1: be.gain(&format!("{pre}.ln1"))?,
+                ln2: be.gain(&format!("{pre}.ln2"))?,
+                wq: be.layer(&format!("{pre}.wq"))?,
+                wk: be.layer(&format!("{pre}.wk"))?,
+                wv: be.layer(&format!("{pre}.wv"))?,
+                wo: be.layer(&format!("{pre}.wo"))?,
+                mlp,
+            });
+        }
+        let hd = cfg.head_dim();
+        let inv_freq = (0..hd / 2)
+            .map(|i| (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64))
+            .collect();
+        let cap = capacity.max(1);
+        Ok(NativeDecoder {
+            cfg,
+            embed: be.embedding()?,
+            ln_f: be.gain("ln_f")?,
+            lm_head: be.layer("lm_head")?,
+            layers,
+            inv_freq,
+            kcache: (0..cfg.layers).map(|_| Matrix::zeros(cap, cfg.d)).collect(),
+            vcache: (0..cfg.layers).map(|_| Matrix::zeros(cap, cfg.d)).collect(),
+            pos: 0,
+            capacity: cap,
+        })
+    }
+
+    /// Feed one token; returns next-token logits (length vocab).
+    pub fn step(&mut self, token: u8) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            self.pos < self.capacity,
+            "decode context exhausted (capacity {})",
+            self.capacity
+        );
+        let cfg = self.cfg;
+        let hd = cfg.head_dim();
+        let half = hd / 2;
+        let pos = self.pos;
+
+        let mut h: Vec<f32> = self.embed.row(token as usize).to_vec();
+
+        // RoPE angles for this position (same formula as the forward pass).
+        let mut cosv = vec![0.0f32; half];
+        let mut sinv = vec![0.0f32; half];
+        for i in 0..half {
+            let ang = pos as f64 * self.inv_freq[i];
+            cosv[i] = ang.cos() as f32;
+            sinv[i] = ang.sin() as f32;
+        }
+
+        // Split borrows: layer refs are read-only, caches are written.
+        let layers = &self.layers;
+        let kcache = &mut self.kcache;
+        let vcache = &mut self.vcache;
+        for (l, layer) in layers.iter().enumerate() {
+            let x = rmsnorm_vec(&h, layer.ln1, cfg.eps);
+            let mut q = layer.wq.matvec(&x);
+            let mut k = layer.wk.matvec(&x);
+            let v = layer.wv.matvec(&x);
+            rope_vec(&mut q, &cosv, &sinv, cfg.heads, hd);
+            rope_vec(&mut k, &cosv, &sinv, cfg.heads, hd);
+            kcache[l].row_mut(pos).copy_from_slice(&k);
+            vcache[l].row_mut(pos).copy_from_slice(&v);
+
+            let mut ctxv = vec![0.0f32; cfg.d];
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut att = vec![0.0f32; pos + 1];
+            for head in 0..cfg.heads {
+                let off = head * hd;
+                let qh = &q[off..off + hd];
+                let mut maxv = f32::NEG_INFINITY;
+                for ki in 0..=pos {
+                    let krow = &kcache[l].row(ki)[off..off + hd];
+                    let mut dotv = 0.0f32;
+                    for t in 0..hd {
+                        dotv += qh[t] * krow[t];
+                    }
+                    att[ki] = dotv * scale;
+                    maxv = maxv.max(att[ki]);
+                }
+                let mut denom = 0.0f32;
+                for a in att.iter_mut() {
+                    *a = (*a - maxv).exp();
+                    denom += *a;
+                }
+                for ki in 0..=pos {
+                    let wgt = att[ki] / denom;
+                    let vrow = &vcache[l].row(ki)[off..off + hd];
+                    for t in 0..hd {
+                        ctxv[off + t] += wgt * vrow[t];
+                    }
+                }
+            }
+            let o = layer.wo.matvec(&ctxv);
+            for (a, b) in h.iter_mut().zip(&o) {
+                *a += b;
+            }
+
+            let x = rmsnorm_vec(&h, layer.ln2, cfg.eps);
+            let y = mlp_forward(&layer.mlp, &x);
+            for (a, b) in h.iter_mut().zip(&y) {
+                *a += b;
+            }
+        }
+
+        let hf = rmsnorm_vec(&h, self.ln_f, cfg.eps);
+        let logits = self.lm_head.matvec(&hf);
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// Greedy generation: prefill `prompt`, then emit `n` tokens. The final
+    /// token is emitted without a trailing step (its logits would be unused).
+    pub fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut last = Vec::new();
+        for &t in prompt {
+            last = self.step(t)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let next = argmax(&last) as u8;
+            out.push(next);
+            if i + 1 < n {
+                last = self.step(next)?;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Dense or top-1-MoE MLP over one activation vector.
+fn mlp_forward(mlp: &MlpRefs, x: &[f32]) -> Vec<f32> {
+    match mlp {
+        MlpRefs::Dense(w) => expert_forward(w, x),
+        MlpRefs::Moe { router, experts } => {
+            let logits = router.matvec(x);
+            let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f32> = logits.iter().map(|&v| (v - maxv).exp()).collect();
+            let denom: f32 = exps.iter().sum();
+            let (top, _) = exps
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let gate = exps[top] / denom;
+            let y = expert_forward(&experts[top], x);
+            y.iter().map(|&v| gate * v).collect()
+        }
+    }
+}
+
+fn expert_forward(w: &MlpWeights, x: &[f32]) -> Vec<f32> {
+    let g = w.wg.matvec(x);
+    let u = w.wu.matvec(x);
+    let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+    w.wd.matvec(&act)
+}
+
+/// RMSNorm over one activation vector.
+fn rmsnorm_vec(x: &[f32], gain: &[f32], eps: f32) -> Vec<f32> {
+    let ms: f32 = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    x.iter().zip(gain).map(|(&v, &g)| v * r * g).collect()
+}
+
+/// Split-half RoPE applied in place to one position's projection.
+fn rope_vec(x: &mut [f32], cos: &[f32], sin: &[f32], heads: usize, hd: usize) {
+    let half = hd / 2;
+    for h in 0..heads {
+        let off = h * hd;
+        for i in 0..half {
+            let (c, sn) = (cos[i], sin[i]);
+            let x1 = x[off + i];
+            let x2 = x[off + half + i];
+            x[off + i] = x1 * c - x2 * sn;
+            x[off + half + i] = x2 * c + x1 * sn;
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::quantize_simple;
+    use crate::model::forward::Forward;
+    use crate::quant::{Method, QuantConfig};
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    fn pico() -> ModelWeights {
+        ModelWeights::synthetic(&ModelConfig::family("pico").unwrap(), 21)
+    }
+
+    #[test]
+    fn dense_native_matches_reference_forward() {
+        let mw = pico();
+        let reference = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let nb = NativeBackend::from_weights(&mw);
+        let tokens = b"native backend parity";
+        let l_ref = reference.forward(tokens, None);
+        let l_nat = nb.forward(tokens).unwrap();
+        assert_eq!((l_nat.rows, l_nat.cols), (l_ref.rows, l_ref.cols));
+        assert!(
+            max_abs_diff(&l_nat.data, &l_ref.data) < 1e-6,
+            "dense native forward must match the reference"
+        );
+    }
+
+    #[test]
+    fn quantized_native_matches_effective_weight_forward() {
+        let mw = pico();
+        let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+        let eff = qm.effective_weights();
+        let reference = Forward::new(&mw.cfg, &eff, &qm.fvectors);
+        let nb = NativeBackend::from_quantized(&qm);
+        assert!(nb.quantized_layer_count() > 0, "expected packed layers");
+        let tokens = b"fused kernels vs reference";
+        let l_ref = reference.forward(tokens, None);
+        let l_nat = nb.forward(tokens).unwrap();
+        assert!(
+            max_abs_diff(&l_nat.data, &l_ref.data) < 1e-4,
+            "fused forward diverged from effective-weight reference"
+        );
+    }
+
+    #[test]
+    fn moe_native_matches_reference() {
+        let cfg = ModelConfig::family("tiny_moe").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 22);
+        let reference = Forward::new(&mw.cfg, &mw.tensors, &mw.vectors);
+        let nb = NativeBackend::from_weights(&mw);
+        let tokens = b"moe path";
+        let l_ref = reference.forward(tokens, None);
+        let l_nat = nb.forward(tokens).unwrap();
+        assert!(max_abs_diff(&l_nat.data, &l_ref.data) < 1e-6);
+    }
+
+    #[test]
+    fn decoder_matches_full_forward_last_position() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw);
+        let tokens = b"kv cache parity!";
+        let full = nb.forward(tokens).unwrap();
+        let mut dec = NativeDecoder::new(&nb, tokens.len() + 1).unwrap();
+        let mut last = Vec::new();
+        for &t in tokens.iter() {
+            last = dec.step(t).unwrap();
+        }
+        assert_eq!(dec.pos, tokens.len());
+        assert!(
+            max_abs_diff(&last, full.row(tokens.len() - 1)) < 1e-3,
+            "incremental decode diverged from full forward"
+        );
+    }
+
+    #[test]
+    fn decoder_context_exhaustion_errors() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw);
+        let mut dec = NativeDecoder::new(&nb, 2).unwrap();
+        dec.step(b'a').unwrap();
+        dec.step(b'b').unwrap();
+        assert!(dec.step(b'c').is_err());
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_respects_prompt() {
+        let mw = pico();
+        let qm = quantize_simple(&mw, &QuantConfig::new(Method::Rtn, 4), None).unwrap();
+        let mut nb = NativeBackend::from_quantized(&qm);
+        let a = nb.generate(b"hello", 12).unwrap();
+        let b = nb.generate(b"hello", 12).unwrap();
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, b, "greedy decode must be deterministic");
+    }
+
+    #[test]
+    fn moe_decoder_runs() {
+        let cfg = ModelConfig::family("tiny_moe").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 23);
+        let nb = NativeBackend::from_weights(&mw);
+        let tokens = b"moe decode";
+        let full = nb.forward(tokens).unwrap();
+        let mut dec = NativeDecoder::new(&nb, tokens.len() + 1).unwrap();
+        let mut last = Vec::new();
+        for &t in tokens.iter() {
+            last = dec.step(t).unwrap();
+        }
+        assert!(max_abs_diff(&last, full.row(tokens.len() - 1)) < 1e-3);
+    }
+}

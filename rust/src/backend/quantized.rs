@@ -1,0 +1,366 @@
+//! Bit-packed runtime weight format + fused dequantize-matmul kernels.
+//!
+//! [`QuantizedTensor`] is the serving-time sibling of
+//! [`crate::quant::QuantizedLinear`]: codes stay **bit-packed** in memory
+//! (the whole point of low-bit deployment) with the per-group RTN scales
+//! `s`, shifts `z`, and the SINQ second-axis column scales `t` resident
+//! alongside. The kernels unpack codes block-wise into a cache-sized tile
+//! and multiply in the same pass — the CPU analogue of the Pallas
+//! `dequant_matmul` kernel at L1:
+//!
+//! * [`QuantizedTensor::dequant_matmul`] — `y = x · Wᵀ` for a batch of
+//!   activations; W rows are dequantized once per 8-row tile and shared
+//!   across every activation row, parallelized over the thread pool.
+//! * [`QuantizedTensor::dequant_matvec`] — the decode fast path: never
+//!   materializes dequantized weights at all. With `x·t` folded once into
+//!   the input and per-group partial sums carrying the shift term, each
+//!   output element is `Σ_g s_g·(q·x t) + s_g z_g Σ(x t)` straight from the
+//!   packed codes.
+//!
+//! 4-bit and 8-bit codes take specialized unpack paths (two-per-byte nibble
+//! split / direct copy); 2/3/5/6/7-bit fall back to a generic LSB-first
+//! bit walk matching [`crate::fmt::pack`].
+
+use crate::fmt::pack;
+use crate::quant::QuantizedLinear;
+use crate::tensor::matrix::dot;
+use crate::tensor::Matrix;
+use crate::util::threadpool;
+
+/// Output rows dequantized per tile in [`QuantizedTensor::dequant_matmul`];
+/// 8 rows × ≤4 KiB of f32 per row keeps the tile L1/L2-resident.
+const ROW_BLOCK: usize = 8;
+
+/// Below this many multiply-accumulates the kernel stays single-threaded
+/// (thread scope setup costs more than the work).
+const PARALLEL_THRESHOLD: usize = 1 << 18;
+
+/// A linear layer kept in its packed on-disk representation at runtime.
+///
+/// Dequantization contract (identical to `QuantizedLinear::dequantize`):
+/// `W[i][j] = s[i][j/g] * (decode(Q[i][j]) + z[i][j/g]) * t[j]`.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// Output features.
+    pub rows: usize,
+    /// Input features.
+    pub cols: usize,
+    /// Group size along the input dimension.
+    pub group_size: usize,
+    /// Code width in bits (2..=8).
+    pub bits: u32,
+    /// Packed bytes per row (rows are packed independently so any row can
+    /// be addressed without decoding its predecessors).
+    row_stride: usize,
+    /// `rows * row_stride` packed code bytes.
+    packed: Vec<u8>,
+    /// Per (row, group) scale `s`.
+    pub scales: Matrix,
+    /// Per (row, group) shift `z` (uniform asymmetric grids only).
+    pub shifts: Option<Matrix>,
+    /// Per-column SINQ scale `t`.
+    pub col_scale: Option<Vec<f32>>,
+    /// 256-entry code → value decode table (covers uniform and level-table
+    /// grids with one lookup; entries past the grid size are zero).
+    lut: Vec<f32>,
+}
+
+impl QuantizedTensor {
+    /// Convert a quantizer-zoo layer into the packed runtime format.
+    ///
+    /// Returns `None` for representations the fused kernels cannot execute
+    /// directly (Hadamard-rotated storage, 2-D pair codebooks) — callers
+    /// fall back to a dense dequantized copy for those.
+    pub fn from_linear(q: &QuantizedLinear) -> Option<QuantizedTensor> {
+        if q.hadamard || q.hadamard_out || q.pair_codebook.is_some() {
+            return None;
+        }
+        let bits = q.grid.bits();
+        if !(2..=8).contains(&bits) {
+            return None;
+        }
+        if q.codes.len() != q.rows * q.cols {
+            return None;
+        }
+        let row_stride = pack::packed_len(q.cols, bits);
+        let mut packed = Vec::with_capacity(q.rows * row_stride);
+        for i in 0..q.rows {
+            packed.extend_from_slice(&pack::pack(&q.codes[i * q.cols..(i + 1) * q.cols], bits));
+        }
+        let mut lut = vec![0.0f32; 256];
+        for (c, slot) in lut.iter_mut().enumerate().take(q.grid.size().min(256)) {
+            *slot = q.grid.decode(c as u8);
+        }
+        Some(QuantizedTensor {
+            rows: q.rows,
+            cols: q.cols,
+            group_size: q.group_size,
+            bits,
+            row_stride,
+            packed,
+            scales: q.scales.clone(),
+            shifts: q.shifts.clone(),
+            col_scale: q.col_scale.clone(),
+            lut,
+        })
+    }
+
+    /// Number of input-dimension groups.
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    /// Resident bytes of the packed code payload (what full dequantization
+    /// would inflate by `32/bits`×).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Unpack the codes of row `i` into `out` (`out.len() == cols`).
+    fn unpack_codes_into(&self, i: usize, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.cols);
+        let bytes = &self.packed[i * self.row_stride..(i + 1) * self.row_stride];
+        match self.bits {
+            8 => out.copy_from_slice(&bytes[..self.cols]),
+            4 => {
+                let mut j = 0;
+                'bytes4: for &b in bytes {
+                    out[j] = b & 0x0F;
+                    j += 1;
+                    if j == self.cols {
+                        break 'bytes4;
+                    }
+                    out[j] = b >> 4;
+                    j += 1;
+                    if j == self.cols {
+                        break 'bytes4;
+                    }
+                }
+            }
+            2 => {
+                let mut j = 0;
+                'bytes2: for &b in bytes {
+                    let mut v = b;
+                    for _ in 0..4 {
+                        out[j] = v & 0x03;
+                        v >>= 2;
+                        j += 1;
+                        if j == self.cols {
+                            break 'bytes2;
+                        }
+                    }
+                }
+            }
+            // Generic widths (3/5/6/7-bit) share fmt::pack's bit walk so the
+            // layout has one source of truth.
+            bits => pack::unpack_into(bytes, bits, out),
+        }
+    }
+
+    /// Dequantize row `i` into `out` (`out.len() == cols`), using
+    /// `codes_buf` (`len == cols`) as unpack scratch. Operation order is
+    /// exactly `QuantizedLinear::dequantize`'s (`s*(q+z)` then `*t`), so a
+    /// tile equals the corresponding dense rows bit-for-bit.
+    fn dequant_row_into(&self, i: usize, out: &mut [f32], codes_buf: &mut [u8]) {
+        self.unpack_codes_into(i, codes_buf);
+        let g = self.group_size;
+        for gi in 0..self.n_groups() {
+            let s = self.scales.at(i, gi);
+            let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
+            let j1 = ((gi + 1) * g).min(self.cols);
+            for j in gi * g..j1 {
+                out[j] = s * (self.lut[codes_buf[j] as usize] + z);
+            }
+        }
+        if let Some(t) = &self.col_scale {
+            for (o, &tv) in out.iter_mut().zip(t.iter()) {
+                *o *= tv;
+            }
+        }
+    }
+
+    /// Full dense dequantization — the "dequantize-then-matmul" baseline
+    /// and the bridge to code paths that need an f32 matrix.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        let mut codes = vec![0u8; self.cols];
+        for i in 0..self.rows {
+            let row = &mut m.data[i * self.cols..(i + 1) * self.cols];
+            self.dequant_row_into(i, row, &mut codes);
+        }
+        m
+    }
+
+    /// Fused dequantize-matmul: `y = x · Wᵀ` with `x` of shape
+    /// `(m, cols)`, producing `(m, rows)`.
+    ///
+    /// Weight rows are dequantized once per [`ROW_BLOCK`]-row tile and the
+    /// tile is reused across every activation row, so the dequant cost is
+    /// amortized `m`× and no full-size f32 weight matrix ever exists.
+    /// Output-row tiles are independent, hence embarrassingly parallel
+    /// (deterministic regardless of `threads`).
+    pub fn dequant_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols, self.cols, "dequant_matmul shape mismatch");
+        let (m, n, k) = (x.rows, self.rows, self.cols);
+        let n_blocks = n.div_ceil(ROW_BLOCK);
+        let threads = if m * n * k < PARALLEL_THRESHOLD { 1 } else { threads.max(1) };
+        let blocks: Vec<usize> = (0..n_blocks).collect();
+        let partials: Vec<Vec<f32>> = threadpool::map_indexed(&blocks, threads, |_, &b| {
+            let r0 = b * ROW_BLOCK;
+            let r1 = ((b + 1) * ROW_BLOCK).min(n);
+            let rb = r1 - r0;
+            let mut tile = vec![0.0f32; rb * k];
+            let mut codes = vec![0u8; k];
+            for (ti, r) in (r0..r1).enumerate() {
+                self.dequant_row_into(r, &mut tile[ti * k..(ti + 1) * k], &mut codes);
+            }
+            let mut out = vec![0.0f32; m * rb];
+            for xi in 0..m {
+                let xrow = x.row(xi);
+                for ti in 0..rb {
+                    out[xi * rb + ti] = dot(xrow, &tile[ti * k..(ti + 1) * k], k);
+                }
+            }
+            out
+        });
+        let mut y = Matrix::zeros(m, n);
+        for (b, part) in partials.iter().enumerate() {
+            let r0 = b * ROW_BLOCK;
+            let rb = ((b + 1) * ROW_BLOCK).min(n) - r0;
+            for xi in 0..m {
+                y.row_mut(xi)[r0..r0 + rb].copy_from_slice(&part[xi * rb..(xi + 1) * rb]);
+            }
+        }
+        y
+    }
+
+    /// Fused dequantize-matvec: `y = W · x` for one activation vector
+    /// (`x.len() == cols`), the autoregressive-decode hot path.
+    ///
+    /// Works entirely in code space: the column scale is folded into the
+    /// input once (`xt = x ⊙ t`), per-group partial sums of `xt` carry the
+    /// shift term, and each output element needs only one pass over its
+    /// packed codes — dequantized weights are never materialized.
+    pub fn dequant_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "dequant_matvec shape mismatch");
+        let g = self.group_size;
+        let ng = self.n_groups();
+        let xt: Vec<f32> = match &self.col_scale {
+            Some(t) => x.iter().zip(t.iter()).map(|(&a, &b)| a * b).collect(),
+            None => x.to_vec(),
+        };
+        let mut gsum = vec![0.0f32; ng];
+        for (gi, slot) in gsum.iter_mut().enumerate() {
+            let j1 = ((gi + 1) * g).min(self.cols);
+            *slot = xt[gi * g..j1].iter().sum();
+        }
+        let mut y = vec![0.0f32; self.rows];
+        let mut codes = vec![0u8; self.cols];
+        for (i, yi) in y.iter_mut().enumerate() {
+            self.unpack_codes_into(i, &mut codes);
+            let mut acc = 0.0f32;
+            for gi in 0..ng {
+                let j1 = ((gi + 1) * g).min(self.cols);
+                let mut d = 0.0f32;
+                for j in gi * g..j1 {
+                    d += self.lut[codes[j] as usize] * xt[j];
+                }
+                let s = self.scales.at(i, gi);
+                let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
+                acc += s * d + s * z * gsum[gi];
+            }
+            *yi = acc;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmt::grids::Grid;
+    use crate::quant::{quantize_matrix, Method, QuantConfig};
+    use crate::tensor::Rng;
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+    }
+
+    fn check_parity(w: &Matrix, cfg: &QuantConfig, label: &str) {
+        let q = quantize_matrix(w, cfg, None).unwrap();
+        let qt = QuantizedTensor::from_linear(&q).expect(label);
+        let dense = q.dequantize();
+        // Packed → dense must reproduce the zoo's dequantization exactly.
+        assert!(qt.to_dense().dist(&dense) < 1e-6, "{label}: to_dense mismatch");
+
+        let mut rng = Rng::new(99);
+        let x = Matrix::randn(5, w.cols, 1.0, &mut rng);
+        let reference = x.matmul_nt(&dense);
+        let fused = qt.dequant_matmul(&x, 2);
+        assert_eq!((fused.rows, fused.cols), (5, w.rows), "{label}");
+        assert!(
+            max_abs_diff(&fused.data, &reference.data) < 1e-4,
+            "{label}: fused matmul diverges"
+        );
+
+        let mv = qt.dequant_matvec(x.row(0));
+        assert!(max_abs_diff(&mv, reference.row(0)) < 1e-4, "{label}: matvec diverges");
+    }
+
+    #[test]
+    fn fused_matches_dense_all_bit_widths() {
+        let mut rng = Rng::new(7);
+        // cols=100 with g=64 → a ragged tail group; rows=37 → ragged tile.
+        let w = Matrix::randn(37, 100, 0.05, &mut rng);
+        for bits in [2u32, 3, 4, 5, 8] {
+            for method in [Method::Rtn, Method::Sinq] {
+                let cfg = QuantConfig::new(method, bits);
+                check_parity(&w, &cfg, &format!("{}-{}b", method.name(), bits));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_matches_dense_table_grid() {
+        let mut rng = Rng::new(8);
+        let w = Matrix::randn(16, 128, 0.05, &mut rng);
+        let cfg = QuantConfig::new(Method::BnB, 4).with_grid(Grid::nf4());
+        check_parity(&w, &cfg, "nf4");
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(9);
+        // Large enough to cross PARALLEL_THRESHOLD.
+        let w = Matrix::randn(256, 128, 0.05, &mut rng);
+        let q = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+        let qt = QuantizedTensor::from_linear(&q).unwrap();
+        let x = Matrix::randn(32, 128, 1.0, &mut rng);
+        let a = qt.dequant_matmul(&x, 1);
+        let b = qt.dequant_matmul(&x, 4);
+        assert_eq!(a.data, b.data, "parallel tiling must be deterministic");
+    }
+
+    #[test]
+    fn rejects_rotated_and_codebook_layers() {
+        let mut rng = Rng::new(10);
+        let w = Matrix::randn(32, 64, 0.05, &mut rng);
+        let q = quantize_matrix(&w, &QuantConfig::new(Method::HadamardRtn, 4), None).unwrap();
+        assert!(q.hadamard);
+        assert!(QuantizedTensor::from_linear(&q).is_none());
+        let q = quantize_matrix(&w, &QuantConfig::new(Method::Codebook, 4), None).unwrap();
+        assert!(QuantizedTensor::from_linear(&q).is_none());
+    }
+
+    #[test]
+    fn packed_bytes_reflect_bit_width() {
+        let mut rng = Rng::new(11);
+        let w = Matrix::randn(64, 128, 0.05, &mut rng);
+        let q4 = quantize_matrix(&w, &QuantConfig::new(Method::Rtn, 4), None).unwrap();
+        let q8 = quantize_matrix(&w, &QuantConfig::new(Method::Rtn, 8), None).unwrap();
+        let t4 = QuantizedTensor::from_linear(&q4).unwrap();
+        let t8 = QuantizedTensor::from_linear(&q8).unwrap();
+        assert_eq!(t4.packed_bytes() * 2, t8.packed_bytes());
+        assert_eq!(t8.packed_bytes(), 64 * 128);
+    }
+}

@@ -8,8 +8,9 @@
 //!   quantize → pack → save; plus the PJRT-accelerated Algorithm-1 path
 //!   that runs the Pallas `sinq_quantize` artifacts.
 //! * [`server`] — the serving coordinator: request router + dynamic batcher
-//!   in front of the PJRT forward/decode executors (vLLM-router-shaped,
-//!   scaled to one box).
+//!   in front of any [`crate::backend::InferenceBackend`] — the PJRT
+//!   artifact executor or the native fused-kernel engine
+//!   (vLLM-router-shaped, scaled to one box).
 
 pub mod pipeline;
 pub mod scheduler;

@@ -1,9 +1,11 @@
 //! End-to-end quantization pipeline: load → (fold) → quantize → save,
-//! plus the PJRT-accelerated Algorithm-1 path.
+//! plus the quantize-and-serve path (straight into a native inference
+//! backend) and the PJRT-accelerated Algorithm-1 path.
 
 use std::path::Path;
 use std::time::Instant;
 
+use crate::backend::NativeBackend;
 use crate::coordinator::scheduler::{self, ScheduleOpts};
 use crate::model::{fold, ModelWeights, QuantizedModel};
 use crate::quant::{QuantConfig, QuantizedLinear};
@@ -60,6 +62,19 @@ pub fn run_and_save(
     Ok((qm, bytes))
 }
 
+/// Quantize `mw` and wire the result straight into a [`NativeBackend`] —
+/// no `.stz` round-trip, no artifacts. This is the serving path for boxes
+/// without XLA: the packed codes produced by the scheduler become the
+/// backend's resident weight format directly.
+pub fn run_to_backend(
+    mw: &ModelWeights,
+    qcfg: &QuantConfig,
+    opts: &PipelineOpts,
+) -> anyhow::Result<NativeBackend> {
+    let (qm, _) = run(mw, qcfg, opts)?;
+    Ok(NativeBackend::from_quantized(&qm))
+}
+
 /// PJRT-accelerated Algorithm 1: run the lowered Pallas `sinq_quantize`
 /// artifact for a layer shape. Returns (codes, scales, shifts, t) — the
 /// same contract as `quant::sinq::quantize` (modulo the ragged-group cases
@@ -111,6 +126,16 @@ mod tests {
         let back = QuantizedModel::load(&path).unwrap();
         assert_eq!(back.layers.len(), qm.layers.len());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn pipeline_feeds_native_backend() {
+        let mw = load_or_synthetic("/nonexistent", "pico", 73);
+        let cfg = QuantConfig::new(Method::Sinq, 4);
+        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default()).unwrap();
+        assert!(be.quantized_layer_count() > 0);
+        let logits = be.forward(b"pipeline to backend").unwrap();
+        assert!(logits.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -151,6 +151,28 @@ pub fn load_or_synthetic(art_dir: &str, name: &str, seed: u64) -> ModelWeights {
     })
 }
 
+/// [`load_or_synthetic`] for runtime paths: synthesizes only when the
+/// checkpoint file is genuinely absent (a corrupt or unreadable `.stz` is a
+/// real error and propagates), errors on an unknown family, and prints a
+/// notice when falling back — so `serve`/`eval` on the native backend stay
+/// usable on artifact-free machines without masking broken artifacts.
+pub fn load_or_synthetic_checked(
+    art_dir: &str,
+    name: &str,
+    seed: u64,
+) -> anyhow::Result<ModelWeights> {
+    if std::path::Path::new(&format!("{art_dir}/models/{name}.stz")).exists() {
+        return load_family_member(art_dir, name);
+    }
+    let cfg = ModelConfig::family(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'"))?;
+    eprintln!(
+        "note: no checkpoint for '{name}' under {art_dir}/models — \
+         using a synthetic model"
+    );
+    Ok(ModelWeights::synthetic(&cfg, seed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,8 +2,10 @@
 //! analysis, activation capture statistics (R²), and Pareto fronts.
 //!
 //! All evaluators run against the [`LogitsEngine`] trait so the same harness
-//! drives both the pure-Rust reference forward and the PJRT runtime
-//! (`runtime::PjrtForward`) — Python is never involved.
+//! drives the pure-Rust reference forward, the native fused-kernel backend
+//! (`backend::NativeBackend`), and the PJRT runtime (`runtime::PjrtForward`)
+//! — Python is never involved. Batched serving-path evaluation goes through
+//! [`ppl::perplexity_backend`] over `backend::InferenceBackend`.
 
 pub mod flips;
 pub mod pareto;

@@ -1,6 +1,7 @@
 //! Perplexity evaluation (the Wiki2 / C4 columns of Tables 1, 3, 4, 8, 9).
 
 use super::{log_prob, LogitsEngine};
+use crate::backend::InferenceBackend;
 use crate::data::Corpus;
 
 /// Perplexity over non-overlapping `seq`-length windows of a corpus:
@@ -20,6 +21,33 @@ pub fn perplexity(
         for p in 0..w.len() - 1 {
             nll -= log_prob(logits.row(p), w[p + 1]);
             count += 1;
+        }
+    }
+    Ok((nll / count as f64).exp())
+}
+
+/// Perplexity through an [`InferenceBackend`], batching windows up to the
+/// backend's `max_batch` per dispatch — the serving-path equivalent of
+/// [`perplexity`], used by `sinq eval --backend native|pjrt`.
+pub fn perplexity_backend(
+    backend: &mut dyn InferenceBackend,
+    corpus: &Corpus,
+    seq: usize,
+    max_windows: usize,
+) -> anyhow::Result<f64> {
+    let windows = corpus.eval_windows(seq, max_windows);
+    anyhow::ensure!(!windows.is_empty(), "corpus too small for seq {seq}");
+    let batch = backend.max_batch().max(1);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for chunk in windows.chunks(batch) {
+        let outs = backend.forward_batch(chunk)?;
+        anyhow::ensure!(outs.len() == chunk.len(), "backend returned short batch");
+        for (w, logits) in chunk.iter().zip(&outs) {
+            for p in 0..w.len() - 1 {
+                nll -= log_prob(logits.row(p), w[p + 1]);
+                count += 1;
+            }
         }
     }
     Ok((nll / count as f64).exp())
@@ -65,6 +93,21 @@ mod tests {
         let c = Corpus::from_bytes("t", vec![7u8; 500]);
         let ppl = perplexity(&mut Uniform, &c, 64, 3).unwrap();
         assert!((ppl - 256.0).abs() < 0.1, "{ppl}");
+    }
+
+    #[test]
+    fn backend_perplexity_matches_engine_perplexity() {
+        use crate::backend::NativeBackend;
+        let cfg = ModelConfig::family("pico").unwrap();
+        let mw = ModelWeights::synthetic(&cfg, 33);
+        let mut rng = Rng::new(33);
+        let data: Vec<u8> = (0..768).map(|_| (32 + rng.below(90)) as u8).collect();
+        let c = Corpus::from_bytes("rand", data);
+        let mut eng = RustEngine { fwd: Forward::new(&mw.cfg, &mw.tensors, &mw.vectors) };
+        let a = perplexity(&mut eng, &c, 64, 4).unwrap();
+        let mut be = NativeBackend::from_weights(&mw);
+        let b = perplexity_backend(&mut be, &c, 64, 4).unwrap();
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
     }
 
     #[test]

@@ -30,23 +30,30 @@ pub fn pack(codes: &[u8], bits: u32) -> Vec<u8> {
     out
 }
 
-/// Unpack `n` codes of `bits` width from `bytes`.
-pub fn unpack(bytes: &[u8], bits: u32, n: usize) -> Vec<u8> {
+/// Unpack `out.len()` codes of `bits` width from `bytes` into `out`
+/// without allocating — the single source of truth for the LSB-first
+/// layout, shared with the fused kernels' tile unpack.
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u8]) {
     assert!((2..=8).contains(&bits));
-    assert!(bytes.len() >= packed_len(n, bits), "unpack: buffer too small");
+    assert!(bytes.len() >= packed_len(out.len(), bits), "unpack: buffer too small");
     let mask = ((1u16 << bits) - 1) as u16;
-    let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
-    for _ in 0..n {
+    for slot in out.iter_mut() {
         let byte = bitpos / 8;
         let off = bitpos % 8;
         let mut v = (bytes[byte] as u16) >> off;
         if off + bits as usize > 8 {
             v |= (bytes[byte + 1] as u16) << (8 - off);
         }
-        out.push((v & mask) as u8);
+        *slot = (v & mask) as u8;
         bitpos += bits as usize;
     }
+}
+
+/// Unpack `n` codes of `bits` width from `bytes`.
+pub fn unpack(bytes: &[u8], bits: u32, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_into(bytes, bits, &mut out);
     out
 }
 
@@ -90,6 +97,51 @@ mod tests {
         let packed = pack(&codes, 3);
         assert_eq!(packed.len(), 3);
         assert_eq!(unpack(&packed, 3, 8), codes);
+    }
+
+    #[test]
+    fn round_trip_awkward_lengths_all_widths() {
+        // Deterministic property sweep: every width × lengths chosen so the
+        // final code straddles (or exactly fills) a byte boundary, plus the
+        // degenerate n=0 and n=1 cases.
+        let mut rng = Rng::new(33);
+        for bits in 2..=8u32 {
+            for n in [0usize, 1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 63, 64, 65, 121, 255, 256, 257] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let packed = pack(&codes, bits);
+                assert_eq!(packed.len(), packed_len(n, bits), "bits={bits} n={n}");
+                assert_eq!(unpack(&packed, bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_max_codes() {
+        // All-ones codes exercise every carry bit across byte boundaries.
+        for bits in 2..=8u32 {
+            let max = ((1u16 << bits) - 1) as u8;
+            for n in [1usize, 7, 8, 9, 31] {
+                let codes = vec![max; n];
+                assert_eq!(unpack(&pack(&codes, bits), bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_len_boundaries() {
+        // Exact formula at and around every byte boundary for every width.
+        for bits in 2..=8u32 {
+            assert_eq!(packed_len(0, bits), 0, "bits={bits}");
+            for n in 1..=129usize {
+                let expect = (n * bits as usize + 7) / 8;
+                assert_eq!(packed_len(n, bits), expect, "bits={bits} n={n}");
+            }
+            // A width-aligned count never wastes a byte...
+            assert_eq!(packed_len(8, bits), bits as usize);
+            // ...and one more code spills into exactly one extra byte.
+            assert_eq!(packed_len(9, bits), bits as usize + 1);
+        }
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the coordinator: a quantization pipeline (per-layer
-//!   job scheduler over a thread pool), a serving/eval runtime that executes
-//!   AOT-compiled XLA artifacts via PJRT, the full quantizer zoo
+//!   job scheduler over a thread pool), a serving/eval runtime with
+//!   **pluggable inference backends**, the full quantizer zoo
 //!   (RTN/HQQ/SINQ/Hadamard/AWQ/A-SINQ/GPTQ/CrossQuant/codebook/GGUF), and a
 //!   CLI that regenerates every table and figure of the paper.
 //! * **L2 (python/compile/model.py)** — the JAX transformer whose forward
@@ -14,12 +14,27 @@
 //! * **L1 (python/compile/kernels/)** — Pallas kernels (Sinkhorn
 //!   normalization, RTN quantize, fused dequant-matmul) called from L2.
 //!
-//! Python never runs on the request path: after `make artifacts` the `sinq`
-//! binary is self-contained.
+//! ## Inference backends
+//!
+//! Serving and evaluation dispatch through the
+//! [`backend::InferenceBackend`] trait, selected by `--backend` on the CLI:
+//!
+//! * [`backend::NativeBackend`] (**default**) — a pure-Rust engine that
+//!   executes **directly on bit-packed quantized weights**: fused
+//!   dequantize-matmul/matvec kernels (the CPU analogue of the L1 Pallas
+//!   `dequant_matmul`), a preallocated-KV-cache decoder for `generate`, and
+//!   thread-pool parallel tiles. Runs on any box: no artifacts, no XLA, no
+//!   Python.
+//! * [`runtime::PjrtForward`] (`--backend pjrt`) — executes the AOT-compiled
+//!   XLA artifacts via PJRT. After `make artifacts` the `sinq` binary covers
+//!   the full paper evaluation through this path. (In offline builds the
+//!   `xla` dependency is a vendored stub that errors at runtime; see
+//!   `rust/Cargo.toml`.)
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod backend;
 pub mod coordinator;
 pub mod data;
 pub mod eval;

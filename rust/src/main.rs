@@ -2,24 +2,32 @@
 //!
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
-//! sinq eval     --model tiny [--quantized q.stz] [--corpus wiki]
+//! sinq eval     --model tiny [--backend native|pjrt] [--quantized q.stz] [--corpus wiki]
 //! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny]
-//! sinq serve    --model tiny [--requests 32]          (batching demo)
+//! sinq serve    --model tiny [--backend native|pjrt] [--requests 32]   (batching demo)
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
 //!
-//! Everything runs against `artifacts/` (see `make artifacts`); `--fast`
-//! trims sweep sizes for smoke runs.
+//! `serve` and `eval` dispatch through the [`sinq::backend::InferenceBackend`]
+//! trait. The default `--backend native` executes the pure-Rust fused
+//! dequant-matmul engine directly on packed weights — self-contained on any
+//! machine (no `artifacts/`, no XLA, no Python; missing checkpoints and
+//! corpora fall back to deterministic synthetic stand-ins with a notice).
+//! `--backend pjrt` runs the AOT artifacts from `make artifacts`, which the
+//! `analyze`/`table` experiment commands also require. `--fast` trims sweep
+//! sizes for smoke runs.
 
+use sinq::backend::{self, BackendKind, BackendSpec};
 use sinq::coordinator::pipeline::{self, PipelineOpts};
 use sinq::coordinator::scheduler::{self, ScheduleOpts};
 use sinq::coordinator::server::BatchServer;
+use sinq::data::Corpus;
+use sinq::eval::ppl;
 use sinq::fmt::grids::Grid;
 use sinq::model::QuantizedModel;
 use sinq::quant::{AuxPrecision, Method, QuantConfig};
 use sinq::report::tables::{self, Ctx};
 use sinq::report::Table;
-use sinq::runtime::{PjrtForward, PjrtRuntime};
 use sinq::util::cli::Args;
 
 fn main() {
@@ -46,13 +54,25 @@ fn print_help() {
     println!(
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
-         sinq eval --model <name> [--quantized f.stz] [--corpus wiki|c4]\n  \
+         sinq eval --model <name> [--backend native|pjrt] [--quantized f.stz] [--corpus wiki|c4]\n  \
          sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>]\n  \
-         sinq serve --model <name> [--requests N]\n  \
+         sinq serve --model <name> [--backend native|pjrt] [--requests N] [--quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
+         Backends (serve/eval):\n  \
+         native  pure-Rust fused dequant-matmul engine on packed weights (default;\n          \
+         needs no artifacts/XLA/Python — synthetic fallbacks cover missing files).\n          \
+         With --quantized f.stz it executes the packed codes directly; with\n          \
+         --method/--bits on `serve` it quantizes in-process first.\n  \
+         pjrt    AOT XLA artifacts via PJRT (requires `make artifacts`)\n\n\
          Common flags: --art-dir artifacts  --models pico,tiny,small\n\
          Methods: rtn hadamard hqq sinq awq a-sinq gptq hadamard+gptq crossquant codebook bnb higgs"
     );
+}
+
+fn backend_kind(args: &Args) -> anyhow::Result<BackendKind> {
+    let name = args.get("backend", "native");
+    BackendKind::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}' (expected native|pjrt)"))
 }
 
 fn quant_config(args: &Args) -> anyhow::Result<QuantConfig> {
@@ -114,16 +134,31 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let model = args.get("model", "tiny");
     let corpus_kind = args.get("corpus", "wiki");
-    let ctx = Ctx::new(&art, args.has("fast"))?;
-    let mw = ctx.load_model(&model)?;
-    let ppl_value = if let Some(qpath) = args.opt("quantized") {
-        let qm = QuantizedModel::load(qpath)?;
-        let eff = qm.effective_weights();
-        ctx.ppl_eff(&mw, &eff, &qm.fvectors, &corpus_kind)?
-    } else {
-        ctx.ppl_fp(&mw, &corpus_kind)?
+    let kind = backend_kind(args)?;
+    let ppl_value = match kind {
+        BackendKind::Native => {
+            // Artifact-free path: fused-kernel engine + batched scoring
+            // through the InferenceBackend trait.
+            let mut spec = BackendSpec::new(kind, &art, &model);
+            spec.quantized = args.opt("quantized").map(String::from);
+            let mut be = backend::build(&spec)?;
+            let corpus = Corpus::load_or_synthetic(&art, &corpus_kind, "eval");
+            let windows = if args.has("fast") { 8 } else { 32 };
+            ppl::perplexity_backend(&mut *be, &corpus, 128, windows)?
+        }
+        BackendKind::Pjrt => {
+            let ctx = Ctx::new(&art, args.has("fast"))?;
+            let mw = ctx.load_model(&model)?;
+            if let Some(qpath) = args.opt("quantized") {
+                let qm = QuantizedModel::load(qpath)?;
+                let eff = qm.effective_weights();
+                ctx.ppl_eff(&mw, &eff, &qm.fvectors, &corpus_kind)?
+            } else {
+                ctx.ppl_fp(&mw, &corpus_kind)?
+            }
+        }
     };
-    println!("{model} {corpus_kind} perplexity: {ppl_value:.3}");
+    println!("{model} {corpus_kind} perplexity ({} backend): {ppl_value:.3}", kind.name());
     Ok(())
 }
 
@@ -150,19 +185,31 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let model = args.get("model", "tiny");
     let n_requests: usize = args.num("requests", 32);
 
-    // The server thread builds its own PJRT stack (handles are not Send).
-    let art2 = art.clone();
-    let model2 = model.clone();
-    let server = BatchServer::spawn(
-        move || {
-            let rt = PjrtRuntime::cpu(&art2)?;
-            let mw = scheduler::load_family_member(&art2, &model2)?;
-            PjrtForward::new(&rt, &mw.cfg, &mw.tensors, &mw.vectors)
-        },
-        64,
-        std::time::Duration::from_millis(4),
-    );
-    let corpus = sinq::data::Corpus::load(&art, "wiki", "eval")?;
+    let mut spec = BackendSpec::new(backend_kind(args)?, &art, &model);
+    spec.quantized = args.opt("quantized").map(String::from);
+    let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
+    if wants_quantize {
+        // `serve --backend native --method sinq --bits 4`: quantize
+        // in-process and serve the packed codes through the fused kernels.
+        anyhow::ensure!(
+            spec.kind == BackendKind::Native && spec.quantized.is_none(),
+            "--method/--bits apply only to `serve --backend native` without --quantized; \
+             run `sinq quantize` first and pass the .stz via --quantized instead"
+        );
+        spec.quantize = Some(quant_config(args)?);
+    }
+
+    // The server thread builds its own backend (PJRT handles are not Send;
+    // the spec is plain data).
+    let server = {
+        let spec = spec.clone();
+        BatchServer::spawn(
+            move || backend::build(&spec),
+            64,
+            std::time::Duration::from_millis(4),
+        )
+    };
+    let corpus = Corpus::load_or_synthetic(&art, "wiki", "eval");
     let windows = corpus.eval_windows(128, n_requests);
     let client = server.client();
     let t0 = std::time::Instant::now();
@@ -183,8 +230,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let secs = t0.elapsed().as_secs_f64();
     let stats = server.shutdown();
     println!(
-        "served {ok}/{n_requests} scoring requests in {secs:.2}s \
+        "served {ok}/{n_requests} scoring requests on the {} backend in {secs:.2}s \
          ({} batches, avg batch {:.2}, {:.0} tok/s)",
+        spec.kind.name(),
         stats.batches,
         stats.requests as f64 / stats.batches.max(1) as f64,
         stats.tokens as f64 / secs

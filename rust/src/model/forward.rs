@@ -231,12 +231,13 @@ impl<'a> Forward<'a> {
     }
 }
 
+/// SwiGLU's gate activation (shared with the native backend).
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(crate) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-fn add_inplace(a: &mut Matrix, b: &Matrix) {
+pub(crate) fn add_inplace(a: &mut Matrix, b: &Matrix) {
     for (x, &y) in a.data.iter_mut().zip(&b.data) {
         *x += y;
     }
@@ -256,8 +257,9 @@ pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
     out
 }
 
-/// Split-half RoPE (matches `model.py::apply_rope`).
-fn rope(x: &Matrix, cos: &Matrix, sin: &Matrix, heads: usize) -> Matrix {
+/// Split-half RoPE (matches `model.py::apply_rope`; shared with the native
+/// backend so the two forwards cannot diverge on the rotation convention).
+pub(crate) fn rope(x: &Matrix, cos: &Matrix, sin: &Matrix, heads: usize) -> Matrix {
     let s = x.rows;
     let hd = x.cols / heads;
     let half = hd / 2;

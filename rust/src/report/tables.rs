@@ -56,6 +56,8 @@ impl Ctx {
     }
 
     /// Perplexity of effective weights through the PJRT forward artifact.
+    /// Dispatches via the [`crate::backend::InferenceBackend`] trait, which
+    /// batches windows `max_batch` (= `FWD_BATCH`) at a time.
     pub fn ppl_eff(
         &self,
         mw: &ModelWeights,
@@ -63,22 +65,9 @@ impl Ctx {
         vectors: &BTreeMap<String, Vec<f32>>,
         kind: &str,
     ) -> anyhow::Result<f64> {
-        let fwd = PjrtForward::new(&self.rt, &mw.cfg, eff, vectors)?;
+        let mut fwd = PjrtForward::new(&self.rt, &mw.cfg, eff, vectors)?;
         let corpus = self.corpus(kind)?;
-        // Batch windows 4-at-a-time through the artifact.
-        let windows = corpus.eval_windows(self.seq, self.eval_windows);
-        let mut nll = 0.0;
-        let mut count = 0usize;
-        for chunk in windows.chunks(4) {
-            let outs = fwd.forward_batch(chunk)?;
-            for (w, logits) in chunk.iter().zip(outs) {
-                for p in 0..w.len() - 1 {
-                    nll -= crate::eval::log_prob(logits.row(p), w[p + 1]);
-                    count += 1;
-                }
-            }
-        }
-        Ok((nll / count as f64).exp())
+        ppl::perplexity_backend(&mut fwd, &corpus, self.seq, self.eval_windows)
     }
 
     /// FP baseline perplexity.

@@ -104,12 +104,13 @@ pub fn literal_to_f32(lit: &Literal) -> anyhow::Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec<f32>: {e}"))
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt-artifacts"))]
 mod tests {
     use super::*;
 
     // These tests exercise the real PJRT client; they are cheap (tiny
-    // computations) but do initialize XLA.
+    // computations) but do initialize XLA — hence the `pjrt-artifacts`
+    // gate (the default build links the vendored xla stub).
 
     #[test]
     fn literal_round_trips() {

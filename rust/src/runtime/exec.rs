@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use crate::backend::InferenceBackend;
 use crate::eval::LogitsEngine;
 use crate::model::ModelConfig;
 use crate::quant::QuantizedLinear;
@@ -106,6 +107,21 @@ impl LogitsEngine for PjrtForward {
 
     fn vocab(&self) -> usize {
         self.cfg.vocab
+    }
+}
+
+impl InferenceBackend for PjrtForward {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        FWD_BATCH
+    }
+
+    fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        // Dispatch to the inherent batched entry point.
+        PjrtForward::forward_batch(self, seqs)
     }
 }
 

@@ -4,8 +4,15 @@
 //! * [`client`] — `PjrtRuntime`: PJRT client + executable cache keyed by
 //!   artifact path, literal marshalling helpers.
 //! * [`exec`] — `PjrtForward` / `PjrtDecoder`: the forward-pass and
-//!   decode-step wrappers implementing [`crate::eval::LogitsEngine`] and the
-//!   serving loop, with weights kept resident as device buffers.
+//!   decode-step wrappers implementing [`crate::eval::LogitsEngine`] /
+//!   [`crate::backend::InferenceBackend`] and the serving loop, with
+//!   weights kept resident as device buffers.
+//!
+//! In offline builds the `xla` dependency is a vendored stub: this module
+//! compiles everywhere but every PJRT entry point errors at runtime, and
+//! serving/eval fall back to `--backend native`
+//! ([`crate::backend::NativeBackend`]). Link a real xla_extension binding
+//! and build with `--features pjrt-artifacts` to exercise this path.
 
 pub mod client;
 pub mod exec;

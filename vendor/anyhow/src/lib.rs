@@ -1,0 +1,112 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this vendored crate
+//! provides exactly the subset of anyhow's API the `sinq` crate uses:
+//! [`Error`], [`Result`], and the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros. Like the real crate, `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` conversion
+//! below coherent.
+
+use std::fmt;
+
+/// A string-backed error value. The real `anyhow::Error` carries a boxed
+/// error plus backtrace; for this repo's purposes (every error is formatted
+/// for the CLI or a test assertion) the rendered message is sufficient.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro calls this).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Coherent because `Error` itself does not implement `std::error::Error`
+// (mirrors the real anyhow's design).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/xyz")?; // exercises blanket From
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "not ok");
+    }
+}

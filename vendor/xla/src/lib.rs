@@ -1,0 +1,198 @@
+//! Stub of the `xla` (xla_extension) PJRT binding.
+//!
+//! The offline build environment cannot link XLA, but the L3 coordinator's
+//! PJRT code paths should still *compile* everywhere so the crate presents
+//! one API regardless of machine. This stub mirrors the type and method
+//! surface `sinq` uses; every entry point that would touch XLA returns
+//! [`XlaError`] at runtime. The `sinq` binary's default `--backend native`
+//! path never calls into this crate.
+//!
+//! To execute real artifacts, replace this path dependency with an
+//! xla_extension-backed binding (same module paths) and build the workspace
+//! with `--features pjrt-artifacts` to re-enable the artifact tests.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Error for every stubbed entry point.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT is unavailable in this build (vendored xla stub); \
+         use `--backend native`, or link a real xla_extension binding"
+    ))
+}
+
+/// Element dtypes of buffers/literals (the subset sinq marshals).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+/// Marker for host types that can cross the PJRT boundary.
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+
+/// Host-side tensor literal.
+#[derive(Debug)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable("Literal::create_from_shape_and_untyped_data"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(unavailable("Literal::to_vec"))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(unavailable("Literal::get_first_element"))
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unavailable("Literal::to_tuple1"))
+    }
+
+    pub fn to_tuple4(&self) -> Result<(Literal, Literal, Literal, Literal)> {
+        Err(unavailable("Literal::to_tuple4"))
+    }
+}
+
+/// Parsed HLO module text.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// A compilable computation.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug, Clone)]
+pub struct PjRtClient {
+    _private: Arc<()>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+
+    pub fn buffer_from_host_raw_bytes(
+        &self,
+        _ty: ElementType,
+        _data: &[u8],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_raw_bytes"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled + loaded executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_mention_native_backend() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("--backend native"), "{e}");
+    }
+}
