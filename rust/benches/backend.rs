@@ -14,7 +14,8 @@
 //! summary with fused-vs-baseline speedups is written to
 //! `BENCH_backend.json` at the repository root for the perf trajectory.
 //!
-//! Run with `cargo bench --bench backend`.
+//! Run with `cargo bench --bench backend`; set `BENCH_QUICK=1` (or pass
+//! `--quick`) for the reduced-iteration CI smoke mode.
 
 use sinq::backend::QuantizedTensor;
 use sinq::quant::{quantize_matrix, Method, QuantConfig};
@@ -24,7 +25,8 @@ use sinq::util::json::Json;
 use std::hint::black_box;
 
 fn main() {
-    let mut b = Bencher::default();
+    let quick = std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(2025);
 
     // Tiny-model shapes: x is a 128-token window of d=128 activations; W is
@@ -32,6 +34,8 @@ fn main() {
     let (seq, d, ffn) = (128usize, 128usize, 512usize);
     let x = Matrix::randn(seq, d, 1.0, &mut rng);
     let xv = x.row(0).to_vec();
+    // Decode-batch shape: 16 live sequences, one activation row each.
+    let xb = Matrix::from_vec(16, d, x.data[..16 * d].to_vec());
     let w = Matrix::randn(ffn, d, 0.05, &mut rng);
 
     let mut summary: Vec<Json> = Vec::new();
@@ -67,12 +71,23 @@ fn main() {
             let xr = Matrix::from_vec(1, d, xv.clone());
             black_box(xr.matmul_nt(&dense));
         });
+        // The continuous-batching decode kernel: one unpack per weight row
+        // shared across 16 stacked sequences vs 16 independent matvecs.
+        let shared16 = b.bench(&format!("dequant_matmul_shared {bits}b 16x128·(512x128)ᵀ"), || {
+            black_box(qt.dequant_matmul_shared(&xb, 1));
+        });
+        let mv16 = b.bench(&format!("16× dequant_matvec {bits}b"), || {
+            for r in 0..16 {
+                black_box(qt.dequant_matvec(xb.row(r)));
+            }
+        });
 
         let speedup = base.mean_ns / fused.mean_ns;
         let speedup_mv = base_mv.mean_ns / fused_mv.mean_ns;
+        let speedup_shared = mv16.mean_ns / shared16.mean_ns;
         println!(
             "    -> {bits}b: matmul speedup {speedup:.2}x, matvec speedup {speedup_mv:.2}x, \
-             packed {} KiB vs dense {} KiB",
+             shared-batch-16 speedup {speedup_shared:.2}x, packed {} KiB vs dense {} KiB",
             qt.packed_bytes() / 1024,
             (ffn * d * 4) / 1024,
         );
@@ -84,6 +99,9 @@ fn main() {
             ("fused_matvec_ns", Json::Num(fused_mv.mean_ns)),
             ("baseline_matvec_ns", Json::Num(base_mv.mean_ns)),
             ("matvec_speedup", Json::Num(speedup_mv)),
+            ("shared_batch16_ns", Json::Num(shared16.mean_ns)),
+            ("matvec16_ns", Json::Num(mv16.mean_ns)),
+            ("shared_batch16_speedup", Json::Num(speedup_shared)),
             ("packed_bytes", Json::Num(qt.packed_bytes() as f64)),
         ]));
     }

@@ -1,19 +1,130 @@
-//! Table 6 — end-to-end decode throughput (W16A16 vs SINQ W4A16) through
-//! the serving decoder with its on-device weights.
+//! Continuous-batched native decode throughput: aggregate tokens/sec at
+//! batch sizes 1/4/16 on the tiny model (SINQ 4-bit), no artifacts needed.
 //!
-//! `cargo bench --bench decode` (requires `make artifacts`)
+//! Batch 1 runs the single-sequence `NativeDecoder` (fused matvec path);
+//! larger batches run the continuous-batching `BatchDecoder`, whose fused
+//! stacked-row matmuls unpack every weight tile once per step and share it
+//! across all live sequences. Before timing, batched tokens are asserted
+//! bit-identical to single-sequence decode. A summary lands in
+//! `BENCH_decode.json` at the repository root (the CI bench-smoke job
+//! validates and archives it).
+//!
+//! Run with `cargo bench --bench decode`; set `BENCH_QUICK=1` (or pass
+//! `--quick`) for the reduced-iteration CI smoke mode.
 
-use sinq::report::tables::{table6, Ctx};
+use std::time::Instant;
+
+use sinq::backend::{BatchDecoder, NativeBackend, NativeDecoder};
+use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
+use sinq::data::Corpus;
+use sinq::quant::{Method, QuantConfig};
+use sinq::util::json::Json;
+
+/// Decode `reqs` through `slots` KV slots; returns (secs, sequence-tokens).
+fn run_batched(
+    be: &NativeBackend,
+    reqs: &[(Vec<u8>, usize)],
+    slots: usize,
+    capacity: usize,
+) -> (f64, usize) {
+    let t0 = Instant::now();
+    let mut dec = BatchDecoder::new(be, slots, capacity).expect("batch decoder");
+    for (i, (prompt, gen)) in reqs.iter().enumerate() {
+        dec.submit(i, prompt, *gen).expect("submit");
+    }
+    dec.run().expect("batched decode");
+    (t0.elapsed().as_secs_f64(), dec.stats().tokens)
+}
+
+/// Decode `reqs` one sequence at a time through `NativeDecoder`.
+fn run_single(be: &NativeBackend, reqs: &[(Vec<u8>, usize)], capacity: usize) -> (f64, usize) {
+    let t0 = Instant::now();
+    let mut tokens = 0usize;
+    for (prompt, gen) in reqs {
+        let mut dec = NativeDecoder::new(be, capacity).expect("decoder");
+        dec.generate(prompt, *gen).expect("single decode");
+        tokens += prompt.len() + gen - 1;
+    }
+    (t0.elapsed().as_secs_f64(), tokens)
+}
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
+    let quick = std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
+    let (n_req, prompt_len, gen, reps) = if quick { (16, 8, 12, 1) } else { (32, 16, 48, 3) };
+
+    let mw = load_or_synthetic("artifacts", "tiny", 2026);
+    let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None).expect("quantize");
+    let be = NativeBackend::from_quantized(&qm);
+    let corpus = Corpus::load_or_synthetic("artifacts", "wiki", "eval");
+    let reqs: Vec<(Vec<u8>, usize)> = (0..n_req)
+        .map(|i| (corpus.data[i * prompt_len..(i + 1) * prompt_len].to_vec(), gen))
+        .collect();
+    let capacity = prompt_len + gen + 1;
+
+    // Parity gate: the batched engine must reproduce single-sequence greedy
+    // tokens exactly before its throughput means anything.
+    {
+        let mut dec = BatchDecoder::new(&be, 4, capacity).expect("batch decoder");
+        for (i, (prompt, g)) in reqs.iter().take(6).enumerate() {
+            dec.submit(i, prompt, *g).expect("submit");
+        }
+        for out in dec.run().expect("batched decode") {
+            let (prompt, g) = &reqs[out.id];
+            let mut single = NativeDecoder::new(&be, capacity).expect("decoder");
+            let want = single.generate(prompt, *g).expect("single decode");
+            assert_eq!(out.tokens, want, "batched decode diverged on request {}", out.id);
+        }
     }
-    // `fast` keeps the bench under a minute (64-token context, 64 generated);
-    // the EXPERIMENTS.md numbers use the full 256/512 run via `sinq table 6`.
-    let ctx = Ctx::new("artifacts", true).expect("PJRT runtime");
-    let t = table6(&ctx, &["tiny", "small"]).expect("table 6");
-    t.print();
-    let _ = t.dump("artifacts");
+
+    println!("decode bench: tiny/sinq-4b, {n_req} requests, prompt {prompt_len}, +{gen}\n");
+    let mut summary: Vec<Json> = Vec::new();
+    let mut tps_batch1 = 0.0f64;
+    for batch in [1usize, 4, 16] {
+        // Best-of-`reps` to damp scheduler noise without a warmup phase.
+        let mut best_secs = f64::INFINITY;
+        let mut tokens = 0usize;
+        for _ in 0..reps {
+            let (secs, toks) = if batch == 1 {
+                run_single(&be, &reqs, capacity)
+            } else {
+                run_batched(&be, &reqs, batch, capacity)
+            };
+            best_secs = best_secs.min(secs);
+            tokens = toks;
+        }
+        let tps = tokens as f64 / best_secs;
+        if batch == 1 {
+            tps_batch1 = tps;
+        }
+        let speedup = tps / tps_batch1;
+        println!(
+            "batch {batch:>2}: {tokens} sequence-tokens in {best_secs:.3}s \
+             → {tps:.0} tok/s ({speedup:.2}x vs batch 1)"
+        );
+        summary.push(Json::obj(vec![
+            ("batch", Json::Num(batch as f64)),
+            ("tokens", Json::Num(tokens as f64)),
+            ("secs", Json::Num(best_secs)),
+            ("tokens_per_sec", Json::Num(tps)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("decode".to_string())),
+        ("model", Json::Str("tiny".to_string())),
+        ("method", Json::Str("sinq".to_string())),
+        ("bits", Json::Num(4.0)),
+        ("requests", Json::Num(n_req as f64)),
+        ("prompt_len", Json::Num(prompt_len as f64)),
+        ("gen_tokens", Json::Num(gen as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(summary)),
+    ]);
+    // Repo root, resolved from the package dir so cwd does not matter.
+    let out = format!("{}/../BENCH_decode.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&out, report.to_string_compact()) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
 }

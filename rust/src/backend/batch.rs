@@ -1,0 +1,430 @@
+//! Continuous-batching generation engine over the native backend.
+//!
+//! [`BatchDecoder`] is the serving-scale sibling of
+//! [`crate::backend::NativeDecoder`]: it maintains one KV-cache slot per
+//! concurrent sequence, admits queued requests into free slots and retires
+//! finished ones **between steps** (continuous batching, not static), and
+//! executes each decode step as fused matmuls over the stacked activation
+//! rows of all live sequences. Every packed weight tile is therefore
+//! unpacked once per step instead of once per sequence — the amortization
+//! that makes weight-only low-bit schemes viable in serving.
+//!
+//! Exactness contract: every kernel the batched step touches
+//! ([`QuantizedTensor::dequant_matmul_shared`] via
+//! `LayerWeight::decode_matmul`, the shared `causal_attend`, `mlp_forward`,
+//! `rmsnorm`/`rope`) runs the same f32 arithmetic per sequence as the
+//! single-sequence decoder, so greedy tokens match [`NativeDecoder`]
+//! bit-for-bit at any batch size and any admission order.
+//!
+//! [`QuantizedTensor::dequant_matmul_shared`]:
+//! crate::backend::QuantizedTensor::dequant_matmul_shared
+//! [`NativeDecoder`]: crate::backend::NativeDecoder
+
+use std::collections::VecDeque;
+
+use crate::backend::native::{
+    argmax, causal_attend, mlp_forward, MlpRefs, NativeBackend, ResolvedModel,
+};
+use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
+use crate::tensor::Matrix;
+
+/// One generation request queued for slot admission.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    /// Caller-chosen identifier; outputs are reported against it.
+    pub id: usize,
+    pub prompt: Vec<u8>,
+    /// Number of tokens to generate (greedy).
+    pub max_new: usize,
+}
+
+/// A finished generation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenOutput {
+    pub id: usize,
+    pub tokens: Vec<u8>,
+    /// Decode steps this sequence was live for (prompt + generated − 1).
+    pub steps: usize,
+}
+
+/// Aggregate engine counters for throughput reporting.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    /// Fused decode steps executed.
+    pub steps: usize,
+    /// Sequence-tokens processed (Σ live batch size over all steps).
+    pub tokens: usize,
+    /// Largest live batch observed in one step.
+    pub peak_batch: usize,
+    /// Requests completed.
+    pub completed: usize,
+}
+
+/// A sequence occupying a slot: its request plus decode progress.
+struct Active {
+    id: usize,
+    prompt: Vec<u8>,
+    /// Tokens fed into the model so far (prompt first, then generated).
+    fed: usize,
+    out: Vec<u8>,
+    max_new: usize,
+    /// Next KV position to write == this sequence's context length.
+    pos: usize,
+}
+
+impl Active {
+    /// The token this sequence feeds on the next step: the next prompt
+    /// token during prefill, the last greedy token afterwards.
+    fn next_input(&self) -> u8 {
+        if self.fed < self.prompt.len() {
+            self.prompt[self.fed]
+        } else {
+            *self.out.last().expect("generated token")
+        }
+    }
+}
+
+/// Per-slot KV storage: one `(capacity, d)` matrix per layer for K and V.
+/// Slots are recycled by resetting the position — attention only ever reads
+/// rows `0..=pos`, so stale rows from an evicted sequence are never touched.
+struct SlotCache {
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+}
+
+/// Continuous-batching greedy decoder over a [`NativeBackend`].
+///
+/// ```text
+/// submit(..) → pending ─admit─▶ slots (≤ max_slots live) ─retire─▶ finished
+///                                  │ step(): one fused forward over
+///                                  ▼         all live rows
+/// ```
+///
+/// [`BatchDecoder::step`] admits pending requests into free slots, advances
+/// every live sequence by one token through fused stacked-row matmuls, and
+/// retires sequences that produced their `max_new`-th token — freeing the
+/// slot for the next pending request on the following step.
+pub struct BatchDecoder<'a> {
+    model: ResolvedModel<'a>,
+    /// Per-slot KV capacity (positions).
+    capacity: usize,
+    slots: Vec<Option<Active>>,
+    caches: Vec<SlotCache>,
+    pending: VecDeque<GenRequest>,
+    finished: Vec<GenOutput>,
+    stats: BatchStats,
+}
+
+impl<'a> BatchDecoder<'a> {
+    /// Resolve the backend's weights and preallocate `max_slots` KV-cache
+    /// slots of `capacity` positions each.
+    pub fn new(
+        be: &'a NativeBackend,
+        max_slots: usize,
+        capacity: usize,
+    ) -> anyhow::Result<BatchDecoder<'a>> {
+        anyhow::ensure!(max_slots >= 1, "batch decoder needs at least one slot");
+        let model = ResolvedModel::new(be)?;
+        let cap = capacity.max(1);
+        let (layers, d) = (model.cfg.layers, model.cfg.d);
+        let caches = (0..max_slots)
+            .map(|_| SlotCache {
+                k: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
+                v: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
+            })
+            .collect();
+        Ok(BatchDecoder {
+            model,
+            capacity: cap,
+            slots: (0..max_slots).map(|_| None).collect(),
+            caches,
+            pending: VecDeque::new(),
+            finished: Vec::new(),
+            stats: BatchStats::default(),
+        })
+    }
+
+    /// Queue a generation request. Requests that cannot fit a KV slot are
+    /// rejected up front with a clear error instead of overflowing the
+    /// cache mid-decode; `max_new == 0` completes immediately.
+    pub fn submit(&mut self, id: usize, prompt: &[u8], max_new: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(!prompt.is_empty(), "request {id}: empty prompt");
+        let needed = prompt.len() + max_new.saturating_sub(1);
+        anyhow::ensure!(
+            needed <= self.capacity,
+            "request {id}: prompt of {} tokens + {max_new} generated needs {needed} KV \
+             positions but each slot preallocated {} (KV capacity); raise the decoder \
+             capacity or shorten the request",
+            prompt.len(),
+            self.capacity
+        );
+        if max_new == 0 {
+            self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
+            self.stats.completed += 1;
+            return Ok(());
+        }
+        self.pending.push_back(GenRequest { id, prompt: prompt.to_vec(), max_new });
+        Ok(())
+    }
+
+    /// Move queued requests into free slots (continuous admission).
+    fn admit(&mut self) {
+        while !self.pending.is_empty() {
+            let free = self.slots.iter().position(Option::is_none);
+            let si = match free {
+                Some(si) => si,
+                None => break,
+            };
+            let req = self.pending.pop_front().expect("non-empty pending queue");
+            self.slots[si] = Some(Active {
+                id: req.id,
+                prompt: req.prompt,
+                fed: 0,
+                out: Vec::new(),
+                max_new: req.max_new,
+                pos: 0,
+            });
+        }
+    }
+
+    /// Record one step's logits for a live slot: advance its position,
+    /// greedily emit once the prompt is consumed, retire when done.
+    fn advance(&mut self, si: usize, logits: &[f32]) {
+        let a = self.slots[si].as_mut().expect("live slot");
+        a.pos += 1;
+        a.fed += 1;
+        if a.fed >= a.prompt.len() {
+            let tok = argmax(logits) as u8;
+            a.out.push(tok);
+            if a.out.len() >= a.max_new {
+                let done = self.slots[si].take().expect("live slot");
+                let out = GenOutput { id: done.id, tokens: done.out, steps: done.fed };
+                self.finished.push(out);
+                self.stats.completed += 1;
+            }
+        }
+    }
+
+    /// One continuous-batching decode step: admit pending requests, advance
+    /// every live sequence by one token through fused stacked-row matmuls
+    /// (one weight-tile unpack shared by all sequences), retire finished
+    /// ones. Returns the number of sequences advanced; 0 means idle.
+    pub fn step(&mut self) -> anyhow::Result<usize> {
+        self.admit();
+        let n_slots = self.slots.len();
+        let live: Vec<usize> = (0..n_slots).filter(|&i| self.slots[i].is_some()).collect();
+        if live.is_empty() {
+            return Ok(0);
+        }
+        let model = &self.model;
+        let cfg = model.cfg;
+        let (d, hd) = (cfg.d, cfg.head_dim());
+        let b = live.len();
+
+        // Stack this step's input embeddings and RoPE angles, one row per
+        // live sequence (each at its own position).
+        let mut h = Matrix::zeros(b, d);
+        let mut cos = Matrix::zeros(b, hd / 2);
+        let mut sin = Matrix::zeros(b, hd / 2);
+        for (r, &si) in live.iter().enumerate() {
+            let a = self.slots[si].as_ref().expect("live slot");
+            h.row_mut(r).copy_from_slice(model.embed.row(a.next_input() as usize));
+            model.rope_angles_into(a.pos, cos.row_mut(r), sin.row_mut(r));
+        }
+
+        // Split borrows: slots/model are read, caches are written.
+        let slots = &self.slots;
+        let caches = &mut self.caches;
+        for (l, layer) in model.layers.iter().enumerate() {
+            // --- Attention block: fused projections over all live rows ---
+            let x = rmsnorm(&h, layer.ln1, cfg.eps);
+            let q = layer.wq.decode_matmul(&x, model.threads);
+            let k = layer.wk.decode_matmul(&x, model.threads);
+            let v = layer.wv.decode_matmul(&x, model.threads);
+            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+
+            let mut ctx = Matrix::zeros(b, d);
+            for (r, &si) in live.iter().enumerate() {
+                let pos = slots[si].as_ref().expect("live slot").pos;
+                let cache = &mut caches[si];
+                cache.k[l].row_mut(pos).copy_from_slice(k.row(r));
+                cache.v[l].row_mut(pos).copy_from_slice(v.row(r));
+                causal_attend(
+                    q.row(r),
+                    &cache.k[l],
+                    &cache.v[l],
+                    pos,
+                    cfg.heads,
+                    hd,
+                    ctx.row_mut(r),
+                );
+            }
+            let o = layer.wo.decode_matmul(&ctx, model.threads);
+            add_inplace(&mut h, &o);
+
+            // --- MLP block ---
+            let x = rmsnorm(&h, layer.ln2, cfg.eps);
+            let y = match &layer.mlp {
+                MlpRefs::Dense(w) => {
+                    let g = w.wg.decode_matmul(&x, model.threads);
+                    let u = w.wu.decode_matmul(&x, model.threads);
+                    let mut act = Matrix::zeros(b, cfg.ffn);
+                    for i in 0..b * cfg.ffn {
+                        act.data[i] = silu(g.data[i]) * u.data[i];
+                    }
+                    w.wd.decode_matmul(&act, model.threads)
+                }
+                moe => {
+                    // Switch-MoE routes per sequence; rows picking different
+                    // experts cannot share a matmul, so keep the per-row
+                    // path (bitwise equal to the single-sequence decoder).
+                    let mut y = Matrix::zeros(b, d);
+                    for r in 0..b {
+                        y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r)));
+                    }
+                    y
+                }
+            };
+            add_inplace(&mut h, &y);
+        }
+
+        let hf = rmsnorm(&h, model.ln_f, cfg.eps);
+        let logits = model.lm_head.decode_matmul(&hf, model.threads);
+
+        self.stats.steps += 1;
+        self.stats.tokens += b;
+        self.stats.peak_batch = self.stats.peak_batch.max(b);
+        for (r, &si) in live.iter().enumerate() {
+            self.advance(si, logits.row(r));
+        }
+        Ok(b)
+    }
+
+    /// Drive [`BatchDecoder::step`] until every submitted request finished;
+    /// returns the outputs ordered by request id.
+    pub fn run(&mut self) -> anyhow::Result<Vec<GenOutput>> {
+        while self.step()? > 0 {}
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|o| o.id);
+        Ok(out)
+    }
+
+    /// Engine counters accumulated so far.
+    pub fn stats(&self) -> &BatchStats {
+        &self.stats
+    }
+
+    /// Sequences currently occupying slots.
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Requests queued but not yet admitted.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Per-slot KV capacity (positions).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drain finished outputs without waiting for the queue to empty
+    /// (streaming consumers call this between steps).
+    pub fn take_finished(&mut self) -> Vec<GenOutput> {
+        std::mem::take(&mut self.finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{InferenceBackend, NativeDecoder};
+    use crate::model::{ModelConfig, ModelWeights};
+
+    fn pico_backend() -> NativeBackend {
+        let cfg = ModelConfig::family("pico").unwrap();
+        NativeBackend::from_weights(&ModelWeights::synthetic(&cfg, 31))
+    }
+
+    #[test]
+    fn idle_decoder_steps_zero() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 2, 8).unwrap();
+        assert_eq!(dec.step().unwrap(), 0);
+        assert_eq!(dec.live(), 0);
+        assert_eq!(dec.stats().steps, 0);
+    }
+
+    #[test]
+    fn single_request_matches_native_decoder() {
+        let nb = pico_backend();
+        let expected = {
+            let mut d = NativeDecoder::new(&nb, 32).unwrap();
+            d.generate(b"hello", 6).unwrap()
+        };
+        let mut dec = BatchDecoder::new(&nb, 4, 32).unwrap();
+        dec.submit(7, b"hello", 6).unwrap();
+        let outs = dec.run().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].id, 7);
+        assert_eq!(outs[0].tokens, expected);
+        assert_eq!(outs[0].steps, 5 + 6 - 1);
+    }
+
+    #[test]
+    fn more_requests_than_slots_recycles_and_completes_all() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 2, 32).unwrap();
+        // Staggered lengths force retirement at different steps.
+        for (i, n) in [3usize, 7, 5, 2, 6].iter().enumerate() {
+            dec.submit(i, &[b'a' + i as u8, b'!'], *n).unwrap();
+        }
+        assert_eq!(dec.pending(), 5);
+        let outs = dec.run().unwrap();
+        assert_eq!(outs.len(), 5);
+        for (i, n) in [3usize, 7, 5, 2, 6].iter().enumerate() {
+            assert_eq!(outs[i].id, i);
+            assert_eq!(outs[i].tokens.len(), *n);
+        }
+        let stats = dec.stats();
+        assert_eq!(stats.completed, 5);
+        assert_eq!(stats.peak_batch, 2, "only two slots exist");
+        // Σ per-sequence steps == Σ live batch sizes over all steps.
+        let seq_steps: usize = outs.iter().map(|o| o.steps).sum();
+        assert_eq!(stats.tokens, seq_steps);
+    }
+
+    #[test]
+    fn zero_max_new_completes_immediately() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 1, 8).unwrap();
+        dec.submit(3, b"xy", 0).unwrap();
+        let outs = dec.run().unwrap();
+        assert_eq!(outs, vec![GenOutput { id: 3, tokens: Vec::new(), steps: 0 }]);
+    }
+
+    #[test]
+    fn submit_rejects_requests_beyond_slot_capacity() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 1, 4).unwrap();
+        let err = dec.submit(0, b"too long for four", 2).unwrap_err();
+        assert!(err.to_string().contains("KV"), "unclear capacity error: {err}");
+        let err = dec.submit(1, b"ab", 9).unwrap_err();
+        assert!(err.to_string().contains("KV"), "unclear capacity error: {err}");
+        dec.submit(2, b"ab", 3).unwrap(); // 2 + 3 − 1 = 4 fits exactly
+        assert_eq!(dec.run().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn generate_batch_entry_point_matches_sequential_generate() {
+        let mut nb = pico_backend();
+        let prompts: Vec<&[u8]> = vec![b"one", b"second prompt", b"3rd"];
+        let max_new = [5usize, 3, 8];
+        let batched = nb.generate_batch(&prompts, &max_new).unwrap();
+        for ((p, &n), got) in prompts.iter().zip(&max_new).zip(&batched) {
+            let single = nb.generate(p, n).unwrap();
+            assert_eq!(got, &single, "prompt {:?}", String::from_utf8_lossy(p));
+        }
+    }
+}

@@ -10,14 +10,18 @@
 //! * [`crate::runtime::PjrtForward`] — executes AOT-compiled HLO artifacts
 //!   through PJRT (requires `make artifacts` and a real `xla` binding).
 //!
-//! [`build`] is the one-stop factory the CLI's `--backend native|pjrt` flag
-//! resolves through; it handles checkpoint loading (with a synthetic-model
-//! fallback so fresh machines still run), `.stz` quantized models, and
-//! on-the-fly quantization via the coordinator pipeline.
+//! [`build`] is the one-stop factory the CLI's `--backend native|pjrt|auto`
+//! flag resolves through; it handles checkpoint loading (with a
+//! synthetic-model fallback so fresh machines still run), `.stz` quantized
+//! models, and on-the-fly quantization via the coordinator pipeline.
+//! `auto` probes for artifacts plus a usable PJRT client ([`resolve`]) and
+//! falls back to the native engine when either is missing.
 
+pub mod batch;
 pub mod native;
 pub mod quantized;
 
+pub use batch::{BatchDecoder, BatchStats, GenOutput, GenRequest};
 pub use native::{NativeBackend, NativeDecoder};
 pub use quantized::QuantizedTensor;
 
@@ -54,6 +58,24 @@ pub trait InferenceBackend: LogitsEngine {
     fn generate(&mut self, _prompt: &[u8], _n: usize) -> anyhow::Result<Vec<u8>> {
         anyhow::bail!("backend '{}' does not support autoregressive generation", self.name())
     }
+
+    /// Greedy generation for many prompts: `max_new[i]` tokens for
+    /// `prompts[i]`, tokens identical to per-prompt
+    /// [`InferenceBackend::generate`]. The default loops `generate`;
+    /// backends with a continuous-batching decode engine override it.
+    fn generate_batch(
+        &mut self,
+        prompts: &[&[u8]],
+        max_new: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(
+            prompts.len() == max_new.len(),
+            "generate_batch: {} prompts but {} max_new entries",
+            prompts.len(),
+            max_new.len()
+        );
+        prompts.iter().zip(max_new).map(|(p, &n)| self.generate(p, n)).collect()
+    }
 }
 
 impl<T: InferenceBackend + ?Sized> LogitsEngine for Box<T> {
@@ -82,6 +104,14 @@ impl<T: InferenceBackend + ?Sized> InferenceBackend for Box<T> {
     fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
         (**self).generate(prompt, n)
     }
+
+    fn generate_batch(
+        &mut self,
+        prompts: &[&[u8]],
+        max_new: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        (**self).generate_batch(prompts, max_new)
+    }
 }
 
 /// Which engine executes the model.
@@ -91,6 +121,9 @@ pub enum BackendKind {
     Native,
     /// PJRT execution of AOT artifacts.
     Pjrt,
+    /// Probe at build time: PJRT when artifacts + a real client exist,
+    /// native otherwise (see [`resolve`]).
+    Auto,
 }
 
 impl BackendKind {
@@ -98,6 +131,7 @@ impl BackendKind {
         match s {
             "native" => Some(BackendKind::Native),
             "pjrt" => Some(BackendKind::Pjrt),
+            "auto" => Some(BackendKind::Auto),
             _ => None,
         }
     }
@@ -106,7 +140,24 @@ impl BackendKind {
         match self {
             BackendKind::Native => "native",
             BackendKind::Pjrt => "pjrt",
+            BackendKind::Auto => "auto",
         }
+    }
+}
+
+/// Resolve [`BackendKind::Auto`] to a concrete engine: pick PJRT when the
+/// artifact manifest is present *and* a PJRT client can actually be
+/// constructed (the vendored offline `xla` stub cannot), otherwise fall
+/// back to the native engine. Concrete kinds pass through unchanged.
+pub fn resolve(kind: BackendKind, art_dir: &str) -> BackendKind {
+    if kind != BackendKind::Auto {
+        return kind;
+    }
+    let manifest = std::path::Path::new(art_dir).join("manifest.json");
+    if manifest.exists() && PjrtRuntime::cpu(art_dir).is_ok() {
+        BackendKind::Pjrt
+    } else {
+        BackendKind::Native
     }
 }
 
@@ -121,6 +172,9 @@ pub struct BackendSpec {
     pub quantized: Option<String>,
     /// Quantize the checkpoint in-process before serving (native only).
     pub quantize: Option<QuantConfig>,
+    /// Serving concurrency cap (scoring batch + generation slots); the
+    /// backend default applies when unset.
+    pub max_batch: Option<usize>,
 }
 
 impl BackendSpec {
@@ -131,17 +185,23 @@ impl BackendSpec {
             model: model.to_string(),
             quantized: None,
             quantize: None,
+            max_batch: None,
         }
     }
 }
 
-/// Build the backend described by `spec`.
+/// Build the backend described by `spec`. [`BackendKind::Auto`] is resolved
+/// here (see [`resolve`]); [`InferenceBackend::name`] on the result reports
+/// the engine that was actually chosen.
 pub fn build(spec: &BackendSpec) -> anyhow::Result<Box<dyn InferenceBackend>> {
-    match spec.kind {
+    let max_batch = spec.max_batch.unwrap_or(native::DEFAULT_MAX_BATCH);
+    match resolve(spec.kind, &spec.art_dir) {
+        BackendKind::Auto => unreachable!("resolve returns a concrete backend kind"),
         BackendKind::Native => {
             if let Some(path) = &spec.quantized {
                 let qm = QuantizedModel::load(path)?;
-                return Ok(Box::new(NativeBackend::from_quantized(&qm)));
+                let be = NativeBackend::from_quantized(&qm).with_max_batch(max_batch);
+                return Ok(Box::new(be));
             }
             let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
             if let Some(qcfg) = &spec.quantize {
@@ -159,9 +219,9 @@ pub fn build(spec: &BackendSpec) -> anyhow::Result<Box<dyn InferenceBackend>> {
                     },
                     no_overhead: false,
                 };
-                return Ok(Box::new(pipeline::run_to_backend(&mw, qcfg, &opts)?));
+                return Ok(Box::new(pipeline::run_to_backend(&mw, qcfg, &opts, max_batch)?));
             }
-            Ok(Box::new(NativeBackend::from_weights(&mw)))
+            Ok(Box::new(NativeBackend::from_weights(&mw).with_max_batch(max_batch)))
         }
         BackendKind::Pjrt => {
             anyhow::ensure!(
@@ -190,10 +250,30 @@ mod tests {
 
     #[test]
     fn kind_parse_round_trip() {
-        for k in [BackendKind::Native, BackendKind::Pjrt] {
+        for k in [BackendKind::Native, BackendKind::Pjrt, BackendKind::Auto] {
             assert_eq!(BackendKind::parse(k.name()), Some(k));
         }
         assert_eq!(BackendKind::parse("tpu"), None);
+    }
+
+    #[test]
+    fn auto_resolves_to_native_without_artifacts() {
+        assert_eq!(resolve(BackendKind::Auto, "/nonexistent"), BackendKind::Native);
+        // Concrete kinds pass through untouched.
+        assert_eq!(resolve(BackendKind::Pjrt, "/nonexistent"), BackendKind::Pjrt);
+        // And `build` on an auto spec yields a working native engine.
+        let spec = BackendSpec::new(BackendKind::Auto, "/nonexistent", "pico");
+        let mut be = build(&spec).unwrap();
+        assert_eq!(be.name(), "native");
+        assert!(be.logits(b"auto").unwrap().data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn spec_max_batch_reaches_backend() {
+        let mut spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+        spec.max_batch = Some(9);
+        let be = build(&spec).unwrap();
+        assert_eq!(be.max_batch(), 9);
     }
 
     #[test]

@@ -12,10 +12,14 @@
 //! [`NativeDecoder`] adds the autoregressive path: per-layer K/V caches are
 //! preallocated at construction and each step runs single-row matvecs
 //! against the packed weights — `generate` needs no artifacts, no XLA, and
-//! no Python.
+//! no Python. Its continuous-batching sibling,
+//! [`crate::backend::BatchDecoder`], shares the resolved weight references
+//! ([`ResolvedModel`]) and the attention/MLP helpers here, so the two decode
+//! paths produce bit-identical tokens.
 
 use std::collections::BTreeMap;
 
+use crate::backend::batch::BatchDecoder;
 use crate::backend::quantized::QuantizedTensor;
 use crate::backend::InferenceBackend;
 use crate::eval::LogitsEngine;
@@ -62,7 +66,34 @@ impl LayerWeight {
             LayerWeight::Quant(q) => q.dequant_matvec(x),
         }
     }
+
+    /// `y = x · Wᵀ` for stacked decode rows (one row per live sequence).
+    ///
+    /// Quantized layers unpack each weight row once and share the decoded
+    /// levels across every row via
+    /// [`QuantizedTensor::dequant_matmul_shared`]; dense layers run the same
+    /// per-row dot as [`LayerWeight::matvec`]. Either way the result is
+    /// bitwise equal to `matvec` applied row by row, which keeps batched and
+    /// single-sequence decode in exact agreement.
+    pub(crate) fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        match self {
+            LayerWeight::Dense(w) => {
+                let mut y = Matrix::zeros(x.rows, w.rows);
+                for r in 0..x.rows {
+                    let xr = x.row(r);
+                    for j in 0..w.rows {
+                        y.data[r * w.rows + j] = dot(xr, w.row(j), x.cols);
+                    }
+                }
+                y
+            }
+            LayerWeight::Quant(q) => q.dequant_matmul_shared(x, threads),
+        }
+    }
 }
+
+/// Default serving concurrency: scoring batch size and generation slots.
+pub const DEFAULT_MAX_BATCH: usize = 4;
 
 /// Pure-Rust inference backend over dense or packed-quantized weights.
 pub struct NativeBackend {
@@ -71,6 +102,8 @@ pub struct NativeBackend {
     vectors: BTreeMap<String, Vec<f32>>,
     /// Worker threads for the fused matmul tiles.
     pub threads: usize,
+    /// Serving concurrency cap: scoring batch size and generation slots.
+    max_batch: usize,
 }
 
 fn default_threads() -> usize {
@@ -91,6 +124,7 @@ impl NativeBackend {
             layers,
             vectors: mw.vectors.clone(),
             threads: default_threads(),
+            max_batch: DEFAULT_MAX_BATCH,
         }
     }
 
@@ -114,7 +148,15 @@ impl NativeBackend {
             layers,
             vectors: qm.fvectors.clone(),
             threads: default_threads(),
+            max_batch: DEFAULT_MAX_BATCH,
         }
+    }
+
+    /// Set the serving concurrency cap (scoring batch size and the number
+    /// of continuous-batching generation slots). Minimum 1.
+    pub fn with_max_batch(mut self, max_batch: usize) -> NativeBackend {
+        self.max_batch = max_batch.max(1);
+        self
     }
 
     /// How many linears run on packed codes (vs dense fallback).
@@ -293,7 +335,7 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn max_batch(&self) -> usize {
-        4
+        self.max_batch
     }
 
     fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
@@ -312,57 +354,85 @@ impl InferenceBackend for NativeBackend {
         let mut dec = NativeDecoder::new(self, prompt.len() + n + 1)?;
         dec.generate(prompt, n)
     }
+
+    /// Continuous-batched greedy generation: all prompts share one
+    /// [`BatchDecoder`], so every packed weight tile is unpacked once per
+    /// step instead of once per sequence. Tokens are exactly those
+    /// [`InferenceBackend::generate`] would produce per prompt.
+    fn generate_batch(
+        &mut self,
+        prompts: &[&[u8]],
+        max_new: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(
+            prompts.len() == max_new.len(),
+            "generate_batch: {} prompts but {} max_new entries",
+            prompts.len(),
+            max_new.len()
+        );
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let slots = self.max_batch.min(prompts.len()).max(1);
+        let capacity = prompts
+            .iter()
+            .zip(max_new)
+            .map(|(p, &n)| p.len() + n + 1)
+            .max()
+            .unwrap_or(1);
+        let mut dec = BatchDecoder::new(self, slots, capacity)?;
+        for (i, (p, &n)) in prompts.iter().zip(max_new).enumerate() {
+            dec.submit(i, p, n)?;
+        }
+        let outs = dec.run()?;
+        Ok(outs.into_iter().map(|o| o.tokens).collect())
+    }
 }
 
 /// Per-MLP (dense or one expert) weight references resolved at build time.
-struct MlpWeights<'a> {
-    wg: &'a LayerWeight,
-    wu: &'a LayerWeight,
-    wd: &'a LayerWeight,
+pub(crate) struct MlpWeights<'a> {
+    pub(crate) wg: &'a LayerWeight,
+    pub(crate) wu: &'a LayerWeight,
+    pub(crate) wd: &'a LayerWeight,
 }
 
-enum MlpRefs<'a> {
+pub(crate) enum MlpRefs<'a> {
     Dense(MlpWeights<'a>),
     Moe { router: &'a LayerWeight, experts: Vec<MlpWeights<'a>> },
 }
 
 /// One layer's weights, resolved once so the per-token loop does no name
 /// formatting or map lookups.
-struct DecoderLayer<'a> {
-    ln1: &'a [f32],
-    ln2: &'a [f32],
-    wq: &'a LayerWeight,
-    wk: &'a LayerWeight,
-    wv: &'a LayerWeight,
-    wo: &'a LayerWeight,
-    mlp: MlpRefs<'a>,
+pub(crate) struct DecoderLayer<'a> {
+    pub(crate) ln1: &'a [f32],
+    pub(crate) ln2: &'a [f32],
+    pub(crate) wq: &'a LayerWeight,
+    pub(crate) wk: &'a LayerWeight,
+    pub(crate) wv: &'a LayerWeight,
+    pub(crate) wo: &'a LayerWeight,
+    pub(crate) mlp: MlpRefs<'a>,
 }
 
-/// Autoregressive decoder with preallocated per-layer K/V caches.
-///
-/// Every weight/gain reference and the rotary frequency table are resolved
-/// once at construction; `step` — the decode hot path — touches only
-/// resolved references and the fused matvec kernels.
-pub struct NativeDecoder<'a> {
-    cfg: &'a ModelConfig,
-    embed: &'a Matrix,
-    ln_f: &'a [f32],
-    lm_head: &'a LayerWeight,
-    layers: Vec<DecoderLayer<'a>>,
+/// Every weight/gain reference plus the rotary frequency table of a
+/// [`NativeBackend`], resolved once so decode hot paths do no name
+/// formatting or map lookups. Shared by the single-sequence
+/// [`NativeDecoder`] and the continuous-batching
+/// [`crate::backend::BatchDecoder`].
+pub(crate) struct ResolvedModel<'a> {
+    pub(crate) cfg: &'a ModelConfig,
+    pub(crate) embed: &'a Matrix,
+    pub(crate) ln_f: &'a [f32],
+    pub(crate) lm_head: &'a LayerWeight,
+    pub(crate) layers: Vec<DecoderLayer<'a>>,
     /// Rotary inverse frequencies, length `head_dim / 2`.
-    inv_freq: Vec<f64>,
-    /// Per-layer key cache, shape `(capacity, d)`.
-    kcache: Vec<Matrix>,
-    /// Per-layer value cache, shape `(capacity, d)`.
-    vcache: Vec<Matrix>,
-    pub pos: usize,
-    capacity: usize,
+    pub(crate) inv_freq: Vec<f64>,
+    /// Worker threads for the batched decode matmuls.
+    pub(crate) threads: usize,
 }
 
-impl<'a> NativeDecoder<'a> {
-    /// Resolve every weight reference and preallocate caches for
-    /// `capacity` positions; errors if the backend is missing a weight.
-    pub fn new(be: &'a NativeBackend, capacity: usize) -> anyhow::Result<NativeDecoder<'a>> {
+impl<'a> ResolvedModel<'a> {
+    /// Resolve every weight reference; errors if the backend is missing one.
+    pub(crate) fn new(be: &'a NativeBackend) -> anyhow::Result<ResolvedModel<'a>> {
         let cfg = &be.cfg;
         let mlp_refs = |pre: &str| -> anyhow::Result<MlpWeights<'a>> {
             Ok(MlpWeights {
@@ -398,16 +468,53 @@ impl<'a> NativeDecoder<'a> {
         let inv_freq = (0..hd / 2)
             .map(|i| (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64))
             .collect();
-        let cap = capacity.max(1);
-        Ok(NativeDecoder {
+        Ok(ResolvedModel {
             cfg,
             embed: be.embedding()?,
             ln_f: be.gain("ln_f")?,
             lm_head: be.layer("lm_head")?,
             layers,
             inv_freq,
-            kcache: (0..cfg.layers).map(|_| Matrix::zeros(cap, cfg.d)).collect(),
-            vcache: (0..cfg.layers).map(|_| Matrix::zeros(cap, cfg.d)).collect(),
+            threads: be.threads,
+        })
+    }
+
+    /// RoPE angles for one position (same formula as the forward pass).
+    pub(crate) fn rope_angles_into(&self, pos: usize, cos: &mut [f32], sin: &mut [f32]) {
+        for (i, &inv) in self.inv_freq.iter().enumerate() {
+            let ang = pos as f64 * inv;
+            cos[i] = ang.cos() as f32;
+            sin[i] = ang.sin() as f32;
+        }
+    }
+}
+
+/// Autoregressive decoder with preallocated per-layer K/V caches.
+///
+/// Every weight/gain reference and the rotary frequency table are resolved
+/// once at construction; `step` — the decode hot path — touches only
+/// resolved references and the fused matvec kernels.
+pub struct NativeDecoder<'a> {
+    model: ResolvedModel<'a>,
+    /// Per-layer key cache, shape `(capacity, d)`.
+    kcache: Vec<Matrix>,
+    /// Per-layer value cache, shape `(capacity, d)`.
+    vcache: Vec<Matrix>,
+    pub pos: usize,
+    capacity: usize,
+}
+
+impl<'a> NativeDecoder<'a> {
+    /// Resolve every weight reference and preallocate caches for
+    /// `capacity` positions; errors if the backend is missing a weight.
+    pub fn new(be: &'a NativeBackend, capacity: usize) -> anyhow::Result<NativeDecoder<'a>> {
+        let model = ResolvedModel::new(be)?;
+        let cap = capacity.max(1);
+        let (layers, d) = (model.cfg.layers, model.cfg.d);
+        Ok(NativeDecoder {
+            model,
+            kcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
+            vcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
             pos: 0,
             capacity: cap,
         })
@@ -417,30 +524,25 @@ impl<'a> NativeDecoder<'a> {
     pub fn step(&mut self, token: u8) -> anyhow::Result<Vec<f32>> {
         anyhow::ensure!(
             self.pos < self.capacity,
-            "decode context exhausted (capacity {})",
+            "decode context exhausted (KV capacity {})",
             self.capacity
         );
-        let cfg = self.cfg;
+        let model = &self.model;
+        let cfg = model.cfg;
         let hd = cfg.head_dim();
         let half = hd / 2;
         let pos = self.pos;
 
-        let mut h: Vec<f32> = self.embed.row(token as usize).to_vec();
+        let mut h: Vec<f32> = model.embed.row(token as usize).to_vec();
 
-        // RoPE angles for this position (same formula as the forward pass).
         let mut cosv = vec![0.0f32; half];
         let mut sinv = vec![0.0f32; half];
-        for i in 0..half {
-            let ang = pos as f64 * self.inv_freq[i];
-            cosv[i] = ang.cos() as f32;
-            sinv[i] = ang.sin() as f32;
-        }
+        model.rope_angles_into(pos, &mut cosv, &mut sinv);
 
         // Split borrows: layer refs are read-only, caches are written.
-        let layers = &self.layers;
         let kcache = &mut self.kcache;
         let vcache = &mut self.vcache;
-        for (l, layer) in layers.iter().enumerate() {
+        for (l, layer) in model.layers.iter().enumerate() {
             let x = rmsnorm_vec(&h, layer.ln1, cfg.eps);
             let mut q = layer.wq.matvec(&x);
             let mut k = layer.wk.matvec(&x);
@@ -451,34 +553,7 @@ impl<'a> NativeDecoder<'a> {
             vcache[l].row_mut(pos).copy_from_slice(&v);
 
             let mut ctxv = vec![0.0f32; cfg.d];
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut att = vec![0.0f32; pos + 1];
-            for head in 0..cfg.heads {
-                let off = head * hd;
-                let qh = &q[off..off + hd];
-                let mut maxv = f32::NEG_INFINITY;
-                for ki in 0..=pos {
-                    let krow = &kcache[l].row(ki)[off..off + hd];
-                    let mut dotv = 0.0f32;
-                    for t in 0..hd {
-                        dotv += qh[t] * krow[t];
-                    }
-                    att[ki] = dotv * scale;
-                    maxv = maxv.max(att[ki]);
-                }
-                let mut denom = 0.0f32;
-                for a in att.iter_mut() {
-                    *a = (*a - maxv).exp();
-                    denom += *a;
-                }
-                for ki in 0..=pos {
-                    let wgt = att[ki] / denom;
-                    let vrow = &vcache[l].row(ki)[off..off + hd];
-                    for t in 0..hd {
-                        ctxv[off + t] += wgt * vrow[t];
-                    }
-                }
-            }
+            causal_attend(&q, &kcache[l], &vcache[l], pos, cfg.heads, hd, &mut ctxv);
             let o = layer.wo.matvec(&ctxv);
             for (a, b) in h.iter_mut().zip(&o) {
                 *a += b;
@@ -491,16 +566,29 @@ impl<'a> NativeDecoder<'a> {
             }
         }
 
-        let hf = rmsnorm_vec(&h, self.ln_f, cfg.eps);
-        let logits = self.lm_head.matvec(&hf);
+        let hf = rmsnorm_vec(&h, model.ln_f, cfg.eps);
+        let logits = model.lm_head.matvec(&hf);
         self.pos += 1;
         Ok(logits)
     }
 
     /// Greedy generation: prefill `prompt`, then emit `n` tokens. The final
     /// token is emitted without a trailing step (its logits would be unused).
+    ///
+    /// Requests that cannot fit the preallocated KV cache are rejected up
+    /// front with a clear error (prompt + generated tokens, minus the final
+    /// unstepped one, must fit `capacity`).
     pub fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let needed = self.pos + prompt.len() + n.saturating_sub(1);
+        anyhow::ensure!(
+            needed <= self.capacity,
+            "prompt of {} tokens + {n} generated needs {needed} KV positions but the \
+             decoder preallocated {} (KV capacity); construct the decoder with a larger \
+             capacity or shorten the request",
+            prompt.len(),
+            self.capacity
+        );
         let mut last = Vec::new();
         for &t in prompt {
             last = self.step(t)?;
@@ -517,8 +605,52 @@ impl<'a> NativeDecoder<'a> {
     }
 }
 
-/// Dense or top-1-MoE MLP over one activation vector.
-fn mlp_forward(mlp: &MlpRefs, x: &[f32]) -> Vec<f32> {
+/// Causal attention for one query position over K/V cache rows `0..=pos`,
+/// accumulating the per-head context into `ctx` (zeroed by the caller).
+/// Shared by the single-sequence and batched decoders so the two attention
+/// paths cannot diverge numerically.
+pub(crate) fn causal_attend(
+    q: &[f32],
+    kc: &Matrix,
+    vc: &Matrix,
+    pos: usize,
+    heads: usize,
+    hd: usize,
+    ctx: &mut [f32],
+) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0.0f32; pos + 1];
+    for head in 0..heads {
+        let off = head * hd;
+        let qh = &q[off..off + hd];
+        let mut maxv = f32::NEG_INFINITY;
+        for ki in 0..=pos {
+            let krow = &kc.row(ki)[off..off + hd];
+            let mut dotv = 0.0f32;
+            for t in 0..hd {
+                dotv += qh[t] * krow[t];
+            }
+            att[ki] = dotv * scale;
+            maxv = maxv.max(att[ki]);
+        }
+        let mut denom = 0.0f32;
+        for a in att.iter_mut() {
+            *a = (*a - maxv).exp();
+            denom += *a;
+        }
+        for ki in 0..=pos {
+            let wgt = att[ki] / denom;
+            let vrow = &vc.row(ki)[off..off + hd];
+            for t in 0..hd {
+                ctx[off + t] += wgt * vrow[t];
+            }
+        }
+    }
+}
+
+/// Dense or top-1-MoE MLP over one activation vector. Shared with the
+/// batched decoder, whose MoE rows route per sequence.
+pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32]) -> Vec<f32> {
     match mlp {
         MlpRefs::Dense(w) => expert_forward(w, x),
         MlpRefs::Moe { router, experts } => {
@@ -567,7 +699,7 @@ fn rope_vec(x: &mut [f32], cos: &[f32], sin: &[f32], heads: usize, hd: usize) {
     }
 }
 
-fn argmax(xs: &[f32]) -> usize {
+pub(crate) fn argmax(xs: &[f32]) -> usize {
     xs.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -660,6 +792,18 @@ mod tests {
         dec.step(b'a').unwrap();
         dec.step(b'b').unwrap();
         assert!(dec.step(b'c').is_err());
+    }
+
+    #[test]
+    fn generate_rejects_request_beyond_capacity_up_front() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw);
+        let mut dec = NativeDecoder::new(&nb, 4).unwrap();
+        let err = dec.generate(b"a prompt far beyond four positions", 2).unwrap_err();
+        assert!(err.to_string().contains("KV"), "unclear capacity error: {err}");
+        // Nothing was fed: the decoder remains usable for a fitting request.
+        assert_eq!(dec.pos, 0);
+        assert_eq!(dec.generate(b"ok", 3).unwrap().len(), 3);
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //!   the input and per-group partial sums carrying the shift term, each
 //!   output element is `Σ_g s_g·(q·x t) + s_g z_g Σ(x t)` straight from the
 //!   packed codes.
+//! * [`QuantizedTensor::dequant_matmul_shared`] — the continuous-batching
+//!   decode kernel: same code-space arithmetic as `dequant_matvec`, but each
+//!   weight row is unpacked **once per step and shared across every live
+//!   sequence's activation row**, so batched decode is bit-identical to
+//!   single-sequence decode while amortizing the unpack `batch`×.
 //!
 //! 4-bit and 8-bit codes take specialized unpack paths (two-per-byte nibble
 //! split / direct copy); 2/3/5/6/7-bit fall back to a generic LSB-first
@@ -234,42 +239,111 @@ impl QuantizedTensor {
         y
     }
 
-    /// Fused dequantize-matvec: `y = W · x` for one activation vector
-    /// (`x.len() == cols`), the autoregressive-decode hot path.
-    ///
-    /// Works entirely in code space: the column scale is folded into the
-    /// input once (`xt = x ⊙ t`), per-group partial sums of `xt` carry the
-    /// shift term, and each output element needs only one pass over its
-    /// packed codes — dequantized weights are never materialized.
-    pub fn dequant_matvec(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.cols, "dequant_matvec shape mismatch");
+    /// Fold the SINQ column scale into one activation vector (`xt = x ⊙ t`)
+    /// and precompute the per-group sums of `xt` that carry the shift term.
+    fn fold_input(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
         let g = self.group_size;
-        let ng = self.n_groups();
         let xt: Vec<f32> = match &self.col_scale {
             Some(t) => x.iter().zip(t.iter()).map(|(&a, &b)| a * b).collect(),
             None => x.to_vec(),
         };
-        let mut gsum = vec![0.0f32; ng];
+        let mut gsum = vec![0.0f32; self.n_groups()];
         for (gi, slot) in gsum.iter_mut().enumerate() {
             let j1 = ((gi + 1) * g).min(self.cols);
             *slot = xt[gi * g..j1].iter().sum();
         }
+        (xt, gsum)
+    }
+
+    /// Unpack row `i`'s codes and decode them to grid levels (scales not
+    /// applied), using `codes` as unpack scratch.
+    fn decode_levels_into(&self, i: usize, levels: &mut [f32], codes: &mut [u8]) {
+        self.unpack_codes_into(i, codes);
+        for (lv, &c) in levels.iter_mut().zip(codes.iter()) {
+            *lv = self.lut[c as usize];
+        }
+    }
+
+    /// One output element of the decode kernels: group-wise
+    /// `Σ_g s_g·dot(levels_g, xt_g) + s_g·z_g·gsum_g` over row `i`'s decoded
+    /// levels. Both decode kernels funnel through here, so their results are
+    /// bit-identical for any given activation row.
+    fn row_accum(&self, i: usize, levels: &[f32], xt: &[f32], gsum: &[f32]) -> f32 {
+        let g = self.group_size;
+        let mut acc = 0.0f32;
+        for (gi, &gs) in gsum.iter().enumerate() {
+            let j0 = gi * g;
+            let j1 = ((gi + 1) * g).min(self.cols);
+            let d = dot(&levels[j0..j1], &xt[j0..j1], j1 - j0);
+            let s = self.scales.at(i, gi);
+            let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
+            acc += s * d + s * z * gs;
+        }
+        acc
+    }
+
+    /// Fused dequantize-matvec: `y = W · x` for one activation vector
+    /// (`x.len() == cols`), the autoregressive-decode hot path.
+    ///
+    /// Works in code space: the column scale is folded into the input once
+    /// (`xt = x ⊙ t`), per-group partial sums of `xt` carry the shift term,
+    /// and each weight row is decoded to its grid levels once then reduced
+    /// with a vectorizable dot — full dequantized weights (with scales
+    /// applied) are never materialized. The per-element arithmetic lives in
+    /// `row_accum`, shared with [`QuantizedTensor::dequant_matmul_shared`],
+    /// so single-sequence and batched decode agree bit-for-bit.
+    pub fn dequant_matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols, "dequant_matvec shape mismatch");
+        let (xt, gsum) = self.fold_input(x);
         let mut y = vec![0.0f32; self.rows];
         let mut codes = vec![0u8; self.cols];
+        let mut levels = vec![0.0f32; self.cols];
         for (i, yi) in y.iter_mut().enumerate() {
-            self.unpack_codes_into(i, &mut codes);
-            let mut acc = 0.0f32;
-            for gi in 0..ng {
-                let j1 = ((gi + 1) * g).min(self.cols);
-                let mut d = 0.0f32;
-                for j in gi * g..j1 {
-                    d += self.lut[codes[j] as usize] * xt[j];
+            self.decode_levels_into(i, &mut levels, &mut codes);
+            *yi = self.row_accum(i, &levels, &xt, &gsum);
+        }
+        y
+    }
+
+    /// Fused dequantize-matmul for the batched decode path: `y = x · Wᵀ`
+    /// with `x` holding one activation row per live sequence.
+    ///
+    /// Each weight row's packed codes are unpacked and decoded to grid
+    /// levels **once per step** and reduced against every activation row —
+    /// the continuous-batching amortization (one unpack, many sequences).
+    /// Per activation row it runs exactly
+    /// [`QuantizedTensor::dequant_matvec`]'s arithmetic, so batched decode
+    /// reproduces single-sequence decode bit-for-bit at any batch size, and
+    /// results are deterministic regardless of `threads`.
+    pub fn dequant_matmul_shared(&self, x: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(x.cols, self.cols, "dequant_matmul_shared shape mismatch");
+        let (m, n, k) = (x.rows, self.rows, self.cols);
+        let folded: Vec<_> = (0..m).map(|r| self.fold_input(x.row(r))).collect();
+        let n_blocks = n.div_ceil(ROW_BLOCK);
+        let threads = if m * n * k < PARALLEL_THRESHOLD { 1 } else { threads.max(1) };
+        let blocks: Vec<usize> = (0..n_blocks).collect();
+        let partials: Vec<Vec<f32>> = threadpool::map_indexed(&blocks, threads, |_, &b| {
+            let r0 = b * ROW_BLOCK;
+            let r1 = ((b + 1) * ROW_BLOCK).min(n);
+            let rb = r1 - r0;
+            let mut out = vec![0.0f32; m * rb];
+            let mut codes = vec![0u8; k];
+            let mut levels = vec![0.0f32; k];
+            for (ti, i) in (r0..r1).enumerate() {
+                self.decode_levels_into(i, &mut levels, &mut codes);
+                for (xi, (xt, gsum)) in folded.iter().enumerate() {
+                    out[xi * rb + ti] = self.row_accum(i, &levels, xt, gsum);
                 }
-                let s = self.scales.at(i, gi);
-                let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
-                acc += s * d + s * z * gsum[gi];
             }
-            *yi = acc;
+            out
+        });
+        let mut y = Matrix::zeros(m, n);
+        for (b, part) in partials.iter().enumerate() {
+            let r0 = b * ROW_BLOCK;
+            let rb = ((b + 1) * ROW_BLOCK).min(n) - r0;
+            for xi in 0..m {
+                y.row_mut(xi)[r0..r0 + rb].copy_from_slice(&part[xi * rb..(xi + 1) * rb]);
+            }
         }
         y
     }
@@ -305,6 +379,12 @@ mod tests {
 
         let mv = qt.dequant_matvec(x.row(0));
         assert!(max_abs_diff(&mv, reference.row(0)) < 1e-4, "{label}: matvec diverges");
+
+        let shared = qt.dequant_matmul_shared(&x, 2);
+        assert!(
+            max_abs_diff(&shared.data, &reference.data) < 1e-4,
+            "{label}: shared decode matmul diverges"
+        );
     }
 
     #[test]
@@ -339,6 +419,37 @@ mod tests {
         let a = qt.dequant_matmul(&x, 1);
         let b = qt.dequant_matmul(&x, 4);
         assert_eq!(a.data, b.data, "parallel tiling must be deterministic");
+        let sa = qt.dequant_matmul_shared(&x, 1);
+        let sb = qt.dequant_matmul_shared(&x, 4);
+        assert_eq!(sa.data, sb.data, "shared decode tiling must be deterministic");
+    }
+
+    /// The batched-decode contract: `dequant_matmul_shared` must reproduce
+    /// `dequant_matvec` bit-for-bit per activation row — this is what makes
+    /// batched greedy decode exactly equal to single-sequence decode.
+    #[test]
+    fn shared_matmul_is_bitwise_equal_to_matvec_rows() {
+        let mut rng = Rng::new(21);
+        // Ragged tail group (cols=100, g=64) and ragged row tile (rows=37).
+        let w = Matrix::randn(37, 100, 0.05, &mut rng);
+        let x = Matrix::randn(6, 100, 1.0, &mut rng);
+        for bits in [2u32, 3, 4, 5, 8] {
+            for method in [Method::Rtn, Method::Sinq] {
+                let q = quantize_matrix(&w, &QuantConfig::new(method, bits), None).unwrap();
+                let qt = QuantizedTensor::from_linear(&q).unwrap();
+                let y = qt.dequant_matmul_shared(&x, 2);
+                for r in 0..x.rows {
+                    let mv = qt.dequant_matvec(x.row(r));
+                    assert_eq!(
+                        y.row(r),
+                        mv.as_slice(),
+                        "{} {}b row {r}: shared kernel drifted from matvec",
+                        method.name(),
+                        bits
+                    );
+                }
+            }
+        }
     }
 
     #[test]

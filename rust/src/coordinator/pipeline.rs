@@ -65,14 +65,17 @@ pub fn run_and_save(
 /// Quantize `mw` and wire the result straight into a [`NativeBackend`] —
 /// no `.stz` round-trip, no artifacts. This is the serving path for boxes
 /// without XLA: the packed codes produced by the scheduler become the
-/// backend's resident weight format directly.
+/// backend's resident weight format directly. `max_batch` caps the
+/// backend's serving concurrency (scoring batch size and the number of
+/// continuous-batching generation slots).
 pub fn run_to_backend(
     mw: &ModelWeights,
     qcfg: &QuantConfig,
     opts: &PipelineOpts,
+    max_batch: usize,
 ) -> anyhow::Result<NativeBackend> {
     let (qm, _) = run(mw, qcfg, opts)?;
-    Ok(NativeBackend::from_quantized(&qm))
+    Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch))
 }
 
 /// PJRT-accelerated Algorithm 1: run the lowered Pallas `sinq_quantize`
@@ -132,7 +135,7 @@ mod tests {
     fn pipeline_feeds_native_backend() {
         let mw = load_or_synthetic("/nonexistent", "pico", 73);
         let cfg = QuantConfig::new(Method::Sinq, 4);
-        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default()).unwrap();
+        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default(), 8).unwrap();
         assert!(be.quantized_layer_count() > 0);
         let logits = be.forward(b"pipeline to backend").unwrap();
         assert!(logits.data.iter().all(|v| v.is_finite()));

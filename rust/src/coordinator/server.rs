@@ -1,12 +1,17 @@
-//! Serving coordinator: request router + dynamic batcher.
+//! Serving coordinator: request router + dynamic batcher + generation queue.
 //!
 //! Scoring requests (perplexity windows, QA option scoring) arrive on a
 //! channel; the batcher groups up to `backend.max_batch()` compatible
 //! requests within a `max_wait` window and dispatches one backend execution
-//! per batch — the same shape as a vLLM-style router scaled to one box. The
-//! server is generic over [`InferenceBackend`], so the same loop drives the
-//! PJRT artifact executor *and* the native fused-kernel engine (which needs
-//! no artifacts at all). Backpressure is a bounded queue: submitters block
+//! per batch — the same shape as a vLLM-style router scaled to one box.
+//! Generation requests ride the same channel and drain into
+//! [`InferenceBackend::generate_batch`]: on the native backend that is the
+//! continuous-batching `BatchDecoder`, which admits the queued requests
+//! into KV slots and recycles slots as sequences finish, so one dispatched
+//! group can hold more requests than the backend has slots. The server is
+//! generic over [`InferenceBackend`], so the same loop drives the PJRT
+//! artifact executor *and* the native fused-kernel engine (which needs no
+//! artifacts at all). Backpressure is a bounded queue: submitters block
 //! when the queue is full.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -22,11 +27,20 @@ pub struct ScoreRequest {
     pub reply: SyncSender<anyhow::Result<Matrix>>,
 }
 
+/// One generation request: a prompt plus a token budget, answered with the
+/// greedily generated continuation.
+pub struct GenerateRequest {
+    pub prompt: Vec<u8>,
+    pub max_new: usize,
+    pub reply: SyncSender<anyhow::Result<Vec<u8>>>,
+}
+
 /// Channel item: a request or an explicit shutdown (outstanding
 /// [`ScoreClient`] clones keep the channel open, so closure alone cannot
 /// signal termination).
 enum Msg {
     Score(ScoreRequest),
+    Generate(GenerateRequest),
     Shutdown,
 }
 
@@ -36,6 +50,12 @@ pub struct ServerStats {
     pub requests: usize,
     pub batches: usize,
     pub tokens: usize,
+    /// Generation requests served.
+    pub gen_requests: usize,
+    /// Generation groups dispatched to the backend.
+    pub gen_batches: usize,
+    /// Tokens generated across all generation requests.
+    pub generated: usize,
 }
 
 /// The batching server: owns the inference backend on a worker thread.
@@ -66,6 +86,9 @@ impl BatchServer {
                     while let Ok(m) = rx.recv() {
                         match m {
                             Msg::Score(req) => {
+                                let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                            }
+                            Msg::Generate(req) => {
                                 let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
                             }
                             Msg::Shutdown => break,
@@ -131,6 +154,17 @@ impl ScoreClient {
             Err(_) => Err(Vec::new()),
         }
     }
+
+    /// Blocking generation request → greedy continuation of `max_new`
+    /// tokens. Concurrent callers are grouped into one continuous-batching
+    /// dispatch on the server thread.
+    pub fn generate(&self, prompt: Vec<u8>, max_new: usize) -> anyhow::Result<Vec<u8>> {
+        let (reply, rx) = sync_channel(1);
+        self.tx
+            .send(Msg::Generate(GenerateRequest { prompt, max_new, reply }))
+            .map_err(|_| anyhow::anyhow!("server shut down"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped reply"))?
+    }
 }
 
 fn serve_loop<B: InferenceBackend>(
@@ -139,23 +173,32 @@ fn serve_loop<B: InferenceBackend>(
     max_wait: Duration,
 ) -> ServerStats {
     let batch_cap = backend.max_batch().max(1);
+    // Generation groups admit up to 2× the backend's slot count: the
+    // continuous-batching decoder refills freed slots from its pending
+    // queue mid-run, so oversubscription raises utilization rather than
+    // latency.
+    let gen_cap = 2 * batch_cap;
     let mut stats = ServerStats::default();
     let mut shutdown = false;
     loop {
         // Block for the first request of a batch.
-        let first = match rx.recv() {
-            Ok(Msg::Score(r)) => r,
+        let mut scores: Vec<ScoreRequest> = Vec::new();
+        let mut gens: Vec<GenerateRequest> = Vec::new();
+        match rx.recv() {
+            Ok(Msg::Score(r)) => scores.push(r),
+            Ok(Msg::Generate(r)) => gens.push(r),
             Ok(Msg::Shutdown) | Err(_) => return stats,
-        };
-        let mut batch = vec![first];
+        }
+        // Admit more work of either kind within the batching window.
         let deadline = Instant::now() + max_wait;
-        while batch.len() < batch_cap {
+        while scores.len() < batch_cap && gens.len() < gen_cap {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(Msg::Score(r)) => batch.push(r),
+                Ok(Msg::Score(r)) => scores.push(r),
+                Ok(Msg::Generate(r)) => gens.push(r),
                 Ok(Msg::Shutdown) => {
                     shutdown = true;
                     break;
@@ -164,23 +207,55 @@ fn serve_loop<B: InferenceBackend>(
             }
         }
 
-        let seqs: Vec<&[u8]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
-        stats.requests += batch.len();
-        stats.batches += 1;
-        stats.tokens += seqs.iter().map(|s| s.len()).sum::<usize>();
-        match backend.forward_batch(&seqs) {
-            Ok(results) => {
-                for (req, m) in batch.into_iter().zip(results) {
-                    let _ = req.reply.send(Ok(m));
+        if !scores.is_empty() {
+            let batch = scores;
+            let seqs: Vec<&[u8]> = batch.iter().map(|r| r.tokens.as_slice()).collect();
+            stats.requests += batch.len();
+            stats.batches += 1;
+            stats.tokens += seqs.iter().map(|s| s.len()).sum::<usize>();
+            match backend.forward_batch(&seqs) {
+                Ok(results) => {
+                    for (req, m) in batch.into_iter().zip(results) {
+                        let _ = req.reply.send(Ok(m));
+                    }
                 }
-            }
-            Err(e) => {
-                let msg = format!("{e}");
-                for req in batch {
-                    let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                Err(e) => {
+                    let msg = format!("{e}");
+                    for req in batch {
+                        let _ = req.reply.send(Err(anyhow::anyhow!("{msg}")));
+                    }
                 }
             }
         }
+
+        if !gens.is_empty() {
+            let batch = gens;
+            let prompts: Vec<&[u8]> = batch.iter().map(|r| r.prompt.as_slice()).collect();
+            let max_new: Vec<usize> = batch.iter().map(|r| r.max_new).collect();
+            stats.gen_requests += batch.len();
+            stats.gen_batches += 1;
+            match backend.generate_batch(&prompts, &max_new) {
+                Ok(outs) => {
+                    for (req, toks) in batch.into_iter().zip(outs) {
+                        stats.generated += toks.len();
+                        let _ = req.reply.send(Ok(toks));
+                    }
+                }
+                Err(_) => {
+                    // A grouped failure (e.g. one invalid request) must not
+                    // poison the whole window: retry each request alone so
+                    // only the genuinely bad ones fail.
+                    for req in batch {
+                        let result = backend.generate(&req.prompt, req.max_new);
+                        if let Ok(toks) = &result {
+                            stats.generated += toks.len();
+                        }
+                        let _ = req.reply.send(result);
+                    }
+                }
+            }
+        }
+
         if shutdown {
             return stats;
         }
@@ -216,6 +291,11 @@ mod tests {
         fn max_batch(&self) -> usize {
             4
         }
+
+        fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+            anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+            Ok(vec![prompt.len() as u8; n])
+        }
     }
 
     #[test]
@@ -244,6 +324,64 @@ mod tests {
         assert_eq!(stats.requests, 10);
         assert_eq!(stats.tokens, 80);
         assert!(stats.batches >= 3, "4-way cap ⇒ ≥3 batches, got {}", stats.batches);
+    }
+
+    #[test]
+    fn generation_queue_groups_and_answers() {
+        let server =
+            BatchServer::spawn(|| Ok(Echo { calls: 0 }), 16, Duration::from_millis(2));
+        let client = server.client();
+        let handles: Vec<_> = (1..=6usize)
+            .map(|i| {
+                let c = client.clone();
+                std::thread::spawn(move || c.generate(vec![0u8; i], 4 + i))
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.join().unwrap().unwrap();
+            assert_eq!(out, vec![(i + 1) as u8; 5 + i]);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.gen_requests, 6);
+        assert_eq!(stats.generated, (5..=10).sum::<usize>());
+        assert!(stats.gen_batches >= 1);
+    }
+
+    #[test]
+    fn invalid_generation_request_does_not_poison_group() {
+        let server =
+            BatchServer::spawn(|| Ok(Echo { calls: 0 }), 16, Duration::from_millis(5));
+        let client = server.client();
+        let bad = {
+            let c = client.clone();
+            std::thread::spawn(move || c.generate(Vec::new(), 3))
+        };
+        let good = {
+            let c = client.clone();
+            std::thread::spawn(move || c.generate(vec![9u8; 2], 3))
+        };
+        assert!(bad.join().unwrap().is_err(), "empty prompt must fail");
+        assert_eq!(good.join().unwrap().unwrap(), vec![2u8; 3]);
+        server.shutdown();
+    }
+
+    #[test]
+    fn mixed_scoring_and_generation_both_answered() {
+        let server =
+            BatchServer::spawn(|| Ok(Echo { calls: 0 }), 16, Duration::from_millis(2));
+        let client = server.client();
+        let g = {
+            let c = client.clone();
+            std::thread::spawn(move || c.generate(vec![7u8; 3], 2))
+        };
+        let s = {
+            let c = client.clone();
+            std::thread::spawn(move || c.score(vec![1u8; 8]))
+        };
+        assert_eq!(g.join().unwrap().unwrap(), vec![3u8, 3]);
+        assert_eq!(s.join().unwrap().unwrap().rows, 8);
+        let stats = server.shutdown();
+        assert_eq!((stats.requests, stats.gen_requests), (1, 1));
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //!
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
-//! sinq eval     --model tiny [--backend native|pjrt] [--quantized q.stz] [--corpus wiki]
+//! sinq eval     --model tiny [--backend native|pjrt|auto] [--quantized q.stz]
 //! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny]
-//! sinq serve    --model tiny [--backend native|pjrt] [--requests 32]   (batching demo)
+//! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
+//!               [--max-batch 8] [--max-new-tokens 16]
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
 //!
@@ -14,8 +15,12 @@
 //! machine (no `artifacts/`, no XLA, no Python; missing checkpoints and
 //! corpora fall back to deterministic synthetic stand-ins with a notice).
 //! `--backend pjrt` runs the AOT artifacts from `make artifacts`, which the
-//! `analyze`/`table` experiment commands also require. `--fast` trims sweep
-//! sizes for smoke runs.
+//! `analyze`/`table` experiment commands also require; `--backend auto`
+//! probes for artifacts + a usable PJRT client and falls back to native,
+//! reporting the chosen engine. `serve` runs a scoring phase and a
+//! continuous-batched generation phase (`--max-batch` slots, each request
+//! generating `--max-new-tokens`). `--fast` trims sweep sizes for smoke
+//! runs.
 
 use sinq::backend::{self, BackendKind, BackendSpec};
 use sinq::coordinator::pipeline::{self, PipelineOpts};
@@ -54,25 +59,34 @@ fn print_help() {
     println!(
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
-         sinq eval --model <name> [--backend native|pjrt] [--quantized f.stz] [--corpus wiki|c4]\n  \
+         sinq eval --model <name> [--backend native|pjrt|auto] [--quantized f.stz] [--corpus wiki|c4]\n  \
          sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>]\n  \
-         sinq serve --model <name> [--backend native|pjrt] [--requests N] [--quantized f.stz]\n  \
+         sinq serve --model <name> [--backend native|pjrt|auto] [--requests N] [--quantized f.stz]\n             \
+         [--max-batch N] [--max-new-tokens N]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Backends (serve/eval):\n  \
          native  pure-Rust fused dequant-matmul engine on packed weights (default;\n          \
          needs no artifacts/XLA/Python — synthetic fallbacks cover missing files).\n          \
          With --quantized f.stz it executes the packed codes directly; with\n          \
          --method/--bits on `serve` it quantizes in-process first.\n  \
-         pjrt    AOT XLA artifacts via PJRT (requires `make artifacts`)\n\n\
+         pjrt    AOT XLA artifacts via PJRT (requires `make artifacts`)\n  \
+         auto    pjrt when artifacts + a PJRT client are usable, else native\n\n\
          Common flags: --art-dir artifacts  --models pico,tiny,small\n\
          Methods: rtn hadamard hqq sinq awq a-sinq gptq hadamard+gptq crossquant codebook bnb higgs"
     );
 }
 
-fn backend_kind(args: &Args) -> anyhow::Result<BackendKind> {
+/// Parse `--backend` and resolve `auto` to a concrete engine, printing the
+/// probe's choice so stats lines always name the engine that actually ran.
+fn backend_kind(args: &Args, art_dir: &str) -> anyhow::Result<BackendKind> {
     let name = args.get("backend", "native");
-    BackendKind::parse(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}' (expected native|pjrt)"))
+    let kind = BackendKind::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}' (expected native|pjrt|auto)"))?;
+    let resolved = backend::resolve(kind, art_dir);
+    if kind == BackendKind::Auto {
+        println!("backend auto: selected '{}' engine", resolved.name());
+    }
+    Ok(resolved)
 }
 
 fn quant_config(args: &Args) -> anyhow::Result<QuantConfig> {
@@ -134,7 +148,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let model = args.get("model", "tiny");
     let corpus_kind = args.get("corpus", "wiki");
-    let kind = backend_kind(args)?;
+    let kind = backend_kind(args, &art)?;
     let ppl_value = match kind {
         BackendKind::Native => {
             // Artifact-free path: fused-kernel engine + batched scoring
@@ -157,6 +171,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
                 ctx.ppl_fp(&mw, &corpus_kind)?
             }
         }
+        BackendKind::Auto => unreachable!("auto is resolved in backend_kind"),
     };
     println!("{model} {corpus_kind} perplexity ({} backend): {ppl_value:.3}", kind.name());
     Ok(())
@@ -184,9 +199,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let model = args.get("model", "tiny");
     let n_requests: usize = args.num("requests", 32);
+    let max_batch: usize = args.num("max-batch", 8);
+    let max_new: usize = args.num("max-new-tokens", 16);
 
-    let mut spec = BackendSpec::new(backend_kind(args)?, &art, &model);
+    let mut spec = BackendSpec::new(backend_kind(args, &art)?, &art, &model);
     spec.quantized = args.opt("quantized").map(String::from);
+    spec.max_batch = Some(max_batch);
     let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
     if wants_quantize {
         // `serve --backend native --method sinq --bits 4`: quantize
@@ -210,6 +228,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         )
     };
     let corpus = Corpus::load_or_synthetic(&art, "wiki", "eval");
+
+    // --- Phase 1: batched scoring ---------------------------------------
     let windows = corpus.eval_windows(128, n_requests);
     let client = server.client();
     let t0 = std::time::Instant::now();
@@ -227,16 +247,52 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             ok += 1;
         }
     }
-    let secs = t0.elapsed().as_secs_f64();
+    let score_secs = t0.elapsed().as_secs_f64();
+
+    // --- Phase 2: continuous-batched generation (native engine only; the
+    // PJRT forward executor has no autoregressive entry point) ------------
+    let prompts = if spec.kind == BackendKind::Native {
+        corpus.eval_windows(32, n_requests)
+    } else {
+        println!("skipping generation phase: the {} backend does not generate", spec.kind.name());
+        Vec::new()
+    };
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let c = client.clone();
+            let prompt = p.to_vec();
+            std::thread::spawn(move || c.generate(prompt, max_new).map(|t| t.len()))
+        })
+        .collect();
+    let mut gen_ok = 0;
+    for h in handles {
+        if h.join().unwrap().is_ok() {
+            gen_ok += 1;
+        }
+    }
+    let gen_secs = t0.elapsed().as_secs_f64();
+    let n_gen = prompts.len();
+
     let stats = server.shutdown();
     println!(
-        "served {ok}/{n_requests} scoring requests on the {} backend in {secs:.2}s \
+        "served {ok}/{n_requests} scoring requests on the {} backend in {score_secs:.2}s \
          ({} batches, avg batch {:.2}, {:.0} tok/s)",
         spec.kind.name(),
         stats.batches,
         stats.requests as f64 / stats.batches.max(1) as f64,
-        stats.tokens as f64 / secs
+        stats.tokens as f64 / score_secs
     );
+    if n_gen > 0 {
+        println!(
+            "generated for {gen_ok}/{n_gen} requests in {gen_secs:.2}s \
+             ({} tokens across {} continuous batches of ≤{max_batch} slots, {:.0} gen tok/s)",
+            stats.generated,
+            stats.gen_batches,
+            stats.generated as f64 / gen_secs.max(1e-9)
+        );
+    }
     Ok(())
 }
 

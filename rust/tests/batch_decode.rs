@@ -1,0 +1,158 @@
+//! Batched-vs-single decode parity: greedy tokens from the
+//! continuous-batching `BatchDecoder` must **exactly** match the
+//! single-sequence `NativeDecoder` per sequence — for RTN and SINQ at 4 and
+//! 8 bits, at batch sizes 1/3/8, including staggered completion where slots
+//! are recycled mid-run. Plus the serving-stack path (`BatchServer`
+//! generation queue) and the KV-capacity rejection regression.
+
+use std::time::Duration;
+
+use sinq::backend::{BatchDecoder, InferenceBackend, NativeBackend, NativeDecoder};
+use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
+use sinq::coordinator::server::BatchServer;
+use sinq::quant::{Method, QuantConfig};
+
+/// Varied prompts and staggered token budgets: sequences finish at
+/// different steps, so slots are recycled whenever `slots < requests`.
+fn requests() -> Vec<(Vec<u8>, usize)> {
+    vec![
+        (b"the quantized model".to_vec(), 9),
+        (b"sinkhorn".to_vec(), 17),
+        (b"fused kernels serve packed weights".to_vec(), 4),
+        (b"a".to_vec(), 12),
+        (b"batch decode parity".to_vec(), 7),
+        (b"low bit precision".to_vec(), 15),
+        (b"kv cache slots".to_vec(), 2),
+        (b"native backend".to_vec(), 11),
+    ]
+}
+
+fn single_tokens(be: &NativeBackend, prompt: &[u8], n: usize) -> Vec<u8> {
+    let mut dec = NativeDecoder::new(be, prompt.len() + n + 1).expect("decoder");
+    dec.generate(prompt, n).expect("single decode")
+}
+
+fn assert_parity(be: &NativeBackend, slots: usize, label: &str) {
+    let reqs = requests();
+    let capacity = reqs.iter().map(|(p, n)| p.len() + n + 1).max().unwrap();
+    let mut dec = BatchDecoder::new(be, slots, capacity).expect("batch decoder");
+    for (i, (prompt, n)) in reqs.iter().enumerate() {
+        dec.submit(i, prompt, *n).expect("submit");
+    }
+    let outs = dec.run().expect("batched decode");
+    assert_eq!(outs.len(), reqs.len(), "{label}: lost requests");
+    for out in &outs {
+        let (prompt, n) = &reqs[out.id];
+        assert_eq!(out.tokens.len(), *n, "{label}: request {} short", out.id);
+        assert_eq!(
+            out.tokens,
+            single_tokens(be, prompt, *n),
+            "{label}: batched tokens diverged from NativeDecoder on request {}",
+            out.id
+        );
+    }
+    let stats = dec.stats();
+    assert_eq!(stats.completed, reqs.len());
+    let want_peak = slots.min(reqs.len());
+    assert_eq!(stats.peak_batch, want_peak, "{label}: slots should fill completely");
+}
+
+/// The headline guarantee: RTN and SINQ at 4/8-bit on the tiny model,
+/// batch sizes 1, 3 (slot recycling: 8 requests through 3 slots), and 8.
+#[test]
+fn batched_tokens_match_single_sequence_rtn_sinq_4_8_bit() {
+    let mw = load_or_synthetic("/nonexistent", "tiny", 2001);
+    for method in [Method::Rtn, Method::Sinq] {
+        for bits in [4u32, 8] {
+            let qm = quantize_simple(&mw, &QuantConfig::new(method, bits), None).unwrap();
+            let be = NativeBackend::from_quantized(&qm);
+            for slots in [1usize, 3, 8] {
+                assert_parity(&be, slots, &format!("{} {}b batch {}", method.name(), bits, slots));
+            }
+        }
+    }
+}
+
+/// Dense f32 weights take the per-row dot path in the batched kernels;
+/// parity must hold there too (and on the MoE routing arm).
+#[test]
+fn batched_tokens_match_single_sequence_dense_and_moe() {
+    for (family, seed) in [("pico", 2002u64), ("tiny_moe", 2003)] {
+        let mw = load_or_synthetic("/nonexistent", family, seed);
+        let be = NativeBackend::from_weights(&mw);
+        assert_parity(&be, 3, &format!("{family} fp32 batch 3"));
+    }
+}
+
+/// End-to-end through the serving stack: the `BatchServer` generation queue
+/// groups concurrent clients into one continuous-batching dispatch, and the
+/// answers still equal single-sequence decode exactly.
+#[test]
+fn server_generation_queue_matches_single_sequence() {
+    let server = BatchServer::spawn(
+        || {
+            let mw = load_or_synthetic("/nonexistent", "tiny", 2001);
+            let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None)?;
+            Ok(NativeBackend::from_quantized(&qm).with_max_batch(3))
+        },
+        32,
+        Duration::from_millis(2),
+    );
+    let client = server.client();
+    let reqs = requests();
+    let handles: Vec<_> = reqs
+        .iter()
+        .map(|(prompt, n)| {
+            let c = client.clone();
+            let (p, n) = (prompt.clone(), *n);
+            std::thread::spawn(move || c.generate(p, n))
+        })
+        .collect();
+    let served: Vec<Vec<u8>> = handles.into_iter().map(|h| h.join().unwrap().unwrap()).collect();
+    let stats = server.shutdown();
+    assert_eq!(stats.gen_requests, reqs.len());
+    assert_eq!(stats.generated, reqs.iter().map(|(_, n)| n).sum::<usize>());
+
+    let mw = load_or_synthetic("/nonexistent", "tiny", 2001);
+    let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+    let be = NativeBackend::from_quantized(&qm);
+    for ((prompt, n), got) in reqs.iter().zip(&served) {
+        assert_eq!(got, &single_tokens(&be, prompt, *n), "served generation diverged");
+    }
+}
+
+/// Regression: over-long requests are rejected with a clear error by both
+/// decoders instead of overflowing the preallocated KV cache.
+#[test]
+fn both_decoders_reject_prompts_beyond_kv_capacity() {
+    let mw = load_or_synthetic("/nonexistent", "pico", 2004);
+    let be = NativeBackend::from_weights(&mw);
+
+    let mut single = NativeDecoder::new(&be, 6).unwrap();
+    let err = single.generate(b"this prompt is far too long", 4).unwrap_err();
+    assert!(err.to_string().contains("KV"), "unclear single-decoder error: {err}");
+    assert_eq!(single.pos, 0, "failed request must not consume cache positions");
+
+    let mut batch = BatchDecoder::new(&be, 2, 6).unwrap();
+    let err = batch.submit(0, b"this prompt is far too long", 4).unwrap_err();
+    assert!(err.to_string().contains("KV"), "unclear batch-decoder error: {err}");
+    batch.submit(1, b"fits", 3).unwrap();
+    let outs = batch.run().unwrap();
+    assert_eq!(outs.len(), 1, "the fitting request must still complete");
+    assert_eq!(outs[0].tokens.len(), 3);
+}
+
+/// `generate` through the `InferenceBackend` trait object must agree with
+/// the batched entry point (the server dispatches through the latter).
+#[test]
+fn trait_generate_and_generate_batch_agree() {
+    let mw = load_or_synthetic("/nonexistent", "tiny", 2005);
+    let qm = quantize_simple(&mw, &QuantConfig::new(Method::Rtn, 4), None).unwrap();
+    let mut be: Box<dyn InferenceBackend> =
+        Box::new(NativeBackend::from_quantized(&qm).with_max_batch(4));
+    let prompts: Vec<Vec<u8>> = vec![b"alpha".to_vec(), b"bravo charlie".to_vec()];
+    let prompt_refs: Vec<&[u8]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let batched = be.generate_batch(&prompt_refs, &[10, 6]).unwrap();
+    assert_eq!(batched[0], be.generate(b"alpha", 10).unwrap());
+    assert_eq!(batched[1], be.generate(b"bravo charlie", 6).unwrap());
+}

@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# Validate the BENCH_*.json summaries emitted by `cargo bench --bench
+# backend` / `--bench decode` before CI archives them: each file must be
+# well-formed JSON with a named bench and a non-empty `results` array of
+# finite numbers. The decode report must additionally carry per-batch
+# throughput (the ≥8-batch row is the amortization headline). Fails loudly
+# so a silently-broken bench cannot upload garbage artifacts.
+set -euo pipefail
+
+if [ "$#" -eq 0 ]; then
+  echo "usage: $0 BENCH_backend.json [BENCH_decode.json ...]" >&2
+  exit 2
+fi
+
+for f in "$@"; do
+  if [ ! -f "$f" ]; then
+    echo "check_bench: missing $f" >&2
+    exit 1
+  fi
+  python3 - "$f" <<'PYEOF'
+import json
+import math
+import sys
+
+path = sys.argv[1]
+with open(path) as fh:
+    doc = json.load(fh)
+
+bench = doc.get("bench")
+assert isinstance(bench, str) and bench, f"{path}: missing 'bench' name"
+results = doc.get("results")
+assert isinstance(results, list) and results, f"{path}: empty or missing 'results'"
+
+for row in results:
+    assert isinstance(row, dict), f"{path}: non-object result row {row!r}"
+    nums = {k: v for k, v in row.items() if isinstance(v, (int, float))}
+    assert nums, f"{path}: result row has no numeric fields: {row!r}"
+    for key, val in nums.items():
+        assert math.isfinite(val), f"{path}: non-finite '{key}' in {row!r}"
+
+if bench == "decode":
+    batches = []
+    for row in results:
+        assert row.get("tokens_per_sec", 0) > 0, f"{path}: zero throughput row {row!r}"
+        batches.append(row.get("batch", 0))
+    assert any(b >= 8 for b in batches), f"{path}: no batch ≥ 8 row (got {batches})"
+    assert any(b == 1 for b in batches), f"{path}: no batch-1 baseline row"
+
+print(f"check_bench: {path} ok ({bench}, {len(results)} rows)")
+PYEOF
+done
