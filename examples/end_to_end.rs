@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
     let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(sinq::quant::AuxPrecision::F32);
     let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
     let mut dec = sinq::runtime::PjrtDecoder::new_w4(
-        &ctx.rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors,
+        ctx.rt()?, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors,
     )?;
     let out = dec.generate(b"The ancient river ", 24)?;
     println!("W4A16 decode sample: {:?}", String::from_utf8_lossy(&out));

@@ -9,19 +9,25 @@
 //! no XLA required. Part 3 pushes the same requests through the
 //! continuous-batching [`BatchDecoder`]: one weight-tile unpack per step is
 //! shared by every live sequence, and the tokens match single-sequence
-//! decode exactly.
+//! decode exactly. Part 4 boots the real HTTP/SSE endpoint
+//! (`sinq::serve::Server`) on a loopback port and streams a generation
+//! over a raw `TcpStream` — the same front-end `sinq serve --listen`
+//! exposes.
 //!
 //! ```bash
 //! cargo run --release --example serving            # works without artifacts
 //! ```
 
+use std::io::{Read, Write};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sinq::backend::{BatchDecoder, InferenceBackend, NativeBackend};
+use sinq::backend::{BatchDecoder, NativeBackend};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::coordinator::server::BatchServer;
 use sinq::data::Corpus;
 use sinq::quant::{Method, QuantConfig};
+use sinq::serve::{ServeOpts, Server};
 
 fn main() -> anyhow::Result<()> {
     let art = "artifacts";
@@ -31,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     // feeds both the router (Part 1) and the decode comparison (Part 2).
     let mw = load_or_synthetic(art, model, 42);
     let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None)?;
-    let mut w4 = NativeBackend::from_quantized(&qm);
+    let w4 = NativeBackend::from_quantized(&qm);
     println!(
         "quantized: {}/{} linears packed (SINQ 4-bit)",
         w4.quantized_layer_count(),
@@ -77,7 +83,7 @@ fn main() -> anyhow::Result<()> {
     let gen_tokens = 64usize;
     let total = (prompt.len() + gen_tokens) as f64;
 
-    let mut fp = NativeBackend::from_weights(&mw);
+    let fp = NativeBackend::from_weights(&mw);
     let t0 = Instant::now();
     let out_fp = fp.generate(prompt, gen_tokens)?;
     let fp_tps = total / t0.elapsed().as_secs_f64();
@@ -129,6 +135,46 @@ fn main() -> anyhow::Result<()> {
         stats.peak_batch,
         stats.steps,
         seq_secs / batch_secs
+    );
+
+    // --- Part 4: the HTTP/SSE serving endpoint ---------------------------
+    // The same packed weights behind a real network surface: the w4 engine
+    // moves into the server (scoring router and streaming engine share it),
+    // then one generation streams over a raw TcpStream and the Prometheus
+    // metrics are read back — exactly what `sinq serve --listen` exposes.
+    let server = Server::start_with_backend(
+        Arc::new(w4),
+        &ServeOpts { listen: "127.0.0.1:0".into(), ..ServeOpts::default() },
+    )?;
+    println!("\nHTTP/SSE endpoint listening on http://{}", server.addr);
+
+    let body = r#"{"prompt": "the sinkhorn", "max_new_tokens": 12, "stream": true}"#;
+    let mut conn = std::net::TcpStream::connect(server.addr)?;
+    write!(
+        conn,
+        "POST /v1/generate HTTP/1.1\r\nHost: demo\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    let mut sse = String::new();
+    conn.read_to_string(&mut sse)?;
+    let tokens = sse.matches("event: token").count();
+    let done = sse.contains("event: done");
+    println!("streamed generation: {tokens} SSE token events, done={done}");
+
+    let mut conn = std::net::TcpStream::connect(server.addr)?;
+    write!(conn, "GET /metrics HTTP/1.1\r\nHost: demo\r\n\r\n")?;
+    let mut metrics = String::new();
+    conn.read_to_string(&mut metrics)?;
+    for line in metrics.lines().filter(|l| {
+        l.starts_with("sinq_serve_tokens_generated_total")
+            || l.starts_with("sinq_serve_tokens_per_sec")
+    }) {
+        println!("  {line}");
+    }
+    let shutdown = server.shutdown();
+    println!(
+        "endpoint served {} generation request(s), {} tokens; shut down cleanly",
+        shutdown.gen_requests, shutdown.gen_tokens
     );
     Ok(())
 }

@@ -4,6 +4,7 @@
 //!
 //! `cargo bench --bench kernel_overhead` (requires `make artifacts`)
 
+use sinq::backend::BackendKind;
 use sinq::report::tables::{table5, Ctx};
 
 fn main() {
@@ -12,7 +13,7 @@ fn main() {
         return;
     }
     // fast mode: 5 timed iterations per variant (full run: `sinq table 5`)
-    let ctx = Ctx::new("artifacts", true).expect("PJRT runtime");
+    let ctx = Ctx::with_backend("artifacts", true, BackendKind::Pjrt).expect("PJRT runtime");
     let t = table5(&ctx).expect("table 5");
     t.print();
     let _ = t.dump("artifacts");

@@ -1,0 +1,148 @@
+//! Serving front-end throughput through the real HTTP/SSE endpoint:
+//! requests/sec and median time-to-first-token at client concurrency
+//! 1/4/16 against a `sinq::serve::Server` bound to 127.0.0.1:0 (tiny
+//! model, SINQ 4-bit, no artifacts needed). Unlike `benches/decode.rs`,
+//! which times the decoder in-process, this path pays the full protocol
+//! stack: TCP accept, HTTP parse, admission control, per-token SSE writes.
+//!
+//! A summary lands in `BENCH_serve.json` at the repository root (validated
+//! by `scripts/check_bench.sh` in CI). Run with `cargo bench --bench
+//! serve`; set `BENCH_QUICK=1` (or pass `--quick`) for the
+//! reduced-iteration CI smoke mode.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use sinq::backend::{BackendKind, BackendSpec};
+use sinq::quant::{Method, QuantConfig};
+use sinq::serve::{ServeOpts, Server};
+use sinq::util::json::Json;
+
+/// One streamed generation over a raw TcpStream; returns (ttft, total)
+/// wall-clock durations measured from the request write.
+fn streamed_request(addr: &str, prompt: &str, max_new: usize) -> (f64, f64) {
+    let body = Json::obj(vec![
+        ("prompt", Json::Str(prompt.into())),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string_compact();
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut w = stream.try_clone().expect("clone");
+    let t0 = Instant::now();
+    write!(
+        w,
+        "POST /v1/generate HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).expect("status line");
+    assert!(line.starts_with("HTTP/1.1 200"), "unexpected response: {line}");
+    let mut ttft = None;
+    let mut done = false;
+    while !done {
+        line.clear();
+        if reader.read_line(&mut line).expect("read event") == 0 {
+            break;
+        }
+        if line.starts_with("event: token") && ttft.is_none() {
+            ttft = Some(t0.elapsed().as_secs_f64());
+        } else if line.starts_with("event: done") || line.starts_with("event: error") {
+            done = true;
+        }
+    }
+    assert!(done, "stream ended without a terminal event");
+    (ttft.expect("no token event"), t0.elapsed().as_secs_f64())
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
+    let (per_client, max_new) = if quick { (2usize, 8usize) } else { (6, 24) };
+
+    let mut spec = BackendSpec::new(BackendKind::Native, "artifacts", "tiny");
+    spec.quantize = Some(QuantConfig::new(Method::Sinq, 4));
+    spec.max_batch = Some(8);
+    let opts = ServeOpts {
+        listen: "127.0.0.1:0".into(),
+        max_batch: 8,
+        max_context: 128,
+        max_queue: 256,
+        default_max_new: max_new,
+        ..ServeOpts::default()
+    };
+    let server = Server::start(&spec, &opts).expect("server start");
+    let addr = server.addr.to_string();
+    println!("serve bench: tiny/sinq-4b on {addr}, +{max_new} tokens per request\n");
+
+    let mut summary: Vec<Json> = Vec::new();
+    for conc in [1usize, 4, 16] {
+        let n_requests = conc * per_client;
+        let ttfts = Arc::new(Mutex::new(Vec::<f64>::new()));
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..conc)
+            .map(|c| {
+                let addr = addr.clone();
+                let ttfts = ttfts.clone();
+                std::thread::spawn(move || {
+                    for r in 0..per_client {
+                        let prompt = format!("client {c} request {r} says hello");
+                        let (ttft, _total) = streamed_request(&addr, &prompt, max_new);
+                        ttfts.lock().unwrap().push(ttft);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread");
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let mut ttfts = ttfts.lock().unwrap().clone();
+        let rps = n_requests as f64 / secs;
+        let ttft_ms = median(&mut ttfts) * 1e3;
+        println!(
+            "concurrency {conc:>2}: {n_requests} requests in {secs:.3}s \
+             → {rps:.1} req/s, median TTFT {ttft_ms:.1} ms"
+        );
+        summary.push(Json::obj(vec![
+            ("batch", Json::Num(conc as f64)),
+            ("requests", Json::Num(n_requests as f64)),
+            ("secs", Json::Num(secs)),
+            ("requests_per_sec", Json::Num(rps)),
+            ("ttft_median_ms", Json::Num(ttft_ms)),
+        ]));
+    }
+
+    let stats = server.shutdown();
+    println!(
+        "\nserved {} requests, {} tokens total",
+        stats.gen_requests, stats.gen_tokens
+    );
+
+    let report = Json::obj(vec![
+        ("bench", Json::Str("serve".to_string())),
+        ("model", Json::Str("tiny".to_string())),
+        ("method", Json::Str("sinq".to_string())),
+        ("bits", Json::Num(4.0)),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+        ("quick", Json::Bool(quick)),
+        ("results", Json::Arr(summary)),
+    ]);
+    // Repo root, resolved from the package dir so cwd does not matter.
+    let out = format!("{}/../BENCH_serve.json", env!("CARGO_MANIFEST_DIR"));
+    match std::fs::write(&out, report.to_string_compact()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("could not write {out}: {e}"),
+    }
+}

@@ -38,6 +38,29 @@ pub struct GenRequest {
     pub max_new: usize,
 }
 
+/// Validate that a request fits one preallocated KV slot. Shared by
+/// [`BatchDecoder::submit`] and the HTTP admission check in
+/// [`crate::serve`], so the serving front-end rejects oversized requests
+/// with exactly the same KV-capacity text the decoder itself uses.
+pub fn ensure_fits(
+    capacity: usize,
+    id: usize,
+    prompt_len: usize,
+    max_new: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(prompt_len > 0, "request {id}: empty prompt");
+    // Saturating: a request with max_new near usize::MAX must hit the
+    // capacity error below, not wrap past it (this guards a network input).
+    let needed = prompt_len.saturating_add(max_new.saturating_sub(1));
+    anyhow::ensure!(
+        needed <= capacity,
+        "request {id}: prompt of {prompt_len} tokens + {max_new} generated needs {needed} KV \
+         positions but each slot preallocated {capacity} (KV capacity); raise the decoder \
+         capacity or shorten the request"
+    );
+    Ok(())
+}
+
 /// A finished generation.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GenOutput {
@@ -112,6 +135,9 @@ pub struct BatchDecoder<'a> {
     caches: Vec<SlotCache>,
     pending: VecDeque<GenRequest>,
     finished: Vec<GenOutput>,
+    /// `(request id, token)` pairs emitted by the most recent step, in slot
+    /// order — the hook streaming consumers read between steps.
+    emitted: Vec<(usize, u8)>,
     stats: BatchStats,
 }
 
@@ -140,6 +166,7 @@ impl<'a> BatchDecoder<'a> {
             caches,
             pending: VecDeque::new(),
             finished: Vec::new(),
+            emitted: Vec::new(),
             stats: BatchStats::default(),
         })
     }
@@ -148,16 +175,7 @@ impl<'a> BatchDecoder<'a> {
     /// rejected up front with a clear error instead of overflowing the
     /// cache mid-decode; `max_new == 0` completes immediately.
     pub fn submit(&mut self, id: usize, prompt: &[u8], max_new: usize) -> anyhow::Result<()> {
-        anyhow::ensure!(!prompt.is_empty(), "request {id}: empty prompt");
-        let needed = prompt.len() + max_new.saturating_sub(1);
-        anyhow::ensure!(
-            needed <= self.capacity,
-            "request {id}: prompt of {} tokens + {max_new} generated needs {needed} KV \
-             positions but each slot preallocated {} (KV capacity); raise the decoder \
-             capacity or shorten the request",
-            prompt.len(),
-            self.capacity
-        );
+        ensure_fits(self.capacity, id, prompt.len(), max_new)?;
         if max_new == 0 {
             self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
             self.stats.completed += 1;
@@ -196,6 +214,7 @@ impl<'a> BatchDecoder<'a> {
         if a.fed >= a.prompt.len() {
             let tok = argmax(logits) as u8;
             a.out.push(tok);
+            self.emitted.push((a.id, tok));
             if a.out.len() >= a.max_new {
                 let done = self.slots[si].take().expect("live slot");
                 let out = GenOutput { id: done.id, tokens: done.out, steps: done.fed };
@@ -210,6 +229,7 @@ impl<'a> BatchDecoder<'a> {
     /// (one weight-tile unpack shared by all sequences), retire finished
     /// ones. Returns the number of sequences advanced; 0 means idle.
     pub fn step(&mut self) -> anyhow::Result<usize> {
+        self.emitted.clear();
         self.admit();
         let n_slots = self.slots.len();
         let live: Vec<usize> = (0..n_slots).filter(|&i| self.slots[i].is_some()).collect();
@@ -334,12 +354,21 @@ impl<'a> BatchDecoder<'a> {
     pub fn take_finished(&mut self) -> Vec<GenOutput> {
         std::mem::take(&mut self.finished)
     }
+
+    /// `(request id, token)` pairs the most recent [`BatchDecoder::step`]
+    /// emitted, in slot order. This is the per-step hook the streaming
+    /// serving front-end ([`crate::serve`]) forwards into per-request
+    /// channels so SSE bytes flush mid-decode; tokens also accumulate into
+    /// the request's [`GenOutput`] unchanged.
+    pub fn emitted(&self) -> &[(usize, u8)] {
+        &self.emitted
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::{InferenceBackend, NativeDecoder};
+    use crate::backend::NativeDecoder;
     use crate::model::{ModelConfig, ModelWeights};
 
     fn pico_backend() -> NativeBackend {
@@ -417,8 +446,30 @@ mod tests {
     }
 
     #[test]
+    fn emitted_tokens_stream_exactly_the_final_outputs() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 2, 16).unwrap();
+        dec.submit(0, b"ab", 3).unwrap();
+        dec.submit(1, b"wxyz", 2).unwrap();
+        dec.submit(2, b"q!", 4).unwrap(); // waits for a recycled slot
+        let mut streamed: std::collections::BTreeMap<usize, Vec<u8>> = Default::default();
+        while dec.step().unwrap() > 0 {
+            for &(id, tok) in dec.emitted() {
+                streamed.entry(id).or_default().push(tok);
+            }
+        }
+        assert!(dec.emitted().is_empty(), "idle step must clear emissions");
+        let mut outs = dec.take_finished();
+        outs.sort_by_key(|o| o.id);
+        assert_eq!(outs.len(), 3);
+        for out in outs {
+            assert_eq!(streamed[&out.id], out.tokens, "request {}", out.id);
+        }
+    }
+
+    #[test]
     fn generate_batch_entry_point_matches_sequential_generate() {
-        let mut nb = pico_backend();
+        let nb = pico_backend();
         let prompts: Vec<&[u8]> = vec![b"one", b"second prompt", b"3rd"];
         let max_new = [5usize, 3, 8];
         let batched = nb.generate_batch(&prompts, &max_new).unwrap();

@@ -21,7 +21,7 @@ pub mod batch;
 pub mod native;
 pub mod quantized;
 
-pub use batch::{BatchDecoder, BatchStats, GenOutput, GenRequest};
+pub use batch::{ensure_fits, BatchDecoder, BatchStats, GenOutput, GenRequest};
 pub use native::{NativeBackend, NativeDecoder};
 pub use quantized::QuantizedTensor;
 
@@ -194,35 +194,9 @@ impl BackendSpec {
 /// here (see [`resolve`]); [`InferenceBackend::name`] on the result reports
 /// the engine that was actually chosen.
 pub fn build(spec: &BackendSpec) -> anyhow::Result<Box<dyn InferenceBackend>> {
-    let max_batch = spec.max_batch.unwrap_or(native::DEFAULT_MAX_BATCH);
     match resolve(spec.kind, &spec.art_dir) {
         BackendKind::Auto => unreachable!("resolve returns a concrete backend kind"),
-        BackendKind::Native => {
-            if let Some(path) = &spec.quantized {
-                let qm = QuantizedModel::load(path)?;
-                let be = NativeBackend::from_quantized(&qm).with_max_batch(max_batch);
-                return Ok(Box::new(be));
-            }
-            let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
-            if let Some(qcfg) = &spec.quantize {
-                let calib = if qcfg.method.needs_calibration() {
-                    let c = Corpus::load_or_synthetic(&spec.art_dir, "wiki", "train");
-                    Some(c.data[..768.min(c.data.len())].to_vec())
-                } else {
-                    None
-                };
-                let opts = pipeline::PipelineOpts {
-                    schedule: scheduler::ScheduleOpts {
-                        threads: 2,
-                        calib_sample: calib,
-                        verbose: false,
-                    },
-                    no_overhead: false,
-                };
-                return Ok(Box::new(pipeline::run_to_backend(&mw, qcfg, &opts, max_batch)?));
-            }
-            Ok(Box::new(NativeBackend::from_weights(&mw).with_max_batch(max_batch)))
-        }
+        BackendKind::Native => Ok(Box::new(build_native(spec)?)),
         BackendKind::Pjrt => {
             anyhow::ensure!(
                 spec.quantize.is_none(),
@@ -241,6 +215,46 @@ pub fn build(spec: &BackendSpec) -> anyhow::Result<Box<dyn InferenceBackend>> {
             Ok(Box::new(fwd))
         }
     }
+}
+
+/// Build the native engine *concretely* from `spec` — the streaming serving
+/// front-end ([`crate::serve`]) needs a `NativeBackend` value (not a boxed
+/// trait object) because [`BatchDecoder`] borrows it for its incremental
+/// decode sessions. Handles the same `.stz` / on-the-fly-quantize /
+/// synthetic-fallback paths as [`build`]; errors if the spec resolves to a
+/// non-native engine.
+pub fn build_native(spec: &BackendSpec) -> anyhow::Result<NativeBackend> {
+    let resolved = resolve(spec.kind, &spec.art_dir);
+    anyhow::ensure!(
+        resolved == BackendKind::Native,
+        "this path requires the native engine but the backend spec resolves to '{}'; \
+         rerun with --backend native",
+        resolved.name()
+    );
+    let max_batch = spec.max_batch.unwrap_or(native::DEFAULT_MAX_BATCH);
+    if let Some(path) = &spec.quantized {
+        let qm = QuantizedModel::load(path)?;
+        return Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch));
+    }
+    let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
+    if let Some(qcfg) = &spec.quantize {
+        let calib = if qcfg.method.needs_calibration() {
+            let c = Corpus::load_or_synthetic(&spec.art_dir, "wiki", "train");
+            Some(c.data[..768.min(c.data.len())].to_vec())
+        } else {
+            None
+        };
+        let opts = pipeline::PipelineOpts {
+            schedule: scheduler::ScheduleOpts {
+                threads: 2,
+                calib_sample: calib,
+                verbose: false,
+            },
+            no_overhead: false,
+        };
+        return pipeline::run_to_backend(&mw, qcfg, &opts, max_batch);
+    }
+    Ok(NativeBackend::from_weights(&mw).with_max_batch(max_batch))
 }
 
 #[cfg(test)]
@@ -266,6 +280,17 @@ mod tests {
         let mut be = build(&spec).unwrap();
         assert_eq!(be.name(), "native");
         assert!(be.logits(b"auto").unwrap().data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn build_native_rejects_pjrt_spec_with_clear_error() {
+        let spec = BackendSpec::new(BackendKind::Pjrt, "/nonexistent", "pico");
+        let err = build_native(&spec).map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("--backend native"), "{err}");
+        // And the concrete native build produces the same engine `build` boxes.
+        let spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+        let be = build_native(&spec).unwrap();
+        assert!(be.forward(b"concrete").unwrap().data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -114,15 +114,25 @@ impl NativeBackend {
     /// FP backend: every weight dense f32 (bitwise-identical math to the
     /// reference forward — the `--backend native` baseline).
     pub fn from_weights(mw: &ModelWeights) -> NativeBackend {
-        let layers = mw
-            .tensors
+        NativeBackend::from_parts(&mw.cfg, &mw.tensors, &mw.vectors)
+    }
+
+    /// Dense backend over bare parts (config + effective weights + norm
+    /// gains) — the evaluation path the paper tables use to score any
+    /// method's dequantized "effective" weights without PJRT artifacts.
+    pub fn from_parts(
+        cfg: &ModelConfig,
+        tensors: &BTreeMap<String, Matrix>,
+        vectors: &BTreeMap<String, Vec<f32>>,
+    ) -> NativeBackend {
+        let layers = tensors
             .iter()
             .map(|(n, m)| (n.clone(), LayerWeight::Dense(m.clone())))
             .collect();
         NativeBackend {
-            cfg: mw.cfg.clone(),
+            cfg: cfg.clone(),
             layers,
-            vectors: mw.vectors.clone(),
+            vectors: vectors.clone(),
             threads: default_threads(),
             max_batch: DEFAULT_MAX_BATCH,
         }
@@ -287,6 +297,62 @@ impl NativeBackend {
         self.linear("lm_head", &hf, threads)
     }
 
+    /// Batched scoring over `&self` (the body of the
+    /// [`InferenceBackend::forward_batch`] impl): one worker per sequence,
+    /// per-sequence tile parallelism disabled so total concurrency stays at
+    /// the pool width. Taking `&self` lets a shared backend
+    /// (`Arc<NativeBackend>`) serve the scoring router and the streaming
+    /// decode engine from one weight set.
+    pub fn forward_batch(&self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        if seqs.len() <= 1 {
+            return seqs.iter().map(|s| self.forward(s)).collect();
+        }
+        threadpool::map_indexed(seqs, self.threads, |_, s| self.forward_with(s, 1))
+            .into_iter()
+            .collect()
+    }
+
+    /// Greedy autoregressive generation over `&self` (the body of the
+    /// [`InferenceBackend::generate`] impl).
+    pub fn generate(&self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        let mut dec = NativeDecoder::new(self, prompt.len() + n + 1)?;
+        dec.generate(prompt, n)
+    }
+
+    /// Continuous-batched greedy generation over `&self` (the body of the
+    /// [`InferenceBackend::generate_batch`] impl): all prompts share one
+    /// [`BatchDecoder`], so every packed weight tile is unpacked once per
+    /// step instead of once per sequence. Tokens are exactly those
+    /// [`NativeBackend::generate`] would produce per prompt.
+    pub fn generate_batch(
+        &self,
+        prompts: &[&[u8]],
+        max_new: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        anyhow::ensure!(
+            prompts.len() == max_new.len(),
+            "generate_batch: {} prompts but {} max_new entries",
+            prompts.len(),
+            max_new.len()
+        );
+        if prompts.is_empty() {
+            return Ok(Vec::new());
+        }
+        let slots = self.max_batch.min(prompts.len()).max(1);
+        let capacity = prompts
+            .iter()
+            .zip(max_new)
+            .map(|(p, &n)| p.len() + n + 1)
+            .max()
+            .unwrap_or(1);
+        let mut dec = BatchDecoder::new(self, slots, capacity)?;
+        for (i, (p, &n)) in prompts.iter().zip(max_new).enumerate() {
+            dec.submit(i, p, n)?;
+        }
+        let outs = dec.run()?;
+        Ok(outs.into_iter().map(|o| o.tokens).collect())
+    }
+
     fn moe(&self, x: &Matrix, pre: &str, threads: usize) -> anyhow::Result<Matrix> {
         let cfg = &self.cfg;
         let logits = self.linear(&format!("{pre}.router"), x, threads)?;
@@ -339,53 +405,19 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
-        if seqs.len() <= 1 {
-            return seqs.iter().map(|s| self.forward(s)).collect();
-        }
-        // One worker per sequence; per-sequence tile parallelism is disabled
-        // so total concurrency stays at the pool width.
-        let be = &*self;
-        threadpool::map_indexed(seqs, self.threads, |_, s| be.forward_with(s, 1))
-            .into_iter()
-            .collect()
+        NativeBackend::forward_batch(self, seqs)
     }
 
     fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
-        let mut dec = NativeDecoder::new(self, prompt.len() + n + 1)?;
-        dec.generate(prompt, n)
+        NativeBackend::generate(self, prompt, n)
     }
 
-    /// Continuous-batched greedy generation: all prompts share one
-    /// [`BatchDecoder`], so every packed weight tile is unpacked once per
-    /// step instead of once per sequence. Tokens are exactly those
-    /// [`InferenceBackend::generate`] would produce per prompt.
     fn generate_batch(
         &mut self,
         prompts: &[&[u8]],
         max_new: &[usize],
     ) -> anyhow::Result<Vec<Vec<u8>>> {
-        anyhow::ensure!(
-            prompts.len() == max_new.len(),
-            "generate_batch: {} prompts but {} max_new entries",
-            prompts.len(),
-            max_new.len()
-        );
-        if prompts.is_empty() {
-            return Ok(Vec::new());
-        }
-        let slots = self.max_batch.min(prompts.len()).max(1);
-        let capacity = prompts
-            .iter()
-            .zip(max_new)
-            .map(|(p, &n)| p.len() + n + 1)
-            .max()
-            .unwrap_or(1);
-        let mut dec = BatchDecoder::new(self, slots, capacity)?;
-        for (i, (p, &n)) in prompts.iter().zip(max_new).enumerate() {
-            dec.submit(i, p, n)?;
-        }
-        let outs = dec.run()?;
-        Ok(outs.into_iter().map(|o| o.tokens).collect())
+        NativeBackend::generate_batch(self, prompts, max_new)
     }
 }
 
@@ -810,7 +842,7 @@ mod tests {
     fn generate_is_deterministic_and_respects_prompt() {
         let mw = pico();
         let qm = quantize_simple(&mw, &QuantConfig::new(Method::Rtn, 4), None).unwrap();
-        let mut nb = NativeBackend::from_quantized(&qm);
+        let nb = NativeBackend::from_quantized(&qm);
         let a = nb.generate(b"hello", 12).unwrap();
         let b = nb.generate(b"hello", 12).unwrap();
         assert_eq!(a.len(), 12);

@@ -33,6 +33,12 @@
 //!   `xla` dependency is a vendored stub that errors at runtime; see
 //!   `rust/Cargo.toml`.)
 //!
+//! The [`serve`] module exposes the native engine over the network:
+//! `sinq serve --listen ADDR:PORT` runs a dependency-free HTTP/1.1 + SSE
+//! endpoint (streamed `POST /v1/generate`, batched `POST /v1/score`,
+//! `GET /healthz`, Prometheus `GET /metrics`) over the continuous-batching
+//! decoder.
+//!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
@@ -45,5 +51,6 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -3,9 +3,11 @@
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
 //! sinq eval     --model tiny [--backend native|pjrt|auto] [--quantized q.stz]
-//! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny]
+//! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny] [--backend auto|native|pjrt]
 //! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
 //!               [--max-batch 8] [--max-new-tokens 16]
+//! sinq serve    --listen 127.0.0.1:8080 [--max-batch 8] [--max-queue 64]
+//!               [--max-context 512] [--method sinq --bits 4 | --quantized q.stz]
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
 //!
@@ -14,13 +16,20 @@
 //! dequant-matmul engine directly on packed weights — self-contained on any
 //! machine (no `artifacts/`, no XLA, no Python; missing checkpoints and
 //! corpora fall back to deterministic synthetic stand-ins with a notice).
-//! `--backend pjrt` runs the AOT artifacts from `make artifacts`, which the
-//! `analyze`/`table` experiment commands also require; `--backend auto`
-//! probes for artifacts + a usable PJRT client and falls back to native,
-//! reporting the chosen engine. `serve` runs a scoring phase and a
-//! continuous-batched generation phase (`--max-batch` slots, each request
-//! generating `--max-new-tokens`). `--fast` trims sweep sizes for smoke
-//! runs.
+//! `--backend pjrt` runs the AOT artifacts from `make artifacts`;
+//! `--backend auto` probes for artifacts + a usable PJRT client and falls
+//! back to native, reporting the chosen engine. The `analyze`/`table`
+//! experiment commands default to `auto`, so the paper-table sweep runs
+//! artifact-free on the native backend (PJRT-kernel tables 5/6 still need
+//! artifacts).
+//!
+//! `serve` without `--listen` runs the in-process demo sweep (a scoring
+//! phase plus a continuous-batched generation phase). With
+//! `--listen ADDR:PORT` it becomes a long-running HTTP/SSE endpoint over
+//! the continuous batcher (see [`sinq::serve`]): streamed
+//! `POST /v1/generate`, batched `POST /v1/score`, `GET /healthz`, and
+//! Prometheus `GET /metrics`, with `503` backpressure at `--max-queue` and
+//! graceful drain on Ctrl-C. `--fast` trims sweep sizes for smoke runs.
 
 use sinq::backend::{self, BackendKind, BackendSpec};
 use sinq::coordinator::pipeline::{self, PipelineOpts};
@@ -60,10 +69,15 @@ fn print_help() {
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
          sinq eval --model <name> [--backend native|pjrt|auto] [--quantized f.stz] [--corpus wiki|c4]\n  \
-         sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>]\n  \
+         sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>] [--backend auto|native|pjrt]\n  \
          sinq serve --model <name> [--backend native|pjrt|auto] [--requests N] [--quantized f.stz]\n             \
          [--max-batch N] [--max-new-tokens N]\n  \
+         sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
+         [--max-context N] [--max-new-tokens N] [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
+         Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true),\n  \
+         POST /v1/score, GET /healthz, GET /metrics; 503 + Retry-After past --max-queue;\n  \
+         Ctrl-C drains live slots.\n\n\
          Backends (serve/eval):\n  \
          native  pure-Rust fused dequant-matmul engine on packed weights (default;\n          \
          needs no artifacts/XLA/Python — synthetic fallbacks cover missing files).\n          \
@@ -78,8 +92,11 @@ fn print_help() {
 
 /// Parse `--backend` and resolve `auto` to a concrete engine, printing the
 /// probe's choice so stats lines always name the engine that actually ran.
-fn backend_kind(args: &Args, art_dir: &str) -> anyhow::Result<BackendKind> {
-    let name = args.get("backend", "native");
+/// `default` differs per command: serve/eval default to `native`, the
+/// experiment commands to `auto` (prefer artifacts when they exist, stay
+/// artifact-free otherwise).
+fn backend_kind(args: &Args, art_dir: &str, default: &str) -> anyhow::Result<BackendKind> {
+    let name = args.get("backend", default);
     let kind = BackendKind::parse(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown backend '{name}' (expected native|pjrt|auto)"))?;
     let resolved = backend::resolve(kind, art_dir);
@@ -148,7 +165,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let model = args.get("model", "tiny");
     let corpus_kind = args.get("corpus", "wiki");
-    let kind = backend_kind(args, &art)?;
+    let kind = backend_kind(args, &art, "native")?;
     let ppl_value = match kind {
         BackendKind::Native => {
             // Artifact-free path: fused-kernel engine + batched scoring
@@ -161,7 +178,7 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
             ppl::perplexity_backend(&mut *be, &corpus, 128, windows)?
         }
         BackendKind::Pjrt => {
-            let ctx = Ctx::new(&art, args.has("fast"))?;
+            let ctx = Ctx::with_backend(&art, args.has("fast"), BackendKind::Pjrt)?;
             let mw = ctx.load_model(&model)?;
             if let Some(qpath) = args.opt("quantized") {
                 let qm = QuantizedModel::load(qpath)?;
@@ -180,7 +197,8 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("r2");
-    let ctx = Ctx::new(&art, args.has("fast"))?;
+    let kind = backend_kind(args, &art, "auto")?;
+    let ctx = Ctx::with_backend(&art, args.has("fast"), kind)?;
     let model = args.get("model", "tiny");
     let t = match which {
         "r2" => tables::fig2a_table(&ctx, &[&model])?,
@@ -202,7 +220,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let max_batch: usize = args.num("max-batch", 8);
     let max_new: usize = args.num("max-new-tokens", 16);
 
-    let mut spec = BackendSpec::new(backend_kind(args, &art)?, &art, &model);
+    let mut spec = BackendSpec::new(backend_kind(args, &art, "native")?, &art, &model);
     spec.quantized = args.opt("quantized").map(String::from);
     spec.max_batch = Some(max_batch);
     let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
@@ -215,6 +233,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
              run `sinq quantize` first and pass the .stz via --quantized instead"
         );
         spec.quantize = Some(quant_config(args)?);
+    }
+
+    if let Some(listen) = args.opt("listen") {
+        // Long-running HTTP/SSE endpoint over the continuous batcher.
+        anyhow::ensure!(
+            spec.kind == BackendKind::Native,
+            "`serve --listen` streams through the native decode engine; \
+             rerun with --backend native (got '{}')",
+            spec.kind.name()
+        );
+        let opts = sinq::serve::ServeOpts {
+            listen: listen.to_string(),
+            max_batch,
+            max_context: args.num("max-context", 512),
+            max_queue: args.num("max-queue", 64),
+            default_max_new: max_new.max(1),
+            score_queue: args.num("score-queue", 64),
+            max_connections: args.num("max-connections", 256),
+        };
+        return sinq::serve::run(&spec, &opts);
     }
 
     // The server thread builds its own backend (PJRT handles are not Send;
@@ -299,7 +337,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_table(args: &Args) -> anyhow::Result<()> {
     let art = args.get("art-dir", "artifacts");
     let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("1");
-    let ctx = Ctx::new(&art, args.has("fast"))?;
+    let kind = backend_kind(args, &art, "auto")?;
+    let ctx = Ctx::with_backend(&art, args.has("fast"), kind)?;
     let models_owned = args.list("models", &["pico", "tiny", "small"]);
     let models: Vec<&str> = models_owned.iter().map(|s| s.as_str()).collect();
     let small_set: Vec<&str> = models.iter().copied().take(2).collect();

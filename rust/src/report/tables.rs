@@ -1,19 +1,27 @@
 //! Regeneration of every table and figure in the paper's evaluation
 //! (experiment index in DESIGN.md §5). Each `table_*` function loads the
-//! trained family from `artifacts/`, runs the quantizer zoo, evaluates
-//! through the PJRT runtime, and prints a paper-shaped table (also appended
-//! to `artifacts/results.jsonl`).
+//! trained family from `artifacts/` (or a deterministic synthetic stand-in
+//! on the native backend), runs the quantizer zoo, evaluates through the
+//! [`crate::backend::InferenceBackend`] trait, and prints a paper-shaped
+//! table (also appended to `artifacts/results.jsonl`).
+//!
+//! The [`Ctx`] carries the resolved backend: on `native` the whole sweep is
+//! artifact-free (fused-kernel engine, synthetic model/corpus fallbacks);
+//! on `pjrt` the evaluations execute the AOT artifacts as before. Tables 5
+//! and 6 time PJRT-compiled Pallas kernels and therefore still require
+//! `--backend pjrt` + `make artifacts`; [`Ctx::rt`] reports that clearly.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::backend::{self, BackendKind, InferenceBackend, NativeBackend};
 use crate::coordinator::pipeline::{self, PipelineOpts};
 use crate::coordinator::scheduler::{self, ScheduleOpts};
 use crate::data::{qa, Corpus};
 use crate::eval::{flips, pareto::ParetoPoint, ppl, r2, recon};
 use crate::fmt::gguf;
 use crate::fmt::grids::Grid;
-use crate::model::{memory, ModelWeights, QuantizedModel};
+use crate::model::{memory, ModelConfig, ModelWeights, QuantizedModel};
 use crate::quant::{AuxPrecision, Method, QuantConfig};
 use crate::report::{f, Table};
 use crate::runtime::{PjrtForward, PjrtRuntime};
@@ -22,7 +30,10 @@ use crate::tensor::Matrix;
 /// Shared context for all tables.
 pub struct Ctx {
     pub art_dir: String,
-    pub rt: PjrtRuntime,
+    /// Resolved engine the evaluations dispatch through.
+    pub backend: BackendKind,
+    /// Present only on the PJRT backend (tables 5/6 + pjrt evaluations).
+    rt: Option<PjrtRuntime>,
     pub eval_windows: usize,
     pub qa_tasks: usize,
     pub seq: usize,
@@ -30,10 +41,24 @@ pub struct Ctx {
 }
 
 impl Ctx {
+    /// Auto-probing constructor: PJRT when artifacts + a usable client
+    /// exist, otherwise the artifact-free native engine.
     pub fn new(art_dir: &str, fast: bool) -> anyhow::Result<Ctx> {
+        Ctx::with_backend(art_dir, fast, BackendKind::Auto)
+    }
+
+    /// Construct for an explicit backend (`Auto` probes, see
+    /// [`backend::resolve`]).
+    pub fn with_backend(art_dir: &str, fast: bool, kind: BackendKind) -> anyhow::Result<Ctx> {
+        let resolved = backend::resolve(kind, art_dir);
+        let rt = match resolved {
+            BackendKind::Pjrt => Some(PjrtRuntime::cpu(art_dir)?),
+            _ => None,
+        };
         Ok(Ctx {
             art_dir: art_dir.to_string(),
-            rt: PjrtRuntime::cpu(art_dir)?,
+            backend: resolved,
+            rt,
             eval_windows: if fast { 8 } else { 32 },
             qa_tasks: if fast { 24 } else { 60 },
             seq: 128,
@@ -41,23 +66,63 @@ impl Ctx {
         })
     }
 
+    /// The PJRT runtime, for experiments that execute AOT-compiled Pallas
+    /// kernels directly (tables 5/6); errors with a pointer to `--backend
+    /// pjrt` when the context runs the native engine.
+    pub fn rt(&self) -> anyhow::Result<&PjrtRuntime> {
+        self.rt.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "this experiment times AOT PJRT artifacts and cannot run on the '{}' \
+                 backend; run `make artifacts` and pass --backend pjrt",
+                self.backend.name()
+            )
+        })
+    }
+
     pub fn load_model(&self, name: &str) -> anyhow::Result<ModelWeights> {
-        scheduler::load_family_member(&self.art_dir, name)
+        match self.backend {
+            // Artifact-free sweep: fall back to a deterministic synthetic
+            // model (with a notice) when no checkpoint exists.
+            BackendKind::Native => scheduler::load_or_synthetic_checked(&self.art_dir, name, 42),
+            _ => scheduler::load_family_member(&self.art_dir, name),
+        }
     }
 
     pub fn corpus(&self, kind: &str) -> anyhow::Result<Corpus> {
-        Corpus::load(&self.art_dir, kind, "eval")
+        match self.backend {
+            BackendKind::Native => Ok(Corpus::load_or_synthetic(&self.art_dir, kind, "eval")),
+            _ => Corpus::load(&self.art_dir, kind, "eval"),
+        }
     }
 
     pub fn calib_sample(&self) -> anyhow::Result<Vec<u8>> {
         // Calibration data comes from the *training* distribution.
-        let c = Corpus::load(&self.art_dir, "wiki", "train")?;
+        let c = match self.backend {
+            BackendKind::Native => Corpus::load_or_synthetic(&self.art_dir, "wiki", "train"),
+            _ => Corpus::load(&self.art_dir, "wiki", "train")?,
+        };
         Ok(c.data[..(6 * self.seq).min(c.data.len())].to_vec())
     }
 
-    /// Perplexity of effective weights through the PJRT forward artifact.
+    /// Scoring engine over a set of effective weights, on whichever backend
+    /// the context resolved — the one dispatch point every perplexity and
+    /// flip evaluation goes through.
+    pub fn forward_engine(
+        &self,
+        cfg: &ModelConfig,
+        weights: &BTreeMap<String, Matrix>,
+        vectors: &BTreeMap<String, Vec<f32>>,
+    ) -> anyhow::Result<Box<dyn InferenceBackend>> {
+        match self.backend {
+            BackendKind::Native => Ok(Box::new(NativeBackend::from_parts(cfg, weights, vectors))),
+            BackendKind::Pjrt => Ok(Box::new(PjrtForward::new(self.rt()?, cfg, weights, vectors)?)),
+            BackendKind::Auto => unreachable!("Ctx::with_backend resolves auto"),
+        }
+    }
+
+    /// Perplexity of effective weights through the selected backend.
     /// Dispatches via the [`crate::backend::InferenceBackend`] trait, which
-    /// batches windows `max_batch` (= `FWD_BATCH`) at a time.
+    /// batches windows `max_batch` at a time.
     pub fn ppl_eff(
         &self,
         mw: &ModelWeights,
@@ -65,9 +130,9 @@ impl Ctx {
         vectors: &BTreeMap<String, Vec<f32>>,
         kind: &str,
     ) -> anyhow::Result<f64> {
-        let mut fwd = PjrtForward::new(&self.rt, &mw.cfg, eff, vectors)?;
+        let mut fwd = self.forward_engine(&mw.cfg, eff, vectors)?;
         let corpus = self.corpus(kind)?;
-        ppl::perplexity_backend(&mut fwd, &corpus, self.seq, self.eval_windows)
+        ppl::perplexity_backend(&mut *fwd, &corpus, self.seq, self.eval_windows)
     }
 
     /// FP baseline perplexity.
@@ -172,7 +237,7 @@ pub fn table2(ctx: &Ctx, models: &[&str]) -> anyhow::Result<(Table, Table)> {
         let mut fp_preds = Vec::new();
         let mut tasks_by_suite = Vec::new();
         {
-            let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+            let mut fwd = ctx.forward_engine(&mw.cfg, &mw.tensors, &mw.vectors)?;
             for (si, s) in suites.iter().enumerate() {
                 let tasks = qa::suite(s, ctx.qa_tasks, 1000 + si as u64);
                 fp_preds.push(flips::predictions(&mut fwd, &tasks)?);
@@ -227,7 +292,7 @@ pub fn table2(ctx: &Ctx, models: &[&str]) -> anyhow::Result<(Table, Table)> {
                 };
                 let row = ctx.eval_config(&mw, &cfg, false)?;
                 let eff = row.qm.effective_weights();
-                let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, &eff, &row.qm.fvectors)?;
+                let mut fwd = ctx.forward_engine(&mw.cfg, &eff, &row.qm.fvectors)?;
                 let mut frates = Vec::new();
                 let mut qaccs = Vec::new();
                 for (si, tasks) in tasks_by_suite.iter().enumerate() {
@@ -323,13 +388,14 @@ pub fn table5(ctx: &Ctx) -> anyhow::Result<Table> {
         "Table 5 — Dual-scale overhead of the fused dequant-matmul kernel",
         &["B", "D", "g(x) [ms]", "g(x·t) [ms]", "Overhead"],
     );
+    let rt = ctx.rt()?;
     let mut rng = crate::tensor::Rng::new(5);
     for b in [1usize, 64] {
         for d in [1024usize, 2048] {
             let mut times = [0.0f64; 2];
             for (vi, dual) in [false, true].iter().enumerate() {
                 let suffix = if *dual { "_dual" } else { "" };
-                let exe = ctx.rt.load(&format!("dqmm_b{b}_d{d}{suffix}.hlo.txt"))?;
+                let exe = rt.load(&format!("dqmm_b{b}_d{d}{suffix}.hlo.txt"))?;
                 let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
                 let codes: Vec<u8> = (0..d * d).map(|_| (rng.next_u64() & 15) as u8).collect();
                 let ng = d / 64;
@@ -378,6 +444,7 @@ pub fn table6(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
         "Table 6 — Decode throughput, batch 1, ctx 256 → gen 512 (tokens/s ↑)",
         &["Model", "Variant", "Prefill tok/s", "Decode tok/s", "Speedup"],
     );
+    let rt = ctx.rt()?;
     let gen = if ctx.fast { 64 } else { 512 };
     let ctx_len = if ctx.fast { 64 } else { 256 };
     for name in models {
@@ -385,7 +452,7 @@ pub fn table6(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
         let prompt: Vec<u8> = ctx.corpus("wiki")?.data[..ctx_len].to_vec();
 
         // FP baseline.
-        let mut dec = PjrtDecoder::new_fp(&ctx.rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
+        let mut dec = PjrtDecoder::new_fp(rt, &mw.cfg, &mw.tensors, &mw.vectors)?;
         let t0 = Instant::now();
         for &b in &prompt {
             let _ = dec.step(b)?;
@@ -412,7 +479,7 @@ pub fn table6(ctx: &Ctx, models: &[&str]) -> anyhow::Result<Table> {
         // W4 (SINQ) variant — only lowered for tiny/small.
         let qcfg = QuantConfig::new(Method::Sinq, 4).with_aux(AuxPrecision::F32);
         let qm = scheduler::quantize_simple(&mw, &qcfg, None)?;
-        match PjrtDecoder::new_w4(&ctx.rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors) {
+        match PjrtDecoder::new_w4(rt, &mw.cfg, &qm.layers, &qm.fweights, &qm.fvectors) {
             Ok(mut dec) => {
                 let t0 = Instant::now();
                 for &b in &prompt {
@@ -469,7 +536,7 @@ pub fn table7(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
     let eval = |eff: &BTreeMap<String, Matrix>,
                     vecs: &BTreeMap<String, Vec<f32>>|
      -> anyhow::Result<(Vec<usize>, f64)> {
-        let mut fwd = PjrtForward::new(&ctx.rt, &mw.cfg, eff, vecs)?;
+        let mut fwd = ctx.forward_engine(&mw.cfg, eff, vecs)?;
         let preds = flips::predictions(&mut fwd, &tasks)?;
         let mut total = 0usize;
         for p in &trace_prompts {
@@ -905,4 +972,47 @@ pub fn fig1_table(_ctx: &Ctx) -> anyhow::Result<Table> {
     t.row(vec!["single scale (RTN)".into(), format!("{single:.5}")]);
     t.row(vec!["dual scale (SINQ)".into(), format!("{dual:.5}")]);
     Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_ctx() -> Ctx {
+        // `/nonexistent`: no artifacts anywhere, so everything must come
+        // from synthetic fallbacks through the native engine.
+        Ctx::with_backend("/nonexistent", true, BackendKind::Native).unwrap()
+    }
+
+    #[test]
+    fn auto_ctx_resolves_native_without_artifacts() {
+        let ctx = Ctx::new("/nonexistent", true).unwrap();
+        assert_eq!(ctx.backend, BackendKind::Native);
+        let err = match ctx.rt() {
+            Ok(_) => panic!("native ctx must refuse PJRT-only experiments"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("--backend pjrt"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn native_ctx_scores_perplexity_artifact_free() {
+        let ctx = native_ctx();
+        let mw = ctx.load_model("pico").unwrap();
+        let ppl = ctx.ppl_fp(&mw, "wiki").unwrap();
+        assert!(ppl.is_finite() && ppl > 1.0, "nonsense ppl {ppl}");
+        // Quantized effective weights score through the same trait path.
+        let row = ctx.eval_config(&mw, &QuantConfig::new(Method::Sinq, 4), false).unwrap();
+        assert!(row.wiki.is_finite() && row.c4.is_finite());
+    }
+
+    #[test]
+    fn native_ctx_runs_flip_predictions() {
+        let ctx = native_ctx();
+        let mw = ctx.load_model("pico").unwrap();
+        let mut fwd = ctx.forward_engine(&mw.cfg, &mw.tensors, &mw.vectors).unwrap();
+        let tasks = qa::suite("plausibility", 4, 7);
+        let preds = flips::predictions(&mut fwd, &tasks).unwrap();
+        assert_eq!(preds.len(), tasks.len());
+    }
 }

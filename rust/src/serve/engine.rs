@@ -1,0 +1,444 @@
+//! The streaming generation engine: a dedicated thread drives the
+//! continuous-batching [`BatchDecoder`] incrementally and forwards each
+//! decoded token into a channel per live request, so SSE bytes can flush
+//! mid-decode instead of waiting for run-to-completion.
+//!
+//! ```text
+//! EngineClient::submit ──channel──▶ engine thread
+//!      │ (validates KV fit,            │ admit into BatchDecoder slots
+//!      │  enforces --max-queue)        │ step() → per-token events
+//!      ▼                               ▼
+//!  StreamHandle ◀──Token/Done/Error── per-request mpsc channels
+//! ```
+//!
+//! Admission control happens on the *caller's* thread in
+//! [`EngineClient::submit`]: requests that cannot fit a KV slot fail
+//! immediately with the decoder's own capacity text
+//! ([`crate::backend::ensure_fits`]), and requests beyond the `max_queue`
+//! backlog bound are refused so the HTTP layer can answer `503` +
+//! `Retry-After` without ever touching the decode loop. Token channels are
+//! unbounded: a slow SSE reader can never stall the fused decode step (the
+//! buffered cost is bounded by the request's own `max_new`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::backend::batch::{ensure_fits, BatchDecoder};
+use crate::backend::NativeBackend;
+use crate::serve::metrics::ServeMetrics;
+
+/// One event on a generation stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// One greedily decoded token, emitted as soon as its step finishes.
+    Token(u8),
+    /// Terminal event: the request completed.
+    Done {
+        finish_reason: &'static str,
+        prompt_tokens: usize,
+        gen_tokens: usize,
+    },
+    /// Terminal event: the request failed after admission.
+    Error(String),
+}
+
+/// Receiving side of one request's event stream.
+#[derive(Debug)]
+pub struct StreamHandle {
+    /// Engine-assigned request id (monotonic).
+    pub id: usize,
+    pub rx: Receiver<StreamEvent>,
+}
+
+/// Why [`EngineClient::submit`] refused a request — mapped by the HTTP
+/// layer onto status codes.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// `400`: the request can never run (empty prompt / beyond KV capacity).
+    Invalid(String),
+    /// `503` + `Retry-After`: the backlog is at the `--max-queue` bound.
+    Busy { queued: usize, max_queue: usize },
+    /// `503`: the engine is shutting down (or died on an engine error).
+    Unavailable(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Invalid(msg) => write!(f, "{msg}"),
+            SubmitError::Busy { queued, max_queue } => write!(
+                f,
+                "generation queue full ({queued} queued, --max-queue {max_queue}); retry later"
+            ),
+            SubmitError::Unavailable(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+/// One admitted request travelling from a handler thread to the engine.
+struct Submission {
+    id: usize,
+    prompt: Vec<u8>,
+    max_new: usize,
+    tx: Sender<StreamEvent>,
+    enqueued: Instant,
+}
+
+/// State shared between the engine thread and every [`EngineClient`].
+struct Shared {
+    capacity: usize,
+    max_queue: usize,
+    metrics: Arc<ServeMetrics>,
+    next_id: AtomicUsize,
+    shutting_down: AtomicBool,
+    /// Set when the engine thread has exited (drain finished or fatal error).
+    dead: AtomicBool,
+}
+
+/// Cloneable submission handle used by connection handler threads.
+#[derive(Clone)]
+pub struct EngineClient {
+    tx: Sender<Submission>,
+    shared: Arc<Shared>,
+}
+
+impl EngineClient {
+    /// Validate and enqueue one generation request; returns the stream of
+    /// per-token events. `max_new == 0` completes immediately without
+    /// touching the engine.
+    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> Result<StreamHandle, SubmitError> {
+        if self.shared.shutting_down.load(Ordering::SeqCst)
+            || self.shared.dead.load(Ordering::SeqCst)
+        {
+            return Err(SubmitError::Unavailable("server is shutting down".into()));
+        }
+        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
+        ensure_fits(self.shared.capacity, id, prompt.len(), max_new)
+            .map_err(|e| SubmitError::Invalid(e.to_string()))?;
+        let metrics = &self.shared.metrics;
+        if max_new == 0 {
+            let (tx, rx) = channel();
+            let _ = tx.send(StreamEvent::Done {
+                finish_reason: "length",
+                prompt_tokens: prompt.len(),
+                gen_tokens: 0,
+            });
+            metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+            metrics.completed_total.fetch_add(1, Ordering::Relaxed);
+            return Ok(StreamHandle { id, rx });
+        }
+        // Reserve a backlog slot atomically: `queued` counts requests
+        // accepted but not yet admitted into a KV slot.
+        let queued = metrics.queued.fetch_add(1, Ordering::SeqCst);
+        if queued >= self.shared.max_queue {
+            metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Busy { queued, max_queue: self.shared.max_queue });
+        }
+        let (tx, rx) = channel();
+        let sub = Submission { id, prompt, max_new, tx, enqueued: Instant::now() };
+        if self.tx.send(sub).is_err() {
+            metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            return Err(SubmitError::Unavailable("generation engine stopped".into()));
+        }
+        metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        Ok(StreamHandle { id, rx })
+    }
+
+    /// Per-slot KV capacity (positions) of the engine's decoder.
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+}
+
+/// The streaming engine: owns the decode thread. Constructed by
+/// [`GenEngine::start`]; [`GenEngine::client`] hands out submission handles.
+pub struct GenEngine {
+    client: EngineClient,
+    thread: Option<thread::JoinHandle<()>>,
+}
+
+impl GenEngine {
+    /// Spawn the engine thread over a shared backend: `slots` concurrent KV
+    /// slots of `capacity` positions each, refusing submissions once
+    /// `max_queue` requests are waiting for a slot.
+    pub fn start(
+        be: Arc<NativeBackend>,
+        slots: usize,
+        capacity: usize,
+        max_queue: usize,
+        metrics: Arc<ServeMetrics>,
+    ) -> anyhow::Result<GenEngine> {
+        // Probe construction on the caller's thread so bad weight sets fail
+        // at startup, not on the first request.
+        drop(BatchDecoder::new(&be, slots, capacity)?);
+        let shared = Arc::new(Shared {
+            capacity: capacity.max(1),
+            max_queue,
+            metrics,
+            next_id: AtomicUsize::new(0),
+            shutting_down: AtomicBool::new(false),
+            dead: AtomicBool::new(false),
+        });
+        let (tx, rx) = channel::<Submission>();
+        let thread_shared = shared.clone();
+        let thread = thread::Builder::new()
+            .name("sinq-gen-engine".into())
+            .spawn(move || engine_loop(&be, slots, capacity, rx, thread_shared))
+            .expect("spawn generation engine");
+        Ok(GenEngine { client: EngineClient { tx, shared }, thread: Some(thread) })
+    }
+
+    /// Cloneable submission handle.
+    pub fn client(&self) -> EngineClient {
+        self.client.clone()
+    }
+
+    /// Graceful shutdown: refuse new submissions, let the engine drain
+    /// every live slot (and already-queued request), then join the thread.
+    pub fn shutdown(mut self) {
+        self.client.shared.shutting_down.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for GenEngine {
+    fn drop(&mut self) {
+        self.client.shared.shutting_down.store(true, Ordering::SeqCst);
+        // No join: dropping without `shutdown()` (error paths) must not
+        // block; the thread notices the flag within its idle timeout.
+    }
+}
+
+/// Decode progress the engine tracks per admitted request.
+struct Session {
+    tx: Sender<StreamEvent>,
+    enqueued: Instant,
+    prompt_tokens: usize,
+    first_token_sent: bool,
+}
+
+fn engine_loop(
+    be: &NativeBackend,
+    slots: usize,
+    capacity: usize,
+    rx: Receiver<Submission>,
+    shared: Arc<Shared>,
+) {
+    let metrics = shared.metrics.clone();
+    let mut sessions: HashMap<usize, Session> = HashMap::new();
+    let mut dec = match BatchDecoder::new(be, slots, capacity) {
+        Ok(d) => d,
+        Err(e) => {
+            fail_remaining(&rx, &shared, &format!("engine init failed: {e}"));
+            return;
+        }
+    };
+
+    let admit = |dec: &mut BatchDecoder,
+                 sessions: &mut HashMap<usize, Session>,
+                 sub: Submission| {
+        match dec.submit(sub.id, &sub.prompt, sub.max_new) {
+            Ok(()) => {
+                sessions.insert(
+                    sub.id,
+                    Session {
+                        tx: sub.tx,
+                        enqueued: sub.enqueued,
+                        prompt_tokens: sub.prompt.len(),
+                        first_token_sent: false,
+                    },
+                );
+            }
+            Err(e) => {
+                // Pre-validated in submit(); defensive only.
+                metrics.queued.fetch_sub(1, Ordering::SeqCst);
+                let _ = sub.tx.send(StreamEvent::Error(e.to_string()));
+            }
+        }
+    };
+
+    loop {
+        if sessions.is_empty() {
+            // Idle: block briefly so shutdown is noticed without spinning.
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(sub) => admit(&mut dec, &mut sessions, sub),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                    if shared.shutting_down.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Live: drain whatever queued up without blocking the decode step.
+        while let Ok(sub) = rx.try_recv() {
+            admit(&mut dec, &mut sessions, sub);
+        }
+
+        let pending_before = dec.pending();
+        let stepped = match dec.step() {
+            Ok(n) => n,
+            Err(e) => {
+                let msg = format!("decode step failed: {e}");
+                // Requests still in the decoder's pending queue were counted
+                // in the backlog gauge; release them so a dead engine does
+                // not report phantom queued work forever.
+                let stranded = dec.pending();
+                if stranded > 0 {
+                    metrics.queued.fetch_sub(stranded, Ordering::SeqCst);
+                }
+                for (_, s) in sessions.drain() {
+                    let _ = s.tx.send(StreamEvent::Error(msg.clone()));
+                }
+                break;
+            }
+        };
+        // step() admitted pending requests into freed slots: those left the
+        // `--max-queue` backlog.
+        let admitted = pending_before.saturating_sub(dec.pending());
+        if admitted > 0 {
+            metrics.queued.fetch_sub(admitted, Ordering::SeqCst);
+        }
+        if stepped > 0 {
+            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+            metrics.tokens_generated.fetch_add(dec.emitted().len(), Ordering::Relaxed);
+        }
+        for &(id, tok) in dec.emitted() {
+            if let Some(s) = sessions.get_mut(&id) {
+                if !s.first_token_sent {
+                    s.first_token_sent = true;
+                    metrics.record_ttft(s.enqueued.elapsed());
+                }
+                let _ = s.tx.send(StreamEvent::Token(tok));
+            }
+        }
+        for out in dec.take_finished() {
+            if let Some(s) = sessions.remove(&out.id) {
+                metrics.completed_total.fetch_add(1, Ordering::Relaxed);
+                let _ = s.tx.send(StreamEvent::Done {
+                    finish_reason: "length",
+                    prompt_tokens: s.prompt_tokens,
+                    gen_tokens: out.tokens.len(),
+                });
+            }
+        }
+        metrics.live_slots.store(dec.live(), Ordering::Relaxed);
+    }
+
+    metrics.live_slots.store(0, Ordering::Relaxed);
+    fail_remaining(&rx, &shared, "server shut down before this request was decoded");
+}
+
+/// Terminal path: mark the engine dead and error out anything still queued
+/// (submissions that raced past the shutdown flag).
+fn fail_remaining(rx: &Receiver<Submission>, shared: &Shared, msg: &str) {
+    shared.dead.store(true, Ordering::SeqCst);
+    while let Ok(sub) = rx.try_recv() {
+        shared.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+        let _ = sub.tx.send(StreamEvent::Error(msg.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ModelWeights};
+
+    fn pico_arc() -> Arc<NativeBackend> {
+        let cfg = ModelConfig::family("pico").unwrap();
+        Arc::new(NativeBackend::from_weights(&ModelWeights::synthetic(&cfg, 31)))
+    }
+
+    fn collect(handle: StreamHandle) -> (Vec<u8>, Option<StreamEvent>) {
+        let mut tokens = Vec::new();
+        for ev in handle.rx.iter() {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                terminal => return (tokens, Some(terminal)),
+            }
+        }
+        (tokens, None)
+    }
+
+    #[test]
+    fn streamed_tokens_match_backend_generate() {
+        let be = pico_arc();
+        let expected = be.generate(b"hello engine", 7).unwrap();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, 2, 64, 16, metrics.clone()).unwrap();
+        let handle = eng.client().submit(b"hello engine".to_vec(), 7).unwrap();
+        let (tokens, terminal) = collect(handle);
+        assert_eq!(tokens, expected);
+        assert_eq!(
+            terminal,
+            Some(StreamEvent::Done {
+                finish_reason: "length",
+                prompt_tokens: 12,
+                gen_tokens: 7
+            })
+        );
+        eng.shutdown();
+        assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 7);
+        assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn oversized_request_is_invalid_and_zero_max_new_completes() {
+        let be = pico_arc();
+        let eng = GenEngine::start(be, 1, 8, 4, Arc::new(ServeMetrics::new())).unwrap();
+        let client = eng.client();
+        match client.submit(vec![b'x'; 32], 4) {
+            Err(SubmitError::Invalid(msg)) => {
+                assert!(msg.contains("KV"), "unclear capacity error: {msg}")
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0).unwrap());
+        assert!(tokens.is_empty());
+        assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 0, .. })));
+        eng.shutdown();
+    }
+
+    #[test]
+    fn max_queue_zero_refuses_everything() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, 1, 16, 0, metrics.clone()).unwrap();
+        match eng.client().submit(b"hi".to_vec(), 2) {
+            Err(SubmitError::Busy { max_queue: 0, .. }) => {}
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        assert_eq!(metrics.rejected_total.load(Ordering::Relaxed), 1);
+        eng.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work_and_refuses_new() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, 1, 32, 8, metrics.clone()).unwrap();
+        let client = eng.client();
+        let handles: Vec<StreamHandle> = (0..3)
+            .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4).unwrap())
+            .collect();
+        eng.shutdown();
+        for h in handles {
+            let (tokens, terminal) = collect(h);
+            assert_eq!(tokens.len(), 4);
+            assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 4, .. })));
+        }
+        assert!(matches!(
+            client.submit(b"late".to_vec(), 1),
+            Err(SubmitError::Unavailable(_))
+        ));
+        assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 3);
+    }
+}

@@ -1,0 +1,239 @@
+//! Minimal HTTP/1.1 parsing and response writing over raw streams.
+//!
+//! Just enough protocol for the serving endpoints — `GET`/`POST` request
+//! lines, header fields, `Content-Length` bodies, fixed-length JSON
+//! responses, and close-delimited `text/event-stream` (SSE) responses —
+//! with no external dependencies, consistent with the offline vendored-deps
+//! build. Every response carries `Connection: close`: one request per
+//! connection keeps the parser trivial and matches how the streaming
+//! endpoint must behave anyway (an SSE body ends when the server closes).
+
+use std::io::{BufRead, Read, Write};
+
+/// Cap on the request line + headers; larger requests are rejected.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Cap on a request body (`Content-Length`); larger requests are rejected.
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one `\n`-terminated line of at most `limit` bytes. Bounded *while
+/// reading*, not after: a peer streaming an endless line cannot grow server
+/// memory past the cap (this faces the network).
+fn read_line_limited<R: BufRead>(r: &mut R, limit: usize, what: &str) -> anyhow::Result<String> {
+    let mut buf = Vec::new();
+    let n = r.by_ref().take(limit as u64 + 1).read_until(b'\n', &mut buf)?;
+    anyhow::ensure!(n > 0, "connection closed before {what}");
+    anyhow::ensure!(buf.ends_with(b"\n"), "{what} exceeds {limit} bytes or is truncated");
+    String::from_utf8(buf).map_err(|_| anyhow::anyhow!("{what} is not valid UTF-8"))
+}
+
+/// Read and parse one request (request line, headers, `Content-Length`
+/// body) from a buffered stream.
+pub fn read_request<R: BufRead>(r: &mut R) -> anyhow::Result<Request> {
+    let line = read_line_limited(r, MAX_HEADER_BYTES, "request line")?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    anyhow::ensure!(
+        !method.is_empty() && path.starts_with('/') && version.starts_with("HTTP/1."),
+        "malformed request line {:?}",
+        line.trim_end()
+    );
+
+    let mut headers = Vec::new();
+    let mut total = line.len();
+    loop {
+        anyhow::ensure!(total <= MAX_HEADER_BYTES, "headers exceed {MAX_HEADER_BYTES} bytes");
+        let h = read_line_limited(r, MAX_HEADER_BYTES - total + 1, "header line")?;
+        total += h.len();
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+
+    let req = Request { method, path, headers, body: Vec::new() };
+    let len: usize = match req.header("content-length") {
+        Some(v) => v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad Content-Length {v:?}"))?,
+        None => 0,
+    };
+    anyhow::ensure!(len <= MAX_BODY_BYTES, "body of {len} bytes exceeds {MAX_BODY_BYTES}");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(Request { body, ..req })
+}
+
+/// Canonical reason phrase for the status codes the server emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (`Connection: close`).
+pub fn write_response(
+    w: &mut impl Write,
+    code: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n",
+        status_text(code),
+        body.len()
+    )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a JSON `{"error": msg}` response.
+pub fn write_error(w: &mut impl Write, code: u16, msg: &str) -> std::io::Result<()> {
+    let body = crate::util::json::Json::obj(vec![(
+        "error",
+        crate::util::json::Json::Str(msg.to_string()),
+    )]);
+    write_response(w, code, "application/json", &[], body.to_string_compact().as_bytes())
+}
+
+/// Start a `text/event-stream` response. The body is close-delimited:
+/// events follow via [`write_sse_event`] until the server closes the
+/// connection after the terminal event.
+pub fn write_sse_header(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
+          Connection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// Write one SSE event and flush, so tokens reach the client mid-decode.
+pub fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::Result<()> {
+    write!(w, "event: {event}\ndata: {data}\n\n")?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> anyhow::Result<Request> {
+        read_request(&mut BufReader::new(raw.as_bytes()))
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            "POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse("GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage_request_line() {
+        assert!(parse("NONSENSE\r\n\r\n").is_err());
+        assert!(parse("GET nopath HTTP/1.1\r\n\r\n").is_err());
+        assert!(parse("GET / SPDY/9\r\n\r\n").is_err());
+        assert!(parse("").is_err());
+    }
+
+    #[test]
+    fn bounds_runaway_header_lines_while_reading() {
+        // A request line longer than the cap is refused without buffering it.
+        let raw = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_HEADER_BYTES * 2));
+        assert!(parse(&raw).is_err());
+        // So is a header section that dribbles past the cap line by line.
+        let mut raw = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..40 {
+            raw.push_str(&format!("X-Pad-{i}: {}\r\n", "b".repeat(512)));
+        }
+        raw.push_str("\r\n");
+        assert!(raw.len() > MAX_HEADER_BYTES);
+        assert!(parse(&raw).is_err());
+        // EOF in the middle of a line is a clean error, not a hang.
+        assert!(parse("GET / HTTP").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_or_oversized_content_length() {
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: soup\r\n\r\n").is_err());
+        let too_big = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(parse(&too_big).is_err());
+        // Declared longer than the bytes actually sent.
+        assert!(parse("POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").is_err());
+    }
+
+    #[test]
+    fn response_shape_and_error_body() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", &[("X-A", "1")], b"{}").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("X-A: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+
+        let mut out = Vec::new();
+        write_error(&mut out, 503, "busy").unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(s.ends_with("{\"error\":\"busy\"}"));
+    }
+
+    #[test]
+    fn sse_event_format() {
+        let mut out = Vec::new();
+        write_sse_event(&mut out, "token", "{\"token\":65}").unwrap();
+        assert_eq!(out, b"event: token\ndata: {\"token\":65}\n\n");
+    }
+}

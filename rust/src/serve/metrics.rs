@@ -1,0 +1,172 @@
+//! Serving metrics: lock-free counters/gauges plus a time-to-first-token
+//! histogram, rendered as Prometheus text exposition for `GET /metrics`.
+//!
+//! The streaming engine and the connection handlers update these through a
+//! shared `Arc<ServeMetrics>`; `/metrics` renders a point-in-time snapshot.
+//! `tokens_per_sec` is generated tokens over process-lifetime wall clock —
+//! coarse, but zero-state and enough to see whether the engine is moving.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// TTFT histogram bucket upper bounds, in seconds (Prometheus `le` labels);
+/// observations above the last bound land in `+Inf`.
+pub const TTFT_BUCKETS: [f64; 10] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0];
+
+/// Cumulative-histogram state for request time-to-first-token.
+struct TtftHistogram {
+    /// Per-bucket counts (non-cumulative; the renderer accumulates), plus
+    /// one overflow slot for `+Inf`.
+    counts: [u64; TTFT_BUCKETS.len() + 1],
+    sum_secs: f64,
+    count: u64,
+}
+
+/// Counters and gauges for the serving front-end.
+pub struct ServeMetrics {
+    started: Instant,
+    /// Generation requests accepted (admitted past the queue bound).
+    pub requests_total: AtomicUsize,
+    /// Generation requests rejected with `503` at the `--max-queue` bound.
+    pub rejected_total: AtomicUsize,
+    /// Generation requests completed (terminal `done` event sent).
+    pub completed_total: AtomicUsize,
+    /// Tokens generated across all requests.
+    pub tokens_generated: AtomicUsize,
+    /// Fused continuous-batching decode steps executed.
+    pub decode_steps: AtomicUsize,
+    /// Scoring requests served through the batcher queue.
+    pub score_requests: AtomicUsize,
+    /// Gauge: sequences currently occupying KV slots.
+    pub live_slots: AtomicUsize,
+    /// Gauge: generation requests accepted but not yet in a KV slot — the
+    /// backlog the `--max-queue` admission bound applies to.
+    pub queued: AtomicUsize,
+    ttft: Mutex<TtftHistogram>,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            requests_total: AtomicUsize::new(0),
+            rejected_total: AtomicUsize::new(0),
+            completed_total: AtomicUsize::new(0),
+            tokens_generated: AtomicUsize::new(0),
+            decode_steps: AtomicUsize::new(0),
+            score_requests: AtomicUsize::new(0),
+            live_slots: AtomicUsize::new(0),
+            queued: AtomicUsize::new(0),
+            ttft: Mutex::new(TtftHistogram {
+                counts: [0; TTFT_BUCKETS.len() + 1],
+                sum_secs: 0.0,
+                count: 0,
+            }),
+        }
+    }
+
+    /// Record one request's time-to-first-token.
+    pub fn record_ttft(&self, ttft: Duration) {
+        let secs = ttft.as_secs_f64();
+        let slot = TTFT_BUCKETS
+            .iter()
+            .position(|&ub| secs <= ub)
+            .unwrap_or(TTFT_BUCKETS.len());
+        let mut h = self.ttft.lock().expect("ttft histogram lock");
+        h.counts[slot] += 1;
+        h.sum_secs += secs;
+        h.count += 1;
+    }
+
+    /// Aggregate generated-token throughput since the server started.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.tokens_generated.load(Ordering::Relaxed) as f64 / secs
+    }
+
+    /// Render the Prometheus text exposition for `GET /metrics`.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::with_capacity(2048);
+        let counters: [(&str, &str, usize); 8] = [
+            ("sinq_serve_live_slots", "gauge", self.live_slots.load(Ordering::Relaxed)),
+            ("sinq_serve_queued_requests", "gauge", self.queued.load(Ordering::Relaxed)),
+            ("sinq_serve_requests_total", "counter", self.requests_total.load(Ordering::Relaxed)),
+            ("sinq_serve_rejected_total", "counter", self.rejected_total.load(Ordering::Relaxed)),
+            (
+                "sinq_serve_completed_total",
+                "counter",
+                self.completed_total.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_serve_score_requests_total",
+                "counter",
+                self.score_requests.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_serve_tokens_generated_total",
+                "counter",
+                self.tokens_generated.load(Ordering::Relaxed),
+            ),
+            ("sinq_serve_decode_steps_total", "counter", self.decode_steps.load(Ordering::Relaxed)),
+        ];
+        for (name, kind, value) in counters {
+            let _ = writeln!(s, "# TYPE {name} {kind}");
+            let _ = writeln!(s, "{name} {value}");
+        }
+        let _ = writeln!(s, "# TYPE sinq_serve_tokens_per_sec gauge");
+        let _ = writeln!(s, "sinq_serve_tokens_per_sec {:.3}", self.tokens_per_sec());
+
+        let h = self.ttft.lock().expect("ttft histogram lock");
+        let _ = writeln!(s, "# TYPE sinq_serve_ttft_seconds histogram");
+        let mut cumulative = 0u64;
+        for (i, &ub) in TTFT_BUCKETS.iter().enumerate() {
+            cumulative += h.counts[i];
+            let _ = writeln!(s, "sinq_serve_ttft_seconds_bucket{{le=\"{ub}\"}} {cumulative}");
+        }
+        let _ = writeln!(s, "sinq_serve_ttft_seconds_bucket{{le=\"+Inf\"}} {}", h.count);
+        let _ = writeln!(s, "sinq_serve_ttft_seconds_sum {:.6}", h.sum_secs);
+        let _ = writeln!(s, "sinq_serve_ttft_seconds_count {}", h.count);
+        s
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_count_matches() {
+        let m = ServeMetrics::new();
+        m.record_ttft(Duration::from_micros(500)); // ≤ 0.001
+        m.record_ttft(Duration::from_millis(30)); // ≤ 0.05
+        m.record_ttft(Duration::from_secs(60)); // +Inf overflow
+        let text = m.render();
+        assert!(text.contains("sinq_serve_ttft_seconds_bucket{le=\"0.001\"} 1"), "{text}");
+        assert!(text.contains("sinq_serve_ttft_seconds_bucket{le=\"0.05\"} 2"), "{text}");
+        assert!(text.contains("sinq_serve_ttft_seconds_bucket{le=\"5\"} 2"), "{text}");
+        assert!(text.contains("sinq_serve_ttft_seconds_bucket{le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("sinq_serve_ttft_seconds_count 3"), "{text}");
+    }
+
+    #[test]
+    fn counters_render_and_tokens_per_sec_moves() {
+        let m = ServeMetrics::new();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        m.tokens_generated.fetch_add(100, Ordering::Relaxed);
+        m.live_slots.store(3, Ordering::Relaxed);
+        assert!(m.tokens_per_sec() > 0.0);
+        let text = m.render();
+        assert!(text.contains("sinq_serve_tokens_generated_total 100"), "{text}");
+        assert!(text.contains("sinq_serve_live_slots 3"), "{text}");
+        assert!(text.contains("# TYPE sinq_serve_requests_total counter"), "{text}");
+    }
+}

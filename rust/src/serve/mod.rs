@@ -1,0 +1,608 @@
+//! Streaming HTTP/SSE serving front-end over the continuous batcher.
+//!
+//! This module turns `sinq serve --listen ADDR:PORT` into a long-running
+//! network endpoint on `std::net::TcpListener` — no external crates,
+//! consistent with the offline vendored-deps build. It is the layer the
+//! ROADMAP calls the "streaming generation front-end": a thin protocol
+//! front-end that admits requests into the continuous-batching
+//! [`BatchDecoder`](crate::backend::BatchDecoder) and streams tokens back
+//! as they are produced.
+//!
+//! ```text
+//!                        ┌────────────────────────────────────────────┐
+//!  TCP conn ─ handler ───┤ POST /v1/generate ─▶ EngineClient::submit  │
+//!  (thread per conn)     │     "stream":true ◀─ SSE token events ──── │──▶ GenEngine thread
+//!                        │ POST /v1/score ───▶ BatchServer queue      │    (BatchDecoder:
+//!                        │ GET  /healthz      (dynamic batcher)       │     admit/step/retire,
+//!                        │ GET  /metrics ───▶ ServeMetrics::render    │     per-step emission)
+//!                        └────────────────────────────────────────────┘
+//! ```
+//!
+//! ## Endpoints
+//!
+//! | endpoint | body | behaviour |
+//! |---|---|---|
+//! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool}` | greedy continuation; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
+//! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
+//! | `GET /healthz` | — | liveness + engine identity/capacity |
+//! | `GET /metrics` | — | Prometheus text: live slots, queued requests, tokens/sec, TTFT histogram |
+//!
+//! ## Error and backpressure contract
+//!
+//! * Malformed JSON bodies and requests that cannot fit a KV slot answer
+//!   `400` with a JSON `{"error": …}` carrying the decoder's own
+//!   KV-capacity text — they never tear down the engine.
+//! * When more than `--max-queue` generation requests are waiting for a KV
+//!   slot, new requests answer `503` with a `Retry-After` header instead of
+//!   queueing unboundedly.
+//! * `Ctrl-C` (SIGINT/SIGTERM) stops accepting connections, drains every
+//!   live slot and already-queued request, then exits cleanly.
+//!
+//! Scoring and generation share **one** weight set: the [`NativeBackend`]
+//! is built once and shared (`Arc`) between the scoring router and the
+//! streaming engine. There is no request cancellation: a client that
+//! disconnects mid-stream stops receiving bytes, but its slot decodes to
+//! completion (bounded by the request's own `max_new_tokens`).
+
+pub mod engine;
+pub mod http;
+pub mod metrics;
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::backend::{self, BackendSpec, InferenceBackend, NativeBackend};
+use crate::coordinator::server::{BatchServer, ScoreClient, ServerStats};
+use crate::eval::{log_prob, LogitsEngine};
+use crate::tensor::Matrix;
+use crate::util::json::Json;
+
+use engine::{EngineClient, GenEngine, StreamEvent, StreamHandle, SubmitError};
+use metrics::ServeMetrics;
+
+/// Longest token sequence `/v1/score` accepts (the full forward is
+/// quadratic in sequence length; unbounded request bodies must not be able
+/// to pin the batcher).
+pub const MAX_SCORE_TOKENS: usize = 4096;
+
+/// Front-end configuration (the CLI flags of `sinq serve --listen`).
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port).
+    pub listen: String,
+    /// Concurrent KV slots in the streaming engine (`--max-batch`).
+    pub max_batch: usize,
+    /// Per-slot KV capacity in positions (`--max-context`): bounds
+    /// `prompt + generated` per request.
+    pub max_context: usize,
+    /// Generation requests allowed to wait for a slot before new ones get
+    /// `503` (`--max-queue`).
+    pub max_queue: usize,
+    /// `max_new_tokens` applied when a request omits it.
+    pub default_max_new: usize,
+    /// Bounded queue depth of the scoring batcher.
+    pub score_queue: usize,
+    /// Concurrent connections (one handler thread each) before new ones
+    /// are answered `503` at the TCP layer — keeps connection floods from
+    /// bypassing the `--max-queue` admission bound.
+    pub max_connections: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            listen: "127.0.0.1:0".into(),
+            max_batch: 8,
+            max_context: 512,
+            max_queue: 64,
+            default_max_new: 32,
+            score_queue: 64,
+            max_connections: 256,
+        }
+    }
+}
+
+/// Final counters reported by [`Server::shutdown`].
+#[derive(Debug, Default, Clone)]
+pub struct ShutdownStats {
+    /// Generation requests accepted.
+    pub gen_requests: usize,
+    /// Generation requests completed.
+    pub gen_completed: usize,
+    /// Tokens generated.
+    pub gen_tokens: usize,
+    /// Scoring-router counters.
+    pub score: ServerStats,
+}
+
+/// [`InferenceBackend`] adapter over a shared [`NativeBackend`], so the
+/// scoring router batches against the same weight set the streaming engine
+/// decodes from (every native entry point takes `&self`; the `&mut` trait
+/// surface just delegates through the `Arc`).
+struct SharedNative(Arc<NativeBackend>);
+
+impl LogitsEngine for SharedNative {
+    fn logits(&mut self, tokens: &[u8]) -> anyhow::Result<Matrix> {
+        self.0.forward(tokens)
+    }
+
+    fn vocab(&self) -> usize {
+        self.0.cfg.vocab
+    }
+}
+
+impl InferenceBackend for SharedNative {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        InferenceBackend::max_batch(&*self.0)
+    }
+
+    fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
+        self.0.forward_batch(seqs)
+    }
+
+    fn generate(&mut self, prompt: &[u8], n: usize) -> anyhow::Result<Vec<u8>> {
+        self.0.generate(prompt, n)
+    }
+
+    fn generate_batch(
+        &mut self,
+        prompts: &[&[u8]],
+        max_new: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        self.0.generate_batch(prompts, max_new)
+    }
+}
+
+/// Per-connection handler context.
+struct ConnState {
+    engine: EngineClient,
+    score: ScoreClient,
+    metrics: Arc<ServeMetrics>,
+    model: String,
+    slots: usize,
+    capacity: usize,
+    default_max_new: usize,
+}
+
+/// A running serving endpoint: listener thread + streaming engine +
+/// scoring router. Bind with [`Server::start`] (or
+/// [`Server::start_with_backend`] to reuse an already-built engine), stop
+/// with [`Server::shutdown`].
+pub struct Server {
+    /// The bound address — with port 0 this is where the OS actually put us.
+    pub addr: SocketAddr,
+    /// Live counters (shared with the engine and handlers).
+    pub metrics: Arc<ServeMetrics>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    engine: Option<GenEngine>,
+    score: Option<BatchServer>,
+}
+
+impl Server {
+    /// Build the native engine from `spec` and start serving.
+    pub fn start(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<Server> {
+        Server::start_with_backend(Arc::new(backend::build_native(spec)?), opts)
+    }
+
+    /// Start serving over an already-built backend.
+    pub fn start_with_backend(
+        be: Arc<NativeBackend>,
+        opts: &ServeOpts,
+    ) -> anyhow::Result<Server> {
+        let metrics = Arc::new(ServeMetrics::new());
+        let slots = opts.max_batch.max(1);
+        let capacity = opts.max_context.max(1);
+        let gen_engine =
+            GenEngine::start(be.clone(), slots, capacity, opts.max_queue, metrics.clone())?;
+        let score = BatchServer::spawn(
+            {
+                let be = be.clone();
+                move || Ok(SharedNative(be))
+            },
+            opts.score_queue.max(1),
+            Duration::from_millis(4),
+        );
+        let listener = TcpListener::bind(&opts.listen)
+            .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", opts.listen))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let state = Arc::new(ConnState {
+            engine: gen_engine.client(),
+            score: score.client(),
+            metrics: metrics.clone(),
+            model: be.cfg.name.clone(),
+            slots,
+            capacity,
+            default_max_new: opts.default_max_new,
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = stop.clone();
+        let max_connections = opts.max_connections.max(1);
+        let accept_thread = thread::Builder::new()
+            .name("sinq-serve-accept".into())
+            .spawn(move || accept_loop(listener, &accept_stop, &state, max_connections))
+            .expect("spawn accept loop");
+
+        Ok(Server {
+            addr,
+            metrics,
+            stop,
+            accept_thread: Some(accept_thread),
+            engine: Some(gen_engine),
+            score: Some(score),
+        })
+    }
+
+    /// Graceful shutdown: stop accepting, wait for in-flight connections,
+    /// drain every live KV slot, stop the scoring router; returns final
+    /// counters.
+    pub fn shutdown(mut self) -> ShutdownStats {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(e) = self.engine.take() {
+            e.shutdown();
+        }
+        let score = self.score.take().map(BatchServer::shutdown).unwrap_or_default();
+        ShutdownStats {
+            gen_requests: self.metrics.requests_total.load(Ordering::Relaxed),
+            gen_completed: self.metrics.completed_total.load(Ordering::Relaxed),
+            gen_tokens: self.metrics.tokens_generated.load(Ordering::Relaxed),
+            score,
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Signal everything without joining, so error paths never block;
+        // `shutdown()` is the orderly exit.
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: &AtomicBool,
+    state: &Arc<ConnState>,
+    max_connections: usize,
+) {
+    let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _peer)) => {
+                handlers.retain(|h| !h.is_finished());
+                if handlers.len() >= max_connections {
+                    // Thread-per-connection: cap live handlers so a
+                    // connection flood cannot bypass the request-level
+                    // `--max-queue` bound by exhausting threads first.
+                    let _ = stream.set_nonblocking(false);
+                    let _ = http::write_error(&mut stream, 503, "too many open connections");
+                    continue;
+                }
+                let state = state.clone();
+                let h = thread::Builder::new()
+                    .name("sinq-serve-conn".into())
+                    .spawn(move || handle_connection(stream, &state))
+                    .expect("spawn connection handler");
+                handlers.push(h);
+            }
+            // Nonblocking listener: sleep briefly between polls so the stop
+            // flag is honored without a dedicated wakeup pipe.
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ConnState) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = http::write_error(&mut w, 400, &format!("bad request: {e}"));
+            return;
+        }
+    };
+    // Write failures (client hung up mid-stream) are not server errors.
+    let _ = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => handle_health(&mut w, state),
+        ("GET", "/metrics") => http::write_response(
+            &mut w,
+            200,
+            "text/plain; version=0.0.4; charset=utf-8",
+            &[],
+            state.metrics.render().as_bytes(),
+        ),
+        ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body),
+        ("POST", "/v1/score") => handle_score(&mut w, state, &req.body),
+        (_, "/healthz" | "/metrics" | "/v1/generate" | "/v1/score") => http::write_error(
+            &mut w,
+            405,
+            &format!("method {} not allowed on {}", req.method, req.path),
+        ),
+        _ => http::write_error(&mut w, 404, &format!("unknown path {}", req.path)),
+    };
+}
+
+fn handle_health(w: &mut TcpStream, state: &ConnState) -> std::io::Result<()> {
+    let m = &state.metrics;
+    let body = Json::obj(vec![
+        ("status", Json::Str("ok".into())),
+        ("backend", Json::Str("native".into())),
+        ("model", Json::Str(state.model.clone())),
+        ("slots", Json::Num(state.slots as f64)),
+        ("kv_capacity", Json::Num(state.capacity as f64)),
+        ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
+        ("queued_requests", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
+    ]);
+    http::write_response(w, 200, "application/json", &[], body.to_string_compact().as_bytes())
+}
+
+/// Parsed `POST /v1/generate` body.
+struct GenerateBody {
+    prompt: Vec<u8>,
+    max_new: usize,
+    stream: bool,
+}
+
+fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "request body is not valid UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("malformed JSON body: {e}"))?;
+    let prompt = match json.get("prompt") {
+        Some(Json::Str(p)) if !p.is_empty() => p.as_bytes().to_vec(),
+        Some(Json::Str(_)) => return Err("'prompt' must be a non-empty string".into()),
+        Some(_) => return Err("'prompt' must be a string".into()),
+        None => return Err("missing field 'prompt'".into()),
+    };
+    let max_new = match json.get("max_new_tokens") {
+        Some(v) => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .ok_or("'max_new_tokens' must be a non-negative integer")? as usize,
+        None => default_max_new,
+    };
+    let stream = match json.get("stream") {
+        Some(Json::Bool(b)) => *b,
+        Some(_) => return Err("'stream' must be a boolean".into()),
+        None => false,
+    };
+    Ok(GenerateBody { prompt, max_new, stream })
+}
+
+fn handle_generate(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io::Result<()> {
+    let parsed = match parse_generate(body, state.default_max_new) {
+        Ok(p) => p,
+        Err(msg) => return http::write_error(w, 400, &msg),
+    };
+    match state.engine.submit(parsed.prompt, parsed.max_new) {
+        // Structured engine errors: over-capacity prompts keep the
+        // decoder's KV-capacity text, saturation answers 503 + Retry-After.
+        Err(SubmitError::Invalid(msg)) => http::write_error(w, 400, &msg),
+        Err(e @ SubmitError::Busy { .. }) => {
+            let body = Json::obj(vec![("error", Json::Str(e.to_string()))]);
+            http::write_response(
+                w,
+                503,
+                "application/json",
+                &[("Retry-After", "1")],
+                body.to_string_compact().as_bytes(),
+            )
+        }
+        Err(e @ SubmitError::Unavailable(_)) => http::write_error(w, 503, &e.to_string()),
+        Ok(handle) => {
+            if parsed.stream {
+                stream_generate(w, handle)
+            } else {
+                respond_generate(w, handle)
+            }
+        }
+    }
+}
+
+/// Streamed generation: one SSE `token` event per decoded token as the
+/// engine emits it, then a terminal `done` (or `error`) event.
+fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<()> {
+    http::write_sse_header(w)?;
+    let mut text = Vec::new();
+    for ev in handle.rx.iter() {
+        match ev {
+            StreamEvent::Token(tok) => {
+                text.push(tok);
+                let data = Json::obj(vec![
+                    ("index", Json::Num((text.len() - 1) as f64)),
+                    ("token", Json::Num(tok as f64)),
+                ]);
+                http::write_sse_event(w, "token", &data.to_string_compact())?;
+            }
+            StreamEvent::Done { finish_reason, prompt_tokens, gen_tokens } => {
+                let data = Json::obj(vec![
+                    ("finish_reason", Json::Str(finish_reason.into())),
+                    ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                    ("generated_tokens", Json::Num(gen_tokens as f64)),
+                    ("text", Json::Str(String::from_utf8_lossy(&text).into_owned())),
+                ]);
+                return http::write_sse_event(w, "done", &data.to_string_compact());
+            }
+            StreamEvent::Error(msg) => {
+                let data = Json::obj(vec![("error", Json::Str(msg))]);
+                return http::write_sse_event(w, "error", &data.to_string_compact());
+            }
+        }
+    }
+    let data = Json::obj(vec![("error", Json::Str("stream interrupted".into()))]);
+    http::write_sse_event(w, "error", &data.to_string_compact())
+}
+
+/// Non-streamed generation: collect the same event stream into one JSON
+/// response (token-identical to streaming — both read the same channel).
+fn respond_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<()> {
+    let mut tokens: Vec<u8> = Vec::new();
+    for ev in handle.rx.iter() {
+        match ev {
+            StreamEvent::Token(tok) => tokens.push(tok),
+            StreamEvent::Done { finish_reason, prompt_tokens, gen_tokens } => {
+                let body = Json::obj(vec![
+                    ("text", Json::Str(String::from_utf8_lossy(&tokens).into_owned())),
+                    (
+                        "tokens",
+                        Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    ),
+                    ("finish_reason", Json::Str(finish_reason.into())),
+                    ("prompt_tokens", Json::Num(prompt_tokens as f64)),
+                    ("generated_tokens", Json::Num(gen_tokens as f64)),
+                ]);
+                return http::write_response(
+                    w,
+                    200,
+                    "application/json",
+                    &[],
+                    body.to_string_compact().as_bytes(),
+                );
+            }
+            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg),
+        }
+    }
+    http::write_error(w, 500, "stream interrupted")
+}
+
+fn parse_score(body: &[u8]) -> Result<Vec<u8>, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "request body is not valid UTF-8".to_string())?;
+    let json = Json::parse(text).map_err(|e| format!("malformed JSON body: {e}"))?;
+    let tokens: Vec<u8> = if let Some(Json::Str(t)) = json.get("text") {
+        t.as_bytes().to_vec()
+    } else if let Some(arr) = json.get("tokens").and_then(Json::as_arr) {
+        let mut out = Vec::with_capacity(arr.len());
+        for v in arr {
+            let n = v
+                .as_f64()
+                .filter(|n| (0.0..=255.0).contains(n) && n.fract() == 0.0)
+                .ok_or("'tokens' entries must be integers in 0..=255")?;
+            out.push(n as u8);
+        }
+        out
+    } else {
+        return Err("provide a string field 'text' or a byte array 'tokens'".into());
+    };
+    if tokens.len() < 2 {
+        return Err("need at least 2 tokens to score next-token log-probs".into());
+    }
+    if tokens.len() > MAX_SCORE_TOKENS {
+        return Err(format!(
+            "sequence of {} tokens exceeds the scoring cap of {MAX_SCORE_TOKENS}",
+            tokens.len()
+        ));
+    }
+    Ok(tokens)
+}
+
+/// `/v1/score`: teacher-forced next-token log-probs through the scoring
+/// batcher (concurrent requests share fused batched dispatches).
+fn handle_score(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io::Result<()> {
+    let tokens = match parse_score(body) {
+        Ok(t) => t,
+        Err(msg) => return http::write_error(w, 400, &msg),
+    };
+    let logits = match state.score.score(tokens.clone()) {
+        Ok(m) => m,
+        Err(e) => return http::write_error(w, 500, &format!("scoring failed: {e}")),
+    };
+    state.metrics.score_requests.fetch_add(1, Ordering::Relaxed);
+    let mut logprobs = Vec::with_capacity(tokens.len() - 1);
+    let mut nll = 0.0f64;
+    for p in 0..tokens.len() - 1 {
+        let lp = log_prob(logits.row(p), tokens[p + 1]);
+        nll -= lp;
+        logprobs.push(lp);
+    }
+    let mean_nll = nll / logprobs.len() as f64;
+    let body = Json::obj(vec![
+        ("tokens", Json::Num(tokens.len() as f64)),
+        ("logprobs", Json::Arr(logprobs.into_iter().map(Json::Num).collect())),
+        ("mean_nll", Json::Num(mean_nll)),
+        ("ppl", Json::Num(mean_nll.exp())),
+    ]);
+    http::write_response(w, 200, "application/json", &[], body.to_string_compact().as_bytes())
+}
+
+static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+
+/// Route SIGINT/SIGTERM to a flag the serve loop polls, so Ctrl-C drains
+/// live slots instead of killing mid-decode. Raw `signal(2)` through the
+/// platform libc that is already linked by std — no crate needed.
+#[cfg(unix)]
+fn install_interrupt_handler() {
+    extern "C" fn on_signal(_sig: i32) {
+        INTERRUPTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_interrupt_handler() {
+    // No signal routing off unix; the process runs until killed.
+}
+
+/// Blocking CLI entry point for `sinq serve --listen`: build the engine,
+/// serve until SIGINT/SIGTERM, drain, report.
+pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
+    let be = Arc::new(backend::build_native(spec)?);
+    println!(
+        "native engine ready: model '{}', {} quantized linears",
+        be.cfg.name,
+        be.quantized_layer_count()
+    );
+    let server = Server::start_with_backend(be, opts)?;
+    println!(
+        "listening on http://{} ({} slots x {} KV positions, max queue {})",
+        server.addr,
+        opts.max_batch.max(1),
+        opts.max_context.max(1),
+        opts.max_queue
+    );
+    println!("endpoints: POST /v1/generate  POST /v1/score  GET /healthz  GET /metrics");
+
+    install_interrupt_handler();
+    while !INTERRUPTED.load(Ordering::SeqCst) {
+        thread::sleep(Duration::from_millis(100));
+    }
+    println!("\ninterrupt received: draining live slots ...");
+    let stats = server.shutdown();
+    println!(
+        "served {} generation requests ({} completed, {} tokens) and {} scoring requests",
+        stats.gen_requests, stats.gen_completed, stats.gen_tokens, stats.score.requests
+    );
+    Ok(())
+}

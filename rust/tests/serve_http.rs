@@ -1,0 +1,387 @@
+//! End-to-end tests for the HTTP/SSE serving front-end (`sinq::serve`):
+//! boot the listener on port 0, talk to it over raw `TcpStream`s, and hold
+//! the streamed token path to the exactness contract — the concatenated
+//! SSE token events must be bit-identical to `NativeDecoder::generate`
+//! (via `NativeBackend::generate`) for the same prompt and weights.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use sinq::backend::{self, BackendKind, BackendSpec, NativeBackend};
+use sinq::quant::{Method, QuantConfig};
+use sinq::serve::{ServeOpts, Server};
+use sinq::util::json::Json;
+
+/// Spec for a deterministic synthetic pico model (no artifacts anywhere),
+/// optionally quantized in-process.
+fn pico_spec(method: Option<Method>) -> BackendSpec {
+    let mut spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+    spec.quantize = method.map(|m| QuantConfig::new(m, 4));
+    spec
+}
+
+fn start_server(spec: &BackendSpec, opts: &ServeOpts) -> Server {
+    Server::start(spec, opts).expect("server start")
+}
+
+/// One parsed HTTP response.
+struct Response {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: Vec<u8>,
+}
+
+impl Response {
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    fn json(&self) -> Json {
+        Json::parse(std::str::from_utf8(&self.body).expect("utf8 body")).expect("json body")
+    }
+}
+
+/// Issue one request over a raw TcpStream and read the whole response
+/// (every server response is `Connection: close`, so EOF delimits it).
+fn request(addr: &str, method: &str, path: &str, body: &str) -> Response {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .expect("write request");
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &[u8]) -> Response {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("header/body separator");
+    let head = std::str::from_utf8(&raw[..split]).expect("utf8 headers");
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().expect("status line");
+    let status: u16 = status_line.split_whitespace().nth(1).expect("code").parse().unwrap();
+    let headers = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    Response { status, headers, body: raw[split + 4..].to_vec() }
+}
+
+/// One SSE event: `(event name, parsed data)`.
+type SseEvent = (String, Json);
+
+fn parse_sse_events(body: &[u8]) -> Vec<SseEvent> {
+    let text = std::str::from_utf8(body).expect("utf8 SSE body");
+    text.split("\n\n")
+        .filter(|chunk| !chunk.trim().is_empty())
+        .map(|chunk| {
+            let mut event = String::new();
+            let mut data = String::new();
+            for line in chunk.lines() {
+                if let Some(v) = line.strip_prefix("event: ") {
+                    event = v.to_string();
+                } else if let Some(v) = line.strip_prefix("data: ") {
+                    data = v.to_string();
+                }
+            }
+            (event, Json::parse(&data).expect("event data json"))
+        })
+        .collect()
+}
+
+/// Collect the token bytes out of a streamed-generation SSE body.
+fn sse_tokens(events: &[SseEvent]) -> Vec<u8> {
+    events
+        .iter()
+        .filter(|(name, _)| name == "token")
+        .map(|(_, data)| data.get("token").and_then(Json::as_usize).expect("token field") as u8)
+        .collect()
+}
+
+fn generate_body(prompt: &str, max_new: usize, stream: bool) -> String {
+    Json::obj(vec![
+        ("prompt", Json::Str(prompt.into())),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+    .to_string_compact()
+}
+
+// =====================================================================
+// Streamed-token exactness: SSE events vs NativeDecoder::generate
+// =====================================================================
+
+#[test]
+fn streamed_sse_tokens_bit_identical_to_native_decoder() {
+    // RTN and SINQ at 4 bits, per the acceptance criteria.
+    for method in [Method::Rtn, Method::Sinq] {
+        let spec = pico_spec(Some(method));
+        // Reference: the same spec built directly; `NativeBackend::generate`
+        // runs the single-sequence NativeDecoder path.
+        let reference = backend::build_native(&spec).expect("reference backend");
+        let prompt = "the quantized stream";
+        let expected = reference.generate(prompt.as_bytes(), 9).expect("reference tokens");
+
+        let server = start_server(&spec, &ServeOpts::default());
+        let addr = server.addr.to_string();
+        let res = request(&addr, "POST", "/v1/generate", &generate_body(prompt, 9, true));
+        assert_eq!(res.status, 200, "{:?}", String::from_utf8_lossy(&res.body));
+        assert_eq!(res.header("content-type"), Some("text/event-stream"));
+
+        let events = parse_sse_events(&res.body);
+        assert_eq!(
+            sse_tokens(&events),
+            expected,
+            "SSE tokens diverged from NativeDecoder::generate ({method:?})"
+        );
+        let (last_name, last_data) = events.last().expect("terminal event");
+        assert_eq!(last_name, "done");
+        assert_eq!(last_data.get("finish_reason").and_then(Json::as_str), Some("length"));
+        assert_eq!(last_data.get("generated_tokens").and_then(Json::as_usize), Some(9));
+        assert_eq!(
+            last_data.get("prompt_tokens").and_then(Json::as_usize),
+            Some(prompt.len())
+        );
+
+        // Non-streamed response carries the identical token sequence.
+        let res = request(&addr, "POST", "/v1/generate", &generate_body(prompt, 9, false));
+        assert_eq!(res.status, 200);
+        let tokens: Vec<u8> = res
+            .json()
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .expect("tokens array")
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u8)
+            .collect();
+        assert_eq!(tokens, expected);
+
+        // The metrics endpoint must show the engine actually moved.
+        let res = request(&addr, "GET", "/metrics", "");
+        assert_eq!(res.status, 200);
+        let text = String::from_utf8(res.body).unwrap();
+        let tps = metric_value(&text, "sinq_serve_tokens_per_sec");
+        assert!(tps > 0.0, "tokens/sec not reported:\n{text}");
+        let generated = metric_value(&text, "sinq_serve_tokens_generated_total");
+        assert_eq!(generated as usize, 18, "two 9-token generations");
+        assert!(text.contains("sinq_serve_ttft_seconds_count 2"), "{text}");
+
+        let stats = server.shutdown();
+        assert_eq!(stats.gen_completed, 2);
+        assert_eq!(stats.gen_tokens, 18);
+    }
+}
+
+fn metric_value(text: &str, name: &str) -> f64 {
+    text.lines()
+        .find(|l| l.starts_with(name) && !l.starts_with(&format!("{name}_")))
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("metric {name} missing:\n{text}"))
+}
+
+// =====================================================================
+// Structured errors: malformed JSON and over-KV-capacity → 400
+// =====================================================================
+
+#[test]
+fn malformed_json_body_returns_400_with_error_field() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    for (path, body) in [
+        ("/v1/generate", "{not json"),
+        ("/v1/generate", "{\"max_new_tokens\": 4}"), // missing prompt
+        ("/v1/score", "[1,2,"),
+        ("/v1/score", "{\"tokens\": [1, 999]}"), // out-of-range byte
+    ] {
+        let res = request(&addr, "POST", path, body);
+        assert_eq!(res.status, 400, "{path} body {body:?}");
+        let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+        assert!(!err.is_empty(), "{path}: error field missing");
+    }
+    // The connection-level failure path must also answer 400, not hang up.
+    let res = request(&addr, "POST", "/v1/generate", "");
+    assert_eq!(res.status, 400);
+    server.shutdown();
+}
+
+#[test]
+fn over_capacity_prompt_returns_400_with_kv_error_text() {
+    let opts = ServeOpts { max_context: 8, ..ServeOpts::default() };
+    let server = start_server(&pico_spec(None), &opts);
+    let addr = server.addr.to_string();
+    let res = request(
+        &addr,
+        "POST",
+        "/v1/generate",
+        &generate_body("a prompt far longer than eight positions", 4, false),
+    );
+    assert_eq!(res.status, 400);
+    let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    assert!(err.contains("KV"), "expected the decoder's KV-capacity text, got: {err}");
+    assert!(err.contains("capacity"), "{err}");
+
+    // A fitting request on the same server still works afterwards.
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("ok", 3, false));
+    assert_eq!(res.status, 200);
+    server.shutdown();
+}
+
+// =====================================================================
+// Backpressure: 503 + Retry-After when --max-queue is saturated
+// =====================================================================
+
+#[test]
+fn backpressure_503_when_max_queue_saturated() {
+    let opts = ServeOpts {
+        max_batch: 1,      // one KV slot: the second request must queue
+        max_queue: 1,      // ... and the third must be refused
+        max_context: 4096, // room for a generation long enough to pin the slot
+        ..ServeOpts::default()
+    };
+    let server = start_server(&pico_spec(None), &opts);
+    let addr = server.addr.to_string();
+
+    // Request A: long streamed generation occupying the only slot. Read
+    // its SSE preamble + first token so we know it is decoding (4000 steps
+    // keep the slot busy for the rest of the test).
+    let a = TcpStream::connect(&addr).expect("connect A");
+    let mut a_writer = a.try_clone().unwrap();
+    let body = generate_body("aaaa", 4000, true);
+    write!(
+        a_writer,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut a_reader = BufReader::new(a);
+    let mut line = String::new();
+    a_reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+    loop {
+        line.clear();
+        a_reader.read_line(&mut line).unwrap();
+        if line.starts_with("event: token") {
+            break;
+        }
+    }
+
+    // Request B: accepted into the queue (slot busy). Its SSE status line
+    // is written as soon as the submission is accepted, so reading it
+    // guarantees B occupies the backlog before C is sent.
+    let b = TcpStream::connect(&addr).expect("connect B");
+    let mut b_writer = b.try_clone().unwrap();
+    let body = generate_body("bbbb", 5, true);
+    write!(
+        b_writer,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut b_reader = BufReader::new(b);
+    let mut line = String::new();
+    b_reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 200"), "B must be accepted: {line}");
+
+    // Request C: the backlog (B) sits at --max-queue = 1 → 503 + Retry-After.
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("cccc", 5, false));
+    assert_eq!(res.status, 503, "{}", String::from_utf8_lossy(&res.body));
+    assert_eq!(res.header("retry-after"), Some("1"));
+    let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    assert!(err.contains("queue"), "{err}");
+
+    // Drain A and B: the refused request must not poison queued work.
+    let mut rest = Vec::new();
+    a_reader.read_to_end(&mut rest).unwrap();
+    let a_events = parse_sse_events(&rest); // headers were consumed line-wise
+    assert_eq!(sse_tokens(&a_events).len(), 4000 - 1, "one token was read manually");
+    let mut b_rest = Vec::new();
+    b_reader.read_to_end(&mut b_rest).unwrap();
+    let b_events = parse_sse_events(&b_rest);
+    assert_eq!(sse_tokens(&b_events).len(), 5, "queued request must still complete");
+    assert!(b_events.iter().any(|(name, _)| name == "done"));
+    server.shutdown();
+}
+
+// =====================================================================
+// Scoring through the BatchServer queue + health endpoint
+// =====================================================================
+
+#[test]
+fn score_endpoint_matches_direct_logprobs() {
+    let spec = pico_spec(None);
+    let server = start_server(&spec, &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let text = "hello scoring endpoint";
+    let body = Json::obj(vec![("text", Json::Str(text.into()))]).to_string_compact();
+    let res = request(&addr, "POST", "/v1/score", &body);
+    assert_eq!(res.status, 200, "{}", String::from_utf8_lossy(&res.body));
+    let json = res.json();
+    assert_eq!(json.get("tokens").and_then(Json::as_usize), Some(text.len()));
+    let logprobs = json.get("logprobs").and_then(Json::as_arr).expect("logprobs");
+    assert_eq!(logprobs.len(), text.len() - 1);
+
+    // Same arithmetic as computing from the backend's own logits.
+    let mut reference = backend::build_native(&spec).expect("backend");
+    let logits = sinq::eval::LogitsEngine::logits(&mut reference, text.as_bytes()).unwrap();
+    let tokens = text.as_bytes();
+    for (p, lp) in logprobs.iter().enumerate() {
+        let want = sinq::eval::log_prob(logits.row(p), tokens[p + 1]);
+        let got = lp.as_f64().unwrap();
+        assert!((got - want).abs() < 1e-9, "logprob[{p}]: {got} vs {want}");
+    }
+    let ppl = json.get("ppl").and_then(Json::as_f64).unwrap();
+    assert!(ppl.is_finite() && ppl > 1.0);
+
+    // Single-token sequences cannot be scored.
+    let res = request(&addr, "POST", "/v1/score", "{\"tokens\": [65]}");
+    assert_eq!(res.status, 400);
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_engine_shape_and_unknown_paths_404() {
+    let opts = ServeOpts { max_batch: 3, max_context: 64, ..ServeOpts::default() };
+    let server = start_server(&pico_spec(None), &opts);
+    let addr = server.addr.to_string();
+    let res = request(&addr, "GET", "/healthz", "");
+    assert_eq!(res.status, 200);
+    let json = res.json();
+    assert_eq!(json.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(json.get("backend").and_then(Json::as_str), Some("native"));
+    assert_eq!(json.get("slots").and_then(Json::as_usize), Some(3));
+    assert_eq!(json.get("kv_capacity").and_then(Json::as_usize), Some(64));
+
+    assert_eq!(request(&addr, "GET", "/nope", "").status, 404);
+    assert_eq!(request(&addr, "GET", "/v1/generate", "").status, 405);
+    assert_eq!(request(&addr, "POST", "/healthz", "").status, 405);
+    server.shutdown();
+}
+
+// =====================================================================
+// The server reuses one backend for scoring and generation
+// =====================================================================
+
+#[test]
+fn shared_backend_server_via_start_with_backend() {
+    use sinq::model::{ModelConfig, ModelWeights};
+    let cfg = ModelConfig::family("pico").unwrap();
+    let be = Arc::new(NativeBackend::from_weights(&ModelWeights::synthetic(&cfg, 42)));
+    let expected = be.generate(b"shared", 4).unwrap();
+    let server = Server::start_with_backend(be, &ServeOpts::default()).expect("server");
+    let addr = server.addr.to_string();
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("shared", 4, true));
+    assert_eq!(res.status, 200);
+    assert_eq!(sse_tokens(&parse_sse_events(&res.body)), expected);
+    let stats = server.shutdown();
+    assert_eq!(stats.gen_requests, 1);
+}

@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
 # Validate the BENCH_*.json summaries emitted by `cargo bench --bench
-# backend` / `--bench decode` before CI archives them: each file must be
-# well-formed JSON with a named bench and a non-empty `results` array of
-# finite numbers. The decode report must additionally carry per-batch
-# throughput (the ≥8-batch row is the amortization headline). Fails loudly
-# so a silently-broken bench cannot upload garbage artifacts.
+# backend` / `--bench decode` / `--bench serve` before CI archives them:
+# each file must be well-formed JSON with a named bench and a non-empty
+# `results` array of finite numbers. The decode report must additionally
+# carry per-batch throughput (the ≥8-batch row is the amortization
+# headline), and the serve report per-concurrency requests/sec plus a
+# median TTFT. Fails loudly so a silently-broken bench cannot upload
+# garbage artifacts.
 set -euo pipefail
 
 if [ "$#" -eq 0 ]; then
-  echo "usage: $0 BENCH_backend.json [BENCH_decode.json ...]" >&2
+  echo "usage: $0 BENCH_backend.json [BENCH_decode.json BENCH_serve.json ...]" >&2
   exit 2
 fi
 
@@ -45,6 +47,15 @@ if bench == "decode":
         batches.append(row.get("batch", 0))
     assert any(b >= 8 for b in batches), f"{path}: no batch ≥ 8 row (got {batches})"
     assert any(b == 1 for b in batches), f"{path}: no batch-1 baseline row"
+
+if bench == "serve":
+    batches = []
+    for row in results:
+        assert row.get("requests_per_sec", 0) > 0, f"{path}: zero req/s row {row!r}"
+        assert row.get("ttft_median_ms", -1) >= 0, f"{path}: missing TTFT in {row!r}"
+        batches.append(row.get("batch", 0))
+    assert any(b >= 16 for b in batches), f"{path}: no concurrency ≥ 16 row (got {batches})"
+    assert any(b == 1 for b in batches), f"{path}: no concurrency-1 baseline row"
 
 print(f"check_bench: {path} ok ({bench}, {len(results)} rows)")
 PYEOF
