@@ -1,5 +1,6 @@
 //! Fused dequant-matmul vs dequantize-then-matmul across bit widths — the
-//! native backend's reason to exist, measured.
+//! native backend's reason to exist, measured — plus the scalar-vs-SIMD
+//! delta of the dispatched decode kernels.
 //!
 //! For each `bits ∈ {2, 3, 4, 8}` on the tiny model's largest linear shape
 //! (ffn×d = 512×128) this times:
@@ -8,15 +9,20 @@
 //!   multiply in one pass, codes stay packed);
 //! * `baseline` — materialize the full f32 weight matrix (`to_dense`) then
 //!   `matmul_nt`, i.e. what `model/forward.rs` over effective weights does;
-//! * the same pair for the single-vector decode path (`dequant_matvec`).
+//! * the same pair for the single-vector decode path (`dequant_matvec`);
+//! * the decode kernels (`dequant_matvec`, 16-row
+//!   `dequant_matmul_shared`) under the auto-dispatched SIMD kernel **and**
+//!   the forced scalar fallback, with effective packed-payload GB/s for
+//!   both, so the SIMD speedup lands in the perf trajectory.
 //!
 //! Results append to `artifacts/bench_backend.jsonl` (raw samples) and a
-//! summary with fused-vs-baseline speedups is written to
-//! `BENCH_backend.json` at the repository root for the perf trajectory.
+//! summary with fused-vs-baseline and scalar-vs-SIMD speedups is written
+//! to `BENCH_backend.json` at the repository root.
 //!
 //! Run with `cargo bench --bench backend`; set `BENCH_QUICK=1` (or pass
 //! `--quick`) for the reduced-iteration CI smoke mode.
 
+use sinq::backend::simd::{self, Isa};
 use sinq::backend::QuantizedTensor;
 use sinq::quant::{quantize_matrix, Method, QuantConfig};
 use sinq::tensor::{Matrix, Rng};
@@ -28,6 +34,10 @@ fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
     let mut b = if quick { Bencher::quick() } else { Bencher::default() };
     let mut rng = Rng::new(2025);
+
+    simd::force(None);
+    let kernel = simd::kernel_name().to_string();
+    println!("dispatched simd kernel: '{kernel}'");
 
     // Tiny-model shapes: x is a 128-token window of d=128 activations; W is
     // the ffn→d projection (512×128), the model's largest linear.
@@ -63,7 +73,7 @@ fn main() {
             let dense = qt.to_dense();
             black_box(x.matmul_nt(&dense));
         });
-        let fused_mv = b.bench(&format!("dequant_matvec fused {bits}b 512x128"), || {
+        let fused_mv = b.bench(&format!("dequant_matvec {kernel} {bits}b 512x128"), || {
             black_box(qt.dequant_matvec(&xv));
         });
         let base_mv = b.bench(&format!("dequantize-then-matvec {bits}b"), || {
@@ -73,14 +83,35 @@ fn main() {
         });
         // The continuous-batching decode kernel: one unpack per weight row
         // shared across 16 stacked sequences vs 16 independent matvecs.
-        let shared16 = b.bench(&format!("dequant_matmul_shared {bits}b 16x128·(512x128)ᵀ"), || {
-            black_box(qt.dequant_matmul_shared(&xb, 1));
-        });
+        let shared16 =
+            b.bench(&format!("dequant_matmul_shared {kernel} {bits}b 16x128·(512x128)ᵀ"), || {
+                black_box(qt.dequant_matmul_shared(&xb, 1));
+            });
         let mv16 = b.bench(&format!("16× dequant_matvec {bits}b"), || {
             for r in 0..16 {
                 black_box(qt.dequant_matvec(xb.row(r)));
             }
         });
+
+        // Scalar-vs-SIMD on the decode kernels: force the portable
+        // fallback, re-time the same calls, restore auto dispatch.
+        simd::force(Some(Isa::Scalar));
+        let mv_scalar = b.bench(&format!("dequant_matvec scalar {bits}b 512x128"), || {
+            black_box(qt.dequant_matvec(&xv));
+        });
+        let shared16_scalar =
+            b.bench(&format!("dequant_matmul_shared scalar {bits}b 16x128·(512x128)ᵀ"), || {
+                black_box(qt.dequant_matmul_shared(&xb, 1));
+            });
+        simd::force(None);
+
+        // Effective packed-payload bandwidth: every matvec / shared step
+        // streams the full packed code payload exactly once.
+        let pb = qt.packed_bytes() as f64;
+        let mv_gbps = pb / fused_mv.mean_ns;
+        let mv_scalar_gbps = pb / mv_scalar.mean_ns;
+        let mv_simd_speedup = mv_scalar.mean_ns / fused_mv.mean_ns;
+        let shared_simd_speedup = shared16_scalar.mean_ns / shared16.mean_ns;
 
         let speedup = base.mean_ns / fused.mean_ns;
         let speedup_mv = base_mv.mean_ns / fused_mv.mean_ns;
@@ -90,6 +121,11 @@ fn main() {
              shared-batch-16 speedup {speedup_shared:.2}x, packed {} KiB vs dense {} KiB",
             qt.packed_bytes() / 1024,
             (ffn * d * 4) / 1024,
+        );
+        println!(
+            "       simd '{kernel}' vs scalar: matvec {mv_simd_speedup:.2}x \
+             ({mv_gbps:.2} vs {mv_scalar_gbps:.2} packed GB/s), \
+             shared-batch-16 {shared_simd_speedup:.2}x"
         );
         summary.push(Json::obj(vec![
             ("bits", Json::Num(bits as f64)),
@@ -102,6 +138,12 @@ fn main() {
             ("shared_batch16_ns", Json::Num(shared16.mean_ns)),
             ("matvec16_ns", Json::Num(mv16.mean_ns)),
             ("shared_batch16_speedup", Json::Num(speedup_shared)),
+            ("matvec_scalar_ns", Json::Num(mv_scalar.mean_ns)),
+            ("matvec_simd_speedup", Json::Num(mv_simd_speedup)),
+            ("matvec_gbps", Json::Num(mv_gbps)),
+            ("matvec_scalar_gbps", Json::Num(mv_scalar_gbps)),
+            ("shared_batch16_scalar_ns", Json::Num(shared16_scalar.mean_ns)),
+            ("shared_batch16_simd_speedup", Json::Num(shared_simd_speedup)),
             ("packed_bytes", Json::Num(qt.packed_bytes() as f64)),
         ]));
     }
@@ -110,6 +152,7 @@ fn main() {
         ("bench", Json::Str("backend".to_string())),
         ("shape", Json::Str(format!("x({seq},{d}) · W({ffn},{d})ᵀ"))),
         ("method", Json::Str("sinq".to_string())),
+        ("kernel", Json::Str(kernel)),
         ("results", Json::Arr(summary)),
     ]);
     // Repo root, resolved from the package dir so cwd does not matter.

@@ -1,5 +1,8 @@
 //! Continuous-batched native decode throughput: aggregate tokens/sec at
-//! batch sizes 1/4/16 on the tiny model (SINQ 4-bit), no artifacts needed.
+//! batch sizes 1/4/16 on the tiny model (SINQ 4-bit), no artifacts needed —
+//! now measured under both the runtime-dispatched SIMD kernels and the
+//! forced scalar fallback, so `BENCH_decode.json` records the SIMD speedup
+//! per batch size alongside the batching speedup.
 //!
 //! Batch 1 runs the single-sequence `NativeDecoder` (fused matvec path);
 //! larger batches run the continuous-batching `BatchDecoder`, whose fused
@@ -7,13 +10,14 @@
 //! across all live sequences. Before timing, batched tokens are asserted
 //! bit-identical to single-sequence decode. A summary lands in
 //! `BENCH_decode.json` at the repository root (the CI bench-smoke job
-//! validates and archives it).
+//! validates and archives it, including the scalar-vs-SIMD fields).
 //!
 //! Run with `cargo bench --bench decode`; set `BENCH_QUICK=1` (or pass
 //! `--quick`) for the reduced-iteration CI smoke mode.
 
 use std::time::Instant;
 
+use sinq::backend::simd::{self, Isa};
 use sinq::backend::{BatchDecoder, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
@@ -48,9 +52,34 @@ fn run_single(be: &NativeBackend, reqs: &[(Vec<u8>, usize)], capacity: usize) ->
     (t0.elapsed().as_secs_f64(), tokens)
 }
 
+/// Best-of-`reps` wall clock for one batch size (damps scheduler noise).
+fn best_of(
+    reps: usize,
+    be: &NativeBackend,
+    reqs: &[(Vec<u8>, usize)],
+    batch: usize,
+    capacity: usize,
+) -> (f64, usize) {
+    let mut best_secs = f64::INFINITY;
+    let mut tokens = 0usize;
+    for _ in 0..reps {
+        let (secs, toks) = if batch == 1 {
+            run_single(be, reqs, capacity)
+        } else {
+            run_batched(be, reqs, batch, capacity)
+        };
+        best_secs = best_secs.min(secs);
+        tokens = toks;
+    }
+    (best_secs, tokens)
+}
+
 fn main() {
     let quick = std::env::var("BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick");
     let (n_req, prompt_len, gen, reps) = if quick { (16, 8, 12, 1) } else { (32, 16, 48, 3) };
+
+    simd::force(None);
+    let kernel = simd::kernel_name().to_string();
 
     let mw = load_or_synthetic("artifacts", "tiny", 2026);
     let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None).expect("quantize");
@@ -61,8 +90,9 @@ fn main() {
         .collect();
     let capacity = prompt_len + gen + 1;
 
-    // Parity gate: the batched engine must reproduce single-sequence greedy
-    // tokens exactly before its throughput means anything.
+    // Parity gates: the batched engine must reproduce single-sequence
+    // greedy tokens exactly, and the SIMD kernels must emit the same
+    // tokens as the scalar fallback, before throughput means anything.
     {
         let mut dec = BatchDecoder::new(&be, 4, capacity).expect("batch decoder");
         for (i, (prompt, g)) in reqs.iter().take(6).enumerate() {
@@ -73,40 +103,53 @@ fn main() {
             let mut single = NativeDecoder::new(&be, capacity).expect("decoder");
             let want = single.generate(prompt, *g).expect("single decode");
             assert_eq!(out.tokens, want, "batched decode diverged on request {}", out.id);
+
+            simd::force(Some(Isa::Scalar));
+            let mut scalar = NativeDecoder::new(&be, capacity).expect("decoder");
+            let scalar_tokens = scalar.generate(prompt, *g).expect("scalar decode");
+            simd::force(None);
+            assert_eq!(
+                out.tokens, scalar_tokens,
+                "scalar and {kernel} kernels disagree on request {}",
+                out.id
+            );
         }
     }
 
-    println!("decode bench: tiny/sinq-4b, {n_req} requests, prompt {prompt_len}, +{gen}\n");
+    println!(
+        "decode bench: tiny/sinq-4b, {n_req} requests, prompt {prompt_len}, +{gen}, \
+         kernel '{kernel}'\n"
+    );
     let mut summary: Vec<Json> = Vec::new();
     let mut tps_batch1 = 0.0f64;
     for batch in [1usize, 4, 16] {
-        // Best-of-`reps` to damp scheduler noise without a warmup phase.
-        let mut best_secs = f64::INFINITY;
-        let mut tokens = 0usize;
-        for _ in 0..reps {
-            let (secs, toks) = if batch == 1 {
-                run_single(&be, &reqs, capacity)
-            } else {
-                run_batched(&be, &reqs, batch, capacity)
-            };
-            best_secs = best_secs.min(secs);
-            tokens = toks;
-        }
-        let tps = tokens as f64 / best_secs;
+        simd::force(None);
+        let (simd_secs, tokens) = best_of(reps, &be, &reqs, batch, capacity);
+        simd::force(Some(Isa::Scalar));
+        let (scalar_secs, _) = best_of(reps, &be, &reqs, batch, capacity);
+        simd::force(None);
+
+        let tps = tokens as f64 / simd_secs;
+        let tps_scalar = tokens as f64 / scalar_secs;
+        let simd_speedup = tps / tps_scalar;
         if batch == 1 {
             tps_batch1 = tps;
         }
         let speedup = tps / tps_batch1;
         println!(
-            "batch {batch:>2}: {tokens} sequence-tokens in {best_secs:.3}s \
-             → {tps:.0} tok/s ({speedup:.2}x vs batch 1)"
+            "batch {batch:>2}: {tokens} sequence-tokens in {simd_secs:.3}s \
+             → {tps:.0} tok/s ({speedup:.2}x vs batch 1); scalar {tps_scalar:.0} tok/s \
+             → {simd_speedup:.2}x from '{kernel}'"
         );
         summary.push(Json::obj(vec![
             ("batch", Json::Num(batch as f64)),
             ("tokens", Json::Num(tokens as f64)),
-            ("secs", Json::Num(best_secs)),
+            ("secs", Json::Num(simd_secs)),
             ("tokens_per_sec", Json::Num(tps)),
             ("speedup", Json::Num(speedup)),
+            ("secs_scalar", Json::Num(scalar_secs)),
+            ("tokens_per_sec_scalar", Json::Num(tps_scalar)),
+            ("simd_speedup", Json::Num(simd_speedup)),
         ]));
     }
 
@@ -115,6 +158,7 @@ fn main() {
         ("model", Json::Str("tiny".to_string())),
         ("method", Json::Str("sinq".to_string())),
         ("bits", Json::Num(4.0)),
+        ("kernel", Json::Str(kernel)),
         ("requests", Json::Num(n_req as f64)),
         ("prompt_len", Json::Num(prompt_len as f64)),
         ("gen_tokens", Json::Num(gen as f64)),

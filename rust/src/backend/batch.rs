@@ -25,6 +25,7 @@ use std::collections::VecDeque;
 use crate::backend::native::{
     argmax, causal_attend, mlp_forward, MlpRefs, NativeBackend, ResolvedModel,
 };
+use crate::backend::simd::KernelScratch;
 use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
 use crate::tensor::Matrix;
 
@@ -115,6 +116,30 @@ struct SlotCache {
     v: Vec<Matrix>,
 }
 
+/// Decoder-owned per-step scratch: the stacked activations, RoPE angles,
+/// attention context/scores, and MLP activation tiles every step used to
+/// allocate (`Matrix::zeros` per step and per layer) live here and are
+/// shape-`reset` instead — reallocation only happens when the live batch
+/// grows past its high-water mark. The [`KernelScratch`] serves the per-row
+/// MoE path's quantized matvecs.
+struct BatchScratch {
+    /// Residual stream, one row per live sequence.
+    h: Matrix,
+    /// Per-sequence RoPE angles (each row at its own position).
+    cos: Matrix,
+    sin: Matrix,
+    /// Attention context accumulator (zeroed per layer).
+    ctx: Matrix,
+    /// SwiGLU activation tile.
+    act: Matrix,
+    /// Per-row MoE output rows (switch-MoE routes per sequence).
+    moe_y: Matrix,
+    /// Attention score buffer (`pos + 1` entries, reused across rows).
+    att: Vec<f32>,
+    /// Fused-kernel scratch for the per-row MoE matvec path.
+    kernel: KernelScratch,
+}
+
 /// Continuous-batching greedy decoder over a [`NativeBackend`].
 ///
 /// ```text
@@ -138,6 +163,7 @@ pub struct BatchDecoder<'a> {
     /// `(request id, token)` pairs emitted by the most recent step, in slot
     /// order — the hook streaming consumers read between steps.
     emitted: Vec<(usize, u8)>,
+    scratch: BatchScratch,
     stats: BatchStats,
 }
 
@@ -167,6 +193,16 @@ impl<'a> BatchDecoder<'a> {
             pending: VecDeque::new(),
             finished: Vec::new(),
             emitted: Vec::new(),
+            scratch: BatchScratch {
+                h: Matrix::zeros(0, 0),
+                cos: Matrix::zeros(0, 0),
+                sin: Matrix::zeros(0, 0),
+                ctx: Matrix::zeros(0, 0),
+                act: Matrix::zeros(0, 0),
+                moe_y: Matrix::zeros(0, 0),
+                att: Vec::with_capacity(cap),
+                kernel: KernelScratch::new(),
+            },
             stats: BatchStats::default(),
         })
     }
@@ -241,29 +277,32 @@ impl<'a> BatchDecoder<'a> {
         let (d, hd) = (cfg.d, cfg.head_dim());
         let b = live.len();
 
+        // Split borrows: slots/model are read; caches and the step scratch
+        // (all distinct fields of `self`) are written.
+        let slots = &self.slots;
+        let caches = &mut self.caches;
+        let BatchScratch { h, cos, sin, ctx, act, moe_y, att, kernel } = &mut self.scratch;
+
         // Stack this step's input embeddings and RoPE angles, one row per
-        // live sequence (each at its own position).
-        let mut h = Matrix::zeros(b, d);
-        let mut cos = Matrix::zeros(b, hd / 2);
-        let mut sin = Matrix::zeros(b, hd / 2);
+        // live sequence (each at its own position), into reused scratch.
+        h.reset(b, d);
+        cos.reset(b, hd / 2);
+        sin.reset(b, hd / 2);
         for (r, &si) in live.iter().enumerate() {
-            let a = self.slots[si].as_ref().expect("live slot");
+            let a = slots[si].as_ref().expect("live slot");
             h.row_mut(r).copy_from_slice(model.embed.row(a.next_input() as usize));
             model.rope_angles_into(a.pos, cos.row_mut(r), sin.row_mut(r));
         }
 
-        // Split borrows: slots/model are read, caches are written.
-        let slots = &self.slots;
-        let caches = &mut self.caches;
         for (l, layer) in model.layers.iter().enumerate() {
             // --- Attention block: fused projections over all live rows ---
-            let x = rmsnorm(&h, layer.ln1, cfg.eps);
+            let x = rmsnorm(h, layer.ln1, cfg.eps);
             let q = layer.wq.decode_matmul(&x, model.threads);
             let k = layer.wk.decode_matmul(&x, model.threads);
             let v = layer.wv.decode_matmul(&x, model.threads);
-            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+            let (q, k) = (rope(&q, cos, sin, cfg.heads), rope(&k, cos, sin, cfg.heads));
 
-            let mut ctx = Matrix::zeros(b, d);
+            ctx.reset(b, d);
             for (r, &si) in live.iter().enumerate() {
                 let pos = slots[si].as_ref().expect("live slot").pos;
                 let cache = &mut caches[si];
@@ -277,38 +316,39 @@ impl<'a> BatchDecoder<'a> {
                     cfg.heads,
                     hd,
                     ctx.row_mut(r),
+                    att,
                 );
             }
-            let o = layer.wo.decode_matmul(&ctx, model.threads);
-            add_inplace(&mut h, &o);
+            let o = layer.wo.decode_matmul(ctx, model.threads);
+            add_inplace(h, &o);
 
             // --- MLP block ---
-            let x = rmsnorm(&h, layer.ln2, cfg.eps);
-            let y = match &layer.mlp {
+            let x = rmsnorm(h, layer.ln2, cfg.eps);
+            match &layer.mlp {
                 MlpRefs::Dense(w) => {
                     let g = w.wg.decode_matmul(&x, model.threads);
                     let u = w.wu.decode_matmul(&x, model.threads);
-                    let mut act = Matrix::zeros(b, cfg.ffn);
+                    act.reset(b, cfg.ffn);
                     for i in 0..b * cfg.ffn {
                         act.data[i] = silu(g.data[i]) * u.data[i];
                     }
-                    w.wd.decode_matmul(&act, model.threads)
+                    let y = w.wd.decode_matmul(act, model.threads);
+                    add_inplace(h, &y);
                 }
                 moe => {
                     // Switch-MoE routes per sequence; rows picking different
                     // experts cannot share a matmul, so keep the per-row
                     // path (bitwise equal to the single-sequence decoder).
-                    let mut y = Matrix::zeros(b, d);
+                    moe_y.reset(b, d);
                     for r in 0..b {
-                        y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r)));
+                        moe_y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r), kernel));
                     }
-                    y
+                    add_inplace(h, moe_y);
                 }
-            };
-            add_inplace(&mut h, &y);
+            }
         }
 
-        let hf = rmsnorm(&h, model.ln_f, cfg.eps);
+        let hf = rmsnorm(h, model.ln_f, cfg.eps);
         let logits = model.lm_head.decode_matmul(&hf, model.threads);
 
         self.stats.steps += 1;

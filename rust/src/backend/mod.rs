@@ -5,8 +5,9 @@
 //! evaluators, and the CLI dispatch without caring what executes the model:
 //!
 //! * [`NativeBackend`] — pure Rust, runs **directly on bit-packed SINQ/RTN
-//!   weights** via the fused kernels in [`quantized`]; works on any box
-//!   with zero artifacts, zero XLA, zero Python.
+//!   weights** via the fused kernels in [`quantized`], whose inner loops
+//!   dispatch to runtime-selected AVX2/NEON implementations in [`simd`];
+//!   works on any box with zero artifacts, zero XLA, zero Python.
 //! * [`crate::runtime::PjrtForward`] — executes AOT-compiled HLO artifacts
 //!   through PJRT (requires `make artifacts` and a real `xla` binding).
 //!
@@ -20,10 +21,12 @@
 pub mod batch;
 pub mod native;
 pub mod quantized;
+pub mod simd;
 
 pub use batch::{ensure_fits, BatchDecoder, BatchStats, GenOutput, GenRequest};
 pub use native::{NativeBackend, NativeDecoder};
 pub use quantized::QuantizedTensor;
+pub use simd::{kernel_name, Isa};
 
 use crate::coordinator::{pipeline, scheduler};
 use crate::data::Corpus;

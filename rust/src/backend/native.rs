@@ -21,6 +21,7 @@ use std::collections::BTreeMap;
 
 use crate::backend::batch::BatchDecoder;
 use crate::backend::quantized::QuantizedTensor;
+use crate::backend::simd::KernelScratch;
 use crate::backend::InferenceBackend;
 use crate::eval::LogitsEngine;
 use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
@@ -59,11 +60,15 @@ impl LayerWeight {
         }
     }
 
-    /// `y = W · x` for one activation vector.
-    fn matvec(&self, x: &[f32]) -> Vec<f32> {
+    /// `y = W · x` for one activation vector, with caller-owned kernel
+    /// scratch — the decoders keep one scratch per session so quantized
+    /// matvecs run without per-call unpack/fold allocations and the SIMD
+    /// kernels write into stable aligned tiles (dense layers need no
+    /// scratch and ignore it).
+    pub(crate) fn matvec_with(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
         match self {
             LayerWeight::Dense(w) => (0..w.rows).map(|r| dot(x, w.row(r), x.len())).collect(),
-            LayerWeight::Quant(q) => q.dequant_matvec(x),
+            LayerWeight::Quant(q) => q.dequant_matvec_with(x, scratch),
         }
     }
 
@@ -72,9 +77,9 @@ impl LayerWeight {
     /// Quantized layers unpack each weight row once and share the decoded
     /// levels across every row via
     /// [`QuantizedTensor::dequant_matmul_shared`]; dense layers run the same
-    /// per-row dot as [`LayerWeight::matvec`]. Either way the result is
-    /// bitwise equal to `matvec` applied row by row, which keeps batched and
-    /// single-sequence decode in exact agreement.
+    /// per-row dot as [`LayerWeight::matvec_with`]. Either way the result is
+    /// bitwise equal to the matvec applied row by row, which keeps batched
+    /// and single-sequence decode in exact agreement.
     pub(crate) fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
         match self {
             LayerWeight::Dense(w) => {
@@ -534,6 +539,25 @@ pub struct NativeDecoder<'a> {
     vcache: Vec<Matrix>,
     pub pos: usize,
     capacity: usize,
+    scratch: StepScratch,
+}
+
+/// Decoder-owned per-step scratch: every `vec![0.0; …]` the step loop used
+/// to allocate per token lives here instead, and the fused kernels reuse
+/// one [`KernelScratch`] across all layers so their unpack/level tiles stay
+/// aligned and allocation-free on the token hot path.
+struct StepScratch {
+    /// Residual stream for the current token.
+    h: Vec<f32>,
+    /// RoPE angles for the current position.
+    cosv: Vec<f32>,
+    sinv: Vec<f32>,
+    /// Attention context accumulator (zeroed per layer).
+    ctxv: Vec<f32>,
+    /// Attention score buffer (`pos + 1` entries).
+    att: Vec<f32>,
+    /// Fused-kernel scratch shared by every quantized matvec.
+    kernel: KernelScratch,
 }
 
 impl<'a> NativeDecoder<'a> {
@@ -543,12 +567,21 @@ impl<'a> NativeDecoder<'a> {
         let model = ResolvedModel::new(be)?;
         let cap = capacity.max(1);
         let (layers, d) = (model.cfg.layers, model.cfg.d);
+        let half = model.cfg.head_dim() / 2;
         Ok(NativeDecoder {
             model,
             kcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
             vcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
             pos: 0,
             capacity: cap,
+            scratch: StepScratch {
+                h: Vec::with_capacity(d),
+                cosv: vec![0.0; half],
+                sinv: vec![0.0; half],
+                ctxv: vec![0.0; d],
+                att: Vec::with_capacity(cap),
+                kernel: KernelScratch::new(),
+            },
         })
     }
 
@@ -562,44 +595,44 @@ impl<'a> NativeDecoder<'a> {
         let model = &self.model;
         let cfg = model.cfg;
         let hd = cfg.head_dim();
-        let half = hd / 2;
         let pos = self.pos;
 
-        let mut h: Vec<f32> = model.embed.row(token as usize).to_vec();
-
-        let mut cosv = vec![0.0f32; half];
-        let mut sinv = vec![0.0f32; half];
-        model.rope_angles_into(pos, &mut cosv, &mut sinv);
-
-        // Split borrows: layer refs are read-only, caches are written.
+        // Split borrows: layer refs are read-only; caches and the step
+        // scratch (all distinct fields of `self`) are written.
         let kcache = &mut self.kcache;
         let vcache = &mut self.vcache;
+        let StepScratch { h, cosv, sinv, ctxv, att, kernel } = &mut self.scratch;
+
+        h.clear();
+        h.extend_from_slice(model.embed.row(token as usize));
+        model.rope_angles_into(pos, cosv, sinv);
+
         for (l, layer) in model.layers.iter().enumerate() {
-            let x = rmsnorm_vec(&h, layer.ln1, cfg.eps);
-            let mut q = layer.wq.matvec(&x);
-            let mut k = layer.wk.matvec(&x);
-            let v = layer.wv.matvec(&x);
-            rope_vec(&mut q, &cosv, &sinv, cfg.heads, hd);
-            rope_vec(&mut k, &cosv, &sinv, cfg.heads, hd);
+            let x = rmsnorm_vec(h, layer.ln1, cfg.eps);
+            let mut q = layer.wq.matvec_with(&x, kernel);
+            let mut k = layer.wk.matvec_with(&x, kernel);
+            let v = layer.wv.matvec_with(&x, kernel);
+            rope_vec(&mut q, cosv, sinv, cfg.heads, hd);
+            rope_vec(&mut k, cosv, sinv, cfg.heads, hd);
             kcache[l].row_mut(pos).copy_from_slice(&k);
             vcache[l].row_mut(pos).copy_from_slice(&v);
 
-            let mut ctxv = vec![0.0f32; cfg.d];
-            causal_attend(&q, &kcache[l], &vcache[l], pos, cfg.heads, hd, &mut ctxv);
-            let o = layer.wo.matvec(&ctxv);
+            ctxv.fill(0.0);
+            causal_attend(&q, &kcache[l], &vcache[l], pos, cfg.heads, hd, ctxv, att);
+            let o = layer.wo.matvec_with(ctxv, kernel);
             for (a, b) in h.iter_mut().zip(&o) {
                 *a += b;
             }
 
-            let x = rmsnorm_vec(&h, layer.ln2, cfg.eps);
-            let y = mlp_forward(&layer.mlp, &x);
+            let x = rmsnorm_vec(h, layer.ln2, cfg.eps);
+            let y = mlp_forward(&layer.mlp, &x, kernel);
             for (a, b) in h.iter_mut().zip(&y) {
                 *a += b;
             }
         }
 
-        let hf = rmsnorm_vec(&h, model.ln_f, cfg.eps);
-        let logits = model.lm_head.matvec(&hf);
+        let hf = rmsnorm_vec(h, model.ln_f, cfg.eps);
+        let logits = model.lm_head.matvec_with(&hf, kernel);
         self.pos += 1;
         Ok(logits)
     }
@@ -639,8 +672,11 @@ impl<'a> NativeDecoder<'a> {
 
 /// Causal attention for one query position over K/V cache rows `0..=pos`,
 /// accumulating the per-head context into `ctx` (zeroed by the caller).
-/// Shared by the single-sequence and batched decoders so the two attention
-/// paths cannot diverge numerically.
+/// `att` is a caller-owned score buffer (resized to `pos + 1` here) so the
+/// decode hot loops do not allocate per layer. Shared by the
+/// single-sequence and batched decoders so the two attention paths cannot
+/// diverge numerically.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn causal_attend(
     q: &[f32],
     kc: &Matrix,
@@ -649,9 +685,11 @@ pub(crate) fn causal_attend(
     heads: usize,
     hd: usize,
     ctx: &mut [f32],
+    att: &mut Vec<f32>,
 ) {
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut att = vec![0.0f32; pos + 1];
+    att.clear();
+    att.resize(pos + 1, 0.0);
     for head in 0..heads {
         let off = head * hd;
         let qh = &q[off..off + hd];
@@ -680,13 +718,14 @@ pub(crate) fn causal_attend(
     }
 }
 
-/// Dense or top-1-MoE MLP over one activation vector. Shared with the
-/// batched decoder, whose MoE rows route per sequence.
-pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32]) -> Vec<f32> {
+/// Dense or top-1-MoE MLP over one activation vector, reusing the caller's
+/// kernel scratch for every quantized matvec. Shared with the batched
+/// decoder, whose MoE rows route per sequence.
+pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
     match mlp {
-        MlpRefs::Dense(w) => expert_forward(w, x),
+        MlpRefs::Dense(w) => expert_forward(w, x, scratch),
         MlpRefs::Moe { router, experts } => {
-            let logits = router.matvec(x);
+            let logits = router.matvec_with(x, scratch);
             let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
             let exps: Vec<f32> = logits.iter().map(|&v| (v - maxv).exp()).collect();
             let denom: f32 = exps.iter().sum();
@@ -696,17 +735,17 @@ pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32]) -> Vec<f32> {
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .unwrap();
             let gate = exps[top] / denom;
-            let y = expert_forward(&experts[top], x);
+            let y = expert_forward(&experts[top], x, scratch);
             y.iter().map(|&v| gate * v).collect()
         }
     }
 }
 
-fn expert_forward(w: &MlpWeights, x: &[f32]) -> Vec<f32> {
-    let g = w.wg.matvec(x);
-    let u = w.wu.matvec(x);
+fn expert_forward(w: &MlpWeights, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
+    let g = w.wg.matvec_with(x, scratch);
+    let u = w.wu.matvec_with(x, scratch);
     let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-    w.wd.matvec(&act)
+    w.wd.matvec_with(&act, scratch)
 }
 
 /// RMSNorm over one activation vector.

@@ -22,18 +22,23 @@
 //!   sequence's activation row**, so batched decode is bit-identical to
 //!   single-sequence decode while amortizing the unpack `batch`×.
 //!
-//! 4-bit and 8-bit codes take specialized unpack paths (two-per-byte nibble
-//! split / direct copy); 2/3/5/6/7-bit fall back to a generic LSB-first
-//! bit walk matching [`crate::fmt::pack`].
+//! All three entry points drive one cache-blocked tile iterator
+//! ([`QuantizedTensor::tiled_rows`]) and dispatch their inner loops —
+//! unpack, LUT level decode, and the dot reduction — through
+//! [`crate::backend::simd`], which selects explicit AVX2/NEON kernels at
+//! runtime with the scalar code as portable fallback and parity oracle.
+//! Unpacked codes and decoded levels are bit-identical across kernels;
+//! both decode entry points share the same dispatched dot per row, so
+//! batched greedy decode always reproduces single-sequence decode exactly.
 
+use crate::backend::simd::{self, Isa, KernelScratch};
 use crate::fmt::pack;
 use crate::quant::QuantizedLinear;
-use crate::tensor::matrix::dot;
 use crate::tensor::Matrix;
 use crate::util::threadpool;
 
-/// Output rows dequantized per tile in [`QuantizedTensor::dequant_matmul`];
-/// 8 rows × ≤4 KiB of f32 per row keeps the tile L1/L2-resident.
+/// Output rows dequantized per tile in the fused matmuls; 8 rows × ≤4 KiB
+/// of f32 per row keeps the tile L1/L2-resident.
 const ROW_BLOCK: usize = 8;
 
 /// Below this many multiply-accumulates the kernel stays single-threaded
@@ -121,60 +126,24 @@ impl QuantizedTensor {
         self.packed.len()
     }
 
-    /// Unpack the codes of row `i` into `out` (`out.len() == cols`).
-    fn unpack_codes_into(&self, i: usize, out: &mut [u8]) {
-        debug_assert_eq!(out.len(), self.cols);
-        let bytes = &self.packed[i * self.row_stride..(i + 1) * self.row_stride];
-        match self.bits {
-            8 => out.copy_from_slice(&bytes[..self.cols]),
-            4 => {
-                let mut j = 0;
-                'bytes4: for &b in bytes {
-                    out[j] = b & 0x0F;
-                    j += 1;
-                    if j == self.cols {
-                        break 'bytes4;
-                    }
-                    out[j] = b >> 4;
-                    j += 1;
-                    if j == self.cols {
-                        break 'bytes4;
-                    }
-                }
-            }
-            2 => {
-                let mut j = 0;
-                'bytes2: for &b in bytes {
-                    let mut v = b;
-                    for _ in 0..4 {
-                        out[j] = v & 0x03;
-                        v >>= 2;
-                        j += 1;
-                        if j == self.cols {
-                            break 'bytes2;
-                        }
-                    }
-                }
-            }
-            // Generic widths (3/5/6/7-bit) share fmt::pack's bit walk so the
-            // layout has one source of truth.
-            bits => pack::unpack_into(bytes, bits, out),
-        }
+    /// Packed code bytes of row `i`.
+    fn row_bytes(&self, i: usize) -> &[u8] {
+        &self.packed[i * self.row_stride..(i + 1) * self.row_stride]
     }
 
     /// Dequantize row `i` into `out` (`out.len() == cols`), using
     /// `codes_buf` (`len == cols`) as unpack scratch. Operation order is
     /// exactly `QuantizedLinear::dequantize`'s (`s*(q+z)` then `*t`), so a
     /// tile equals the corresponding dense rows bit-for-bit.
-    fn dequant_row_into(&self, i: usize, out: &mut [f32], codes_buf: &mut [u8]) {
-        self.unpack_codes_into(i, codes_buf);
+    fn dequant_row_into(&self, isa: Isa, i: usize, out: &mut [f32], codes_buf: &mut [u8]) {
+        simd::decode_levels_with(isa, self.row_bytes(i), self.bits, &self.lut, codes_buf, out);
         let g = self.group_size;
         for gi in 0..self.n_groups() {
             let s = self.scales.at(i, gi);
             let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
             let j1 = ((gi + 1) * g).min(self.cols);
-            for j in gi * g..j1 {
-                out[j] = s * (self.lut[codes_buf[j] as usize] + z);
+            for o in &mut out[gi * g..j1] {
+                *o = s * (*o + z);
             }
         }
         if let Some(t) = &self.col_scale {
@@ -187,13 +156,45 @@ impl QuantizedTensor {
     /// Full dense dequantization — the "dequantize-then-matmul" baseline
     /// and the bridge to code paths that need an f32 matrix.
     pub fn to_dense(&self) -> Matrix {
+        let isa = simd::active();
         let mut m = Matrix::zeros(self.rows, self.cols);
         let mut codes = vec![0u8; self.cols];
         for i in 0..self.rows {
             let row = &mut m.data[i * self.cols..(i + 1) * self.cols];
-            self.dequant_row_into(i, row, &mut codes);
+            self.dequant_row_into(isa, i, row, &mut codes);
         }
         m
+    }
+
+    /// The cache-blocked tile iterator every fused matmul entry point
+    /// drives: partitions the `n` output rows into [`ROW_BLOCK`]-row tiles,
+    /// runs `body(r0, r1, out)` per tile (with `out` holding `m × (r1-r0)`
+    /// partials, activation-major), in parallel across the thread pool, and
+    /// scatters the partials into the `(m, n)` result. Tiles are
+    /// independent, so results are deterministic regardless of `threads`.
+    fn tiled_rows<F>(&self, m: usize, threads: usize, body: F) -> Matrix
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        let n = self.rows;
+        let n_blocks = n.div_ceil(ROW_BLOCK);
+        let blocks: Vec<usize> = (0..n_blocks).collect();
+        let partials: Vec<Vec<f32>> = threadpool::map_indexed(&blocks, threads, |_, &bk| {
+            let r0 = bk * ROW_BLOCK;
+            let r1 = ((bk + 1) * ROW_BLOCK).min(n);
+            let mut out = vec![0.0f32; m * (r1 - r0)];
+            body(r0, r1, &mut out);
+            out
+        });
+        let mut y = Matrix::zeros(m, n);
+        for (bk, part) in partials.iter().enumerate() {
+            let r0 = bk * ROW_BLOCK;
+            let rb = ((bk + 1) * ROW_BLOCK).min(n) - r0;
+            for xi in 0..m {
+                y.row_mut(xi)[r0..r0 + rb].copy_from_slice(&part[xi * rb..(xi + 1) * rb]);
+            }
+        }
+        y
     }
 
     /// Fused dequantize-matmul: `y = x · Wᵀ` with `x` of shape
@@ -202,79 +203,59 @@ impl QuantizedTensor {
     /// Weight rows are dequantized once per [`ROW_BLOCK`]-row tile and the
     /// tile is reused across every activation row, so the dequant cost is
     /// amortized `m`× and no full-size f32 weight matrix ever exists.
-    /// Output-row tiles are independent, hence embarrassingly parallel
-    /// (deterministic regardless of `threads`).
     pub fn dequant_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
         assert_eq!(x.cols, self.cols, "dequant_matmul shape mismatch");
         let (m, n, k) = (x.rows, self.rows, self.cols);
-        let n_blocks = n.div_ceil(ROW_BLOCK);
         let threads = if m * n * k < PARALLEL_THRESHOLD { 1 } else { threads.max(1) };
-        let blocks: Vec<usize> = (0..n_blocks).collect();
-        let partials: Vec<Vec<f32>> = threadpool::map_indexed(&blocks, threads, |_, &b| {
-            let r0 = b * ROW_BLOCK;
-            let r1 = ((b + 1) * ROW_BLOCK).min(n);
+        let isa = simd::active();
+        self.tiled_rows(m, threads, |r0, r1, out| {
             let rb = r1 - r0;
             let mut tile = vec![0.0f32; rb * k];
             let mut codes = vec![0u8; k];
             for (ti, r) in (r0..r1).enumerate() {
-                self.dequant_row_into(r, &mut tile[ti * k..(ti + 1) * k], &mut codes);
+                self.dequant_row_into(isa, r, &mut tile[ti * k..(ti + 1) * k], &mut codes);
             }
-            let mut out = vec![0.0f32; m * rb];
             for xi in 0..m {
                 let xrow = x.row(xi);
                 for ti in 0..rb {
-                    out[xi * rb + ti] = dot(xrow, &tile[ti * k..(ti + 1) * k], k);
+                    out[xi * rb + ti] = simd::dot_with(isa, xrow, &tile[ti * k..(ti + 1) * k]);
                 }
             }
-            out
-        });
-        let mut y = Matrix::zeros(m, n);
-        for (b, part) in partials.iter().enumerate() {
-            let r0 = b * ROW_BLOCK;
-            let rb = ((b + 1) * ROW_BLOCK).min(n) - r0;
-            for xi in 0..m {
-                y.row_mut(xi)[r0..r0 + rb].copy_from_slice(&part[xi * rb..(xi + 1) * rb]);
-            }
-        }
-        y
+        })
     }
 
     /// Fold the SINQ column scale into one activation vector (`xt = x ⊙ t`)
     /// and precompute the per-group sums of `xt` that carry the shift term.
-    fn fold_input(&self, x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    /// Writes into caller-provided buffers (`xt.len() == cols`,
+    /// `gsum.len() == n_groups()`), so decode steps can reuse scratch.
+    fn fold_input_into(&self, x: &[f32], xt: &mut [f32], gsum: &mut [f32]) {
+        match &self.col_scale {
+            Some(t) => {
+                for ((o, &a), &b) in xt.iter_mut().zip(x.iter()).zip(t.iter()) {
+                    *o = a * b;
+                }
+            }
+            None => xt.copy_from_slice(x),
+        }
         let g = self.group_size;
-        let xt: Vec<f32> = match &self.col_scale {
-            Some(t) => x.iter().zip(t.iter()).map(|(&a, &b)| a * b).collect(),
-            None => x.to_vec(),
-        };
-        let mut gsum = vec![0.0f32; self.n_groups()];
         for (gi, slot) in gsum.iter_mut().enumerate() {
             let j1 = ((gi + 1) * g).min(self.cols);
             *slot = xt[gi * g..j1].iter().sum();
-        }
-        (xt, gsum)
-    }
-
-    /// Unpack row `i`'s codes and decode them to grid levels (scales not
-    /// applied), using `codes` as unpack scratch.
-    fn decode_levels_into(&self, i: usize, levels: &mut [f32], codes: &mut [u8]) {
-        self.unpack_codes_into(i, codes);
-        for (lv, &c) in levels.iter_mut().zip(codes.iter()) {
-            *lv = self.lut[c as usize];
         }
     }
 
     /// One output element of the decode kernels: group-wise
     /// `Σ_g s_g·dot(levels_g, xt_g) + s_g·z_g·gsum_g` over row `i`'s decoded
-    /// levels. Both decode kernels funnel through here, so their results are
-    /// bit-identical for any given activation row.
-    fn row_accum(&self, i: usize, levels: &[f32], xt: &[f32], gsum: &[f32]) -> f32 {
+    /// levels. Both decode kernels funnel through here (with the same
+    /// dispatched dot), so their results are bit-identical for any given
+    /// activation row.
+    fn row_accum(&self, isa: Isa, i: usize, levels: &[f32], xt: &[f32], gsum: &[f32]) -> f32 {
         let g = self.group_size;
         let mut acc = 0.0f32;
         for (gi, &gs) in gsum.iter().enumerate() {
             let j0 = gi * g;
             let j1 = ((gi + 1) * g).min(self.cols);
-            let d = dot(&levels[j0..j1], &xt[j0..j1], j1 - j0);
+            let d = simd::dot_with(isa, &levels[j0..j1], &xt[j0..j1]);
             let s = self.scales.at(i, gi);
             let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
             acc += s * d + s * z * gs;
@@ -288,19 +269,45 @@ impl QuantizedTensor {
     /// Works in code space: the column scale is folded into the input once
     /// (`xt = x ⊙ t`), per-group partial sums of `xt` carry the shift term,
     /// and each weight row is decoded to its grid levels once then reduced
-    /// with a vectorizable dot — full dequantized weights (with scales
+    /// with the dispatched SIMD dot — full dequantized weights (with scales
     /// applied) are never materialized. The per-element arithmetic lives in
     /// `row_accum`, shared with [`QuantizedTensor::dequant_matmul_shared`],
     /// so single-sequence and batched decode agree bit-for-bit.
     pub fn dequant_matvec(&self, x: &[f32]) -> Vec<f32> {
+        let mut scratch = KernelScratch::new();
+        self.dequant_matvec_with(x, &mut scratch)
+    }
+
+    /// [`QuantizedTensor::dequant_matvec`] with caller-owned scratch: the
+    /// decoders keep one [`KernelScratch`] per session so the per-token
+    /// loop performs no unpack/fold allocations and the SIMD kernels write
+    /// into stable cache-line-aligned tiles.
+    pub fn dequant_matvec_with(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
         assert_eq!(x.len(), self.cols, "dequant_matvec shape mismatch");
-        let (xt, gsum) = self.fold_input(x);
+        let isa = simd::active();
+        let k = self.cols;
+        scratch.codes.resize(k, 0);
+        scratch.levels.resize(k);
+        scratch.xt.resize(k);
+        scratch.gsum.resize(self.n_groups(), 0.0);
+        self.fold_input_into(x, scratch.xt.as_mut_slice(), &mut scratch.gsum);
         let mut y = vec![0.0f32; self.rows];
-        let mut codes = vec![0u8; self.cols];
-        let mut levels = vec![0.0f32; self.cols];
         for (i, yi) in y.iter_mut().enumerate() {
-            self.decode_levels_into(i, &mut levels, &mut codes);
-            *yi = self.row_accum(i, &levels, &xt, &gsum);
+            simd::decode_levels_with(
+                isa,
+                self.row_bytes(i),
+                self.bits,
+                &self.lut,
+                &mut scratch.codes,
+                scratch.levels.as_mut_slice(),
+            );
+            *yi = self.row_accum(
+                isa,
+                i,
+                scratch.levels.as_slice(),
+                scratch.xt.as_slice(),
+                &scratch.gsum,
+            );
         }
         y
     }
@@ -318,34 +325,34 @@ impl QuantizedTensor {
     pub fn dequant_matmul_shared(&self, x: &Matrix, threads: usize) -> Matrix {
         assert_eq!(x.cols, self.cols, "dequant_matmul_shared shape mismatch");
         let (m, n, k) = (x.rows, self.rows, self.cols);
-        let folded: Vec<_> = (0..m).map(|r| self.fold_input(x.row(r))).collect();
-        let n_blocks = n.div_ceil(ROW_BLOCK);
+        let isa = simd::active();
+        let folded: Vec<_> = (0..m)
+            .map(|r| {
+                let mut xt = vec![0.0f32; k];
+                let mut gsum = vec![0.0f32; self.n_groups()];
+                self.fold_input_into(x.row(r), &mut xt, &mut gsum);
+                (xt, gsum)
+            })
+            .collect();
         let threads = if m * n * k < PARALLEL_THRESHOLD { 1 } else { threads.max(1) };
-        let blocks: Vec<usize> = (0..n_blocks).collect();
-        let partials: Vec<Vec<f32>> = threadpool::map_indexed(&blocks, threads, |_, &b| {
-            let r0 = b * ROW_BLOCK;
-            let r1 = ((b + 1) * ROW_BLOCK).min(n);
+        self.tiled_rows(m, threads, |r0, r1, out| {
             let rb = r1 - r0;
-            let mut out = vec![0.0f32; m * rb];
             let mut codes = vec![0u8; k];
             let mut levels = vec![0.0f32; k];
             for (ti, i) in (r0..r1).enumerate() {
-                self.decode_levels_into(i, &mut levels, &mut codes);
+                simd::decode_levels_with(
+                    isa,
+                    self.row_bytes(i),
+                    self.bits,
+                    &self.lut,
+                    &mut codes,
+                    &mut levels,
+                );
                 for (xi, (xt, gsum)) in folded.iter().enumerate() {
-                    out[xi * rb + ti] = self.row_accum(i, &levels, xt, gsum);
+                    out[xi * rb + ti] = self.row_accum(isa, i, &levels, xt, gsum);
                 }
             }
-            out
-        });
-        let mut y = Matrix::zeros(m, n);
-        for (b, part) in partials.iter().enumerate() {
-            let r0 = b * ROW_BLOCK;
-            let rb = ((b + 1) * ROW_BLOCK).min(n) - r0;
-            for xi in 0..m {
-                y.row_mut(xi)[r0..r0 + rb].copy_from_slice(&part[xi * rb..(xi + 1) * rb]);
-            }
-        }
-        y
+        })
     }
 }
 
@@ -449,6 +456,32 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Scratch reuse across calls of different shapes must not change
+    /// results (the decoders call `dequant_matvec_with` with one scratch
+    /// across layers of different widths).
+    #[test]
+    fn matvec_scratch_reuse_is_bitwise_stable() {
+        let mut rng = Rng::new(22);
+        let w_wide = Matrix::randn(16, 96, 0.05, &mut rng);
+        let w_narrow = Matrix::randn(24, 48, 0.05, &mut rng);
+        let qw = QuantizedTensor::from_linear(
+            &quantize_matrix(&w_wide, &QuantConfig::new(Method::Sinq, 4), None).unwrap(),
+        )
+        .unwrap();
+        let qn = QuantizedTensor::from_linear(
+            &quantize_matrix(&w_narrow, &QuantConfig::new(Method::Rtn, 3), None).unwrap(),
+        )
+        .unwrap();
+        let xw: Vec<f32> = (0..96).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let xn: Vec<f32> = (0..48).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut scratch = KernelScratch::new();
+        // Interleave shapes through one scratch; compare to fresh-scratch runs.
+        for _ in 0..3 {
+            assert_eq!(qw.dequant_matvec_with(&xw, &mut scratch), qw.dequant_matvec(&xw));
+            assert_eq!(qn.dequant_matvec_with(&xn, &mut scratch), qn.dequant_matvec(&xn));
         }
     }
 

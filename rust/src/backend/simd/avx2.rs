@@ -1,0 +1,155 @@
+//! AVX2 + FMA kernels for the fused dequant hot path (x86_64).
+//!
+//! Selected at runtime by [`super::active`] when the CPU reports `avx2` and
+//! `fma`. Contracts relative to [`super::scalar`]:
+//!
+//! * [`unpack4_into`] produces **bit-identical codes** (integer surgery).
+//! * [`lut16_levels`] (4-bit: `vpermps` 16-entry LUT shuffle, blended on
+//!   code bit 3) and [`gather_levels`] (any width: `vgatherdps` over the
+//!   256-entry LUT) produce **bit-identical levels** — table lookups never
+//!   round.
+//! * [`dot`] uses 4×8-lane FMA accumulators, so its reduction *order*
+//!   differs from scalar: results agree to float tolerance, not bitwise.
+//!   Every decode entry point routes through this same `dot`, so batched
+//!   and single-sequence decode remain bit-identical to each other.
+//!
+//! All loads/stores are unaligned (`loadu`/`storeu`): the decoder scratch
+//! is cache-line aligned for the fast case, but the kernels stay correct
+//! on arbitrary slices (tile tails, test inputs).
+
+use std::arch::x86_64::*;
+
+/// Unpack 4-bit codes (two per byte, low nibble first): each iteration
+/// turns 16 packed bytes into 32 codes via byte masks + an interleave.
+///
+/// # Safety
+/// The CPU must support AVX2 (see [`super::supported`]).
+#[target_feature(enable = "avx2")]
+pub unsafe fn unpack4_into(bytes: &[u8], out: &mut [u8]) {
+    let n = out.len();
+    debug_assert!(bytes.len() >= n.div_ceil(2));
+    let mask = _mm_set1_epi8(0x0F);
+    let mut j = 0;
+    while j + 32 <= n {
+        let chunk = _mm_loadu_si128(bytes.as_ptr().add(j / 2) as *const __m128i);
+        let lo = _mm_and_si128(chunk, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(chunk), mask);
+        _mm_storeu_si128(out.as_mut_ptr().add(j) as *mut __m128i, _mm_unpacklo_epi8(lo, hi));
+        _mm_storeu_si128(out.as_mut_ptr().add(j + 16) as *mut __m128i, _mm_unpackhi_epi8(lo, hi));
+        j += 32;
+    }
+    // Tail (j is even here: the vector loop advances 32 codes at a time).
+    let mut byte = j / 2;
+    while j < n {
+        out[j] = bytes[byte] & 0x0F;
+        j += 1;
+        if j < n {
+            out[j] = bytes[byte] >> 4;
+            j += 1;
+        }
+        byte += 1;
+    }
+}
+
+/// Map 4-bit codes straight to f32 grid levels through a 16-entry LUT held
+/// in two shuffle registers: `vpermps` indexes the low/high 8 entries with
+/// the code's low 3 bits and a blend on bit 3 picks the half. Bit-identical
+/// to the scalar LUT walk.
+///
+/// # Safety
+/// The CPU must support AVX2; `lut` must hold at least 16 entries and every
+/// code must be < 16.
+#[target_feature(enable = "avx2")]
+pub unsafe fn lut16_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
+    debug_assert!(lut.len() >= 16);
+    let lo_tbl = _mm256_loadu_ps(lut.as_ptr());
+    let hi_tbl = _mm256_loadu_ps(lut.as_ptr().add(8));
+    let seven = _mm256_set1_epi32(7);
+    let n = levels.len().min(codes.len());
+    let mut j = 0;
+    while j + 8 <= n {
+        let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i));
+        // vpermps reads only the low 3 index bits; bit 3 selects the half.
+        let lo = _mm256_permutevar8x32_ps(lo_tbl, idx);
+        let hi = _mm256_permutevar8x32_ps(hi_tbl, idx);
+        let pick_hi = _mm256_castsi256_ps(_mm256_cmpgt_epi32(idx, seven));
+        _mm256_storeu_ps(levels.as_mut_ptr().add(j), _mm256_blendv_ps(lo, hi, pick_hi));
+        j += 8;
+    }
+    while j < n {
+        levels[j] = lut[codes[j] as usize];
+        j += 1;
+    }
+}
+
+/// Decode arbitrary-width codes to levels by gathering from the 256-entry
+/// LUT (`vgatherdps`). Bit-identical to the scalar LUT walk.
+///
+/// # Safety
+/// The CPU must support AVX2; `lut` must hold at least 256 entries (codes
+/// are `u8`, so every gathered offset stays in bounds).
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
+    debug_assert!(lut.len() >= 256);
+    let n = levels.len().min(codes.len());
+    let mut j = 0;
+    while j + 8 <= n {
+        let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i));
+        _mm256_storeu_ps(levels.as_mut_ptr().add(j), _mm256_i32gather_ps::<4>(lut.as_ptr(), idx));
+        j += 8;
+    }
+    while j < n {
+        levels[j] = lut[codes[j] as usize];
+        j += 1;
+    }
+}
+
+/// Dot product with 4×8-lane FMA accumulators (32 floats per iteration),
+/// an 8-lane cleanup loop, and a scalar tail. Deterministic: the reduction
+/// order is fixed for any given input length.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut acc2 = _mm256_setzero_ps();
+    let mut acc3 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 32 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 8)),
+            _mm256_loadu_ps(pb.add(i + 8)),
+            acc1,
+        );
+        acc2 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 16)),
+            _mm256_loadu_ps(pb.add(i + 16)),
+            acc2,
+        );
+        acc3 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(pa.add(i + 24)),
+            _mm256_loadu_ps(pb.add(i + 24)),
+            acc3,
+        );
+        i += 32;
+    }
+    while i + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
+        i += 8;
+    }
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let quad = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let pair = _mm_add_ps(quad, _mm_movehl_ps(quad, quad));
+    let one = _mm_add_ss(pair, _mm_shuffle_ps::<1>(pair, pair));
+    let mut s = _mm_cvtss_f32(one);
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}

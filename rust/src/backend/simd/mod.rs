@@ -1,0 +1,375 @@
+//! Explicit SIMD kernels with runtime dispatch for the fused dequant path.
+//!
+//! Every token the native engine produces bottoms out in three inner loops:
+//! unpack packed codes, decode codes to grid levels through a LUT, and
+//! reduce levels against an activation vector. This module gives those
+//! loops explicit AVX2 (x86_64) and NEON (aarch64) implementations and a
+//! runtime dispatcher; the scalar code remains both the portable fallback
+//! and the **parity oracle** the SIMD paths are tested against.
+//!
+//! ## Exactness contract
+//!
+//! * **Unpacked codes and decoded levels are bit-identical across ISAs.**
+//!   Unpacking is integer bit surgery and level decode is a table lookup —
+//!   neither rounds, so `tests/simd_kernels.rs` asserts exact equality.
+//! * **Dot products agree to float tolerance, not bitwise**, because SIMD
+//!   lane accumulators change the reduction order. Both decode entry points
+//!   ([`crate::backend::QuantizedTensor::dequant_matvec`] and
+//!   [`crate::backend::QuantizedTensor::dequant_matmul_shared`]) route
+//!   through the *same* dispatched [`dot_with`], so batched and
+//!   single-sequence decode stay bit-identical **to each other** at any
+//!   batch size — the contract the decoder parity tests depend on.
+//!
+//! ## Selection
+//!
+//! [`active`] picks the best supported ISA once per process:
+//! `is_x86_feature_detected!("avx2")`+`fma` on x86_64, NEON unconditionally
+//! on aarch64 (baseline feature), scalar elsewhere. The `SINQ_SIMD`
+//! environment variable (`scalar|avx2|neon|auto`) overrides detection —
+//! `SINQ_SIMD=scalar` is the supported way to force the fallback when
+//! debugging — and [`force`] overrides both at runtime (used by the parity
+//! tests and the scalar-vs-SIMD benches). Unsupported requests fall back to
+//! scalar rather than faulting.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// An instruction-set-specific kernel family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops (the parity oracle).
+    Scalar,
+    /// AVX2 + FMA (x86_64, runtime-detected).
+    Avx2,
+    /// NEON (aarch64 baseline).
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Whether this CPU can execute `isa`'s kernels.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => false,
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Best ISA this CPU supports, ignoring overrides.
+pub fn detect() -> Isa {
+    if supported(Isa::Avx2) {
+        Isa::Avx2
+    } else if supported(Isa::Neon) {
+        Isa::Neon
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Runtime override installed by [`force`]: 0 = none, else `Isa` + 1.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Override the dispatched ISA process-wide (`None` restores automatic
+/// selection). Intended for parity tests and scalar-vs-SIMD benchmarks;
+/// forcing an ISA the CPU does not support falls back to scalar.
+pub fn force(isa: Option<Isa>) {
+    let v = match isa {
+        None => 0,
+        Some(Isa::Scalar) => 1,
+        Some(Isa::Avx2) => 2,
+        Some(Isa::Neon) => 3,
+    };
+    FORCED.store(v, Ordering::SeqCst);
+}
+
+/// Resolve the `SINQ_SIMD` environment variable (consulted once).
+fn choose() -> Isa {
+    let Ok(raw) = std::env::var("SINQ_SIMD") else {
+        return detect();
+    };
+    let v = raw.trim().to_ascii_lowercase();
+    if v.is_empty() || v == "auto" {
+        return detect();
+    }
+    match Isa::parse(&v) {
+        Some(isa) if supported(isa) => isa,
+        Some(isa) => {
+            eprintln!(
+                "sinq: SINQ_SIMD={} is not supported on this CPU; using {}",
+                isa.name(),
+                detect().name()
+            );
+            detect()
+        }
+        None => {
+            eprintln!(
+                "sinq: unknown SINQ_SIMD value {raw:?} (expected scalar|avx2|neon|auto); \
+                 using {}",
+                detect().name()
+            );
+            detect()
+        }
+    }
+}
+
+/// The ISA the fused kernels dispatch to right now. Always returns a
+/// supported ISA: [`force`] takes precedence, then `SINQ_SIMD`, then
+/// [`detect`].
+pub fn active() -> Isa {
+    let isa = match FORCED.load(Ordering::SeqCst) {
+        1 => Isa::Scalar,
+        2 => Isa::Avx2,
+        3 => Isa::Neon,
+        _ => {
+            static CHOSEN: OnceLock<Isa> = OnceLock::new();
+            *CHOSEN.get_or_init(choose)
+        }
+    };
+    if supported(isa) {
+        isa
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Name of the active kernel family ("scalar" / "avx2" / "neon") — surfaced
+/// by `sinq serve` startup output and the `/healthz` endpoint so deployments
+/// can verify which path is live.
+pub fn kernel_name() -> &'static str {
+    active().name()
+}
+
+/// Unpack `out.len()` codes of `bits` width from `bytes` with `isa`'s
+/// kernels. Bit-identical to [`scalar::unpack_into`] for every ISA.
+pub fn unpack_into_with(isa: Isa, bytes: &[u8], bits: u32, out: &mut [u8]) {
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    match isa {
+        Isa::Scalar => scalar::unpack_into(bytes, bits, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `supported(Isa::Avx2)` verified avx2+fma above.
+        Isa::Avx2 => match bits {
+            4 => unsafe { avx2::unpack4_into(bytes, out) },
+            _ => scalar::unpack_into(bytes, bits, out),
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::unpack_into(bytes, bits, out),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        Isa::Neon => match bits {
+            4 => unsafe { neon::unpack4_into(bytes, out) },
+            _ => scalar::unpack_into(bytes, bits, out),
+        },
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::unpack_into(bytes, bits, out),
+    }
+}
+
+/// Unpack one packed row and decode it to grid levels: fills `codes`
+/// (unpacked, `codes.len() == levels.len()`) and `levels`
+/// (`levels[j] = lut[codes[j]]`). The 4-bit path maps codes through a
+/// 16-entry LUT shuffle (`vpermps` on AVX2, `tbl` on NEON); other widths
+/// gather from the full 256-entry LUT (AVX2) or fall back to the scalar
+/// walk. Codes and levels are bit-identical across ISAs.
+pub fn decode_levels_with(
+    isa: Isa,
+    bytes: &[u8],
+    bits: u32,
+    lut: &[f32],
+    codes: &mut [u8],
+    levels: &mut [f32],
+) {
+    assert!(lut.len() >= 256, "decode LUT must cover all 8-bit codes");
+    assert_eq!(codes.len(), levels.len(), "codes/levels scratch length mismatch");
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    unpack_into_with(isa, bytes, bits, codes);
+    match isa {
+        Isa::Scalar => scalar::decode_levels(codes, lut, levels),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `supported`; lut covers 256 entries.
+        Isa::Avx2 => unsafe {
+            if bits == 4 {
+                avx2::lut16_levels(codes, lut, levels)
+            } else {
+                avx2::gather_levels(codes, lut, levels)
+            }
+        },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::decode_levels(codes, lut, levels),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => {
+            if bits == 4 {
+                // SAFETY: NEON is an aarch64 baseline feature.
+                unsafe { neon::lut16_levels(codes, lut, levels) }
+            } else {
+                scalar::decode_levels(codes, lut, levels)
+            }
+        }
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::decode_levels(codes, lut, levels),
+    }
+}
+
+/// Dot product of two equal-length slices with `isa`'s kernels.
+/// Deterministic for a fixed ISA; reduction order (and therefore the exact
+/// f32 result) differs between ISAs.
+pub fn dot_with(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    match isa {
+        Isa::Scalar => scalar::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `supported`.
+        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::dot(a, b),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        Isa::Neon => unsafe { neon::dot(a, b) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::dot(a, b),
+    }
+}
+
+/// One 64-byte-aligned chunk of 16 f32 lanes.
+#[derive(Clone, Copy)]
+#[repr(C, align(64))]
+struct Align64([f32; 16]);
+
+/// Growable 64-byte-aligned f32 buffer: the SIMD kernels' scratch tiles
+/// (levels, folded activations) live here so vector loads/stores hit
+/// cache-line-aligned memory. `resize` reuses the allocation; contents
+/// after a resize are unspecified (every kernel writes before reading).
+#[derive(Default)]
+pub struct AlignedF32 {
+    chunks: Vec<Align64>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    pub fn new() -> AlignedF32 {
+        AlignedF32::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set the logical length, growing the backing allocation if needed.
+    pub fn resize(&mut self, len: usize) {
+        let chunks = len.div_ceil(16);
+        if self.chunks.len() < chunks {
+            self.chunks.resize(chunks, Align64([0.0; 16]));
+        }
+        self.len = len;
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: the backing allocation holds `chunks.len() * 16 >= len`
+        // contiguous f32s (Align64 is `repr(C)` over `[f32; 16]`).
+        unsafe { std::slice::from_raw_parts(self.chunks.as_ptr() as *const f32, self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`, and `&mut self` guarantees uniqueness.
+        unsafe { std::slice::from_raw_parts_mut(self.chunks.as_mut_ptr() as *mut f32, self.len) }
+    }
+}
+
+/// Reusable per-decoder scratch for the fused decode kernels: unpack bytes,
+/// level tiles, and the folded activation + per-group sums. Owning one of
+/// these per decoder removes every per-matvec allocation from the token
+/// hot path and gives the SIMD kernels stable aligned tiles to write into.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// Unpacked code bytes for one weight row.
+    pub codes: Vec<u8>,
+    /// Decoded grid levels for one weight row (aligned).
+    pub levels: AlignedF32,
+    /// Activation with the SINQ column scale folded in (aligned).
+    pub xt: AlignedF32,
+    /// Per-group sums of `xt` (carries the shift term).
+    pub gsum: Vec<f32>,
+}
+
+impl KernelScratch {
+    pub fn new() -> KernelScratch {
+        KernelScratch::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fmt::pack;
+
+    #[test]
+    fn active_is_always_supported_and_named() {
+        let isa = active();
+        assert!(supported(isa));
+        assert!(["scalar", "avx2", "neon"].contains(&kernel_name()));
+    }
+
+    #[test]
+    fn isa_parse_round_trips() {
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("sse"), None);
+    }
+
+    #[test]
+    fn aligned_buffer_is_cache_line_aligned() {
+        let mut buf = AlignedF32::new();
+        buf.resize(100);
+        assert_eq!(buf.len(), 100);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+        buf.as_mut_slice().fill(2.5);
+        assert!(buf.as_slice().iter().all(|&v| v == 2.5));
+        // Shrinking and regrowing reuses the allocation and keeps alignment.
+        buf.resize(3);
+        buf.resize(64);
+        assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
+        assert_eq!(buf.len(), 64);
+    }
+
+    #[test]
+    fn scalar_dispatch_matches_pack_layout() {
+        let codes: Vec<u8> = (0..37u8).map(|i| i % 16).collect();
+        let packed = pack::pack(&codes, 4);
+        let mut out = vec![0u8; codes.len()];
+        unpack_into_with(Isa::Scalar, &packed, 4, &mut out);
+        assert_eq!(out, codes);
+    }
+}

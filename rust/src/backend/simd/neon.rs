@@ -1,0 +1,122 @@
+//! NEON kernels for the fused dequant hot path (aarch64).
+//!
+//! NEON is a baseline feature of every aarch64 target, so these kernels
+//! are selected unconditionally there (`SINQ_SIMD=scalar` still forces the
+//! fallback). Contracts relative to [`super::scalar`] mirror the AVX2
+//! module: codes and levels are bit-identical (integer surgery + `tbl`
+//! table lookups), while [`dot`]'s 4×4-lane FMA reduction order differs
+//! from scalar so sums agree to float tolerance only.
+
+use std::arch::aarch64::*;
+
+/// Unpack 4-bit codes (two per byte, low nibble first): each iteration
+/// turns 16 packed bytes into 32 codes via masks + a zip interleave.
+///
+/// # Safety
+/// NEON must be available (always true on aarch64; kept `unsafe` to match
+/// the intrinsics it wraps and the dispatch contract).
+pub unsafe fn unpack4_into(bytes: &[u8], out: &mut [u8]) {
+    let n = out.len();
+    debug_assert!(bytes.len() >= n.div_ceil(2));
+    let mask = vdupq_n_u8(0x0F);
+    let mut j = 0;
+    while j + 32 <= n {
+        let chunk = vld1q_u8(bytes.as_ptr().add(j / 2));
+        let lo = vandq_u8(chunk, mask);
+        let hi = vshrq_n_u8::<4>(chunk);
+        vst1q_u8(out.as_mut_ptr().add(j), vzip1q_u8(lo, hi));
+        vst1q_u8(out.as_mut_ptr().add(j + 16), vzip2q_u8(lo, hi));
+        j += 32;
+    }
+    // Tail (j is even here: the vector loop advances 32 codes at a time).
+    let mut byte = j / 2;
+    while j < n {
+        out[j] = bytes[byte] & 0x0F;
+        j += 1;
+        if j < n {
+            out[j] = bytes[byte] >> 4;
+            j += 1;
+        }
+        byte += 1;
+    }
+}
+
+/// Map 4-bit codes straight to f32 grid levels through a 16-entry LUT held
+/// as a 64-byte `tbl` table (`vqtbl4q_u8`): each code's four level bytes
+/// are gathered by byte index `4*code + 0..4`. Bit-identical to the scalar
+/// LUT walk (aarch64 is little-endian, so gathered bytes reassemble the
+/// exact f32 pattern).
+///
+/// # Safety
+/// NEON must be available; `lut` must hold at least 16 entries and every
+/// code must be < 16.
+pub unsafe fn lut16_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
+    debug_assert!(lut.len() >= 16);
+    let lut_bytes = lut.as_ptr() as *const u8;
+    let tbl = uint8x16x4_t(
+        vld1q_u8(lut_bytes),
+        vld1q_u8(lut_bytes.add(16)),
+        vld1q_u8(lut_bytes.add(32)),
+        vld1q_u8(lut_bytes.add(48)),
+    );
+    // REP[k] replicates codes 4k..4k+4 four times each; OFFS adds the byte
+    // position within each replicated f32.
+    const REP: [[u8; 16]; 4] = [
+        [0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3],
+        [4, 4, 4, 4, 5, 5, 5, 5, 6, 6, 6, 6, 7, 7, 7, 7],
+        [8, 8, 8, 8, 9, 9, 9, 9, 10, 10, 10, 10, 11, 11, 11, 11],
+        [12, 12, 12, 12, 13, 13, 13, 13, 14, 14, 14, 14, 15, 15, 15, 15],
+    ];
+    const OFFS: [u8; 16] = [0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3];
+    let offs = vld1q_u8(OFFS.as_ptr());
+    let n = levels.len().min(codes.len());
+    let mut j = 0;
+    while j + 16 <= n {
+        let c = vld1q_u8(codes.as_ptr().add(j));
+        // Byte offset of each code's level in the 64-byte table (code * 4).
+        let base = vshlq_n_u8::<2>(c);
+        for (k, rep) in REP.iter().enumerate() {
+            let sel = vqtbl1q_u8(base, vld1q_u8(rep.as_ptr()));
+            let idx = vaddq_u8(sel, offs);
+            vst1q_u8(levels.as_mut_ptr().add(j + k * 4) as *mut u8, vqtbl4q_u8(tbl, idx));
+        }
+        j += 16;
+    }
+    while j < n {
+        levels[j] = lut[codes[j] as usize];
+        j += 1;
+    }
+}
+
+/// Dot product with 4×4-lane FMA accumulators (16 floats per iteration),
+/// a 4-lane cleanup loop, and a scalar tail. Deterministic: the reduction
+/// order is fixed for any given input length.
+///
+/// # Safety
+/// NEON must be available (always true on aarch64).
+pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut acc2 = vdupq_n_f32(0.0);
+    let mut acc3 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+        acc2 = vfmaq_f32(acc2, vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+        acc3 = vfmaq_f32(acc3, vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+        i += 4;
+    }
+    let mut s = vaddvq_f32(vaddq_f32(vaddq_f32(acc0, acc1), vaddq_f32(acc2, acc3)));
+    while i < n {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}

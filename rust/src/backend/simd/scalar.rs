@@ -1,0 +1,110 @@
+//! Portable scalar kernels — the parity oracle every SIMD path is tested
+//! against, and the fallback for CPUs (or bit widths) without a
+//! specialized implementation.
+//!
+//! `unpack_into` keeps the 8/4/2-bit specializations that previously lived
+//! inline in `backend::quantized` (direct copy / nibble split / crumb
+//! walk); generic widths (3/5/6/7-bit) share [`crate::fmt::pack`]'s bit
+//! walk so the LSB-first layout has one source of truth. `dot` delegates
+//! to the 4-accumulator reduction in [`crate::tensor::matrix::dot`] — the
+//! exact arithmetic the fused kernels used before the SIMD dispatch
+//! existed, which keeps the scalar path's numerics identical to the seed.
+
+use crate::fmt::pack;
+
+/// Unpack `out.len()` codes of `bits` width from `bytes` (LSB-first).
+pub fn unpack_into(bytes: &[u8], bits: u32, out: &mut [u8]) {
+    if out.is_empty() {
+        return;
+    }
+    match bits {
+        8 => out.copy_from_slice(&bytes[..out.len()]),
+        4 => {
+            let n = out.len();
+            let mut j = 0;
+            'bytes4: for &b in bytes {
+                out[j] = b & 0x0F;
+                j += 1;
+                if j == n {
+                    break 'bytes4;
+                }
+                out[j] = b >> 4;
+                j += 1;
+                if j == n {
+                    break 'bytes4;
+                }
+            }
+        }
+        2 => {
+            let n = out.len();
+            let mut j = 0;
+            'bytes2: for &b in bytes {
+                let mut v = b;
+                for _ in 0..4 {
+                    out[j] = v & 0x03;
+                    v >>= 2;
+                    j += 1;
+                    if j == n {
+                        break 'bytes2;
+                    }
+                }
+            }
+        }
+        // Generic widths (3/5/6/7-bit) share fmt::pack's bit walk.
+        bits => pack::unpack_into(bytes, bits, out),
+    }
+}
+
+/// Decode unpacked codes to grid levels through the decode LUT
+/// (`levels[j] = lut[codes[j]]`). Exact: a lookup never rounds.
+pub fn decode_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
+    for (lv, &c) in levels.iter_mut().zip(codes.iter()) {
+        *lv = lut[c as usize];
+    }
+}
+
+/// Scalar dot product (4-accumulator reduction, auto-vectorizer friendly).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len().min(b.len());
+    crate::tensor::matrix::dot(a, b, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn unpack_matches_pack_for_every_width_and_awkward_length() {
+        let mut rng = Rng::new(41);
+        for bits in 2u32..=8 {
+            for n in [0usize, 1, 2, 3, 7, 8, 9, 31, 32, 33, 100] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+                let packed = pack::pack(&codes, bits);
+                let mut out = vec![0u8; n];
+                unpack_into(&packed, bits, &mut out);
+                assert_eq!(out, codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_levels_is_a_pure_lookup() {
+        let lut: Vec<f32> = (0..256).map(|i| i as f32 * 0.25 - 8.0).collect();
+        let codes = [0u8, 1, 255, 16, 7];
+        let mut levels = [0.0f32; 5];
+        decode_levels(&codes, &lut, &mut levels);
+        for (lv, &c) in levels.iter().zip(codes.iter()) {
+            assert_eq!(lv.to_bits(), lut[c as usize].to_bits());
+        }
+    }
+
+    #[test]
+    fn dot_handles_short_and_unequal_lengths() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        // Uses the shorter length (defensive; kernels pass equal slices).
+        assert_eq!(dot(&[1.0, 1.0, 1.0], &[5.0, 5.0]), 10.0);
+    }
+}

@@ -22,11 +22,13 @@
 //! * [`backend::NativeBackend`] (**default**) — a pure-Rust engine that
 //!   executes **directly on bit-packed quantized weights**: fused
 //!   dequantize-matmul/matvec kernels (the CPU analogue of the L1 Pallas
-//!   `dequant_matmul`), a preallocated-KV-cache decoder for `generate`, a
-//!   continuous-batching [`backend::BatchDecoder`] that serves many
-//!   generations through one shared weight-tile unpack per step, and
-//!   thread-pool parallel tiles. Runs on any box: no artifacts, no XLA, no
-//!   Python.
+//!   `dequant_matmul`) whose unpack/LUT-decode/dot inner loops dispatch to
+//!   runtime-selected AVX2/NEON implementations ([`backend::simd`], with
+//!   scalar as fallback and parity oracle), a preallocated-KV-cache decoder
+//!   for `generate`, a continuous-batching [`backend::BatchDecoder`] that
+//!   serves many generations through one shared weight-tile unpack per
+//!   step, and thread-pool parallel tiles. Runs on any box: no artifacts,
+//!   no XLA, no Python.
 //! * [`runtime::PjrtForward`] (`--backend pjrt`) — executes the AOT-compiled
 //!   XLA artifacts via PJRT. After `make artifacts` the `sinq` binary covers
 //!   the full paper evaluation through this path. (In offline builds the

@@ -77,7 +77,10 @@ fn print_help() {
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true),\n  \
          POST /v1/score, GET /healthz, GET /metrics; 503 + Retry-After past --max-queue;\n  \
+         Connection: keep-alive reuses sockets (--keepalive-idle-ms, default 5000);\n  \
          Ctrl-C drains live slots.\n\n\
+         SIMD: fused kernels dispatch to AVX2/NEON at runtime; SINQ_SIMD=scalar|avx2|neon|auto\n  \
+         overrides (serve prints the active kernel; /healthz reports it as \"simd\").\n\n\
          Backends (serve/eval):\n  \
          native  pure-Rust fused dequant-matmul engine on packed weights (default;\n          \
          needs no artifacts/XLA/Python — synthetic fallbacks cover missing files).\n          \
@@ -251,6 +254,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             default_max_new: max_new.max(1),
             score_queue: args.num("score-queue", 64),
             max_connections: args.num("max-connections", 256),
+            keepalive_idle_ms: args.num("keepalive-idle-ms", 5_000),
         };
         return sinq::serve::run(&spec, &opts);
     }

@@ -4,9 +4,16 @@
 //! lines, header fields, `Content-Length` bodies, fixed-length JSON
 //! responses, and close-delimited `text/event-stream` (SSE) responses —
 //! with no external dependencies, consistent with the offline vendored-deps
-//! build. Every response carries `Connection: close`: one request per
-//! connection keeps the parser trivial and matches how the streaming
-//! endpoint must behave anyway (an SSE body ends when the server closes).
+//! build.
+//!
+//! Connection reuse is **opt-in**: a client that sends
+//! `Connection: keep-alive` gets `Connection: keep-alive` back on
+//! fixed-length responses and may pipeline further requests on the same
+//! socket (see [`poll_request_start`] for the between-requests peek that
+//! distinguishes "peer finished" from "next request arriving"). Everything
+//! else — including every SSE stream, whose body is delimited by the
+//! server closing — answers `Connection: close`, which keeps EOF-framed
+//! clients working unchanged.
 
 use std::io::{BufRead, Read, Write};
 
@@ -32,6 +39,15 @@ impl Request {
             .find(|(k, _)| k.eq_ignore_ascii_case(name))
             .map(|(_, v)| v.as_str())
     }
+
+    /// Whether the client explicitly asked to reuse this connection
+    /// (`Connection: keep-alive`). Reuse is opt-in — an absent header means
+    /// close-after-response — so close-delimited clients keep working.
+    pub fn wants_keep_alive(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.trim().eq_ignore_ascii_case("keep-alive"))
+            .unwrap_or(false)
+    }
 }
 
 /// Read one `\n`-terminated line of at most `limit` bytes. Bounded *while
@@ -43,6 +59,31 @@ fn read_line_limited<R: BufRead>(r: &mut R, limit: usize, what: &str) -> anyhow:
     anyhow::ensure!(n > 0, "connection closed before {what}");
     anyhow::ensure!(buf.ends_with(b"\n"), "{what} exceeds {limit} bytes or is truncated");
     String::from_utf8(buf).map_err(|_| anyhow::anyhow!("{what} is not valid UTF-8"))
+}
+
+/// Wait for the first byte of the next request on a (possibly kept-alive)
+/// connection: `Ok(true)` when request bytes are buffered and ready to
+/// parse, `Ok(false)` when the peer closed cleanly or the socket's read
+/// timeout (the keep-alive idle timeout) expired first, `Err` on a hard
+/// socket error. Separating this peek from [`read_request`] lets the
+/// connection loop apply the short idle timeout only *between* requests
+/// and restore the full per-request timeout before parsing begins.
+pub fn poll_request_start<R: BufRead>(r: &mut R) -> std::io::Result<bool> {
+    match r.fill_buf() {
+        Ok(buf) => Ok(!buf.is_empty()),
+        Err(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+            ) =>
+        {
+            Ok(false)
+        }
+        Err(e) => Err(e),
+    }
 }
 
 /// Read and parse one request (request line, headers, `Content-Length`
@@ -100,20 +141,25 @@ pub fn status_text(code: u16) -> &'static str {
     }
 }
 
-/// Write a complete fixed-length response (`Connection: close`).
+/// Write a complete fixed-length response. `keep_alive` selects the
+/// `Connection` header: `keep-alive` tells the client the socket stays
+/// open for its next request, `close` that the server hangs up after the
+/// body.
 pub fn write_response(
     w: &mut impl Write,
     code: u16,
     content_type: &str,
     extra_headers: &[(&str, &str)],
     body: &[u8],
+    keep_alive: bool,
 ) -> std::io::Result<()> {
     write!(
         w,
         "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\
-         Connection: close\r\n",
+         Connection: {}\r\n",
         status_text(code),
-        body.len()
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
     )?;
     for (k, v) in extra_headers {
         write!(w, "{k}: {v}\r\n")?;
@@ -124,12 +170,24 @@ pub fn write_response(
 }
 
 /// Write a JSON `{"error": msg}` response.
-pub fn write_error(w: &mut impl Write, code: u16, msg: &str) -> std::io::Result<()> {
+pub fn write_error(
+    w: &mut impl Write,
+    code: u16,
+    msg: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let body = crate::util::json::Json::obj(vec![(
         "error",
         crate::util::json::Json::Str(msg.to_string()),
     )]);
-    write_response(w, code, "application/json", &[], body.to_string_compact().as_bytes())
+    write_response(
+        w,
+        code,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+        keep_alive,
+    )
 }
 
 /// Start a `text/event-stream` response. The body is close-delimited:
@@ -216,18 +274,56 @@ mod tests {
     #[test]
     fn response_shape_and_error_body() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, "application/json", &[("X-A", "1")], b"{}").unwrap();
+        write_response(&mut out, 200, "application/json", &[("X-A", "1")], b"{}", false).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
         assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
         assert!(s.contains("X-A: 1\r\n"));
         assert!(s.ends_with("\r\n\r\n{}"));
 
         let mut out = Vec::new();
-        write_error(&mut out, 503, "busy").unwrap();
+        write_error(&mut out, 503, "busy", false).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
         assert!(s.ends_with("{\"error\":\"busy\"}"));
+    }
+
+    #[test]
+    fn keep_alive_flag_selects_connection_header() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", &[], b"{}", true).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Connection: keep-alive\r\n"), "{s}");
+
+        let mut out = Vec::new();
+        write_error(&mut out, 400, "nope", true).unwrap();
+        assert!(String::from_utf8(out).unwrap().contains("Connection: keep-alive\r\n"));
+    }
+
+    #[test]
+    fn keep_alive_request_detection_is_opt_in() {
+        let req = parse("GET / HTTP/1.1\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.wants_keep_alive());
+        let req = parse("GET / HTTP/1.1\r\nConnection: Keep-Alive\r\n\r\n").unwrap();
+        assert!(req.wants_keep_alive(), "header value is case-insensitive");
+        let req = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive());
+        // No header at all → close (reuse is opt-in).
+        let req = parse("GET / HTTP/1.1\r\n\r\n").unwrap();
+        assert!(!req.wants_keep_alive());
+    }
+
+    #[test]
+    fn poll_request_start_separates_close_from_pending_bytes() {
+        // Clean EOF before any bytes → not ready (normal keep-alive end).
+        let mut empty = BufReader::new(&b""[..]);
+        assert!(!poll_request_start(&mut empty).unwrap());
+        // Buffered request bytes → ready, and the subsequent parse sees
+        // the complete request (the peek consumes nothing).
+        let mut ok = BufReader::new(&b"GET /healthz HTTP/1.1\r\n\r\n"[..]);
+        assert!(poll_request_start(&mut ok).unwrap());
+        assert_eq!(read_request(&mut ok).unwrap().path, "/healthz");
     }
 
     #[test]

@@ -35,6 +35,11 @@
 //! * When more than `--max-queue` generation requests are waiting for a KV
 //!   slot, new requests answer `503` with a `Retry-After` header instead of
 //!   queueing unboundedly.
+//! * Clients that send `Connection: keep-alive` get the socket back for
+//!   their next request (bounded by an idle timeout and a per-connection
+//!   request cap), cutting TCP setup out of steady-state TTFT; everything
+//!   else — including every SSE stream, which is close-delimited by
+//!   design — stays one-request-per-connection.
 //! * `Ctrl-C` (SIGINT/SIGTERM) stops accepting connections, drains every
 //!   live slot and already-queued request, then exits cleanly.
 //!
@@ -55,7 +60,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use crate::backend::{self, BackendSpec, InferenceBackend, NativeBackend};
+use crate::backend::{self, simd, BackendSpec, InferenceBackend, NativeBackend};
 use crate::coordinator::server::{BatchServer, ScoreClient, ServerStats};
 use crate::eval::{log_prob, LogitsEngine};
 use crate::tensor::Matrix;
@@ -68,6 +73,11 @@ use metrics::ServeMetrics;
 /// quadratic in sequence length; unbounded request bodies must not be able
 /// to pin the batcher).
 pub const MAX_SCORE_TOKENS: usize = 4096;
+
+/// Requests served on one kept-alive connection before the server closes
+/// it anyway — bounds how long a single socket can monopolize a handler
+/// thread.
+pub const MAX_KEEPALIVE_REQUESTS: usize = 256;
 
 /// Front-end configuration (the CLI flags of `sinq serve --listen`).
 #[derive(Debug, Clone)]
@@ -90,6 +100,10 @@ pub struct ServeOpts {
     /// are answered `503` at the TCP layer — keeps connection floods from
     /// bypassing the `--max-queue` admission bound.
     pub max_connections: usize,
+    /// How long a kept-alive connection may sit idle between requests
+    /// before the server closes it (`--keepalive-idle-ms`). Also bounds how
+    /// long an idle keep-alive socket pins one handler thread.
+    pub keepalive_idle_ms: u64,
 }
 
 impl Default for ServeOpts {
@@ -102,6 +116,7 @@ impl Default for ServeOpts {
             default_max_new: 32,
             score_queue: 64,
             max_connections: 256,
+            keepalive_idle_ms: 5_000,
         }
     }
 }
@@ -170,6 +185,12 @@ struct ConnState {
     slots: usize,
     capacity: usize,
     default_max_new: usize,
+    /// Keep-alive idle timeout between requests on one connection.
+    idle: Duration,
+    /// Server shutdown flag (shared with the accept loop): once set,
+    /// responses advertise `Connection: close` so kept-alive sockets stop
+    /// extending the graceful drain.
+    stop: Arc<AtomicBool>,
 }
 
 /// A running serving endpoint: listener thread + streaming engine +
@@ -216,6 +237,7 @@ impl Server {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
 
+        let stop = Arc::new(AtomicBool::new(false));
         let state = Arc::new(ConnState {
             engine: gen_engine.client(),
             score: score.client(),
@@ -224,8 +246,9 @@ impl Server {
             slots,
             capacity,
             default_max_new: opts.default_max_new,
+            idle: Duration::from_millis(opts.keepalive_idle_ms.max(1)),
+            stop: stop.clone(),
         });
-        let stop = Arc::new(AtomicBool::new(false));
         let accept_stop = stop.clone();
         let max_connections = opts.max_connections.max(1);
         let accept_thread = thread::Builder::new()
@@ -288,7 +311,7 @@ fn accept_loop(
                     // connection flood cannot bypass the request-level
                     // `--max-queue` bound by exhausting threads first.
                     let _ = stream.set_nonblocking(false);
-                    let _ = http::write_error(&mut stream, 503, "too many open connections");
+                    let _ = http::write_error(&mut stream, 503, "too many open connections", false);
                     continue;
                 }
                 let state = state.clone();
@@ -319,46 +342,96 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
     };
     let mut reader = BufReader::new(reader_stream);
     let mut w = stream;
-    let req = match http::read_request(&mut reader) {
-        Ok(r) => r,
-        Err(e) => {
-            let _ = http::write_error(&mut w, 400, &format!("bad request: {e}"));
+    // Per-connection request loop: runs once for close-delimited clients,
+    // and until idle timeout / request cap / shutdown / protocol error for
+    // clients that opt into `Connection: keep-alive`.
+    for served in 0..MAX_KEEPALIVE_REQUESTS {
+        if served > 0 {
+            // Between kept-alive requests only the (shorter) idle timeout
+            // applies, so a silent client costs one handler thread for at
+            // most `idle` (the clones share one socket, so setting the
+            // timeout on the writer also governs the reader). The peek
+            // below restores the full per-request timeout as soon as the
+            // next request's first bytes arrive, so a slow-but-active
+            // request is never cut short by the idle bound.
+            let _ = w.set_read_timeout(Some(state.idle));
+            match http::poll_request_start(&mut reader) {
+                Ok(true) => {}
+                // Peer finished, idled out, or hard socket error: nothing
+                // left to answer on this connection.
+                Ok(false) | Err(_) => return,
+            }
+            let _ = w.set_read_timeout(Some(Duration::from_secs(30)));
+        }
+        let req = match http::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(e) => {
+                // Bytes arrived but did not parse as a request (first
+                // request, or garbage after a kept-alive one): answer 400
+                // and hang up. A peer that already died just loses the
+                // write, which `let _` absorbs.
+                let _ = http::write_error(&mut w, 400, &format!("bad request: {e}"), false);
+                return;
+            }
+        };
+        // Stop extending the session once shutdown begins: the response
+        // advertises `Connection: close` and the loop exits, so graceful
+        // drain stays bounded by in-flight work instead of up to
+        // MAX_KEEPALIVE_REQUESTS further requests per open socket.
+        let keep = req.wants_keep_alive()
+            && served + 1 < MAX_KEEPALIVE_REQUESTS
+            && !state.stop.load(Ordering::SeqCst);
+        // Write failures (client hung up mid-stream) are not server errors;
+        // they end the connection like any non-reusable response.
+        let reusable = match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => handle_health(&mut w, state, keep).map(|_| keep),
+            ("GET", "/metrics") => http::write_response(
+                &mut w,
+                200,
+                "text/plain; version=0.0.4; charset=utf-8",
+                &[],
+                state.metrics.render().as_bytes(),
+                keep,
+            )
+            .map(|_| keep),
+            ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body, keep),
+            ("POST", "/v1/score") => handle_score(&mut w, state, &req.body, keep).map(|_| keep),
+            (_, "/healthz" | "/metrics" | "/v1/generate" | "/v1/score") => http::write_error(
+                &mut w,
+                405,
+                &format!("method {} not allowed on {}", req.method, req.path),
+                keep,
+            )
+            .map(|_| keep),
+            _ => http::write_error(&mut w, 404, &format!("unknown path {}", req.path), keep)
+                .map(|_| keep),
+        };
+        if !reusable.unwrap_or(false) {
             return;
         }
-    };
-    // Write failures (client hung up mid-stream) are not server errors.
-    let _ = match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => handle_health(&mut w, state),
-        ("GET", "/metrics") => http::write_response(
-            &mut w,
-            200,
-            "text/plain; version=0.0.4; charset=utf-8",
-            &[],
-            state.metrics.render().as_bytes(),
-        ),
-        ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body),
-        ("POST", "/v1/score") => handle_score(&mut w, state, &req.body),
-        (_, "/healthz" | "/metrics" | "/v1/generate" | "/v1/score") => http::write_error(
-            &mut w,
-            405,
-            &format!("method {} not allowed on {}", req.method, req.path),
-        ),
-        _ => http::write_error(&mut w, 404, &format!("unknown path {}", req.path)),
-    };
+    }
 }
 
-fn handle_health(w: &mut TcpStream, state: &ConnState) -> std::io::Result<()> {
+fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::io::Result<()> {
     let m = &state.metrics;
     let body = Json::obj(vec![
         ("status", Json::Str("ok".into())),
         ("backend", Json::Str("native".into())),
+        ("simd", Json::Str(simd::kernel_name().into())),
         ("model", Json::Str(state.model.clone())),
         ("slots", Json::Num(state.slots as f64)),
         ("kv_capacity", Json::Num(state.capacity as f64)),
         ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
         ("queued_requests", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
     ]);
-    http::write_response(w, 200, "application/json", &[], body.to_string_compact().as_bytes())
+    http::write_response(
+        w,
+        200,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+        keep_alive,
+    )
 }
 
 /// Parsed `POST /v1/generate` body.
@@ -393,15 +466,26 @@ fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, S
     Ok(GenerateBody { prompt, max_new, stream })
 }
 
-fn handle_generate(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io::Result<()> {
+/// Returns whether the connection is still reusable afterwards: every
+/// fixed-length response (success or structured error) preserves the
+/// request's keep-alive choice; an SSE stream is close-delimited, so
+/// streaming always ends the connection.
+fn handle_generate(
+    w: &mut TcpStream,
+    state: &ConnState,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<bool> {
     let parsed = match parse_generate(body, state.default_max_new) {
         Ok(p) => p,
-        Err(msg) => return http::write_error(w, 400, &msg),
+        Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
     };
     match state.engine.submit(parsed.prompt, parsed.max_new) {
         // Structured engine errors: over-capacity prompts keep the
         // decoder's KV-capacity text, saturation answers 503 + Retry-After.
-        Err(SubmitError::Invalid(msg)) => http::write_error(w, 400, &msg),
+        Err(SubmitError::Invalid(msg)) => {
+            http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive)
+        }
         Err(e @ SubmitError::Busy { .. }) => {
             let body = Json::obj(vec![("error", Json::Str(e.to_string()))]);
             http::write_response(
@@ -410,14 +494,18 @@ fn handle_generate(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io
                 "application/json",
                 &[("Retry-After", "1")],
                 body.to_string_compact().as_bytes(),
+                keep_alive,
             )
+            .map(|_| keep_alive)
         }
-        Err(e @ SubmitError::Unavailable(_)) => http::write_error(w, 503, &e.to_string()),
+        Err(e @ SubmitError::Unavailable(_)) => {
+            http::write_error(w, 503, &e.to_string(), keep_alive).map(|_| keep_alive)
+        }
         Ok(handle) => {
             if parsed.stream {
-                stream_generate(w, handle)
+                stream_generate(w, handle).map(|_| false)
             } else {
-                respond_generate(w, handle)
+                respond_generate(w, handle, keep_alive).map(|_| keep_alive)
             }
         }
     }
@@ -459,7 +547,11 @@ fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<(
 
 /// Non-streamed generation: collect the same event stream into one JSON
 /// response (token-identical to streaming — both read the same channel).
-fn respond_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<()> {
+fn respond_generate(
+    w: &mut TcpStream,
+    handle: StreamHandle,
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let mut tokens: Vec<u8> = Vec::new();
     for ev in handle.rx.iter() {
         match ev {
@@ -481,12 +573,13 @@ fn respond_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<
                     "application/json",
                     &[],
                     body.to_string_compact().as_bytes(),
+                    keep_alive,
                 );
             }
-            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg),
+            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg, keep_alive),
         }
     }
-    http::write_error(w, 500, "stream interrupted")
+    http::write_error(w, 500, "stream interrupted", keep_alive)
 }
 
 fn parse_score(body: &[u8]) -> Result<Vec<u8>, String> {
@@ -522,14 +615,19 @@ fn parse_score(body: &[u8]) -> Result<Vec<u8>, String> {
 
 /// `/v1/score`: teacher-forced next-token log-probs through the scoring
 /// batcher (concurrent requests share fused batched dispatches).
-fn handle_score(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io::Result<()> {
+fn handle_score(
+    w: &mut TcpStream,
+    state: &ConnState,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
     let tokens = match parse_score(body) {
         Ok(t) => t,
-        Err(msg) => return http::write_error(w, 400, &msg),
+        Err(msg) => return http::write_error(w, 400, &msg, keep_alive),
     };
     let logits = match state.score.score(tokens.clone()) {
         Ok(m) => m,
-        Err(e) => return http::write_error(w, 500, &format!("scoring failed: {e}")),
+        Err(e) => return http::write_error(w, 500, &format!("scoring failed: {e}"), keep_alive),
     };
     state.metrics.score_requests.fetch_add(1, Ordering::Relaxed);
     let mut logprobs = Vec::with_capacity(tokens.len() - 1);
@@ -546,7 +644,14 @@ fn handle_score(w: &mut TcpStream, state: &ConnState, body: &[u8]) -> std::io::R
         ("mean_nll", Json::Num(mean_nll)),
         ("ppl", Json::Num(mean_nll.exp())),
     ]);
-    http::write_response(w, 200, "application/json", &[], body.to_string_compact().as_bytes())
+    http::write_response(
+        w,
+        200,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+        keep_alive,
+    )
 }
 
 static INTERRUPTED: AtomicBool = AtomicBool::new(false);
@@ -580,9 +685,10 @@ fn install_interrupt_handler() {
 pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     let be = Arc::new(backend::build_native(spec)?);
     println!(
-        "native engine ready: model '{}', {} quantized linears",
+        "native engine ready: model '{}', {} quantized linears, simd kernel '{}'",
         be.cfg.name,
-        be.quantized_layer_count()
+        be.quantized_layer_count(),
+        simd::kernel_name()
     );
     let server = Server::start_with_backend(be, opts)?;
     println!(

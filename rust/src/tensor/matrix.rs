@@ -68,6 +68,17 @@ impl Matrix {
         (0..self.rows).map(|i| self.at(i, j)).collect()
     }
 
+    /// Reuse this matrix's allocation for a new shape, zero-filling the
+    /// contents — the decode-step scratch buffers call this every step so
+    /// the hot path reallocates only when a shape grows past its high-water
+    /// mark.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut t = Matrix::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness on big matrices.

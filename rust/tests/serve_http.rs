@@ -368,6 +368,168 @@ fn healthz_reports_engine_shape_and_unknown_paths_404() {
 }
 
 // =====================================================================
+// HTTP keep-alive: one connection, many requests, idle timeout
+// =====================================================================
+
+/// Read one Content-Length-framed response (keep-alive framing: the
+/// connection stays open, so EOF cannot delimit the body).
+fn read_framed_response(r: &mut BufReader<TcpStream>) -> Response {
+    let mut head = String::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).expect("read header line");
+        assert!(!line.is_empty(), "connection closed mid-headers");
+        if line == "\r\n" {
+            break;
+        }
+        head.push_str(&line);
+    }
+    let mut lines = head.lines();
+    let status_line = lines.next().expect("status line");
+    let status: u16 = status_line.split_whitespace().nth(1).expect("code").parse().unwrap();
+    let headers: Vec<(String, String)> = lines
+        .filter_map(|l| l.split_once(':'))
+        .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        .collect();
+    let res = Response { status, headers, body: Vec::new() };
+    let len: usize = res.header("content-length").expect("content-length").parse().unwrap();
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).expect("read body");
+    Response { body, ..res }
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Three health checks over the same socket.
+    for i in 0..3 {
+        write!(stream, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap();
+        let res = read_framed_response(&mut reader);
+        assert_eq!(res.status, 200, "request {i} on the shared connection");
+        assert_eq!(res.header("connection"), Some("keep-alive"), "request {i}");
+        assert_eq!(res.json().get("status").and_then(Json::as_str), Some("ok"));
+    }
+
+    // A non-streamed generation works over the same socket too, and its
+    // tokens match a fresh-connection request exactly.
+    let body = generate_body("keepalive", 4, false);
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let res = read_framed_response(&mut reader);
+    assert_eq!(res.status, 200);
+    assert_eq!(res.header("connection"), Some("keep-alive"));
+    let kept_tokens: Vec<u8> = res
+        .json()
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("tokens")
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u8)
+        .collect();
+    let fresh = request(&addr, "POST", "/v1/generate", &generate_body("keepalive", 4, false));
+    let fresh_tokens: Vec<u8> = fresh
+        .json()
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("tokens")
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u8)
+        .collect();
+    assert_eq!(kept_tokens, fresh_tokens, "keep-alive must not change decode results");
+
+    // An error response also keeps the connection when asked to.
+    write!(stream, "GET /nope HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n").unwrap();
+    let res = read_framed_response(&mut reader);
+    assert_eq!(res.status, 404);
+    assert_eq!(res.header("connection"), Some("keep-alive"));
+
+    // Without the header the server answers Connection: close and hangs up.
+    write!(stream, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let res = read_framed_response(&mut reader);
+    assert_eq!(res.status, 200);
+    assert_eq!(res.header("connection"), Some("close"));
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("read to close");
+    assert!(rest.is_empty(), "server must close after a non-keep-alive request");
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_idle_timeout_closes_the_connection() {
+    let opts = ServeOpts { keepalive_idle_ms: 150, ..ServeOpts::default() };
+    let server = start_server(&pico_spec(None), &opts);
+    let addr = server.addr.to_string();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    write!(stream, "GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\r\n").unwrap();
+    let res = read_framed_response(&mut reader);
+    assert_eq!(res.status, 200);
+    assert_eq!(res.header("connection"), Some("keep-alive"));
+    // Send nothing: the idle timeout must close the socket server-side
+    // (read_to_end returning 0 extra bytes) well before the 30s request
+    // timeout.
+    let t0 = std::time::Instant::now();
+    let mut rest = Vec::new();
+    reader.read_to_end(&mut rest).expect("read to close");
+    assert!(rest.is_empty());
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(20),
+        "idle keep-alive connection was not closed promptly"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn streamed_sse_over_keep_alive_request_still_closes() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    let body = generate_body("stream me", 3, true);
+    write!(
+        stream,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: keep-alive\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    // SSE is close-delimited: despite the keep-alive request header, the
+    // server must finish the stream and hang up, so read_to_end returns.
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let res = parse_response(&raw);
+    assert_eq!(res.status, 200);
+    assert_eq!(res.header("connection"), Some("close"));
+    let events = parse_sse_events(&res.body);
+    assert_eq!(sse_tokens(&events).len(), 3);
+    assert!(events.iter().any(|(name, _)| name == "done"));
+    server.shutdown();
+}
+
+#[test]
+fn healthz_reports_active_simd_kernel() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let res = request(&addr, "GET", "/healthz", "");
+    assert_eq!(res.status, 200);
+    let simd = res.json().get("simd").and_then(Json::as_str).unwrap_or("").to_string();
+    assert!(
+        ["scalar", "avx2", "neon"].contains(&simd.as_str()),
+        "unexpected simd kernel name {simd:?}"
+    );
+    server.shutdown();
+}
+
+// =====================================================================
 // The server reuses one backend for scoring and generation
 // =====================================================================
 

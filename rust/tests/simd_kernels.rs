@@ -1,0 +1,294 @@
+//! Scalar-vs-SIMD parity suite for the dispatched dequant kernels.
+//!
+//! The scalar kernels are the oracle. Contracts held here:
+//!
+//! * unpacked codes and decoded grid levels are **bit-identical** across
+//!   every supported ISA, for every bit width 2..=8 and awkward shapes
+//!   (lengths not divisible by the lane width, 0/1 rows, group-boundary
+//!   straddles);
+//! * dot reductions agree to float tolerance and are deterministic;
+//! * the tensor-level entry points (`to_dense`, `dequant_matmul`,
+//!   `dequant_matvec`, `dequant_matmul_shared`) agree across ISAs, and the
+//!   matvec ≡ shared-row bitwise contract holds *within* each ISA;
+//! * greedy decode through `BatchDecoder` emits **exactly** the same
+//!   tokens under the scalar and SIMD kernels.
+//!
+//! Tests that flip the process-wide dispatch (`simd::force`) serialize on
+//! one mutex and restore automatic selection on drop, so they cannot
+//! interfere with each other or with the ISA-explicit tests.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use sinq::backend::simd::{self, Isa};
+use sinq::backend::{BatchDecoder, NativeBackend, QuantizedTensor};
+use sinq::coordinator::scheduler::quantize_simple;
+use sinq::fmt::pack;
+use sinq::model::{ModelConfig, ModelWeights};
+use sinq::quant::{quantize_matrix, Method, QuantConfig};
+use sinq::tensor::{Matrix, Rng};
+
+/// Serializes every test that calls `simd::force` (process-wide state).
+fn isa_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Forces an ISA for the guard's lifetime; restores auto-selection on drop.
+struct ForceGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl Drop for ForceGuard {
+    fn drop(&mut self) {
+        simd::force(None);
+    }
+}
+
+fn force_isa(isa: Isa) -> ForceGuard {
+    let guard = isa_lock();
+    simd::force(Some(isa));
+    ForceGuard(guard)
+}
+
+/// Every non-scalar ISA this host can execute.
+fn simd_isas() -> Vec<Isa> {
+    [Isa::Avx2, Isa::Neon].into_iter().filter(|&isa| simd::supported(isa)).collect()
+}
+
+// =====================================================================
+// Kernel-level parity: bit-identical unpack and level decode
+// =====================================================================
+
+#[test]
+fn unpack_and_levels_bit_identical_across_isas() {
+    let mut rng = Rng::new(5);
+    // Arbitrary non-trivial LUT covering all 256 codes.
+    let lut: Vec<f32> = (0..256).map(|i| ((i * 37 + 11) % 101) as f32 * 0.173 - 8.5).collect();
+    for bits in 2u32..=8 {
+        // Lengths chosen to straddle lane widths (8/16/32), byte
+        // boundaries for odd widths, and the degenerate 0/1 cases.
+        for n in [0usize, 1, 2, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 100, 127, 257] {
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack::pack(&codes, bits);
+
+            let mut want_codes = vec![0u8; n];
+            let mut want_levels = vec![0.0f32; n];
+            simd::decode_levels_with(
+                Isa::Scalar,
+                &packed,
+                bits,
+                &lut,
+                &mut want_codes,
+                &mut want_levels,
+            );
+            assert_eq!(want_codes, codes, "scalar unpack disagrees with fmt::pack");
+
+            for isa in simd_isas() {
+                let mut got_codes = vec![0u8; n];
+                let mut got_levels = vec![0.0f32; n];
+                simd::decode_levels_with(isa, &packed, bits, &lut, &mut got_codes, &mut got_levels);
+                assert_eq!(got_codes, codes, "{isa:?} unpack bits={bits} n={n}");
+                let want_bits: Vec<u32> = want_levels.iter().map(|v| v.to_bits()).collect();
+                let got_bits: Vec<u32> = got_levels.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_bits, want_bits, "{isa:?} levels differ: bits={bits} n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn standalone_unpack_dispatch_matches_scalar() {
+    let mut rng = Rng::new(6);
+    for bits in 2u32..=8 {
+        for n in [1usize, 3, 16, 33, 64, 129] {
+            let codes: Vec<u8> =
+                (0..n).map(|_| (rng.next_u64() & ((1 << bits) - 1)) as u8).collect();
+            let packed = pack::pack(&codes, bits);
+            for isa in simd_isas() {
+                let mut out = vec![0u8; n];
+                simd::unpack_into_with(isa, &packed, bits, &mut out);
+                assert_eq!(out, codes, "{isa:?} bits={bits} n={n}");
+            }
+        }
+    }
+}
+
+// =====================================================================
+// Dot reduction: tolerance parity + determinism
+// =====================================================================
+
+#[test]
+fn dot_matches_scalar_within_tolerance_and_is_deterministic() {
+    let mut rng = Rng::new(9);
+    for n in [0usize, 1, 3, 7, 8, 9, 31, 32, 33, 100, 500, 1024] {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let want = simd::dot_with(Isa::Scalar, &a, &b);
+        for isa in simd_isas() {
+            let got = simd::dot_with(isa, &a, &b);
+            let again = simd::dot_with(isa, &a, &b);
+            assert_eq!(got.to_bits(), again.to_bits(), "{isa:?} dot must be deterministic");
+            let tol = 1e-4 * (1.0 + (n as f32).sqrt());
+            assert!(
+                (got - want).abs() <= tol,
+                "{isa:?} n={n}: dot {got} vs scalar {want} (tol {tol})"
+            );
+        }
+    }
+}
+
+// =====================================================================
+// Tensor-level parity under forced dispatch
+// =====================================================================
+
+#[test]
+fn forced_isa_tensor_paths_agree_with_scalar() {
+    let mut rng = Rng::new(77);
+    // cols=100 with the default group size 64 → ragged tail group;
+    // rows=37 → ragged 8-row tile; rows 0 and 1 of x exercise tiny m.
+    let w = Matrix::randn(37, 100, 0.05, &mut rng);
+    let x = Matrix::randn(5, 100, 1.0, &mut rng);
+    for bits in 2u32..=8 {
+        for method in [Method::Rtn, Method::Sinq] {
+            let q = quantize_matrix(&w, &QuantConfig::new(method, bits), None).unwrap();
+            let qt = QuantizedTensor::from_linear(&q).expect("packable layer");
+            let label = format!("{} {bits}b", method.name());
+
+            let guard = force_isa(Isa::Scalar);
+            let dense_scalar = qt.to_dense();
+            let mm_scalar = qt.dequant_matmul(&x, 2);
+            let mv_scalar = qt.dequant_matvec(x.row(0));
+            let sh_scalar = qt.dequant_matmul_shared(&x, 2);
+            drop(guard);
+
+            for isa in simd_isas() {
+                let _guard = force_isa(isa);
+                // Dense dequantization involves only unpack + LUT + the
+                // scalar scale loop → must be bit-identical.
+                assert_eq!(qt.to_dense().data, dense_scalar.data, "{label} {isa:?} to_dense");
+
+                let mm = qt.dequant_matmul(&x, 2);
+                let sh = qt.dequant_matmul_shared(&x, 2);
+                let mv = qt.dequant_matvec(x.row(0));
+                for (got, want) in [(&mm, &mm_scalar), (&sh, &sh_scalar)] {
+                    let max_diff = got
+                        .data
+                        .iter()
+                        .zip(&want.data)
+                        .map(|(g, s)| (g - s).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(max_diff < 1e-3, "{label} {isa:?}: diverged by {max_diff}");
+                }
+                let max_diff = mv
+                    .iter()
+                    .zip(&mv_scalar)
+                    .map(|(g, s)| (g - s).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(max_diff < 1e-3, "{label} {isa:?} matvec: diverged by {max_diff}");
+
+                // The batched-decode contract must hold within the ISA:
+                // shared rows bitwise equal to per-row matvec.
+                for r in 0..x.rows {
+                    assert_eq!(
+                        sh.row(r),
+                        qt.dequant_matvec(x.row(r)).as_slice(),
+                        "{label} {isa:?} row {r}: shared kernel drifted from matvec"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_isa_handles_zero_and_one_row_activations() {
+    let mut rng = Rng::new(78);
+    let w = Matrix::randn(9, 48, 0.05, &mut rng);
+    let q = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+    let qt = QuantizedTensor::from_linear(&q).unwrap();
+    let x1 = Matrix::randn(1, 48, 1.0, &mut rng);
+    let x0 = Matrix::zeros(0, 48);
+    for isa in std::iter::once(Isa::Scalar).chain(simd_isas()) {
+        let _guard = force_isa(isa);
+        let y1 = qt.dequant_matmul_shared(&x1, 1);
+        assert_eq!((y1.rows, y1.cols), (1, 9), "{isa:?}");
+        assert_eq!(y1.row(0), qt.dequant_matvec(x1.row(0)).as_slice(), "{isa:?}");
+        let y0 = qt.dequant_matmul(&x0, 1);
+        assert_eq!((y0.rows, y0.cols), (0, 9), "{isa:?}");
+    }
+}
+
+// =====================================================================
+// Exact-token greedy parity through BatchDecoder
+// =====================================================================
+
+fn decode_tokens(nb: &NativeBackend) -> Vec<Vec<u8>> {
+    let mut dec = BatchDecoder::new(nb, 2, 32).expect("batch decoder");
+    let prompts: [&[u8]; 3] = [b"hello simd", b"kernel", b"dispatch!"];
+    for (i, p) in prompts.iter().enumerate() {
+        dec.submit(i, p, 6).expect("submit");
+    }
+    dec.run().expect("decode").into_iter().map(|o| o.tokens).collect()
+}
+
+#[test]
+fn greedy_tokens_identical_scalar_vs_simd_through_batch_decoder() {
+    let best = simd::detect();
+    if best == Isa::Scalar {
+        return; // nothing to compare against on this host
+    }
+    let cfg = ModelConfig::family("pico").unwrap();
+    let mw = ModelWeights::synthetic(&cfg, 31);
+    for method in [Method::Rtn, Method::Sinq] {
+        let qm = quantize_simple(&mw, &QuantConfig::new(method, 4), None).unwrap();
+        let nb = NativeBackend::from_quantized(&qm);
+        assert!(nb.quantized_layer_count() > 0);
+
+        let guard = force_isa(Isa::Scalar);
+        let scalar_tokens = decode_tokens(&nb);
+        drop(guard);
+
+        let _guard = force_isa(best);
+        let simd_tokens = decode_tokens(&nb);
+        assert_eq!(
+            scalar_tokens, simd_tokens,
+            "greedy decode changed tokens between scalar and {best:?} ({method:?})"
+        );
+    }
+}
+
+// =====================================================================
+// Dispatch bookkeeping
+// =====================================================================
+
+#[test]
+fn forcing_an_isa_is_reflected_and_reverts() {
+    {
+        let _guard = force_isa(Isa::Scalar);
+        assert_eq!(simd::active(), Isa::Scalar);
+        assert_eq!(simd::kernel_name(), "scalar");
+    }
+    let _lock = isa_lock();
+    assert!(simd::supported(simd::active()), "auto selection must be executable");
+}
+
+/// CI leg hook: with `SINQ_REQUIRE_SIMD=avx2` (set by the
+/// `target-cpu=native` matrix leg on the x86_64 runner) this fails loudly
+/// if the dispatcher silently fell back to scalar — the SIMD paths can
+/// never rot unnoticed behind the fallback.
+#[test]
+fn required_kernel_is_active() {
+    let Ok(want) = std::env::var("SINQ_REQUIRE_SIMD") else {
+        return;
+    };
+    if want.trim().is_empty() {
+        return;
+    }
+    let _lock = isa_lock();
+    assert_eq!(
+        simd::kernel_name(),
+        want.trim(),
+        "SINQ_REQUIRE_SIMD demands the '{}' kernel but the dispatcher selected '{}'",
+        want.trim(),
+        simd::kernel_name()
+    );
+}

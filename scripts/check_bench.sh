@@ -4,9 +4,16 @@
 # each file must be well-formed JSON with a named bench and a non-empty
 # `results` array of finite numbers. The decode report must additionally
 # carry per-batch throughput (the ≥8-batch row is the amortization
-# headline), and the serve report per-concurrency requests/sec plus a
-# median TTFT. Fails loudly so a silently-broken bench cannot upload
-# garbage artifacts.
+# headline) plus the scalar-vs-SIMD fields (`tokens_per_sec_scalar`,
+# `simd_speedup`, top-level `kernel`), and the serve report
+# per-concurrency requests/sec plus a median TTFT. Fails loudly so a
+# silently-broken bench cannot upload garbage artifacts.
+#
+# Set CHECK_BENCH_SIMD_SPEEDUP=<x> (e.g. 1.5) to additionally require the
+# decode report's SIMD path to be ≥ x× scalar tokens/sec at batch 1 and
+# 16 — CI's bench-smoke sets this on runners whose dispatcher selects a
+# non-scalar kernel, so the SIMD paths cannot silently regress to parity
+# with the fallback.
 set -euo pipefail
 
 if [ "$#" -eq 0 ]; then
@@ -41,12 +48,30 @@ for row in results:
         assert math.isfinite(val), f"{path}: non-finite '{key}' in {row!r}"
 
 if bench == "decode":
+    import os
+
+    kernel = doc.get("kernel")
+    assert isinstance(kernel, str) and kernel, f"{path}: missing dispatched 'kernel' name"
     batches = []
     for row in results:
         assert row.get("tokens_per_sec", 0) > 0, f"{path}: zero throughput row {row!r}"
+        assert row.get("tokens_per_sec_scalar", 0) > 0, f"{path}: zero scalar row {row!r}"
+        assert row.get("simd_speedup", 0) > 0, f"{path}: missing simd_speedup in {row!r}"
         batches.append(row.get("batch", 0))
     assert any(b >= 8 for b in batches), f"{path}: no batch ≥ 8 row (got {batches})"
     assert any(b == 1 for b in batches), f"{path}: no batch-1 baseline row"
+    want = os.environ.get("CHECK_BENCH_SIMD_SPEEDUP", "")
+    if want and kernel != "scalar":
+        need = float(want)
+        for target in (1, 16):
+            row = next((r for r in results if r.get("batch") == target), None)
+            assert row is not None, f"{path}: no batch-{target} row for the SIMD gate"
+            got = row["simd_speedup"]
+            assert got >= need, (
+                f"{path}: batch {target} SIMD speedup {got:.2f}x < required {need}x "
+                f"(kernel '{kernel}')"
+            )
+        print(f"check_bench: {path} SIMD gate ok (kernel '{kernel}', ≥{need}x)")
 
 if bench == "serve":
     batches = []
