@@ -1,8 +1,10 @@
 //! Continuous-batched native decode throughput: aggregate tokens/sec at
 //! batch sizes 1/4/16 on the tiny model (SINQ 4-bit), no artifacts needed —
-//! now measured under both the runtime-dispatched SIMD kernels and the
-//! forced scalar fallback, so `BENCH_decode.json` records the SIMD speedup
-//! per batch size alongside the batching speedup.
+//! measured under the runtime-dispatched SIMD kernels, the forced scalar
+//! fallback, and the 8-bit quantized KV cache, so `BENCH_decode.json`
+//! records the SIMD speedup and the kv-bits 32-vs-8 throughput (plus the
+//! per-slot KV bytes both precisions occupy) alongside the batching
+//! speedup.
 //!
 //! Batch 1 runs the single-sequence `NativeDecoder` (fused matvec path);
 //! larger batches run the continuous-batching `BatchDecoder`, whose fused
@@ -18,7 +20,7 @@
 use std::time::Instant;
 
 use sinq::backend::simd::{self, Isa};
-use sinq::backend::{BatchDecoder, NativeBackend, NativeDecoder};
+use sinq::backend::{BatchDecoder, KvBits, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
 use sinq::quant::{Method, QuantConfig};
@@ -30,9 +32,10 @@ fn run_batched(
     reqs: &[(Vec<u8>, usize)],
     slots: usize,
     capacity: usize,
+    kv: KvBits,
 ) -> (f64, usize) {
     let t0 = Instant::now();
-    let mut dec = BatchDecoder::new(be, slots, capacity).expect("batch decoder");
+    let mut dec = BatchDecoder::new_with_kv(be, slots, capacity, kv).expect("batch decoder");
     for (i, (prompt, gen)) in reqs.iter().enumerate() {
         dec.submit(i, prompt, *gen).expect("submit");
     }
@@ -41,11 +44,16 @@ fn run_batched(
 }
 
 /// Decode `reqs` one sequence at a time through `NativeDecoder`.
-fn run_single(be: &NativeBackend, reqs: &[(Vec<u8>, usize)], capacity: usize) -> (f64, usize) {
+fn run_single(
+    be: &NativeBackend,
+    reqs: &[(Vec<u8>, usize)],
+    capacity: usize,
+    kv: KvBits,
+) -> (f64, usize) {
     let t0 = Instant::now();
     let mut tokens = 0usize;
     for (prompt, gen) in reqs {
-        let mut dec = NativeDecoder::new(be, capacity).expect("decoder");
+        let mut dec = NativeDecoder::with_kv(be, capacity, kv).expect("decoder");
         dec.generate(prompt, *gen).expect("single decode");
         tokens += prompt.len() + gen - 1;
     }
@@ -59,14 +67,15 @@ fn best_of(
     reqs: &[(Vec<u8>, usize)],
     batch: usize,
     capacity: usize,
+    kv: KvBits,
 ) -> (f64, usize) {
     let mut best_secs = f64::INFINITY;
     let mut tokens = 0usize;
     for _ in 0..reps {
         let (secs, toks) = if batch == 1 {
-            run_single(be, reqs, capacity)
+            run_single(be, reqs, capacity, kv)
         } else {
-            run_batched(be, reqs, batch, capacity)
+            run_batched(be, reqs, batch, capacity, kv)
         };
         best_secs = best_secs.min(secs);
         tokens = toks;
@@ -124,13 +133,15 @@ fn main() {
     let mut tps_batch1 = 0.0f64;
     for batch in [1usize, 4, 16] {
         simd::force(None);
-        let (simd_secs, tokens) = best_of(reps, &be, &reqs, batch, capacity);
+        let (simd_secs, tokens) = best_of(reps, &be, &reqs, batch, capacity, KvBits::F32);
+        let (kv8_secs, _) = best_of(reps, &be, &reqs, batch, capacity, KvBits::Q8);
         simd::force(Some(Isa::Scalar));
-        let (scalar_secs, _) = best_of(reps, &be, &reqs, batch, capacity);
+        let (scalar_secs, _) = best_of(reps, &be, &reqs, batch, capacity, KvBits::F32);
         simd::force(None);
 
         let tps = tokens as f64 / simd_secs;
         let tps_scalar = tokens as f64 / scalar_secs;
+        let tps_kv8 = tokens as f64 / kv8_secs;
         let simd_speedup = tps / tps_scalar;
         if batch == 1 {
             tps_batch1 = tps;
@@ -139,7 +150,7 @@ fn main() {
         println!(
             "batch {batch:>2}: {tokens} sequence-tokens in {simd_secs:.3}s \
              → {tps:.0} tok/s ({speedup:.2}x vs batch 1); scalar {tps_scalar:.0} tok/s \
-             → {simd_speedup:.2}x from '{kernel}'"
+             → {simd_speedup:.2}x from '{kernel}'; kv8 {tps_kv8:.0} tok/s"
         );
         summary.push(Json::obj(vec![
             ("batch", Json::Num(batch as f64)),
@@ -150,8 +161,23 @@ fn main() {
             ("secs_scalar", Json::Num(scalar_secs)),
             ("tokens_per_sec_scalar", Json::Num(tps_scalar)),
             ("simd_speedup", Json::Num(simd_speedup)),
+            ("secs_kv8", Json::Num(kv8_secs)),
+            ("tokens_per_sec_kv8", Json::Num(tps_kv8)),
         ]));
     }
+
+    // Per-slot KV memory at both precisions (what --max-batch multiplies).
+    let kv_bytes_f32 = NativeDecoder::with_kv(&be, capacity, KvBits::F32)
+        .expect("decoder")
+        .kv_bytes();
+    let kv_bytes_q8 = NativeDecoder::with_kv(&be, capacity, KvBits::Q8)
+        .expect("decoder")
+        .kv_bytes();
+    let kv_reduction = kv_bytes_f32 as f64 / kv_bytes_q8 as f64;
+    println!(
+        "kv cache per slot ({capacity} positions): f32 {kv_bytes_f32}B, \
+         q8 {kv_bytes_q8}B → {kv_reduction:.2}x smaller"
+    );
 
     let report = Json::obj(vec![
         ("bench", Json::Str("decode".to_string())),
@@ -163,6 +189,9 @@ fn main() {
         ("prompt_len", Json::Num(prompt_len as f64)),
         ("gen_tokens", Json::Num(gen as f64)),
         ("quick", Json::Bool(quick)),
+        ("kv_bytes_per_slot_f32", Json::Num(kv_bytes_f32 as f64)),
+        ("kv_bytes_per_slot_q8", Json::Num(kv_bytes_q8 as f64)),
+        ("kv_reduction", Json::Num(kv_reduction)),
         ("results", Json::Arr(summary)),
     ]);
     // Repo root, resolved from the package dir so cwd does not matter.

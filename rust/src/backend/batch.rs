@@ -4,30 +4,32 @@
 //! [`crate::backend::NativeDecoder`]: it maintains one KV-cache slot per
 //! concurrent sequence, admits queued requests into free slots and retires
 //! finished ones **between steps** (continuous batching, not static), and
-//! executes each decode step as fused matmuls over the stacked activation
-//! rows of all live sequences. Every packed weight tile is therefore
-//! unpacked once per step instead of once per sequence — the amortization
-//! that makes weight-only low-bit schemes viable in serving.
+//! advances all live sequences through the unified decode step
+//! ([`crate::backend::fwd::decode_rows`]) — fused stacked-row matmuls, one
+//! weight-tile unpack per step shared by every live sequence.
 //!
-//! Exactness contract: every kernel the batched step touches
-//! ([`QuantizedTensor::dequant_matmul_shared`] via
-//! `LayerWeight::decode_matmul`, the shared `causal_attend`, `mlp_forward`,
-//! `rmsnorm`/`rope`) runs the same f32 arithmetic per sequence as the
-//! single-sequence decoder, so greedy tokens match [`NativeDecoder`]
-//! bit-for-bit at any batch size and any admission order.
+//! Exactness contract: the batched and single-sequence decoders run the
+//! *same* step function, and every kernel it touches keeps the
+//! matvec ≡ shared bitwise contract per row — so greedy tokens at
+//! `--kv-bits 32` match [`NativeDecoder`] bit-for-bit at any batch size
+//! and any admission order. `--kv-bits 8` slots
+//! ([`crate::backend::fwd::KvQ8`]) trade that bitwise guarantee for ~4×
+//! smaller KV slots under tolerance gates.
 //!
-//! [`QuantizedTensor::dequant_matmul_shared`]:
-//! crate::backend::QuantizedTensor::dequant_matmul_shared
+//! Per-request token selection goes through the core's
+//! [`TokenPicker`] hook: greedy argmax by default, seeded
+//! temperature/top-k sampling via [`BatchDecoder::submit_sampled`] —
+//! reproducible across runs and batch placements because the RNG stream is
+//! per request.
+//!
 //! [`NativeDecoder`]: crate::backend::NativeDecoder
 
 use std::collections::VecDeque;
 
-use crate::backend::native::{
-    argmax, causal_attend, mlp_forward, MlpRefs, NativeBackend, ResolvedModel,
+use crate::backend::fwd::{
+    decode_rows, DecodeScratch, KvBits, KvCache, KvStore, SampleCfg, StepRow, TokenPicker,
 };
-use crate::backend::simd::KernelScratch;
-use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
-use crate::tensor::Matrix;
+use crate::backend::native::{NativeBackend, ResolvedModel};
 
 /// One generation request queued for slot admission.
 #[derive(Debug, Clone)]
@@ -35,8 +37,10 @@ pub struct GenRequest {
     /// Caller-chosen identifier; outputs are reported against it.
     pub id: usize,
     pub prompt: Vec<u8>,
-    /// Number of tokens to generate (greedy).
+    /// Number of tokens to generate.
     pub max_new: usize,
+    /// Seeded sampling parameters; `None` decodes greedily.
+    pub sample: Option<SampleCfg>,
 }
 
 /// Validate that a request fits one preallocated KV slot. Shared by
@@ -82,6 +86,19 @@ pub struct BatchStats {
     pub peak_batch: usize,
     /// Requests completed.
     pub completed: usize,
+    /// Live sequences evicted by [`BatchDecoder::cancel`] before finishing.
+    pub evicted: usize,
+}
+
+/// What [`BatchDecoder::cancel`] found for the id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// Removed from the pending queue before ever occupying a slot.
+    Pending,
+    /// Evicted from a live KV slot (freed at this step boundary).
+    Evicted,
+    /// Unknown id (already finished or never submitted).
+    NotFound,
 }
 
 /// A sequence occupying a slot: its request plus decode progress.
@@ -94,11 +111,13 @@ struct Active {
     max_new: usize,
     /// Next KV position to write == this sequence's context length.
     pos: usize,
+    /// Token-selection hook (greedy or seeded sampling).
+    picker: TokenPicker,
 }
 
 impl Active {
     /// The token this sequence feeds on the next step: the next prompt
-    /// token during prefill, the last greedy token afterwards.
+    /// token during prefill, the last emitted token afterwards.
     fn next_input(&self) -> u8 {
         if self.fed < self.prompt.len() {
             self.prompt[self.fed]
@@ -108,83 +127,60 @@ impl Active {
     }
 }
 
-/// Per-slot KV storage: one `(capacity, d)` matrix per layer for K and V.
-/// Slots are recycled by resetting the position — attention only ever reads
-/// rows `0..=pos`, so stale rows from an evicted sequence are never touched.
-struct SlotCache {
-    k: Vec<Matrix>,
-    v: Vec<Matrix>,
-}
-
-/// Decoder-owned per-step scratch: the stacked activations, RoPE angles,
-/// attention context/scores, and MLP activation tiles every step used to
-/// allocate (`Matrix::zeros` per step and per layer) live here and are
-/// shape-`reset` instead — reallocation only happens when the live batch
-/// grows past its high-water mark. The [`KernelScratch`] serves the per-row
-/// MoE path's quantized matvecs.
-struct BatchScratch {
-    /// Residual stream, one row per live sequence.
-    h: Matrix,
-    /// Per-sequence RoPE angles (each row at its own position).
-    cos: Matrix,
-    sin: Matrix,
-    /// Attention context accumulator (zeroed per layer).
-    ctx: Matrix,
-    /// SwiGLU activation tile.
-    act: Matrix,
-    /// Per-row MoE output rows (switch-MoE routes per sequence).
-    moe_y: Matrix,
-    /// Attention score buffer (`pos + 1` entries, reused across rows).
-    att: Vec<f32>,
-    /// Fused-kernel scratch for the per-row MoE matvec path.
-    kernel: KernelScratch,
-}
-
-/// Continuous-batching greedy decoder over a [`NativeBackend`].
+/// Continuous-batching decoder over a [`NativeBackend`].
 ///
 /// ```text
 /// submit(..) → pending ─admit─▶ slots (≤ max_slots live) ─retire─▶ finished
-///                                  │ step(): one fused forward over
+///                                  │ step(): one fused decode_rows over
 ///                                  ▼         all live rows
 /// ```
 ///
 /// [`BatchDecoder::step`] admits pending requests into free slots, advances
-/// every live sequence by one token through fused stacked-row matmuls, and
+/// every live sequence by one token through the unified decode step, and
 /// retires sequences that produced their `max_new`-th token — freeing the
 /// slot for the next pending request on the following step.
+/// [`BatchDecoder::cancel`] evicts a live sequence at the step boundary
+/// (the serving front-end calls it when a client disconnects mid-stream).
 pub struct BatchDecoder<'a> {
     model: ResolvedModel<'a>,
     /// Per-slot KV capacity (positions).
     capacity: usize,
     slots: Vec<Option<Active>>,
-    caches: Vec<SlotCache>,
+    caches: Vec<KvCache>,
     pending: VecDeque<GenRequest>,
     finished: Vec<GenOutput>,
     /// `(request id, token)` pairs emitted by the most recent step, in slot
     /// order — the hook streaming consumers read between steps.
     emitted: Vec<(usize, u8)>,
-    scratch: BatchScratch,
+    scratch: DecodeScratch,
     stats: BatchStats,
 }
 
 impl<'a> BatchDecoder<'a> {
     /// Resolve the backend's weights and preallocate `max_slots` KV-cache
-    /// slots of `capacity` positions each.
+    /// slots of `capacity` positions each, at the backend's configured
+    /// `--kv-bits` precision.
     pub fn new(
         be: &'a NativeBackend,
         max_slots: usize,
         capacity: usize,
     ) -> anyhow::Result<BatchDecoder<'a>> {
+        BatchDecoder::new_with_kv(be, max_slots, capacity, be.kv_bits())
+    }
+
+    /// [`BatchDecoder::new`] with an explicit KV-cache precision.
+    pub fn new_with_kv(
+        be: &'a NativeBackend,
+        max_slots: usize,
+        capacity: usize,
+        kv_bits: KvBits,
+    ) -> anyhow::Result<BatchDecoder<'a>> {
         anyhow::ensure!(max_slots >= 1, "batch decoder needs at least one slot");
         let model = ResolvedModel::new(be)?;
         let cap = capacity.max(1);
-        let (layers, d) = (model.cfg.layers, model.cfg.d);
-        let caches = (0..max_slots)
-            .map(|_| SlotCache {
-                k: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
-                v: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
-            })
-            .collect();
+        let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
+        let caches: Vec<KvCache> =
+            (0..max_slots).map(|_| KvCache::new(kv_bits, layers, cap, d, heads)).collect();
         Ok(BatchDecoder {
             model,
             capacity: cap,
@@ -193,32 +189,54 @@ impl<'a> BatchDecoder<'a> {
             pending: VecDeque::new(),
             finished: Vec::new(),
             emitted: Vec::new(),
-            scratch: BatchScratch {
-                h: Matrix::zeros(0, 0),
-                cos: Matrix::zeros(0, 0),
-                sin: Matrix::zeros(0, 0),
-                ctx: Matrix::zeros(0, 0),
-                act: Matrix::zeros(0, 0),
-                moe_y: Matrix::zeros(0, 0),
-                att: Vec::with_capacity(cap),
-                kernel: KernelScratch::new(),
-            },
+            scratch: DecodeScratch::new(cap),
             stats: BatchStats::default(),
         })
     }
 
-    /// Queue a generation request. Requests that cannot fit a KV slot are
-    /// rejected up front with a clear error instead of overflowing the
-    /// cache mid-decode; `max_new == 0` completes immediately.
+    /// Queue a greedy generation request. Requests that cannot fit a KV
+    /// slot are rejected up front with a clear error instead of overflowing
+    /// the cache mid-decode; `max_new == 0` completes immediately.
     pub fn submit(&mut self, id: usize, prompt: &[u8], max_new: usize) -> anyhow::Result<()> {
+        self.submit_sampled(id, prompt, max_new, None)
+    }
+
+    /// [`BatchDecoder::submit`] with optional seeded sampling. `None` (or a
+    /// zero temperature) keeps the bit-identical greedy path.
+    pub fn submit_sampled(
+        &mut self,
+        id: usize,
+        prompt: &[u8],
+        max_new: usize,
+        sample: Option<SampleCfg>,
+    ) -> anyhow::Result<()> {
         ensure_fits(self.capacity, id, prompt.len(), max_new)?;
         if max_new == 0 {
             self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
             self.stats.completed += 1;
             return Ok(());
         }
-        self.pending.push_back(GenRequest { id, prompt: prompt.to_vec(), max_new });
+        self.pending.push_back(GenRequest { id, prompt: prompt.to_vec(), max_new, sample });
         Ok(())
+    }
+
+    /// Stop decoding request `id`: drop it from the pending queue, or free
+    /// its live KV slot at this step boundary. Unknown ids (finished or
+    /// never submitted) are a no-op. Cancelled requests produce no
+    /// [`GenOutput`].
+    pub fn cancel(&mut self, id: usize) -> CancelOutcome {
+        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+            self.pending.remove(i);
+            return CancelOutcome::Pending;
+        }
+        for slot in self.slots.iter_mut() {
+            if slot.as_ref().map(|a| a.id) == Some(id) {
+                *slot = None;
+                self.stats.evicted += 1;
+                return CancelOutcome::Evicted;
+            }
+        }
+        CancelOutcome::NotFound
     }
 
     /// Move queued requests into free slots (continuous admission).
@@ -237,18 +255,20 @@ impl<'a> BatchDecoder<'a> {
                 out: Vec::new(),
                 max_new: req.max_new,
                 pos: 0,
+                picker: TokenPicker::new(req.sample),
             });
         }
     }
 
     /// Record one step's logits for a live slot: advance its position,
-    /// greedily emit once the prompt is consumed, retire when done.
+    /// emit through the token picker once the prompt is consumed, retire
+    /// when done.
     fn advance(&mut self, si: usize, logits: &[f32]) {
         let a = self.slots[si].as_mut().expect("live slot");
         a.pos += 1;
         a.fed += 1;
         if a.fed >= a.prompt.len() {
-            let tok = argmax(logits) as u8;
+            let tok = a.picker.pick(logits);
             a.out.push(tok);
             self.emitted.push((a.id, tok));
             if a.out.len() >= a.max_new {
@@ -261,101 +281,31 @@ impl<'a> BatchDecoder<'a> {
     }
 
     /// One continuous-batching decode step: admit pending requests, advance
-    /// every live sequence by one token through fused stacked-row matmuls
+    /// every live sequence by one token through the unified fused step
     /// (one weight-tile unpack shared by all sequences), retire finished
     /// ones. Returns the number of sequences advanced; 0 means idle.
     pub fn step(&mut self) -> anyhow::Result<usize> {
         self.emitted.clear();
         self.admit();
-        let n_slots = self.slots.len();
-        let live: Vec<usize> = (0..n_slots).filter(|&i| self.slots[i].is_some()).collect();
-        if live.is_empty() {
+        let rows: Vec<StepRow> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(si, slot)| {
+                slot.as_ref().map(|a| StepRow { token: a.next_input(), pos: a.pos, slot: si })
+            })
+            .collect();
+        if rows.is_empty() {
             return Ok(0);
         }
-        let model = &self.model;
-        let cfg = model.cfg;
-        let (d, hd) = (cfg.d, cfg.head_dim());
-        let b = live.len();
+        let logits = decode_rows(&self.model, &rows, &mut self.caches, &mut self.scratch);
 
-        // Split borrows: slots/model are read; caches and the step scratch
-        // (all distinct fields of `self`) are written.
-        let slots = &self.slots;
-        let caches = &mut self.caches;
-        let BatchScratch { h, cos, sin, ctx, act, moe_y, att, kernel } = &mut self.scratch;
-
-        // Stack this step's input embeddings and RoPE angles, one row per
-        // live sequence (each at its own position), into reused scratch.
-        h.reset(b, d);
-        cos.reset(b, hd / 2);
-        sin.reset(b, hd / 2);
-        for (r, &si) in live.iter().enumerate() {
-            let a = slots[si].as_ref().expect("live slot");
-            h.row_mut(r).copy_from_slice(model.embed.row(a.next_input() as usize));
-            model.rope_angles_into(a.pos, cos.row_mut(r), sin.row_mut(r));
-        }
-
-        for (l, layer) in model.layers.iter().enumerate() {
-            // --- Attention block: fused projections over all live rows ---
-            let x = rmsnorm(h, layer.ln1, cfg.eps);
-            let q = layer.wq.decode_matmul(&x, model.threads);
-            let k = layer.wk.decode_matmul(&x, model.threads);
-            let v = layer.wv.decode_matmul(&x, model.threads);
-            let (q, k) = (rope(&q, cos, sin, cfg.heads), rope(&k, cos, sin, cfg.heads));
-
-            ctx.reset(b, d);
-            for (r, &si) in live.iter().enumerate() {
-                let pos = slots[si].as_ref().expect("live slot").pos;
-                let cache = &mut caches[si];
-                cache.k[l].row_mut(pos).copy_from_slice(k.row(r));
-                cache.v[l].row_mut(pos).copy_from_slice(v.row(r));
-                causal_attend(
-                    q.row(r),
-                    &cache.k[l],
-                    &cache.v[l],
-                    pos,
-                    cfg.heads,
-                    hd,
-                    ctx.row_mut(r),
-                    att,
-                );
-            }
-            let o = layer.wo.decode_matmul(ctx, model.threads);
-            add_inplace(h, &o);
-
-            // --- MLP block ---
-            let x = rmsnorm(h, layer.ln2, cfg.eps);
-            match &layer.mlp {
-                MlpRefs::Dense(w) => {
-                    let g = w.wg.decode_matmul(&x, model.threads);
-                    let u = w.wu.decode_matmul(&x, model.threads);
-                    act.reset(b, cfg.ffn);
-                    for i in 0..b * cfg.ffn {
-                        act.data[i] = silu(g.data[i]) * u.data[i];
-                    }
-                    let y = w.wd.decode_matmul(act, model.threads);
-                    add_inplace(h, &y);
-                }
-                moe => {
-                    // Switch-MoE routes per sequence; rows picking different
-                    // experts cannot share a matmul, so keep the per-row
-                    // path (bitwise equal to the single-sequence decoder).
-                    moe_y.reset(b, d);
-                    for r in 0..b {
-                        moe_y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r), kernel));
-                    }
-                    add_inplace(h, moe_y);
-                }
-            }
-        }
-
-        let hf = rmsnorm(h, model.ln_f, cfg.eps);
-        let logits = model.lm_head.decode_matmul(&hf, model.threads);
-
+        let b = rows.len();
         self.stats.steps += 1;
         self.stats.tokens += b;
         self.stats.peak_batch = self.stats.peak_batch.max(b);
-        for (r, &si) in live.iter().enumerate() {
-            self.advance(si, logits.row(r));
+        for (r, row) in rows.iter().enumerate() {
+            self.advance(row.slot, logits.row(r));
         }
         Ok(b)
     }
@@ -387,6 +337,16 @@ impl<'a> BatchDecoder<'a> {
     /// Per-slot KV capacity (positions).
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// KV-cache precision of this decoder's slots.
+    pub fn kv_bits(&self) -> KvBits {
+        self.caches.first().map(|c| c.kv_bits()).unwrap_or(KvBits::F32)
+    }
+
+    /// Resident bytes of one KV slot (what `--max-batch` multiplies).
+    pub fn kv_bytes_per_slot(&self) -> usize {
+        self.caches.first().map(|c| c.bytes()).unwrap_or(0)
     }
 
     /// Drain finished outputs without waiting for the queue to empty
@@ -517,5 +477,68 @@ mod tests {
             let single = nb.generate(p, n).unwrap();
             assert_eq!(got, &single, "prompt {:?}", String::from_utf8_lossy(p));
         }
+    }
+
+    #[test]
+    fn cancel_frees_slot_and_pending_and_skips_output() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 1, 32).unwrap();
+        dec.submit(0, b"live one", 20).unwrap();
+        dec.submit(1, b"queued", 5).unwrap();
+        dec.step().unwrap(); // request 0 occupies the only slot
+        assert_eq!(dec.live(), 1);
+        assert_eq!(dec.pending(), 1);
+        assert_eq!(dec.cancel(1), CancelOutcome::Pending);
+        assert_eq!(dec.pending(), 0);
+        assert_eq!(dec.cancel(0), CancelOutcome::Evicted);
+        assert_eq!(dec.live(), 0);
+        assert_eq!(dec.cancel(42), CancelOutcome::NotFound);
+        assert_eq!(dec.step().unwrap(), 0, "everything cancelled: idle");
+        assert!(dec.take_finished().is_empty(), "cancelled requests produce no output");
+        assert_eq!(dec.stats().evicted, 1, "only the live eviction counts");
+        // The freed slot is reusable.
+        dec.submit(2, b"after", 3).unwrap();
+        assert_eq!(dec.run().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn sampled_decode_is_seed_deterministic_across_placements() {
+        let nb = pico_backend();
+        // High temperature, no top-k cut: flat enough that two independent
+        // seed streams cannot plausibly coincide for 8 straight tokens.
+        let sample = Some(SampleCfg { temperature: 1.5, top_k: 0, seed: 2026 });
+        let solo = {
+            let mut dec = BatchDecoder::new(&nb, 1, 32).unwrap();
+            dec.submit_sampled(0, b"sampled text", 8, sample).unwrap();
+            dec.run().unwrap().remove(0).tokens
+        };
+        // Same request next to unrelated traffic, in a different slot order.
+        let mut dec = BatchDecoder::new(&nb, 3, 32).unwrap();
+        dec.submit(0, b"noise a", 6).unwrap();
+        dec.submit_sampled(1, b"sampled text", 8, sample).unwrap();
+        dec.submit_sampled(2, b"sampled text", 8, Some(SampleCfg { seed: 7, ..sample.unwrap() }))
+            .unwrap();
+        let outs = dec.run().unwrap();
+        assert_eq!(outs[1].tokens, solo, "seeded sampling must ignore batch placement");
+        assert_ne!(outs[2].tokens, solo, "a different seed should diverge");
+        // Greedy requests stay bit-identical to the unsampled path.
+        let greedy = nb.generate(b"noise a", 6).unwrap();
+        assert_eq!(outs[0].tokens, greedy);
+    }
+
+    #[test]
+    fn kv8_batched_decode_runs_and_shrinks_slots() {
+        let nb = pico_backend();
+        let d32 = BatchDecoder::new_with_kv(&nb, 2, 32, KvBits::F32).unwrap();
+        let mut d8 = BatchDecoder::new_with_kv(&nb, 2, 32, KvBits::Q8).unwrap();
+        assert_eq!(d8.kv_bits(), KvBits::Q8);
+        let ratio = d32.kv_bytes_per_slot() as f64 / d8.kv_bytes_per_slot() as f64;
+        assert!(ratio >= 3.0, "kv8 slot only {ratio:.2}x smaller");
+        d8.submit(0, b"kv8 batched", 6).unwrap();
+        d8.submit(1, b"second", 4).unwrap();
+        let outs = d8.run().unwrap();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].tokens.len(), 6);
+        assert_eq!(outs[1].tokens.len(), 4);
     }
 }

@@ -1,0 +1,1107 @@
+//! The unified transformer-math core: **one** copy of the block arithmetic
+//! (RMSNorm → RoPE MHA → residual → SwiGLU / switch-MoE → residual → final
+//! norm → lm_head) that every forward and decode path in the repo
+//! instantiates.
+//!
+//! Before this module existed the same math lived in four hand-synchronized
+//! copies — `model::forward::Forward::forward` (f32 reference),
+//! `NativeBackend::forward_with` (fused kernels), `NativeDecoder::step`
+//! (incremental single sequence), and `BatchDecoder::step` (continuous
+//! batching) — guarded only by parity tests. They are now thin wrappers
+//! over two entry points here:
+//!
+//! * [`forward_seq`] — the full-sequence forward, parameterized over
+//!   [`SeqModel`] (which dispatches every linear projection). The f32
+//!   reference implements it with `matmul_nt` plus activation
+//!   capture/fake-quant hooks; the native engine implements it with the
+//!   fused dequant kernels. Both produce **bit-identical** logits to the
+//!   pre-refactor copies: per-query attention over the full K/V matrices
+//!   accumulates in exactly the old loop order.
+//! * [`decode_rows`] — one fused decode step over stacked live rows (each
+//!   at its own position), parameterized over a [`KvStore`] per sequence
+//!   slot. The single-sequence decoder is the `rows.len() == 1` case; the
+//!   continuous batcher passes every live slot. Both inherit the
+//!   matvec ≡ shared-kernel bitwise contract, so greedy tokens at
+//!   `--kv-bits 32` are unchanged from the pre-refactor decoders.
+//!
+//! Linear dispatch is the [`LinearOp`] trait: [`Matrix`] is the f32
+//! reference implementation and [`QuantizedTensor`] the fused-quantized one
+//! (with [`KernelScratch`]-reusing matvecs); `LayerWeight` in
+//! [`crate::backend::native`] selects between them per layer.
+//!
+//! KV storage is the [`KvStore`] trait: [`KvF32`] keeps the pre-refactor
+//! full-precision cache (bit-identical attention), [`KvQ8`] stores 8-bit
+//! codes with per-head, per-position affine scales — roughly quartering
+//! decode KV memory per slot — and dequantizes on read through the
+//! SIMD-dispatched [`crate::backend::simd::dequant_u8_with`] kernel. The
+//! [`KvCache`] enum picks one at runtime from the `--kv-bits 32|8` flag
+//! ([`KvBits`]).
+//!
+//! Token selection is the [`TokenPicker`] hook: greedy argmax by default
+//! (bit-identical to the pre-refactor decoders) or seeded temperature/top-k
+//! sampling ([`SampleCfg`]) with a per-request RNG, so sampled sequences
+//! are reproducible across runs *and* across batch placements.
+
+use crate::backend::native::{MlpRefs, MlpWeights, ResolvedModel};
+use crate::backend::quantized::QuantizedTensor;
+use crate::backend::simd::{self, AlignedF32, KernelScratch};
+use crate::model::ModelConfig;
+use crate::tensor::matrix::dot;
+use crate::tensor::Matrix;
+
+// =====================================================================
+// Shared block math
+// =====================================================================
+
+/// SwiGLU's gate activation.
+#[inline]
+pub(crate) fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// `a += b` elementwise.
+pub(crate) fn add_inplace(a: &mut Matrix, b: &Matrix) {
+    for (x, &y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+/// RMSNorm with gain over a batch of rows.
+pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
+    let mut out = Matrix::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / x.cols as f32;
+        let r = 1.0 / (ms + eps).sqrt();
+        for (j, (&v, &g)) in row.iter().zip(gain).enumerate() {
+            out.data[i * x.cols + j] = v * r * g;
+        }
+    }
+    out
+}
+
+/// Split-half RoPE (matches `model.py::apply_rope`): row `p` of `x` is
+/// rotated by row `p` of the angle tables, so full-sequence forwards pass
+/// per-position tables and decode steps pass per-live-row tables.
+pub(crate) fn rope(x: &Matrix, cos: &Matrix, sin: &Matrix, heads: usize) -> Matrix {
+    let s = x.rows;
+    let hd = x.cols / heads;
+    let half = hd / 2;
+    let mut out = Matrix::zeros(s, x.cols);
+    for p in 0..s {
+        for h in 0..heads {
+            let off = h * hd;
+            for i in 0..half {
+                let (c, sn) = (cos.at(p, i), sin.at(p, i));
+                let x1 = x.at(p, off + i);
+                let x2 = x.at(p, off + half + i);
+                *out.at_mut(p, off + i) = x1 * c - x2 * sn;
+                *out.at_mut(p, off + half + i) = x2 * c + x1 * sn;
+            }
+        }
+    }
+    out
+}
+
+/// Causal attention for one query over K/V rows `0..=pos`, accumulating
+/// the per-head context into `ctx` (zeroed by the caller). `att` is a
+/// caller-owned score buffer (resized to `pos + 1` here) so the decode hot
+/// loops do not allocate per layer. This is the one attention inner loop:
+/// the full-sequence forward calls it per query position over the (S, d)
+/// K/V matrices, and [`KvF32::attend`] calls it over the cache rows.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn causal_attend(
+    q: &[f32],
+    kc: &Matrix,
+    vc: &Matrix,
+    pos: usize,
+    heads: usize,
+    hd: usize,
+    ctx: &mut [f32],
+    att: &mut Vec<f32>,
+) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    att.clear();
+    att.resize(pos + 1, 0.0);
+    for head in 0..heads {
+        let off = head * hd;
+        let qh = &q[off..off + hd];
+        let mut maxv = f32::NEG_INFINITY;
+        for ki in 0..=pos {
+            let krow = &kc.row(ki)[off..off + hd];
+            let mut dotv = 0.0f32;
+            for t in 0..hd {
+                dotv += qh[t] * krow[t];
+            }
+            att[ki] = dotv * scale;
+            maxv = maxv.max(att[ki]);
+        }
+        let mut denom = 0.0f32;
+        for a in att.iter_mut() {
+            *a = (*a - maxv).exp();
+            denom += *a;
+        }
+        for ki in 0..=pos {
+            let wgt = att[ki] / denom;
+            let vrow = &vc.row(ki)[off..off + hd];
+            for t in 0..hd {
+                ctx[off + t] += wgt * vrow[t];
+            }
+        }
+    }
+}
+
+/// Switch routing: softmax over expert logits, top-1 index and its gate.
+pub(crate) fn route_top1(logits: &[f32]) -> (usize, f32) {
+    let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&v| (v - maxv).exp()).collect();
+    let denom: f32 = exps.iter().sum();
+    let (top, _) = exps
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap();
+    (top, exps[top] / denom)
+}
+
+/// Dense or top-1-MoE MLP over one activation vector, reusing the caller's
+/// kernel scratch for every quantized matvec (the batched decoder's MoE
+/// rows route per sequence, so they take this per-row path).
+pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
+    match mlp {
+        MlpRefs::Dense(w) => expert_forward(w, x, scratch),
+        MlpRefs::Moe { router, experts } => {
+            let logits = router.matvec(x, scratch);
+            let (top, gate) = route_top1(&logits);
+            let y = expert_forward(&experts[top], x, scratch);
+            y.iter().map(|&v| gate * v).collect()
+        }
+    }
+}
+
+fn expert_forward(w: &MlpWeights, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
+    let g = w.wg.matvec(x, scratch);
+    let u = w.wu.matvec(x, scratch);
+    let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
+    w.wd.matvec(&act, scratch)
+}
+
+pub(crate) fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+// =====================================================================
+// LinearOp: one linear projection, three execution shapes
+// =====================================================================
+
+/// A linear layer `W` as the core consumes it: full-sequence matmul,
+/// single-row matvec, and the stacked-decode-row matmul (which must be
+/// bitwise equal to the matvec applied row by row — the contract that keeps
+/// batched and single-sequence decode in exact agreement).
+pub trait LinearOp {
+    /// Output features (rows of `W`).
+    fn out_features(&self) -> usize;
+
+    /// `y = x · Wᵀ` over a full-sequence batch with `threads` tile workers.
+    fn matmul(&self, x: &Matrix, threads: usize) -> Matrix;
+
+    /// `y = W · x` for one activation vector, with caller-owned kernel
+    /// scratch (the f32 reference needs none and ignores it).
+    fn matvec(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32>;
+
+    /// `y = x · Wᵀ` for stacked decode rows, bitwise equal per row to
+    /// [`LinearOp::matvec`].
+    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix;
+}
+
+/// The f32 reference implementation: a dense weight matrix.
+impl LinearOp for Matrix {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn matmul(&self, x: &Matrix, _threads: usize) -> Matrix {
+        x.matmul_nt(self)
+    }
+
+    fn matvec(&self, x: &[f32], _scratch: &mut KernelScratch) -> Vec<f32> {
+        (0..self.rows).map(|r| dot(x, self.row(r), x.len())).collect()
+    }
+
+    fn decode_matmul(&self, x: &Matrix, _threads: usize) -> Matrix {
+        let mut y = Matrix::zeros(x.rows, self.rows);
+        for r in 0..x.rows {
+            let xr = x.row(r);
+            for j in 0..self.rows {
+                y.data[r * self.rows + j] = dot(xr, self.row(j), x.cols);
+            }
+        }
+        y
+    }
+}
+
+/// The fused-quantized implementation: bit-packed codes executed by the
+/// dequant kernels, with [`KernelScratch`]-reusing matvecs.
+impl LinearOp for QuantizedTensor {
+    fn out_features(&self) -> usize {
+        self.rows
+    }
+
+    fn matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        self.dequant_matmul(x, threads)
+    }
+
+    fn matvec(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
+        self.dequant_matvec_with(x, scratch)
+    }
+
+    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+        self.dequant_matmul_shared(x, threads)
+    }
+}
+
+// =====================================================================
+// Full-sequence forward
+// =====================================================================
+
+/// Identifies one linear projection of the transformer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinId {
+    Wq(usize),
+    Wk(usize),
+    Wv(usize),
+    Wo(usize),
+    Gate(usize),
+    Up(usize),
+    Down(usize),
+    Router(usize),
+    ExpertGate(usize, usize),
+    ExpertUp(usize, usize),
+    ExpertDown(usize, usize),
+    LmHead,
+}
+
+impl LinId {
+    /// The weight-map key this projection has carried since the seed
+    /// (`layers.{l}.wq`, `layers.{l}.expert{e}.wg`, `lm_head`, …).
+    pub fn name(&self) -> String {
+        match *self {
+            LinId::Wq(l) => format!("layers.{l}.wq"),
+            LinId::Wk(l) => format!("layers.{l}.wk"),
+            LinId::Wv(l) => format!("layers.{l}.wv"),
+            LinId::Wo(l) => format!("layers.{l}.wo"),
+            LinId::Gate(l) => format!("layers.{l}.wg"),
+            LinId::Up(l) => format!("layers.{l}.wu"),
+            LinId::Down(l) => format!("layers.{l}.wd"),
+            LinId::Router(l) => format!("layers.{l}.router"),
+            LinId::ExpertGate(l, e) => format!("layers.{l}.expert{e}.wg"),
+            LinId::ExpertUp(l, e) => format!("layers.{l}.expert{e}.wu"),
+            LinId::ExpertDown(l, e) => format!("layers.{l}.expert{e}.wd"),
+            LinId::LmHead => "lm_head".to_string(),
+        }
+    }
+}
+
+/// Identifies one norm gain vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Gain {
+    Ln1(usize),
+    Ln2(usize),
+    Final,
+}
+
+impl Gain {
+    pub fn name(&self) -> String {
+        match *self {
+            Gain::Ln1(l) => format!("layers.{l}.ln1"),
+            Gain::Ln2(l) => format!("layers.{l}.ln2"),
+            Gain::Final => "ln_f".to_string(),
+        }
+    }
+}
+
+/// What [`forward_seq`] needs from a model: the config, embedding rows,
+/// norm gains, and a dispatcher for every linear projection. The f32
+/// reference threads activation capture / fake-quant through `linear`
+/// (hence `&mut self`); the native engine routes it to the per-layer
+/// [`LinearOp`].
+pub trait SeqModel {
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Embedding row for one token.
+    fn embed_row(&self, token: u8) -> anyhow::Result<&[f32]>;
+
+    /// Norm gain vector.
+    fn gain(&self, g: Gain) -> anyhow::Result<&[f32]>;
+
+    /// `y = x · Wᵀ` for the identified projection.
+    fn linear(&mut self, id: LinId, x: &Matrix) -> anyhow::Result<Matrix>;
+}
+
+/// Full-sequence forward for one sequence: `tokens` (length S) → logits
+/// `(S, vocab)`. This is the single source of the transformer block math;
+/// every instantiation (f32 reference, fused native) reproduces its
+/// pre-refactor logits bit-for-bit.
+pub fn forward_seq<M: SeqModel + ?Sized>(m: &mut M, tokens: &[u8]) -> anyhow::Result<Matrix> {
+    anyhow::ensure!(!tokens.is_empty(), "empty token sequence");
+    let cfg = m.cfg().clone();
+    let (s, d, hd) = (tokens.len(), cfg.d, cfg.head_dim());
+
+    // Embedding lookup.
+    let mut h = Matrix::zeros(s, d);
+    for (p, &tok) in tokens.iter().enumerate() {
+        h.row_mut(p).copy_from_slice(m.embed_row(tok)?);
+    }
+
+    // RoPE tables, one row per position.
+    let half = hd / 2;
+    let mut cos = Matrix::zeros(s, half);
+    let mut sin = Matrix::zeros(s, half);
+    for p in 0..s {
+        for i in 0..half {
+            let inv = (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64);
+            let ang = p as f64 * inv;
+            *cos.at_mut(p, i) = ang.cos() as f32;
+            *sin.at_mut(p, i) = ang.sin() as f32;
+        }
+    }
+
+    let mut att = Vec::with_capacity(s);
+    for l in 0..cfg.layers {
+        // --- Attention block ---
+        let x = rmsnorm(&h, m.gain(Gain::Ln1(l))?, cfg.eps);
+        let q = m.linear(LinId::Wq(l), &x)?;
+        let k = m.linear(LinId::Wk(l), &x)?;
+        let v = m.linear(LinId::Wv(l), &x)?;
+        let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+
+        // Per-query causal attention over the full K/V matrices — the same
+        // inner loop the decode paths run over their caches.
+        let mut ctx = Matrix::zeros(s, d);
+        for qi in 0..s {
+            causal_attend(q.row(qi), &k, &v, qi, cfg.heads, hd, ctx.row_mut(qi), &mut att);
+        }
+        let o = m.linear(LinId::Wo(l), &ctx)?;
+        add_inplace(&mut h, &o);
+
+        // --- MLP block ---
+        let x = rmsnorm(&h, m.gain(Gain::Ln2(l))?, cfg.eps);
+        let y = if cfg.n_experts == 0 {
+            let g = m.linear(LinId::Gate(l), &x)?;
+            let u = m.linear(LinId::Up(l), &x)?;
+            let mut act = Matrix::zeros(s, cfg.ffn);
+            for i in 0..s * cfg.ffn {
+                act.data[i] = silu(g.data[i]) * u.data[i];
+            }
+            m.linear(LinId::Down(l), &act)?
+        } else {
+            moe_seq(m, &x, l, &cfg)?
+        };
+        add_inplace(&mut h, &y);
+    }
+
+    let hf = rmsnorm(&h, m.gain(Gain::Final)?, cfg.eps);
+    m.linear(LinId::LmHead, &hf)
+}
+
+/// Switch-MoE MLP over a batch of rows: top-1 routing per row, one-row
+/// expert matmuls (rows picking different experts cannot share a matmul).
+fn moe_seq<M: SeqModel + ?Sized>(
+    m: &mut M,
+    x: &Matrix,
+    l: usize,
+    cfg: &ModelConfig,
+) -> anyhow::Result<Matrix> {
+    let logits = m.linear(LinId::Router(l), x)?;
+    let mut out = Matrix::zeros(x.rows, cfg.d);
+    for i in 0..x.rows {
+        let (top, gate) = route_top1(logits.row(i));
+        let xr = Matrix::from_vec(1, x.cols, x.row(i).to_vec());
+        let g = m.linear(LinId::ExpertGate(l, top), &xr)?;
+        let u = m.linear(LinId::ExpertUp(l, top), &xr)?;
+        let mut act = Matrix::zeros(1, cfg.ffn);
+        for j in 0..cfg.ffn {
+            act.data[j] = silu(g.data[j]) * u.data[j];
+        }
+        let y = m.linear(LinId::ExpertDown(l, top), &act)?;
+        for (o, &yv) in out.row_mut(i).iter_mut().zip(y.row(0)) {
+            *o = gate * yv;
+        }
+    }
+    Ok(out)
+}
+
+// =====================================================================
+// KV stores
+// =====================================================================
+
+/// KV-cache element precision, the `--kv-bits 32|8` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvBits {
+    /// Full-precision f32 cache: attention is bit-identical to the seed.
+    F32,
+    /// 8-bit codes with per-head, per-position affine scales (~4× smaller;
+    /// tolerance-gated, not bitwise).
+    Q8,
+}
+
+impl KvBits {
+    pub fn parse(s: &str) -> Option<KvBits> {
+        match s {
+            "32" | "f32" => Some(KvBits::F32),
+            "8" | "q8" | "u8" => Some(KvBits::Q8),
+            _ => None,
+        }
+    }
+
+    /// Stored bits per cache element.
+    pub fn bits(&self) -> u32 {
+        match self {
+            KvBits::F32 => 32,
+            KvBits::Q8 => 8,
+        }
+    }
+}
+
+/// Reusable attention scratch shared by every [`KvStore`] implementation:
+/// the per-head score buffer plus an aligned row for dequantized K/V
+/// segments, so quantized attends allocate nothing per step.
+#[derive(Default)]
+pub struct AttnScratch {
+    /// Attention score buffer (`pos + 1` entries).
+    pub att: Vec<f32>,
+    /// Dequantized K/V head-segment scratch (aligned for the SIMD kernels).
+    pub row: AlignedF32,
+}
+
+impl AttnScratch {
+    pub fn new(capacity: usize) -> AttnScratch {
+        AttnScratch { att: Vec::with_capacity(capacity), row: AlignedF32::new() }
+    }
+}
+
+/// Per-sequence KV storage as [`decode_rows`] consumes it: write the K/V
+/// projections for a position, then attend a query over everything stored
+/// so far. Implementations own their precision; `bytes` is what one slot
+/// costs resident, which the serving metrics report per slot.
+pub trait KvStore {
+    /// Record the K/V projections (length `d` each) for `layer` at `pos`.
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Causal attention for one query over positions `0..=pos` of `layer`,
+    /// accumulating per-head context into `ctx` (zeroed by the caller).
+    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch);
+
+    /// Element precision of this store.
+    fn kv_bits(&self) -> KvBits;
+
+    /// Resident bytes of this store (one sequence slot).
+    fn bytes(&self) -> usize;
+}
+
+/// Full-precision per-slot cache: one `(capacity, d)` matrix per layer for
+/// K and V. Attention runs the exact pre-refactor arithmetic
+/// ([`causal_attend`]), so `--kv-bits 32` decode is bit-identical to the
+/// seed. Slots are recycled by resetting the position — attention only
+/// ever reads rows `0..=pos`, so stale rows are never touched.
+pub struct KvF32 {
+    heads: usize,
+    hd: usize,
+    k: Vec<Matrix>,
+    v: Vec<Matrix>,
+}
+
+impl KvF32 {
+    pub fn new(layers: usize, capacity: usize, d: usize, heads: usize) -> KvF32 {
+        KvF32 {
+            heads,
+            hd: d / heads,
+            k: (0..layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+            v: (0..layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+        }
+    }
+}
+
+impl KvStore for KvF32 {
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self.k[layer].row_mut(pos).copy_from_slice(k);
+        self.v[layer].row_mut(pos).copy_from_slice(v);
+    }
+
+    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
+        causal_attend(q, &self.k[layer], &self.v[layer], pos, self.heads, self.hd, ctx, &mut s.att);
+    }
+
+    fn kv_bits(&self) -> KvBits {
+        KvBits::F32
+    }
+
+    fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|m| m.data.len() * 4).sum()
+    }
+}
+
+/// 8-bit per-slot cache: codes laid out `[layer][pos][d]` with one affine
+/// `(scale, min)` pair per `(layer, pos, head)` — `value = min + scale *
+/// code`. Writes quantize each head segment to its own range (the per-head
+/// scales are what keep outlier heads from poisoning the rest, the same
+/// observation OWQ makes for weight channels); reads dequantize head
+/// segments through the SIMD-dispatched
+/// [`crate::backend::simd::dequant_u8_with`] kernel and reduce with the
+/// dispatched dot. Versus the f32 store this is `4d / (d + 8·heads)` ≈ 3.2–4×
+/// smaller per slot.
+pub struct KvQ8 {
+    capacity: usize,
+    d: usize,
+    heads: usize,
+    hd: usize,
+    k_codes: Vec<u8>,
+    v_codes: Vec<u8>,
+    k_scale: Vec<f32>,
+    k_min: Vec<f32>,
+    v_scale: Vec<f32>,
+    v_min: Vec<f32>,
+}
+
+impl KvQ8 {
+    pub fn new(layers: usize, capacity: usize, d: usize, heads: usize) -> KvQ8 {
+        debug_assert_eq!(d % heads, 0, "head_dim must divide d");
+        let elems = layers * capacity * d;
+        let affines = layers * capacity * heads;
+        KvQ8 {
+            capacity,
+            d,
+            heads,
+            hd: d / heads,
+            k_codes: vec![0; elems],
+            v_codes: vec![0; elems],
+            k_scale: vec![0.0; affines],
+            k_min: vec![0.0; affines],
+            v_scale: vec![0.0; affines],
+            v_min: vec![0.0; affines],
+        }
+    }
+
+    /// Quantize one row (`x.len() == d`) into per-head u8 codes + affines.
+    fn quant_row(
+        codes: &mut [u8],
+        scales: &mut [f32],
+        mins: &mut [f32],
+        x: &[f32],
+        heads: usize,
+        hd: usize,
+    ) {
+        for h in 0..heads {
+            let seg = &x[h * hd..(h + 1) * hd];
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for &v in seg {
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let scale = (hi - lo) / 255.0;
+            // Degenerate segment (constant values): any code decodes to lo.
+            let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            scales[h] = scale;
+            mins[h] = lo;
+            for (c, &v) in codes[h * hd..(h + 1) * hd].iter_mut().zip(seg) {
+                // `as u8` saturates, so rounding past 255 cannot wrap.
+                *c = ((v - lo) * inv + 0.5) as u8;
+            }
+        }
+    }
+}
+
+impl KvStore for KvQ8 {
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let idx = layer * self.capacity + pos;
+        let (c0, a0) = (idx * self.d, idx * self.heads);
+        KvQ8::quant_row(
+            &mut self.k_codes[c0..c0 + self.d],
+            &mut self.k_scale[a0..a0 + self.heads],
+            &mut self.k_min[a0..a0 + self.heads],
+            k,
+            self.heads,
+            self.hd,
+        );
+        KvQ8::quant_row(
+            &mut self.v_codes[c0..c0 + self.d],
+            &mut self.v_scale[a0..a0 + self.heads],
+            &mut self.v_min[a0..a0 + self.heads],
+            v,
+            self.heads,
+            self.hd,
+        );
+    }
+
+    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
+        let (d, hd, heads) = (self.d, self.hd, self.heads);
+        let scale = 1.0 / (hd as f32).sqrt();
+        let isa = simd::active();
+        let base = layer * self.capacity;
+        let AttnScratch { att, row } = s;
+        att.clear();
+        att.resize(pos + 1, 0.0);
+        row.resize(hd);
+        for head in 0..heads {
+            let off = head * hd;
+            let qh = &q[off..off + hd];
+            let mut maxv = f32::NEG_INFINITY;
+            for ki in 0..=pos {
+                let idx = base + ki;
+                let codes = &self.k_codes[idx * d + off..idx * d + off + hd];
+                simd::dequant_u8_with(
+                    isa,
+                    codes,
+                    self.k_scale[idx * heads + head],
+                    self.k_min[idx * heads + head],
+                    row.as_mut_slice(),
+                );
+                att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
+                maxv = maxv.max(att[ki]);
+            }
+            let mut denom = 0.0f32;
+            for a in att.iter_mut() {
+                *a = (*a - maxv).exp();
+                denom += *a;
+            }
+            for ki in 0..=pos {
+                let idx = base + ki;
+                let wgt = att[ki] / denom;
+                let codes = &self.v_codes[idx * d + off..idx * d + off + hd];
+                simd::dequant_u8_with(
+                    isa,
+                    codes,
+                    self.v_scale[idx * heads + head],
+                    self.v_min[idx * heads + head],
+                    row.as_mut_slice(),
+                );
+                let vrow = row.as_slice();
+                for t in 0..hd {
+                    ctx[off + t] += wgt * vrow[t];
+                }
+            }
+        }
+    }
+
+    fn kv_bits(&self) -> KvBits {
+        KvBits::Q8
+    }
+
+    fn bytes(&self) -> usize {
+        self.k_codes.len()
+            + self.v_codes.len()
+            + 4 * (self.k_scale.len() + self.k_min.len() + self.v_scale.len() + self.v_min.len())
+    }
+}
+
+/// Runtime-selected KV store for one sequence slot (`--kv-bits 32|8`).
+pub enum KvCache {
+    F32(KvF32),
+    Q8(KvQ8),
+}
+
+impl KvCache {
+    pub fn new(bits: KvBits, layers: usize, capacity: usize, d: usize, heads: usize) -> KvCache {
+        match bits {
+            KvBits::F32 => KvCache::F32(KvF32::new(layers, capacity, d, heads)),
+            KvBits::Q8 => KvCache::Q8(KvQ8::new(layers, capacity, d, heads)),
+        }
+    }
+}
+
+impl KvStore for KvCache {
+    fn write(&mut self, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        match self {
+            KvCache::F32(c) => c.write(layer, pos, k, v),
+            KvCache::Q8(c) => c.write(layer, pos, k, v),
+        }
+    }
+
+    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
+        match self {
+            KvCache::F32(c) => c.attend(layer, q, pos, ctx, s),
+            KvCache::Q8(c) => c.attend(layer, q, pos, ctx, s),
+        }
+    }
+
+    fn kv_bits(&self) -> KvBits {
+        match self {
+            KvCache::F32(c) => c.kv_bits(),
+            KvCache::Q8(c) => c.kv_bits(),
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            KvCache::F32(c) => c.bytes(),
+            KvCache::Q8(c) => c.bytes(),
+        }
+    }
+}
+
+// =====================================================================
+// Fused decode step
+// =====================================================================
+
+/// One live row of a fused decode step: the token it feeds, its position,
+/// and which cache slot it owns.
+#[derive(Debug, Clone, Copy)]
+pub struct StepRow {
+    pub token: u8,
+    pub pos: usize,
+    pub slot: usize,
+}
+
+/// Decoder-owned per-step scratch: the stacked activations, RoPE angles,
+/// attention context, and MLP tiles every step reuses (`Matrix::reset`
+/// instead of reallocation), plus the attention and kernel scratch shared
+/// across layers.
+pub struct DecodeScratch {
+    /// Residual stream, one row per live sequence.
+    h: Matrix,
+    /// Per-sequence RoPE angles (each row at its own position).
+    cos: Matrix,
+    sin: Matrix,
+    /// Attention context accumulator (zeroed per layer).
+    ctx: Matrix,
+    /// SwiGLU activation tile.
+    act: Matrix,
+    /// Per-row MoE output rows (switch-MoE routes per sequence).
+    moe_y: Matrix,
+    /// Attention score + dequant-row scratch.
+    attn: AttnScratch,
+    /// Fused-kernel scratch for the per-row MoE matvec path.
+    kernel: KernelScratch,
+}
+
+impl DecodeScratch {
+    pub fn new(capacity: usize) -> DecodeScratch {
+        DecodeScratch {
+            h: Matrix::zeros(0, 0),
+            cos: Matrix::zeros(0, 0),
+            sin: Matrix::zeros(0, 0),
+            ctx: Matrix::zeros(0, 0),
+            act: Matrix::zeros(0, 0),
+            moe_y: Matrix::zeros(0, 0),
+            attn: AttnScratch::new(capacity),
+            kernel: KernelScratch::new(),
+        }
+    }
+}
+
+/// Stacked-rows linear for one decode step. The batch-of-one case takes
+/// the matvec fast path — decoder-owned [`KernelScratch`], so the token
+/// hot path performs no per-call unpack/fold allocations — while larger
+/// batches amortize one weight-row unpack across all live rows through
+/// the shared kernel. Bitwise-identical either way (matvec ≡ shared per
+/// row), so which path ran can never change tokens.
+fn decode_linear<L: LinearOp + ?Sized>(
+    w: &L,
+    x: &Matrix,
+    threads: usize,
+    kernel: &mut KernelScratch,
+) -> Matrix {
+    if x.rows == 1 {
+        let y = w.matvec(x.row(0), kernel);
+        let cols = y.len();
+        Matrix::from_vec(1, cols, y)
+    } else {
+        w.decode_matmul(x, threads)
+    }
+}
+
+/// One fused decode step over stacked live rows: embed each row's token,
+/// run every transformer block with fused stacked-row matmuls (one weight
+/// tile unpack shared by all rows; batch 1 takes the scratch-reusing
+/// matvec path), write/attend each row's [`KvStore`], and return
+/// next-token logits, one row per input row.
+///
+/// The single-sequence decoder is the `rows.len() == 1` instantiation; the
+/// continuous batcher passes all live slots. Every kernel this touches
+/// keeps the matvec ≡ shared bitwise contract per row, so the two callers
+/// agree exactly — at any batch size and any admission order — and both
+/// reproduce the pre-refactor decoders at `--kv-bits 32`.
+pub(crate) fn decode_rows<K: KvStore>(
+    model: &ResolvedModel,
+    rows: &[StepRow],
+    caches: &mut [K],
+    scratch: &mut DecodeScratch,
+) -> Matrix {
+    let cfg = model.cfg;
+    let (d, hd) = (cfg.d, cfg.head_dim());
+    let b = rows.len();
+
+    let DecodeScratch { h, cos, sin, ctx, act, moe_y, attn, kernel } = scratch;
+
+    // Stack this step's input embeddings and RoPE angles, one row per live
+    // sequence (each at its own position), into reused scratch.
+    h.reset(b, d);
+    cos.reset(b, hd / 2);
+    sin.reset(b, hd / 2);
+    for (r, row) in rows.iter().enumerate() {
+        h.row_mut(r).copy_from_slice(model.embed.row(row.token as usize));
+        model.rope_angles_into(row.pos, cos.row_mut(r), sin.row_mut(r));
+    }
+
+    for (l, layer) in model.layers.iter().enumerate() {
+        // --- Attention block: fused projections over all live rows ---
+        let x = rmsnorm(h, layer.ln1, cfg.eps);
+        let q = decode_linear(layer.wq, &x, model.threads, kernel);
+        let k = decode_linear(layer.wk, &x, model.threads, kernel);
+        let v = decode_linear(layer.wv, &x, model.threads, kernel);
+        let (q, k) = (rope(&q, cos, sin, cfg.heads), rope(&k, cos, sin, cfg.heads));
+
+        ctx.reset(b, d);
+        for (r, row) in rows.iter().enumerate() {
+            let cache = &mut caches[row.slot];
+            cache.write(l, row.pos, k.row(r), v.row(r));
+            cache.attend(l, q.row(r), row.pos, ctx.row_mut(r), attn);
+        }
+        let o = decode_linear(layer.wo, ctx, model.threads, kernel);
+        add_inplace(h, &o);
+
+        // --- MLP block ---
+        let x = rmsnorm(h, layer.ln2, cfg.eps);
+        match &layer.mlp {
+            MlpRefs::Dense(w) => {
+                let g = decode_linear(w.wg, &x, model.threads, kernel);
+                let u = decode_linear(w.wu, &x, model.threads, kernel);
+                act.reset(b, cfg.ffn);
+                for i in 0..b * cfg.ffn {
+                    act.data[i] = silu(g.data[i]) * u.data[i];
+                }
+                let y = decode_linear(w.wd, act, model.threads, kernel);
+                add_inplace(h, &y);
+            }
+            moe => {
+                // Switch-MoE routes per sequence; rows picking different
+                // experts cannot share a matmul, so keep the per-row path
+                // (bitwise equal to the single-sequence decoder).
+                moe_y.reset(b, d);
+                for r in 0..b {
+                    moe_y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r), kernel));
+                }
+                add_inplace(h, moe_y);
+            }
+        }
+    }
+
+    let hf = rmsnorm(h, model.ln_f, cfg.eps);
+    decode_linear(model.lm_head, &hf, model.threads, kernel)
+}
+
+// =====================================================================
+// Token selection
+// =====================================================================
+
+/// Seeded sampling parameters for one request. `temperature == 0` (or an
+/// absent config) means greedy argmax — the bit-identical default.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleCfg {
+    /// Softmax temperature; must be > 0 to sample.
+    pub temperature: f32,
+    /// Keep only the `top_k` most likely tokens (0 = no cut).
+    pub top_k: usize,
+    /// RNG seed; the stream is per-request, so results do not depend on
+    /// batch placement or admission order.
+    pub seed: u64,
+}
+
+/// The unified core's token-selection hook: every decoder funnels its
+/// next-token choice through one of these, so sampling lands once instead
+/// of per decode path.
+#[derive(Debug, Clone)]
+pub enum TokenPicker {
+    /// Greedy argmax (the default; bit-identical to the seed decoders).
+    Greedy,
+    /// Seeded temperature/top-k sampling with a per-request RNG state.
+    Sample { cfg: SampleCfg, state: u64 },
+}
+
+impl TokenPicker {
+    pub fn new(sample: Option<SampleCfg>) -> TokenPicker {
+        match sample {
+            // Subnormal temperatures would overflow 1/T to inf and poison
+            // the softmax with NaN; anything that small means greedy anyway.
+            Some(cfg) if cfg.temperature > 0.0 && (1.0 / cfg.temperature).is_finite() => {
+                TokenPicker::Sample { cfg, state: cfg.seed }
+            }
+            _ => TokenPicker::Greedy,
+        }
+    }
+
+    /// Pick the next token from a logits row. Greedy is pure argmax;
+    /// sampling advances this picker's own RNG once per call, so a
+    /// request's token stream depends only on (logits, seed) — never on
+    /// which slot or step the batcher ran it in.
+    pub fn pick(&mut self, logits: &[f32]) -> u8 {
+        match self {
+            TokenPicker::Greedy => argmax(logits) as u8,
+            TokenPicker::Sample { cfg, state } => {
+                let inv_t = 1.0 / cfg.temperature;
+                // Stable descending sort: ties break by ascending index, so
+                // the kept set is deterministic.
+                let mut order: Vec<usize> = (0..logits.len()).collect();
+                order.sort_by(|&a, &b| {
+                    logits[b].partial_cmp(&logits[a]).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                let k = if cfg.top_k == 0 { order.len() } else { cfg.top_k.min(order.len()) };
+                let kept = &order[..k.max(1)];
+                let maxv = logits[kept[0]];
+                let probs: Vec<f64> =
+                    kept.iter().map(|&i| (((logits[i] - maxv) * inv_t) as f64).exp()).collect();
+                let denom: f64 = probs.iter().sum();
+                let u = splitmix(state) as f64 / (u64::MAX as f64 + 1.0) * denom;
+                let mut acc = 0.0f64;
+                for (j, p) in probs.iter().enumerate() {
+                    acc += p;
+                    if u < acc {
+                        return kept[j] as u8;
+                    }
+                }
+                kept[kept.len() - 1] as u8
+            }
+        }
+    }
+}
+
+/// SplitMix64: advances the state and returns a uniform u64.
+fn splitmix(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn kv_bits_parse_and_width() {
+        assert_eq!(KvBits::parse("32"), Some(KvBits::F32));
+        assert_eq!(KvBits::parse("8"), Some(KvBits::Q8));
+        assert_eq!(KvBits::parse("16"), None);
+        assert_eq!(KvBits::F32.bits(), 32);
+        assert_eq!(KvBits::Q8.bits(), 8);
+    }
+
+    #[test]
+    fn kv_q8_roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(5);
+        let (layers, cap, d, heads) = (2usize, 6usize, 64usize, 2usize);
+        let hd = d / heads;
+        let mut store = KvQ8::new(layers, cap, d, heads);
+        let row_k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+        let row_v: Vec<f32> = (0..d).map(|_| rng.normal_f32(1.0, 0.5)).collect();
+        store.write(1, 3, &row_k, &row_v);
+        let idx = cap + 3;
+        for h in 0..heads {
+            let (s, m) = (store.k_scale[idx * heads + h], store.k_min[idx * heads + h]);
+            for t in 0..hd {
+                let code = store.k_codes[idx * d + h * hd + t] as f32;
+                let back = m + s * code;
+                let err = (back - row_k[h * hd + t]).abs();
+                assert!(err <= s * 0.5 + 1e-6, "head {h} elem {t}: err {err} > step/2 {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn kv_q8_handles_constant_segments() {
+        let (d, heads) = (8usize, 2usize);
+        let mut store = KvQ8::new(1, 2, d, heads);
+        store.write(0, 0, &[3.5; 8], &[0.0; 8]);
+        let mut ctx = vec![0.0f32; d];
+        let mut s = AttnScratch::new(2);
+        let q = vec![1.0f32; d];
+        store.attend(0, &q, 0, &mut ctx, &mut s);
+        assert!(ctx.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kv_q8_is_at_least_3x_smaller_than_f32() {
+        for (d, heads) in [(64usize, 2usize), (128, 4), (256, 8)] {
+            let f = KvF32::new(4, 128, d, heads);
+            let q = KvQ8::new(4, 128, d, heads);
+            let ratio = f.bytes() as f64 / q.bytes() as f64;
+            assert!(ratio >= 3.0, "d={d} heads={heads}: only {ratio:.2}x smaller");
+        }
+    }
+
+    #[test]
+    fn kv_q8_attention_approximates_f32_attention() {
+        let mut rng = Rng::new(17);
+        let (layers, cap, d, heads) = (1usize, 8usize, 64usize, 2usize);
+        let mut f32s = KvF32::new(layers, cap, d, heads);
+        let mut q8s = KvQ8::new(layers, cap, d, heads);
+        for pos in 0..cap {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            f32s.write(0, pos, &k, &v);
+            q8s.write(0, pos, &k, &v);
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut s = AttnScratch::new(cap);
+        let mut ctx_f = vec![0.0f32; d];
+        let mut ctx_q = vec![0.0f32; d];
+        f32s.attend(0, &q, cap - 1, &mut ctx_f, &mut s);
+        q8s.attend(0, &q, cap - 1, &mut ctx_q, &mut s);
+        let max_diff = ctx_f.iter().zip(&ctx_q).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff < 0.1, "q8 attention drifted {max_diff} from f32");
+        assert!(max_diff > 0.0, "q8 attention suspiciously exact");
+    }
+
+    #[test]
+    fn greedy_picker_is_argmax_and_sampler_is_seed_deterministic() {
+        let logits: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut greedy = TokenPicker::new(None);
+        assert_eq!(greedy.pick(&logits) as usize, argmax(&logits));
+        // temperature 0 stays greedy, and so does a subnormal temperature
+        // (1/T would overflow to inf and NaN the softmax).
+        let mut t0 = TokenPicker::new(Some(SampleCfg { temperature: 0.0, top_k: 4, seed: 9 }));
+        assert_eq!(t0.pick(&logits) as usize, argmax(&logits));
+        let mut tiny = TokenPicker::new(Some(SampleCfg { temperature: 1e-39, top_k: 0, seed: 1 }));
+        assert_eq!(tiny.pick(&logits) as usize, argmax(&logits));
+
+        let cfg = SampleCfg { temperature: 0.8, top_k: 8, seed: 1234 };
+        let mut a = TokenPicker::new(Some(cfg));
+        let mut b = TokenPicker::new(Some(cfg));
+        let seq_a: Vec<u8> = (0..32).map(|_| a.pick(&logits)).collect();
+        let seq_b: Vec<u8> = (0..32).map(|_| b.pick(&logits)).collect();
+        assert_eq!(seq_a, seq_b, "same seed must reproduce the same stream");
+        let mut c = TokenPicker::new(Some(SampleCfg { seed: 99, ..cfg }));
+        let seq_c: Vec<u8> = (0..32).map(|_| c.pick(&logits)).collect();
+        assert_ne!(seq_a, seq_c, "different seeds should diverge");
+    }
+
+    #[test]
+    fn sampler_respects_top_k() {
+        let mut logits = vec![0.0f32; 16];
+        logits[3] = 5.0;
+        logits[7] = 4.0;
+        let cfg = SampleCfg { temperature: 1.0, top_k: 2, seed: 7 };
+        let mut p = TokenPicker::new(Some(cfg));
+        for _ in 0..64 {
+            let tok = p.pick(&logits);
+            assert!(tok == 3 || tok == 7, "top-2 sampling drew token {tok}");
+        }
+    }
+
+    #[test]
+    fn lin_and_gain_names_match_the_weight_map_keys() {
+        assert_eq!(LinId::Wq(2).name(), "layers.2.wq");
+        assert_eq!(LinId::Router(0).name(), "layers.0.router");
+        assert_eq!(LinId::ExpertDown(1, 3).name(), "layers.1.expert3.wd");
+        assert_eq!(LinId::LmHead.name(), "lm_head");
+        assert_eq!(Gain::Ln2(4).name(), "layers.4.ln2");
+        assert_eq!(Gain::Final.name(), "ln_f");
+    }
+}

@@ -19,11 +19,13 @@
 //! falls back to the native engine when either is missing.
 
 pub mod batch;
+pub mod fwd;
 pub mod native;
 pub mod quantized;
 pub mod simd;
 
-pub use batch::{ensure_fits, BatchDecoder, BatchStats, GenOutput, GenRequest};
+pub use batch::{ensure_fits, BatchDecoder, BatchStats, CancelOutcome, GenOutput, GenRequest};
+pub use fwd::{KvBits, KvStore, LinearOp, SampleCfg, TokenPicker};
 pub use native::{NativeBackend, NativeDecoder};
 pub use quantized::QuantizedTensor;
 pub use simd::{kernel_name, Isa};
@@ -178,6 +180,9 @@ pub struct BackendSpec {
     /// Serving concurrency cap (scoring batch + generation slots); the
     /// backend default applies when unset.
     pub max_batch: Option<usize>,
+    /// KV-cache precision for the decode paths (`--kv-bits 32|8`; native
+    /// only — 32 keeps decode bit-identical, 8 quarters per-slot memory).
+    pub kv_bits: KvBits,
 }
 
 impl BackendSpec {
@@ -189,6 +194,7 @@ impl BackendSpec {
             quantized: None,
             quantize: None,
             max_batch: None,
+            kv_bits: KvBits::F32,
         }
     }
 }
@@ -237,7 +243,9 @@ pub fn build_native(spec: &BackendSpec) -> anyhow::Result<NativeBackend> {
     let max_batch = spec.max_batch.unwrap_or(native::DEFAULT_MAX_BATCH);
     if let Some(path) = &spec.quantized {
         let qm = QuantizedModel::load(path)?;
-        return Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch));
+        return Ok(NativeBackend::from_quantized(&qm)
+            .with_max_batch(max_batch)
+            .with_kv_bits(spec.kv_bits));
     }
     let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
     if let Some(qcfg) = &spec.quantize {
@@ -255,9 +263,9 @@ pub fn build_native(spec: &BackendSpec) -> anyhow::Result<NativeBackend> {
             },
             no_overhead: false,
         };
-        return pipeline::run_to_backend(&mw, qcfg, &opts, max_batch);
+        return pipeline::run_to_backend(&mw, qcfg, &opts, max_batch, spec.kv_bits);
     }
-    Ok(NativeBackend::from_weights(&mw).with_max_batch(max_batch))
+    Ok(NativeBackend::from_weights(&mw).with_max_batch(max_batch).with_kv_bits(spec.kv_bits))
 }
 
 #[cfg(test)]

@@ -5,32 +5,36 @@
 //! map of dense effective weights), [`NativeBackend`] holds each linear as a
 //! [`LayerWeight`] — either a dense matrix or a bit-packed
 //! [`QuantizedTensor`] — and routes every projection through the fused
-//! dequant kernels. The layer-by-layer math (RMSNorm → RoPE MHA → residual →
-//! SwiGLU / switch-MoE → residual → final norm → lm_head) mirrors the
-//! reference operation-for-operation so logits agree to float tolerance.
+//! dequant kernels. The layer-by-layer math itself lives **once** in
+//! [`crate::backend::fwd`]: the full-sequence forward here is a thin
+//! [`SeqModel`] instantiation of [`fwd::forward_seq`], so logits agree with
+//! the reference to float tolerance (bit-identically on dense weights).
 //!
-//! [`NativeDecoder`] adds the autoregressive path: per-layer K/V caches are
-//! preallocated at construction and each step runs single-row matvecs
-//! against the packed weights — `generate` needs no artifacts, no XLA, and
+//! [`NativeDecoder`] adds the autoregressive path: a preallocated
+//! [`KvCache`] slot (`--kv-bits 32|8`) driven through the shared
+//! [`fwd::decode_rows`] step — `generate` needs no artifacts, no XLA, and
 //! no Python. Its continuous-batching sibling,
 //! [`crate::backend::BatchDecoder`], shares the resolved weight references
-//! ([`ResolvedModel`]) and the attention/MLP helpers here, so the two decode
-//! paths produce bit-identical tokens.
+//! ([`ResolvedModel`]) and the *same* decode-step function, so the two
+//! decode paths produce bit-identical tokens by construction.
 
 use std::collections::BTreeMap;
 
 use crate::backend::batch::BatchDecoder;
+use crate::backend::fwd::{
+    self, decode_rows, DecodeScratch, Gain, KvBits, KvCache, KvStore, LinId, LinearOp, SeqModel,
+    StepRow,
+};
 use crate::backend::quantized::QuantizedTensor;
 use crate::backend::simd::KernelScratch;
 use crate::backend::InferenceBackend;
 use crate::eval::LogitsEngine;
-use crate::model::forward::{add_inplace, rmsnorm, rope, silu};
 use crate::model::{ModelConfig, ModelWeights, QuantizedModel};
-use crate::tensor::matrix::dot;
 use crate::tensor::Matrix;
 use crate::util::threadpool;
 
-/// One linear layer's runtime representation.
+/// One linear layer's runtime representation: the per-layer selector
+/// between the core's two [`LinearOp`] implementations.
 #[derive(Debug, Clone)]
 pub enum LayerWeight {
     /// Dense f32 (embeddings, FP serving, or fallback for representations
@@ -41,58 +45,40 @@ pub enum LayerWeight {
 }
 
 impl LayerWeight {
-    pub fn out_features(&self) -> usize {
-        match self {
-            LayerWeight::Dense(w) => w.rows,
-            LayerWeight::Quant(q) => q.rows,
-        }
-    }
-
     pub fn is_quantized(&self) -> bool {
         matches!(self, LayerWeight::Quant(_))
     }
+}
 
-    /// `y = x · Wᵀ` for a batch of activation rows.
+/// [`LayerWeight`] delegates every execution shape to the [`LinearOp`]
+/// implementation of its variant — f32-reference ([`Matrix`]) or
+/// fused-quantized ([`QuantizedTensor`]).
+impl LinearOp for LayerWeight {
+    fn out_features(&self) -> usize {
+        match self {
+            LayerWeight::Dense(w) => w.out_features(),
+            LayerWeight::Quant(q) => q.out_features(),
+        }
+    }
+
     fn matmul(&self, x: &Matrix, threads: usize) -> Matrix {
         match self {
-            LayerWeight::Dense(w) => x.matmul_nt(w),
-            LayerWeight::Quant(q) => q.dequant_matmul(x, threads),
+            LayerWeight::Dense(w) => LinearOp::matmul(w, x, threads),
+            LayerWeight::Quant(q) => LinearOp::matmul(q, x, threads),
         }
     }
 
-    /// `y = W · x` for one activation vector, with caller-owned kernel
-    /// scratch — the decoders keep one scratch per session so quantized
-    /// matvecs run without per-call unpack/fold allocations and the SIMD
-    /// kernels write into stable aligned tiles (dense layers need no
-    /// scratch and ignore it).
-    pub(crate) fn matvec_with(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
+    fn matvec(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
         match self {
-            LayerWeight::Dense(w) => (0..w.rows).map(|r| dot(x, w.row(r), x.len())).collect(),
-            LayerWeight::Quant(q) => q.dequant_matvec_with(x, scratch),
+            LayerWeight::Dense(w) => LinearOp::matvec(w, x, scratch),
+            LayerWeight::Quant(q) => LinearOp::matvec(q, x, scratch),
         }
     }
 
-    /// `y = x · Wᵀ` for stacked decode rows (one row per live sequence).
-    ///
-    /// Quantized layers unpack each weight row once and share the decoded
-    /// levels across every row via
-    /// [`QuantizedTensor::dequant_matmul_shared`]; dense layers run the same
-    /// per-row dot as [`LayerWeight::matvec_with`]. Either way the result is
-    /// bitwise equal to the matvec applied row by row, which keeps batched
-    /// and single-sequence decode in exact agreement.
-    pub(crate) fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
         match self {
-            LayerWeight::Dense(w) => {
-                let mut y = Matrix::zeros(x.rows, w.rows);
-                for r in 0..x.rows {
-                    let xr = x.row(r);
-                    for j in 0..w.rows {
-                        y.data[r * w.rows + j] = dot(xr, w.row(j), x.cols);
-                    }
-                }
-                y
-            }
-            LayerWeight::Quant(q) => q.dequant_matmul_shared(x, threads),
+            LayerWeight::Dense(w) => LinearOp::decode_matmul(w, x, threads),
+            LayerWeight::Quant(q) => LinearOp::decode_matmul(q, x, threads),
         }
     }
 }
@@ -109,6 +95,8 @@ pub struct NativeBackend {
     pub threads: usize,
     /// Serving concurrency cap: scoring batch size and generation slots.
     max_batch: usize,
+    /// KV-cache precision the decode entry points construct slots with.
+    kv_bits: KvBits,
 }
 
 fn default_threads() -> usize {
@@ -140,6 +128,7 @@ impl NativeBackend {
             vectors: vectors.clone(),
             threads: default_threads(),
             max_batch: DEFAULT_MAX_BATCH,
+            kv_bits: KvBits::F32,
         }
     }
 
@@ -164,6 +153,7 @@ impl NativeBackend {
             vectors: qm.fvectors.clone(),
             threads: default_threads(),
             max_batch: DEFAULT_MAX_BATCH,
+            kv_bits: KvBits::F32,
         }
     }
 
@@ -172,6 +162,20 @@ impl NativeBackend {
     pub fn with_max_batch(mut self, max_batch: usize) -> NativeBackend {
         self.max_batch = max_batch.max(1);
         self
+    }
+
+    /// Set the KV-cache precision (`--kv-bits 32|8`) every decoder built
+    /// over this backend defaults to. `--kv-bits 32` keeps decode
+    /// bit-identical to the seed; `--kv-bits 8` quarters per-slot KV memory
+    /// under a tolerance gate.
+    pub fn with_kv_bits(mut self, kv_bits: KvBits) -> NativeBackend {
+        self.kv_bits = kv_bits;
+        self
+    }
+
+    /// The KV-cache precision decode entry points construct slots with.
+    pub fn kv_bits(&self) -> KvBits {
+        self.kv_bits
     }
 
     /// How many linears run on packed codes (vs dense fallback).
@@ -192,10 +196,6 @@ impl NativeBackend {
             .ok_or_else(|| anyhow::anyhow!("native backend missing vector '{name}'"))
     }
 
-    fn linear(&self, name: &str, x: &Matrix, threads: usize) -> anyhow::Result<Matrix> {
-        Ok(self.layer(name)?.matmul(x, threads))
-    }
-
     fn embedding(&self) -> anyhow::Result<&Matrix> {
         match self.layer("embed")? {
             LayerWeight::Dense(m) => Ok(m),
@@ -204,8 +204,9 @@ impl NativeBackend {
     }
 
     /// Full-sequence forward: `tokens` (length S) → logits `(S, vocab)`.
-    /// Mirrors `model::forward::Forward::forward` with linears dispatched
-    /// through [`LayerWeight`].
+    /// A [`SeqModel`] instantiation of the unified core
+    /// ([`fwd::forward_seq`]) with linears dispatched through
+    /// [`LayerWeight`]'s [`LinearOp`].
     pub fn forward(&self, tokens: &[u8]) -> anyhow::Result<Matrix> {
         self.forward_with(tokens, self.threads)
     }
@@ -214,92 +215,7 @@ impl NativeBackend {
     /// `forward_batch` runs one sequence per worker with `threads = 1` so
     /// total concurrency stays at the pool width.
     fn forward_with(&self, tokens: &[u8], threads: usize) -> anyhow::Result<Matrix> {
-        anyhow::ensure!(!tokens.is_empty(), "empty token sequence");
-        let cfg = &self.cfg;
-        let s = tokens.len();
-        let d = cfg.d;
-        let hd = cfg.head_dim();
-
-        let embed = self.embedding()?;
-        let mut h = Matrix::zeros(s, d);
-        for (p, &tok) in tokens.iter().enumerate() {
-            h.row_mut(p).copy_from_slice(embed.row(tok as usize));
-        }
-
-        let half = hd / 2;
-        let mut cos = Matrix::zeros(s, half);
-        let mut sin = Matrix::zeros(s, half);
-        for p in 0..s {
-            for i in 0..half {
-                let inv = (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64);
-                let ang = p as f64 * inv;
-                *cos.at_mut(p, i) = ang.cos() as f32;
-                *sin.at_mut(p, i) = ang.sin() as f32;
-            }
-        }
-
-        for l in 0..cfg.layers {
-            let pre = format!("layers.{l}");
-            // --- Attention block ---
-            let x = rmsnorm(&h, self.gain(&format!("{pre}.ln1"))?, cfg.eps);
-            let q = self.linear(&format!("{pre}.wq"), &x, threads)?;
-            let k = self.linear(&format!("{pre}.wk"), &x, threads)?;
-            let v = self.linear(&format!("{pre}.wv"), &x, threads)?;
-            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
-
-            let mut ctx = Matrix::zeros(s, d);
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut att_row = vec![0.0f32; s];
-            for head in 0..cfg.heads {
-                let off = head * hd;
-                for qi in 0..s {
-                    let qrow = &q.row(qi)[off..off + hd];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for (ki, a) in att_row.iter_mut().enumerate().take(qi + 1) {
-                        let krow = &k.row(ki)[off..off + hd];
-                        let mut dotv = 0.0f32;
-                        for t in 0..hd {
-                            dotv += qrow[t] * krow[t];
-                        }
-                        *a = dotv * scale;
-                        maxv = maxv.max(*a);
-                    }
-                    let mut denom = 0.0f32;
-                    for a in att_row.iter_mut().take(qi + 1) {
-                        *a = (*a - maxv).exp();
-                        denom += *a;
-                    }
-                    let out = ctx.row_mut(qi);
-                    for ki in 0..=qi {
-                        let wgt = att_row[ki] / denom;
-                        let vrow = &v.row(ki)[off..off + hd];
-                        for t in 0..hd {
-                            out[off + t] += wgt * vrow[t];
-                        }
-                    }
-                }
-            }
-            let o = self.linear(&format!("{pre}.wo"), &ctx, threads)?;
-            add_inplace(&mut h, &o);
-
-            // --- MLP block ---
-            let x = rmsnorm(&h, self.gain(&format!("{pre}.ln2"))?, cfg.eps);
-            let y = if cfg.n_experts == 0 {
-                let g = self.linear(&format!("{pre}.wg"), &x, threads)?;
-                let u = self.linear(&format!("{pre}.wu"), &x, threads)?;
-                let mut act = Matrix::zeros(s, cfg.ffn);
-                for i in 0..s * cfg.ffn {
-                    act.data[i] = silu(g.data[i]) * u.data[i];
-                }
-                self.linear(&format!("{pre}.wd"), &act, threads)?
-            } else {
-                self.moe(&x, &pre, threads)?
-            };
-            add_inplace(&mut h, &y);
-        }
-
-        let hf = rmsnorm(&h, self.gain("ln_f")?, cfg.eps);
-        self.linear("lm_head", &hf, threads)
+        fwd::forward_seq(&mut NativeSeq { be: self, threads }, tokens)
     }
 
     /// Batched scoring over `&self` (the body of the
@@ -357,36 +273,30 @@ impl NativeBackend {
         let outs = dec.run()?;
         Ok(outs.into_iter().map(|o| o.tokens).collect())
     }
+}
 
-    fn moe(&self, x: &Matrix, pre: &str, threads: usize) -> anyhow::Result<Matrix> {
-        let cfg = &self.cfg;
-        let logits = self.linear(&format!("{pre}.router"), x, threads)?;
-        let mut out = Matrix::zeros(x.rows, cfg.d);
-        for i in 0..x.rows {
-            let row = logits.row(i);
-            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
-            let denom: f32 = exps.iter().sum();
-            let (top, _) = exps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            let gate = exps[top] / denom;
+/// The native engine's [`SeqModel`] instantiation: name lookups into the
+/// [`LayerWeight`] map, execution through [`LinearOp`].
+struct NativeSeq<'a> {
+    be: &'a NativeBackend,
+    threads: usize,
+}
 
-            let xr = Matrix::from_vec(1, x.cols, x.row(i).to_vec());
-            let g = self.linear(&format!("{pre}.expert{top}.wg"), &xr, threads)?;
-            let u = self.linear(&format!("{pre}.expert{top}.wu"), &xr, threads)?;
-            let mut act = Matrix::zeros(1, cfg.ffn);
-            for j in 0..cfg.ffn {
-                act.data[j] = silu(g.data[j]) * u.data[j];
-            }
-            let y = self.linear(&format!("{pre}.expert{top}.wd"), &act, threads)?;
-            for (o, &yv) in out.row_mut(i).iter_mut().zip(y.row(0)) {
-                *o = gate * yv;
-            }
-        }
-        Ok(out)
+impl SeqModel for NativeSeq<'_> {
+    fn cfg(&self) -> &ModelConfig {
+        &self.be.cfg
+    }
+
+    fn embed_row(&self, token: u8) -> anyhow::Result<&[f32]> {
+        Ok(self.be.embedding()?.row(token as usize))
+    }
+
+    fn gain(&self, g: Gain) -> anyhow::Result<&[f32]> {
+        self.be.gain(&g.name())
+    }
+
+    fn linear(&mut self, id: LinId, x: &Matrix) -> anyhow::Result<Matrix> {
+        Ok(self.be.layer(&id.name())?.matmul(x, self.threads))
     }
 }
 
@@ -454,7 +364,8 @@ pub(crate) struct DecoderLayer<'a> {
 /// [`NativeBackend`], resolved once so decode hot paths do no name
 /// formatting or map lookups. Shared by the single-sequence
 /// [`NativeDecoder`] and the continuous-batching
-/// [`crate::backend::BatchDecoder`].
+/// [`crate::backend::BatchDecoder`] — both drive it through the unified
+/// [`fwd::decode_rows`] step.
 pub(crate) struct ResolvedModel<'a> {
     pub(crate) cfg: &'a ModelConfig,
     pub(crate) embed: &'a Matrix,
@@ -526,63 +437,56 @@ impl<'a> ResolvedModel<'a> {
     }
 }
 
-/// Autoregressive decoder with preallocated per-layer K/V caches.
+/// Autoregressive decoder: one preallocated [`KvCache`] slot driven through
+/// the unified decode step ([`fwd::decode_rows`]) one row at a time.
 ///
 /// Every weight/gain reference and the rotary frequency table are resolved
 /// once at construction; `step` — the decode hot path — touches only
-/// resolved references and the fused matvec kernels.
+/// resolved references, the fused matvec/shared kernels, and the decoder's
+/// own scratch.
 pub struct NativeDecoder<'a> {
     model: ResolvedModel<'a>,
-    /// Per-layer key cache, shape `(capacity, d)`.
-    kcache: Vec<Matrix>,
-    /// Per-layer value cache, shape `(capacity, d)`.
-    vcache: Vec<Matrix>,
+    /// Exactly one KV slot (the unified step addresses slots by index).
+    cache: Vec<KvCache>,
     pub pos: usize,
     capacity: usize,
-    scratch: StepScratch,
-}
-
-/// Decoder-owned per-step scratch: every `vec![0.0; …]` the step loop used
-/// to allocate per token lives here instead, and the fused kernels reuse
-/// one [`KernelScratch`] across all layers so their unpack/level tiles stay
-/// aligned and allocation-free on the token hot path.
-struct StepScratch {
-    /// Residual stream for the current token.
-    h: Vec<f32>,
-    /// RoPE angles for the current position.
-    cosv: Vec<f32>,
-    sinv: Vec<f32>,
-    /// Attention context accumulator (zeroed per layer).
-    ctxv: Vec<f32>,
-    /// Attention score buffer (`pos + 1` entries).
-    att: Vec<f32>,
-    /// Fused-kernel scratch shared by every quantized matvec.
-    kernel: KernelScratch,
+    scratch: DecodeScratch,
 }
 
 impl<'a> NativeDecoder<'a> {
-    /// Resolve every weight reference and preallocate caches for
-    /// `capacity` positions; errors if the backend is missing a weight.
+    /// Resolve every weight reference and preallocate a KV slot of
+    /// `capacity` positions at the backend's configured `--kv-bits`
+    /// precision; errors if the backend is missing a weight.
     pub fn new(be: &'a NativeBackend, capacity: usize) -> anyhow::Result<NativeDecoder<'a>> {
+        NativeDecoder::with_kv(be, capacity, be.kv_bits)
+    }
+
+    /// [`NativeDecoder::new`] with an explicit KV-cache precision.
+    pub fn with_kv(
+        be: &'a NativeBackend,
+        capacity: usize,
+        kv_bits: KvBits,
+    ) -> anyhow::Result<NativeDecoder<'a>> {
         let model = ResolvedModel::new(be)?;
         let cap = capacity.max(1);
-        let (layers, d) = (model.cfg.layers, model.cfg.d);
-        let half = model.cfg.head_dim() / 2;
+        let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
         Ok(NativeDecoder {
             model,
-            kcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
-            vcache: (0..layers).map(|_| Matrix::zeros(cap, d)).collect(),
+            cache: vec![KvCache::new(kv_bits, layers, cap, d, heads)],
             pos: 0,
             capacity: cap,
-            scratch: StepScratch {
-                h: Vec::with_capacity(d),
-                cosv: vec![0.0; half],
-                sinv: vec![0.0; half],
-                ctxv: vec![0.0; d],
-                att: Vec::with_capacity(cap),
-                kernel: KernelScratch::new(),
-            },
+            scratch: DecodeScratch::new(cap),
         })
+    }
+
+    /// KV-cache precision of this decoder's slot.
+    pub fn kv_bits(&self) -> KvBits {
+        self.cache[0].kv_bits()
+    }
+
+    /// Resident bytes of this decoder's KV slot.
+    pub fn kv_bytes(&self) -> usize {
+        self.cache[0].bytes()
     }
 
     /// Feed one token; returns next-token logits (length vocab).
@@ -592,49 +496,10 @@ impl<'a> NativeDecoder<'a> {
             "decode context exhausted (KV capacity {})",
             self.capacity
         );
-        let model = &self.model;
-        let cfg = model.cfg;
-        let hd = cfg.head_dim();
-        let pos = self.pos;
-
-        // Split borrows: layer refs are read-only; caches and the step
-        // scratch (all distinct fields of `self`) are written.
-        let kcache = &mut self.kcache;
-        let vcache = &mut self.vcache;
-        let StepScratch { h, cosv, sinv, ctxv, att, kernel } = &mut self.scratch;
-
-        h.clear();
-        h.extend_from_slice(model.embed.row(token as usize));
-        model.rope_angles_into(pos, cosv, sinv);
-
-        for (l, layer) in model.layers.iter().enumerate() {
-            let x = rmsnorm_vec(h, layer.ln1, cfg.eps);
-            let mut q = layer.wq.matvec_with(&x, kernel);
-            let mut k = layer.wk.matvec_with(&x, kernel);
-            let v = layer.wv.matvec_with(&x, kernel);
-            rope_vec(&mut q, cosv, sinv, cfg.heads, hd);
-            rope_vec(&mut k, cosv, sinv, cfg.heads, hd);
-            kcache[l].row_mut(pos).copy_from_slice(&k);
-            vcache[l].row_mut(pos).copy_from_slice(&v);
-
-            ctxv.fill(0.0);
-            causal_attend(&q, &kcache[l], &vcache[l], pos, cfg.heads, hd, ctxv, att);
-            let o = layer.wo.matvec_with(ctxv, kernel);
-            for (a, b) in h.iter_mut().zip(&o) {
-                *a += b;
-            }
-
-            let x = rmsnorm_vec(h, layer.ln2, cfg.eps);
-            let y = mlp_forward(&layer.mlp, &x, kernel);
-            for (a, b) in h.iter_mut().zip(&y) {
-                *a += b;
-            }
-        }
-
-        let hf = rmsnorm_vec(h, model.ln_f, cfg.eps);
-        let logits = model.lm_head.matvec_with(&hf, kernel);
+        let rows = [StepRow { token, pos: self.pos, slot: 0 }];
+        let logits = decode_rows(&self.model, &rows, &mut self.cache, &mut self.scratch);
         self.pos += 1;
-        Ok(logits)
+        Ok(logits.data)
     }
 
     /// Greedy generation: prefill `prompt`, then emit `n` tokens. The final
@@ -660,7 +525,7 @@ impl<'a> NativeDecoder<'a> {
         }
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
-            let next = argmax(&last) as u8;
+            let next = fwd::argmax(&last) as u8;
             out.push(next);
             if i + 1 < n {
                 last = self.step(next)?;
@@ -668,114 +533,6 @@ impl<'a> NativeDecoder<'a> {
         }
         Ok(out)
     }
-}
-
-/// Causal attention for one query position over K/V cache rows `0..=pos`,
-/// accumulating the per-head context into `ctx` (zeroed by the caller).
-/// `att` is a caller-owned score buffer (resized to `pos + 1` here) so the
-/// decode hot loops do not allocate per layer. Shared by the
-/// single-sequence and batched decoders so the two attention paths cannot
-/// diverge numerically.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn causal_attend(
-    q: &[f32],
-    kc: &Matrix,
-    vc: &Matrix,
-    pos: usize,
-    heads: usize,
-    hd: usize,
-    ctx: &mut [f32],
-    att: &mut Vec<f32>,
-) {
-    let scale = 1.0 / (hd as f32).sqrt();
-    att.clear();
-    att.resize(pos + 1, 0.0);
-    for head in 0..heads {
-        let off = head * hd;
-        let qh = &q[off..off + hd];
-        let mut maxv = f32::NEG_INFINITY;
-        for ki in 0..=pos {
-            let krow = &kc.row(ki)[off..off + hd];
-            let mut dotv = 0.0f32;
-            for t in 0..hd {
-                dotv += qh[t] * krow[t];
-            }
-            att[ki] = dotv * scale;
-            maxv = maxv.max(att[ki]);
-        }
-        let mut denom = 0.0f32;
-        for a in att.iter_mut() {
-            *a = (*a - maxv).exp();
-            denom += *a;
-        }
-        for ki in 0..=pos {
-            let wgt = att[ki] / denom;
-            let vrow = &vc.row(ki)[off..off + hd];
-            for t in 0..hd {
-                ctx[off + t] += wgt * vrow[t];
-            }
-        }
-    }
-}
-
-/// Dense or top-1-MoE MLP over one activation vector, reusing the caller's
-/// kernel scratch for every quantized matvec. Shared with the batched
-/// decoder, whose MoE rows route per sequence.
-pub(crate) fn mlp_forward(mlp: &MlpRefs, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
-    match mlp {
-        MlpRefs::Dense(w) => expert_forward(w, x, scratch),
-        MlpRefs::Moe { router, experts } => {
-            let logits = router.matvec_with(x, scratch);
-            let maxv = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = logits.iter().map(|&v| (v - maxv).exp()).collect();
-            let denom: f32 = exps.iter().sum();
-            let (top, _) = exps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            let gate = exps[top] / denom;
-            let y = expert_forward(&experts[top], x, scratch);
-            y.iter().map(|&v| gate * v).collect()
-        }
-    }
-}
-
-fn expert_forward(w: &MlpWeights, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32> {
-    let g = w.wg.matvec_with(x, scratch);
-    let u = w.wu.matvec_with(x, scratch);
-    let act: Vec<f32> = g.iter().zip(&u).map(|(&gv, &uv)| silu(gv) * uv).collect();
-    w.wd.matvec_with(&act, scratch)
-}
-
-/// RMSNorm over one activation vector.
-fn rmsnorm_vec(x: &[f32], gain: &[f32], eps: f32) -> Vec<f32> {
-    let ms: f32 = x.iter().map(|&v| v * v).sum::<f32>() / x.len() as f32;
-    let r = 1.0 / (ms + eps).sqrt();
-    x.iter().zip(gain).map(|(&v, &g)| v * r * g).collect()
-}
-
-/// Split-half RoPE applied in place to one position's projection.
-fn rope_vec(x: &mut [f32], cos: &[f32], sin: &[f32], heads: usize, hd: usize) {
-    let half = hd / 2;
-    for h in 0..heads {
-        let off = h * hd;
-        for i in 0..half {
-            let (c, sn) = (cos[i], sin[i]);
-            let x1 = x[off + i];
-            let x2 = x[off + half + i];
-            x[off + i] = x1 * c - x2 * sn;
-            x[off + half + i] = x2 * c + x1 * sn;
-        }
-    }
-}
-
-pub(crate) fn argmax(xs: &[f32]) -> usize {
-    xs.iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0)
 }
 
 #[cfg(test)]
@@ -901,5 +658,42 @@ mod tests {
             last = dec.step(t).unwrap();
         }
         assert!(max_abs_diff(&last, full.row(tokens.len() - 1)) < 1e-3);
+    }
+
+    #[test]
+    fn kv8_decoder_shrinks_cache_and_stays_close_to_f32() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw);
+        let tokens = b"kv8 decode path";
+        let mut d32 = NativeDecoder::with_kv(&nb, 32, KvBits::F32).unwrap();
+        let mut d8 = NativeDecoder::with_kv(&nb, 32, KvBits::Q8).unwrap();
+        assert_eq!(d32.kv_bits(), KvBits::F32);
+        assert_eq!(d8.kv_bits(), KvBits::Q8);
+        assert!(
+            d32.kv_bytes() as f64 / d8.kv_bytes() as f64 >= 3.0,
+            "q8 cache only {}B vs {}B",
+            d8.kv_bytes(),
+            d32.kv_bytes()
+        );
+        let (mut l32, mut l8) = (Vec::new(), Vec::new());
+        for &t in tokens.iter() {
+            l32 = d32.step(t).unwrap();
+            l8 = d8.step(t).unwrap();
+        }
+        let diff = max_abs_diff(&l32, &l8);
+        assert!(diff < 0.5, "kv8 logits drifted {diff} from f32");
+        assert!(l8.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn backend_kv_bits_flows_into_decoders() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw).with_kv_bits(KvBits::Q8);
+        assert_eq!(nb.kv_bits(), KvBits::Q8);
+        let dec = NativeDecoder::new(&nb, 8).unwrap();
+        assert_eq!(dec.kv_bits(), KvBits::Q8);
+        // Generation still runs end to end on the quantized cache.
+        let out = nb.generate(b"abc", 5).unwrap();
+        assert_eq!(out.len(), 5);
     }
 }

@@ -104,6 +104,31 @@ pub unsafe fn gather_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
     }
 }
 
+/// Dequantize u8 codes with an affine (`min + scale * code`), 8 lanes per
+/// iteration (`vpmovzxbd` widen → `vcvtdq2ps` → FMA). The fused
+/// multiply-add may round differently from the scalar `min + scale * c`,
+/// so the quantized-KV read path is tolerance-gated, not bitwise.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dequant_u8(codes: &[u8], scale: f32, min: f32, out: &mut [f32]) {
+    let n = out.len().min(codes.len());
+    let vs = _mm256_set1_ps(scale);
+    let vm = _mm256_set1_ps(min);
+    let mut j = 0;
+    while j + 8 <= n {
+        let idx = _mm256_cvtepu8_epi32(_mm_loadl_epi64(codes.as_ptr().add(j) as *const __m128i));
+        let f = _mm256_cvtepi32_ps(idx);
+        _mm256_storeu_ps(out.as_mut_ptr().add(j), _mm256_fmadd_ps(vs, f, vm));
+        j += 8;
+    }
+    while j < n {
+        out[j] = min + scale * codes[j] as f32;
+        j += 1;
+    }
+}
+
 /// Dot product with 4×8-lane FMA accumulators (32 floats per iteration),
 /// an 8-lane cleanup loop, and a scalar tail. Deterministic: the reduction
 /// order is fixed for any given input length.

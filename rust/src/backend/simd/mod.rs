@@ -258,6 +258,28 @@ pub fn dot_with(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
     }
 }
 
+/// Dequantize u8 codes with an affine (`out[j] = min + scale * codes[j]`)
+/// using `isa`'s kernels — the quantized KV-cache read path. Deterministic
+/// for a fixed ISA; the SIMD paths use FMA, so roundings may differ from
+/// scalar by one ULP (the kv8 consumers are tolerance-gated, unlike the
+/// weight kernels' bitwise unpack/level contract).
+pub fn dequant_u8_with(isa: Isa, codes: &[u8], scale: f32, min: f32, out: &mut [f32]) {
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    match isa {
+        Isa::Scalar => scalar::dequant_u8(codes, scale, min, out),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `supported(Isa::Avx2)` verified avx2+fma above.
+        Isa::Avx2 => unsafe { avx2::dequant_u8(codes, scale, min, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::dequant_u8(codes, scale, min, out),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        Isa::Neon => unsafe { neon::dequant_u8(codes, scale, min, out) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::dequant_u8(codes, scale, min, out),
+    }
+}
+
 /// One 64-byte-aligned chunk of 16 f32 lanes.
 #[derive(Clone, Copy)]
 #[repr(C, align(64))]
@@ -362,6 +384,24 @@ mod tests {
         buf.resize(64);
         assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0);
         assert_eq!(buf.len(), 64);
+    }
+
+    #[test]
+    fn dequant_u8_matches_scalar_to_tolerance_on_every_supported_isa() {
+        let codes: Vec<u8> = (0..37u8).map(|i| i.wrapping_mul(7)).collect();
+        let (scale, min) = (0.0123f32, -1.5f32);
+        let mut want = vec![0.0f32; codes.len()];
+        scalar::dequant_u8(&codes, scale, min, &mut want);
+        for isa in [Isa::Scalar, Isa::Avx2, Isa::Neon] {
+            if !supported(isa) {
+                continue;
+            }
+            let mut got = vec![0.0f32; codes.len()];
+            dequant_u8_with(isa, &codes, scale, min, &mut got);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() <= 1e-5, "{}: {g} vs {w}", isa.name());
+            }
+        }
     }
 
     #[test]

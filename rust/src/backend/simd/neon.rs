@@ -88,6 +88,32 @@ pub unsafe fn lut16_levels(codes: &[u8], lut: &[f32], levels: &mut [f32]) {
     }
 }
 
+/// Dequantize u8 codes with an affine (`min + scale * code`), 8 lanes per
+/// iteration (widen u8 → u16 → u32, convert, FMA). The fused multiply-add
+/// may round differently from the scalar `min + scale * c`, so the
+/// quantized-KV read path is tolerance-gated, not bitwise.
+///
+/// # Safety
+/// NEON must be available (always true on aarch64).
+pub unsafe fn dequant_u8(codes: &[u8], scale: f32, min: f32, out: &mut [f32]) {
+    let n = out.len().min(codes.len());
+    let vs = vdupq_n_f32(scale);
+    let vm = vdupq_n_f32(min);
+    let mut j = 0;
+    while j + 8 <= n {
+        let wide = vmovl_u8(vld1_u8(codes.as_ptr().add(j)));
+        let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wide)));
+        let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wide)));
+        vst1q_f32(out.as_mut_ptr().add(j), vfmaq_f32(vm, vs, lo));
+        vst1q_f32(out.as_mut_ptr().add(j + 4), vfmaq_f32(vm, vs, hi));
+        j += 8;
+    }
+    while j < n {
+        out[j] = min + scale * codes[j] as f32;
+        j += 1;
+    }
+}
+
 /// Dot product with 4×4-lane FMA accumulators (16 floats per iteration),
 /// a 4-lane cleanup loop, and a scalar tail. Deterministic: the reduction
 /// order is fixed for any given input length.

@@ -69,6 +69,16 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     crate::tensor::matrix::dot(a, b, k)
 }
 
+/// Dequantize u8 codes with an affine (`out[j] = min + scale * codes[j]`) —
+/// the quantized KV-cache read path. The SIMD variants use FMA, so their
+/// roundings may differ from this by one ULP; kv8 consumers are
+/// tolerance-gated, unlike the weight kernels' bitwise level contract.
+pub fn dequant_u8(codes: &[u8], scale: f32, min: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes.iter()) {
+        *o = min + scale * c as f32;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -5,7 +5,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::backend::NativeBackend;
+use crate::backend::{KvBits, NativeBackend};
 use crate::coordinator::scheduler::{self, ScheduleOpts};
 use crate::model::{fold, ModelWeights, QuantizedModel};
 use crate::quant::{QuantConfig, QuantizedLinear};
@@ -67,15 +67,17 @@ pub fn run_and_save(
 /// without XLA: the packed codes produced by the scheduler become the
 /// backend's resident weight format directly. `max_batch` caps the
 /// backend's serving concurrency (scoring batch size and the number of
-/// continuous-batching generation slots).
+/// continuous-batching generation slots); `kv_bits` sets the KV-cache
+/// precision its decoders allocate (`--kv-bits 32|8`).
 pub fn run_to_backend(
     mw: &ModelWeights,
     qcfg: &QuantConfig,
     opts: &PipelineOpts,
     max_batch: usize,
+    kv_bits: KvBits,
 ) -> anyhow::Result<NativeBackend> {
     let (qm, _) = run(mw, qcfg, opts)?;
-    Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch))
+    Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch).with_kv_bits(kv_bits))
 }
 
 /// PJRT-accelerated Algorithm 1: run the lowered Pallas `sinq_quantize`
@@ -135,7 +137,7 @@ mod tests {
     fn pipeline_feeds_native_backend() {
         let mw = load_or_synthetic("/nonexistent", "pico", 73);
         let cfg = QuantConfig::new(Method::Sinq, 4);
-        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default(), 8).unwrap();
+        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default(), 8, KvBits::F32).unwrap();
         assert!(be.quantized_layer_count() > 0);
         let logits = be.forward(b"pipeline to backend").unwrap();
         assert!(logits.data.iter().all(|v| v.is_finite()));

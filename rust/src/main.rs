@@ -3,11 +3,12 @@
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
 //! sinq eval     --model tiny [--backend native|pjrt|auto] [--quantized q.stz]
-//! sinq analyze  r2|adam|kurtosis|recon|fig1 [--model tiny] [--backend auto|native|pjrt]
+//! sinq analyze  r2|adam|kurtosis|recon|fig1|kv [--model tiny] [--backend auto|native|pjrt]
 //! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
 //!               [--max-batch 8] [--max-new-tokens 16]
 //! sinq serve    --listen 127.0.0.1:8080 [--max-batch 8] [--max-queue 64]
-//!               [--max-context 512] [--method sinq --bits 4 | --quantized q.stz]
+//!               [--max-context 512] [--kv-bits 32|8]
+//!               [--method sinq --bits 4 | --quantized q.stz]
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
 //!
@@ -31,7 +32,7 @@
 //! Prometheus `GET /metrics`, with `503` backpressure at `--max-queue` and
 //! graceful drain on Ctrl-C. `--fast` trims sweep sizes for smoke runs.
 
-use sinq::backend::{self, BackendKind, BackendSpec};
+use sinq::backend::{self, BackendKind, BackendSpec, KvBits};
 use sinq::coordinator::pipeline::{self, PipelineOpts};
 use sinq::coordinator::scheduler::{self, ScheduleOpts};
 use sinq::coordinator::server::BatchServer;
@@ -69,14 +70,19 @@ fn print_help() {
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
          sinq eval --model <name> [--backend native|pjrt|auto] [--quantized f.stz] [--corpus wiki|c4]\n  \
-         sinq analyze <r2|adam|kurtosis|recon|fig1> [--model <name>] [--backend auto|native|pjrt]\n  \
+         sinq analyze <r2|adam|kurtosis|recon|fig1|kv> [--model <name>] [--backend auto|native|pjrt]\n  \
          sinq serve --model <name> [--backend native|pjrt|auto] [--requests N] [--quantized f.stz]\n             \
          [--max-batch N] [--max-new-tokens N]\n  \
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
-         [--max-context N] [--max-new-tokens N] [--method <m> --bits <b> | --quantized f.stz]\n  \
+         [--max-context N] [--max-new-tokens N] [--kv-bits 32|8]\n             \
+         [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
-         Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true),\n  \
+         Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true;\n  \
+         seeded sampling via temperature/top_k/seed fields, greedy default),\n  \
          POST /v1/score, GET /healthz, GET /metrics; 503 + Retry-After past --max-queue;\n  \
+         --kv-bits 8 packs decode KV caches to u8 with per-head scales (~4x less\n  \
+         memory per slot; 32 = bit-identical default); disconnected SSE clients are\n  \
+         evicted at the next step boundary;\n  \
          Connection: keep-alive reuses sockets (--keepalive-idle-ms, default 5000);\n  \
          Ctrl-C drains live slots.\n\n\
          SIMD: fused kernels dispatch to AVX2/NEON at runtime; SINQ_SIMD=scalar|avx2|neon|auto\n  \
@@ -209,6 +215,7 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
         "kurtosis" => tables::fig2c_fig7_table(&ctx, &model)?,
         "recon" => tables::fig3_table(&ctx, &model)?,
         "fig1" => tables::fig1_table(&ctx)?,
+        "kv" => tables::kv_cache_table(&ctx, &model)?,
         other => anyhow::bail!("unknown analysis '{other}'"),
     };
     t.print();
@@ -226,6 +233,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let mut spec = BackendSpec::new(backend_kind(args, &art, "native")?, &art, &model);
     spec.quantized = args.opt("quantized").map(String::from);
     spec.max_batch = Some(max_batch);
+    let kv_arg = args.get("kv-bits", "32");
+    spec.kv_bits = KvBits::parse(&kv_arg)
+        .ok_or_else(|| anyhow::anyhow!("--kv-bits must be 32 or 8 (got '{kv_arg}')"))?;
+    anyhow::ensure!(
+        spec.kv_bits == KvBits::F32 || spec.kind == BackendKind::Native,
+        "--kv-bits 8 quantizes the native decoders' KV caches; rerun with --backend native"
+    );
     let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
     if wants_quantize {
         // `serve --backend native --method sinq --bits 4`: quantize

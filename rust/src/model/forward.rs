@@ -5,12 +5,22 @@
 //! for: cross-checking the PJRT artifacts, activation capture (μ_x for
 //! Fig. 2a/AWQ calibration), and evaluation settings the AOT graph does not
 //! cover (W4A8 activation quantization, Table 16).
+//!
+//! The block math itself lives once in [`crate::backend::fwd`]; [`Forward`]
+//! is the **f32-reference instantiation** of that core ([`SeqModel`] over a
+//! dense weight map via `matmul_nt`), threading activation capture and
+//! fake-quant through the linear dispatch. Its logits are bit-identical to
+//! the pre-refactor hand-written loop — `tests/unified_core.rs` freezes
+//! that loop as a golden oracle.
 
 use std::collections::BTreeMap;
 
+use crate::backend::fwd::{self, Gain, LinId, SeqModel};
 use crate::model::ModelConfig;
 use crate::quant::crossquant;
 use crate::tensor::Matrix;
+
+pub use crate::backend::fwd::rmsnorm;
 
 /// Activation capture: running mean |x| and a bounded sample of input rows
 /// per linear layer.
@@ -90,198 +100,62 @@ impl<'a> Forward<'a> {
         Forward { cfg, weights, vectors, opts: ForwardOpts::default() }
     }
 
-    fn linear(&self, x: &Matrix, name: &str, capture: &mut Option<&mut Capture>) -> Matrix {
-        if let Some(c) = capture.as_deref_mut() {
-            c.record(name, x);
+    /// Full-sequence forward for one sequence. `tokens` length S; returns
+    /// (S, vocab) logits. `capture` records linear inputs when provided.
+    /// Panics on a missing weight/gain, exactly like the pre-core map
+    /// indexing did.
+    pub fn forward(&self, tokens: &[u8], capture: Option<&mut Capture>) -> Matrix {
+        if tokens.is_empty() {
+            // Pre-core behavior: an empty sequence yields an empty logits
+            // matrix (the native backend's Result path still rejects it).
+            return Matrix::zeros(0, self.cfg.vocab);
+        }
+        let mut m = RefSeq { fwd: self, capture };
+        fwd::forward_seq(&mut m, tokens).expect("reference forward")
+    }
+}
+
+/// The f32-reference [`SeqModel`] instantiation: dense `matmul_nt` per
+/// linear, with activation capture and optional fake-quant threaded
+/// through the dispatch.
+struct RefSeq<'f, 'a, 'c> {
+    fwd: &'f Forward<'a>,
+    capture: Option<&'c mut Capture>,
+}
+
+impl SeqModel for RefSeq<'_, '_, '_> {
+    fn cfg(&self) -> &ModelConfig {
+        self.fwd.cfg
+    }
+
+    fn embed_row(&self, token: u8) -> anyhow::Result<&[f32]> {
+        Ok(self.fwd.weights["embed"].row(token as usize))
+    }
+
+    fn gain(&self, g: Gain) -> anyhow::Result<&[f32]> {
+        Ok(&self.fwd.vectors[&g.name()])
+    }
+
+    fn linear(&mut self, id: LinId, x: &Matrix) -> anyhow::Result<Matrix> {
+        let name = id.name();
+        if let Some(c) = self.capture.as_deref_mut() {
+            c.record(&name, x);
         }
         let x_eff;
-        let x_ref = if let Some(bits) = self.opts.act_bits {
+        let x_ref = if let Some(bits) = self.fwd.opts.act_bits {
             x_eff = crossquant::quantize_activations(x, bits);
             &x_eff
         } else {
             x
         };
-        x_ref.matmul_nt(&self.weights[name])
+        Ok(x_ref.matmul_nt(&self.fwd.weights[&name]))
     }
-
-    /// Full-sequence forward for one sequence. `tokens` length S; returns
-    /// (S, vocab) logits. `capture` records linear inputs when provided.
-    pub fn forward(&self, tokens: &[u8], mut capture: Option<&mut Capture>) -> Matrix {
-        let cfg = self.cfg;
-        let s = tokens.len();
-        let d = cfg.d;
-        let hd = cfg.head_dim();
-
-        // Embedding lookup.
-        let embed = &self.weights["embed"];
-        let mut h = Matrix::zeros(s, d);
-        for (p, &tok) in tokens.iter().enumerate() {
-            h.row_mut(p).copy_from_slice(embed.row(tok as usize));
-        }
-
-        // RoPE tables.
-        let half = hd / 2;
-        let mut cos = Matrix::zeros(s, half);
-        let mut sin = Matrix::zeros(s, half);
-        for p in 0..s {
-            for i in 0..half {
-                let inv = (cfg.rope_base as f64).powf(-(i as f64) * 2.0 / hd as f64);
-                let ang = p as f64 * inv;
-                *cos.at_mut(p, i) = ang.cos() as f32;
-                *sin.at_mut(p, i) = ang.sin() as f32;
-            }
-        }
-
-        for l in 0..cfg.layers {
-            let pre = format!("layers.{l}");
-            // --- Attention block ---
-            let x = rmsnorm(&h, &self.vectors[&format!("{pre}.ln1")], cfg.eps);
-            let q = self.linear(&x, &format!("{pre}.wq"), &mut capture);
-            let k = self.linear(&x, &format!("{pre}.wk"), &mut capture);
-            let v = self.linear(&x, &format!("{pre}.wv"), &mut capture);
-            let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
-
-            // Per-head causal attention.
-            let mut ctx = Matrix::zeros(s, d);
-            let scale = 1.0 / (hd as f32).sqrt();
-            let mut att_row = vec![0.0f32; s];
-            for head in 0..cfg.heads {
-                let off = head * hd;
-                for qi in 0..s {
-                    let qrow = &q.row(qi)[off..off + hd];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for (ki, a) in att_row.iter_mut().enumerate().take(qi + 1) {
-                        let krow = &k.row(ki)[off..off + hd];
-                        let mut dot = 0.0f32;
-                        for t in 0..hd {
-                            dot += qrow[t] * krow[t];
-                        }
-                        *a = dot * scale;
-                        maxv = maxv.max(*a);
-                    }
-                    let mut denom = 0.0f32;
-                    for a in att_row.iter_mut().take(qi + 1) {
-                        *a = (*a - maxv).exp();
-                        denom += *a;
-                    }
-                    let out = ctx.row_mut(qi);
-                    for ki in 0..=qi {
-                        let wgt = att_row[ki] / denom;
-                        let vrow = &v.row(ki)[off..off + hd];
-                        for t in 0..hd {
-                            out[off + t] += wgt * vrow[t];
-                        }
-                    }
-                }
-            }
-            let o = self.linear(&ctx, &format!("{pre}.wo"), &mut capture);
-            add_inplace(&mut h, &o);
-
-            // --- MLP block ---
-            let x = rmsnorm(&h, &self.vectors[&format!("{pre}.ln2")], cfg.eps);
-            let y = if cfg.n_experts == 0 {
-                let g = self.linear(&x, &format!("{pre}.wg"), &mut capture);
-                let u = self.linear(&x, &format!("{pre}.wu"), &mut capture);
-                let mut act = Matrix::zeros(s, cfg.ffn);
-                for i in 0..s * cfg.ffn {
-                    act.data[i] = silu(g.data[i]) * u.data[i];
-                }
-                self.linear(&act, &format!("{pre}.wd"), &mut capture)
-            } else {
-                self.moe(&x, &pre, &mut capture)
-            };
-            add_inplace(&mut h, &y);
-        }
-
-        let hf = rmsnorm(&h, &self.vectors["ln_f"], cfg.eps);
-        self.linear(&hf, "lm_head", &mut capture)
-    }
-
-    fn moe(&self, x: &Matrix, pre: &str, capture: &mut Option<&mut Capture>) -> Matrix {
-        let cfg = self.cfg;
-        let logits = self.linear(x, &format!("{pre}.router"), capture);
-        let mut out = Matrix::zeros(x.rows, cfg.d);
-        for i in 0..x.rows {
-            // Softmax over experts, top-1 selection (switch routing).
-            let row = logits.row(i);
-            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let exps: Vec<f32> = row.iter().map(|&v| (v - maxv).exp()).collect();
-            let denom: f32 = exps.iter().sum();
-            let (top, _) = exps
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap();
-            let gate = exps[top] / denom;
-
-            // One-row expert MLP (dense within the selected expert).
-            let xr = Matrix::from_vec(1, x.cols, x.row(i).to_vec());
-            let g = self.linear(&xr, &format!("{pre}.expert{top}.wg"), capture);
-            let u = self.linear(&xr, &format!("{pre}.expert{top}.wu"), capture);
-            let mut act = Matrix::zeros(1, cfg.ffn);
-            for j in 0..cfg.ffn {
-                act.data[j] = silu(g.data[j]) * u.data[j];
-            }
-            let y = self.linear(&act, &format!("{pre}.expert{top}.wd"), capture);
-            for (o, &yv) in out.row_mut(i).iter_mut().zip(y.row(0)) {
-                *o = gate * yv;
-            }
-        }
-        out
-    }
-}
-
-/// SwiGLU's gate activation (shared with the native backend).
-#[inline]
-pub(crate) fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
-}
-
-pub(crate) fn add_inplace(a: &mut Matrix, b: &Matrix) {
-    for (x, &y) in a.data.iter_mut().zip(&b.data) {
-        *x += y;
-    }
-}
-
-/// RMSNorm with gain.
-pub fn rmsnorm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
-    let mut out = Matrix::zeros(x.rows, x.cols);
-    for i in 0..x.rows {
-        let row = x.row(i);
-        let ms: f32 = row.iter().map(|&v| v * v).sum::<f32>() / x.cols as f32;
-        let r = 1.0 / (ms + eps).sqrt();
-        for (j, (&v, &g)) in row.iter().zip(gain).enumerate() {
-            out.data[i * x.cols + j] = v * r * g;
-        }
-    }
-    out
-}
-
-/// Split-half RoPE (matches `model.py::apply_rope`; shared with the native
-/// backend so the two forwards cannot diverge on the rotation convention).
-pub(crate) fn rope(x: &Matrix, cos: &Matrix, sin: &Matrix, heads: usize) -> Matrix {
-    let s = x.rows;
-    let hd = x.cols / heads;
-    let half = hd / 2;
-    let mut out = Matrix::zeros(s, x.cols);
-    for p in 0..s {
-        for h in 0..heads {
-            let off = h * hd;
-            for i in 0..half {
-                let (c, sn) = (cos.at(p, i), sin.at(p, i));
-                let x1 = x.at(p, off + i);
-                let x2 = x.at(p, off + half + i);
-                *out.at_mut(p, off + i) = x1 * c - x2 * sn;
-                *out.at_mut(p, off + half + i) = x2 * c + x1 * sn;
-            }
-        }
-    }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backend::fwd::rope;
     use crate::model::store::ModelWeights;
     use crate::tensor::Rng;
 

@@ -974,6 +974,90 @@ pub fn fig1_table(_ctx: &Ctx) -> anyhow::Result<Table> {
     Ok(t)
 }
 
+// ======================================================================
+// KV-cache precision study (`sinq analyze kv`)
+// ======================================================================
+
+/// Teacher-forced decoder NLL and flips for one KV precision: step every
+/// window through a [`NativeDecoder`], scoring each next token from the
+/// step logits. Returns (mean NLL, argmax token stream).
+fn decoder_nll(
+    be: &NativeBackend,
+    windows: &[&[u8]],
+    kv: crate::backend::KvBits,
+) -> anyhow::Result<(f64, Vec<u8>)> {
+    use crate::backend::NativeDecoder;
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    let mut argmaxes = Vec::new();
+    for w in windows {
+        let mut dec = NativeDecoder::with_kv(be, w.len() + 1, kv)?;
+        for p in 0..w.len() - 1 {
+            let logits = dec.step(w[p])?;
+            nll -= crate::eval::log_prob(&logits, w[p + 1]);
+            count += 1;
+            // Same argmax the decoders' greedy picker uses, so the flip
+            // column measures exactly what serving would emit.
+            argmaxes.push(crate::backend::fwd::argmax(&logits) as u8);
+        }
+    }
+    Ok((nll / count.max(1) as f64, argmaxes))
+}
+
+/// `sinq analyze kv` — the serving-side extension of the paper's
+/// calibration-free low-precision story: quantize the **decode KV cache**
+/// to 8 bits with per-head, per-position scales and measure what it costs.
+/// Rows compare `--kv-bits 32` vs `8` per weight format (FP and SINQ
+/// 4-bit): teacher-forced decoder perplexity, greedy-argmax flip rate
+/// against the f32 cache, and the resident KV bytes per serving slot.
+pub fn kv_cache_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    use crate::backend::{KvBits, NativeDecoder};
+    anyhow::ensure!(
+        ctx.backend == BackendKind::Native,
+        "the KV-cache study steps the native decoders; rerun with --backend native"
+    );
+    let mut t = Table::new(
+        "KV cache — 8-bit per-head-scaled cache vs f32 (decoder ppl, flips, slot bytes)",
+        &["Weights", "KV bits", "Ppl", "Flips vs f32 (%)", "KV KiB/slot", "Shrink"],
+    );
+    let mw = ctx.load_model(model)?;
+    let corpus = ctx.corpus("wiki")?;
+    let seq = 48usize.min(ctx.seq);
+    let windows = corpus.eval_windows(seq, if ctx.fast { 2 } else { 6 });
+    anyhow::ensure!(!windows.is_empty(), "corpus too small for {seq}-token windows");
+
+    let mut backends: Vec<(String, NativeBackend)> = Vec::new();
+    backends.push(("fp".into(), NativeBackend::from_weights(&mw)));
+    let qm = scheduler::quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None)?;
+    backends.push(("sinq-4b".into(), NativeBackend::from_quantized(&qm)));
+
+    for (label, be) in &backends {
+        let (nll32, top32) = decoder_nll(be, &windows, KvBits::F32)?;
+        let (nll8, top8) = decoder_nll(be, &windows, KvBits::Q8)?;
+        let flips = top32.iter().zip(&top8).filter(|(a, b)| a != b).count();
+        let flip_pct = 100.0 * flips as f64 / top32.len().max(1) as f64;
+        let bytes32 = NativeDecoder::with_kv(be, seq + 1, KvBits::F32)?.kv_bytes();
+        let bytes8 = NativeDecoder::with_kv(be, seq + 1, KvBits::Q8)?.kv_bytes();
+        t.row(vec![
+            label.clone(),
+            "32".into(),
+            f(nll32.exp(), 3),
+            "0.0".into(),
+            f(bytes32 as f64 / 1024.0, 1),
+            "1.0x".into(),
+        ]);
+        t.row(vec![
+            label.clone(),
+            "8".into(),
+            f(nll8.exp(), 3),
+            f(flip_pct, 1),
+            f(bytes8 as f64 / 1024.0, 1),
+            format!("{:.1}x", bytes32 as f64 / bytes8 as f64),
+        ]);
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1004,6 +1088,22 @@ mod tests {
         // Quantized effective weights score through the same trait path.
         let row = ctx.eval_config(&mw, &QuantConfig::new(Method::Sinq, 4), false).unwrap();
         assert!(row.wiki.is_finite() && row.c4.is_finite());
+    }
+
+    #[test]
+    fn kv_cache_table_reports_both_precisions_and_shrink() {
+        let ctx = native_ctx();
+        let t = kv_cache_table(&ctx, "pico").unwrap();
+        assert_eq!(t.rows.len(), 4, "fp + sinq-4b, each at 32 and 8 bits");
+        for row in &t.rows {
+            let ppl: f64 = row[2].parse().unwrap();
+            assert!(ppl.is_finite() && ppl > 1.0, "nonsense ppl row {row:?}");
+        }
+        // The 8-bit rows must report ≥ 3x smaller slots.
+        for row in t.rows.iter().filter(|r| r[1] == "8") {
+            let shrink: f64 = row[5].trim_end_matches('x').parse().unwrap();
+            assert!(shrink >= 3.0, "kv8 slot only {shrink}x smaller: {row:?}");
+        }
     }
 
     #[test]

@@ -27,8 +27,8 @@ use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::backend::batch::{ensure_fits, BatchDecoder};
-use crate::backend::NativeBackend;
+use crate::backend::batch::{ensure_fits, BatchDecoder, CancelOutcome};
+use crate::backend::{NativeBackend, SampleCfg};
 use crate::serve::metrics::ServeMetrics;
 
 /// One event on a generation stream.
@@ -84,8 +84,17 @@ struct Submission {
     id: usize,
     prompt: Vec<u8>,
     max_new: usize,
+    /// Seeded sampling parameters; `None` decodes greedily.
+    sample: Option<SampleCfg>,
     tx: Sender<StreamEvent>,
     enqueued: Instant,
+}
+
+/// What travels from handler threads to the engine thread.
+enum EngineMsg {
+    Submit(Submission),
+    /// Client went away: evict the request's slot at the next step boundary.
+    Cancel(usize),
 }
 
 /// State shared between the engine thread and every [`EngineClient`].
@@ -102,15 +111,21 @@ struct Shared {
 /// Cloneable submission handle used by connection handler threads.
 #[derive(Clone)]
 pub struct EngineClient {
-    tx: Sender<Submission>,
+    tx: Sender<EngineMsg>,
     shared: Arc<Shared>,
 }
 
 impl EngineClient {
     /// Validate and enqueue one generation request; returns the stream of
     /// per-token events. `max_new == 0` completes immediately without
-    /// touching the engine.
-    pub fn submit(&self, prompt: Vec<u8>, max_new: usize) -> Result<StreamHandle, SubmitError> {
+    /// touching the engine. `sample` enables seeded temperature/top-k
+    /// sampling; `None` keeps the bit-identical greedy default.
+    pub fn submit(
+        &self,
+        prompt: Vec<u8>,
+        max_new: usize,
+        sample: Option<SampleCfg>,
+    ) -> Result<StreamHandle, SubmitError> {
         if self.shared.shutting_down.load(Ordering::SeqCst)
             || self.shared.dead.load(Ordering::SeqCst)
         {
@@ -140,8 +155,8 @@ impl EngineClient {
             return Err(SubmitError::Busy { queued, max_queue: self.shared.max_queue });
         }
         let (tx, rx) = channel();
-        let sub = Submission { id, prompt, max_new, tx, enqueued: Instant::now() };
-        if self.tx.send(sub).is_err() {
+        let sub = Submission { id, prompt, max_new, sample, tx, enqueued: Instant::now() };
+        if self.tx.send(EngineMsg::Submit(sub)).is_err() {
             metrics.queued.fetch_sub(1, Ordering::SeqCst);
             return Err(SubmitError::Unavailable("generation engine stopped".into()));
         }
@@ -152,6 +167,14 @@ impl EngineClient {
     /// Per-slot KV capacity (positions) of the engine's decoder.
     pub fn capacity(&self) -> usize {
         self.shared.capacity
+    }
+
+    /// Tell the engine the client of request `id` disconnected: its KV slot
+    /// is evicted at the next step boundary instead of decoding to
+    /// `max_new` (counted in the `evicted` metric). Unknown or finished ids
+    /// are ignored, so callers may cancel unconditionally on write errors.
+    pub fn cancel(&self, id: usize) {
+        let _ = self.tx.send(EngineMsg::Cancel(id));
     }
 }
 
@@ -174,8 +197,14 @@ impl GenEngine {
         metrics: Arc<ServeMetrics>,
     ) -> anyhow::Result<GenEngine> {
         // Probe construction on the caller's thread so bad weight sets fail
-        // at startup, not on the first request.
-        drop(BatchDecoder::new(&be, slots, capacity)?);
+        // at startup, not on the first request — and publish the KV shape
+        // (`/healthz` + `/metrics` report it) while the decoder exists.
+        {
+            let probe = BatchDecoder::new(&be, slots, capacity)?;
+            metrics.slots.store(slots, Ordering::Relaxed);
+            metrics.kv_bytes_per_slot.store(probe.kv_bytes_per_slot(), Ordering::Relaxed);
+            metrics.kv_bits.store(probe.kv_bits().bits() as usize, Ordering::Relaxed);
+        }
         let shared = Arc::new(Shared {
             capacity: capacity.max(1),
             max_queue,
@@ -184,7 +213,7 @@ impl GenEngine {
             shutting_down: AtomicBool::new(false),
             dead: AtomicBool::new(false),
         });
-        let (tx, rx) = channel::<Submission>();
+        let (tx, rx) = channel::<EngineMsg>();
         let thread_shared = shared.clone();
         let thread = thread::Builder::new()
             .name("sinq-gen-engine".into())
@@ -228,7 +257,7 @@ fn engine_loop(
     be: &NativeBackend,
     slots: usize,
     capacity: usize,
-    rx: Receiver<Submission>,
+    rx: Receiver<EngineMsg>,
     shared: Arc<Shared>,
 ) {
     let metrics = shared.metrics.clone();
@@ -244,7 +273,7 @@ fn engine_loop(
     let admit = |dec: &mut BatchDecoder,
                  sessions: &mut HashMap<usize, Session>,
                  sub: Submission| {
-        match dec.submit(sub.id, &sub.prompt, sub.max_new) {
+        match dec.submit_sampled(sub.id, &sub.prompt, sub.max_new, sub.sample) {
             Ok(()) => {
                 sessions.insert(
                     sub.id,
@@ -263,12 +292,31 @@ fn engine_loop(
             }
         }
     };
+    // Client-disconnect eviction: free the request's KV slot (or backlog
+    // entry) at this step boundary; finished ids fall through harmlessly.
+    let cancel = |dec: &mut BatchDecoder, sessions: &mut HashMap<usize, Session>, id: usize| {
+        if sessions.remove(&id).is_none() {
+            return;
+        }
+        match dec.cancel(id) {
+            CancelOutcome::Pending => {
+                // Never decoded: release its --max-queue backlog entry but
+                // do not count a slot eviction.
+                metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            CancelOutcome::Evicted => {
+                metrics.evicted_total.fetch_add(1, Ordering::Relaxed);
+            }
+            CancelOutcome::NotFound => {}
+        }
+    };
 
     loop {
         if sessions.is_empty() {
             // Idle: block briefly so shutdown is noticed without spinning.
             match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(sub) => admit(&mut dec, &mut sessions, sub),
+                Ok(EngineMsg::Submit(sub)) => admit(&mut dec, &mut sessions, sub),
+                Ok(EngineMsg::Cancel(id)) => cancel(&mut dec, &mut sessions, id),
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
                     if shared.shutting_down.load(Ordering::SeqCst) {
                         break;
@@ -278,8 +326,11 @@ fn engine_loop(
             }
         }
         // Live: drain whatever queued up without blocking the decode step.
-        while let Ok(sub) = rx.try_recv() {
-            admit(&mut dec, &mut sessions, sub);
+        while let Ok(msg) = rx.try_recv() {
+            match msg {
+                EngineMsg::Submit(sub) => admit(&mut dec, &mut sessions, sub),
+                EngineMsg::Cancel(id) => cancel(&mut dec, &mut sessions, id),
+            }
         }
 
         let pending_before = dec.pending();
@@ -338,11 +389,13 @@ fn engine_loop(
 
 /// Terminal path: mark the engine dead and error out anything still queued
 /// (submissions that raced past the shutdown flag).
-fn fail_remaining(rx: &Receiver<Submission>, shared: &Shared, msg: &str) {
+fn fail_remaining(rx: &Receiver<EngineMsg>, shared: &Shared, msg: &str) {
     shared.dead.store(true, Ordering::SeqCst);
-    while let Ok(sub) = rx.try_recv() {
-        shared.metrics.queued.fetch_sub(1, Ordering::SeqCst);
-        let _ = sub.tx.send(StreamEvent::Error(msg.to_string()));
+    while let Ok(m) = rx.try_recv() {
+        if let EngineMsg::Submit(sub) = m {
+            shared.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            let _ = sub.tx.send(StreamEvent::Error(msg.to_string()));
+        }
     }
 }
 
@@ -373,7 +426,7 @@ mod tests {
         let expected = be.generate(b"hello engine", 7).unwrap();
         let metrics = Arc::new(ServeMetrics::new());
         let eng = GenEngine::start(be, 2, 64, 16, metrics.clone()).unwrap();
-        let handle = eng.client().submit(b"hello engine".to_vec(), 7).unwrap();
+        let handle = eng.client().submit(b"hello engine".to_vec(), 7, None).unwrap();
         let (tokens, terminal) = collect(handle);
         assert_eq!(tokens, expected);
         assert_eq!(
@@ -395,13 +448,13 @@ mod tests {
         let be = pico_arc();
         let eng = GenEngine::start(be, 1, 8, 4, Arc::new(ServeMetrics::new())).unwrap();
         let client = eng.client();
-        match client.submit(vec![b'x'; 32], 4) {
+        match client.submit(vec![b'x'; 32], 4, None) {
             Err(SubmitError::Invalid(msg)) => {
                 assert!(msg.contains("KV"), "unclear capacity error: {msg}")
             }
             other => panic!("expected Invalid, got {other:?}"),
         }
-        let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0).unwrap());
+        let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0, None).unwrap());
         assert!(tokens.is_empty());
         assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 0, .. })));
         eng.shutdown();
@@ -412,12 +465,37 @@ mod tests {
         let be = pico_arc();
         let metrics = Arc::new(ServeMetrics::new());
         let eng = GenEngine::start(be, 1, 16, 0, metrics.clone()).unwrap();
-        match eng.client().submit(b"hi".to_vec(), 2) {
+        match eng.client().submit(b"hi".to_vec(), 2, None) {
             Err(SubmitError::Busy { max_queue: 0, .. }) => {}
             other => panic!("expected Busy, got {other:?}"),
         }
         assert_eq!(metrics.rejected_total.load(Ordering::Relaxed), 1);
         eng.shutdown();
+    }
+
+    #[test]
+    fn cancel_evicts_live_request_and_counts_eviction() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, 1, 4096, 8, metrics.clone()).unwrap();
+        assert_eq!(metrics.slots.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.kv_bits.load(Ordering::Relaxed), 32);
+        assert!(metrics.kv_bytes_per_slot.load(Ordering::Relaxed) > 0);
+        let client = eng.client();
+        let handle = client.submit(b"evict me".to_vec(), 4000, None).unwrap();
+        // Wait until the request is actually decoding before cancelling.
+        let first = handle.rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(matches!(first, StreamEvent::Token(_)));
+        client.cancel(handle.id);
+        // The engine drops the session at the next step boundary: the
+        // channel ends without a terminal Done and far short of max_new.
+        let (tokens, terminal) = collect(handle);
+        assert!(terminal.is_none(), "cancelled request must not complete: {terminal:?}");
+        assert!(tokens.len() < 4000 - 1, "slot kept decoding after cancel");
+        eng.shutdown();
+        assert_eq!(metrics.evicted_total.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -427,7 +505,7 @@ mod tests {
         let eng = GenEngine::start(be, 1, 32, 8, metrics.clone()).unwrap();
         let client = eng.client();
         let handles: Vec<StreamHandle> = (0..3)
-            .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4).unwrap())
+            .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4, None).unwrap())
             .collect();
         eng.shutdown();
         for h in handles {
@@ -436,7 +514,7 @@ mod tests {
             assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 4, .. })));
         }
         assert!(matches!(
-            client.submit(b"late".to_vec(), 1),
+            client.submit(b"late".to_vec(), 1, None),
             Err(SubmitError::Unavailable(_))
         ));
         assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 3);

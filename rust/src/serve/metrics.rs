@@ -44,6 +44,17 @@ pub struct ServeMetrics {
     /// Gauge: generation requests accepted but not yet in a KV slot — the
     /// backlog the `--max-queue` admission bound applies to.
     pub queued: AtomicUsize,
+    /// Live sequences evicted because their client disconnected mid-stream
+    /// (slot freed at the next step boundary instead of decoding to
+    /// `max_new`).
+    pub evicted_total: AtomicUsize,
+    /// Gauge: total KV slots the engine preallocated (`--max-batch`);
+    /// occupancy = `live_slots / slots`.
+    pub slots: AtomicUsize,
+    /// Gauge: resident bytes of one KV slot at the configured `--kv-bits`.
+    pub kv_bytes_per_slot: AtomicUsize,
+    /// Gauge: KV-cache element precision in bits (32 or 8).
+    pub kv_bits: AtomicUsize,
     ttft: Mutex<TtftHistogram>,
 }
 
@@ -59,6 +70,10 @@ impl ServeMetrics {
             score_requests: AtomicUsize::new(0),
             live_slots: AtomicUsize::new(0),
             queued: AtomicUsize::new(0),
+            evicted_total: AtomicUsize::new(0),
+            slots: AtomicUsize::new(0),
+            kv_bytes_per_slot: AtomicUsize::new(0),
+            kv_bits: AtomicUsize::new(32),
             ttft: Mutex::new(TtftHistogram {
                 counts: [0; TTFT_BUCKETS.len() + 1],
                 sum_secs: 0.0,
@@ -90,9 +105,17 @@ impl ServeMetrics {
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::with_capacity(2048);
-        let counters: [(&str, &str, usize); 8] = [
+        let counters: [(&str, &str, usize); 12] = [
             ("sinq_serve_live_slots", "gauge", self.live_slots.load(Ordering::Relaxed)),
+            ("sinq_serve_slots", "gauge", self.slots.load(Ordering::Relaxed)),
             ("sinq_serve_queued_requests", "gauge", self.queued.load(Ordering::Relaxed)),
+            (
+                "sinq_serve_kv_bytes_per_slot",
+                "gauge",
+                self.kv_bytes_per_slot.load(Ordering::Relaxed),
+            ),
+            ("sinq_serve_kv_bits", "gauge", self.kv_bits.load(Ordering::Relaxed)),
+            ("sinq_serve_evicted_total", "counter", self.evicted_total.load(Ordering::Relaxed)),
             ("sinq_serve_requests_total", "counter", self.requests_total.load(Ordering::Relaxed)),
             ("sinq_serve_rejected_total", "counter", self.rejected_total.load(Ordering::Relaxed)),
             (
@@ -164,9 +187,15 @@ mod tests {
         m.tokens_generated.fetch_add(100, Ordering::Relaxed);
         m.live_slots.store(3, Ordering::Relaxed);
         assert!(m.tokens_per_sec() > 0.0);
+        m.kv_bytes_per_slot.store(4096, Ordering::Relaxed);
+        m.kv_bits.store(8, Ordering::Relaxed);
+        m.evicted_total.fetch_add(2, Ordering::Relaxed);
         let text = m.render();
         assert!(text.contains("sinq_serve_tokens_generated_total 100"), "{text}");
         assert!(text.contains("sinq_serve_live_slots 3"), "{text}");
         assert!(text.contains("# TYPE sinq_serve_requests_total counter"), "{text}");
+        assert!(text.contains("sinq_serve_kv_bytes_per_slot 4096"), "{text}");
+        assert!(text.contains("sinq_serve_kv_bits 8"), "{text}");
+        assert!(text.contains("sinq_serve_evicted_total 2"), "{text}");
     }
 }

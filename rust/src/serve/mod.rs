@@ -22,7 +22,7 @@
 //!
 //! | endpoint | body | behaviour |
 //! |---|---|---|
-//! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool}` | greedy continuation; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
+//! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | greedy continuation by default (bit-identical to the decoder); `temperature > 0` switches to seeded top-k sampling, reproducible across runs and batch placements; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
 //! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
 //! | `GET /healthz` | — | liveness + engine identity/capacity |
 //! | `GET /metrics` | — | Prometheus text: live slots, queued requests, tokens/sec, TTFT histogram |
@@ -45,9 +45,13 @@
 //!
 //! Scoring and generation share **one** weight set: the [`NativeBackend`]
 //! is built once and shared (`Arc`) between the scoring router and the
-//! streaming engine. There is no request cancellation: a client that
-//! disconnects mid-stream stops receiving bytes, but its slot decodes to
-//! completion (bounded by the request's own `max_new_tokens`).
+//! streaming engine. A client that disconnects mid-SSE-stream is detected
+//! by the failed socket write: the handler cancels the request and the
+//! engine evicts its KV slot at the next step boundary instead of decoding
+//! to `max_new_tokens` (`sinq_serve_evicted_total` counts these). The
+//! KV-cache precision follows the backend's `--kv-bits 32|8` flag;
+//! `/healthz` and `/metrics` report `kv_bits` and the resident
+//! `kv_bytes_per_slot`.
 
 pub mod engine;
 pub mod http;
@@ -60,7 +64,7 @@ use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
-use crate::backend::{self, simd, BackendSpec, InferenceBackend, NativeBackend};
+use crate::backend::{self, simd, BackendSpec, InferenceBackend, NativeBackend, SampleCfg};
 use crate::coordinator::server::{BatchServer, ScoreClient, ServerStats};
 use crate::eval::{log_prob, LogitsEngine};
 use crate::tensor::Matrix;
@@ -421,6 +425,8 @@ fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std:
         ("model", Json::Str(state.model.clone())),
         ("slots", Json::Num(state.slots as f64)),
         ("kv_capacity", Json::Num(state.capacity as f64)),
+        ("kv_bits", Json::Num(m.kv_bits.load(Ordering::Relaxed) as f64)),
+        ("kv_bytes_per_slot", Json::Num(m.kv_bytes_per_slot.load(Ordering::Relaxed) as f64)),
         ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
         ("queued_requests", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
     ]);
@@ -439,6 +445,8 @@ struct GenerateBody {
     prompt: Vec<u8>,
     max_new: usize,
     stream: bool,
+    /// Seeded sampling parameters; `None` decodes greedily.
+    sample: Option<SampleCfg>,
 }
 
 fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, String> {
@@ -463,7 +471,35 @@ fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, S
         Some(_) => return Err("'stream' must be a boolean".into()),
         None => false,
     };
-    Ok(GenerateBody { prompt, max_new, stream })
+    let temperature = match json.get("temperature") {
+        Some(v) => v
+            .as_f64()
+            .filter(|t| t.is_finite() && *t >= 0.0)
+            .ok_or("'temperature' must be a non-negative number")? as f32,
+        None => 0.0,
+    };
+    let top_k = match json.get("top_k") {
+        Some(v) => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .ok_or("'top_k' must be a non-negative integer")? as usize,
+        None => 0,
+    };
+    let seed = match json.get("seed") {
+        Some(v) => v
+            .as_f64()
+            .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+            .ok_or("'seed' must be a non-negative integer")? as u64,
+        None => 0,
+    };
+    // Greedy unless a positive temperature opts into sampling (top_k/seed
+    // without one are inert), so the default stays bit-identical.
+    let sample = if temperature > 0.0 {
+        Some(SampleCfg { temperature, top_k, seed })
+    } else {
+        None
+    };
+    Ok(GenerateBody { prompt, max_new, stream, sample })
 }
 
 /// Returns whether the connection is still reusable afterwards: every
@@ -480,7 +516,7 @@ fn handle_generate(
         Ok(p) => p,
         Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
     };
-    match state.engine.submit(parsed.prompt, parsed.max_new) {
+    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample) {
         // Structured engine errors: over-capacity prompts keep the
         // decoder's KV-capacity text, saturation answers 503 + Retry-After.
         Err(SubmitError::Invalid(msg)) => {
@@ -503,7 +539,15 @@ fn handle_generate(
         }
         Ok(handle) => {
             if parsed.stream {
-                stream_generate(w, handle).map(|_| false)
+                let id = handle.id;
+                let streamed = stream_generate(w, handle);
+                if streamed.is_err() {
+                    // The SSE write failed: the client disconnected
+                    // mid-stream. Evict the slot at the next step boundary
+                    // instead of decoding to max_new.
+                    state.engine.cancel(id);
+                }
+                streamed.map(|_| false)
             } else {
                 respond_generate(w, handle, keep_alive).map(|_| keep_alive)
             }
@@ -685,10 +729,11 @@ fn install_interrupt_handler() {
 pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     let be = Arc::new(backend::build_native(spec)?);
     println!(
-        "native engine ready: model '{}', {} quantized linears, simd kernel '{}'",
+        "native engine ready: model '{}', {} quantized linears, simd kernel '{}', kv-bits {}",
         be.cfg.name,
         be.quantized_layer_count(),
-        simd::kernel_name()
+        simd::kernel_name(),
+        be.kv_bits().bits()
     );
     let server = Server::start_with_backend(be, opts)?;
     println!(

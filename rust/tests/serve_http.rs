@@ -360,11 +360,168 @@ fn healthz_reports_engine_shape_and_unknown_paths_404() {
     assert_eq!(json.get("backend").and_then(Json::as_str), Some("native"));
     assert_eq!(json.get("slots").and_then(Json::as_usize), Some(3));
     assert_eq!(json.get("kv_capacity").and_then(Json::as_usize), Some(64));
+    assert_eq!(json.get("kv_bits").and_then(Json::as_usize), Some(32));
+    let kv_bytes = json.get("kv_bytes_per_slot").and_then(Json::as_usize).unwrap();
+    assert!(kv_bytes > 0, "healthz must report resident KV bytes per slot");
 
     assert_eq!(request(&addr, "GET", "/nope", "").status, 404);
     assert_eq!(request(&addr, "GET", "/v1/generate", "").status, 405);
     assert_eq!(request(&addr, "POST", "/healthz", "").status, 405);
     server.shutdown();
+}
+
+#[test]
+fn kv8_server_reports_smaller_slots_and_generates() {
+    let opts = ServeOpts { max_batch: 2, max_context: 64, ..ServeOpts::default() };
+    // Baseline: f32 cache.
+    let server32 = start_server(&pico_spec(None), &opts);
+    let bytes32 = request(&server32.addr.to_string(), "GET", "/healthz", "")
+        .json()
+        .get("kv_bytes_per_slot")
+        .and_then(Json::as_usize)
+        .unwrap();
+    server32.shutdown();
+
+    // Same shape at --kv-bits 8.
+    let mut spec = pico_spec(None);
+    spec.kv_bits = sinq::backend::KvBits::Q8;
+    let server = start_server(&spec, &opts);
+    let addr = server.addr.to_string();
+    let json = request(&addr, "GET", "/healthz", "").json();
+    assert_eq!(json.get("kv_bits").and_then(Json::as_usize), Some(8));
+    let bytes8 = json.get("kv_bytes_per_slot").and_then(Json::as_usize).unwrap();
+    assert!(
+        bytes32 as f64 / bytes8 as f64 >= 3.0,
+        "kv8 slot {bytes8}B not ≥3x smaller than f32 slot {bytes32}B"
+    );
+
+    // End-to-end decode through the quantized cache.
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("kv8 over http", 6, true));
+    assert_eq!(res.status, 200, "{:?}", String::from_utf8_lossy(&res.body));
+    let events = parse_sse_events(&res.body);
+    assert_eq!(sse_tokens(&events).len(), 6);
+    let text = String::from_utf8(request(&addr, "GET", "/metrics", "").body).unwrap();
+    assert_eq!(metric_value(&text, "sinq_serve_kv_bits") as usize, 8);
+    assert_eq!(metric_value(&text, "sinq_serve_kv_bytes_per_slot") as usize, bytes8);
+    server.shutdown();
+}
+
+// =====================================================================
+// Seeded sampling over HTTP
+// =====================================================================
+
+fn sampled_body(prompt: &str, max_new: usize, temperature: f64, top_k: usize, seed: u64) -> String {
+    Json::obj(vec![
+        ("prompt", Json::Str(prompt.into())),
+        ("max_new_tokens", Json::Num(max_new as f64)),
+        ("temperature", Json::Num(temperature)),
+        ("top_k", Json::Num(top_k as f64)),
+        ("seed", Json::Num(seed as f64)),
+    ])
+    .to_string_compact()
+}
+
+fn response_tokens(res: &Response) -> Vec<u8> {
+    res.json()
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .expect("tokens array")
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u8)
+        .collect()
+}
+
+#[test]
+fn sampled_generation_is_seeded_and_greedy_stays_default() {
+    let spec = pico_spec(None);
+    let server = start_server(&spec, &ServeOpts::default());
+    let addr = server.addr.to_string();
+
+    // High temperature + no top-k cut keeps the distribution flat enough
+    // that two independent seed streams cannot plausibly coincide for 12
+    // straight tokens.
+    let a = request(&addr, "POST", "/v1/generate", &sampled_body("sample me", 12, 1.8, 0, 7));
+    assert_eq!(a.status, 200, "{:?}", String::from_utf8_lossy(&a.body));
+    let b = request(&addr, "POST", "/v1/generate", &sampled_body("sample me", 12, 1.8, 0, 7));
+    assert_eq!(response_tokens(&a), response_tokens(&b), "same seed must repeat");
+
+    let c = request(&addr, "POST", "/v1/generate", &sampled_body("sample me", 12, 1.8, 0, 8));
+    assert_ne!(response_tokens(&a), response_tokens(&c), "different seed should diverge");
+
+    // temperature 0 (and omitting it) both stay exactly greedy.
+    let greedy = backend::build_native(&spec).unwrap().generate(b"sample me", 8).unwrap();
+    let t0 = request(&addr, "POST", "/v1/generate", &sampled_body("sample me", 8, 0.0, 16, 7));
+    assert_eq!(response_tokens(&t0), greedy);
+    let plain = request(&addr, "POST", "/v1/generate", &generate_body("sample me", 8, false));
+    assert_eq!(response_tokens(&plain), greedy);
+
+    // Malformed sampling fields answer 400.
+    let res = request(&addr, "POST", "/v1/generate", "{\"prompt\":\"x\",\"temperature\":-1}");
+    assert_eq!(res.status, 400);
+    let res = request(&addr, "POST", "/v1/generate", "{\"prompt\":\"x\",\"top_k\":1.5}");
+    assert_eq!(res.status, 400);
+    server.shutdown();
+}
+
+// =====================================================================
+// Client disconnect mid-stream → slot eviction at the step boundary
+// =====================================================================
+
+#[test]
+fn disconnected_sse_client_evicts_slot_instead_of_decoding_to_max_new() {
+    let opts = ServeOpts { max_batch: 1, max_context: 8192, ..ServeOpts::default() };
+    let server = start_server(&pico_spec(None), &opts);
+    let addr = server.addr.to_string();
+
+    // Start a very long streamed generation and hang up after the first
+    // token: decoding all 8000 tokens would take far longer than this test
+    // allows, so completion of the test itself proves eviction worked.
+    {
+        let stream = TcpStream::connect(&addr).expect("connect");
+        let mut writer = stream.try_clone().unwrap();
+        let body = generate_body("disconnect me", 8000, true);
+        write!(
+            writer,
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+        loop {
+            line.clear();
+            reader.read_line(&mut line).unwrap();
+            if line.starts_with("event: token") {
+                break;
+            }
+        }
+        // Dropping reader/writer closes the socket with unread data queued.
+    }
+
+    // The engine evicts at the next step boundary once the handler's SSE
+    // write fails; poll the metrics until the eviction lands.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        let text = String::from_utf8(request(&addr, "GET", "/metrics", "").body).unwrap();
+        let evicted = metric_value(&text, "sinq_serve_evicted_total") as usize;
+        if evicted >= 1 {
+            assert_eq!(evicted, 1);
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "slot was never evicted after client disconnect:\n{text}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    // The freed slot serves new work immediately (it would otherwise be
+    // pinned for the rest of the 8000-token decode).
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("after evict", 3, false));
+    assert_eq!(res.status, 200);
+    let stats = server.shutdown();
+    assert_eq!(stats.gen_completed, 1, "only the post-eviction request completes");
 }
 
 // =====================================================================

@@ -4,10 +4,12 @@
 # each file must be well-formed JSON with a named bench and a non-empty
 # `results` array of finite numbers. The decode report must additionally
 # carry per-batch throughput (the ≥8-batch row is the amortization
-# headline) plus the scalar-vs-SIMD fields (`tokens_per_sec_scalar`,
-# `simd_speedup`, top-level `kernel`), and the serve report
-# per-concurrency requests/sec plus a median TTFT. Fails loudly so a
-# silently-broken bench cannot upload garbage artifacts.
+# headline), the scalar-vs-SIMD fields (`tokens_per_sec_scalar`,
+# `simd_speedup`, top-level `kernel`), and the KV-cache fields
+# (`tokens_per_sec_kv8` per row; top-level `kv_bytes_per_slot_f32/q8`
+# with `kv_reduction` ≥ 3x); the serve report needs per-concurrency
+# requests/sec plus a median TTFT. Fails loudly so a silently-broken
+# bench cannot upload garbage artifacts.
 #
 # Set CHECK_BENCH_SIMD_SPEEDUP=<x> (e.g. 1.5) to additionally require the
 # decode report's SIMD path to be ≥ x× scalar tokens/sec at batch 1 and
@@ -57,9 +59,17 @@ if bench == "decode":
         assert row.get("tokens_per_sec", 0) > 0, f"{path}: zero throughput row {row!r}"
         assert row.get("tokens_per_sec_scalar", 0) > 0, f"{path}: zero scalar row {row!r}"
         assert row.get("simd_speedup", 0) > 0, f"{path}: missing simd_speedup in {row!r}"
+        assert row.get("tokens_per_sec_kv8", 0) > 0, f"{path}: missing kv8 throughput in {row!r}"
         batches.append(row.get("batch", 0))
     assert any(b >= 8 for b in batches), f"{path}: no batch ≥ 8 row (got {batches})"
     assert any(b == 1 for b in batches), f"{path}: no batch-1 baseline row"
+    kv_f32 = doc.get("kv_bytes_per_slot_f32", 0)
+    kv_q8 = doc.get("kv_bytes_per_slot_q8", 0)
+    assert kv_f32 > 0 and kv_q8 > 0, f"{path}: missing per-slot KV byte fields"
+    kv_red = doc.get("kv_reduction", 0)
+    assert kv_red >= 3.0, (
+        f"{path}: kv8 slot only {kv_red:.2f}x smaller than f32 (gate: ≥ 3x)"
+    )
     want = os.environ.get("CHECK_BENCH_SIMD_SPEEDUP", "")
     if want and kernel != "scalar":
         need = float(want)
