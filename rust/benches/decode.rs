@@ -23,6 +23,7 @@ use sinq::backend::simd::{self, Isa};
 use sinq::backend::{BatchDecoder, KvBits, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
+use sinq::obs::profiler;
 use sinq::quant::{Method, QuantConfig};
 use sinq::util::json::Json;
 
@@ -166,6 +167,40 @@ fn main() {
         ]));
     }
 
+    // Profiling overhead: the per-phase timers in the decode core must be
+    // ~free when disabled (one branch per phase) and cheap enough when
+    // enabled that opting into SINQ_PROFILE does not distort what it
+    // measures. Gated ≤ 3% by scripts/check_bench.sh. Tokens must be
+    // bit-identical either way.
+    profiler::set_enabled(true);
+    let mut profiled = NativeDecoder::new(&be, capacity).expect("decoder");
+    let profiled_tokens = profiled.generate(&reqs[0].0, reqs[0].1).expect("profiled decode");
+    profiler::set_enabled(false);
+    let mut plain = NativeDecoder::new(&be, capacity).expect("decoder");
+    let plain_tokens = plain.generate(&reqs[0].0, reqs[0].1).expect("decode");
+    assert_eq!(profiled_tokens, plain_tokens, "profiling changed decoded tokens");
+
+    // Best-of-N both ways damps scheduler noise below the 3% gate.
+    let preps = reps.max(2);
+    let (off_secs, prof_tokens) = best_of(preps, &be, &reqs, 16, capacity, KvBits::F32);
+    profiler::set_enabled(true);
+    profiler::reset();
+    let (on_secs, _) = best_of(preps, &be, &reqs, 16, capacity, KvBits::F32);
+    let phase_snapshot = profiler::snapshot();
+    profiler::set_enabled(false);
+    let tps_off = prof_tokens as f64 / off_secs;
+    let tps_on = prof_tokens as f64 / on_secs;
+    let profiling_overhead_pct = ((tps_off - tps_on) / tps_off * 100.0).max(0.0);
+    let hottest = phase_snapshot
+        .phases
+        .first()
+        .map(|p| format!("{} {:.1}%", p.phase, p.pct))
+        .unwrap_or_else(|| "none".to_string());
+    println!(
+        "profiler: off {tps_off:.0} tok/s, on {tps_on:.0} tok/s \
+         → {profiling_overhead_pct:.2}% overhead; hottest phase {hottest}"
+    );
+
     // Per-slot KV memory at both precisions (what --max-batch multiplies).
     let kv_bytes_f32 = NativeDecoder::with_kv(&be, capacity, KvBits::F32)
         .expect("decoder")
@@ -192,6 +227,7 @@ fn main() {
         ("kv_bytes_per_slot_f32", Json::Num(kv_bytes_f32 as f64)),
         ("kv_bytes_per_slot_q8", Json::Num(kv_bytes_q8 as f64)),
         ("kv_reduction", Json::Num(kv_reduction)),
+        ("profiling_overhead_pct", Json::Num(profiling_overhead_pct)),
         ("results", Json::Arr(summary)),
     ]);
     // Repo root, resolved from the package dir so cwd does not matter.

@@ -30,6 +30,7 @@ use crate::backend::fwd::{
     decode_rows, DecodeScratch, KvBits, KvCache, KvStore, SampleCfg, StepRow, TokenPicker,
 };
 use crate::backend::native::{NativeBackend, ResolvedModel};
+use crate::obs::profiler::{self, Phase};
 
 /// One generation request queued for slot admission.
 #[derive(Debug, Clone)]
@@ -152,6 +153,10 @@ pub struct BatchDecoder<'a> {
     /// `(request id, token)` pairs emitted by the most recent step, in slot
     /// order — the hook streaming consumers read between steps.
     emitted: Vec<(usize, u8)>,
+    /// Request ids moved from the pending queue into a slot since the last
+    /// [`BatchDecoder::drain_admitted`] — the serving engine reads these to
+    /// stamp queue-wait at the moment of admission.
+    admitted: Vec<usize>,
     scratch: DecodeScratch,
     stats: BatchStats,
 }
@@ -189,6 +194,7 @@ impl<'a> BatchDecoder<'a> {
             pending: VecDeque::new(),
             finished: Vec::new(),
             emitted: Vec::new(),
+            admitted: Vec::new(),
             scratch: DecodeScratch::new(cap),
             stats: BatchStats::default(),
         })
@@ -248,6 +254,7 @@ impl<'a> BatchDecoder<'a> {
                 None => break,
             };
             let req = self.pending.pop_front().expect("non-empty pending queue");
+            self.admitted.push(req.id);
             self.slots[si] = Some(Active {
                 id: req.id,
                 prompt: req.prompt,
@@ -268,7 +275,9 @@ impl<'a> BatchDecoder<'a> {
         a.pos += 1;
         a.fed += 1;
         if a.fed >= a.prompt.len() {
+            let t0 = profiler::start();
             let tok = a.picker.pick(logits);
+            profiler::stop(Phase::TokenPick, t0);
             a.out.push(tok);
             self.emitted.push((a.id, tok));
             if a.out.len() >= a.max_new {
@@ -363,6 +372,13 @@ impl<'a> BatchDecoder<'a> {
     pub fn emitted(&self) -> &[(usize, u8)] {
         &self.emitted
     }
+
+    /// Request ids admitted into slots since the last drain. The serving
+    /// engine calls this after each [`BatchDecoder::step`] to record
+    /// queue-wait (enqueue → slot admission) per request.
+    pub fn drain_admitted(&mut self) -> Vec<usize> {
+        std::mem::take(&mut self.admitted)
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +438,23 @@ mod tests {
         // Σ per-sequence steps == Σ live batch sizes over all steps.
         let seq_steps: usize = outs.iter().map(|o| o.steps).sum();
         assert_eq!(stats.tokens, seq_steps);
+    }
+
+    #[test]
+    fn drain_admitted_reports_each_id_once_at_slot_entry() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 2, 32).unwrap();
+        dec.submit(10, b"ab", 2).unwrap();
+        dec.submit(11, b"cd", 2).unwrap();
+        dec.submit(12, b"ef", 2).unwrap(); // waits for a recycled slot
+        assert!(dec.drain_admitted().is_empty(), "nothing admitted before a step");
+        let mut seen = Vec::new();
+        while dec.step().unwrap() > 0 {
+            seen.extend(dec.drain_admitted());
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![10, 11, 12], "each request admitted exactly once");
+        assert!(dec.drain_admitted().is_empty(), "drain clears the buffer");
     }
 
     #[test]

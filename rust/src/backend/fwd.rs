@@ -46,6 +46,7 @@ use crate::backend::native::{MlpRefs, MlpWeights, ResolvedModel};
 use crate::backend::quantized::QuantizedTensor;
 use crate::backend::simd::{self, AlignedF32, KernelScratch};
 use crate::model::ModelConfig;
+use crate::obs::profiler::{self, Phase};
 use crate::tensor::matrix::dot;
 use crate::tensor::Matrix;
 
@@ -286,6 +287,26 @@ pub enum LinId {
 }
 
 impl LinId {
+    /// The profiler phase this projection's time accrues to. Per-expert
+    /// MoE linears all route to `Moe` — the interesting split there is
+    /// MoE-vs-dense, not which expert fired.
+    pub fn phase(&self) -> Phase {
+        match self {
+            LinId::Wq(_) => Phase::LinWq,
+            LinId::Wk(_) => Phase::LinWk,
+            LinId::Wv(_) => Phase::LinWv,
+            LinId::Wo(_) => Phase::LinWo,
+            LinId::Gate(_) => Phase::LinWg,
+            LinId::Up(_) => Phase::LinWu,
+            LinId::Down(_) => Phase::LinWd,
+            LinId::Router(_)
+            | LinId::ExpertGate(_, _)
+            | LinId::ExpertUp(_, _)
+            | LinId::ExpertDown(_, _) => Phase::Moe,
+            LinId::LmHead => Phase::LinLmHead,
+        }
+    }
+
     /// The weight-map key this projection has carried since the seed
     /// (`layers.{l}.wq`, `layers.{l}.expert{e}.wg`, `lm_head`, …).
     pub fn name(&self) -> String {
@@ -352,12 +373,15 @@ pub fn forward_seq<M: SeqModel + ?Sized>(m: &mut M, tokens: &[u8]) -> anyhow::Re
     let (s, d, hd) = (tokens.len(), cfg.d, cfg.head_dim());
 
     // Embedding lookup.
+    let t0 = profiler::start();
     let mut h = Matrix::zeros(s, d);
     for (p, &tok) in tokens.iter().enumerate() {
         h.row_mut(p).copy_from_slice(m.embed_row(tok)?);
     }
+    profiler::stop(Phase::Embed, t0);
 
     // RoPE tables, one row per position.
+    let t0 = profiler::start();
     let half = hd / 2;
     let mut cos = Matrix::zeros(s, half);
     let mut sin = Matrix::zeros(s, half);
@@ -369,43 +393,76 @@ pub fn forward_seq<M: SeqModel + ?Sized>(m: &mut M, tokens: &[u8]) -> anyhow::Re
             *sin.at_mut(p, i) = ang.sin() as f32;
         }
     }
+    profiler::stop(Phase::Rope, t0);
 
     let mut att = Vec::with_capacity(s);
     for l in 0..cfg.layers {
         // --- Attention block ---
-        let x = rmsnorm(&h, m.gain(Gain::Ln1(l))?, cfg.eps);
-        let q = m.linear(LinId::Wq(l), &x)?;
-        let k = m.linear(LinId::Wk(l), &x)?;
-        let v = m.linear(LinId::Wv(l), &x)?;
+        let x = timed_norm(&h, m.gain(Gain::Ln1(l))?, cfg.eps);
+        let q = timed_linear(m, LinId::Wq(l), &x)?;
+        let k = timed_linear(m, LinId::Wk(l), &x)?;
+        let v = timed_linear(m, LinId::Wv(l), &x)?;
+        let t0 = profiler::start();
         let (q, k) = (rope(&q, &cos, &sin, cfg.heads), rope(&k, &cos, &sin, cfg.heads));
+        profiler::stop(Phase::Rope, t0);
 
         // Per-query causal attention over the full K/V matrices — the same
         // inner loop the decode paths run over their caches.
+        let t0 = profiler::start();
         let mut ctx = Matrix::zeros(s, d);
         for qi in 0..s {
             causal_attend(q.row(qi), &k, &v, qi, cfg.heads, hd, ctx.row_mut(qi), &mut att);
         }
-        let o = m.linear(LinId::Wo(l), &ctx)?;
+        profiler::stop(Phase::Attend, t0);
+        let o = timed_linear(m, LinId::Wo(l), &ctx)?;
         add_inplace(&mut h, &o);
 
         // --- MLP block ---
-        let x = rmsnorm(&h, m.gain(Gain::Ln2(l))?, cfg.eps);
+        let x = timed_norm(&h, m.gain(Gain::Ln2(l))?, cfg.eps);
         let y = if cfg.n_experts == 0 {
-            let g = m.linear(LinId::Gate(l), &x)?;
-            let u = m.linear(LinId::Up(l), &x)?;
+            let g = timed_linear(m, LinId::Gate(l), &x)?;
+            let u = timed_linear(m, LinId::Up(l), &x)?;
+            let t0 = profiler::start();
             let mut act = Matrix::zeros(s, cfg.ffn);
             for i in 0..s * cfg.ffn {
                 act.data[i] = silu(g.data[i]) * u.data[i];
             }
-            m.linear(LinId::Down(l), &act)?
+            profiler::stop(Phase::Activation, t0);
+            timed_linear(m, LinId::Down(l), &act)?
         } else {
-            moe_seq(m, &x, l, &cfg)?
+            // The whole switch-MoE path (router + expert matvecs) accrues to
+            // one phase; its inner linears are deliberately untimed so the
+            // profiler never nests.
+            let t0 = profiler::start();
+            let y = moe_seq(m, &x, l, &cfg)?;
+            profiler::stop(Phase::Moe, t0);
+            y
         };
         add_inplace(&mut h, &y);
     }
 
-    let hf = rmsnorm(&h, m.gain(Gain::Final)?, cfg.eps);
-    m.linear(LinId::LmHead, &hf)
+    let hf = timed_norm(&h, m.gain(Gain::Final)?, cfg.eps);
+    timed_linear(m, LinId::LmHead, &hf)
+}
+
+/// [`rmsnorm`] accruing to the `norm` profiler phase.
+fn timed_norm(x: &Matrix, gain: &[f32], eps: f32) -> Matrix {
+    let t0 = profiler::start();
+    let out = rmsnorm(x, gain, eps);
+    profiler::stop(Phase::Norm, t0);
+    out
+}
+
+/// One [`SeqModel::linear`] dispatch accruing to its projection's phase.
+fn timed_linear<M: SeqModel + ?Sized>(
+    m: &mut M,
+    id: LinId,
+    x: &Matrix,
+) -> anyhow::Result<Matrix> {
+    let t0 = profiler::start();
+    let y = m.linear(id, x);
+    profiler::stop(id.phase(), t0);
+    y
 }
 
 /// Switch-MoE MLP over a batch of rows: top-1 routing per row, one-row
@@ -805,14 +862,18 @@ fn decode_linear<L: LinearOp + ?Sized>(
     x: &Matrix,
     threads: usize,
     kernel: &mut KernelScratch,
+    phase: Phase,
 ) -> Matrix {
-    if x.rows == 1 {
+    let t0 = profiler::start();
+    let y = if x.rows == 1 {
         let y = w.matvec(x.row(0), kernel);
         let cols = y.len();
         Matrix::from_vec(1, cols, y)
     } else {
         w.decode_matmul(x, threads)
-    }
+    };
+    profiler::stop(phase, t0);
+    y
 }
 
 /// One fused decode step over stacked live rows: embed each row's token,
@@ -840,6 +901,7 @@ pub(crate) fn decode_rows<K: KvStore>(
 
     // Stack this step's input embeddings and RoPE angles, one row per live
     // sequence (each at its own position), into reused scratch.
+    let t0 = profiler::start();
     h.reset(b, d);
     cos.reset(b, hd / 2);
     sin.reset(b, hd / 2);
@@ -847,52 +909,64 @@ pub(crate) fn decode_rows<K: KvStore>(
         h.row_mut(r).copy_from_slice(model.embed.row(row.token as usize));
         model.rope_angles_into(row.pos, cos.row_mut(r), sin.row_mut(r));
     }
+    profiler::stop(Phase::Embed, t0);
 
     for (l, layer) in model.layers.iter().enumerate() {
         // --- Attention block: fused projections over all live rows ---
-        let x = rmsnorm(h, layer.ln1, cfg.eps);
-        let q = decode_linear(layer.wq, &x, model.threads, kernel);
-        let k = decode_linear(layer.wk, &x, model.threads, kernel);
-        let v = decode_linear(layer.wv, &x, model.threads, kernel);
+        let x = timed_norm(h, layer.ln1, cfg.eps);
+        let q = decode_linear(layer.wq, &x, model.threads, kernel, Phase::LinWq);
+        let k = decode_linear(layer.wk, &x, model.threads, kernel, Phase::LinWk);
+        let v = decode_linear(layer.wv, &x, model.threads, kernel, Phase::LinWv);
+        let t0 = profiler::start();
         let (q, k) = (rope(&q, cos, sin, cfg.heads), rope(&k, cos, sin, cfg.heads));
+        profiler::stop(Phase::Rope, t0);
 
         ctx.reset(b, d);
         for (r, row) in rows.iter().enumerate() {
             let cache = &mut caches[row.slot];
+            let t0 = profiler::start();
             cache.write(l, row.pos, k.row(r), v.row(r));
+            profiler::stop(Phase::KvWrite, t0);
+            let t0 = profiler::start();
             cache.attend(l, q.row(r), row.pos, ctx.row_mut(r), attn);
+            profiler::stop(Phase::KvAttend, t0);
         }
-        let o = decode_linear(layer.wo, ctx, model.threads, kernel);
+        let o = decode_linear(layer.wo, ctx, model.threads, kernel, Phase::LinWo);
         add_inplace(h, &o);
 
         // --- MLP block ---
-        let x = rmsnorm(h, layer.ln2, cfg.eps);
+        let x = timed_norm(h, layer.ln2, cfg.eps);
         match &layer.mlp {
             MlpRefs::Dense(w) => {
-                let g = decode_linear(w.wg, &x, model.threads, kernel);
-                let u = decode_linear(w.wu, &x, model.threads, kernel);
+                let g = decode_linear(w.wg, &x, model.threads, kernel, Phase::LinWg);
+                let u = decode_linear(w.wu, &x, model.threads, kernel, Phase::LinWu);
+                let t0 = profiler::start();
                 act.reset(b, cfg.ffn);
                 for i in 0..b * cfg.ffn {
                     act.data[i] = silu(g.data[i]) * u.data[i];
                 }
-                let y = decode_linear(w.wd, act, model.threads, kernel);
+                profiler::stop(Phase::Activation, t0);
+                let y = decode_linear(w.wd, act, model.threads, kernel, Phase::LinWd);
                 add_inplace(h, &y);
             }
             moe => {
                 // Switch-MoE routes per sequence; rows picking different
                 // experts cannot share a matmul, so keep the per-row path
-                // (bitwise equal to the single-sequence decoder).
+                // (bitwise equal to the single-sequence decoder). The whole
+                // routed path accrues to one phase.
+                let t0 = profiler::start();
                 moe_y.reset(b, d);
                 for r in 0..b {
                     moe_y.row_mut(r).copy_from_slice(&mlp_forward(moe, x.row(r), kernel));
                 }
+                profiler::stop(Phase::Moe, t0);
                 add_inplace(h, moe_y);
             }
         }
     }
 
-    let hf = rmsnorm(h, model.ln_f, cfg.eps);
-    decode_linear(model.lm_head, &hf, model.threads, kernel)
+    let hf = timed_norm(h, model.ln_f, cfg.eps);
+    decode_linear(model.lm_head, &hf, model.threads, kernel, Phase::LinLmHead)
 }
 
 // =====================================================================

@@ -97,6 +97,10 @@ pub struct NativeBackend {
     max_batch: usize,
     /// KV-cache precision the decode entry points construct slots with.
     kv_bits: KvBits,
+    /// Build-time quantization-quality report (per-layer NMSE, Sinkhorn
+    /// convergence); `None` when the backend was built from dense weights
+    /// or a pre-quantized `.stz` whose build stats were not kept.
+    quant_report: Option<crate::obs::QuantReport>,
 }
 
 fn default_threads() -> usize {
@@ -129,6 +133,7 @@ impl NativeBackend {
             threads: default_threads(),
             max_batch: DEFAULT_MAX_BATCH,
             kv_bits: KvBits::F32,
+            quant_report: None,
         }
     }
 
@@ -154,6 +159,7 @@ impl NativeBackend {
             threads: default_threads(),
             max_batch: DEFAULT_MAX_BATCH,
             kv_bits: KvBits::F32,
+            quant_report: None,
         }
     }
 
@@ -176,6 +182,22 @@ impl NativeBackend {
     /// The KV-cache precision decode entry points construct slots with.
     pub fn kv_bits(&self) -> KvBits {
         self.kv_bits
+    }
+
+    /// Attach the build-time quantization-quality report (set by the
+    /// quantize-and-serve pipeline; `.stz`-loaded backends have none).
+    pub fn with_quant_report(
+        mut self,
+        report: Option<crate::obs::QuantReport>,
+    ) -> NativeBackend {
+        self.quant_report = report;
+        self
+    }
+
+    /// Build-time quantization-quality report, if the backend was
+    /// quantized in-process.
+    pub fn quant_report(&self) -> Option<&crate::obs::QuantReport> {
+        self.quant_report.as_ref()
     }
 
     /// How many linears run on packed codes (vs dense fallback).

@@ -33,20 +33,30 @@ pub fn run(
     qcfg: &QuantConfig,
     opts: &PipelineOpts,
 ) -> anyhow::Result<(QuantizedModel, f64)> {
+    run_traced(mw, qcfg, opts).map(|(qm, secs, _)| (qm, secs))
+}
+
+/// [`run`], also returning the scheduler's per-layer quality reports so the
+/// quantize-and-serve path can surface a [`crate::obs::QuantReport`].
+pub fn run_traced(
+    mw: &ModelWeights,
+    qcfg: &QuantConfig,
+    opts: &PipelineOpts,
+) -> anyhow::Result<(QuantizedModel, f64, Vec<scheduler::JobReport>)> {
     let t0 = Instant::now();
-    let qm = if opts.no_overhead {
+    let (qm, reports) = if opts.no_overhead {
         let folded = fold::fold_model(mw, qcfg.sinq_iters, qcfg.sinq_clamp);
         let mut base = qcfg.clone();
         base.method = crate::quant::Method::Rtn; // t already absorbed
-        let (mut qm, _) = scheduler::quantize_model(&folded, &base, &opts.schedule)?;
+        let (mut qm, reports) = scheduler::quantize_model(&folded, &base, &opts.schedule)?;
         qm.method = format!("{}-no-overhead", qcfg.method.name());
         // The folded norm gains / producer weights are part of the model.
         qm.fvectors = folded.vectors.clone();
-        qm
+        (qm, reports)
     } else {
-        scheduler::quantize_model(mw, qcfg, &opts.schedule)?.0
+        scheduler::quantize_model(mw, qcfg, &opts.schedule)?
     };
-    Ok((qm, t0.elapsed().as_secs_f64()))
+    Ok((qm, t0.elapsed().as_secs_f64(), reports))
 }
 
 /// Quantize, save to `.stz`, return the path's byte size.
@@ -76,8 +86,12 @@ pub fn run_to_backend(
     max_batch: usize,
     kv_bits: KvBits,
 ) -> anyhow::Result<NativeBackend> {
-    let (qm, _) = run(mw, qcfg, opts)?;
-    Ok(NativeBackend::from_quantized(&qm).with_max_batch(max_batch).with_kv_bits(kv_bits))
+    let (qm, _, reports) = run_traced(mw, qcfg, opts)?;
+    let report = crate::obs::QuantReport::new(&qm.method, qm.bits, reports);
+    Ok(NativeBackend::from_quantized(&qm)
+        .with_max_batch(max_batch)
+        .with_kv_bits(kv_bits)
+        .with_quant_report(Some(report)))
 }
 
 /// PJRT-accelerated Algorithm 1: run the lowered Pallas `sinq_quantize`
@@ -141,6 +155,11 @@ mod tests {
         assert!(be.quantized_layer_count() > 0);
         let logits = be.forward(b"pipeline to backend").unwrap();
         assert!(logits.data.iter().all(|v| v.is_finite()));
+        // The quantize-and-serve path carries the build-time quality report.
+        let report = be.quant_report().expect("quant report attached");
+        assert_eq!(report.layers.len(), mw.cfg.quantizable_names().len());
+        assert!(report.mean_nmse() > 0.0);
+        assert!(report.layers.iter().all(|l| l.sinkhorn_iters.is_some()));
     }
 
     #[test]

@@ -11,16 +11,13 @@ use std::time::Instant;
 
 use crate::model::forward::{Capture, Forward};
 use crate::model::{ModelConfig, ModelWeights, QuantizedModel};
-use crate::quant::{quantize_matrix, Calibration, QuantConfig, QuantizedLinear};
+use crate::quant::{quantize_matrix_traced, Calibration, QuantConfig, QuantizedLinear};
 use crate::util::threadpool;
 
-/// Progress/outcome of one scheduled job.
-#[derive(Debug, Clone)]
-pub struct JobReport {
-    pub layer: String,
-    pub millis: f64,
-    pub bits_per_weight: f64,
-}
+/// Progress/outcome of one scheduled job. Now the full per-layer
+/// quantization-quality record (timing, memory, reconstruction error,
+/// Sinkhorn convergence) consumed by the build-time [`crate::obs::QuantReport`].
+pub type JobReport = crate::obs::LayerQuantStats;
 
 /// Scheduler options.
 #[derive(Debug, Clone)]
@@ -62,11 +59,24 @@ pub fn quantize_model(
     let results: Vec<anyhow::Result<(QuantizedLinear, JobReport)>> =
         threadpool::map_indexed(&names, opts.threads, |_, name| {
             let t0 = Instant::now();
-            let q = quantize_matrix(&mw.tensors[name], cfg, calib.get(name))?;
+            let w = &mw.tensors[name];
+            let (q, scales) = quantize_matrix_traced(w, cfg, calib.get(name))?;
+            // Reconstruction error of the layer the decoder will actually
+            // run: NMSE = ‖W−Ŵ‖²_F/‖W‖²_F, MSE = ‖W−Ŵ‖²_F/numel.
+            let nmse = crate::quant::metrics::rel_fro(w, &q.effective_weight()).powi(2);
+            let w_fro2: f64 = w.data.iter().map(|&x| (x as f64).powi(2)).sum();
+            let mse = nmse * w_fro2 / (w.rows * w.cols).max(1) as f64;
             let report = JobReport {
                 layer: name.clone(),
                 millis: t0.elapsed().as_secs_f64() * 1e3,
                 bits_per_weight: q.bits_per_weight(),
+                rows: w.rows,
+                cols: w.cols,
+                mse,
+                nmse,
+                sinkhorn_iters: scales.as_ref().map(|s| s.iters),
+                imbalance_initial: scales.as_ref().map(|s| s.initial_imbalance),
+                imbalance_final: scales.as_ref().map(|s| s.imbalance),
             };
             let n = done.fetch_add(1, Ordering::SeqCst) + 1;
             if opts.verbose {
@@ -187,6 +197,16 @@ mod tests {
         assert_eq!(reports.len(), qm.layers.len());
         assert!(reports.iter().all(|r| r.bits_per_weight > 4.0));
         assert!(qm.fweights.contains_key("embed"));
+        // SINQ layers carry the full quality record: finite positive error,
+        // Sinkhorn convergence info, and an imbalance that did not worsen.
+        for r in &reports {
+            assert!(r.nmse > 0.0 && r.nmse < 1.0, "{}: nmse {}", r.layer, r.nmse);
+            assert!(r.mse > 0.0, "{}: mse {}", r.layer, r.mse);
+            assert!(r.rows > 0 && r.cols > 0);
+            assert!(r.sinkhorn_iters.is_some(), "{}: no sinkhorn iters", r.layer);
+            let (i0, i1) = (r.imbalance_initial.unwrap(), r.imbalance_final.unwrap());
+            assert!(i1 <= i0, "{}: imbalance {} -> {}", r.layer, i0, i1);
+        }
     }
 
     #[test]

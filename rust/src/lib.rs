@@ -50,6 +50,7 @@ pub mod data;
 pub mod eval;
 pub mod fmt;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod runtime;

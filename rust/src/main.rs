@@ -3,7 +3,7 @@
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
 //! sinq eval     --model tiny [--backend native|pjrt|auto] [--quantized q.stz]
-//! sinq analyze  r2|adam|kurtosis|recon|fig1|kv [--model tiny] [--backend auto|native|pjrt]
+//! sinq analyze  r2|adam|kurtosis|recon|fig1|kv|profile [--model tiny] [--backend auto|native|pjrt]
 //! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
 //!               [--max-batch 8] [--max-new-tokens 16]
 //! sinq serve    --listen 127.0.0.1:8080 [--max-batch 8] [--max-queue 64]
@@ -70,16 +70,19 @@ fn print_help() {
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
          sinq eval --model <name> [--backend native|pjrt|auto] [--quantized f.stz] [--corpus wiki|c4]\n  \
-         sinq analyze <r2|adam|kurtosis|recon|fig1|kv> [--model <name>] [--backend auto|native|pjrt]\n  \
+         sinq analyze <r2|adam|kurtosis|recon|fig1|kv|profile> [--model <name>] [--backend auto|native|pjrt]\n  \
          sinq serve --model <name> [--backend native|pjrt|auto] [--requests N] [--quantized f.stz]\n             \
          [--max-batch N] [--max-new-tokens N]\n  \
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
-         [--max-context N] [--max-new-tokens N] [--kv-bits 32|8]\n             \
+         [--max-context N] [--max-new-tokens N] [--kv-bits 32|8] [--log-json]\n             \
          [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true;\n  \
          seeded sampling via temperature/top_k/seed fields, greedy default),\n  \
-         POST /v1/score, GET /healthz, GET /metrics; 503 + Retry-After past --max-queue;\n  \
+         POST /v1/score, GET /healthz, GET /metrics, GET /v1/stats (span/phase/quant\n  \
+         telemetry; per-phase decode profiling via SINQ_PROFILE=1); every generation\n  \
+         response carries a usage object; --log-json prints one JSON line per request;\n  \
+         503 + Retry-After past --max-queue;\n  \
          --kv-bits 8 packs decode KV caches to u8 with per-head scales (~4x less\n  \
          memory per slot; 32 = bit-identical default); disconnected SSE clients are\n  \
          evicted at the next step boundary;\n  \
@@ -216,6 +219,7 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
         "recon" => tables::fig3_table(&ctx, &model)?,
         "fig1" => tables::fig1_table(&ctx)?,
         "kv" => tables::kv_cache_table(&ctx, &model)?,
+        "profile" => tables::quant_profile_table(&ctx, &model)?,
         other => anyhow::bail!("unknown analysis '{other}'"),
     };
     t.print();
@@ -269,6 +273,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             score_queue: args.num("score-queue", 64),
             max_connections: args.num("max-connections", 256),
             keepalive_idle_ms: args.num("keepalive-idle-ms", 5_000),
+            log_json: args.has("log-json"),
         };
         return sinq::serve::run(&spec, &opts);
     }

@@ -1,0 +1,226 @@
+//! Lock-free fixed-bucket histogram.
+//!
+//! Replaces the serving layer's mutex-guarded TTFT histogram: observations
+//! land in per-bucket `AtomicU64` counters plus an atomic sum kept in
+//! microseconds, so the record path is a couple of relaxed atomic adds and
+//! never blocks another thread. One type serves every duration-shaped
+//! serving metric (TTFT, queue-wait, per-step decode latency).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Upper bounds (seconds) suited to request-scale latencies (TTFT,
+/// queue-wait). Observations above the last bound land in `+Inf`.
+pub const REQUEST_BUCKETS: [f64; 10] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0];
+
+/// Upper bounds (seconds) suited to single decode steps, which are one to
+/// two orders of magnitude faster than whole requests.
+pub const STEP_BUCKETS: [f64; 10] =
+    [0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.1, 1.0];
+
+/// Fixed-bound histogram over atomic bucket counters. Bucket counts are
+/// stored non-cumulative (the renderer accumulates, matching Prometheus
+/// exposition); the sum is kept in integer microseconds so it can live in
+/// an `AtomicU64` without losing more than sub-microsecond precision.
+pub struct AtomicHistogram {
+    bounds: &'static [f64],
+    counts: Vec<AtomicU64>,
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl AtomicHistogram {
+    pub fn new(bounds: &'static [f64]) -> AtomicHistogram {
+        AtomicHistogram {
+            bounds,
+            counts: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            sum_micros: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Lock-free: two relaxed adds plus the bucket
+    /// increment.
+    pub fn record(&self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&self, secs: f64) {
+        let slot =
+            self.bounds.iter().position(|&ub| secs <= ub).unwrap_or(self.bounds.len());
+        self.counts[slot].fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Append the Prometheus text exposition (cumulative `_bucket` lines,
+    /// `_sum`, `_count`) for this histogram under `name`.
+    pub fn render_prometheus(&self, name: &str, out: &mut String) {
+        use std::fmt::Write as _;
+        let snap = self.snapshot();
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cumulative = 0u64;
+        for (&ub, &c) in self.bounds.iter().zip(&snap.counts) {
+            cumulative += c;
+            let _ = writeln!(out, "{name}_bucket{{le=\"{ub}\"}} {cumulative}");
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", snap.count);
+        let _ = writeln!(out, "{name}_sum {:.6}", snap.sum_secs);
+        let _ = writeln!(out, "{name}_count {}", snap.count);
+    }
+
+    /// Point-in-time copy of the counters (each bucket loaded individually;
+    /// a torn snapshot can be off by in-flight observations, which is fine
+    /// for monitoring).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            bounds: self.bounds,
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum_secs: self.sum_secs(),
+        }
+    }
+}
+
+/// A consistent-enough copy of an [`AtomicHistogram`] for JSON rendering
+/// and quantile estimation.
+pub struct HistSnapshot {
+    pub bounds: &'static [f64],
+    /// Non-cumulative per-bucket counts; last entry is the `+Inf` overflow.
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum_secs: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.count as f64
+        }
+    }
+
+    /// Histogram-quantile estimate: the upper bound of the bucket where the
+    /// cumulative count crosses `q * count` (the `+Inf` bucket reports the
+    /// last finite bound). Coarse by construction, like PromQL's.
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut cumulative = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cumulative += c;
+            if cumulative >= target.max(1) {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    self.bounds[self.bounds.len() - 1]
+                };
+            }
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    /// JSON summary for `/v1/stats` (milliseconds, which is the scale every
+    /// serving latency here lives at).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("mean_ms", Json::Num(self.mean_secs() * 1e3)),
+            ("p50_ms", Json::Num(self.quantile_secs(0.5) * 1e3)),
+            ("p99_ms", Json::Num(self.quantile_secs(0.99) * 1e3)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_cumulative_counts_and_sum() {
+        let h = AtomicHistogram::new(&REQUEST_BUCKETS);
+        h.record(Duration::from_micros(500)); // ≤ 0.001
+        h.record(Duration::from_millis(30)); // ≤ 0.05
+        h.record(Duration::from_secs(60)); // +Inf
+        let mut s = String::new();
+        h.render_prometheus("x_seconds", &mut s);
+        assert!(s.contains("x_seconds_bucket{le=\"0.001\"} 1"), "{s}");
+        assert!(s.contains("x_seconds_bucket{le=\"0.05\"} 2"), "{s}");
+        assert!(s.contains("x_seconds_bucket{le=\"5\"} 2"), "{s}");
+        assert!(s.contains("x_seconds_bucket{le=\"+Inf\"} 3"), "{s}");
+        assert!(s.contains("x_seconds_count 3"), "{s}");
+        assert_eq!(h.count(), 3);
+        let want = 0.0005 + 0.03 + 60.0;
+        assert!((h.sum_secs() - want).abs() < 1e-3, "sum {}", h.sum_secs());
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_end_at_count() {
+        let h = AtomicHistogram::new(&STEP_BUCKETS);
+        for i in 0..100u64 {
+            h.record_secs(i as f64 * 0.0004);
+        }
+        let snap = h.snapshot();
+        let mut cumulative = 0u64;
+        let mut prev = 0u64;
+        for &c in &snap.counts {
+            cumulative += c;
+            assert!(cumulative >= prev, "cumulative counts must be monotone");
+            prev = cumulative;
+        }
+        assert_eq!(cumulative, snap.count, "buckets (incl. +Inf) must sum to count");
+        assert_eq!(snap.count, 100);
+    }
+
+    #[test]
+    fn concurrent_records_lose_nothing() {
+        let h = std::sync::Arc::new(AtomicHistogram::new(&REQUEST_BUCKETS));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        h.record_secs((t * 1000 + i) as f64 * 1e-6);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 8000);
+        let snap = h.snapshot();
+        assert_eq!(snap.counts.iter().sum::<u64>(), 8000);
+    }
+
+    #[test]
+    fn quantiles_and_mean() {
+        let h = AtomicHistogram::new(&REQUEST_BUCKETS);
+        assert_eq!(h.snapshot().quantile_secs(0.5), 0.0);
+        for _ in 0..99 {
+            h.record_secs(0.002); // ≤ 0.0025
+        }
+        h.record_secs(2.0); // ≤ 5.0
+        let snap = h.snapshot();
+        assert_eq!(snap.quantile_secs(0.5), 0.0025);
+        assert_eq!(snap.quantile_secs(0.99), 0.0025);
+        assert_eq!(snap.quantile_secs(1.0), 5.0);
+        assert!(snap.mean_secs() > 0.0);
+        let j = snap.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(100));
+    }
+}

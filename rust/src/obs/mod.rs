@@ -1,0 +1,33 @@
+//! Zero-dependency observability: lock-free histograms, a global per-phase
+//! decode profiler, request spans, and quantization-quality telemetry.
+//!
+//! Everything here is std-only and allocation-free on the hot paths:
+//!
+//! * [`hist::AtomicHistogram`] — fixed-bucket histogram over `AtomicU64`
+//!   counters (no lock on the record path); renders Prometheus cumulative
+//!   text and JSON snapshots. The serving metrics use it for TTFT,
+//!   queue-wait, and per-step decode latency.
+//! * [`profiler`] — a global, runtime-switchable phase profiler for the
+//!   transformer core ([`crate::backend::fwd`]): scoped `Instant` timers
+//!   accumulate nanoseconds per [`profiler::Phase`] (embed, per-`LinId`
+//!   linear, KV read/write, MLP, token pick, …). Disabled by default; the
+//!   hot path pays a single relaxed atomic load per would-be timer. Enable
+//!   with `SINQ_PROFILE=1` (or [`profiler::set_enabled`]).
+//! * [`span::RequestSpan`] — per-request timing threaded serve → engine →
+//!   `BatchDecoder`: queue-wait, admission, first token, completion; plus
+//!   the `usage` payload (`prompt_tokens`, `completion_tokens`, `ttft_ms`,
+//!   `tokens_per_sec`) and the `--log-json` structured log line.
+//! * [`quant::QuantReport`] — build-time per-layer quantization quality:
+//!   Sinkhorn iterations-to-convergence, row/col variance imbalance, and
+//!   quant MSE/NMSE, surfaced by `sinq analyze profile`, the serve startup
+//!   log, and `GET /v1/stats`.
+
+pub mod hist;
+pub mod profiler;
+pub mod quant;
+pub mod span;
+
+pub use hist::{AtomicHistogram, HistSnapshot};
+pub use profiler::{Phase, ProfileSnapshot};
+pub use quant::{LayerQuantStats, QuantReport};
+pub use span::{RequestSpan, Usage};

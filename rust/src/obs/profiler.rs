@@ -1,0 +1,280 @@
+//! Global per-phase profiler for the transformer core.
+//!
+//! The decode and forward hot loops in [`crate::backend::fwd`] wrap each
+//! phase (embed, per-`LinId` linear dispatch, KV write/attend, MLP, token
+//! pick) in [`start`]/[`stop`] pairs. When profiling is off — the default —
+//! [`start`] is a single relaxed atomic load returning `None` and [`stop`]
+//! is a no-op, so the hot path's cost is one predictable branch per phase.
+//! When on (`SINQ_PROFILE=1` or [`set_enabled`]), each pair accumulates
+//! elapsed nanoseconds and a call count into lock-free global counters.
+//!
+//! Timing never touches the arithmetic: greedy decode tokens are
+//! bit-identical whether the profiler is on or off (regression-tested in
+//! `tests/unified_core.rs`).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Once;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One timed phase of the transformer core. Linear phases mirror the
+/// `LinId` dispatch in [`crate::backend::fwd`]; `Moe` covers the whole
+/// per-row switch-MoE path (router + expert matvecs route together).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Embed,
+    Rope,
+    Norm,
+    LinWq,
+    LinWk,
+    LinWv,
+    LinWo,
+    LinWg,
+    LinWu,
+    LinWd,
+    Moe,
+    LinLmHead,
+    KvWrite,
+    KvAttend,
+    Attend,
+    Activation,
+    TokenPick,
+}
+
+pub const PHASE_COUNT: usize = 17;
+
+pub const ALL_PHASES: [Phase; PHASE_COUNT] = [
+    Phase::Embed,
+    Phase::Rope,
+    Phase::Norm,
+    Phase::LinWq,
+    Phase::LinWk,
+    Phase::LinWv,
+    Phase::LinWo,
+    Phase::LinWg,
+    Phase::LinWu,
+    Phase::LinWd,
+    Phase::Moe,
+    Phase::LinLmHead,
+    Phase::KvWrite,
+    Phase::KvAttend,
+    Phase::Attend,
+    Phase::Activation,
+    Phase::TokenPick,
+];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Embed => "embed",
+            Phase::Rope => "rope",
+            Phase::Norm => "norm",
+            Phase::LinWq => "lin_wq",
+            Phase::LinWk => "lin_wk",
+            Phase::LinWv => "lin_wv",
+            Phase::LinWo => "lin_wo",
+            Phase::LinWg => "lin_wg",
+            Phase::LinWu => "lin_wu",
+            Phase::LinWd => "lin_wd",
+            Phase::Moe => "moe",
+            Phase::LinLmHead => "lin_lm_head",
+            Phase::KvWrite => "kv_write",
+            Phase::KvAttend => "kv_attend",
+            Phase::Attend => "attend",
+            Phase::Activation => "activation",
+            Phase::TokenPick => "token_pick",
+        }
+    }
+
+    #[inline]
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+// Interior mutability is the point: these consts exist only to const-init
+// the static atomic arrays.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
+static NANOS: [AtomicU64; PHASE_COUNT] = [ZERO; PHASE_COUNT];
+static CALLS: [AtomicU64; PHASE_COUNT] = [ZERO; PHASE_COUNT];
+
+fn env_wants_profiling() -> bool {
+    matches!(
+        std::env::var("SINQ_PROFILE").as_deref(),
+        Ok("1") | Ok("on") | Ok("true") | Ok("yes")
+    )
+}
+
+/// Is the profiler currently recording? First call folds in the
+/// `SINQ_PROFILE` environment switch; after that it is one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENV_INIT.call_once(|| {
+        if env_wants_profiling() {
+            ENABLED.store(true, Ordering::Relaxed);
+        }
+    });
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the profiler on or off at runtime (tests, benches, serve startup).
+pub fn set_enabled(on: bool) {
+    ENV_INIT.call_once(|| {});
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Start a phase timer: `None` (one branch, no clock read) when disabled.
+#[inline]
+pub fn start() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Close a phase timer opened by [`start`]; no-op when it returned `None`.
+#[inline]
+pub fn stop(phase: Phase, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        let i = phase.index();
+        NANOS[i].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        CALLS[i].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Zero every accumulator (the enabled switch is left as-is).
+pub fn reset() {
+    for i in 0..PHASE_COUNT {
+        NANOS[i].store(0, Ordering::Relaxed);
+        CALLS[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// One phase's accumulated totals plus its share of all profiled time.
+#[derive(Debug, Clone)]
+pub struct PhaseStat {
+    pub phase: &'static str,
+    pub nanos: u64,
+    pub calls: u64,
+    pub pct: f64,
+}
+
+/// Point-in-time copy of the profiler state. `phases` lists only phases
+/// that recorded time, ordered hottest-first; `pct` is each phase's share
+/// of `total_nanos`, so the shares sum to ~100 by construction.
+#[derive(Debug, Clone)]
+pub struct ProfileSnapshot {
+    pub enabled: bool,
+    /// Active dispatch kernel ISA the timed code ran under.
+    pub kernel: &'static str,
+    pub total_nanos: u64,
+    pub phases: Vec<PhaseStat>,
+}
+
+pub fn snapshot() -> ProfileSnapshot {
+    let mut phases: Vec<PhaseStat> = ALL_PHASES
+        .iter()
+        .filter_map(|p| {
+            let i = p.index();
+            let nanos = NANOS[i].load(Ordering::Relaxed);
+            let calls = CALLS[i].load(Ordering::Relaxed);
+            (calls > 0).then_some(PhaseStat { phase: p.name(), nanos, calls, pct: 0.0 })
+        })
+        .collect();
+    let total_nanos: u64 = phases.iter().map(|p| p.nanos).sum();
+    if total_nanos > 0 {
+        for p in &mut phases {
+            p.pct = p.nanos as f64 / total_nanos as f64 * 100.0;
+        }
+    }
+    phases.sort_by(|a, b| b.nanos.cmp(&a.nanos));
+    ProfileSnapshot {
+        enabled: enabled(),
+        kernel: crate::backend::simd::kernel_name(),
+        total_nanos,
+        phases,
+    }
+}
+
+impl ProfileSnapshot {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled)),
+            ("kernel", Json::Str(self.kernel.to_string())),
+            ("total_ms", Json::Num(self.total_nanos as f64 / 1e6)),
+            (
+                "breakdown",
+                Json::Arr(
+                    self.phases
+                        .iter()
+                        .map(|p| {
+                            Json::obj(vec![
+                                ("phase", Json::Str(p.phase.to_string())),
+                                ("ms", Json::Num(p.nanos as f64 / 1e6)),
+                                ("calls", Json::Num(p.calls as f64)),
+                                ("pct", Json::Num((p.pct * 100.0).round() / 100.0)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global profiler is process-wide state, so every assertion about
+    // it lives in this one serialized test (cargo runs tests in the same
+    // binary concurrently).
+    #[test]
+    fn profiler_accumulates_only_when_enabled_and_pcts_sum_to_100() {
+        set_enabled(false);
+        reset();
+        let t = start();
+        assert!(t.is_none(), "disabled profiler must not read the clock");
+        stop(Phase::Embed, t);
+        assert_eq!(snapshot().total_nanos, 0);
+        assert!(!snapshot().enabled);
+
+        set_enabled(true);
+        let t = start();
+        assert!(t.is_some());
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        stop(Phase::Embed, t);
+        let t = start();
+        stop(Phase::LinWq, t);
+        let snap = snapshot();
+        assert!(snap.enabled);
+        assert!(snap.total_nanos > 0);
+        assert!(!snap.phases.is_empty());
+        let pct_sum: f64 = snap.phases.iter().map(|p| p.pct).sum();
+        assert!((pct_sum - 100.0).abs() < 1e-6, "pcts sum to {pct_sum}");
+        // Hottest-first ordering is maintained.
+        for pair in snap.phases.windows(2) {
+            assert!(pair[0].nanos >= pair[1].nanos);
+        }
+        let j = snap.to_json();
+        assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+        assert!(!j.get("breakdown").unwrap().as_arr().unwrap().is_empty());
+
+        set_enabled(false);
+        reset();
+    }
+
+    #[test]
+    fn phase_names_are_unique() {
+        let mut names: Vec<&str> = ALL_PHASES.iter().map(|p| p.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), PHASE_COUNT);
+    }
+}

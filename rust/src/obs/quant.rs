@@ -1,0 +1,188 @@
+//! Quantization-quality telemetry recorded at model build time.
+//!
+//! Per-layer error telemetry is how outlier-heavy layers are identified
+//! (the OWQ observation); here every quantized linear records its Sinkhorn
+//! iterations-to-convergence, final row/col variance imbalance, and
+//! reconstruction MSE/NMSE. The scheduler fills one [`LayerQuantStats`]
+//! per job, the pipeline folds them into a [`QuantReport`] attached to the
+//! native backend, and the report surfaces through `sinq analyze profile`,
+//! the serve startup log line, and `GET /v1/stats`.
+
+use crate::util::json::Json;
+
+/// Per-layer quantization outcome (also the scheduler's per-job report).
+#[derive(Debug, Clone)]
+pub struct LayerQuantStats {
+    /// Weight-map key (`layers.0.wq`, `lm_head`, …).
+    pub layer: String,
+    /// Wall-clock the quantization job took.
+    pub millis: f64,
+    /// Memory including auxiliaries (the paper's "Mem." accounting).
+    pub bits_per_weight: f64,
+    pub rows: usize,
+    pub cols: usize,
+    /// Mean squared reconstruction error `‖W − Ŵ‖²_F / (rows·cols)`.
+    pub mse: f64,
+    /// Normalized MSE `‖W − Ŵ‖²_F / ‖W‖²_F` (scale-free across layers).
+    pub nmse: f64,
+    /// Sinkhorn update iterations until the best (lowest-imbalance)
+    /// iterate; `None` for methods that do not normalize.
+    pub sinkhorn_iters: Option<usize>,
+    /// Row/col std imbalance `I(W)` of the input matrix.
+    pub imbalance_initial: Option<f64>,
+    /// Imbalance of the best normalized iterate.
+    pub imbalance_final: Option<f64>,
+}
+
+impl LayerQuantStats {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("layer", Json::Str(self.layer.clone())),
+            ("rows", Json::Num(self.rows as f64)),
+            ("cols", Json::Num(self.cols as f64)),
+            ("bits_per_weight", Json::Num(self.bits_per_weight)),
+            ("mse", Json::Num(self.mse)),
+            ("nmse", Json::Num(self.nmse)),
+            ("millis", Json::Num(self.millis)),
+        ];
+        if let Some(iters) = self.sinkhorn_iters {
+            pairs.push(("sinkhorn_iters", Json::Num(iters as f64)));
+        }
+        if let Some(i0) = self.imbalance_initial {
+            pairs.push(("imbalance_initial", Json::Num(i0)));
+        }
+        if let Some(i1) = self.imbalance_final {
+            pairs.push(("imbalance_final", Json::Num(i1)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The whole model's quantization-quality report.
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub method: String,
+    pub bits: u32,
+    pub layers: Vec<LayerQuantStats>,
+}
+
+impl QuantReport {
+    pub fn new(method: &str, bits: u32, layers: Vec<LayerQuantStats>) -> QuantReport {
+        QuantReport { method: method.to_string(), bits, layers }
+    }
+
+    pub fn mean_nmse(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.nmse).sum::<f64>() / self.layers.len() as f64
+    }
+
+    /// The layer the quantizer hurt most (highest NMSE).
+    pub fn worst_layer(&self) -> Option<&LayerQuantStats> {
+        self.layers
+            .iter()
+            .max_by(|a, b| a.nmse.partial_cmp(&b.nmse).unwrap_or(std::cmp::Ordering::Equal))
+    }
+
+    /// Median Sinkhorn iterations across layers that normalized.
+    pub fn median_sinkhorn_iters(&self) -> Option<usize> {
+        let mut iters: Vec<usize> =
+            self.layers.iter().filter_map(|l| l.sinkhorn_iters).collect();
+        if iters.is_empty() {
+            return None;
+        }
+        iters.sort_unstable();
+        Some(iters[iters.len() / 2])
+    }
+
+    /// One startup log line summarizing the report.
+    pub fn summary_line(&self) -> String {
+        let worst = self
+            .worst_layer()
+            .map(|l| format!("{} ({:.2e})", l.layer, l.nmse))
+            .unwrap_or_else(|| "n/a".to_string());
+        let iters = self
+            .median_sinkhorn_iters()
+            .map(|i| format!(", median sinkhorn iters {i}"))
+            .unwrap_or_default();
+        format!(
+            "quant report: {} {}-bit, {} layers, mean NMSE {:.2e}, worst {worst}{iters}",
+            self.method,
+            self.bits,
+            self.layers.len(),
+            self.mean_nmse()
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("bits", Json::Num(self.bits as f64)),
+            ("mean_nmse", Json::Num(self.mean_nmse())),
+            ("layers", Json::Arr(self.layers.iter().map(|l| l.to_json()).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer(name: &str, nmse: f64, iters: Option<usize>) -> LayerQuantStats {
+        LayerQuantStats {
+            layer: name.to_string(),
+            millis: 1.0,
+            bits_per_weight: 4.5,
+            rows: 8,
+            cols: 16,
+            mse: nmse * 1e-4,
+            nmse,
+            sinkhorn_iters: iters,
+            imbalance_initial: iters.map(|_| 3.0),
+            imbalance_final: iters.map(|_| 1.2),
+        }
+    }
+
+    #[test]
+    fn aggregates_and_summary() {
+        let r = QuantReport::new(
+            "sinq",
+            4,
+            vec![
+                layer("layers.0.wq", 1e-3, Some(10)),
+                layer("layers.0.wk", 4e-3, Some(14)),
+                layer("lm_head", 2e-3, Some(12)),
+            ],
+        );
+        assert!((r.mean_nmse() - (1e-3 + 4e-3 + 2e-3) / 3.0).abs() < 1e-12);
+        assert_eq!(r.worst_layer().unwrap().layer, "layers.0.wk");
+        assert_eq!(r.median_sinkhorn_iters(), Some(12));
+        let line = r.summary_line();
+        assert!(line.contains("sinq 4-bit"), "{line}");
+        assert!(line.contains("layers.0.wk"), "{line}");
+        assert!(line.contains("median sinkhorn iters 12"), "{line}");
+        let j = r.to_json();
+        assert_eq!(j.get("layers").and_then(Json::as_arr).unwrap().len(), 3);
+        let l0 = &j.get("layers").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(l0.get("sinkhorn_iters").and_then(Json::as_usize), Some(10));
+        assert!(l0.get("nmse").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn rtn_style_report_without_sinkhorn_fields() {
+        let r = QuantReport::new("rtn", 4, vec![layer("layers.0.wq", 1e-3, None)]);
+        assert_eq!(r.median_sinkhorn_iters(), None);
+        assert!(!r.summary_line().contains("sinkhorn"));
+        let l0 = &r.to_json().get("layers").and_then(Json::as_arr).unwrap()[0];
+        assert!(l0.get("sinkhorn_iters").is_none());
+    }
+
+    #[test]
+    fn empty_report_is_safe() {
+        let r = QuantReport::new("sinq", 4, vec![]);
+        assert_eq!(r.mean_nmse(), 0.0);
+        assert!(r.worst_layer().is_none());
+        assert!(r.summary_line().contains("0 layers"));
+    }
+}

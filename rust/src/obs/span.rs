@@ -1,0 +1,151 @@
+//! Per-request spans: the timestamps a generation request accumulates on
+//! its way serve → engine → `BatchDecoder`, and the `usage`/log payloads
+//! derived from them.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Lifecycle timestamps for one generation request. The request ID is
+/// minted at accept and threads through the engine into the decoder slots,
+/// so every span, log line, and SSE stream agrees on identity.
+#[derive(Debug, Clone)]
+pub struct RequestSpan {
+    pub id: usize,
+    pub prompt_tokens: usize,
+    /// Accepted into the engine queue.
+    pub enqueued: Instant,
+    /// Admitted into a KV slot (prefill starts here).
+    pub admitted: Option<Instant>,
+    /// First generated token handed to the stream (prefill ends here).
+    pub first_token: Option<Instant>,
+}
+
+impl RequestSpan {
+    pub fn new(id: usize, prompt_tokens: usize, enqueued: Instant) -> RequestSpan {
+        RequestSpan { id, prompt_tokens, enqueued, admitted: None, first_token: None }
+    }
+
+    /// Queue wait: accept → KV-slot admission.
+    pub fn queue_wait_secs(&self) -> f64 {
+        self.admitted.map_or(0.0, |t| t.duration_since(self.enqueued).as_secs_f64())
+    }
+
+    /// Client-perceived time to first token: accept → first token.
+    pub fn ttft_secs(&self) -> f64 {
+        self.first_token.map_or(0.0, |t| t.duration_since(self.enqueued).as_secs_f64())
+    }
+
+    /// Close the span: totals from accept to now, with `completion_tokens`
+    /// generated.
+    pub fn finish(&self, completion_tokens: usize) -> Usage {
+        Usage {
+            prompt_tokens: self.prompt_tokens,
+            completion_tokens,
+            queue_wait_ms: self.queue_wait_secs() * 1e3,
+            ttft_ms: self.ttft_secs() * 1e3,
+            total_ms: self.enqueued.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+}
+
+/// The `usage` object attached to every generation response (JSON body and
+/// the SSE `done` event) and to `--log-json` lines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Usage {
+    pub prompt_tokens: usize,
+    pub completion_tokens: usize,
+    pub queue_wait_ms: f64,
+    pub ttft_ms: f64,
+    pub total_ms: f64,
+}
+
+impl Usage {
+    /// Request-level decode throughput: generated tokens over the decode
+    /// window (first token → completion), falling back to the whole request
+    /// when the decode window is degenerate (e.g. a 1-token generation).
+    pub fn tokens_per_sec(&self) -> f64 {
+        let decode_ms = self.total_ms - self.ttft_ms;
+        let window_ms = if decode_ms > 1e-3 { decode_ms } else { self.total_ms };
+        if window_ms <= 0.0 {
+            return 0.0;
+        }
+        self.completion_tokens as f64 / (window_ms / 1e3)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("prompt_tokens", Json::Num(self.prompt_tokens as f64)),
+            ("completion_tokens", Json::Num(self.completion_tokens as f64)),
+            ("queue_wait_ms", Json::Num(round3(self.queue_wait_ms))),
+            ("ttft_ms", Json::Num(round3(self.ttft_ms))),
+            ("total_ms", Json::Num(round3(self.total_ms))),
+            ("tokens_per_sec", Json::Num(round3(self.tokens_per_sec()))),
+        ])
+    }
+}
+
+fn round3(v: f64) -> f64 {
+    (v * 1e3).round() / 1e3
+}
+
+/// One `--log-json` structured log line for a completed request: compact
+/// single-line JSON, stable keys, written to stdout by the engine loop.
+pub fn request_log_line(id: usize, finish_reason: &str, usage: &Usage) -> String {
+    let mut m = match usage.to_json() {
+        Json::Obj(m) => m,
+        _ => unreachable!("usage serializes to an object"),
+    };
+    m.insert("event".to_string(), Json::Str("request_done".to_string()));
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("finish_reason".to_string(), Json::Str(finish_reason.to_string()));
+    Json::Obj(m).to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn span_times_are_monotone_and_usage_derives() {
+        let t0 = Instant::now();
+        let mut span = RequestSpan::new(7, 12, t0);
+        assert_eq!(span.queue_wait_secs(), 0.0);
+        span.admitted = Some(t0 + Duration::from_millis(5));
+        span.first_token = Some(t0 + Duration::from_millis(20));
+        assert!((span.queue_wait_secs() - 0.005).abs() < 1e-9);
+        assert!((span.ttft_secs() - 0.020).abs() < 1e-9);
+        let usage = span.finish(40);
+        assert_eq!(usage.prompt_tokens, 12);
+        assert_eq!(usage.completion_tokens, 40);
+        assert!(usage.total_ms >= usage.ttft_ms);
+        assert!(usage.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn usage_json_and_log_line_shapes() {
+        let usage = Usage {
+            prompt_tokens: 3,
+            completion_tokens: 9,
+            queue_wait_ms: 0.5,
+            ttft_ms: 2.0,
+            total_ms: 11.0,
+        };
+        // 9 tokens over the 9ms decode window = 1000 tok/s.
+        assert!((usage.tokens_per_sec() - 1000.0).abs() < 1e-6);
+        let j = usage.to_json();
+        assert_eq!(j.get("prompt_tokens").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("completion_tokens").and_then(Json::as_usize), Some(9));
+        assert!(j.get("ttft_ms").and_then(Json::as_f64).is_some());
+        assert!(j.get("tokens_per_sec").and_then(Json::as_f64).is_some());
+
+        let line = request_log_line(42, "length", &usage);
+        let back = Json::parse(&line).expect("log line parses");
+        assert_eq!(back.get("event").and_then(Json::as_str), Some("request_done"));
+        assert_eq!(back.get("id").and_then(Json::as_usize), Some(42));
+        assert_eq!(back.get("finish_reason").and_then(Json::as_str), Some("length"));
+        assert_eq!(back.get("completion_tokens").and_then(Json::as_usize), Some(9));
+        assert!(!line.contains('\n'), "log lines must be single-line");
+    }
+}

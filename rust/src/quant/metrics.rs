@@ -18,7 +18,7 @@ pub fn activation_recon_error(x: &Matrix, w: &Matrix, q: &QuantizedLinear) -> f6
     rel_fro(&y, &y_hat)
 }
 
-fn rel_fro(a: &Matrix, b: &Matrix) -> f64 {
+pub(crate) fn rel_fro(a: &Matrix, b: &Matrix) -> f64 {
     let num: f64 = a.data.iter().zip(&b.data).map(|(&x, &y)| ((x - y) as f64).powi(2)).sum();
     let den: f64 = a.data.iter().map(|&x| (x as f64).powi(2)).sum();
     (num / den.max(1e-30)).sqrt()

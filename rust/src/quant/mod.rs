@@ -384,6 +384,17 @@ pub fn quantize_matrix(
     cfg: &QuantConfig,
     calib: Option<&Calibration>,
 ) -> anyhow::Result<QuantizedLinear> {
+    quantize_matrix_traced(w, cfg, calib).map(|(q, _)| q)
+}
+
+/// [`quantize_matrix`], also returning the Sinkhorn normalization outcome
+/// for methods that normalize (`sinq`/`sinq-noshift`); `None` otherwise.
+/// Feeds the build-time quantization-quality report.
+pub fn quantize_matrix_traced(
+    w: &Matrix,
+    cfg: &QuantConfig,
+    calib: Option<&Calibration>,
+) -> anyhow::Result<(QuantizedLinear, Option<sinq::SinkhornScales>)> {
     let need = cfg.method.needs_calibration();
     anyhow::ensure!(
         !need || calib.is_some(),
@@ -391,18 +402,21 @@ pub fn quantize_matrix(
         cfg.method.name()
     );
     Ok(match cfg.method {
-        Method::Rtn => rtn::quantize(w, cfg),
-        Method::BnB => rtn::quantize(w, cfg), // grid carries FP4/NF4
-        Method::HadamardRtn => hadamard::quantize(w, cfg),
-        Method::Higgs => hadamard::quantize_higgs(w, cfg),
-        Method::Hqq => hqq::quantize(w, cfg),
-        Method::Sinq | Method::SinqNoShift => sinq::quantize(w, cfg),
-        Method::Awq => awq::quantize(w, cfg, calib.unwrap()),
-        Method::ASinq => awq::quantize_asinq(w, cfg, calib.unwrap()),
-        Method::Gptq => gptq::quantize(w, cfg, calib.unwrap(), false),
-        Method::HadamardGptq => gptq::quantize(w, cfg, calib.unwrap(), true),
-        Method::CrossQuant => crossquant::quantize(w, cfg, calib.unwrap()),
-        Method::Codebook => codebook::quantize(w, cfg),
+        Method::Rtn => (rtn::quantize(w, cfg), None),
+        Method::BnB => (rtn::quantize(w, cfg), None), // grid carries FP4/NF4
+        Method::HadamardRtn => (hadamard::quantize(w, cfg), None),
+        Method::Higgs => (hadamard::quantize_higgs(w, cfg), None),
+        Method::Hqq => (hqq::quantize(w, cfg), None),
+        Method::Sinq | Method::SinqNoShift => {
+            let (q, scales) = sinq::quantize_with_stats(w, cfg);
+            (q, Some(scales))
+        }
+        Method::Awq => (awq::quantize(w, cfg, calib.unwrap()), None),
+        Method::ASinq => (awq::quantize_asinq(w, cfg, calib.unwrap()), None),
+        Method::Gptq => (gptq::quantize(w, cfg, calib.unwrap(), false), None),
+        Method::HadamardGptq => (gptq::quantize(w, cfg, calib.unwrap(), true), None),
+        Method::CrossQuant => (crossquant::quantize(w, cfg, calib.unwrap()), None),
+        Method::Codebook => (codebook::quantize(w, cfg), None),
     })
 }
 

@@ -30,6 +30,9 @@ pub struct SinkhornScales {
     pub imbalance: f64,
     /// Imbalance of the input matrix (for diagnostics).
     pub initial_imbalance: f64,
+    /// Iterations until the best iterate was reached (`k` of Algorithm 1's
+    /// best-tracking loop) — the layer's effective convergence speed.
+    pub iters: usize,
 }
 
 /// Algorithm 1 lines 1–17: find `s`, `t` minimizing the imbalance of
@@ -55,9 +58,10 @@ pub fn sinkhorn_normalize(w: &Matrix, iters: usize, clamp: (f32, f32)) -> Sinkho
     let mut best_v = v.clone();
     let initial_imbalance = stats::imbalance(w);
     let mut best_i = f64::INFINITY;
+    let mut best_k = 0usize;
 
     let mut w_hat = w.clone();
-    for _k in 0..iters {
+    for k in 0..iters {
         // Line 6: Ŵ = (W ⊘ exp(u)) ⊘ exp(v). Rebuilt from the original W so
         // u/v always mean *total* log-scales (matches the algorithm listing).
         w_hat.data.copy_from_slice(&w.data);
@@ -74,6 +78,7 @@ pub fn sinkhorn_normalize(w: &Matrix, iters: usize, clamp: (f32, f32)) -> Sinkho
         let i_curr = stats::imbalance(&w_hat);
         if i_curr < best_i {
             best_i = i_curr;
+            best_k = k;
             best_u.copy_from_slice(&u);
             best_v.copy_from_slice(&v);
         }
@@ -95,12 +100,20 @@ pub fn sinkhorn_normalize(w: &Matrix, iters: usize, clamp: (f32, f32)) -> Sinkho
         col: best_v.iter().map(|&x| x.exp() as f32).collect(),
         imbalance: best_i,
         initial_imbalance,
+        iters: best_k,
     }
 }
 
 /// Full SINQ quantization (Algorithm 1): normalize, RTN the normalized
 /// matrix, merge row scales, return the dual-scale layer.
 pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
+    quantize_with_stats(w, cfg).0
+}
+
+/// [`quantize`], also returning the normalization outcome ([`SinkhornScales`]
+/// with iterations-to-convergence and before/after imbalance) for the
+/// build-time quantization-quality report.
+pub fn quantize_with_stats(w: &Matrix, cfg: &QuantConfig) -> (QuantizedLinear, SinkhornScales) {
     let scales = sinkhorn_normalize(w, cfg.sinq_iters, cfg.sinq_clamp);
 
     // Line 17: Ŵ = (W ⊘ s) ⊘ t.
@@ -127,7 +140,7 @@ pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
     }
     let t: Vec<f32> = scales.col.iter().map(|&x| round_f16(x)).collect();
 
-    QuantizedLinear {
+    let q = QuantizedLinear {
         rows: w.rows,
         cols: w.cols,
         group_size: cfg.group_size,
@@ -140,7 +153,8 @@ pub fn quantize(w: &Matrix, cfg: &QuantConfig) -> QuantizedLinear {
         hadamard_out: false,
         pair_codebook: None,
         aux: cfg.aux,
-    }
+    };
+    (q, scales)
 }
 
 #[cfg(test)]
@@ -162,6 +176,7 @@ mod tests {
             s.imbalance
         );
         assert!(s.imbalance >= 1.0);
+        assert!(s.iters < 24, "best iterate index {} out of range", s.iters);
     }
 
     #[test]

@@ -1058,6 +1058,44 @@ pub fn kv_cache_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// `sinq analyze profile`: the per-layer quantization-quality telemetry the
+/// scheduler records while quantizing (the same [`crate::obs::QuantReport`]
+/// the serving path exposes at `/v1/stats`) — Sinkhorn iterations to the
+/// best iterate, row/col imbalance before/after normalization, per-layer
+/// NMSE/MSE, and wall time.
+pub fn quant_profile_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    let mw = ctx.load_model(model)?;
+    let cfg = QuantConfig::new(Method::Sinq, 4);
+    let (qm, reports) = scheduler::quantize_model(&mw, &cfg, &ScheduleOpts::default())?;
+    let report = crate::obs::QuantReport::new(&qm.method, qm.bits, reports);
+    let mut t = Table::new(
+        &format!(
+            "Quantization profile — {model} via {} {}-bit ({})",
+            report.method,
+            report.bits,
+            report.summary_line()
+        ),
+        &["Layer", "Shape", "BPW", "Sinkhorn iters", "Imbalance init→final", "NMSE", "ms"],
+    );
+    for l in &report.layers {
+        let iters = l.sinkhorn_iters.map(|i| i.to_string()).unwrap_or_else(|| "-".into());
+        let imb = match (l.imbalance_initial, l.imbalance_final) {
+            (Some(a), Some(b)) => format!("{a:.3} → {b:.3}"),
+            _ => "-".into(),
+        };
+        t.row(vec![
+            l.layer.clone(),
+            format!("{}x{}", l.rows, l.cols),
+            f(l.bits_per_weight, 2),
+            iters,
+            imb,
+            format!("{:.2e}", l.nmse),
+            f(l.millis, 1),
+        ]);
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1088,6 +1126,21 @@ mod tests {
         // Quantized effective weights score through the same trait path.
         let row = ctx.eval_config(&mw, &QuantConfig::new(Method::Sinq, 4), false).unwrap();
         assert!(row.wiki.is_finite() && row.c4.is_finite());
+    }
+
+    #[test]
+    fn quant_profile_table_covers_every_layer_with_finite_stats() {
+        let ctx = native_ctx();
+        let t = quant_profile_table(&ctx, "pico").unwrap();
+        let mw = ctx.load_model("pico").unwrap();
+        assert_eq!(t.rows.len(), mw.cfg.quantizable_names().len());
+        assert!(t.title.contains("mean NMSE"), "summary line missing: {}", t.title);
+        for row in &t.rows {
+            let nmse: f64 = row[5].parse().unwrap();
+            assert!(nmse.is_finite() && nmse > 0.0, "nonsense NMSE row {row:?}");
+            let iters: usize = row[3].parse().unwrap();
+            assert!(iters < 24, "sinkhorn must report a converged iterate: {row:?}");
+        }
     }
 
     #[test]

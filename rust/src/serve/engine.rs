@@ -29,18 +29,19 @@ use std::time::{Duration, Instant};
 
 use crate::backend::batch::{ensure_fits, BatchDecoder, CancelOutcome};
 use crate::backend::{NativeBackend, SampleCfg};
+use crate::obs::span::{request_log_line, RequestSpan, Usage};
 use crate::serve::metrics::ServeMetrics;
 
 /// One event on a generation stream.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum StreamEvent {
     /// One greedily decoded token, emitted as soon as its step finishes.
     Token(u8),
-    /// Terminal event: the request completed.
+    /// Terminal event: the request completed, with its closed span's
+    /// `usage` accounting (token counts, queue wait, TTFT, totals).
     Done {
         finish_reason: &'static str,
-        prompt_tokens: usize,
-        gen_tokens: usize,
+        usage: Usage,
     },
     /// Terminal event: the request failed after admission.
     Error(String),
@@ -102,6 +103,8 @@ struct Shared {
     capacity: usize,
     max_queue: usize,
     metrics: Arc<ServeMetrics>,
+    /// `--log-json`: print one structured line per completed request.
+    log_json: bool,
     next_id: AtomicUsize,
     shutting_down: AtomicBool,
     /// Set when the engine thread has exited (drain finished or fatal error).
@@ -137,11 +140,11 @@ impl EngineClient {
         let metrics = &self.shared.metrics;
         if max_new == 0 {
             let (tx, rx) = channel();
-            let _ = tx.send(StreamEvent::Done {
-                finish_reason: "length",
-                prompt_tokens: prompt.len(),
-                gen_tokens: 0,
-            });
+            let usage = RequestSpan::new(id, prompt.len(), Instant::now()).finish(0);
+            if self.shared.log_json {
+                println!("{}", request_log_line(id, "length", &usage));
+            }
+            let _ = tx.send(StreamEvent::Done { finish_reason: "length", usage });
             metrics.requests_total.fetch_add(1, Ordering::Relaxed);
             metrics.completed_total.fetch_add(1, Ordering::Relaxed);
             return Ok(StreamHandle { id, rx });
@@ -196,6 +199,19 @@ impl GenEngine {
         max_queue: usize,
         metrics: Arc<ServeMetrics>,
     ) -> anyhow::Result<GenEngine> {
+        GenEngine::start_with_logging(be, slots, capacity, max_queue, metrics, false)
+    }
+
+    /// [`GenEngine::start`] with `--log-json` request logging: one compact
+    /// JSON line per completed request on stdout.
+    pub fn start_with_logging(
+        be: Arc<NativeBackend>,
+        slots: usize,
+        capacity: usize,
+        max_queue: usize,
+        metrics: Arc<ServeMetrics>,
+        log_json: bool,
+    ) -> anyhow::Result<GenEngine> {
         // Probe construction on the caller's thread so bad weight sets fail
         // at startup, not on the first request — and publish the KV shape
         // (`/healthz` + `/metrics` report it) while the decoder exists.
@@ -209,6 +225,7 @@ impl GenEngine {
             capacity: capacity.max(1),
             max_queue,
             metrics,
+            log_json,
             next_id: AtomicUsize::new(0),
             shutting_down: AtomicBool::new(false),
             dead: AtomicBool::new(false),
@@ -248,9 +265,7 @@ impl Drop for GenEngine {
 /// Decode progress the engine tracks per admitted request.
 struct Session {
     tx: Sender<StreamEvent>,
-    enqueued: Instant,
-    prompt_tokens: usize,
-    first_token_sent: bool,
+    span: RequestSpan,
 }
 
 fn engine_loop(
@@ -275,15 +290,8 @@ fn engine_loop(
                  sub: Submission| {
         match dec.submit_sampled(sub.id, &sub.prompt, sub.max_new, sub.sample) {
             Ok(()) => {
-                sessions.insert(
-                    sub.id,
-                    Session {
-                        tx: sub.tx,
-                        enqueued: sub.enqueued,
-                        prompt_tokens: sub.prompt.len(),
-                        first_token_sent: false,
-                    },
-                );
+                let span = RequestSpan::new(sub.id, sub.prompt.len(), sub.enqueued);
+                sessions.insert(sub.id, Session { tx: sub.tx, span });
             }
             Err(e) => {
                 // Pre-validated in submit(); defensive only.
@@ -334,6 +342,10 @@ fn engine_loop(
         }
 
         let pending_before = dec.pending();
+        // Captured just before step(): admission happens at the very top of
+        // the step, so this is the queue-wait stamp for drained admissions,
+        // and its elapsed time is the step latency.
+        let t_step = Instant::now();
         let stepped = match dec.step() {
             Ok(n) => n,
             Err(e) => {
@@ -357,15 +369,23 @@ fn engine_loop(
         if admitted > 0 {
             metrics.queued.fetch_sub(admitted, Ordering::SeqCst);
         }
+        for id in dec.drain_admitted() {
+            if let Some(s) = sessions.get_mut(&id) {
+                s.span.admitted = Some(t_step);
+                metrics.record_queue_wait(t_step.duration_since(s.span.enqueued));
+            }
+        }
         if stepped > 0 {
             metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
             metrics.tokens_generated.fetch_add(dec.emitted().len(), Ordering::Relaxed);
+            metrics.record_step(t_step.elapsed(), dec.emitted().len());
         }
         for &(id, tok) in dec.emitted() {
             if let Some(s) = sessions.get_mut(&id) {
-                if !s.first_token_sent {
-                    s.first_token_sent = true;
-                    metrics.record_ttft(s.enqueued.elapsed());
+                if s.span.first_token.is_none() {
+                    let now = Instant::now();
+                    s.span.first_token = Some(now);
+                    metrics.record_ttft(now.duration_since(s.span.enqueued));
                 }
                 let _ = s.tx.send(StreamEvent::Token(tok));
             }
@@ -373,11 +393,11 @@ fn engine_loop(
         for out in dec.take_finished() {
             if let Some(s) = sessions.remove(&out.id) {
                 metrics.completed_total.fetch_add(1, Ordering::Relaxed);
-                let _ = s.tx.send(StreamEvent::Done {
-                    finish_reason: "length",
-                    prompt_tokens: s.prompt_tokens,
-                    gen_tokens: out.tokens.len(),
-                });
+                let usage = s.span.finish(out.tokens.len());
+                if shared.log_json {
+                    println!("{}", request_log_line(out.id, "length", &usage));
+                }
+                let _ = s.tx.send(StreamEvent::Done { finish_reason: "length", usage });
             }
         }
         metrics.live_slots.store(dec.live(), Ordering::Relaxed);
@@ -429,18 +449,26 @@ mod tests {
         let handle = eng.client().submit(b"hello engine".to_vec(), 7, None).unwrap();
         let (tokens, terminal) = collect(handle);
         assert_eq!(tokens, expected);
-        assert_eq!(
-            terminal,
-            Some(StreamEvent::Done {
-                finish_reason: "length",
-                prompt_tokens: 12,
-                gen_tokens: 7
-            })
-        );
+        match terminal {
+            Some(StreamEvent::Done { finish_reason: "length", usage }) => {
+                assert_eq!(usage.prompt_tokens, 12);
+                assert_eq!(usage.completion_tokens, 7);
+                assert!(usage.ttft_ms > 0.0, "TTFT must be stamped");
+                assert!(usage.total_ms >= usage.ttft_ms);
+                assert!(usage.queue_wait_ms >= 0.0);
+                assert!(usage.tokens_per_sec() > 0.0);
+            }
+            other => panic!("expected Done, got {other:?}"),
+        }
         eng.shutdown();
         assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.tokens_generated.load(Ordering::Relaxed), 7);
         assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+        // The span plumbing feeds every latency histogram exactly once per
+        // request / once per step.
+        assert_eq!(metrics.ttft.count(), 1);
+        assert_eq!(metrics.queue_wait.count(), 1);
+        assert!(metrics.step_latency.count() > 0);
     }
 
     #[test]
@@ -456,7 +484,10 @@ mod tests {
         }
         let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0, None).unwrap());
         assert!(tokens.is_empty());
-        assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 0, .. })));
+        assert!(matches!(
+            terminal,
+            Some(StreamEvent::Done { ref usage, .. }) if usage.completion_tokens == 0
+        ));
         eng.shutdown();
     }
 
@@ -511,7 +542,10 @@ mod tests {
         for h in handles {
             let (tokens, terminal) = collect(h);
             assert_eq!(tokens.len(), 4);
-            assert!(matches!(terminal, Some(StreamEvent::Done { gen_tokens: 4, .. })));
+            assert!(matches!(
+                terminal,
+                Some(StreamEvent::Done { ref usage, .. }) if usage.completion_tokens == 4
+            ));
         }
         assert!(matches!(
             client.submit(b"late".to_vec(), 1, None),

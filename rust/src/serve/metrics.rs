@@ -1,27 +1,77 @@
-//! Serving metrics: lock-free counters/gauges plus a time-to-first-token
-//! histogram, rendered as Prometheus text exposition for `GET /metrics`.
+//! Serving metrics: lock-free counters/gauges plus latency histograms
+//! (time-to-first-token, queue-wait, per-step decode latency), rendered as
+//! Prometheus text exposition for `GET /metrics` and as JSON snapshots for
+//! `GET /v1/stats`.
 //!
 //! The streaming engine and the connection handlers update these through a
-//! shared `Arc<ServeMetrics>`; `/metrics` renders a point-in-time snapshot.
-//! `tokens_per_sec` is generated tokens over process-lifetime wall clock —
-//! coarse, but zero-state and enough to see whether the engine is moving.
+//! shared `Arc<ServeMetrics>`. Every record path is lock-free: histograms
+//! are [`crate::obs::AtomicHistogram`]s and throughput feeds a fixed ring
+//! of packed atomics, so a slow scrape never stalls the decode loop.
+//!
+//! `sinq_serve_tokens_per_sec` is generated-token throughput over a rolling
+//! window of recent decode steps (the number a dashboard wants: what the
+//! engine is doing *now*). The old process-lifetime average — which decays
+//! toward zero whenever the server idles — is kept as
+//! `sinq_serve_tokens_per_sec_lifetime`.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
-/// TTFT histogram bucket upper bounds, in seconds (Prometheus `le` labels);
-/// observations above the last bound land in `+Inf`.
-pub const TTFT_BUCKETS: [f64; 10] =
-    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 1.0, 5.0];
+use crate::obs::hist::{AtomicHistogram, REQUEST_BUCKETS, STEP_BUCKETS};
 
-/// Cumulative-histogram state for request time-to-first-token.
-struct TtftHistogram {
-    /// Per-bucket counts (non-cumulative; the renderer accumulates), plus
-    /// one overflow slot for `+Inf`.
-    counts: [u64; TTFT_BUCKETS.len() + 1],
-    sum_secs: f64,
-    count: u64,
+/// Rolling throughput window length.
+const RATE_WINDOW_SECS: f64 = 10.0;
+
+/// Ring capacity for recent decode steps. At one entry per fused batch step
+/// this covers the full window even at thousands of steps per second for
+/// short windows; overwritten entries simply age out of the estimate.
+const RATE_RING: usize = 2048;
+
+/// Lock-free rolling-window token-rate estimator: a ring of packed
+/// `(micros_since_start << 16) | tokens` entries, one per decode step.
+/// Readers scan the whole (fixed, small) ring and sum tokens whose
+/// timestamp falls inside the window.
+struct RateRing {
+    started: Instant,
+    slots: Vec<AtomicU64>,
+    next: AtomicUsize,
+}
+
+impl RateRing {
+    fn new(started: Instant) -> RateRing {
+        RateRing {
+            started,
+            slots: (0..RATE_RING).map(|_| AtomicU64::new(0)).collect(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    fn record(&self, tokens: usize) {
+        if tokens == 0 {
+            return;
+        }
+        let micros = self.started.elapsed().as_micros() as u64;
+        // 48 bits of microseconds (~8.9 years) + 16 bits of tokens.
+        let packed = (micros << 16) | (tokens as u64).min(0xFFFF);
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % RATE_RING;
+        self.slots[i].store(packed, Ordering::Relaxed);
+    }
+
+    /// Tokens/sec over the most recent window (clamped to process uptime so
+    /// a freshly started server reports its true rate, not a diluted one).
+    fn rate(&self) -> f64 {
+        let now = self.started.elapsed().as_micros() as u64;
+        let horizon = now.saturating_sub((RATE_WINDOW_SECS * 1e6) as u64);
+        let mut tokens = 0u64;
+        for slot in &self.slots {
+            let packed = slot.load(Ordering::Relaxed);
+            if packed != 0 && (packed >> 16) >= horizon {
+                tokens += packed & 0xFFFF;
+            }
+        }
+        let window = (now as f64 / 1e6).min(RATE_WINDOW_SECS).max(1e-9);
+        tokens as f64 / window
+    }
 }
 
 /// Counters and gauges for the serving front-end.
@@ -55,13 +105,20 @@ pub struct ServeMetrics {
     pub kv_bytes_per_slot: AtomicUsize,
     /// Gauge: KV-cache element precision in bits (32 or 8).
     pub kv_bits: AtomicUsize,
-    ttft: Mutex<TtftHistogram>,
+    /// Request time-to-first-token (accept → first streamed token).
+    pub ttft: AtomicHistogram,
+    /// Request queue wait (accept → KV-slot admission).
+    pub queue_wait: AtomicHistogram,
+    /// Fused decode step latency (one `BatchDecoder::step`).
+    pub step_latency: AtomicHistogram,
+    rate: RateRing,
 }
 
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
+        let started = Instant::now();
         ServeMetrics {
-            started: Instant::now(),
+            started,
             requests_total: AtomicUsize::new(0),
             rejected_total: AtomicUsize::new(0),
             completed_total: AtomicUsize::new(0),
@@ -74,29 +131,43 @@ impl ServeMetrics {
             slots: AtomicUsize::new(0),
             kv_bytes_per_slot: AtomicUsize::new(0),
             kv_bits: AtomicUsize::new(32),
-            ttft: Mutex::new(TtftHistogram {
-                counts: [0; TTFT_BUCKETS.len() + 1],
-                sum_secs: 0.0,
-                count: 0,
-            }),
+            ttft: AtomicHistogram::new(&REQUEST_BUCKETS),
+            queue_wait: AtomicHistogram::new(&REQUEST_BUCKETS),
+            step_latency: AtomicHistogram::new(&STEP_BUCKETS),
+            rate: RateRing::new(started),
         }
     }
 
     /// Record one request's time-to-first-token.
     pub fn record_ttft(&self, ttft: Duration) {
-        let secs = ttft.as_secs_f64();
-        let slot = TTFT_BUCKETS
-            .iter()
-            .position(|&ub| secs <= ub)
-            .unwrap_or(TTFT_BUCKETS.len());
-        let mut h = self.ttft.lock().expect("ttft histogram lock");
-        h.counts[slot] += 1;
-        h.sum_secs += secs;
-        h.count += 1;
+        self.ttft.record(ttft);
+    }
+
+    /// Record one request's queue wait (accept → admission).
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.queue_wait.record(wait);
+    }
+
+    /// Record one fused decode step: its latency and how many tokens it
+    /// emitted (feeds the rolling throughput window).
+    pub fn record_step(&self, latency: Duration, tokens: usize) {
+        self.step_latency.record(latency);
+        self.rate.record(tokens);
+    }
+
+    /// Seconds since the metrics (and so the server) came up.
+    pub fn uptime_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Generated-token throughput over the rolling window of recent decode
+    /// steps — what the engine is doing *now*.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.rate.rate()
     }
 
     /// Aggregate generated-token throughput since the server started.
-    pub fn tokens_per_sec(&self) -> f64 {
+    pub fn tokens_per_sec_lifetime(&self) -> f64 {
         let secs = self.started.elapsed().as_secs_f64().max(1e-9);
         self.tokens_generated.load(Ordering::Relaxed) as f64 / secs
     }
@@ -104,7 +175,7 @@ impl ServeMetrics {
     /// Render the Prometheus text exposition for `GET /metrics`.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
-        let mut s = String::with_capacity(2048);
+        let mut s = String::with_capacity(4096);
         let counters: [(&str, &str, usize); 12] = [
             ("sinq_serve_live_slots", "gauge", self.live_slots.load(Ordering::Relaxed)),
             ("sinq_serve_slots", "gauge", self.slots.load(Ordering::Relaxed)),
@@ -139,19 +210,19 @@ impl ServeMetrics {
             let _ = writeln!(s, "# TYPE {name} {kind}");
             let _ = writeln!(s, "{name} {value}");
         }
+        let _ = writeln!(s, "# TYPE sinq_serve_uptime_seconds gauge");
+        let _ = writeln!(s, "sinq_serve_uptime_seconds {:.3}", self.uptime_secs());
         let _ = writeln!(s, "# TYPE sinq_serve_tokens_per_sec gauge");
         let _ = writeln!(s, "sinq_serve_tokens_per_sec {:.3}", self.tokens_per_sec());
-
-        let h = self.ttft.lock().expect("ttft histogram lock");
-        let _ = writeln!(s, "# TYPE sinq_serve_ttft_seconds histogram");
-        let mut cumulative = 0u64;
-        for (i, &ub) in TTFT_BUCKETS.iter().enumerate() {
-            cumulative += h.counts[i];
-            let _ = writeln!(s, "sinq_serve_ttft_seconds_bucket{{le=\"{ub}\"}} {cumulative}");
-        }
-        let _ = writeln!(s, "sinq_serve_ttft_seconds_bucket{{le=\"+Inf\"}} {}", h.count);
-        let _ = writeln!(s, "sinq_serve_ttft_seconds_sum {:.6}", h.sum_secs);
-        let _ = writeln!(s, "sinq_serve_ttft_seconds_count {}", h.count);
+        let _ = writeln!(s, "# TYPE sinq_serve_tokens_per_sec_lifetime gauge");
+        let _ = writeln!(
+            s,
+            "sinq_serve_tokens_per_sec_lifetime {:.3}",
+            self.tokens_per_sec_lifetime()
+        );
+        self.ttft.render_prometheus("sinq_serve_ttft_seconds", &mut s);
+        self.queue_wait.render_prometheus("sinq_serve_queue_wait_seconds", &mut s);
+        self.step_latency.render_prometheus("sinq_serve_step_latency_seconds", &mut s);
         s
     }
 }
@@ -181,12 +252,32 @@ mod tests {
     }
 
     #[test]
-    fn counters_render_and_tokens_per_sec_moves() {
+    fn queue_wait_and_step_latency_histograms_render() {
+        let m = ServeMetrics::new();
+        m.record_queue_wait(Duration::from_millis(2));
+        m.record_step(Duration::from_micros(300), 4);
+        let text = m.render();
+        assert!(text.contains("# TYPE sinq_serve_queue_wait_seconds histogram"), "{text}");
+        assert!(text.contains("sinq_serve_queue_wait_seconds_count 1"), "{text}");
+        assert!(text.contains("# TYPE sinq_serve_step_latency_seconds histogram"), "{text}");
+        assert!(text.contains("sinq_serve_step_latency_seconds_count 1"), "{text}");
+        assert!(text.contains("sinq_serve_step_latency_seconds_bucket{le=\"0.0005\"} 1"), "{text}");
+        assert!(text.contains("# TYPE sinq_serve_uptime_seconds gauge"), "{text}");
+    }
+
+    #[test]
+    fn counters_render_and_throughput_gauges_move() {
         let m = ServeMetrics::new();
         assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.tokens_per_sec_lifetime(), 0.0);
+        // The windowed rate follows recorded steps; the lifetime rate
+        // follows the raw token counter.
+        m.record_step(Duration::from_micros(200), 50);
+        m.record_step(Duration::from_micros(200), 50);
         m.tokens_generated.fetch_add(100, Ordering::Relaxed);
-        m.live_slots.store(3, Ordering::Relaxed);
         assert!(m.tokens_per_sec() > 0.0);
+        assert!(m.tokens_per_sec_lifetime() > 0.0);
+        m.live_slots.store(3, Ordering::Relaxed);
         m.kv_bytes_per_slot.store(4096, Ordering::Relaxed);
         m.kv_bits.store(8, Ordering::Relaxed);
         m.evicted_total.fetch_add(2, Ordering::Relaxed);
@@ -197,5 +288,17 @@ mod tests {
         assert!(text.contains("sinq_serve_kv_bytes_per_slot 4096"), "{text}");
         assert!(text.contains("sinq_serve_kv_bits 8"), "{text}");
         assert!(text.contains("sinq_serve_evicted_total 2"), "{text}");
+        assert!(text.contains("# TYPE sinq_serve_tokens_per_sec_lifetime gauge"), "{text}");
+    }
+
+    #[test]
+    fn rate_ring_ignores_ancient_and_empty_slots() {
+        let m = ServeMetrics::new();
+        // Steps that emitted nothing do not pollute the window.
+        m.record_step(Duration::from_micros(100), 0);
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        m.record_step(Duration::from_micros(100), 7);
+        let r = m.tokens_per_sec();
+        assert!(r > 0.0, "windowed rate {r}");
     }
 }

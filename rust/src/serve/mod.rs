@@ -24,8 +24,14 @@
 //! |---|---|---|
 //! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | greedy continuation by default (bit-identical to the decoder); `temperature > 0` switches to seeded top-k sampling, reproducible across runs and batch placements; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
 //! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
-//! | `GET /healthz` | — | liveness + engine identity/capacity |
-//! | `GET /metrics` | — | Prometheus text: live slots, queued requests, tokens/sec, TTFT histogram |
+//! | `GET /healthz` | — | liveness + engine identity/capacity + model shape + build info + uptime |
+//! | `GET /metrics` | — | Prometheus text: live slots, queued requests, tokens/sec (windowed + lifetime), TTFT/queue-wait/step-latency histograms |
+//! | `GET /v1/stats` | — | one JSON document: request/latency aggregates, throughput, per-phase decode profile (`SINQ_PROFILE=1`), per-layer quantization-quality report |
+//!
+//! Every generation response — the JSON body and the SSE `done` event —
+//! carries a `usage` object (prompt/completion token counts, queue-wait,
+//! TTFT, total latency, request-level tokens/sec) derived from the
+//! request's span ([`crate::obs::RequestSpan`]).
 //!
 //! ## Error and backpressure contract
 //!
@@ -108,6 +114,8 @@ pub struct ServeOpts {
     /// before the server closes it (`--keepalive-idle-ms`). Also bounds how
     /// long an idle keep-alive socket pins one handler thread.
     pub keepalive_idle_ms: u64,
+    /// `--log-json`: print one structured JSON line per completed request.
+    pub log_json: bool,
 }
 
 impl Default for ServeOpts {
@@ -121,6 +129,7 @@ impl Default for ServeOpts {
             score_queue: 64,
             max_connections: 256,
             keepalive_idle_ms: 5_000,
+            log_json: false,
         }
     }
 }
@@ -185,6 +194,9 @@ struct ConnState {
     engine: EngineClient,
     score: ScoreClient,
     metrics: Arc<ServeMetrics>,
+    /// The shared backend, so `/healthz` and `/v1/stats` can report the
+    /// model shape and the build-time quantization-quality report.
+    be: Arc<NativeBackend>,
     model: String,
     slots: usize,
     capacity: usize,
@@ -226,8 +238,14 @@ impl Server {
         let metrics = Arc::new(ServeMetrics::new());
         let slots = opts.max_batch.max(1);
         let capacity = opts.max_context.max(1);
-        let gen_engine =
-            GenEngine::start(be.clone(), slots, capacity, opts.max_queue, metrics.clone())?;
+        let gen_engine = GenEngine::start_with_logging(
+            be.clone(),
+            slots,
+            capacity,
+            opts.max_queue,
+            metrics.clone(),
+            opts.log_json,
+        )?;
         let score = BatchServer::spawn(
             {
                 let be = be.clone();
@@ -247,6 +265,7 @@ impl Server {
             score: score.client(),
             metrics: metrics.clone(),
             model: be.cfg.name.clone(),
+            be: be.clone(),
             slots,
             capacity,
             default_max_new: opts.default_max_new,
@@ -398,15 +417,18 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
                 keep,
             )
             .map(|_| keep),
+            ("GET", "/v1/stats") => handle_stats(&mut w, state, keep).map(|_| keep),
             ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body, keep),
             ("POST", "/v1/score") => handle_score(&mut w, state, &req.body, keep).map(|_| keep),
-            (_, "/healthz" | "/metrics" | "/v1/generate" | "/v1/score") => http::write_error(
-                &mut w,
-                405,
-                &format!("method {} not allowed on {}", req.method, req.path),
-                keep,
-            )
-            .map(|_| keep),
+            (_, "/healthz" | "/metrics" | "/v1/stats" | "/v1/generate" | "/v1/score") => {
+                http::write_error(
+                    &mut w,
+                    405,
+                    &format!("method {} not allowed on {}", req.method, req.path),
+                    keep,
+                )
+                .map(|_| keep)
+            }
             _ => http::write_error(&mut w, 404, &format!("unknown path {}", req.path), keep)
                 .map(|_| keep),
         };
@@ -416,6 +438,30 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
     }
 }
 
+/// Build identity baked in at compile time: the CI/build scripts export
+/// `SINQ_GIT_SHA`; local builds without it report `"unknown"`.
+fn build_info() -> Json {
+    Json::obj(vec![
+        ("git_sha", Json::Str(option_env!("SINQ_GIT_SHA").unwrap_or("unknown").into())),
+        (
+            "profile",
+            Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.into()),
+        ),
+    ])
+}
+
+/// Model shape summary shared by `/healthz` and `/v1/stats`.
+fn model_shape(state: &ConnState) -> Json {
+    let cfg = &state.be.cfg;
+    Json::obj(vec![
+        ("name", Json::Str(cfg.name.clone())),
+        ("layers", Json::Num(cfg.layers as f64)),
+        ("dim", Json::Num(cfg.d as f64)),
+        ("heads", Json::Num(cfg.heads as f64)),
+        ("vocab", Json::Num(cfg.vocab as f64)),
+    ])
+}
+
 fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::io::Result<()> {
     let m = &state.metrics;
     let body = Json::obj(vec![
@@ -423,12 +469,66 @@ fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std:
         ("backend", Json::Str("native".into())),
         ("simd", Json::Str(simd::kernel_name().into())),
         ("model", Json::Str(state.model.clone())),
+        ("model_shape", model_shape(state)),
+        ("build", build_info()),
+        ("uptime_secs", Json::Num(m.uptime_secs())),
         ("slots", Json::Num(state.slots as f64)),
         ("kv_capacity", Json::Num(state.capacity as f64)),
         ("kv_bits", Json::Num(m.kv_bits.load(Ordering::Relaxed) as f64)),
         ("kv_bytes_per_slot", Json::Num(m.kv_bytes_per_slot.load(Ordering::Relaxed) as f64)),
         ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
         ("queued_requests", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
+    ]);
+    http::write_response(
+        w,
+        200,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+        keep_alive,
+    )
+}
+
+/// `GET /v1/stats`: one JSON document aggregating everything the
+/// observability layer collects — request/latency aggregates, windowed and
+/// lifetime throughput, the per-phase decode profile (when `SINQ_PROFILE`
+/// is on), and the build-time quantization-quality report.
+fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::io::Result<()> {
+    let m = &state.metrics;
+    let requests = Json::obj(vec![
+        ("total", Json::Num(m.requests_total.load(Ordering::Relaxed) as f64)),
+        ("completed", Json::Num(m.completed_total.load(Ordering::Relaxed) as f64)),
+        ("rejected", Json::Num(m.rejected_total.load(Ordering::Relaxed) as f64)),
+        ("evicted", Json::Num(m.evicted_total.load(Ordering::Relaxed) as f64)),
+        ("queued", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
+        ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
+        ("score", Json::Num(m.score_requests.load(Ordering::Relaxed) as f64)),
+    ]);
+    let throughput = Json::obj(vec![
+        ("tokens_generated", Json::Num(m.tokens_generated.load(Ordering::Relaxed) as f64)),
+        ("decode_steps", Json::Num(m.decode_steps.load(Ordering::Relaxed) as f64)),
+        ("tokens_per_sec", Json::Num(m.tokens_per_sec())),
+        ("tokens_per_sec_lifetime", Json::Num(m.tokens_per_sec_lifetime())),
+    ]);
+    let latency = Json::obj(vec![
+        ("ttft", m.ttft.snapshot().to_json()),
+        ("queue_wait", m.queue_wait.snapshot().to_json()),
+        ("step", m.step_latency.snapshot().to_json()),
+    ]);
+    let quant = match state.be.quant_report() {
+        Some(r) => r.to_json(),
+        None => Json::Null,
+    };
+    let body = Json::obj(vec![
+        ("uptime_secs", Json::Num(m.uptime_secs())),
+        ("kernel", Json::Str(simd::kernel_name().into())),
+        ("model", model_shape(state)),
+        ("build", build_info()),
+        ("requests", requests),
+        ("throughput", throughput),
+        ("latency", latency),
+        ("profile", crate::obs::profiler::snapshot().to_json()),
+        ("quant", quant),
     ]);
     http::write_response(
         w,
@@ -570,11 +670,12 @@ fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<(
                 ]);
                 http::write_sse_event(w, "token", &data.to_string_compact())?;
             }
-            StreamEvent::Done { finish_reason, prompt_tokens, gen_tokens } => {
+            StreamEvent::Done { finish_reason, usage } => {
                 let data = Json::obj(vec![
                     ("finish_reason", Json::Str(finish_reason.into())),
-                    ("prompt_tokens", Json::Num(prompt_tokens as f64)),
-                    ("generated_tokens", Json::Num(gen_tokens as f64)),
+                    ("prompt_tokens", Json::Num(usage.prompt_tokens as f64)),
+                    ("generated_tokens", Json::Num(usage.completion_tokens as f64)),
+                    ("usage", usage.to_json()),
                     ("text", Json::Str(String::from_utf8_lossy(&text).into_owned())),
                 ]);
                 return http::write_sse_event(w, "done", &data.to_string_compact());
@@ -600,7 +701,7 @@ fn respond_generate(
     for ev in handle.rx.iter() {
         match ev {
             StreamEvent::Token(tok) => tokens.push(tok),
-            StreamEvent::Done { finish_reason, prompt_tokens, gen_tokens } => {
+            StreamEvent::Done { finish_reason, usage } => {
                 let body = Json::obj(vec![
                     ("text", Json::Str(String::from_utf8_lossy(&tokens).into_owned())),
                     (
@@ -608,8 +709,9 @@ fn respond_generate(
                         Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
                     ),
                     ("finish_reason", Json::Str(finish_reason.into())),
-                    ("prompt_tokens", Json::Num(prompt_tokens as f64)),
-                    ("generated_tokens", Json::Num(gen_tokens as f64)),
+                    ("prompt_tokens", Json::Num(usage.prompt_tokens as f64)),
+                    ("generated_tokens", Json::Num(usage.completion_tokens as f64)),
+                    ("usage", usage.to_json()),
                 ]);
                 return http::write_response(
                     w,
@@ -735,6 +837,12 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
         simd::kernel_name(),
         be.kv_bits().bits()
     );
+    if let Some(report) = be.quant_report() {
+        println!("{}", report.summary_line());
+    }
+    if crate::obs::profiler::enabled() {
+        println!("per-phase decode profiling enabled (SINQ_PROFILE=1): see /v1/stats");
+    }
     let server = Server::start_with_backend(be, opts)?;
     println!(
         "listening on http://{} ({} slots x {} KV positions, max queue {})",
@@ -743,7 +851,9 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
         opts.max_context.max(1),
         opts.max_queue
     );
-    println!("endpoints: POST /v1/generate  POST /v1/score  GET /healthz  GET /metrics");
+    println!(
+        "endpoints: POST /v1/generate  POST /v1/score  GET /healthz  GET /metrics  GET /v1/stats"
+    );
 
     install_interrupt_handler();
     while !INTERRUPTED.load(Ordering::SeqCst) {

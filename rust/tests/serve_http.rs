@@ -687,6 +687,144 @@ fn healthz_reports_active_simd_kernel() {
 }
 
 // =====================================================================
+// Observability: /v1/stats shape + usage accounting on every response
+// =====================================================================
+
+#[test]
+fn stats_endpoint_reports_spans_profile_and_quant_report() {
+    // Quantized in-process so the build-time QuantReport is attached.
+    let server = start_server(&pico_spec(Some(Method::Sinq)), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let res = request(&addr, "POST", "/v1/generate", &generate_body("warm the stats", 6, false));
+    assert_eq!(res.status, 200);
+
+    let res = request(&addr, "GET", "/v1/stats", "");
+    assert_eq!(res.status, 200, "{}", String::from_utf8_lossy(&res.body));
+    let json = res.json();
+    assert!(json.get("uptime_secs").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert!(json.get("kernel").and_then(Json::as_str).is_some());
+
+    let requests = json.get("requests").expect("requests object");
+    assert_eq!(requests.get("total").and_then(Json::as_usize), Some(1));
+    assert_eq!(requests.get("completed").and_then(Json::as_usize), Some(1));
+
+    let throughput = json.get("throughput").expect("throughput object");
+    assert_eq!(throughput.get("tokens_generated").and_then(Json::as_usize), Some(6));
+    assert!(throughput.get("tokens_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(throughput.get("tokens_per_sec_lifetime").and_then(Json::as_f64).unwrap() > 0.0);
+
+    let latency = json.get("latency").expect("latency object");
+    for hist in ["ttft", "queue_wait"] {
+        let h = latency.get(hist).unwrap_or_else(|| panic!("latency.{hist} missing"));
+        assert_eq!(h.get("count").and_then(Json::as_usize), Some(1), "latency.{hist}");
+        assert!(h.get("p99_ms").and_then(Json::as_f64).is_some(), "latency.{hist}");
+    }
+    assert!(latency.get("step").and_then(|h| h.get("count")).and_then(Json::as_usize).unwrap() > 0);
+
+    // Profiler off by default: present, disabled, empty breakdown.
+    let profile = json.get("profile").expect("profile object");
+    assert_eq!(profile.get("enabled"), Some(&Json::Bool(false)));
+
+    // The per-layer quantization-quality report rides along.
+    let quant = json.get("quant").expect("quant report");
+    assert!(quant.get("mean_nmse").and_then(Json::as_f64).unwrap() > 0.0);
+    let layers = quant.get("layers").and_then(Json::as_arr).expect("quant layers");
+    assert!(!layers.is_empty());
+    for l in layers {
+        assert!(l.get("nmse").and_then(Json::as_f64).unwrap().is_finite());
+        assert!(l.get("sinkhorn_iters").and_then(Json::as_usize).is_some());
+    }
+
+    let model = json.get("model").expect("model shape");
+    assert!(model.get("layers").and_then(Json::as_usize).unwrap() > 0);
+    assert!(model.get("dim").and_then(Json::as_usize).unwrap() > 0);
+    assert!(model.get("heads").and_then(Json::as_usize).unwrap() > 0);
+    let build = json.get("build").expect("build info");
+    assert!(build.get("git_sha").and_then(Json::as_str).is_some());
+    assert!(["debug", "release"]
+        .contains(&build.get("profile").and_then(Json::as_str).unwrap()));
+    server.shutdown();
+}
+
+#[test]
+fn stats_endpoint_is_stable_under_concurrent_requests() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let gen_threads: Vec<_> = (0..4)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let prompt = format!("concurrent stats {i}");
+                let res =
+                    request(&addr, "POST", "/v1/generate", &generate_body(&prompt, 8, false));
+                assert_eq!(res.status, 200);
+            })
+        })
+        .collect();
+    // Hammer /v1/stats while generations are in flight: every response must
+    // stay 200 and parse as a complete JSON document.
+    let stats_threads: Vec<_> = (0..3)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                for _ in 0..10 {
+                    let res = request(&addr, "GET", "/v1/stats", "");
+                    assert_eq!(res.status, 200);
+                    let json = res.json();
+                    assert!(json.get("requests").is_some());
+                    assert!(json.get("latency").is_some());
+                }
+            })
+        })
+        .collect();
+    for t in gen_threads.into_iter().chain(stats_threads) {
+        t.join().expect("no panics under concurrency");
+    }
+    let json = request(&addr, "GET", "/v1/stats", "").json();
+    let requests = json.get("requests").expect("requests object");
+    assert_eq!(requests.get("completed").and_then(Json::as_usize), Some(4));
+    let latency = json.get("latency").expect("latency object");
+    let ttft = latency.get("ttft").and_then(|h| h.get("count")).and_then(Json::as_usize);
+    assert_eq!(ttft, Some(4), "one TTFT observation per completed request");
+    server.shutdown();
+}
+
+#[test]
+fn usage_object_reported_on_json_and_sse_responses() {
+    let server = start_server(&pico_spec(None), &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let prompt = "usage accounting";
+
+    // JSON body.
+    let res = request(&addr, "POST", "/v1/generate", &generate_body(prompt, 7, false));
+    assert_eq!(res.status, 200);
+    let json = res.json();
+    let usage = json.get("usage").expect("usage object on JSON response");
+    assert_eq!(usage.get("prompt_tokens").and_then(Json::as_usize), Some(prompt.len()));
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(7));
+    let ttft = usage.get("ttft_ms").and_then(Json::as_f64).unwrap();
+    let total = usage.get("total_ms").and_then(Json::as_f64).unwrap();
+    assert!(ttft > 0.0, "TTFT must be measured, got {ttft}");
+    assert!(total >= ttft, "total {total} < ttft {ttft}");
+    assert!(usage.get("queue_wait_ms").and_then(Json::as_f64).unwrap() >= 0.0);
+    assert!(usage.get("tokens_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+    // The legacy top-level counts agree with the usage object.
+    assert_eq!(json.get("generated_tokens").and_then(Json::as_usize), Some(7));
+
+    // SSE done event.
+    let res = request(&addr, "POST", "/v1/generate", &generate_body(prompt, 5, true));
+    assert_eq!(res.status, 200);
+    let events = parse_sse_events(&res.body);
+    let (name, done) = events.last().expect("terminal event");
+    assert_eq!(name, "done");
+    let usage = done.get("usage").expect("usage object on SSE done event");
+    assert_eq!(usage.get("prompt_tokens").and_then(Json::as_usize), Some(prompt.len()));
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(5));
+    assert!(usage.get("total_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    server.shutdown();
+}
+
+// =====================================================================
 // The server reuses one backend for scoring and generation
 // =====================================================================
 

@@ -452,3 +452,47 @@ fn seeded_sampling_deterministic_across_runs_and_placements() {
     let outs = dec.run().unwrap();
     assert_eq!(outs[1].tokens, greedy_solo);
 }
+
+// =====================================================================
+// Per-phase profiler must observe, never perturb
+// =====================================================================
+
+#[test]
+fn profiler_on_off_greedy_tokens_bit_identical() {
+    use sinq::obs::profiler;
+
+    let mw = pico();
+    let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+    let nb = NativeBackend::from_quantized(&qm);
+    let prompt = b"profiler parity gate";
+    let gen = 14;
+
+    // The scoped timers only read clocks around the unchanged math, so the
+    // decoded stream must be bit-identical with profiling on and off —
+    // both through the single-sequence decoder and the batched engine.
+    let mut off_dec = NativeDecoder::new(&nb, 64).unwrap();
+    let off = off_dec.generate(prompt, gen).unwrap();
+
+    profiler::set_enabled(true);
+    profiler::reset();
+    let mut on_dec = NativeDecoder::new(&nb, 64).unwrap();
+    let on = on_dec.generate(prompt, gen).unwrap();
+
+    let mut batch = BatchDecoder::new(&nb, 2, 64).unwrap();
+    batch.submit(0, prompt, gen).unwrap();
+    let batched_on = batch.run().unwrap().remove(0).tokens;
+
+    let snap = profiler::snapshot();
+    profiler::set_enabled(false);
+
+    assert_eq!(on, off, "profiling must not change greedy decode tokens");
+    assert_eq!(batched_on, off, "profiling must not change batched decode tokens");
+
+    // While enabled, the timers actually accumulated a sane breakdown.
+    assert!(snap.enabled);
+    assert!(snap.total_nanos > 0, "enabled profiler recorded nothing");
+    assert!(!snap.phases.is_empty());
+    let pct_sum: f64 = snap.phases.iter().map(|p| p.pct).sum();
+    assert!((pct_sum - 100.0).abs() < 1e-6, "phase percentages sum to {pct_sum}");
+    profiler::reset();
+}

@@ -7,9 +7,10 @@
 # headline), the scalar-vs-SIMD fields (`tokens_per_sec_scalar`,
 # `simd_speedup`, top-level `kernel`), and the KV-cache fields
 # (`tokens_per_sec_kv8` per row; top-level `kv_bytes_per_slot_f32/q8`
-# with `kv_reduction` ≥ 3x); the serve report needs per-concurrency
-# requests/sec plus a median TTFT. Fails loudly so a silently-broken
-# bench cannot upload garbage artifacts.
+# with `kv_reduction` ≥ 3x) and a `profiling_overhead_pct` ≤ 3 (the
+# per-phase decode timers must stay near-free); the serve report needs
+# per-concurrency requests/sec plus a median TTFT. Fails loudly so a
+# silently-broken bench cannot upload garbage artifacts.
 #
 # Set CHECK_BENCH_SIMD_SPEEDUP=<x> (e.g. 1.5) to additionally require the
 # decode report's SIMD path to be ≥ x× scalar tokens/sec at batch 1 and
@@ -69,6 +70,13 @@ if bench == "decode":
     kv_red = doc.get("kv_reduction", 0)
     assert kv_red >= 3.0, (
         f"{path}: kv8 slot only {kv_red:.2f}x smaller than f32 (gate: ≥ 3x)"
+    )
+    overhead = doc.get("profiling_overhead_pct")
+    assert isinstance(overhead, (int, float)) and math.isfinite(overhead), (
+        f"{path}: missing 'profiling_overhead_pct'"
+    )
+    assert overhead <= 3.0, (
+        f"{path}: per-phase profiling costs {overhead:.2f}% throughput (gate: ≤ 3%)"
     )
     want = os.environ.get("CHECK_BENCH_SIMD_SPEEDUP", "")
     if want and kernel != "scalar":
