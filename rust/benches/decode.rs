@@ -20,7 +20,7 @@
 use std::time::Instant;
 
 use sinq::backend::simd::{self, Isa};
-use sinq::backend::{BatchDecoder, KvBits, NativeBackend, NativeDecoder};
+use sinq::backend::{BatchDecoder, EngineConfig, KvBits, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
 use sinq::obs::profiler;
@@ -36,7 +36,11 @@ fn run_batched(
     kv: KvBits,
 ) -> (f64, usize) {
     let t0 = Instant::now();
-    let mut dec = BatchDecoder::new_with_kv(be, slots, capacity, kv).expect("batch decoder");
+    let cfg = EngineConfig::new()
+        .with_max_batch(slots)
+        .with_max_context(capacity)
+        .with_kv_bits(kv);
+    let mut dec = BatchDecoder::with_config(be, &cfg).expect("batch decoder");
     for (i, (prompt, gen)) in reqs.iter().enumerate() {
         dec.submit(i, prompt, *gen).expect("submit");
     }
@@ -53,8 +57,9 @@ fn run_single(
 ) -> (f64, usize) {
     let t0 = Instant::now();
     let mut tokens = 0usize;
+    let cfg = EngineConfig::new().with_max_context(capacity).with_kv_bits(kv);
     for (prompt, gen) in reqs {
-        let mut dec = NativeDecoder::with_kv(be, capacity, kv).expect("decoder");
+        let mut dec = NativeDecoder::with_config(be, &cfg).expect("decoder");
         dec.generate(prompt, *gen).expect("single decode");
         tokens += prompt.len() + gen - 1;
     }
@@ -202,10 +207,11 @@ fn main() {
     );
 
     // Per-slot KV memory at both precisions (what --max-batch multiplies).
-    let kv_bytes_f32 = NativeDecoder::with_kv(&be, capacity, KvBits::F32)
+    let slot_cfg = EngineConfig::new().with_max_context(capacity);
+    let kv_bytes_f32 = NativeDecoder::with_config(&be, &slot_cfg.with_kv_bits(KvBits::F32))
         .expect("decoder")
         .kv_bytes();
-    let kv_bytes_q8 = NativeDecoder::with_kv(&be, capacity, KvBits::Q8)
+    let kv_bytes_q8 = NativeDecoder::with_config(&be, &slot_cfg.with_kv_bits(KvBits::Q8))
         .expect("decoder")
         .kv_bytes();
     let kv_reduction = kv_bytes_f32 as f64 / kv_bytes_q8 as f64;

@@ -1,20 +1,29 @@
 //! Continuous-batching generation engine over the native backend.
 //!
 //! [`BatchDecoder`] is the serving-scale sibling of
-//! [`crate::backend::NativeDecoder`]: it maintains one KV-cache slot per
-//! concurrent sequence, admits queued requests into free slots and retires
-//! finished ones **between steps** (continuous batching, not static), and
-//! advances all live sequences through the unified decode step
-//! ([`crate::backend::fwd::decode_rows`]) — fused stacked-row matmuls, one
-//! weight-tile unpack per step shared by every live sequence.
+//! [`crate::backend::NativeDecoder`]: it admits queued requests into slots
+//! and retires finished ones **between steps** (continuous batching, not
+//! static), and advances all live sequences through the unified decode
+//! step ([`crate::backend::fwd::decode_rows`]) — fused stacked-row
+//! matmuls, one weight-tile unpack per step shared by every live sequence.
+//!
+//! KV memory is a **paged pool** ([`crate::backend::paged::PagedKv`]):
+//! slots map logical positions through per-slot page tables into a fixed
+//! set of pages, claimed lazily as decode advances. When the pool runs
+//! dry mid-step the decoder first evicts prefix-cache pages, then
+//! preempts the *youngest* live sequence back to the queue — older
+//! requests always finish, so the engine degrades to FIFO instead of
+//! crashing. Retired sequences donate their full pages to a prefix cache
+//! ([`crate::backend::paged::PrefixCache`]); a new request whose prompt
+//! shares a cached token prefix maps those pages copy-free and skips
+//! prefill for the shared span.
 //!
 //! Exactness contract: the batched and single-sequence decoders run the
-//! *same* step function, and every kernel it touches keeps the
-//! matvec ≡ shared bitwise contract per row — so greedy tokens at
-//! `--kv-bits 32` match [`NativeDecoder`] bit-for-bit at any batch size
-//! and any admission order. `--kv-bits 8` slots
-//! ([`crate::backend::fwd::KvQ8`]) trade that bitwise guarantee for ~4×
-//! smaller KV slots under tolerance gates.
+//! *same* step function, and the paged stores replicate the contiguous
+//! KV arithmetic with only the row index translated — so greedy tokens
+//! match [`NativeDecoder`] bit-for-bit at any batch size, any admission
+//! order, and both KV precisions; prefix-hit and preempted-then-resumed
+//! decodes reproduce the cold tokens exactly.
 //!
 //! Per-request token selection goes through the core's
 //! [`TokenPicker`] hook: greedy argmax by default, seeded
@@ -26,10 +35,12 @@
 
 use std::collections::VecDeque;
 
+use crate::backend::config::EngineConfig;
 use crate::backend::fwd::{
-    decode_rows, DecodeScratch, KvBits, KvCache, KvStore, SampleCfg, StepRow, TokenPicker,
+    decode_rows, DecodeScratch, KvBits, SampleCfg, StepRow, TokenPicker,
 };
 use crate::backend::native::{NativeBackend, ResolvedModel};
+use crate::backend::paged::{PagedKv, PrefixCache};
 use crate::obs::profiler::{self, Phase};
 
 /// One generation request queued for slot admission.
@@ -44,12 +55,15 @@ pub struct GenRequest {
     pub sample: Option<SampleCfg>,
 }
 
-/// Validate that a request fits one preallocated KV slot. Shared by
-/// [`BatchDecoder::submit`] and the HTTP admission check in
+/// Validate that a request can ever decode to completion: its positions
+/// must fit the per-sequence context cap and its pages the pool. Shared
+/// by [`BatchDecoder::submit`] and the HTTP admission check in
 /// [`crate::serve`], so the serving front-end rejects oversized requests
 /// with exactly the same KV-capacity text the decoder itself uses.
 pub fn ensure_fits(
     capacity: usize,
+    page_size: usize,
+    pages_total: usize,
     id: usize,
     prompt_len: usize,
     max_new: usize,
@@ -61,8 +75,15 @@ pub fn ensure_fits(
     anyhow::ensure!(
         needed <= capacity,
         "request {id}: prompt of {prompt_len} tokens + {max_new} generated needs {needed} KV \
-         positions but each slot preallocated {capacity} (KV capacity); raise the decoder \
+         positions but sequences are capped at {capacity} (KV capacity); raise the decoder \
          capacity or shorten the request"
+    );
+    let ps = page_size.max(1);
+    let pages = (needed + ps - 1) / ps;
+    anyhow::ensure!(
+        pages <= pages_total,
+        "request {id}: {needed} KV positions need {pages} pages of {ps} but the page pool's \
+         capacity is {pages_total} pages total; raise --kv-pages or shorten the request"
     );
     Ok(())
 }
@@ -72,7 +93,9 @@ pub fn ensure_fits(
 pub struct GenOutput {
     pub id: usize,
     pub tokens: Vec<u8>,
-    /// Decode steps this sequence was live for (prompt + generated − 1).
+    /// Decode rows this sequence consumed (prompt + generated − 1 when it
+    /// was never preempted and hit no cached prefix; less after a prefix
+    /// hit, more after preemption replay).
     pub steps: usize,
 }
 
@@ -89,6 +112,13 @@ pub struct BatchStats {
     pub completed: usize,
     /// Live sequences evicted by [`BatchDecoder::cancel`] before finishing.
     pub evicted: usize,
+    /// Live sequences preempted back to the queue when the page pool ran
+    /// dry (they resume later; nothing is lost).
+    pub preempted: usize,
+    /// Admissions that mapped at least one prefix-cached page.
+    pub prefix_hits: usize,
+    /// Prompt positions skipped through prefix-cache page reuse.
+    pub prefix_tokens_reused: usize,
 }
 
 /// What [`BatchDecoder::cancel`] found for the id.
@@ -96,119 +126,141 @@ pub struct BatchStats {
 pub enum CancelOutcome {
     /// Removed from the pending queue before ever occupying a slot.
     Pending,
-    /// Evicted from a live KV slot (freed at this step boundary).
+    /// Evicted from a live KV slot (freed at this step boundary), or
+    /// dropped while awaiting re-admission after a preemption.
     Evicted,
     /// Unknown id (already finished or never submitted).
     NotFound,
 }
 
-/// A sequence occupying a slot: its request plus decode progress.
+/// A sequence occupying a slot: its tokens plus decode progress.
 struct Active {
     id: usize,
-    prompt: Vec<u8>,
-    /// Tokens fed into the model so far (prompt first, then generated).
-    fed: usize,
-    out: Vec<u8>,
+    /// Prompt followed by every generated token.
+    seq: Vec<u8>,
+    prompt_len: usize,
     max_new: usize,
-    /// Next KV position to write == this sequence's context length.
+    /// Next KV position to write == index of the next `seq` token to feed.
     pos: usize,
-    /// Token-selection hook (greedy or seeded sampling).
+    /// Decode rows consumed so far (including replay after preemption).
+    steps: usize,
+    /// Token-selection hook (greedy or seeded sampling). Survives
+    /// preemption, so the sampled RNG stream never restarts.
     picker: TokenPicker,
+    /// Admission order; preemption victims are the youngest by birth.
+    birth: u64,
 }
 
-impl Active {
-    /// The token this sequence feeds on the next step: the next prompt
-    /// token during prefill, the last emitted token afterwards.
-    fn next_input(&self) -> u8 {
-        if self.fed < self.prompt.len() {
-            self.prompt[self.fed]
-        } else {
-            *self.out.last().expect("generated token")
-        }
-    }
+/// Queue entry: a fresh request, or a preempted sequence awaiting
+/// re-admission (pushed to the *front* so it resumes first).
+enum Pending {
+    Fresh(GenRequest),
+    Resume(Active),
 }
 
 /// Continuous-batching decoder over a [`NativeBackend`].
 ///
 /// ```text
-/// submit(..) → pending ─admit─▶ slots (≤ max_slots live) ─retire─▶ finished
-///                                  │ step(): one fused decode_rows over
-///                                  ▼         all live rows
+/// submit(..) → pending ─admit─▶ slots (≤ max_batch live) ─retire─▶ finished
+///                ▲                 │ step(): claim pages, one fused
+///                └── preempt ──────┘         decode_rows over all live rows
 /// ```
 ///
-/// [`BatchDecoder::step`] admits pending requests into free slots, advances
-/// every live sequence by one token through the unified decode step, and
-/// retires sequences that produced their `max_new`-th token — freeing the
-/// slot for the next pending request on the following step.
-/// [`BatchDecoder::cancel`] evicts a live sequence at the step boundary
-/// (the serving front-end calls it when a client disconnects mid-stream).
+/// [`BatchDecoder::step`] admits pending requests into free slots (mapping
+/// prefix-cached pages first), claims this step's KV pages oldest-first
+/// (evicting cached pages, then preempting the youngest sequence if the
+/// pool is dry), advances every live sequence by one token through the
+/// unified decode step, and retires sequences that produced their
+/// `max_new`-th token — donating their full pages to the prefix cache and
+/// freeing the slot. [`BatchDecoder::cancel`] evicts a live sequence at
+/// the step boundary (the serving front-end calls it when a client
+/// disconnects mid-stream).
 pub struct BatchDecoder<'a> {
     model: ResolvedModel<'a>,
-    /// Per-slot KV capacity (positions).
+    /// Per-sequence context cap (positions).
     capacity: usize,
+    /// Sampling used when a request carries no [`SampleCfg`] of its own.
+    default_sample: Option<SampleCfg>,
     slots: Vec<Option<Active>>,
-    caches: Vec<KvCache>,
-    pending: VecDeque<GenRequest>,
+    kv: PagedKv,
+    prefix: PrefixCache,
+    pending: VecDeque<Pending>,
     finished: Vec<GenOutput>,
     /// `(request id, token)` pairs emitted by the most recent step, in slot
     /// order — the hook streaming consumers read between steps.
     emitted: Vec<(usize, u8)>,
     /// Request ids moved from the pending queue into a slot since the last
     /// [`BatchDecoder::drain_admitted`] — the serving engine reads these to
-    /// stamp queue-wait at the moment of admission.
+    /// stamp queue-wait at the moment of admission. Re-admissions after a
+    /// preemption are not repeated here.
     admitted: Vec<usize>,
     scratch: DecodeScratch,
     stats: BatchStats,
+    births: u64,
 }
 
 impl<'a> BatchDecoder<'a> {
-    /// Resolve the backend's weights and preallocate `max_slots` KV-cache
-    /// slots of `capacity` positions each, at the backend's configured
-    /// `--kv-bits` precision.
+    /// Resolve the backend's weights and build a paged KV pool sized for
+    /// `max_slots` sequences of `capacity` positions, at the backend's
+    /// configured engine defaults (KV precision, page size).
     pub fn new(
         be: &'a NativeBackend,
         max_slots: usize,
         capacity: usize,
     ) -> anyhow::Result<BatchDecoder<'a>> {
-        BatchDecoder::new_with_kv(be, max_slots, capacity, be.kv_bits())
+        let cfg =
+            be.engine().with_max_batch(max_slots).with_max_context(capacity).with_pages(None);
+        BatchDecoder::with_config(be, &cfg)
     }
 
-    /// [`BatchDecoder::new`] with an explicit KV-cache precision.
-    pub fn new_with_kv(
+    /// Build from a full [`EngineConfig`] (KV bits, slots, context cap,
+    /// page geometry, sampling default).
+    pub fn with_config(
         be: &'a NativeBackend,
-        max_slots: usize,
-        capacity: usize,
-        kv_bits: KvBits,
+        cfg: &EngineConfig,
     ) -> anyhow::Result<BatchDecoder<'a>> {
-        anyhow::ensure!(max_slots >= 1, "batch decoder needs at least one slot");
+        anyhow::ensure!(cfg.max_batch >= 1, "batch decoder needs at least one slot");
         let model = ResolvedModel::new(be)?;
-        let cap = capacity.max(1);
+        let cap = cfg.max_context.max(1);
         let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
-        let caches: Vec<KvCache> =
-            (0..max_slots).map(|_| KvCache::new(kv_bits, layers, cap, d, heads)).collect();
+        let kv = PagedKv::new(
+            cfg.kv_bits,
+            layers,
+            d,
+            heads,
+            cfg.max_batch,
+            cfg.page_positions(),
+            cfg.pages_total(),
+        );
         Ok(BatchDecoder {
             model,
             capacity: cap,
-            slots: (0..max_slots).map(|_| None).collect(),
-            caches,
+            default_sample: cfg.sample,
+            slots: (0..cfg.max_batch).map(|_| None).collect(),
+            kv,
+            prefix: PrefixCache::new(),
             pending: VecDeque::new(),
             finished: Vec::new(),
             emitted: Vec::new(),
             admitted: Vec::new(),
             scratch: DecodeScratch::new(cap),
             stats: BatchStats::default(),
+            births: 0,
         })
     }
 
-    /// Queue a greedy generation request. Requests that cannot fit a KV
-    /// slot are rejected up front with a clear error instead of overflowing
-    /// the cache mid-decode; `max_new == 0` completes immediately.
+    /// Queue a generation request decoding with the engine's default
+    /// sampling (greedy unless the config set one). Requests that cannot
+    /// fit the context cap or the page pool are rejected up front with a
+    /// clear error instead of overflowing mid-decode; `max_new == 0`
+    /// completes immediately.
     pub fn submit(&mut self, id: usize, prompt: &[u8], max_new: usize) -> anyhow::Result<()> {
         self.submit_sampled(id, prompt, max_new, None)
     }
 
-    /// [`BatchDecoder::submit`] with optional seeded sampling. `None` (or a
-    /// zero temperature) keeps the bit-identical greedy path.
+    /// [`BatchDecoder::submit`] with explicit seeded sampling. `None`
+    /// falls back to the engine default; a zero temperature keeps the
+    /// bit-identical greedy path.
     pub fn submit_sampled(
         &mut self,
         id: usize,
@@ -216,28 +268,53 @@ impl<'a> BatchDecoder<'a> {
         max_new: usize,
         sample: Option<SampleCfg>,
     ) -> anyhow::Result<()> {
-        ensure_fits(self.capacity, id, prompt.len(), max_new)?;
+        ensure_fits(
+            self.capacity,
+            self.kv.page_size(),
+            self.kv.pages_total(),
+            id,
+            prompt.len(),
+            max_new,
+        )?;
         if max_new == 0 {
             self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
             self.stats.completed += 1;
             return Ok(());
         }
-        self.pending.push_back(GenRequest { id, prompt: prompt.to_vec(), max_new, sample });
+        let sample = sample.or(self.default_sample);
+        self.pending.push_back(Pending::Fresh(GenRequest {
+            id,
+            prompt: prompt.to_vec(),
+            max_new,
+            sample,
+        }));
         Ok(())
     }
 
     /// Stop decoding request `id`: drop it from the pending queue, or free
-    /// its live KV slot at this step boundary. Unknown ids (finished or
-    /// never submitted) are a no-op. Cancelled requests produce no
-    /// [`GenOutput`].
+    /// its live KV slot (and pages) at this step boundary. Unknown ids
+    /// (finished or never submitted) are a no-op. Cancelled requests
+    /// produce no [`GenOutput`].
     pub fn cancel(&mut self, id: usize) -> CancelOutcome {
-        if let Some(i) = self.pending.iter().position(|r| r.id == id) {
+        if let Some(i) = self.pending.iter().position(|p| match p {
+            Pending::Fresh(r) => r.id == id,
+            Pending::Resume(a) => a.id == id,
+        }) {
+            let was_fresh = matches!(self.pending[i], Pending::Fresh(_));
             self.pending.remove(i);
-            return CancelOutcome::Pending;
+            return if was_fresh {
+                CancelOutcome::Pending
+            } else {
+                // It had occupied a slot before preemption: count it like
+                // a live eviction so the gauges stay consistent.
+                self.stats.evicted += 1;
+                CancelOutcome::Evicted
+            };
         }
-        for slot in self.slots.iter_mut() {
-            if slot.as_ref().map(|a| a.id) == Some(id) {
-                *slot = None;
+        for si in 0..self.slots.len() {
+            if self.slots[si].as_ref().map(|a| a.id) == Some(id) {
+                self.slots[si] = None;
+                self.kv.release_slot(si);
                 self.stats.evicted += 1;
                 return CancelOutcome::Evicted;
             }
@@ -245,69 +322,153 @@ impl<'a> BatchDecoder<'a> {
         CancelOutcome::NotFound
     }
 
-    /// Move queued requests into free slots (continuous admission).
+    /// Move queued requests into free slots (continuous admission). Fresh
+    /// requests map prefix-cached pages first and start decoding after the
+    /// shared span; resumed sequences re-map whatever prefix is still
+    /// cached and replay the rest.
     fn admit(&mut self) {
         while !self.pending.is_empty() {
-            let free = self.slots.iter().position(Option::is_none);
-            let si = match free {
+            let si = match self.slots.iter().position(Option::is_none) {
                 Some(si) => si,
                 None => break,
             };
-            let req = self.pending.pop_front().expect("non-empty pending queue");
-            self.admitted.push(req.id);
-            self.slots[si] = Some(Active {
-                id: req.id,
-                prompt: req.prompt,
-                fed: 0,
-                out: Vec::new(),
-                max_new: req.max_new,
-                pos: 0,
-                picker: TokenPicker::new(req.sample),
-            });
+            let entry = self.pending.pop_front().expect("non-empty pending queue");
+            let active = match entry {
+                Pending::Fresh(req) => {
+                    self.admitted.push(req.id);
+                    let shared = self.prefix.lookup(&req.prompt, self.kv.page_size());
+                    let start = shared.len() * self.kv.page_size();
+                    if !shared.is_empty() {
+                        self.stats.prefix_hits += 1;
+                        self.stats.prefix_tokens_reused += start;
+                        self.kv.assign_shared(si, &shared);
+                    }
+                    self.births += 1;
+                    Active {
+                        id: req.id,
+                        prompt_len: req.prompt.len(),
+                        seq: req.prompt,
+                        max_new: req.max_new,
+                        pos: start,
+                        steps: 0,
+                        picker: TokenPicker::new(req.sample),
+                        birth: self.births,
+                    }
+                }
+                Pending::Resume(mut a) => {
+                    // The preemption released this sequence's pages; map
+                    // whatever prefix survives in the cache and replay the
+                    // already-chosen tokens from there. Keeps the original
+                    // birth: a resumed request never gets younger.
+                    let shared = self.prefix.lookup(&a.seq, self.kv.page_size());
+                    if !shared.is_empty() {
+                        self.kv.assign_shared(si, &shared);
+                    }
+                    a.pos = shared.len() * self.kv.page_size();
+                    a
+                }
+            };
+            self.slots[si] = Some(active);
         }
     }
 
-    /// Record one step's logits for a live slot: advance its position,
-    /// emit through the token picker once the prompt is consumed, retire
-    /// when done.
-    fn advance(&mut self, si: usize, logits: &[f32]) {
-        let a = self.slots[si].as_mut().expect("live slot");
-        a.pos += 1;
-        a.fed += 1;
-        if a.fed >= a.prompt.len() {
-            let t0 = profiler::start();
-            let tok = a.picker.pick(logits);
-            profiler::stop(Phase::TokenPick, t0);
-            a.out.push(tok);
-            self.emitted.push((a.id, tok));
-            if a.out.len() >= a.max_new {
-                let done = self.slots[si].take().expect("live slot");
-                let out = GenOutput { id: done.id, tokens: done.out, steps: done.fed };
-                self.finished.push(out);
-                self.stats.completed += 1;
+    /// Make sure every live slot's next write position has a page, oldest
+    /// sequence first. A dry pool first evicts prefix-cache pages; if
+    /// nothing frees, the youngest live sequence is preempted back to the
+    /// queue (possibly the claimant itself) and the claim retried. The
+    /// oldest sequence can always complete: [`ensure_fits`] bounded its
+    /// total pages by the pool, and eviction + preemption return every
+    /// other reference.
+    fn claim_pages(&mut self) {
+        let mut order: Vec<usize> =
+            (0..self.slots.len()).filter(|&si| self.slots[si].is_some()).collect();
+        order.sort_by_key(|&si| self.slots[si].as_ref().map(|a| a.birth).unwrap_or(u64::MAX));
+        for si in order {
+            loop {
+                let block = match self.slots[si].as_ref() {
+                    Some(a) => a.pos / self.kv.page_size(),
+                    None => break, // preempted itself below
+                };
+                if self.kv.has_block(si, block) {
+                    break;
+                }
+                if self.kv.try_claim(si) {
+                    continue;
+                }
+                if self.prefix.evict_one(&mut self.kv) {
+                    continue;
+                }
+                let victim = (0..self.slots.len())
+                    .filter(|&v| self.slots[v].is_some())
+                    .max_by_key(|&v| self.slots[v].as_ref().map(|a| a.birth).unwrap_or(0))
+                    .expect("claimant slot is live");
+                let a = self.slots[victim].take().expect("live victim");
+                self.kv.release_slot(victim);
+                self.pending.push_front(Pending::Resume(a));
+                self.stats.preempted += 1;
+                if victim == si {
+                    break;
+                }
             }
         }
     }
 
-    /// One continuous-batching decode step: admit pending requests, advance
-    /// every live sequence by one token through the unified fused step
-    /// (one weight-tile unpack shared by all sequences), retire finished
-    /// ones. Returns the number of sequences advanced; 0 means idle.
+    /// Record one step's logits for a live slot: advance its position; at
+    /// the sequence frontier pick the next token (emit, retire at
+    /// `max_new`), otherwise this was preemption replay with nothing to
+    /// choose.
+    fn advance(&mut self, si: usize, logits: &[f32]) {
+        let a = self.slots[si].as_mut().expect("live slot");
+        a.pos += 1;
+        a.steps += 1;
+        if a.pos < a.seq.len() {
+            return; // replaying tokens already chosen before a preemption
+        }
+        let t0 = profiler::start();
+        let tok = a.picker.pick(logits);
+        profiler::stop(Phase::TokenPick, t0);
+        a.seq.push(tok);
+        self.emitted.push((a.id, tok));
+        if a.seq.len() - a.prompt_len >= a.max_new {
+            let done = self.slots[si].take().expect("live slot");
+            // Donate this sequence's full pages to the prefix cache before
+            // releasing the slot's references (`done.pos` positions were
+            // written; the final picked token was never fed).
+            let table = self.kv.table(si).to_vec();
+            self.prefix.register(&done.seq, &table, done.pos, self.kv.page_size(), &mut self.kv);
+            self.kv.release_slot(si);
+            let out = GenOutput {
+                id: done.id,
+                tokens: done.seq[done.prompt_len..].to_vec(),
+                steps: done.steps,
+            };
+            self.finished.push(out);
+            self.stats.completed += 1;
+        }
+    }
+
+    /// One continuous-batching decode step: admit pending requests, claim
+    /// this step's KV pages (evicting or preempting if the pool is dry),
+    /// advance every live sequence by one token through the unified fused
+    /// step (one weight-tile unpack shared by all sequences), retire
+    /// finished ones. Returns the number of sequences advanced; 0 means
+    /// idle.
     pub fn step(&mut self) -> anyhow::Result<usize> {
         self.emitted.clear();
         self.admit();
+        self.claim_pages();
         let rows: Vec<StepRow> = self
             .slots
             .iter()
             .enumerate()
             .filter_map(|(si, slot)| {
-                slot.as_ref().map(|a| StepRow { token: a.next_input(), pos: a.pos, slot: si })
+                slot.as_ref().map(|a| StepRow { token: a.seq[a.pos], pos: a.pos, slot: si })
             })
             .collect();
         if rows.is_empty() {
             return Ok(0);
         }
-        let logits = decode_rows(&self.model, &rows, &mut self.caches, &mut self.scratch);
+        let logits = decode_rows(&self.model, &rows, &mut self.kv, &mut self.scratch);
 
         let b = rows.len();
         self.stats.steps += 1;
@@ -338,24 +499,45 @@ impl<'a> BatchDecoder<'a> {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Requests queued but not yet admitted.
+    /// Fresh requests queued but not yet admitted (preempted sequences
+    /// awaiting re-admission are *live work*, not queue depth).
     pub fn pending(&self) -> usize {
-        self.pending.len()
+        self.pending.iter().filter(|p| matches!(p, Pending::Fresh(_))).count()
     }
 
-    /// Per-slot KV capacity (positions).
+    /// Per-sequence context cap (positions).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// KV-cache precision of this decoder's slots.
+    /// KV-cache precision of the page pool.
     pub fn kv_bits(&self) -> KvBits {
-        self.caches.first().map(|c| c.kv_bits()).unwrap_or(KvBits::F32)
+        self.kv.kv_bits()
     }
 
-    /// Resident bytes of one KV slot (what `--max-batch` multiplies).
-    pub fn kv_bytes_per_slot(&self) -> usize {
-        self.caches.first().map(|c| c.bytes()).unwrap_or(0)
+    /// Resident bytes of one KV page (what the pool size multiplies).
+    pub fn kv_bytes_per_page(&self) -> usize {
+        self.kv.bytes_per_page()
+    }
+
+    /// Positions per KV page.
+    pub fn page_size(&self) -> usize {
+        self.kv.page_size()
+    }
+
+    /// Pool size in pages.
+    pub fn pages_total(&self) -> usize {
+        self.kv.pages_total()
+    }
+
+    /// Unclaimed pages right now.
+    pub fn pages_free(&self) -> usize {
+        self.kv.pages_free()
+    }
+
+    /// Full pages currently held by the prefix cache.
+    pub fn prefix_cached_pages(&self) -> usize {
+        self.prefix.len()
     }
 
     /// Drain finished outputs without waiting for the queue to empty
@@ -368,7 +550,8 @@ impl<'a> BatchDecoder<'a> {
     /// emitted, in slot order. This is the per-step hook the streaming
     /// serving front-end ([`crate::serve`]) forwards into per-request
     /// channels so SSE bytes flush mid-decode; tokens also accumulate into
-    /// the request's [`GenOutput`] unchanged.
+    /// the request's [`GenOutput`] unchanged. Preemption replay emits
+    /// nothing — clients never see a token twice.
     pub fn emitted(&self) -> &[(usize, u8)] {
         &self.emitted
     }
@@ -467,7 +650,7 @@ mod tests {
     }
 
     #[test]
-    fn submit_rejects_requests_beyond_slot_capacity() {
+    fn submit_rejects_requests_beyond_capacity() {
         let nb = pico_backend();
         let mut dec = BatchDecoder::new(&nb, 1, 4).unwrap();
         let err = dec.submit(0, b"too long for four", 2).unwrap_err();
@@ -475,6 +658,24 @@ mod tests {
         let err = dec.submit(1, b"ab", 9).unwrap_err();
         assert!(err.to_string().contains("KV"), "unclear capacity error: {err}");
         dec.submit(2, b"ab", 3).unwrap(); // 2 + 3 − 1 = 4 fits exactly
+        assert_eq!(dec.run().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn submit_rejects_requests_beyond_page_pool() {
+        let nb = pico_backend();
+        // Context cap admits 32 positions but the pool only holds 4 pages
+        // of 4 = 16 — the page check must fire with a page-pool message.
+        let cfg = EngineConfig::new()
+            .with_max_batch(1)
+            .with_max_context(32)
+            .with_page_size(4)
+            .with_pages(Some(4));
+        let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+        let err = dec.submit(0, b"a prompt of twenty chars", 8).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pages") && msg.contains("capacity"), "unclear page error: {msg}");
+        dec.submit(1, b"short", 8).unwrap(); // 5 + 8 − 1 = 12 → 3 pages
         assert_eq!(dec.run().unwrap().len(), 1);
     }
 
@@ -529,7 +730,7 @@ mod tests {
         assert_eq!(dec.step().unwrap(), 0, "everything cancelled: idle");
         assert!(dec.take_finished().is_empty(), "cancelled requests produce no output");
         assert_eq!(dec.stats().evicted, 1, "only the live eviction counts");
-        // The freed slot is reusable.
+        // The freed slot (and its pages) are reusable.
         dec.submit(2, b"after", 3).unwrap();
         assert_eq!(dec.run().unwrap().len(), 1);
     }
@@ -560,13 +761,29 @@ mod tests {
     }
 
     #[test]
-    fn kv8_batched_decode_runs_and_shrinks_slots() {
+    fn engine_default_sampling_applies_when_request_has_none() {
         let nb = pico_backend();
-        let d32 = BatchDecoder::new_with_kv(&nb, 2, 32, KvBits::F32).unwrap();
-        let mut d8 = BatchDecoder::new_with_kv(&nb, 2, 32, KvBits::Q8).unwrap();
+        let sample = Some(SampleCfg { temperature: 1.5, top_k: 0, seed: 99 });
+        let explicit = {
+            let mut dec = BatchDecoder::new(&nb, 1, 32).unwrap();
+            dec.submit_sampled(0, b"default sample", 8, sample).unwrap();
+            dec.run().unwrap().remove(0).tokens
+        };
+        let cfg = EngineConfig::new().with_max_context(32).with_sample(sample);
+        let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+        dec.submit(0, b"default sample", 8).unwrap();
+        assert_eq!(dec.run().unwrap().remove(0).tokens, explicit);
+    }
+
+    #[test]
+    fn kv8_batched_decode_runs_and_shrinks_pages() {
+        let nb = pico_backend();
+        let cfg = EngineConfig::new().with_max_batch(2).with_max_context(32);
+        let d32 = BatchDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::F32)).unwrap();
+        let mut d8 = BatchDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::Q8)).unwrap();
         assert_eq!(d8.kv_bits(), KvBits::Q8);
-        let ratio = d32.kv_bytes_per_slot() as f64 / d8.kv_bytes_per_slot() as f64;
-        assert!(ratio >= 3.0, "kv8 slot only {ratio:.2}x smaller");
+        let ratio = d32.kv_bytes_per_page() as f64 / d8.kv_bytes_per_page() as f64;
+        assert!(ratio >= 3.0, "kv8 page only {ratio:.2}x smaller");
         d8.submit(0, b"kv8 batched", 6).unwrap();
         d8.submit(1, b"second", 4).unwrap();
         let outs = d8.run().unwrap();

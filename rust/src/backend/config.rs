@@ -1,0 +1,139 @@
+//! Typed engine configuration shared by every decode entry point.
+//!
+//! [`EngineConfig`] collapses the constructor sprawl that used to pick KV
+//! precision, batch width, and capacity per call site
+//! (`with_max_batch`/`with_kv_bits`, `new`/`new_with_kv`/`with_kv`) into
+//! one builder that flows unchanged from the CLI through
+//! [`crate::backend::build_native`], the quantize-and-serve pipeline, and
+//! the HTTP server — so the paged-KV knobs (page size, pool size) did not
+//! have to add a third generation of `new_with_*` constructors.
+
+use crate::backend::fwd::{KvBits, SampleCfg};
+
+/// Everything a decoder needs to size itself: KV precision, concurrency,
+/// per-sequence context cap, page-pool geometry, and the default sampling
+/// mode. Plain data — copy it freely across threads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EngineConfig {
+    /// KV-cache element precision (`--kv-bits 32|8`).
+    pub kv_bits: KvBits,
+    /// Serving concurrency cap: scoring batch size and generation slots.
+    pub max_batch: usize,
+    /// Per-sequence context cap in KV positions (`--max-context`).
+    pub max_context: usize,
+    /// KV page granularity in positions; one page spans all layers.
+    pub page_size: usize,
+    /// Page-pool size override (`--kv-pages`); `None` sizes the pool to
+    /// the contiguous worst case, `max_batch × ceil(max_context /
+    /// page_size)` pages.
+    pub pages: Option<usize>,
+    /// Default sampling for requests that do not carry their own
+    /// [`SampleCfg`]; `None` decodes greedily.
+    pub sample: Option<SampleCfg>,
+}
+
+/// Default serving concurrency: scoring batch size and generation slots.
+pub const DEFAULT_MAX_BATCH: usize = 4;
+
+/// Default KV page granularity (positions per page).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            kv_bits: KvBits::F32,
+            max_batch: DEFAULT_MAX_BATCH,
+            max_context: 512,
+            page_size: DEFAULT_PAGE_SIZE,
+            pages: None,
+            sample: None,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn new() -> EngineConfig {
+        EngineConfig::default()
+    }
+
+    pub fn with_kv_bits(mut self, kv_bits: KvBits) -> EngineConfig {
+        self.kv_bits = kv_bits;
+        self
+    }
+
+    /// Minimum 1 (a decoder needs at least one slot).
+    pub fn with_max_batch(mut self, max_batch: usize) -> EngineConfig {
+        self.max_batch = max_batch.max(1);
+        self
+    }
+
+    /// Minimum 1 position.
+    pub fn with_max_context(mut self, max_context: usize) -> EngineConfig {
+        self.max_context = max_context.max(1);
+        self
+    }
+
+    /// Minimum 1 position per page.
+    pub fn with_page_size(mut self, page_size: usize) -> EngineConfig {
+        self.page_size = page_size.max(1);
+        self
+    }
+
+    /// Explicit page-pool size; `None` restores the derived default.
+    pub fn with_pages(mut self, pages: Option<usize>) -> EngineConfig {
+        self.pages = pages;
+        self
+    }
+
+    pub fn with_sample(mut self, sample: Option<SampleCfg>) -> EngineConfig {
+        self.sample = sample;
+        self
+    }
+
+    /// Page size clamped to at least one position.
+    pub fn page_positions(&self) -> usize {
+        self.page_size.max(1)
+    }
+
+    /// Resolved page-pool size: the explicit override, or the contiguous
+    /// worst case `max_batch × ceil(max_context / page_size)` — the same
+    /// memory the old per-slot reservation preallocated, now claimable by
+    /// any slot.
+    pub fn pages_total(&self) -> usize {
+        let ps = self.page_positions();
+        self.pages
+            .unwrap_or_else(|| self.max_batch.max(1) * ((self.max_context.max(1) + ps - 1) / ps))
+            .max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_pool_matches_contiguous_worst_case() {
+        let cfg = EngineConfig::new().with_max_batch(3).with_max_context(100).with_page_size(16);
+        // ceil(100 / 16) = 7 pages per slot, 3 slots.
+        assert_eq!(cfg.pages_total(), 21);
+        assert_eq!(cfg.page_positions(), 16);
+    }
+
+    #[test]
+    fn explicit_pool_and_clamps_win() {
+        let cfg = EngineConfig::new().with_pages(Some(5)).with_page_size(0).with_max_batch(0);
+        assert_eq!(cfg.pages_total(), 5);
+        assert_eq!(cfg.page_positions(), 1);
+        assert_eq!(cfg.max_batch, 1);
+        let zero = EngineConfig::new().with_pages(Some(0));
+        assert_eq!(zero.pages_total(), 1, "pool is never empty");
+    }
+
+    #[test]
+    fn builder_carries_sampling_default() {
+        let s = SampleCfg { temperature: 0.9, top_k: 5, seed: 11 };
+        let cfg = EngineConfig::new().with_sample(Some(s)).with_kv_bits(KvBits::Q8);
+        assert_eq!(cfg.sample, Some(s));
+        assert_eq!(cfg.kv_bits, KvBits::Q8);
+    }
+}

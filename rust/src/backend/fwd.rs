@@ -644,7 +644,9 @@ impl KvQ8 {
     }
 
     /// Quantize one row (`x.len() == d`) into per-head u8 codes + affines.
-    fn quant_row(
+    /// Row-local and deterministic — the paged store reuses it, which is
+    /// what makes prefix-shared kv8 pages bit-identical to a cold decode.
+    pub(crate) fn quant_row(
         codes: &mut [u8],
         scales: &mut [f32],
         mins: &mut [f32],
@@ -801,6 +803,49 @@ impl KvStore for KvCache {
     }
 }
 
+/// Slot-addressed KV storage as [`decode_rows`] consumes it: the fused
+/// step names a `(slot, layer, pos)` triple and the arena decides where
+/// those bytes live. A plain slice of per-slot [`KvStore`]s is the
+/// contiguous layout (each slot owns a full-capacity reservation); the
+/// paged allocator maps the same triples through per-slot page tables
+/// into a shared fixed pool.
+pub(crate) trait KvArena {
+    /// Record the K/V projections (length `d` each) for `slot` at
+    /// (`layer`, `pos`).
+    fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]);
+
+    /// Causal attention for one query of `slot` over positions `0..=pos`
+    /// of `layer`, accumulating per-head context into `ctx` (zeroed by
+    /// the caller).
+    fn attend(
+        &self,
+        slot: usize,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+    );
+}
+
+impl<K: KvStore> KvArena for [K] {
+    fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        self[slot].write(layer, pos, k, v);
+    }
+
+    fn attend(
+        &self,
+        slot: usize,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+    ) {
+        self[slot].attend(layer, q, pos, ctx, s);
+    }
+}
+
 // =====================================================================
 // Fused decode step
 // =====================================================================
@@ -879,18 +924,18 @@ fn decode_linear<L: LinearOp + ?Sized>(
 /// One fused decode step over stacked live rows: embed each row's token,
 /// run every transformer block with fused stacked-row matmuls (one weight
 /// tile unpack shared by all rows; batch 1 takes the scratch-reusing
-/// matvec path), write/attend each row's [`KvStore`], and return
-/// next-token logits, one row per input row.
+/// matvec path), write/attend each row's slot in the [`KvArena`], and
+/// return next-token logits, one row per input row.
 ///
 /// The single-sequence decoder is the `rows.len() == 1` instantiation; the
 /// continuous batcher passes all live slots. Every kernel this touches
 /// keeps the matvec ≡ shared bitwise contract per row, so the two callers
 /// agree exactly — at any batch size and any admission order — and both
 /// reproduce the pre-refactor decoders at `--kv-bits 32`.
-pub(crate) fn decode_rows<K: KvStore>(
+pub(crate) fn decode_rows<A: KvArena + ?Sized>(
     model: &ResolvedModel,
     rows: &[StepRow],
-    caches: &mut [K],
+    kv: &mut A,
     scratch: &mut DecodeScratch,
 ) -> Matrix {
     let cfg = model.cfg;
@@ -923,12 +968,11 @@ pub(crate) fn decode_rows<K: KvStore>(
 
         ctx.reset(b, d);
         for (r, row) in rows.iter().enumerate() {
-            let cache = &mut caches[row.slot];
             let t0 = profiler::start();
-            cache.write(l, row.pos, k.row(r), v.row(r));
+            kv.write(row.slot, l, row.pos, k.row(r), v.row(r));
             profiler::stop(Phase::KvWrite, t0);
             let t0 = profiler::start();
-            cache.attend(l, q.row(r), row.pos, ctx.row_mut(r), attn);
+            kv.attend(row.slot, l, q.row(r), row.pos, ctx.row_mut(r), attn);
             profiler::stop(Phase::KvAttend, t0);
         }
         let o = decode_linear(layer.wo, ctx, model.threads, kernel, Phase::LinWo);

@@ -19,12 +19,15 @@
 //! falls back to the native engine when either is missing.
 
 pub mod batch;
+pub mod config;
 pub mod fwd;
 pub mod native;
+pub mod paged;
 pub mod quantized;
 pub mod simd;
 
 pub use batch::{ensure_fits, BatchDecoder, BatchStats, CancelOutcome, GenOutput, GenRequest};
+pub use config::EngineConfig;
 pub use fwd::{KvBits, KvStore, LinearOp, SampleCfg, TokenPicker};
 pub use native::{NativeBackend, NativeDecoder};
 pub use quantized::QuantizedTensor;
@@ -177,12 +180,10 @@ pub struct BackendSpec {
     pub quantized: Option<String>,
     /// Quantize the checkpoint in-process before serving (native only).
     pub quantize: Option<QuantConfig>,
-    /// Serving concurrency cap (scoring batch + generation slots); the
-    /// backend default applies when unset.
-    pub max_batch: Option<usize>,
-    /// KV-cache precision for the decode paths (`--kv-bits 32|8`; native
-    /// only — 32 keeps decode bit-identical, 8 quarters per-slot memory).
-    pub kv_bits: KvBits,
+    /// Engine defaults for the decode paths (KV precision, batch width,
+    /// context cap, page geometry, sampling); threaded into the built
+    /// backend so every decoder inherits one configuration.
+    pub engine: EngineConfig,
 }
 
 impl BackendSpec {
@@ -193,8 +194,7 @@ impl BackendSpec {
             model: model.to_string(),
             quantized: None,
             quantize: None,
-            max_batch: None,
-            kv_bits: KvBits::F32,
+            engine: EngineConfig::default(),
         }
     }
 }
@@ -240,12 +240,9 @@ pub fn build_native(spec: &BackendSpec) -> anyhow::Result<NativeBackend> {
          rerun with --backend native",
         resolved.name()
     );
-    let max_batch = spec.max_batch.unwrap_or(native::DEFAULT_MAX_BATCH);
     if let Some(path) = &spec.quantized {
         let qm = QuantizedModel::load(path)?;
-        return Ok(NativeBackend::from_quantized(&qm)
-            .with_max_batch(max_batch)
-            .with_kv_bits(spec.kv_bits));
+        return Ok(NativeBackend::from_quantized(&qm).with_engine(spec.engine));
     }
     let mw = scheduler::load_or_synthetic_checked(&spec.art_dir, &spec.model, 42)?;
     if let Some(qcfg) = &spec.quantize {
@@ -263,9 +260,9 @@ pub fn build_native(spec: &BackendSpec) -> anyhow::Result<NativeBackend> {
             },
             no_overhead: false,
         };
-        return pipeline::run_to_backend(&mw, qcfg, &opts, max_batch, spec.kv_bits);
+        return pipeline::run_to_backend(&mw, qcfg, &opts, spec.engine);
     }
-    Ok(NativeBackend::from_weights(&mw).with_max_batch(max_batch).with_kv_bits(spec.kv_bits))
+    Ok(NativeBackend::from_weights(&mw).with_engine(spec.engine))
 }
 
 #[cfg(test)]
@@ -305,11 +302,12 @@ mod tests {
     }
 
     #[test]
-    fn spec_max_batch_reaches_backend() {
+    fn spec_engine_config_reaches_backend() {
         let mut spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
-        spec.max_batch = Some(9);
-        let be = build(&spec).unwrap();
-        assert_eq!(be.max_batch(), 9);
+        spec.engine = spec.engine.with_max_batch(9).with_kv_bits(KvBits::Q8);
+        let be = build_native(&spec).unwrap();
+        assert_eq!(InferenceBackend::max_batch(&be), 9);
+        assert_eq!(be.kv_bits(), KvBits::Q8);
     }
 
     #[test]

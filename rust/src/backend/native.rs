@@ -21,6 +21,7 @@
 use std::collections::BTreeMap;
 
 use crate::backend::batch::BatchDecoder;
+use crate::backend::config::EngineConfig;
 use crate::backend::fwd::{
     self, decode_rows, DecodeScratch, Gain, KvBits, KvCache, KvStore, LinId, LinearOp, SeqModel,
     StepRow,
@@ -84,7 +85,7 @@ impl LinearOp for LayerWeight {
 }
 
 /// Default serving concurrency: scoring batch size and generation slots.
-pub const DEFAULT_MAX_BATCH: usize = 4;
+pub use crate::backend::config::DEFAULT_MAX_BATCH;
 
 /// Pure-Rust inference backend over dense or packed-quantized weights.
 pub struct NativeBackend {
@@ -93,10 +94,9 @@ pub struct NativeBackend {
     vectors: BTreeMap<String, Vec<f32>>,
     /// Worker threads for the fused matmul tiles.
     pub threads: usize,
-    /// Serving concurrency cap: scoring batch size and generation slots.
-    max_batch: usize,
-    /// KV-cache precision the decode entry points construct slots with.
-    kv_bits: KvBits,
+    /// Engine defaults every decoder built over this backend inherits
+    /// (KV precision, batch width, context cap, page geometry, sampling).
+    engine: EngineConfig,
     /// Build-time quantization-quality report (per-layer NMSE, Sinkhorn
     /// convergence); `None` when the backend was built from dense weights
     /// or a pre-quantized `.stz` whose build stats were not kept.
@@ -131,8 +131,7 @@ impl NativeBackend {
             layers,
             vectors: vectors.clone(),
             threads: default_threads(),
-            max_batch: DEFAULT_MAX_BATCH,
-            kv_bits: KvBits::F32,
+            engine: EngineConfig::default(),
             quant_report: None,
         }
     }
@@ -157,31 +156,28 @@ impl NativeBackend {
             layers,
             vectors: qm.fvectors.clone(),
             threads: default_threads(),
-            max_batch: DEFAULT_MAX_BATCH,
-            kv_bits: KvBits::F32,
+            engine: EngineConfig::default(),
             quant_report: None,
         }
     }
 
-    /// Set the serving concurrency cap (scoring batch size and the number
-    /// of continuous-batching generation slots). Minimum 1.
-    pub fn with_max_batch(mut self, max_batch: usize) -> NativeBackend {
-        self.max_batch = max_batch.max(1);
+    /// Set the engine defaults (KV precision, batch width, context cap,
+    /// page geometry, sampling) every decoder built over this backend
+    /// inherits — the one typed builder that replaced the per-knob
+    /// `with_max_batch`/`with_kv_bits` sprawl.
+    pub fn with_engine(mut self, engine: EngineConfig) -> NativeBackend {
+        self.engine = engine;
         self
     }
 
-    /// Set the KV-cache precision (`--kv-bits 32|8`) every decoder built
-    /// over this backend defaults to. `--kv-bits 32` keeps decode
-    /// bit-identical to the seed; `--kv-bits 8` quarters per-slot KV memory
-    /// under a tolerance gate.
-    pub fn with_kv_bits(mut self, kv_bits: KvBits) -> NativeBackend {
-        self.kv_bits = kv_bits;
-        self
+    /// The engine defaults decoders built over this backend inherit.
+    pub fn engine(&self) -> EngineConfig {
+        self.engine
     }
 
-    /// The KV-cache precision decode entry points construct slots with.
+    /// The KV-cache precision decode entry points construct caches with.
     pub fn kv_bits(&self) -> KvBits {
-        self.kv_bits
+        self.engine.kv_bits
     }
 
     /// Attach the build-time quantization-quality report (set by the
@@ -281,7 +277,7 @@ impl NativeBackend {
         if prompts.is_empty() {
             return Ok(Vec::new());
         }
-        let slots = self.max_batch.min(prompts.len()).max(1);
+        let slots = self.engine.max_batch.min(prompts.len()).max(1);
         let capacity = prompts
             .iter()
             .zip(max_new)
@@ -338,7 +334,7 @@ impl InferenceBackend for NativeBackend {
     }
 
     fn max_batch(&self) -> usize {
-        self.max_batch
+        self.engine.max_batch.max(1)
     }
 
     fn forward_batch(&mut self, seqs: &[&[u8]]) -> anyhow::Result<Vec<Matrix>> {
@@ -480,21 +476,22 @@ impl<'a> NativeDecoder<'a> {
     /// `capacity` positions at the backend's configured `--kv-bits`
     /// precision; errors if the backend is missing a weight.
     pub fn new(be: &'a NativeBackend, capacity: usize) -> anyhow::Result<NativeDecoder<'a>> {
-        NativeDecoder::with_kv(be, capacity, be.kv_bits)
+        NativeDecoder::with_config(be, &be.engine().with_max_context(capacity))
     }
 
-    /// [`NativeDecoder::new`] with an explicit KV-cache precision.
-    pub fn with_kv(
+    /// [`NativeDecoder::new`] from a full [`EngineConfig`] (the KV
+    /// precision and `max_context` apply; this decoder has one slot, so
+    /// the page-pool knobs do not).
+    pub fn with_config(
         be: &'a NativeBackend,
-        capacity: usize,
-        kv_bits: KvBits,
+        cfg: &EngineConfig,
     ) -> anyhow::Result<NativeDecoder<'a>> {
         let model = ResolvedModel::new(be)?;
-        let cap = capacity.max(1);
+        let cap = cfg.max_context.max(1);
         let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
         Ok(NativeDecoder {
             model,
-            cache: vec![KvCache::new(kv_bits, layers, cap, d, heads)],
+            cache: vec![KvCache::new(cfg.kv_bits, layers, cap, d, heads)],
             pos: 0,
             capacity: cap,
             scratch: DecodeScratch::new(cap),
@@ -519,7 +516,7 @@ impl<'a> NativeDecoder<'a> {
             self.capacity
         );
         let rows = [StepRow { token, pos: self.pos, slot: 0 }];
-        let logits = decode_rows(&self.model, &rows, &mut self.cache, &mut self.scratch);
+        let logits = decode_rows(&self.model, &rows, self.cache.as_mut_slice(), &mut self.scratch);
         self.pos += 1;
         Ok(logits.data)
     }
@@ -687,8 +684,9 @@ mod tests {
         let mw = pico();
         let nb = NativeBackend::from_weights(&mw);
         let tokens = b"kv8 decode path";
-        let mut d32 = NativeDecoder::with_kv(&nb, 32, KvBits::F32).unwrap();
-        let mut d8 = NativeDecoder::with_kv(&nb, 32, KvBits::Q8).unwrap();
+        let cfg = EngineConfig::new().with_max_context(32);
+        let mut d32 = NativeDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::F32)).unwrap();
+        let mut d8 = NativeDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::Q8)).unwrap();
         assert_eq!(d32.kv_bits(), KvBits::F32);
         assert_eq!(d8.kv_bits(), KvBits::Q8);
         assert!(
@@ -710,7 +708,8 @@ mod tests {
     #[test]
     fn backend_kv_bits_flows_into_decoders() {
         let mw = pico();
-        let nb = NativeBackend::from_weights(&mw).with_kv_bits(KvBits::Q8);
+        let nb = NativeBackend::from_weights(&mw)
+            .with_engine(EngineConfig::new().with_kv_bits(KvBits::Q8));
         assert_eq!(nb.kv_bits(), KvBits::Q8);
         let dec = NativeDecoder::new(&nb, 8).unwrap();
         assert_eq!(dec.kv_bits(), KvBits::Q8);

@@ -1,0 +1,525 @@
+//! Paged KV allocator with prefix caching.
+//!
+//! [`PagedKv`] replaces the contiguous per-slot KV reservation with a
+//! fixed pool of pages, each covering `page_size` positions across **all**
+//! layers. A slot owns a page table mapping logical position `pos` to
+//! physical row `table[pos / page_size] * page_size + pos % page_size`;
+//! pages are claimed lazily as decode advances, so admission is charged by
+//! pages actually allocated instead of the worst case.
+//!
+//! Exactness: the attend paths replicate the contiguous stores'
+//! arithmetic ([`crate::backend::fwd::causal_attend`] and
+//! [`crate::backend::fwd::KvQ8`]'s SIMD-dispatched loop) operation for
+//! operation — only the row index is translated through the page table —
+//! and writes reuse the same deterministic per-row quantizer, so paged
+//! decode is bit-identical to the contiguous cache at both precisions.
+//!
+//! [`PrefixCache`] keys **full** pages by the token prefix that produced
+//! them (position `p`'s KV depends only on tokens `0..=p`, and RoPE is
+//! absolute, so equal prefixes yield equal pages). A new request whose
+//! prompt starts with a cached prefix maps those pages copy-free
+//! (refcounted) and skips prefill for the shared span. Eviction is
+//! LRU over leaf entries, so a chain of pages is released deepest-first.
+
+use crate::backend::fwd::{AttnScratch, KvArena, KvBits, KvQ8};
+use crate::backend::simd;
+use crate::tensor::Matrix;
+
+/// Backing storage for the page pool, at the engine's KV precision. Row
+/// layout matches the contiguous stores with `capacity` replaced by the
+/// pool's total rows, so the inner loops are index-for-index identical.
+enum PagedStore {
+    F32 {
+        /// Per layer: `(pages_total * page_size, d)` K/V rows.
+        k: Vec<Matrix>,
+        v: Vec<Matrix>,
+    },
+    Q8 {
+        /// Physical rows per layer (`pages_total * page_size`).
+        rows: usize,
+        k_codes: Vec<u8>,
+        v_codes: Vec<u8>,
+        k_scale: Vec<f32>,
+        k_min: Vec<f32>,
+        v_scale: Vec<f32>,
+        v_min: Vec<f32>,
+    },
+}
+
+/// Fixed-size page pool plus per-slot page tables; the [`KvArena`] the
+/// continuous batcher decodes through.
+pub(crate) struct PagedKv {
+    page_size: usize,
+    pages_total: usize,
+    d: usize,
+    heads: usize,
+    hd: usize,
+    layers: usize,
+    store: PagedStore,
+    /// Free page indices (stack; claiming pops).
+    free: Vec<u32>,
+    /// Per-page references: one per slot mapping it + one if a prefix-cache
+    /// entry holds it. A page returns to `free` when this reaches zero.
+    rc: Vec<u32>,
+    /// Per-slot page tables (block index → page).
+    tables: Vec<Vec<u32>>,
+}
+
+impl PagedKv {
+    pub(crate) fn new(
+        bits: KvBits,
+        layers: usize,
+        d: usize,
+        heads: usize,
+        slots: usize,
+        page_size: usize,
+        pages_total: usize,
+    ) -> PagedKv {
+        let (ps, pages) = (page_size.max(1), pages_total.max(1));
+        let rows = pages * ps;
+        let store = match bits {
+            KvBits::F32 => PagedStore::F32 {
+                k: (0..layers).map(|_| Matrix::zeros(rows, d)).collect(),
+                v: (0..layers).map(|_| Matrix::zeros(rows, d)).collect(),
+            },
+            KvBits::Q8 => {
+                let elems = layers * rows * d;
+                let affines = layers * rows * heads;
+                PagedStore::Q8 {
+                    rows,
+                    k_codes: vec![0; elems],
+                    v_codes: vec![0; elems],
+                    k_scale: vec![0.0; affines],
+                    k_min: vec![0.0; affines],
+                    v_scale: vec![0.0; affines],
+                    v_min: vec![0.0; affines],
+                }
+            }
+        };
+        PagedKv {
+            page_size: ps,
+            pages_total: pages,
+            d,
+            heads,
+            hd: d / heads,
+            layers,
+            store,
+            // Reversed so the first claim pops page 0.
+            free: (0..pages as u32).rev().collect(),
+            rc: vec![0; pages],
+            tables: (0..slots).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Physical row of (`slot`, `pos`) through the slot's page table.
+    fn phys(&self, slot: usize, pos: usize) -> usize {
+        self.tables[slot][pos / self.page_size] as usize * self.page_size + pos % self.page_size
+    }
+
+    /// Does `slot`'s table already cover block `block`?
+    pub(crate) fn has_block(&self, slot: usize, block: usize) -> bool {
+        self.tables[slot].len() > block
+    }
+
+    /// Claim one free page as `slot`'s next block. `false` when the pool
+    /// is dry — the caller evicts or preempts and retries.
+    pub(crate) fn try_claim(&mut self, slot: usize) -> bool {
+        match self.free.pop() {
+            Some(p) => {
+                debug_assert_eq!(self.rc[p as usize], 0, "free page with live references");
+                self.rc[p as usize] = 1;
+                self.tables[slot].push(p);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Map prefix-cached pages as the leading blocks of an empty slot,
+    /// copy-free (each page's refcount grows by one).
+    pub(crate) fn assign_shared(&mut self, slot: usize, pages: &[u32]) {
+        debug_assert!(self.tables[slot].is_empty(), "shared pages must lead the table");
+        for &p in pages {
+            self.rc[p as usize] += 1;
+            self.tables[slot].push(p);
+        }
+    }
+
+    /// Release every page `slot` maps; pages drop to the free list when
+    /// no other slot or prefix-cache entry holds them.
+    pub(crate) fn release_slot(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.tables[slot]);
+        for p in table {
+            self.unref(p);
+        }
+    }
+
+    /// Add a prefix-cache reference to `page`.
+    pub(crate) fn cache_ref(&mut self, page: u32) {
+        self.rc[page as usize] += 1;
+    }
+
+    /// Drop one reference to `page` (slot release or cache eviction).
+    pub(crate) fn unref(&mut self, page: u32) {
+        let rc = &mut self.rc[page as usize];
+        debug_assert!(*rc > 0, "unref of a free page");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Pages held by `slot`, in block order.
+    pub(crate) fn table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    pub(crate) fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub(crate) fn pages_total(&self) -> usize {
+        self.pages_total
+    }
+
+    pub(crate) fn pages_free(&self) -> usize {
+        self.free.len()
+    }
+
+    pub(crate) fn kv_bits(&self) -> KvBits {
+        match self.store {
+            PagedStore::F32 { .. } => KvBits::F32,
+            PagedStore::Q8 { .. } => KvBits::Q8,
+        }
+    }
+
+    /// Resident bytes of one page (`page_size` positions × all layers) —
+    /// what the pool multiplies and `/metrics` reports.
+    pub(crate) fn bytes_per_page(&self) -> usize {
+        let per_pos = match self.store {
+            // K + V rows of f32.
+            PagedStore::F32 { .. } => 2 * self.d * 4,
+            // K + V codes plus 4 f32 affines per head.
+            PagedStore::Q8 { .. } => 2 * self.d + 16 * self.heads,
+        };
+        self.page_size * self.layers * per_pos
+    }
+}
+
+impl KvArena for PagedKv {
+    fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        let phys = self.phys(slot, pos);
+        let (d, heads, hd) = (self.d, self.heads, self.hd);
+        match &mut self.store {
+            PagedStore::F32 { k: kc, v: vc } => {
+                kc[layer].row_mut(phys).copy_from_slice(k);
+                vc[layer].row_mut(phys).copy_from_slice(v);
+            }
+            PagedStore::Q8 { rows, k_codes, v_codes, k_scale, k_min, v_scale, v_min } => {
+                let idx = layer * *rows + phys;
+                let (c0, a0) = (idx * d, idx * heads);
+                KvQ8::quant_row(
+                    &mut k_codes[c0..c0 + d],
+                    &mut k_scale[a0..a0 + heads],
+                    &mut k_min[a0..a0 + heads],
+                    k,
+                    heads,
+                    hd,
+                );
+                KvQ8::quant_row(
+                    &mut v_codes[c0..c0 + d],
+                    &mut v_scale[a0..a0 + heads],
+                    &mut v_min[a0..a0 + heads],
+                    v,
+                    heads,
+                    hd,
+                );
+            }
+        }
+    }
+
+    fn attend(
+        &self,
+        slot: usize,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+    ) {
+        let (d, hd, heads, ps) = (self.d, self.hd, self.heads, self.page_size);
+        let table = &self.tables[slot];
+        let scale = 1.0 / (hd as f32).sqrt();
+        match &self.store {
+            PagedStore::F32 { k, v } => {
+                // `causal_attend` with the row index routed through the
+                // page table; float-op order is untouched, so this is
+                // bit-identical to the contiguous f32 store.
+                let (kc, vc) = (&k[layer], &v[layer]);
+                let att = &mut s.att;
+                att.clear();
+                att.resize(pos + 1, 0.0);
+                for head in 0..heads {
+                    let off = head * hd;
+                    let qh = &q[off..off + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for ki in 0..=pos {
+                        let phys = table[ki / ps] as usize * ps + ki % ps;
+                        let krow = &kc.row(phys)[off..off + hd];
+                        let mut dotv = 0.0f32;
+                        for t in 0..hd {
+                            dotv += qh[t] * krow[t];
+                        }
+                        att[ki] = dotv * scale;
+                        maxv = maxv.max(att[ki]);
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att.iter_mut() {
+                        *a = (*a - maxv).exp();
+                        denom += *a;
+                    }
+                    for ki in 0..=pos {
+                        let phys = table[ki / ps] as usize * ps + ki % ps;
+                        let wgt = att[ki] / denom;
+                        let vrow = &vc.row(phys)[off..off + hd];
+                        for t in 0..hd {
+                            ctx[off + t] += wgt * vrow[t];
+                        }
+                    }
+                }
+            }
+            PagedStore::Q8 { rows, k_codes, v_codes, k_scale, k_min, v_scale, v_min } => {
+                // `KvQ8::attend` with the same index translation; the
+                // SIMD dequant + dot sequence is unchanged.
+                let isa = simd::active();
+                let base = layer * *rows;
+                let AttnScratch { att, row } = s;
+                att.clear();
+                att.resize(pos + 1, 0.0);
+                row.resize(hd);
+                for head in 0..heads {
+                    let off = head * hd;
+                    let qh = &q[off..off + hd];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for ki in 0..=pos {
+                        let idx = base + table[ki / ps] as usize * ps + ki % ps;
+                        let codes = &k_codes[idx * d + off..idx * d + off + hd];
+                        simd::dequant_u8_with(
+                            isa,
+                            codes,
+                            k_scale[idx * heads + head],
+                            k_min[idx * heads + head],
+                            row.as_mut_slice(),
+                        );
+                        att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
+                        maxv = maxv.max(att[ki]);
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att.iter_mut() {
+                        *a = (*a - maxv).exp();
+                        denom += *a;
+                    }
+                    for ki in 0..=pos {
+                        let idx = base + table[ki / ps] as usize * ps + ki % ps;
+                        let wgt = att[ki] / denom;
+                        let codes = &v_codes[idx * d + off..idx * d + off + hd];
+                        simd::dequant_u8_with(
+                            isa,
+                            codes,
+                            v_scale[idx * heads + head],
+                            v_min[idx * heads + head],
+                            row.as_mut_slice(),
+                        );
+                        let vrow = row.as_slice();
+                        for t in 0..hd {
+                            ctx[off + t] += wgt * vrow[t];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One cached full page, keyed by the exact token prefix that produced it
+/// (`key.len() == (block + 1) * page_size`).
+struct PrefixEntry {
+    key: Vec<u8>,
+    page: u32,
+    /// Monotonic use counter (bumped on hit); LRU eviction order.
+    tick: u64,
+}
+
+/// Token-prefix → page cache over a [`PagedKv`]. Entries hold one
+/// refcount on their page, so cached pages survive slot release and are
+/// remapped copy-free by later requests with the same prompt prefix.
+pub(crate) struct PrefixCache {
+    entries: Vec<PrefixEntry>,
+    tick: u64,
+}
+
+impl PrefixCache {
+    pub(crate) fn new() -> PrefixCache {
+        PrefixCache { entries: Vec::new(), tick: 0 }
+    }
+
+    /// Cached full pages currently held.
+    pub(crate) fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Longest cached page run covering a prefix of `seq`, capped so at
+    /// least one token remains to feed (the engine needs logits). Bumps
+    /// each hit entry's LRU tick; the caller maps the pages via
+    /// [`PagedKv::assign_shared`].
+    pub(crate) fn lookup(&mut self, seq: &[u8], ps: usize) -> Vec<u32> {
+        let mut pages = Vec::new();
+        self.tick += 1;
+        let tick = self.tick;
+        loop {
+            let span = (pages.len() + 1) * ps;
+            if span > seq.len().saturating_sub(1) {
+                break;
+            }
+            match self.entries.iter_mut().find(|e| e.key == &seq[..span]) {
+                Some(e) => {
+                    e.tick = tick;
+                    pages.push(e.page);
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Cache the full pages of a retired sequence (`fed` positions were
+    /// written; only whole pages are shareable). Existing entries win —
+    /// their page already holds identical bytes — so refcounts stay one
+    /// per entry.
+    pub(crate) fn register(
+        &mut self,
+        seq: &[u8],
+        table: &[u32],
+        fed: usize,
+        ps: usize,
+        kv: &mut PagedKv,
+    ) {
+        let full = (fed / ps).min(table.len());
+        for i in 0..full {
+            let key = &seq[..(i + 1) * ps];
+            if self.entries.iter().any(|e| e.key == key) {
+                continue;
+            }
+            self.tick += 1;
+            kv.cache_ref(table[i]);
+            self.entries.push(PrefixEntry { key: key.to_vec(), page: table[i], tick: self.tick });
+        }
+    }
+
+    /// Evict the least-recently-used **leaf** entry (no longer cached
+    /// prefix extends it), releasing its page reference. `false` when the
+    /// cache is empty. The page only returns to the free list if no live
+    /// slot still maps it, so callers loop: evict until a page frees or
+    /// nothing is left, then fall back to preemption.
+    pub(crate) fn evict_one(&mut self, kv: &mut PagedKv) -> bool {
+        let mut victim: Option<usize> = None;
+        for (i, e) in self.entries.iter().enumerate() {
+            let is_leaf = !self
+                .entries
+                .iter()
+                .any(|o| o.key.len() > e.key.len() && o.key.starts_with(&e.key));
+            if is_leaf && victim.map_or(true, |v| e.tick < self.entries[v].tick) {
+                victim = Some(i);
+            }
+        }
+        match victim {
+            Some(i) => {
+                let e = self.entries.swap_remove(i);
+                kv.unref(e.page);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(slots: usize, pages: usize, ps: usize) -> PagedKv {
+        PagedKv::new(KvBits::F32, 2, 8, 2, slots, ps, pages)
+    }
+
+    #[test]
+    fn claim_release_recycles_pages() {
+        let mut kv = pool(2, 3, 4);
+        assert_eq!(kv.pages_free(), 3);
+        assert!(kv.try_claim(0));
+        assert!(kv.try_claim(0));
+        assert!(kv.try_claim(1));
+        assert_eq!(kv.pages_free(), 0);
+        assert!(!kv.try_claim(1), "pool must report dry, not panic");
+        kv.release_slot(0);
+        assert_eq!(kv.pages_free(), 2);
+        assert!(kv.has_block(1, 0));
+        assert!(!kv.has_block(1, 1));
+    }
+
+    #[test]
+    fn shared_pages_survive_one_release() {
+        let mut kv = pool(2, 2, 4);
+        assert!(kv.try_claim(0));
+        let page = kv.table(0)[0];
+        kv.assign_shared(1, &[page]);
+        kv.release_slot(0);
+        assert_eq!(kv.pages_free(), 1, "shared page still referenced by slot 1");
+        kv.release_slot(1);
+        assert_eq!(kv.pages_free(), 2);
+    }
+
+    #[test]
+    fn prefix_cache_lookup_caps_and_lru_leaf_eviction() {
+        let mut kv = pool(1, 4, 2);
+        let mut pc = PrefixCache::new();
+        // Slot decodes "abcdef" fully: 3 claimed pages, 6 fed positions.
+        for _ in 0..3 {
+            assert!(kv.try_claim(0));
+        }
+        let table = kv.table(0).to_vec();
+        pc.register(b"abcdefg", &table, 6, 2, &mut kv);
+        assert_eq!(pc.len(), 3);
+        kv.release_slot(0);
+        assert_eq!(kv.pages_free(), 1, "cached pages stay resident");
+
+        // Full cover is capped: 5 tokens share 2 pages (one token left to feed).
+        assert_eq!(pc.lookup(b"abcde", 2), table[..2].to_vec());
+        // Diverging token stops the run after one page.
+        assert_eq!(pc.lookup(b"abXde", 2), table[..1].to_vec());
+        assert!(pc.lookup(b"Xbcde", 2).is_empty());
+
+        // Eviction is leaf-first: deepest entry goes before its parents.
+        assert!(pc.evict_one(&mut kv));
+        assert_eq!(pc.len(), 2);
+        assert_eq!(pc.lookup(b"abcdefg", 2), table[..2].to_vec());
+        assert!(pc.evict_one(&mut kv));
+        assert!(pc.evict_one(&mut kv));
+        assert!(!pc.evict_one(&mut kv), "empty cache has nothing to evict");
+        assert_eq!(kv.pages_free(), 4, "all pages recycled after eviction");
+    }
+
+    #[test]
+    fn register_skips_existing_keys() {
+        let mut kv = pool(2, 4, 2);
+        let mut pc = PrefixCache::new();
+        assert!(kv.try_claim(0));
+        pc.register(b"abc", kv.table(0).to_vec().as_slice(), 2, 2, &mut kv);
+        assert!(kv.try_claim(1));
+        // Same prefix retired from another slot: existing entry wins.
+        pc.register(b"abc", kv.table(1).to_vec().as_slice(), 2, 2, &mut kv);
+        assert_eq!(pc.len(), 1);
+        kv.release_slot(0);
+        kv.release_slot(1);
+        assert_eq!(kv.pages_free(), 3, "only the cached page stays resident");
+    }
+}

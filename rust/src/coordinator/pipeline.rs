@@ -5,7 +5,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use crate::backend::{KvBits, NativeBackend};
+use crate::backend::{EngineConfig, NativeBackend};
 use crate::coordinator::scheduler::{self, ScheduleOpts};
 use crate::model::{fold, ModelWeights, QuantizedModel};
 use crate::quant::{QuantConfig, QuantizedLinear};
@@ -75,22 +75,19 @@ pub fn run_and_save(
 /// Quantize `mw` and wire the result straight into a [`NativeBackend`] —
 /// no `.stz` round-trip, no artifacts. This is the serving path for boxes
 /// without XLA: the packed codes produced by the scheduler become the
-/// backend's resident weight format directly. `max_batch` caps the
-/// backend's serving concurrency (scoring batch size and the number of
-/// continuous-batching generation slots); `kv_bits` sets the KV-cache
-/// precision its decoders allocate (`--kv-bits 32|8`).
+/// backend's resident weight format directly. `engine` carries the decode
+/// defaults the backend hands to every decoder it builds: KV precision,
+/// concurrency cap, context cap, and page-pool geometry.
 pub fn run_to_backend(
     mw: &ModelWeights,
     qcfg: &QuantConfig,
     opts: &PipelineOpts,
-    max_batch: usize,
-    kv_bits: KvBits,
+    engine: EngineConfig,
 ) -> anyhow::Result<NativeBackend> {
     let (qm, _, reports) = run_traced(mw, qcfg, opts)?;
     let report = crate::obs::QuantReport::new(&qm.method, qm.bits, reports);
     Ok(NativeBackend::from_quantized(&qm)
-        .with_max_batch(max_batch)
-        .with_kv_bits(kv_bits)
+        .with_engine(engine)
         .with_quant_report(Some(report)))
 }
 
@@ -151,7 +148,8 @@ mod tests {
     fn pipeline_feeds_native_backend() {
         let mw = load_or_synthetic("/nonexistent", "pico", 73);
         let cfg = QuantConfig::new(Method::Sinq, 4);
-        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default(), 8, KvBits::F32).unwrap();
+        let engine = EngineConfig::new().with_max_batch(8);
+        let be = run_to_backend(&mw, &cfg, &PipelineOpts::default(), engine).unwrap();
         assert!(be.quantized_layer_count() > 0);
         let logits = be.forward(b"pipeline to backend").unwrap();
         assert!(logits.data.iter().all(|v| v.is_finite()));

@@ -7,7 +7,7 @@
 //! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
 //!               [--max-batch 8] [--max-new-tokens 16]
 //! sinq serve    --listen 127.0.0.1:8080 [--max-batch 8] [--max-queue 64]
-//!               [--max-context 512] [--kv-bits 32|8]
+//!               [--max-context 512] [--kv-bits 32|8] [--page-size 16] [--kv-pages N]
 //!               [--method sinq --bits 4 | --quantized q.stz]
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
@@ -75,17 +75,22 @@ fn print_help() {
          [--max-batch N] [--max-new-tokens N]\n  \
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
          [--max-context N] [--max-new-tokens N] [--kv-bits 32|8] [--log-json]\n             \
+         [--page-size N] [--kv-pages N]\n             \
          [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true;\n  \
          seeded sampling via temperature/top_k/seed fields, greedy default),\n  \
-         POST /v1/score, GET /healthz, GET /metrics, GET /v1/stats (span/phase/quant\n  \
-         telemetry; per-phase decode profiling via SINQ_PROFILE=1); every generation\n  \
-         response carries a usage object; --log-json prints one JSON line per request;\n  \
-         503 + Retry-After past --max-queue;\n  \
+         OpenAI-compatible POST /v1/completions (prompt/max_tokens/stream; data: chunks\n  \
+         ending in data: [DONE]), POST /v1/score, GET /healthz, GET /metrics,\n  \
+         GET /v1/stats (span/phase/quant telemetry; per-phase decode profiling via\n  \
+         SINQ_PROFILE=1); every generation response carries a usage object; --log-json\n  \
+         prints one JSON line per request; errors use one JSON envelope\n  \
+         {{\"error\":{{\"message\",\"type\"}}}}; 503 + Retry-After past --max-queue;\n  \
          --kv-bits 8 packs decode KV caches to u8 with per-head scales (~4x less\n  \
-         memory per slot; 32 = bit-identical default); disconnected SSE clients are\n  \
-         evicted at the next step boundary;\n  \
+         memory per page; 32 = bit-identical default); KV memory is a shared pool of\n  \
+         --page-size-position pages (--kv-pages overrides the pool size) with prefix\n  \
+         caching across shared prompt prefixes (prefix_hit_rate on /metrics);\n  \
+         disconnected SSE clients are evicted at the next step boundary;\n  \
          Connection: keep-alive reuses sockets (--keepalive-idle-ms, default 5000);\n  \
          Ctrl-C drains live slots.\n\n\
          SIMD: fused kernels dispatch to AVX2/NEON at runtime; SINQ_SIMD=scalar|avx2|neon|auto\n  \
@@ -236,14 +241,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut spec = BackendSpec::new(backend_kind(args, &art, "native")?, &art, &model);
     spec.quantized = args.opt("quantized").map(String::from);
-    spec.max_batch = Some(max_batch);
     let kv_arg = args.get("kv-bits", "32");
-    spec.kv_bits = KvBits::parse(&kv_arg)
+    let kv_bits = KvBits::parse(&kv_arg)
         .ok_or_else(|| anyhow::anyhow!("--kv-bits must be 32 or 8 (got '{kv_arg}')"))?;
     anyhow::ensure!(
-        spec.kv_bits == KvBits::F32 || spec.kind == BackendKind::Native,
+        kv_bits == KvBits::F32 || spec.kind == BackendKind::Native,
         "--kv-bits 8 quantizes the native decoders' KV caches; rerun with --backend native"
     );
+    spec.engine = spec.engine.with_max_batch(max_batch).with_kv_bits(kv_bits);
     let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
     if wants_quantize {
         // `serve --backend native --method sinq --bits 4`: quantize
@@ -268,6 +273,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             listen: listen.to_string(),
             max_batch,
             max_context: args.num("max-context", 512),
+            page_size: args.num("page-size", backend::config::DEFAULT_PAGE_SIZE),
+            kv_pages: args
+                .opt("kv-pages")
+                .map(|_| args.num::<usize>("kv-pages", 0))
+                .filter(|&n| n > 0),
             max_queue: args.num("max-queue", 64),
             default_max_new: max_new.max(1),
             score_queue: args.num("score-queue", 64),

@@ -986,12 +986,13 @@ fn decoder_nll(
     windows: &[&[u8]],
     kv: crate::backend::KvBits,
 ) -> anyhow::Result<(f64, Vec<u8>)> {
-    use crate::backend::NativeDecoder;
+    use crate::backend::{EngineConfig, NativeDecoder};
     let mut nll = 0.0f64;
     let mut count = 0usize;
     let mut argmaxes = Vec::new();
     for w in windows {
-        let mut dec = NativeDecoder::with_kv(be, w.len() + 1, kv)?;
+        let cfg = EngineConfig::new().with_max_context(w.len() + 1).with_kv_bits(kv);
+        let mut dec = NativeDecoder::with_config(be, &cfg)?;
         for p in 0..w.len() - 1 {
             let logits = dec.step(w[p])?;
             nll -= crate::eval::log_prob(&logits, w[p + 1]);
@@ -1011,7 +1012,7 @@ fn decoder_nll(
 /// 4-bit): teacher-forced decoder perplexity, greedy-argmax flip rate
 /// against the f32 cache, and the resident KV bytes per serving slot.
 pub fn kv_cache_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
-    use crate::backend::{KvBits, NativeDecoder};
+    use crate::backend::{EngineConfig, KvBits, NativeDecoder};
     anyhow::ensure!(
         ctx.backend == BackendKind::Native,
         "the KV-cache study steps the native decoders; rerun with --backend native"
@@ -1036,8 +1037,11 @@ pub fn kv_cache_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
         let (nll8, top8) = decoder_nll(be, &windows, KvBits::Q8)?;
         let flips = top32.iter().zip(&top8).filter(|(a, b)| a != b).count();
         let flip_pct = 100.0 * flips as f64 / top32.len().max(1) as f64;
-        let bytes32 = NativeDecoder::with_kv(be, seq + 1, KvBits::F32)?.kv_bytes();
-        let bytes8 = NativeDecoder::with_kv(be, seq + 1, KvBits::Q8)?.kv_bytes();
+        let slot_cfg = EngineConfig::new().with_max_context(seq + 1);
+        let bytes32 =
+            NativeDecoder::with_config(be, &slot_cfg.with_kv_bits(KvBits::F32))?.kv_bytes();
+        let bytes8 =
+            NativeDecoder::with_config(be, &slot_cfg.with_kv_bits(KvBits::Q8))?.kv_bytes();
         t.row(vec![
             label.clone(),
             "32".into(),

@@ -28,7 +28,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::backend::batch::{ensure_fits, BatchDecoder, CancelOutcome};
-use crate::backend::{NativeBackend, SampleCfg};
+use crate::backend::{EngineConfig, NativeBackend, SampleCfg};
 use crate::obs::span::{request_log_line, RequestSpan, Usage};
 use crate::serve::metrics::ServeMetrics;
 
@@ -101,6 +101,11 @@ enum EngineMsg {
 /// State shared between the engine thread and every [`EngineClient`].
 struct Shared {
     capacity: usize,
+    /// KV page granularity (positions) — admission checks charge requests
+    /// by the pages they will claim, not a contiguous per-slot reservation.
+    page_size: usize,
+    /// Page-pool size the decoder was built with.
+    pages_total: usize,
     max_queue: usize,
     metrics: Arc<ServeMetrics>,
     /// `--log-json`: print one structured line per completed request.
@@ -135,8 +140,15 @@ impl EngineClient {
             return Err(SubmitError::Unavailable("server is shutting down".into()));
         }
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
-        ensure_fits(self.shared.capacity, id, prompt.len(), max_new)
-            .map_err(|e| SubmitError::Invalid(e.to_string()))?;
+        ensure_fits(
+            self.shared.capacity,
+            self.shared.page_size,
+            self.shared.pages_total,
+            id,
+            prompt.len(),
+            max_new,
+        )
+        .map_err(|e| SubmitError::Invalid(e.to_string()))?;
         let metrics = &self.shared.metrics;
         if max_new == 0 {
             let (tx, rx) = channel();
@@ -189,25 +201,24 @@ pub struct GenEngine {
 }
 
 impl GenEngine {
-    /// Spawn the engine thread over a shared backend: `slots` concurrent KV
-    /// slots of `capacity` positions each, refusing submissions once
-    /// `max_queue` requests are waiting for a slot.
+    /// Spawn the engine thread over a shared backend, sized by `cfg`
+    /// (generation slots, per-sequence context cap, KV precision, page-pool
+    /// geometry), refusing submissions once `max_queue` requests are
+    /// waiting for a slot.
     pub fn start(
         be: Arc<NativeBackend>,
-        slots: usize,
-        capacity: usize,
+        cfg: EngineConfig,
         max_queue: usize,
         metrics: Arc<ServeMetrics>,
     ) -> anyhow::Result<GenEngine> {
-        GenEngine::start_with_logging(be, slots, capacity, max_queue, metrics, false)
+        GenEngine::start_with_logging(be, cfg, max_queue, metrics, false)
     }
 
     /// [`GenEngine::start`] with `--log-json` request logging: one compact
     /// JSON line per completed request on stdout.
     pub fn start_with_logging(
         be: Arc<NativeBackend>,
-        slots: usize,
-        capacity: usize,
+        cfg: EngineConfig,
         max_queue: usize,
         metrics: Arc<ServeMetrics>,
         log_json: bool,
@@ -216,13 +227,18 @@ impl GenEngine {
         // at startup, not on the first request — and publish the KV shape
         // (`/healthz` + `/metrics` report it) while the decoder exists.
         {
-            let probe = BatchDecoder::new(&be, slots, capacity)?;
-            metrics.slots.store(slots, Ordering::Relaxed);
-            metrics.kv_bytes_per_slot.store(probe.kv_bytes_per_slot(), Ordering::Relaxed);
+            let probe = BatchDecoder::with_config(&be, &cfg)?;
+            metrics.slots.store(cfg.max_batch, Ordering::Relaxed);
+            metrics.kv_bytes_per_page.store(probe.kv_bytes_per_page(), Ordering::Relaxed);
             metrics.kv_bits.store(probe.kv_bits().bits() as usize, Ordering::Relaxed);
+            metrics.kv_page_size.store(probe.page_size(), Ordering::Relaxed);
+            metrics.kv_pages_total.store(probe.pages_total(), Ordering::Relaxed);
+            metrics.kv_pages_free.store(probe.pages_free(), Ordering::Relaxed);
         }
         let shared = Arc::new(Shared {
-            capacity: capacity.max(1),
+            capacity: cfg.max_context.max(1),
+            page_size: cfg.page_positions(),
+            pages_total: cfg.pages_total(),
             max_queue,
             metrics,
             log_json,
@@ -234,7 +250,7 @@ impl GenEngine {
         let thread_shared = shared.clone();
         let thread = thread::Builder::new()
             .name("sinq-gen-engine".into())
-            .spawn(move || engine_loop(&be, slots, capacity, rx, thread_shared))
+            .spawn(move || engine_loop(&be, cfg, rx, thread_shared))
             .expect("spawn generation engine");
         Ok(GenEngine { client: EngineClient { tx, shared }, thread: Some(thread) })
     }
@@ -270,14 +286,13 @@ struct Session {
 
 fn engine_loop(
     be: &NativeBackend,
-    slots: usize,
-    capacity: usize,
+    cfg: EngineConfig,
     rx: Receiver<EngineMsg>,
     shared: Arc<Shared>,
 ) {
     let metrics = shared.metrics.clone();
     let mut sessions: HashMap<usize, Session> = HashMap::new();
-    let mut dec = match BatchDecoder::new(be, slots, capacity) {
+    let mut dec = match BatchDecoder::with_config(be, &cfg) {
         Ok(d) => d,
         Err(e) => {
             fail_remaining(&rx, &shared, &format!("engine init failed: {e}"));
@@ -401,6 +416,15 @@ fn engine_loop(
             }
         }
         metrics.live_slots.store(dec.live(), Ordering::Relaxed);
+        // Page-pool + prefix-cache health after this step. The decoder's
+        // counters are cumulative, so `store` (not `fetch_add`) keeps the
+        // gauges exact across steps.
+        metrics.kv_pages_free.store(dec.pages_free(), Ordering::Relaxed);
+        metrics.prefix_cached_pages.store(dec.prefix_cached_pages(), Ordering::Relaxed);
+        let stats = dec.stats();
+        metrics.prefix_hits_total.store(stats.prefix_hits, Ordering::Relaxed);
+        metrics.prefix_tokens_reused_total.store(stats.prefix_tokens_reused, Ordering::Relaxed);
+        metrics.preempted_total.store(stats.preempted, Ordering::Relaxed);
     }
 
     metrics.live_slots.store(0, Ordering::Relaxed);
@@ -429,6 +453,10 @@ mod tests {
         Arc::new(NativeBackend::from_weights(&ModelWeights::synthetic(&cfg, 31)))
     }
 
+    fn engine_cfg(slots: usize, capacity: usize) -> EngineConfig {
+        EngineConfig::new().with_max_batch(slots).with_max_context(capacity)
+    }
+
     fn collect(handle: StreamHandle) -> (Vec<u8>, Option<StreamEvent>) {
         let mut tokens = Vec::new();
         for ev in handle.rx.iter() {
@@ -445,7 +473,7 @@ mod tests {
         let be = pico_arc();
         let expected = be.generate(b"hello engine", 7).unwrap();
         let metrics = Arc::new(ServeMetrics::new());
-        let eng = GenEngine::start(be, 2, 64, 16, metrics.clone()).unwrap();
+        let eng = GenEngine::start(be, engine_cfg(2, 64), 16, metrics.clone()).unwrap();
         let handle = eng.client().submit(b"hello engine".to_vec(), 7, None).unwrap();
         let (tokens, terminal) = collect(handle);
         assert_eq!(tokens, expected);
@@ -474,7 +502,8 @@ mod tests {
     #[test]
     fn oversized_request_is_invalid_and_zero_max_new_completes() {
         let be = pico_arc();
-        let eng = GenEngine::start(be, 1, 8, 4, Arc::new(ServeMetrics::new())).unwrap();
+        let eng =
+            GenEngine::start(be, engine_cfg(1, 8), 4, Arc::new(ServeMetrics::new())).unwrap();
         let client = eng.client();
         match client.submit(vec![b'x'; 32], 4, None) {
             Err(SubmitError::Invalid(msg)) => {
@@ -495,7 +524,7 @@ mod tests {
     fn max_queue_zero_refuses_everything() {
         let be = pico_arc();
         let metrics = Arc::new(ServeMetrics::new());
-        let eng = GenEngine::start(be, 1, 16, 0, metrics.clone()).unwrap();
+        let eng = GenEngine::start(be, engine_cfg(1, 16), 0, metrics.clone()).unwrap();
         match eng.client().submit(b"hi".to_vec(), 2, None) {
             Err(SubmitError::Busy { max_queue: 0, .. }) => {}
             other => panic!("expected Busy, got {other:?}"),
@@ -508,10 +537,15 @@ mod tests {
     fn cancel_evicts_live_request_and_counts_eviction() {
         let be = pico_arc();
         let metrics = Arc::new(ServeMetrics::new());
-        let eng = GenEngine::start(be, 1, 4096, 8, metrics.clone()).unwrap();
+        let eng = GenEngine::start(be, engine_cfg(1, 4096), 8, metrics.clone()).unwrap();
         assert_eq!(metrics.slots.load(Ordering::Relaxed), 1);
         assert_eq!(metrics.kv_bits.load(Ordering::Relaxed), 32);
-        assert!(metrics.kv_bytes_per_slot.load(Ordering::Relaxed) > 0);
+        assert!(metrics.kv_bytes_per_page.load(Ordering::Relaxed) > 0);
+        // Page-pool shape published at startup: 4096 positions / 16-position
+        // pages × 1 slot, all free before the first request.
+        assert_eq!(metrics.kv_page_size.load(Ordering::Relaxed), 16);
+        assert_eq!(metrics.kv_pages_total.load(Ordering::Relaxed), 256);
+        assert_eq!(metrics.kv_pages_free.load(Ordering::Relaxed), 256);
         let client = eng.client();
         let handle = client.submit(b"evict me".to_vec(), 4000, None).unwrap();
         // Wait until the request is actually decoding before cancelling.
@@ -533,7 +567,7 @@ mod tests {
     fn shutdown_drains_queued_work_and_refuses_new() {
         let be = pico_arc();
         let metrics = Arc::new(ServeMetrics::new());
-        let eng = GenEngine::start(be, 1, 32, 8, metrics.clone()).unwrap();
+        let eng = GenEngine::start(be, engine_cfg(1, 32), 8, metrics.clone()).unwrap();
         let client = eng.client();
         let handles: Vec<StreamHandle> = (0..3)
             .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4, None).unwrap())

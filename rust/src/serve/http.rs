@@ -169,23 +169,45 @@ pub fn write_response(
     w.flush()
 }
 
-/// Write a JSON `{"error": msg}` response.
+/// OpenAI-style machine-readable error kind for a status code.
+fn error_kind(code: u16) -> &'static str {
+    match code {
+        400 => "invalid_request_error",
+        404 => "not_found_error",
+        405 => "method_not_allowed",
+        503 => "overloaded_error",
+        _ => "internal_error",
+    }
+}
+
+/// Build the unified JSON error envelope every endpoint answers with:
+/// `{"error": {"message": msg, "type": kind}}`, the OpenAI-compatible shape
+/// clients already know how to unwrap.
+pub fn error_body(code: u16, msg: &str) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("message", Json::Str(msg.to_string())),
+            ("type", Json::Str(error_kind(code).to_string())),
+        ]),
+    )])
+    .to_string_compact()
+}
+
+/// Write the unified error envelope ([`error_body`]) with `code`.
 pub fn write_error(
     w: &mut impl Write,
     code: u16,
     msg: &str,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let body = crate::util::json::Json::obj(vec![(
-        "error",
-        crate::util::json::Json::Str(msg.to_string()),
-    )]);
     write_response(
         w,
         code,
         "application/json",
         &[],
-        body.to_string_compact().as_bytes(),
+        error_body(code, msg).as_bytes(),
         keep_alive,
     )
 }
@@ -204,6 +226,14 @@ pub fn write_sse_header(w: &mut impl Write) -> std::io::Result<()> {
 /// Write one SSE event and flush, so tokens reach the client mid-decode.
 pub fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::Result<()> {
     write!(w, "event: {event}\ndata: {data}\n\n")?;
+    w.flush()
+}
+
+/// Write one bare `data:` SSE frame (no `event:` line) and flush — the
+/// OpenAI streaming wire format `/v1/completions` uses, where the terminal
+/// frame is the literal `data: [DONE]`.
+pub fn write_sse_data(w: &mut impl Write, data: &str) -> std::io::Result<()> {
+    write!(w, "data: {data}\n\n")?;
     w.flush()
 }
 
@@ -286,7 +316,18 @@ mod tests {
         write_error(&mut out, 503, "busy", false).unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
-        assert!(s.ends_with("{\"error\":\"busy\"}"));
+        assert!(s.ends_with("{\"error\":{\"message\":\"busy\",\"type\":\"overloaded_error\"}}"), "{s}");
+    }
+
+    #[test]
+    fn error_envelope_maps_status_to_type() {
+        assert_eq!(
+            error_body(400, "bad"),
+            "{\"error\":{\"message\":\"bad\",\"type\":\"invalid_request_error\"}}"
+        );
+        assert!(error_body(404, "x").contains("\"type\":\"not_found_error\""));
+        assert!(error_body(405, "x").contains("\"type\":\"method_not_allowed\""));
+        assert!(error_body(500, "x").contains("\"type\":\"internal_error\""));
     }
 
     #[test]
@@ -331,5 +372,13 @@ mod tests {
         let mut out = Vec::new();
         write_sse_event(&mut out, "token", "{\"token\":65}").unwrap();
         assert_eq!(out, b"event: token\ndata: {\"token\":65}\n\n");
+    }
+
+    #[test]
+    fn sse_data_frame_has_no_event_line() {
+        let mut out = Vec::new();
+        write_sse_data(&mut out, "{\"text\":\"a\"}").unwrap();
+        write_sse_data(&mut out, "[DONE]").unwrap();
+        assert_eq!(out, b"data: {\"text\":\"a\"}\n\ndata: [DONE]\n\n");
     }
 }

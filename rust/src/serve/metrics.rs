@@ -101,10 +101,29 @@ pub struct ServeMetrics {
     /// Gauge: total KV slots the engine preallocated (`--max-batch`);
     /// occupancy = `live_slots / slots`.
     pub slots: AtomicUsize,
-    /// Gauge: resident bytes of one KV slot at the configured `--kv-bits`.
-    pub kv_bytes_per_slot: AtomicUsize,
+    /// Gauge: resident bytes of one KV page at the configured `--kv-bits`
+    /// (one page spans `kv_page_size` positions across every layer).
+    pub kv_bytes_per_page: AtomicUsize,
     /// Gauge: KV-cache element precision in bits (32 or 8).
     pub kv_bits: AtomicUsize,
+    /// Gauge: KV page granularity in positions (`--page-size`).
+    pub kv_page_size: AtomicUsize,
+    /// Gauge: page-pool size the decoder was built with (`--kv-pages`).
+    pub kv_pages_total: AtomicUsize,
+    /// Gauge: pages currently unclaimed (free-list depth after the latest
+    /// decode step).
+    pub kv_pages_free: AtomicUsize,
+    /// Gauge: full pages currently held by the prefix cache for copy-free
+    /// shared-prompt reuse.
+    pub prefix_cached_pages: AtomicUsize,
+    /// Admissions that mapped at least one prefix-cached page (skipping
+    /// prefill for the shared span).
+    pub prefix_hits_total: AtomicUsize,
+    /// Prompt positions skipped through prefix-cache page reuse.
+    pub prefix_tokens_reused_total: AtomicUsize,
+    /// Live sequences preempted back to the queue when the page pool ran
+    /// dry (they resume later; nothing is lost).
+    pub preempted_total: AtomicUsize,
     /// Request time-to-first-token (accept → first streamed token).
     pub ttft: AtomicHistogram,
     /// Request queue wait (accept → KV-slot admission).
@@ -129,8 +148,15 @@ impl ServeMetrics {
             queued: AtomicUsize::new(0),
             evicted_total: AtomicUsize::new(0),
             slots: AtomicUsize::new(0),
-            kv_bytes_per_slot: AtomicUsize::new(0),
+            kv_bytes_per_page: AtomicUsize::new(0),
             kv_bits: AtomicUsize::new(32),
+            kv_page_size: AtomicUsize::new(0),
+            kv_pages_total: AtomicUsize::new(0),
+            kv_pages_free: AtomicUsize::new(0),
+            prefix_cached_pages: AtomicUsize::new(0),
+            prefix_hits_total: AtomicUsize::new(0),
+            prefix_tokens_reused_total: AtomicUsize::new(0),
+            preempted_total: AtomicUsize::new(0),
             ttft: AtomicHistogram::new(&REQUEST_BUCKETS),
             queue_wait: AtomicHistogram::new(&REQUEST_BUCKETS),
             step_latency: AtomicHistogram::new(&STEP_BUCKETS),
@@ -172,20 +198,50 @@ impl ServeMetrics {
         self.tokens_generated.load(Ordering::Relaxed) as f64 / secs
     }
 
+    /// Fraction of accepted generation requests whose admission mapped at
+    /// least one prefix-cached page (0.0 before the first request).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hits = self.prefix_hits_total.load(Ordering::Relaxed) as f64;
+        hits / (self.requests_total.load(Ordering::Relaxed).max(1) as f64)
+    }
+
     /// Render the Prometheus text exposition for `GET /metrics`.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::with_capacity(4096);
-        let counters: [(&str, &str, usize); 12] = [
+        let counters: [(&str, &str, usize); 19] = [
             ("sinq_serve_live_slots", "gauge", self.live_slots.load(Ordering::Relaxed)),
             ("sinq_serve_slots", "gauge", self.slots.load(Ordering::Relaxed)),
             ("sinq_serve_queued_requests", "gauge", self.queued.load(Ordering::Relaxed)),
             (
-                "sinq_serve_kv_bytes_per_slot",
+                "sinq_serve_kv_bytes_per_page",
                 "gauge",
-                self.kv_bytes_per_slot.load(Ordering::Relaxed),
+                self.kv_bytes_per_page.load(Ordering::Relaxed),
             ),
             ("sinq_serve_kv_bits", "gauge", self.kv_bits.load(Ordering::Relaxed)),
+            ("sinq_serve_kv_page_size", "gauge", self.kv_page_size.load(Ordering::Relaxed)),
+            ("sinq_serve_kv_pages_total", "gauge", self.kv_pages_total.load(Ordering::Relaxed)),
+            ("sinq_serve_kv_pages_free", "gauge", self.kv_pages_free.load(Ordering::Relaxed)),
+            (
+                "sinq_serve_prefix_cached_pages",
+                "gauge",
+                self.prefix_cached_pages.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_serve_prefix_hits_total",
+                "counter",
+                self.prefix_hits_total.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_serve_prefix_tokens_reused_total",
+                "counter",
+                self.prefix_tokens_reused_total.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_serve_preempted_total",
+                "counter",
+                self.preempted_total.load(Ordering::Relaxed),
+            ),
             ("sinq_serve_evicted_total", "counter", self.evicted_total.load(Ordering::Relaxed)),
             ("sinq_serve_requests_total", "counter", self.requests_total.load(Ordering::Relaxed)),
             ("sinq_serve_rejected_total", "counter", self.rejected_total.load(Ordering::Relaxed)),
@@ -220,6 +276,8 @@ impl ServeMetrics {
             "sinq_serve_tokens_per_sec_lifetime {:.3}",
             self.tokens_per_sec_lifetime()
         );
+        let _ = writeln!(s, "# TYPE sinq_serve_prefix_hit_rate gauge");
+        let _ = writeln!(s, "sinq_serve_prefix_hit_rate {:.3}", self.prefix_hit_rate());
         self.ttft.render_prometheus("sinq_serve_ttft_seconds", &mut s);
         self.queue_wait.render_prometheus("sinq_serve_queue_wait_seconds", &mut s);
         self.step_latency.render_prometheus("sinq_serve_step_latency_seconds", &mut s);
@@ -278,17 +336,38 @@ mod tests {
         assert!(m.tokens_per_sec() > 0.0);
         assert!(m.tokens_per_sec_lifetime() > 0.0);
         m.live_slots.store(3, Ordering::Relaxed);
-        m.kv_bytes_per_slot.store(4096, Ordering::Relaxed);
+        m.kv_bytes_per_page.store(4096, Ordering::Relaxed);
         m.kv_bits.store(8, Ordering::Relaxed);
         m.evicted_total.fetch_add(2, Ordering::Relaxed);
+        m.kv_page_size.store(16, Ordering::Relaxed);
+        m.kv_pages_total.store(64, Ordering::Relaxed);
+        m.kv_pages_free.store(60, Ordering::Relaxed);
+        m.preempted_total.fetch_add(1, Ordering::Relaxed);
         let text = m.render();
         assert!(text.contains("sinq_serve_tokens_generated_total 100"), "{text}");
         assert!(text.contains("sinq_serve_live_slots 3"), "{text}");
         assert!(text.contains("# TYPE sinq_serve_requests_total counter"), "{text}");
-        assert!(text.contains("sinq_serve_kv_bytes_per_slot 4096"), "{text}");
+        assert!(text.contains("sinq_serve_kv_bytes_per_page 4096"), "{text}");
         assert!(text.contains("sinq_serve_kv_bits 8"), "{text}");
+        assert!(text.contains("sinq_serve_kv_page_size 16"), "{text}");
+        assert!(text.contains("sinq_serve_kv_pages_total 64"), "{text}");
+        assert!(text.contains("sinq_serve_kv_pages_free 60"), "{text}");
+        assert!(text.contains("# TYPE sinq_serve_prefix_hits_total counter"), "{text}");
+        assert!(text.contains("sinq_serve_preempted_total 1"), "{text}");
         assert!(text.contains("sinq_serve_evicted_total 2"), "{text}");
         assert!(text.contains("# TYPE sinq_serve_tokens_per_sec_lifetime gauge"), "{text}");
+    }
+
+    #[test]
+    fn prefix_hit_rate_divides_hits_by_requests() {
+        let m = ServeMetrics::new();
+        // No requests yet: rate must be 0, not NaN.
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.requests_total.store(4, Ordering::Relaxed);
+        m.prefix_hits_total.store(3, Ordering::Relaxed);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let text = m.render();
+        assert!(text.contains("sinq_serve_prefix_hit_rate 0.750"), "{text}");
     }
 
     #[test]

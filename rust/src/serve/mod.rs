@@ -23,10 +23,11 @@
 //! | endpoint | body | behaviour |
 //! |---|---|---|
 //! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | greedy continuation by default (bit-identical to the decoder); `temperature > 0` switches to seeded top-k sampling, reproducible across runs and batch placements; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
+//! | `POST /v1/completions` | `{"prompt": str, "max_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | OpenAI-compatible completion over the same engine: a `text_completion` document with `choices` and `usage` (including `total_tokens`); `"stream": true` answers bare `data:` SSE chunks terminated by `data: [DONE]` |
 //! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
-//! | `GET /healthz` | — | liveness + engine identity/capacity + model shape + build info + uptime |
-//! | `GET /metrics` | — | Prometheus text: live slots, queued requests, tokens/sec (windowed + lifetime), TTFT/queue-wait/step-latency histograms |
-//! | `GET /v1/stats` | — | one JSON document: request/latency aggregates, throughput, per-phase decode profile (`SINQ_PROFILE=1`), per-layer quantization-quality report |
+//! | `GET /healthz` | — | liveness + engine identity/capacity + page-pool shape + model shape + build info + uptime |
+//! | `GET /metrics` | — | Prometheus text: live slots, queued requests, page-pool and prefix-cache gauges (`kv_pages_*`, `prefix_hit_rate`), tokens/sec (windowed + lifetime), TTFT/queue-wait/step-latency histograms |
+//! | `GET /v1/stats` | — | one JSON document: request/latency aggregates, throughput, page-pool + prefix-cache health, per-phase decode profile (`SINQ_PROFILE=1`), per-layer quantization-quality report |
 //!
 //! Every generation response — the JSON body and the SSE `done` event —
 //! carries a `usage` object (prompt/completion token counts, queue-wait,
@@ -35,9 +36,12 @@
 //!
 //! ## Error and backpressure contract
 //!
-//! * Malformed JSON bodies and requests that cannot fit a KV slot answer
-//!   `400` with a JSON `{"error": …}` carrying the decoder's own
-//!   KV-capacity text — they never tear down the engine.
+//! * Every error answers one JSON envelope —
+//!   `{"error": {"message": …, "type": …}}` ([`http::error_body`]) — so
+//!   clients unwrap `400`/`404`/`405`/`503` identically. Malformed JSON
+//!   bodies and requests that cannot fit the page pool answer `400`
+//!   carrying the decoder's own page-accounting text; they never tear down
+//!   the engine.
 //! * When more than `--max-queue` generation requests are waiting for a KV
 //!   slot, new requests answer `503` with a `Retry-After` header instead of
 //!   queueing unboundedly.
@@ -55,9 +59,11 @@
 //! by the failed socket write: the handler cancels the request and the
 //! engine evicts its KV slot at the next step boundary instead of decoding
 //! to `max_new_tokens` (`sinq_serve_evicted_total` counts these). The
-//! KV-cache precision follows the backend's `--kv-bits 32|8` flag;
-//! `/healthz` and `/metrics` report `kv_bits` and the resident
-//! `kv_bytes_per_slot`.
+//! KV-cache precision follows the backend's `--kv-bits 32|8` flag; KV
+//! memory is a shared pool of fixed-size pages (`--page-size`,
+//! `--kv-pages`) with prefix caching across shared prompt prefixes, and
+//! `/healthz` + `/metrics` report `kv_bits`, `kv_bytes_per_page`, and the
+//! pool/prefix gauges.
 
 pub mod engine;
 pub mod http;
@@ -73,6 +79,7 @@ use std::time::Duration;
 use crate::backend::{self, simd, BackendSpec, InferenceBackend, NativeBackend, SampleCfg};
 use crate::coordinator::server::{BatchServer, ScoreClient, ServerStats};
 use crate::eval::{log_prob, LogitsEngine};
+use crate::obs::span::Usage;
 use crate::tensor::Matrix;
 use crate::util::json::Json;
 
@@ -96,9 +103,16 @@ pub struct ServeOpts {
     pub listen: String,
     /// Concurrent KV slots in the streaming engine (`--max-batch`).
     pub max_batch: usize,
-    /// Per-slot KV capacity in positions (`--max-context`): bounds
+    /// Per-sequence KV capacity in positions (`--max-context`): bounds
     /// `prompt + generated` per request.
     pub max_context: usize,
+    /// KV page granularity in positions (`--page-size`); requests claim
+    /// pages from a shared pool as they decode instead of reserving
+    /// `max_context` positions up front.
+    pub page_size: usize,
+    /// Page-pool size override (`--kv-pages`); `None` sizes the pool to
+    /// `max_batch × ceil(max_context / page_size)` pages.
+    pub kv_pages: Option<usize>,
     /// Generation requests allowed to wait for a slot before new ones get
     /// `503` (`--max-queue`).
     pub max_queue: usize,
@@ -124,6 +138,8 @@ impl Default for ServeOpts {
             listen: "127.0.0.1:0".into(),
             max_batch: 8,
             max_context: 512,
+            page_size: backend::config::DEFAULT_PAGE_SIZE,
+            kv_pages: None,
             max_queue: 64,
             default_max_new: 32,
             score_queue: 64,
@@ -236,12 +252,20 @@ impl Server {
         opts: &ServeOpts,
     ) -> anyhow::Result<Server> {
         let metrics = Arc::new(ServeMetrics::new());
-        let slots = opts.max_batch.max(1);
-        let capacity = opts.max_context.max(1);
+        // One engine configuration for the whole front-end: the backend's
+        // spec-level defaults (KV precision, sampling) plus the serve
+        // flags' concurrency/context/page geometry.
+        let cfg = be
+            .engine()
+            .with_max_batch(opts.max_batch)
+            .with_max_context(opts.max_context)
+            .with_page_size(opts.page_size)
+            .with_pages(opts.kv_pages);
+        let slots = cfg.max_batch;
+        let capacity = cfg.max_context;
         let gen_engine = GenEngine::start_with_logging(
             be.clone(),
-            slots,
-            capacity,
+            cfg,
             opts.max_queue,
             metrics.clone(),
             opts.log_json,
@@ -419,8 +443,13 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
             .map(|_| keep),
             ("GET", "/v1/stats") => handle_stats(&mut w, state, keep).map(|_| keep),
             ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body, keep),
+            ("POST", "/v1/completions") => handle_completions(&mut w, state, &req.body, keep),
             ("POST", "/v1/score") => handle_score(&mut w, state, &req.body, keep).map(|_| keep),
-            (_, "/healthz" | "/metrics" | "/v1/stats" | "/v1/generate" | "/v1/score") => {
+            (
+                _,
+                "/healthz" | "/metrics" | "/v1/stats" | "/v1/generate" | "/v1/completions"
+                | "/v1/score",
+            ) => {
                 http::write_error(
                     &mut w,
                     405,
@@ -475,7 +504,14 @@ fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std:
         ("slots", Json::Num(state.slots as f64)),
         ("kv_capacity", Json::Num(state.capacity as f64)),
         ("kv_bits", Json::Num(m.kv_bits.load(Ordering::Relaxed) as f64)),
-        ("kv_bytes_per_slot", Json::Num(m.kv_bytes_per_slot.load(Ordering::Relaxed) as f64)),
+        ("kv_bytes_per_page", Json::Num(m.kv_bytes_per_page.load(Ordering::Relaxed) as f64)),
+        ("kv_page_size", Json::Num(m.kv_page_size.load(Ordering::Relaxed) as f64)),
+        ("kv_pages_total", Json::Num(m.kv_pages_total.load(Ordering::Relaxed) as f64)),
+        ("kv_pages_free", Json::Num(m.kv_pages_free.load(Ordering::Relaxed) as f64)),
+        (
+            "prefix_cached_pages",
+            Json::Num(m.prefix_cached_pages.load(Ordering::Relaxed) as f64),
+        ),
         ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
         ("queued_requests", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
     ]);
@@ -500,6 +536,7 @@ fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::
         ("completed", Json::Num(m.completed_total.load(Ordering::Relaxed) as f64)),
         ("rejected", Json::Num(m.rejected_total.load(Ordering::Relaxed) as f64)),
         ("evicted", Json::Num(m.evicted_total.load(Ordering::Relaxed) as f64)),
+        ("preempted", Json::Num(m.preempted_total.load(Ordering::Relaxed) as f64)),
         ("queued", Json::Num(m.queued.load(Ordering::Relaxed) as f64)),
         ("live_slots", Json::Num(m.live_slots.load(Ordering::Relaxed) as f64)),
         ("score", Json::Num(m.score_requests.load(Ordering::Relaxed) as f64)),
@@ -515,6 +552,21 @@ fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::
         ("queue_wait", m.queue_wait.snapshot().to_json()),
         ("step", m.step_latency.snapshot().to_json()),
     ]);
+    let kv_pages = Json::obj(vec![
+        ("page_size", Json::Num(m.kv_page_size.load(Ordering::Relaxed) as f64)),
+        ("total", Json::Num(m.kv_pages_total.load(Ordering::Relaxed) as f64)),
+        ("free", Json::Num(m.kv_pages_free.load(Ordering::Relaxed) as f64)),
+        ("bytes_per_page", Json::Num(m.kv_bytes_per_page.load(Ordering::Relaxed) as f64)),
+    ]);
+    let prefix_cache = Json::obj(vec![
+        ("cached_pages", Json::Num(m.prefix_cached_pages.load(Ordering::Relaxed) as f64)),
+        ("hits", Json::Num(m.prefix_hits_total.load(Ordering::Relaxed) as f64)),
+        (
+            "tokens_reused",
+            Json::Num(m.prefix_tokens_reused_total.load(Ordering::Relaxed) as f64),
+        ),
+        ("hit_rate", Json::Num(m.prefix_hit_rate())),
+    ]);
     let quant = match state.be.quant_report() {
         Some(r) => r.to_json(),
         None => Json::Null,
@@ -527,6 +579,8 @@ fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::
         ("requests", requests),
         ("throughput", throughput),
         ("latency", latency),
+        ("kv_pages", kv_pages),
+        ("prefix_cache", prefix_cache),
         ("profile", crate::obs::profiler::snapshot().to_json()),
         ("quant", quant),
     ]);
@@ -550,6 +604,20 @@ struct GenerateBody {
 }
 
 fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, String> {
+    parse_gen_fields(body, default_max_new, "max_new_tokens")
+}
+
+/// `POST /v1/completions` parses identically except the token budget field
+/// follows the OpenAI name `max_tokens`.
+fn parse_completions(body: &[u8], default_max_new: usize) -> Result<GenerateBody, String> {
+    parse_gen_fields(body, default_max_new, "max_tokens")
+}
+
+fn parse_gen_fields(
+    body: &[u8],
+    default_max_new: usize,
+    max_field: &str,
+) -> Result<GenerateBody, String> {
     let text =
         std::str::from_utf8(body).map_err(|_| "request body is not valid UTF-8".to_string())?;
     let json = Json::parse(text).map_err(|e| format!("malformed JSON body: {e}"))?;
@@ -559,11 +627,12 @@ fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, S
         Some(_) => return Err("'prompt' must be a string".into()),
         None => return Err("missing field 'prompt'".into()),
     };
-    let max_new = match json.get("max_new_tokens") {
+    let max_new = match json.get(max_field) {
         Some(v) => v
             .as_f64()
             .filter(|n| *n >= 0.0 && n.fract() == 0.0)
-            .ok_or("'max_new_tokens' must be a non-negative integer")? as usize,
+            .ok_or_else(|| format!("'{max_field}' must be a non-negative integer"))?
+            as usize,
         None => default_max_new,
     };
     let stream = match json.get("stream") {
@@ -617,26 +686,7 @@ fn handle_generate(
         Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
     };
     match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample) {
-        // Structured engine errors: over-capacity prompts keep the
-        // decoder's KV-capacity text, saturation answers 503 + Retry-After.
-        Err(SubmitError::Invalid(msg)) => {
-            http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive)
-        }
-        Err(e @ SubmitError::Busy { .. }) => {
-            let body = Json::obj(vec![("error", Json::Str(e.to_string()))]);
-            http::write_response(
-                w,
-                503,
-                "application/json",
-                &[("Retry-After", "1")],
-                body.to_string_compact().as_bytes(),
-                keep_alive,
-            )
-            .map(|_| keep_alive)
-        }
-        Err(e @ SubmitError::Unavailable(_)) => {
-            http::write_error(w, 503, &e.to_string(), keep_alive).map(|_| keep_alive)
-        }
+        Err(e) => write_submit_error(w, &e, keep_alive).map(|_| keep_alive),
         Ok(handle) => {
             if parsed.stream {
                 let id = handle.id;
@@ -653,6 +703,185 @@ fn handle_generate(
             }
         }
     }
+}
+
+/// Map a refused submission onto the wire: over-capacity prompts answer
+/// `400` with the decoder's own page-accounting text, saturation answers
+/// `503` + `Retry-After` — all in the unified error envelope.
+fn write_submit_error(
+    w: &mut TcpStream,
+    e: &SubmitError,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    match e {
+        SubmitError::Invalid(msg) => http::write_error(w, 400, msg, keep_alive),
+        SubmitError::Busy { .. } => http::write_response(
+            w,
+            503,
+            "application/json",
+            &[("Retry-After", "1")],
+            http::error_body(503, &e.to_string()).as_bytes(),
+            keep_alive,
+        ),
+        SubmitError::Unavailable(_) => http::write_error(w, 503, &e.to_string(), keep_alive),
+    }
+}
+
+/// `POST /v1/completions`: the OpenAI completion shape over the same
+/// engine path as `/v1/generate`. Returns whether the connection is still
+/// reusable afterwards (streaming is close-delimited, like SSE above).
+fn handle_completions(
+    w: &mut TcpStream,
+    state: &ConnState,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<bool> {
+    let parsed = match parse_completions(body, state.default_max_new) {
+        Ok(p) => p,
+        Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
+    };
+    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample) {
+        Err(e) => write_submit_error(w, &e, keep_alive).map(|_| keep_alive),
+        Ok(handle) => {
+            if parsed.stream {
+                let id = handle.id;
+                let streamed = stream_completions(w, state, handle);
+                if streamed.is_err() {
+                    state.engine.cancel(id);
+                }
+                streamed.map(|_| false)
+            } else {
+                respond_completions(w, state, handle, keep_alive).map(|_| keep_alive)
+            }
+        }
+    }
+}
+
+/// Unix seconds for the OpenAI `created` stamp.
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// The OpenAI `usage` object: the request span's accounting plus the
+/// `total_tokens` sum OpenAI clients expect.
+fn openai_usage(u: &Usage) -> Json {
+    let mut j = u.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert(
+            "total_tokens".into(),
+            Json::Num((u.prompt_tokens + u.completion_tokens) as f64),
+        );
+    }
+    j
+}
+
+/// One OpenAI `text_completion` document — shared by the non-streamed
+/// response and every streamed chunk (chunks carry `finish_reason: null`
+/// and no `usage` until the final one).
+fn completion_json(
+    id: usize,
+    model: &str,
+    created: u64,
+    text: &str,
+    finish_reason: Option<&str>,
+    usage: Option<&Usage>,
+) -> Json {
+    let choice = Json::obj(vec![
+        ("text", Json::Str(text.to_string())),
+        ("index", Json::Num(0.0)),
+        ("logprobs", Json::Null),
+        (
+            "finish_reason",
+            match finish_reason {
+                Some(r) => Json::Str(r.to_string()),
+                None => Json::Null,
+            },
+        ),
+    ]);
+    let mut fields = vec![
+        ("id", Json::Str(format!("cmpl-{id}"))),
+        ("object", Json::Str("text_completion".into())),
+        ("created", Json::Num(created as f64)),
+        ("model", Json::Str(model.to_string())),
+        ("choices", Json::Arr(vec![choice])),
+    ];
+    if let Some(u) = usage {
+        fields.push(("usage", openai_usage(u)));
+    }
+    Json::obj(fields)
+}
+
+/// Streamed `/v1/completions`: bare `data:` chunks in the OpenAI wire
+/// format, one per decoded token, then a final chunk with `finish_reason`
+/// + `usage` and the literal `data: [DONE]` terminator.
+fn stream_completions(
+    w: &mut TcpStream,
+    state: &ConnState,
+    handle: StreamHandle,
+) -> std::io::Result<()> {
+    http::write_sse_header(w)?;
+    let created = unix_now();
+    let id = handle.id;
+    for ev in handle.rx.iter() {
+        match ev {
+            StreamEvent::Token(tok) => {
+                let piece = String::from_utf8_lossy(&[tok]).into_owned();
+                let chunk = completion_json(id, &state.model, created, &piece, None, None);
+                http::write_sse_data(w, &chunk.to_string_compact())?;
+            }
+            StreamEvent::Done { finish_reason, usage } => {
+                let last =
+                    completion_json(id, &state.model, created, "", Some(finish_reason), Some(&usage));
+                http::write_sse_data(w, &last.to_string_compact())?;
+                return http::write_sse_data(w, "[DONE]");
+            }
+            StreamEvent::Error(msg) => {
+                http::write_sse_data(w, &http::error_body(500, &msg))?;
+                return http::write_sse_data(w, "[DONE]");
+            }
+        }
+    }
+    http::write_sse_data(w, &http::error_body(500, "stream interrupted"))?;
+    http::write_sse_data(w, "[DONE]")
+}
+
+/// Non-streamed `/v1/completions`: one `text_completion` document.
+fn respond_completions(
+    w: &mut TcpStream,
+    state: &ConnState,
+    handle: StreamHandle,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let id = handle.id;
+    let mut text = Vec::new();
+    for ev in handle.rx.iter() {
+        match ev {
+            StreamEvent::Token(tok) => text.push(tok),
+            StreamEvent::Done { finish_reason, usage } => {
+                let body = completion_json(
+                    id,
+                    &state.model,
+                    unix_now(),
+                    &String::from_utf8_lossy(&text),
+                    Some(finish_reason),
+                    Some(&usage),
+                );
+                return http::write_response(
+                    w,
+                    200,
+                    "application/json",
+                    &[],
+                    body.to_string_compact().as_bytes(),
+                    keep_alive,
+                );
+            }
+            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg, keep_alive),
+        }
+    }
+    http::write_error(w, 500, "stream interrupted", keep_alive)
 }
 
 /// Streamed generation: one SSE `token` event per decoded token as the
@@ -845,14 +1074,18 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     }
     let server = Server::start_with_backend(be, opts)?;
     println!(
-        "listening on http://{} ({} slots x {} KV positions, max queue {})",
+        "listening on http://{} ({} slots x {} KV positions, page pool {} x {}-position pages, \
+         max queue {})",
         server.addr,
         opts.max_batch.max(1),
         opts.max_context.max(1),
+        server.metrics.kv_pages_total.load(Ordering::Relaxed),
+        server.metrics.kv_page_size.load(Ordering::Relaxed),
         opts.max_queue
     );
     println!(
-        "endpoints: POST /v1/generate  POST /v1/score  GET /healthz  GET /metrics  GET /v1/stats"
+        "endpoints: POST /v1/generate  POST /v1/completions  POST /v1/score  GET /healthz  \
+         GET /metrics  GET /v1/stats"
     );
 
     install_interrupt_handler();

@@ -7,7 +7,7 @@
 
 use std::time::Duration;
 
-use sinq::backend::{BatchDecoder, InferenceBackend, NativeBackend, NativeDecoder};
+use sinq::backend::{BatchDecoder, EngineConfig, InferenceBackend, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::coordinator::server::BatchServer;
 use sinq::quant::{Method, QuantConfig};
@@ -93,7 +93,8 @@ fn server_generation_queue_matches_single_sequence() {
         || {
             let mw = load_or_synthetic("/nonexistent", "tiny", 2001);
             let qm = quantize_simple(&mw, &QuantConfig::new(Method::Sinq, 4), None)?;
-            Ok(NativeBackend::from_quantized(&qm).with_max_batch(3))
+            Ok(NativeBackend::from_quantized(&qm)
+                .with_engine(EngineConfig::new().with_max_batch(3)))
         },
         32,
         Duration::from_millis(2),
@@ -148,8 +149,9 @@ fn both_decoders_reject_prompts_beyond_kv_capacity() {
 fn trait_generate_and_generate_batch_agree() {
     let mw = load_or_synthetic("/nonexistent", "tiny", 2005);
     let qm = quantize_simple(&mw, &QuantConfig::new(Method::Rtn, 4), None).unwrap();
-    let mut be: Box<dyn InferenceBackend> =
-        Box::new(NativeBackend::from_quantized(&qm).with_max_batch(4));
+    let mut be: Box<dyn InferenceBackend> = Box::new(
+        NativeBackend::from_quantized(&qm).with_engine(EngineConfig::new().with_max_batch(4)),
+    );
     let prompts: Vec<Vec<u8>> = vec![b"alpha".to_vec(), b"bravo charlie".to_vec()];
     let prompt_refs: Vec<&[u8]> = prompts.iter().map(|p| p.as_slice()).collect();
     let batched = be.generate_batch(&prompt_refs, &[10, 6]).unwrap();

@@ -1,0 +1,174 @@
+//! Correctness pins for the paged KV allocator and prefix cache
+//! (`sinq::backend::paged` through `BatchDecoder`):
+//!
+//! 1. Paged decode is **bit-identical** to the contiguous single-sequence
+//!    KV cache, at kv32 AND kv8, batch sizes 1/3/8 with staggered
+//!    completion, across page sizes.
+//! 2. A prefix-cache hit reproduces the cold decode exactly while
+//!    skipping prefill for the shared span.
+//! 3. When the page pool runs dry the youngest sequence is preempted and
+//!    re-admitted — everything still completes with unchanged tokens.
+//! 4. Prefix-cache eviction under pool pressure never corrupts decode.
+
+use sinq::backend::{BatchDecoder, EngineConfig, KvBits, NativeBackend, NativeDecoder};
+use sinq::model::{ModelConfig, ModelWeights};
+
+fn pico_backend(seed: u64) -> NativeBackend {
+    let cfg = ModelConfig::family("pico").unwrap();
+    NativeBackend::from_weights(&ModelWeights::synthetic(&cfg, seed))
+}
+
+/// Contiguous-KV reference tokens via the single-sequence decoder.
+fn solo_tokens(be: &NativeBackend, kv: KvBits, prompt: &[u8], n: usize) -> Vec<u8> {
+    let cfg = EngineConfig::new().with_max_context(prompt.len() + n + 1).with_kv_bits(kv);
+    let mut dec = NativeDecoder::with_config(be, &cfg).expect("solo decoder");
+    dec.generate(prompt, n).expect("solo decode")
+}
+
+// =====================================================================
+// 1. Paged ≡ contiguous, kv32 + kv8, batch 1/3/8, staggered budgets
+// =====================================================================
+
+#[test]
+fn paged_decode_bit_identical_to_contiguous_kv32_and_kv8() {
+    let nb = pico_backend(71);
+    // Varied prompt lengths and token budgets: sequences retire at
+    // different steps, recycling slots whenever slots < requests.
+    let reqs: [(&[u8], usize); 5] = [
+        (b"the paged pool" as &[u8], 9),
+        (b"sinkhorn", 4),
+        (b"a", 12),
+        (b"prefix caching decode", 6),
+        (b"kv", 8),
+    ];
+    for kv in [KvBits::F32, KvBits::Q8] {
+        let want: Vec<Vec<u8>> =
+            reqs.iter().map(|(p, n)| solo_tokens(&nb, kv, p, *n)).collect();
+        // Page size 4 forces many page-boundary crossings; 16 is the
+        // serving default.
+        for ps in [4usize, 16] {
+            for slots in [1usize, 3, 8] {
+                let cfg = EngineConfig::new()
+                    .with_max_batch(slots)
+                    .with_max_context(48)
+                    .with_kv_bits(kv)
+                    .with_page_size(ps);
+                let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+                for (i, (p, n)) in reqs.iter().enumerate() {
+                    dec.submit(i, p, *n).unwrap();
+                }
+                let outs = dec.run().unwrap();
+                assert_eq!(outs.len(), reqs.len());
+                for (i, out) in outs.iter().enumerate() {
+                    assert_eq!(
+                        out.tokens, want[i],
+                        "kv {kv:?} page_size {ps} slots {slots}: request {i} diverged \
+                         from the contiguous cache"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// =====================================================================
+// 2. Prefix-hit decode ≡ cold decode, prefill skipped for the span
+// =====================================================================
+
+#[test]
+fn prefix_hit_decode_matches_cold_decode_and_skips_prefill() {
+    let nb = pico_backend(72);
+    let prompt: &[u8] = b"shared prompt prefix!"; // 21 tokens, 5 full 4-pages
+    let cfg =
+        EngineConfig::new().with_max_batch(2).with_max_context(64).with_page_size(4);
+    let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+
+    dec.submit(0, prompt, 8).unwrap();
+    let cold = dec.run().unwrap().remove(0);
+    assert_eq!(dec.stats().prefix_hits, 0, "first decode must be cold");
+    assert_eq!(cold.steps, prompt.len() + 8 - 1, "cold decode prefills every position");
+    assert!(dec.prefix_cached_pages() > 0, "retired sequence must donate its full pages");
+    assert_eq!(cold.tokens, solo_tokens(&nb, KvBits::F32, prompt, 8));
+
+    dec.submit(1, prompt, 8).unwrap();
+    let hit = dec.run().unwrap().remove(0);
+    assert_eq!(hit.tokens, cold.tokens, "prefix-hit tokens must match the cold decode");
+    let stats = dec.stats();
+    assert_eq!(stats.prefix_hits, 1);
+    // 5 full pages of the 21-token prompt are shared (the 21st token is
+    // fed so the engine has logits to continue from).
+    assert_eq!(stats.prefix_tokens_reused, 20);
+    assert_eq!(hit.steps, cold.steps - 20, "shared span must skip prefill rows");
+}
+
+// =====================================================================
+// 3. Out-of-pages preemption: youngest re-queued, everything completes
+// =====================================================================
+
+#[test]
+fn out_of_pages_preempts_youngest_and_all_requests_complete() {
+    let nb = pico_backend(73);
+    // Each request needs 7 pages of 4 (prompt + generated − 1 ≤ 26
+    // positions); two of them cannot share an 8-page pool, so the pool
+    // runs dry mid-decode and the younger sequence must be preempted.
+    let cfg = EngineConfig::new()
+        .with_max_batch(2)
+        .with_max_context(32)
+        .with_page_size(4)
+        .with_pages(Some(8));
+    let reqs: [(&[u8], usize); 2] =
+        [(b"first long request" as &[u8], 9), (b"second long one!!", 9)];
+    let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        dec.submit(i, p, *n).unwrap();
+    }
+    let outs = dec.run().unwrap();
+    assert_eq!(outs.len(), 2, "preemption must re-queue, not drop");
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        assert_eq!(
+            outs[i].tokens,
+            solo_tokens(&nb, KvBits::F32, p, *n),
+            "request {i} diverged after preemption/re-admission"
+        );
+    }
+    let stats = dec.stats();
+    assert_eq!(stats.completed, 2);
+    assert!(stats.preempted >= 1, "an 8-page pool cannot hold both sequences");
+}
+
+// =====================================================================
+// 4. Prefix eviction under pool pressure stays correct
+// =====================================================================
+
+#[test]
+fn prefix_cache_eviction_under_pressure_never_corrupts_decode() {
+    let nb = pico_backend(74);
+    let cfg = EngineConfig::new()
+        .with_max_batch(2)
+        .with_max_context(24)
+        .with_page_size(4)
+        .with_pages(Some(8));
+    let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
+    // Ten distinct prompts through an 8-page pool: every retirement
+    // donates pages, so later admissions must evict cached pages to claim.
+    let mut want = Vec::new();
+    for i in 0..10usize {
+        let prompt = format!("distinct prompt {i:02}").into_bytes();
+        want.push(solo_tokens(&nb, KvBits::F32, &prompt, 5));
+        dec.submit(i, &prompt, 5).unwrap();
+    }
+    let outs = dec.run().unwrap();
+    assert_eq!(outs.len(), 10);
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(out.tokens, want[i], "request {i} diverged under cache pressure");
+    }
+    // Accounting invariant once the queue drains: every page is either
+    // free or held by exactly one prefix-cache entry.
+    assert_eq!(dec.live(), 0);
+    assert_eq!(dec.pages_free() + dec.prefix_cached_pages(), dec.pages_total());
+
+    // A repeat of an early (likely evicted) prompt still decodes exactly.
+    dec.submit(100, b"distinct prompt 00", 5).unwrap();
+    let out = dec.run().unwrap().remove(0);
+    assert_eq!(out.tokens, want[0], "post-eviction repeat diverged");
+}

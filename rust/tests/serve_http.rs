@@ -189,6 +189,27 @@ fn metric_value(text: &str, name: &str) -> f64 {
         .unwrap_or_else(|| panic!("metric {name} missing:\n{text}"))
 }
 
+/// Extract `error.message` from the unified error envelope
+/// `{"error": {"message": ..., "type": ...}}`.
+fn error_message(res: &Response) -> String {
+    res.json()
+        .get("error")
+        .and_then(|e| e.get("message"))
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string()
+}
+
+/// Extract `error.type` from the unified error envelope.
+fn error_type(res: &Response) -> String {
+    res.json()
+        .get("error")
+        .and_then(|e| e.get("type"))
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string()
+}
+
 // =====================================================================
 // Structured errors: malformed JSON and over-KV-capacity → 400
 // =====================================================================
@@ -205,8 +226,9 @@ fn malformed_json_body_returns_400_with_error_field() {
     ] {
         let res = request(&addr, "POST", path, body);
         assert_eq!(res.status, 400, "{path} body {body:?}");
-        let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
-        assert!(!err.is_empty(), "{path}: error field missing");
+        let err = error_message(&res);
+        assert!(!err.is_empty(), "{path}: error.message field missing");
+        assert_eq!(error_type(&res), "invalid_request_error", "{path}");
     }
     // The connection-level failure path must also answer 400, not hang up.
     let res = request(&addr, "POST", "/v1/generate", "");
@@ -226,7 +248,7 @@ fn over_capacity_prompt_returns_400_with_kv_error_text() {
         &generate_body("a prompt far longer than eight positions", 4, false),
     );
     assert_eq!(res.status, 400);
-    let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    let err = error_message(&res);
     assert!(err.contains("KV"), "expected the decoder's KV-capacity text, got: {err}");
     assert!(err.contains("capacity"), "{err}");
 
@@ -296,8 +318,9 @@ fn backpressure_503_when_max_queue_saturated() {
     let res = request(&addr, "POST", "/v1/generate", &generate_body("cccc", 5, false));
     assert_eq!(res.status, 503, "{}", String::from_utf8_lossy(&res.body));
     assert_eq!(res.header("retry-after"), Some("1"));
-    let err = res.json().get("error").and_then(Json::as_str).unwrap_or("").to_string();
+    let err = error_message(&res);
     assert!(err.contains("queue"), "{err}");
+    assert_eq!(error_type(&res), "overloaded_error");
 
     // Drain A and B: the refused request must not poison queued work.
     let mut rest = Vec::new();
@@ -361,38 +384,48 @@ fn healthz_reports_engine_shape_and_unknown_paths_404() {
     assert_eq!(json.get("slots").and_then(Json::as_usize), Some(3));
     assert_eq!(json.get("kv_capacity").and_then(Json::as_usize), Some(64));
     assert_eq!(json.get("kv_bits").and_then(Json::as_usize), Some(32));
-    let kv_bytes = json.get("kv_bytes_per_slot").and_then(Json::as_usize).unwrap();
-    assert!(kv_bytes > 0, "healthz must report resident KV bytes per slot");
+    let kv_bytes = json.get("kv_bytes_per_page").and_then(Json::as_usize).unwrap();
+    assert!(kv_bytes > 0, "healthz must report resident KV bytes per page");
+    // Page-pool accounting: 3 slots x ceil(64/16) pages each, all free.
+    assert_eq!(json.get("kv_page_size").and_then(Json::as_usize), Some(16));
+    assert_eq!(json.get("kv_pages_total").and_then(Json::as_usize), Some(12));
+    assert_eq!(json.get("kv_pages_free").and_then(Json::as_usize), Some(12));
+    assert_eq!(json.get("prefix_cached_pages").and_then(Json::as_usize), Some(0));
 
-    assert_eq!(request(&addr, "GET", "/nope", "").status, 404);
-    assert_eq!(request(&addr, "GET", "/v1/generate", "").status, 405);
+    let res = request(&addr, "GET", "/nope", "");
+    assert_eq!(res.status, 404);
+    assert_eq!(error_type(&res), "not_found_error");
+    let res = request(&addr, "GET", "/v1/generate", "");
+    assert_eq!(res.status, 405);
+    assert_eq!(error_type(&res), "method_not_allowed");
+    assert_eq!(request(&addr, "GET", "/v1/completions", "").status, 405);
     assert_eq!(request(&addr, "POST", "/healthz", "").status, 405);
     server.shutdown();
 }
 
 #[test]
-fn kv8_server_reports_smaller_slots_and_generates() {
+fn kv8_server_reports_smaller_pages_and_generates() {
     let opts = ServeOpts { max_batch: 2, max_context: 64, ..ServeOpts::default() };
     // Baseline: f32 cache.
     let server32 = start_server(&pico_spec(None), &opts);
     let bytes32 = request(&server32.addr.to_string(), "GET", "/healthz", "")
         .json()
-        .get("kv_bytes_per_slot")
+        .get("kv_bytes_per_page")
         .and_then(Json::as_usize)
         .unwrap();
     server32.shutdown();
 
     // Same shape at --kv-bits 8.
     let mut spec = pico_spec(None);
-    spec.kv_bits = sinq::backend::KvBits::Q8;
+    spec.engine = spec.engine.with_kv_bits(sinq::backend::KvBits::Q8);
     let server = start_server(&spec, &opts);
     let addr = server.addr.to_string();
     let json = request(&addr, "GET", "/healthz", "").json();
     assert_eq!(json.get("kv_bits").and_then(Json::as_usize), Some(8));
-    let bytes8 = json.get("kv_bytes_per_slot").and_then(Json::as_usize).unwrap();
+    let bytes8 = json.get("kv_bytes_per_page").and_then(Json::as_usize).unwrap();
     assert!(
         bytes32 as f64 / bytes8 as f64 >= 3.0,
-        "kv8 slot {bytes8}B not ≥3x smaller than f32 slot {bytes32}B"
+        "kv8 page {bytes8}B not ≥3x smaller than f32 page {bytes32}B"
     );
 
     // End-to-end decode through the quantized cache.
@@ -402,7 +435,7 @@ fn kv8_server_reports_smaller_slots_and_generates() {
     assert_eq!(sse_tokens(&events).len(), 6);
     let text = String::from_utf8(request(&addr, "GET", "/metrics", "").body).unwrap();
     assert_eq!(metric_value(&text, "sinq_serve_kv_bits") as usize, 8);
-    assert_eq!(metric_value(&text, "sinq_serve_kv_bytes_per_slot") as usize, bytes8);
+    assert_eq!(metric_value(&text, "sinq_serve_kv_bytes_per_page") as usize, bytes8);
     server.shutdown();
 }
 
@@ -821,6 +854,107 @@ fn usage_object_reported_on_json_and_sse_responses() {
     assert_eq!(usage.get("prompt_tokens").and_then(Json::as_usize), Some(prompt.len()));
     assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(5));
     assert!(usage.get("total_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    server.shutdown();
+}
+
+// =====================================================================
+// OpenAI-compatible /v1/completions
+// =====================================================================
+
+fn completions_body(prompt: &str, max_tokens: usize, stream: bool) -> String {
+    Json::obj(vec![
+        ("prompt", Json::Str(prompt.into())),
+        ("max_tokens", Json::Num(max_tokens as f64)),
+        ("stream", Json::Bool(stream)),
+    ])
+    .to_string_compact()
+}
+
+#[test]
+fn completions_endpoint_matches_native_decode_and_reports_usage() {
+    let spec = pico_spec(None);
+    let reference = backend::build_native(&spec).expect("reference backend");
+    let prompt = "openai compatible";
+    let expected = reference.generate(prompt.as_bytes(), 6).expect("reference tokens");
+
+    let server = start_server(&spec, &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let res = request(&addr, "POST", "/v1/completions", &completions_body(prompt, 6, false));
+    assert_eq!(res.status, 200, "{}", String::from_utf8_lossy(&res.body));
+    let json = res.json();
+    assert_eq!(json.get("object").and_then(Json::as_str), Some("text_completion"));
+    assert!(json.get("id").and_then(Json::as_str).unwrap().starts_with("cmpl-"));
+    assert!(json.get("created").and_then(Json::as_usize).unwrap() > 0);
+    let choices = json.get("choices").and_then(Json::as_arr).expect("choices array");
+    assert_eq!(choices.len(), 1);
+    let choice = &choices[0];
+    assert_eq!(choice.get("index").and_then(Json::as_usize), Some(0));
+    assert_eq!(choice.get("finish_reason").and_then(Json::as_str), Some("length"));
+    assert_eq!(
+        choice.get("text").and_then(Json::as_str).unwrap(),
+        String::from_utf8_lossy(&expected),
+        "completion text diverged from NativeDecoder::generate"
+    );
+    let usage = json.get("usage").expect("usage object");
+    assert_eq!(usage.get("prompt_tokens").and_then(Json::as_usize), Some(prompt.len()));
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(6));
+    assert_eq!(usage.get("total_tokens").and_then(Json::as_usize), Some(prompt.len() + 6));
+
+    // Invalid bodies answer through the unified envelope, naming the
+    // OpenAI field.
+    let res = request(&addr, "POST", "/v1/completions", "{\"max_tokens\": 4}");
+    assert_eq!(res.status, 400);
+    assert_eq!(error_type(&res), "invalid_request_error");
+    let res = request(&addr, "POST", "/v1/completions", "{\"prompt\":\"x\",\"max_tokens\":-1}");
+    assert_eq!(res.status, 400);
+    assert!(error_message(&res).contains("max_tokens"), "{}", error_message(&res));
+    server.shutdown();
+}
+
+#[test]
+fn streamed_completions_send_data_chunks_and_done_terminator() {
+    let spec = pico_spec(None);
+    let reference = backend::build_native(&spec).expect("reference backend");
+    let prompt = "stream compat";
+    let expected = reference.generate(prompt.as_bytes(), 5).expect("reference tokens");
+
+    let server = start_server(&spec, &ServeOpts::default());
+    let addr = server.addr.to_string();
+    let res = request(&addr, "POST", "/v1/completions", &completions_body(prompt, 5, true));
+    assert_eq!(res.status, 200, "{}", String::from_utf8_lossy(&res.body));
+    assert_eq!(res.header("content-type"), Some("text/event-stream"));
+
+    // OpenAI wire format: bare `data:` frames (no `event:` line), closed
+    // by the literal `data: [DONE]`.
+    let text = std::str::from_utf8(&res.body).expect("utf8 SSE body");
+    let frames: Vec<&str> = text
+        .split("\n\n")
+        .filter(|c| !c.trim().is_empty())
+        .map(|c| c.strip_prefix("data: ").expect("bare data frame"))
+        .collect();
+    assert_eq!(*frames.last().unwrap(), "[DONE]", "stream must end with [DONE]");
+    let chunks: Vec<Json> =
+        frames[..frames.len() - 1].iter().map(|f| Json::parse(f).expect("chunk json")).collect();
+    // One chunk per token plus the final finish_reason/usage chunk.
+    assert_eq!(chunks.len(), expected.len() + 1);
+    let streamed: String = chunks[..expected.len()]
+        .iter()
+        .map(|c| {
+            c.get("choices").and_then(Json::as_arr).unwrap()[0]
+                .get("text")
+                .and_then(Json::as_str)
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    let want: String =
+        expected.iter().map(|&b| String::from_utf8_lossy(&[b]).into_owned()).collect();
+    assert_eq!(streamed, want, "streamed completion text diverged");
+    let last = chunks.last().unwrap();
+    let choice = &last.get("choices").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(choice.get("finish_reason").and_then(Json::as_str), Some("length"));
+    let usage = last.get("usage").expect("usage on final chunk");
+    assert_eq!(usage.get("completion_tokens").and_then(Json::as_usize), Some(5));
     server.shutdown();
 }
 

@@ -19,7 +19,9 @@
 
 use std::collections::BTreeMap;
 
-use sinq::backend::{BatchDecoder, KvBits, NativeBackend, NativeDecoder, QuantizedTensor, SampleCfg};
+use sinq::backend::{
+    BatchDecoder, EngineConfig, KvBits, NativeBackend, NativeDecoder, QuantizedTensor, SampleCfg,
+};
 use sinq::coordinator::scheduler::quantize_simple;
 use sinq::eval::log_prob;
 use sinq::model::forward::Forward;
@@ -307,7 +309,8 @@ fn kv32_decode_parity_native_vs_batched_vs_forward() {
 
     // Incremental decode tracks the full forward (pre-refactor gate).
     let full = nb.forward(tokens).unwrap();
-    let mut dec = NativeDecoder::with_kv(&nb, tokens.len() + 1, KvBits::F32).unwrap();
+    let cfg = EngineConfig::new().with_max_context(tokens.len() + 1).with_kv_bits(KvBits::F32);
+    let mut dec = NativeDecoder::with_config(&nb, &cfg).unwrap();
     let mut last = Vec::new();
     for &t in tokens.iter() {
         last = dec.step(t).unwrap();
@@ -322,7 +325,11 @@ fn kv32_decode_parity_native_vs_batched_vs_forward() {
     // Exact-token parity: batched greedy == single-sequence greedy, at
     // every batch size and with staggered completion.
     for slots in [1usize, 3, 8] {
-        let mut batch = BatchDecoder::new_with_kv(&nb, slots, 48, KvBits::F32).unwrap();
+        let cfg = EngineConfig::new()
+            .with_max_batch(slots)
+            .with_max_context(48)
+            .with_kv_bits(KvBits::F32);
+        let mut batch = BatchDecoder::with_config(&nb, &cfg).unwrap();
         let reqs: [(&[u8], usize); 5] =
             [(b"one" as &[u8], 7), (b"second prompt", 3), (b"3rd", 9), (b"four!", 5), (b"5", 6)];
         for (i, (p, n)) in reqs.iter().enumerate() {
@@ -330,7 +337,8 @@ fn kv32_decode_parity_native_vs_batched_vs_forward() {
         }
         let outs = batch.run().unwrap();
         for (i, (p, n)) in reqs.iter().enumerate() {
-            let mut single = NativeDecoder::with_kv(&nb, 48, KvBits::F32).unwrap();
+            let single_cfg = EngineConfig::new().with_max_context(48).with_kv_bits(KvBits::F32);
+            let mut single = NativeDecoder::with_config(&nb, &single_cfg).unwrap();
             let want = single.generate(p, *n).unwrap();
             assert_eq!(outs[i].tokens, want, "slots={slots} request {i}");
         }
@@ -348,7 +356,8 @@ fn decoder_nll(be: &NativeBackend, windows: &[&[u8]], kv: KvBits) -> (f64, Vec<u
     let mut count = 0usize;
     let mut tops = Vec::new();
     for w in windows {
-        let mut dec = NativeDecoder::with_kv(be, w.len() + 1, kv).unwrap();
+        let cfg = EngineConfig::new().with_max_context(w.len() + 1).with_kv_bits(kv);
+        let mut dec = NativeDecoder::with_config(be, &cfg).unwrap();
         for p in 0..w.len() - 1 {
             let logits = dec.step(w[p]).unwrap();
             nll -= log_prob(&logits, w[p + 1]);
@@ -396,9 +405,11 @@ fn kv8_perplexity_and_flip_rate_within_tolerance() {
 #[test]
 fn kv8_quarters_kv_memory_and_decodes_end_to_end() {
     let mw = pico();
-    let nb = NativeBackend::from_weights(&mw).with_kv_bits(KvBits::Q8);
-    let d32 = NativeDecoder::with_kv(&nb, 256, KvBits::F32).unwrap();
-    let d8 = NativeDecoder::with_kv(&nb, 256, KvBits::Q8).unwrap();
+    let nb = NativeBackend::from_weights(&mw)
+        .with_engine(EngineConfig::new().with_kv_bits(KvBits::Q8));
+    let cfg = EngineConfig::new().with_max_context(256);
+    let d32 = NativeDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::F32)).unwrap();
+    let d8 = NativeDecoder::with_config(&nb, &cfg.with_kv_bits(KvBits::Q8)).unwrap();
     let ratio = d32.kv_bytes() as f64 / d8.kv_bytes() as f64;
     assert!(ratio >= 3.0, "kv8 slot reduction only {ratio:.2}x (gate: ≥ 3x)");
 

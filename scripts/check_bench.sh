@@ -9,14 +9,18 @@
 # (`tokens_per_sec_kv8` per row; top-level `kv_bytes_per_slot_f32/q8`
 # with `kv_reduction` ≥ 3x) and a `profiling_overhead_pct` ≤ 3 (the
 # per-phase decode timers must stay near-free); the serve report needs
-# per-concurrency requests/sec plus a median TTFT. Fails loudly so a
-# silently-broken bench cannot upload garbage artifacts.
+# per-concurrency requests/sec plus a median TTFT, and the shared-prefix
+# fields (`prefix_tokens`, `ttft_cold_prefix_ms`, `ttft_hit_prefix_ms`).
+# Fails loudly so a silently-broken bench cannot upload garbage artifacts.
 #
 # Set CHECK_BENCH_SIMD_SPEEDUP=<x> (e.g. 1.5) to additionally require the
 # decode report's SIMD path to be ≥ x× scalar tokens/sec at batch 1 and
 # 16 — CI's bench-smoke sets this on runners whose dispatcher selects a
 # non-scalar kernel, so the SIMD paths cannot silently regress to parity
-# with the fallback.
+# with the fallback. Set CHECK_BENCH_PREFIX_TTFT=1 to additionally require
+# the serve report's prefix-hit TTFT to beat its cold TTFT (the prefix
+# cache must actually skip prefill; off by default because quick-mode
+# wall-clocks are noisy).
 set -euo pipefail
 
 if [ "$#" -eq 0 ]; then
@@ -92,6 +96,8 @@ if bench == "decode":
         print(f"check_bench: {path} SIMD gate ok (kernel '{kernel}', ≥{need}x)")
 
 if bench == "serve":
+    import os
+
     batches = []
     for row in results:
         assert row.get("requests_per_sec", 0) > 0, f"{path}: zero req/s row {row!r}"
@@ -99,6 +105,17 @@ if bench == "serve":
         batches.append(row.get("batch", 0))
     assert any(b >= 16 for b in batches), f"{path}: no concurrency ≥ 16 row (got {batches})"
     assert any(b == 1 for b in batches), f"{path}: no concurrency-1 baseline row"
+    prefix_tokens = doc.get("prefix_tokens", 0)
+    assert prefix_tokens >= 512, f"{path}: shared-prefix phase missing (got {prefix_tokens})"
+    cold = doc.get("ttft_cold_prefix_ms", 0)
+    hit = doc.get("ttft_hit_prefix_ms", 0)
+    assert cold > 0 and hit > 0, f"{path}: missing shared-prefix TTFT fields"
+    if os.environ.get("CHECK_BENCH_PREFIX_TTFT", ""):
+        assert hit < cold, (
+            f"{path}: prefix-hit TTFT {hit:.1f}ms not below cold {cold:.1f}ms — "
+            f"the prefix cache is not skipping prefill"
+        )
+        print(f"check_bench: {path} prefix gate ok (cold {cold:.1f}ms → hit {hit:.1f}ms)")
 
 print(f"check_bench: {path} ok ({bench}, {len(results)} rows)")
 PYEOF
