@@ -23,7 +23,7 @@ use sinq::backend::simd::{self, Isa};
 use sinq::backend::{BatchDecoder, EngineConfig, KvBits, NativeBackend, NativeDecoder};
 use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
-use sinq::obs::profiler;
+use sinq::obs::{drift, journal, profiler};
 use sinq::quant::{Method, QuantConfig};
 use sinq::util::json::Json;
 
@@ -206,6 +206,58 @@ fn main() {
          → {profiling_overhead_pct:.2}% overhead; hottest phase {hottest}"
     );
 
+    // Flight-recorder costs. The drift sentinel at its documented default
+    // rate (1-in-16 steps) recomputes one live row through the scalar
+    // kernels per sampled step; that must cost ≤ 3% batched throughput
+    // (gated by scripts/check_bench.sh) and must never perturb decode.
+    // The event journal likewise must leave tokens bit-identical.
+    let run_flight = |drift_sample: usize| {
+        let cfg = EngineConfig::new()
+            .with_max_batch(16)
+            .with_max_context(capacity)
+            .with_drift_sample(drift_sample);
+        let mut best = f64::INFINITY;
+        let mut tokens = 0usize;
+        let mut outs: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..preps {
+            let t0 = Instant::now();
+            let mut dec = BatchDecoder::with_config(&be, &cfg).expect("batch decoder");
+            for (i, (prompt, g)) in reqs.iter().enumerate() {
+                dec.submit(i, prompt, *g).expect("submit");
+            }
+            let got = dec.run().expect("decode");
+            best = best.min(t0.elapsed().as_secs_f64());
+            tokens = dec.stats().tokens;
+            outs = got.into_iter().map(|o| o.tokens).collect();
+        }
+        (best, tokens, outs)
+    };
+    let (drift_off_secs, flight_tokens, toks_plain) = run_flight(0);
+    drift::reset();
+    let (drift_on_secs, _, toks_sentinel) = run_flight(16);
+    let drift_snap = drift::snapshot();
+    drift::reset();
+    assert_eq!(toks_sentinel, toks_plain, "drift sentinel changed decoded tokens");
+    assert!(drift_snap.samples > 0, "sentinel sampled nothing at 1-in-16");
+    let tps_drift_off = flight_tokens as f64 / drift_off_secs;
+    let tps_drift_on = flight_tokens as f64 / drift_on_secs;
+    let drift_overhead_pct = ((tps_drift_off - tps_drift_on) / tps_drift_off * 100.0).max(0.0);
+    println!(
+        "drift sentinel (1-in-16): off {tps_drift_off:.0} tok/s, on {tps_drift_on:.0} tok/s \
+         → {drift_overhead_pct:.2}% overhead; {} samples, {} argmax flips, \
+         max |Δ| {:.2e}",
+        drift_snap.samples, drift_snap.argmax_flips, drift_snap.max_abs_diff
+    );
+
+    journal::reset();
+    journal::set_enabled(true);
+    let (_, _, toks_journaled) = run_flight(0);
+    journal::set_enabled(false);
+    let journal_events = journal::snapshot(usize::MAX).len();
+    let journal_tokens_identical = toks_journaled == toks_plain;
+    assert!(journal_tokens_identical, "event journal changed decoded tokens");
+    println!("journal: {journal_events} events recorded, tokens bit-identical with recorder off");
+
     // Per-slot KV memory at both precisions (what --max-batch multiplies).
     let slot_cfg = EngineConfig::new().with_max_context(capacity);
     let kv_bytes_f32 = NativeDecoder::with_config(&be, &slot_cfg.with_kv_bits(KvBits::F32))
@@ -234,6 +286,10 @@ fn main() {
         ("kv_bytes_per_slot_q8", Json::Num(kv_bytes_q8 as f64)),
         ("kv_reduction", Json::Num(kv_reduction)),
         ("profiling_overhead_pct", Json::Num(profiling_overhead_pct)),
+        ("drift_overhead_pct", Json::Num(drift_overhead_pct)),
+        ("drift_samples", Json::Num(drift_snap.samples as f64)),
+        ("drift_argmax_flips", Json::Num(drift_snap.argmax_flips as f64)),
+        ("journal_tokens_identical", Json::Bool(journal_tokens_identical)),
         ("results", Json::Arr(summary)),
     ]);
     // Repo root, resolved from the package dir so cwd does not matter.

@@ -37,11 +37,15 @@ use std::collections::VecDeque;
 
 use crate::backend::config::EngineConfig;
 use crate::backend::fwd::{
-    decode_rows, DecodeScratch, KvBits, SampleCfg, StepRow, TokenPicker,
+    decode_rows, AttnScratch, DecodeScratch, KvArena, KvBits, SampleCfg, StepRow, TokenPicker,
 };
 use crate::backend::native::{NativeBackend, ResolvedModel};
 use crate::backend::paged::{PagedKv, PrefixCache};
+use crate::backend::simd::{self, Isa};
+use crate::obs::drift;
+use crate::obs::journal::{self, EventKind};
 use crate::obs::profiler::{self, Phase};
+use crate::tensor::Matrix;
 
 /// One generation request queued for slot admission.
 #[derive(Debug, Clone)]
@@ -197,6 +201,31 @@ pub struct BatchDecoder<'a> {
     scratch: DecodeScratch,
     stats: BatchStats,
     births: u64,
+    /// Drift-sentinel sampling rate (`EngineConfig::drift_sample`); every
+    /// `N`th step recomputes one live row through the forced-scalar kernel
+    /// path and reports the comparison into [`crate::obs::drift`]. 0 = off.
+    drift_sample: usize,
+}
+
+/// Read-only view of the paged pool for the drift sentinel's scalar
+/// recompute: `write` is a no-op so the recomputation can never perturb
+/// the live KV state the fast path already wrote (`attend` only reads).
+struct ReadOnlyKv<'k>(&'k PagedKv);
+
+impl KvArena for ReadOnlyKv<'_> {
+    fn write(&mut self, _slot: usize, _layer: usize, _pos: usize, _k: &[f32], _v: &[f32]) {}
+
+    fn attend(
+        &self,
+        slot: usize,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+    ) {
+        self.0.attend(slot, layer, q, pos, ctx, s);
+    }
 }
 
 impl<'a> BatchDecoder<'a> {
@@ -246,6 +275,7 @@ impl<'a> BatchDecoder<'a> {
             scratch: DecodeScratch::new(cap),
             stats: BatchStats::default(),
             births: 0,
+            drift_sample: cfg.drift_sample,
         })
     }
 
@@ -276,9 +306,11 @@ impl<'a> BatchDecoder<'a> {
             prompt.len(),
             max_new,
         )?;
+        journal::record(EventKind::Enqueue, id, 0);
         if max_new == 0 {
             self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
             self.stats.completed += 1;
+            journal::record(EventKind::Complete, id, 0);
             return Ok(());
         }
         let sample = sample.or(self.default_sample);
@@ -302,6 +334,7 @@ impl<'a> BatchDecoder<'a> {
         }) {
             let was_fresh = matches!(self.pending[i], Pending::Fresh(_));
             self.pending.remove(i);
+            journal::record(EventKind::Evict, id, 0);
             return if was_fresh {
                 CancelOutcome::Pending
             } else {
@@ -313,9 +346,14 @@ impl<'a> BatchDecoder<'a> {
         }
         for si in 0..self.slots.len() {
             if self.slots[si].as_ref().map(|a| a.id) == Some(id) {
+                let generated = self.slots[si]
+                    .as_ref()
+                    .map(|a| (a.seq.len() - a.prompt_len) as u64)
+                    .unwrap_or(0);
                 self.slots[si] = None;
                 self.kv.release_slot(si);
                 self.stats.evicted += 1;
+                journal::record(EventKind::Evict, id, generated);
                 return CancelOutcome::Evicted;
             }
         }
@@ -342,7 +380,9 @@ impl<'a> BatchDecoder<'a> {
                         self.stats.prefix_hits += 1;
                         self.stats.prefix_tokens_reused += start;
                         self.kv.assign_shared(si, &shared);
+                        journal::record(EventKind::PrefixHit, req.id, start as u64);
                     }
+                    journal::record(EventKind::Admit, req.id, (req.prompt.len() - start) as u64);
                     self.births += 1;
                     Active {
                         id: req.id,
@@ -365,6 +405,7 @@ impl<'a> BatchDecoder<'a> {
                         self.kv.assign_shared(si, &shared);
                     }
                     a.pos = shared.len() * self.kv.page_size();
+                    journal::record(EventKind::Resume, a.id, (a.seq.len() - a.pos) as u64);
                     a
                 }
             };
@@ -393,6 +434,11 @@ impl<'a> BatchDecoder<'a> {
                     break;
                 }
                 if self.kv.try_claim(si) {
+                    if journal::enabled() {
+                        let id = self.slots[si].as_ref().map(|a| a.id).unwrap_or(0);
+                        let pages = self.kv.table(si).len() as u64;
+                        journal::record(EventKind::PageClaim, id, pages);
+                    }
                     continue;
                 }
                 if self.prefix.evict_one(&mut self.kv) {
@@ -404,6 +450,7 @@ impl<'a> BatchDecoder<'a> {
                     .expect("claimant slot is live");
                 let a = self.slots[victim].take().expect("live victim");
                 self.kv.release_slot(victim);
+                journal::record(EventKind::Preempt, a.id, (a.seq.len() - a.prompt_len) as u64);
                 self.pending.push_front(Pending::Resume(a));
                 self.stats.preempted += 1;
                 if victim == si {
@@ -442,6 +489,7 @@ impl<'a> BatchDecoder<'a> {
                 tokens: done.seq[done.prompt_len..].to_vec(),
                 steps: done.steps,
             };
+            journal::record(EventKind::Complete, done.id, out.tokens.len() as u64);
             self.finished.push(out);
             self.stats.completed += 1;
         }
@@ -468,16 +516,40 @@ impl<'a> BatchDecoder<'a> {
         if rows.is_empty() {
             return Ok(0);
         }
+        let step_t0 = journal::enabled().then(journal::now_us);
         let logits = decode_rows(&self.model, &rows, &mut self.kv, &mut self.scratch);
 
         let b = rows.len();
+        if let Some(t0) = step_t0 {
+            journal::record_span(EventKind::Step, 0, t0, b as u64);
+        }
         self.stats.steps += 1;
         self.stats.tokens += b;
         self.stats.peak_batch = self.stats.peak_batch.max(b);
+        if self.drift_sample > 0 && self.stats.steps % self.drift_sample == 0 {
+            self.drift_check(&rows, &logits);
+        }
         for (r, row) in rows.iter().enumerate() {
             self.advance(row.slot, logits.row(r));
         }
         Ok(b)
+    }
+
+    /// Drift sentinel: recompute one sampled live row's logits through the
+    /// forced-scalar kernel path against a read-only view of the live KV
+    /// pool, and report the fast-vs-reference comparison into
+    /// [`crate::obs::drift`]. Runs *before* [`BatchDecoder::advance`]
+    /// mutates positions, so the recomputation sees exactly the state the
+    /// fast pass decoded from; the no-op `write` guarantees tokens are
+    /// bit-identical with the sentinel on or off.
+    fn drift_check(&mut self, rows: &[StepRow], logits: &Matrix) {
+        let r = (self.stats.steps / self.drift_sample) % rows.len();
+        let prior = simd::forced();
+        simd::force(Some(Isa::Scalar));
+        let reference =
+            decode_rows(&self.model, &rows[r..r + 1], &mut ReadOnlyKv(&self.kv), &mut self.scratch);
+        simd::force(prior);
+        drift::observe_rows(logits.row(r), reference.row(0));
     }
 
     /// Drive [`BatchDecoder::step`] until every submitted request finished;

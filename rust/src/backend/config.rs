@@ -30,6 +30,11 @@ pub struct EngineConfig {
     /// Default sampling for requests that do not carry their own
     /// [`SampleCfg`]; `None` decodes greedily.
     pub sample: Option<SampleCfg>,
+    /// Drift-sentinel sampling rate: every `N`th decode step recomputes
+    /// one live row's logits through the forced-scalar kernel path and
+    /// feeds the comparison into [`crate::obs::drift`]. `0` (the default)
+    /// disables the sentinel entirely (`--drift-sample N`).
+    pub drift_sample: usize,
 }
 
 /// Default serving concurrency: scoring batch size and generation slots.
@@ -47,6 +52,7 @@ impl Default for EngineConfig {
             page_size: DEFAULT_PAGE_SIZE,
             pages: None,
             sample: None,
+            drift_sample: 0,
         }
     }
 }
@@ -87,6 +93,12 @@ impl EngineConfig {
 
     pub fn with_sample(mut self, sample: Option<SampleCfg>) -> EngineConfig {
         self.sample = sample;
+        self
+    }
+
+    /// Drift-sentinel sampling rate (`0` disables).
+    pub fn with_drift_sample(mut self, drift_sample: usize) -> EngineConfig {
+        self.drift_sample = drift_sample;
         self
     }
 
@@ -135,5 +147,12 @@ mod tests {
         let cfg = EngineConfig::new().with_sample(Some(s)).with_kv_bits(KvBits::Q8);
         assert_eq!(cfg.sample, Some(s));
         assert_eq!(cfg.kv_bits, KvBits::Q8);
+    }
+
+    #[test]
+    fn drift_sentinel_defaults_off() {
+        assert_eq!(EngineConfig::new().drift_sample, 0);
+        let cfg = EngineConfig::new().with_drift_sample(16);
+        assert_eq!(cfg.drift_sample, 16);
     }
 }

@@ -110,6 +110,19 @@ pub fn force(isa: Option<Isa>) {
     FORCED.store(v, Ordering::SeqCst);
 }
 
+/// The override currently installed by [`force`], if any. Callers that
+/// temporarily force an ISA (the drift sentinel's scalar recompute) read
+/// this first so they can restore the prior state instead of clobbering a
+/// test harness's override.
+pub fn forced() -> Option<Isa> {
+    match FORCED.load(Ordering::SeqCst) {
+        1 => Some(Isa::Scalar),
+        2 => Some(Isa::Avx2),
+        3 => Some(Isa::Neon),
+        _ => None,
+    }
+}
+
 /// Resolve the `SINQ_SIMD` environment variable (consulted once).
 fn choose() -> Isa {
     let Ok(raw) = std::env::var("SINQ_SIMD") else {

@@ -3,12 +3,12 @@
 //! ```text
 //! sinq quantize --model tiny --method sinq --bits 4 [--no-overhead] [--out q.stz]
 //! sinq eval     --model tiny [--backend native|pjrt|auto] [--quantized q.stz]
-//! sinq analyze  r2|adam|kurtosis|recon|fig1|kv|profile [--model tiny] [--backend auto|native|pjrt]
+//! sinq analyze  r2|adam|kurtosis|recon|fig1|kv|profile|trace [--model tiny] [--backend auto|native|pjrt]
 //! sinq serve    --model tiny [--backend native|pjrt|auto] [--requests 32]
 //!               [--max-batch 8] [--max-new-tokens 16]
 //! sinq serve    --listen 127.0.0.1:8080 [--max-batch 8] [--max-queue 64]
 //!               [--max-context 512] [--kv-bits 32|8] [--page-size 16] [--kv-pages N]
-//!               [--method sinq --bits 4 | --quantized q.stz]
+//!               [--drift-sample N] [--method sinq --bits 4 | --quantized q.stz]
 //! sinq table    1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all
 //! ```
 //!
@@ -70,21 +70,24 @@ fn print_help() {
         "sinq — Sinkhorn-Normalized Quantization (paper reproduction)\n\n\
          USAGE:\n  sinq quantize --model <name> --method <m> --bits <b> [--out f.stz] [--no-overhead]\n  \
          sinq eval --model <name> [--backend native|pjrt|auto] [--quantized f.stz] [--corpus wiki|c4]\n  \
-         sinq analyze <r2|adam|kurtosis|recon|fig1|kv|profile> [--model <name>] [--backend auto|native|pjrt]\n  \
+         sinq analyze <r2|adam|kurtosis|recon|fig1|kv|profile|trace> [--model <name>] [--backend auto|native|pjrt]\n  \
          sinq serve --model <name> [--backend native|pjrt|auto] [--requests N] [--quantized f.stz]\n             \
          [--max-batch N] [--max-new-tokens N]\n  \
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
          [--max-context N] [--max-new-tokens N] [--kv-bits 32|8] [--log-json]\n             \
-         [--page-size N] [--kv-pages N]\n             \
+         [--page-size N] [--kv-pages N] [--drift-sample N]\n             \
          [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true;\n  \
          seeded sampling via temperature/top_k/seed fields, greedy default),\n  \
          OpenAI-compatible POST /v1/completions (prompt/max_tokens/stream; data: chunks\n  \
          ending in data: [DONE]), POST /v1/score, GET /healthz, GET /metrics,\n  \
-         GET /v1/stats (span/phase/quant telemetry; per-phase decode profiling via\n  \
-         SINQ_PROFILE=1); every generation response carries a usage object; --log-json\n  \
-         prints one JSON line per request; errors use one JSON envelope\n  \
+         GET /v1/stats (span/phase/quant/drift telemetry; per-phase decode profiling\n  \
+         via SINQ_PROFILE=1), GET /debug/trace?last=N (flight-recorder events as\n  \
+         Chrome-trace JSON for Perfetto); --drift-sample N recomputes every Nth decode\n  \
+         step's sampled row on the scalar kernel path and reports drift on /metrics;\n  \
+         every generation response carries a usage object and an X-Request-Id header;\n  \
+         --log-json prints one JSON line per request; errors use one JSON envelope\n  \
          {{\"error\":{{\"message\",\"type\"}}}}; 503 + Retry-After past --max-queue;\n  \
          --kv-bits 8 packs decode KV caches to u8 with per-head scales (~4x less\n  \
          memory per page; 32 = bit-identical default); KV memory is a shared pool of\n  \
@@ -225,6 +228,7 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
         "fig1" => tables::fig1_table(&ctx)?,
         "kv" => tables::kv_cache_table(&ctx, &model)?,
         "profile" => tables::quant_profile_table(&ctx, &model)?,
+        "trace" => tables::trace_table(&ctx, &model)?,
         other => anyhow::bail!("unknown analysis '{other}'"),
     };
     t.print();
@@ -284,6 +288,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_connections: args.num("max-connections", 256),
             keepalive_idle_ms: args.num("keepalive-idle-ms", 5_000),
             log_json: args.has("log-json"),
+            drift_sample: args.num("drift-sample", 0),
         };
         return sinq::serve::run(&spec, &opts);
     }

@@ -1,0 +1,176 @@
+//! Runtime numerical drift sentinel — accounting side.
+//!
+//! The repo's core guarantee is that every fast path (SIMD dequant,
+//! quantized KV, paged KV) stays bit-identical or tolerance-pinned to the
+//! scalar f32 reference. Tests enforce that at CI time; this module makes
+//! it observable in production. When `EngineConfig::drift_sample` is N > 0,
+//! the batch decoder re-runs one sampled live row's forward pass through
+//! the forced-scalar kernel path every N steps and reports the comparison
+//! here: max absolute logit difference, relative error, and whether the
+//! greedy argmax flipped. `/metrics` and `/v1/stats` render [`snapshot`].
+//!
+//! All state is process-global lock-free atomics, same as the profiler:
+//! recording is a handful of relaxed stores, and the max trackers use
+//! compare-exchange loops over the f32 bit patterns (all values are
+//! non-negative, so the IEEE-754 ordering matches the numeric ordering).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+static SAMPLES: AtomicU64 = AtomicU64::new(0);
+static FLIPS: AtomicU64 = AtomicU64::new(0);
+static MAX_ABS_BITS: AtomicU32 = AtomicU32::new(0);
+static MAX_REL_BITS: AtomicU32 = AtomicU32::new(0);
+static LAST_ABS_BITS: AtomicU32 = AtomicU32::new(0);
+static LAST_REL_BITS: AtomicU32 = AtomicU32::new(0);
+
+fn store_max(cell: &AtomicU32, value: f32) {
+    let bits = value.max(0.0).to_bits();
+    let mut cur = cell.load(Ordering::Relaxed);
+    // Non-negative f32 bit patterns order the same as the floats they
+    // encode, so a plain integer max is a float max.
+    while bits > cur {
+        match cell.compare_exchange_weak(cur, bits, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Record one sentinel comparison: the max absolute logit difference, the
+/// relative error (max-abs-diff over the reference's max-abs logit), and
+/// whether the greedy argmax disagreed between the fast and scalar paths.
+pub fn record(max_abs: f32, rel: f32, flipped: bool) {
+    SAMPLES.fetch_add(1, Ordering::Relaxed);
+    if flipped {
+        FLIPS.fetch_add(1, Ordering::Relaxed);
+    }
+    store_max(&MAX_ABS_BITS, max_abs);
+    store_max(&MAX_REL_BITS, rel);
+    LAST_ABS_BITS.store(max_abs.max(0.0).to_bits(), Ordering::Relaxed);
+    LAST_REL_BITS.store(rel.max(0.0).to_bits(), Ordering::Relaxed);
+}
+
+/// Zero all counters (tests and bench setup).
+pub fn reset() {
+    SAMPLES.store(0, Ordering::Relaxed);
+    FLIPS.store(0, Ordering::Relaxed);
+    MAX_ABS_BITS.store(0, Ordering::Relaxed);
+    MAX_REL_BITS.store(0, Ordering::Relaxed);
+    LAST_ABS_BITS.store(0, Ordering::Relaxed);
+    LAST_REL_BITS.store(0, Ordering::Relaxed);
+}
+
+/// Point-in-time copy of the sentinel counters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftSnapshot {
+    /// Rows compared so far.
+    pub samples: u64,
+    /// Comparisons whose greedy argmax disagreed with the scalar path.
+    pub argmax_flips: u64,
+    /// Worst max-abs logit difference seen.
+    pub max_abs_diff: f32,
+    /// Worst relative error seen.
+    pub max_rel_err: f32,
+    /// Most recent comparison's max-abs difference.
+    pub last_abs_diff: f32,
+    /// Most recent comparison's relative error.
+    pub last_rel_err: f32,
+}
+
+pub fn snapshot() -> DriftSnapshot {
+    DriftSnapshot {
+        samples: SAMPLES.load(Ordering::Relaxed),
+        argmax_flips: FLIPS.load(Ordering::Relaxed),
+        max_abs_diff: f32::from_bits(MAX_ABS_BITS.load(Ordering::Relaxed)),
+        max_rel_err: f32::from_bits(MAX_REL_BITS.load(Ordering::Relaxed)),
+        last_abs_diff: f32::from_bits(LAST_ABS_BITS.load(Ordering::Relaxed)),
+        last_rel_err: f32::from_bits(LAST_REL_BITS.load(Ordering::Relaxed)),
+    }
+}
+
+impl DriftSnapshot {
+    /// The `/v1/stats` drift block.
+    pub fn to_json(&self, sample_rate: usize) -> Json {
+        Json::obj(vec![
+            ("sample_rate", Json::Num(sample_rate as f64)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("argmax_flips", Json::Num(self.argmax_flips as f64)),
+            ("max_abs_diff", Json::Num(self.max_abs_diff as f64)),
+            ("max_rel_err", Json::Num(self.max_rel_err as f64)),
+            ("last_abs_diff", Json::Num(self.last_abs_diff as f64)),
+            ("last_rel_err", Json::Num(self.last_rel_err as f64)),
+        ])
+    }
+}
+
+/// Compare a fast-path logit row against its scalar recomputation and fold
+/// the result into the global counters. Returns the comparison so callers
+/// (tests) can assert on it directly.
+pub fn observe_rows(fast: &[f32], reference: &[f32]) -> (f32, f32, bool) {
+    debug_assert_eq!(fast.len(), reference.len());
+    let mut max_abs = 0.0f32;
+    let mut ref_peak = 0.0f32;
+    for (&f, &r) in fast.iter().zip(reference.iter()) {
+        max_abs = max_abs.max((f - r).abs());
+        ref_peak = ref_peak.max(r.abs());
+    }
+    let rel = if ref_peak > 0.0 { max_abs / ref_peak } else { 0.0 };
+    let flipped = argmax_of(fast) != argmax_of(reference);
+    record(max_abs, rel, flipped);
+    (max_abs, rel, flipped)
+}
+
+fn argmax_of(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Global counters: one test owns them end to end so concurrent unit
+    // tests cannot interleave (no other unit test records drift samples).
+    #[test]
+    fn drift_counters_accumulate_and_snapshot() {
+        reset();
+        let base = snapshot();
+        assert_eq!(base.samples, 0);
+        assert_eq!(base.argmax_flips, 0);
+        assert_eq!(base.max_abs_diff, 0.0);
+
+        // Identical rows: a sample with zero diff and no flip.
+        let (abs, rel, flip) = observe_rows(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert_eq!((abs, rel, flip), (0.0, 0.0, false));
+
+        // Small perturbation that preserves the argmax.
+        let (abs, rel, flip) = observe_rows(&[1.0, 2.0, 3.0 + 1e-3], &[1.0, 2.0, 3.0]);
+        assert!(abs > 0.0 && rel > 0.0 && !flip);
+
+        // Perturbation large enough to flip the argmax.
+        let (_, _, flip) = observe_rows(&[5.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+        assert!(flip);
+
+        let s = snapshot();
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.argmax_flips, 1);
+        assert!((s.max_abs_diff - 4.0).abs() < 1e-6);
+        assert!(s.max_rel_err >= s.last_rel_err);
+        // Last-sample trackers reflect the most recent comparison.
+        assert!((s.last_abs_diff - 4.0).abs() < 1e-6);
+
+        let json = s.to_json(16).to_string_compact();
+        assert!(json.contains("\"sample_rate\":16"));
+        assert!(json.contains("\"samples\":3"));
+        assert!(json.contains("\"argmax_flips\":1"));
+        reset();
+        assert_eq!(snapshot().samples, 0);
+    }
+}

@@ -208,6 +208,39 @@ mod tests {
     }
 
     #[test]
+    fn quantiles_on_empty_and_single_bucket_histograms() {
+        // Empty: every statistic is 0, not NaN, and the JSON summary
+        // renders zeros.
+        let empty = AtomicHistogram::new(&REQUEST_BUCKETS).snapshot();
+        assert_eq!(empty.count, 0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(empty.quantile_secs(q), 0.0, "q={q}");
+        }
+        assert_eq!(empty.mean_secs(), 0.0);
+        let j = empty.to_json();
+        assert_eq!(j.get("count").and_then(Json::as_usize), Some(0));
+        assert_eq!(j.get("p99_ms").and_then(Json::as_f64), Some(0.0));
+
+        // Single populated bucket: every quantile — including q=0, whose
+        // target count is clamped to the first observation — reports that
+        // bucket's upper bound.
+        let h = AtomicHistogram::new(&REQUEST_BUCKETS);
+        for _ in 0..10 {
+            h.record_secs(0.004); // ≤ 0.005
+        }
+        let snap = h.snapshot();
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(snap.quantile_secs(q), 0.005, "q={q}");
+        }
+
+        // All mass in the +Inf overflow bucket: quantiles cap at the last
+        // finite bound instead of inventing an unbounded latency.
+        let inf = AtomicHistogram::new(&STEP_BUCKETS);
+        inf.record_secs(123.0);
+        assert_eq!(inf.snapshot().quantile_secs(0.5), 1.0);
+    }
+
+    #[test]
     fn quantiles_and_mean() {
         let h = AtomicHistogram::new(&REQUEST_BUCKETS);
         assert_eq!(h.snapshot().quantile_secs(0.5), 0.0);

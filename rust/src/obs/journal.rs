@@ -1,0 +1,335 @@
+//! Lock-free flight-recorder journal for sequence lifecycle events.
+//!
+//! A fixed ring of atomic slots records every scheduling transition a
+//! sequence goes through on its way through the engine — enqueue, slot
+//! admission, prefix-cache hit, page claim, decode step, preemption,
+//! resume, eviction, completion — plus (when the per-phase profiler is
+//! also on) the decode-phase scopes, so one buffer holds the full
+//! causality picture the trace exporter ([`crate::obs::trace`]) renders.
+//!
+//! Same discipline as [`crate::obs::profiler`]: a process-global static,
+//! **off by default**, and when off every emission site pays exactly one
+//! relaxed atomic load. When on, recording is wait-free — writers claim a
+//! slot with one `fetch_add`, fill the fields, then publish with a
+//! release-store of the slot's sequence stamp; no locks anywhere, so the
+//! decode hot loop never blocks on an observer. Readers ([`snapshot`])
+//! validate each slot's stamp before and after copying it and drop slots a
+//! concurrent writer was overwriting, so a torn read can never surface.
+//!
+//! Timestamps are microseconds of monotonic time since the journal's
+//! process-wide epoch (first use), which keeps events from every thread on
+//! one comparable clock — exactly what the Chrome-trace `ts` field wants.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Ring capacity. Power of two so the claim index wraps with a mask; 8192
+/// slots hold several hundred decode steps of history even with per-phase
+/// scopes flowing in.
+pub const JOURNAL_SLOTS: usize = 8192;
+
+/// One sequence lifecycle transition (or engine-side scope) kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request accepted into a queue (engine accept or decoder submit).
+    Enqueue,
+    /// Sequence admitted into a KV slot; prefill starts. `aux` = prompt
+    /// tokens actually fed (prefix hits shrink it).
+    Admit,
+    /// Prefix-cache hit at admission. `aux` = tokens skipped.
+    PrefixHit,
+    /// One pool page claimed. `aux` = pages the slot now maps.
+    PageClaim,
+    /// One fused decode step over all live rows. `aux` = batch size.
+    Step,
+    /// Sequence preempted back to the queue (out of pages). `aux` =
+    /// tokens already chosen (replayed on resume).
+    Preempt,
+    /// Preempted sequence re-admitted; replay starts. `aux` = tokens to
+    /// replay.
+    Resume,
+    /// Sequence evicted before completion (cancel / disconnect).
+    Evict,
+    /// Sequence retired normally. `aux` = generated tokens.
+    Complete,
+    /// One profiler phase scope (journal + profiler both on). `aux` = the
+    /// [`crate::obs::profiler::Phase`] index; `id` is unused.
+    PhaseScope,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::Admit => "admit",
+            EventKind::PrefixHit => "prefix_hit",
+            EventKind::PageClaim => "page_claim",
+            EventKind::Step => "step",
+            EventKind::Preempt => "preempt",
+            EventKind::Resume => "resume",
+            EventKind::Evict => "evict",
+            EventKind::Complete => "complete",
+            EventKind::PhaseScope => "phase",
+        }
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            EventKind::Enqueue => 0,
+            EventKind::Admit => 1,
+            EventKind::PrefixHit => 2,
+            EventKind::PageClaim => 3,
+            EventKind::Step => 4,
+            EventKind::Preempt => 5,
+            EventKind::Resume => 6,
+            EventKind::Evict => 7,
+            EventKind::Complete => 8,
+            EventKind::PhaseScope => 9,
+        }
+    }
+
+    fn from_code(code: u64) -> Option<EventKind> {
+        Some(match code {
+            0 => EventKind::Enqueue,
+            1 => EventKind::Admit,
+            2 => EventKind::PrefixHit,
+            3 => EventKind::PageClaim,
+            4 => EventKind::Step,
+            5 => EventKind::Preempt,
+            6 => EventKind::Resume,
+            7 => EventKind::Evict,
+            8 => EventKind::Complete,
+            9 => EventKind::PhaseScope,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded journal entry, as [`snapshot`] returns it (oldest first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    /// Global emission order (monotonic across the whole process).
+    pub seq: u64,
+    pub kind: EventKind,
+    /// Request span id (0 for engine-lane events like `PhaseScope`).
+    pub id: usize,
+    /// Microseconds since the journal epoch at which the event *started*.
+    pub t_us: u64,
+    /// Scope duration in microseconds (0 for instant events).
+    pub dur_us: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub aux: u64,
+}
+
+/// One ring slot: `stamp == 0` means never written; otherwise it is the
+/// claim sequence + 1, published last with release ordering.
+struct Slot {
+    stamp: AtomicU64,
+    kind_id: AtomicU64,
+    t_us: AtomicU64,
+    dur_us: AtomicU64,
+    aux: AtomicU64,
+}
+
+// Interior mutability is the point: this const exists only to const-init
+// the static slot array.
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_SLOT: Slot = Slot {
+    stamp: AtomicU64::new(0),
+    kind_id: AtomicU64::new(0),
+    t_us: AtomicU64::new(0),
+    dur_us: AtomicU64::new(0),
+    aux: AtomicU64::new(0),
+};
+
+static RING: [Slot; JOURNAL_SLOTS] = [EMPTY_SLOT; JOURNAL_SLOTS];
+static NEXT: AtomicUsize = AtomicUsize::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Is the journal recording? One relaxed load — the cost every emission
+/// site pays when the flight recorder is off.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the journal on or off at runtime (serve startup, benches, tests).
+pub fn set_enabled(on: bool) {
+    if on {
+        // Pin the epoch before any event can be stamped against it.
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Microseconds of monotonic time since the journal epoch.
+#[inline]
+pub fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Drop every recorded event (the enabled switch is left as-is).
+pub fn reset() {
+    NEXT.store(0, Ordering::SeqCst);
+    for slot in RING.iter() {
+        slot.stamp.store(0, Ordering::SeqCst);
+    }
+}
+
+/// Record an instant event at the current time. No-op when disabled.
+#[inline]
+pub fn record(kind: EventKind, id: usize, aux: u64) {
+    if enabled() {
+        publish(kind, id, now_us(), 0, aux);
+    }
+}
+
+/// Record a scope that started at `t0_us` ([`now_us`] captured earlier)
+/// and ends now. No-op when disabled.
+#[inline]
+pub fn record_span(kind: EventKind, id: usize, t0_us: u64, aux: u64) {
+    if enabled() {
+        let now = now_us();
+        publish(kind, id, t0_us, now.saturating_sub(t0_us), aux);
+    }
+}
+
+/// Record a scope with an explicit duration ending now (used by the
+/// profiler bridge, which already measured the elapsed time).
+#[inline]
+pub fn record_dur(kind: EventKind, id: usize, dur_us: u64, aux: u64) {
+    if enabled() {
+        let now = now_us();
+        publish(kind, id, now.saturating_sub(dur_us), dur_us, aux);
+    }
+}
+
+fn publish(kind: EventKind, id: usize, t_us: u64, dur_us: u64, aux: u64) {
+    let seq = NEXT.fetch_add(1, Ordering::Relaxed);
+    let slot = &RING[seq % JOURNAL_SLOTS];
+    // Invalidate the slot first so a concurrent reader cannot pair the old
+    // stamp with half-new fields, then publish the new stamp last.
+    slot.stamp.store(0, Ordering::Release);
+    slot.kind_id.store(kind.code() | ((id as u64) << 8), Ordering::Relaxed);
+    slot.t_us.store(t_us, Ordering::Relaxed);
+    slot.dur_us.store(dur_us, Ordering::Relaxed);
+    slot.aux.store(aux, Ordering::Relaxed);
+    slot.stamp.store(seq as u64 + 1, Ordering::Release);
+}
+
+/// Copy out up to `last` most-recent events, oldest first. Slots a
+/// concurrent writer is mid-overwrite are skipped (stamp re-validation),
+/// so the result is always internally consistent.
+pub fn snapshot(last: usize) -> Vec<Event> {
+    let mut events: Vec<Event> = Vec::with_capacity(JOURNAL_SLOTS.min(last));
+    for slot in RING.iter() {
+        let stamp = slot.stamp.load(Ordering::Acquire);
+        if stamp == 0 {
+            continue;
+        }
+        let kind_id = slot.kind_id.load(Ordering::Relaxed);
+        let t_us = slot.t_us.load(Ordering::Relaxed);
+        let dur_us = slot.dur_us.load(Ordering::Relaxed);
+        let aux = slot.aux.load(Ordering::Relaxed);
+        if slot.stamp.load(Ordering::Acquire) != stamp {
+            continue; // torn: a writer replaced this slot mid-copy
+        }
+        let Some(kind) = EventKind::from_code(kind_id & 0xFF) else {
+            continue;
+        };
+        events.push(Event {
+            seq: stamp - 1,
+            kind,
+            id: (kind_id >> 8) as usize,
+            t_us,
+            dur_us,
+            aux,
+        });
+    }
+    events.sort_by_key(|e| e.seq);
+    if events.len() > last {
+        let cut = events.len() - last;
+        events.drain(..cut);
+    }
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The journal is process-global and other tests in this binary may
+    // record events concurrently while it is enabled, so every assertion
+    // filters on ids unique to this test instead of exact ring contents.
+    #[test]
+    fn journal_records_publishes_and_wraps() {
+        const ID_A: usize = 990_007;
+        const ID_OFF: usize = 990_001;
+
+        set_enabled(false);
+        record(EventKind::Enqueue, ID_OFF, 0);
+        assert!(
+            !snapshot(usize::MAX).iter().any(|e| e.id == ID_OFF),
+            "disabled journal must drop events"
+        );
+
+        set_enabled(true);
+        record(EventKind::Enqueue, ID_A, 0);
+        record(EventKind::Admit, ID_A, 5);
+        let t0 = now_us();
+        record_span(EventKind::Step, ID_A, t0, 3);
+        let mine: Vec<Event> = snapshot(usize::MAX)
+            .into_iter()
+            .filter(|e| e.id == ID_A)
+            .collect();
+        set_enabled(false);
+        assert_eq!(mine.len(), 3);
+        assert_eq!(mine[0].kind, EventKind::Enqueue);
+        assert_eq!(mine[1].kind, EventKind::Admit);
+        assert_eq!(mine[1].aux, 5);
+        assert_eq!(mine[2].kind, EventKind::Step);
+        assert_eq!(mine[2].aux, 3);
+        // Emission order is strictly increasing and times are monotone.
+        assert!(mine[0].seq < mine[1].seq && mine[1].seq < mine[2].seq);
+        assert!(mine[0].t_us <= mine[1].t_us && mine[1].t_us <= mine[2].t_us);
+
+        // Wraparound: overfill the ring, then confirm the snapshot is
+        // bounded by the ring size and `last` trims from the old end.
+        set_enabled(true);
+        for i in 0..JOURNAL_SLOTS + 100 {
+            record(EventKind::Step, ID_A, i as u64);
+        }
+        let all = snapshot(usize::MAX);
+        set_enabled(false);
+        assert!(all.len() <= JOURNAL_SLOTS);
+        let newest_mine = all.iter().filter(|e| e.id == ID_A).count();
+        assert!(
+            newest_mine >= JOURNAL_SLOTS - 200,
+            "ring should be dominated by the overfill burst (got {newest_mine})"
+        );
+        let last = snapshot(8);
+        assert!(last.len() <= 8);
+    }
+
+    #[test]
+    fn kind_codes_round_trip() {
+        for kind in [
+            EventKind::Enqueue,
+            EventKind::Admit,
+            EventKind::PrefixHit,
+            EventKind::PageClaim,
+            EventKind::Step,
+            EventKind::Preempt,
+            EventKind::Resume,
+            EventKind::Evict,
+            EventKind::Complete,
+            EventKind::PhaseScope,
+        ] {
+            assert_eq!(EventKind::from_code(kind.code()), Some(kind));
+            assert!(!kind.name().is_empty());
+        }
+        assert_eq!(EventKind::from_code(200), None);
+    }
+}

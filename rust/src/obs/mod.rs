@@ -1,5 +1,7 @@
 //! Zero-dependency observability: lock-free histograms, a global per-phase
-//! decode profiler, request spans, and quantization-quality telemetry.
+//! decode profiler, request spans, a flight-recorder event journal with
+//! Chrome-trace export, a runtime drift sentinel, and quantization-quality
+//! telemetry.
 //!
 //! Everything here is std-only and allocation-free on the hot paths:
 //!
@@ -13,6 +15,18 @@
 //!   linear, KV read/write, MLP, token pick, …). Disabled by default; the
 //!   hot path pays a single relaxed atomic load per would-be timer. Enable
 //!   with `SINQ_PROFILE=1` (or [`profiler::set_enabled`]).
+//! * [`journal`] — the flight recorder: a lock-free ring of sequence
+//!   lifecycle events (enqueue, admit, prefix hit, page claim, step,
+//!   preempt, resume, evict, complete) stamped with monotonic
+//!   microseconds and the request span id, fed by the batch decoder and
+//!   the serve engine.
+//! * [`trace`] — renders a journal snapshot as Chrome-trace/Perfetto JSON
+//!   (`GET /debug/trace`) and per-sequence timeline summaries
+//!   (`sinq analyze trace`).
+//! * [`drift`] — the runtime numerical drift sentinel: counters for
+//!   sampled fast-path vs scalar-path logit comparisons
+//!   (`EngineConfig::drift_sample`), surfaced via `/metrics` and
+//!   `/v1/stats`.
 //! * [`span::RequestSpan`] — per-request timing threaded serve → engine →
 //!   `BatchDecoder`: queue-wait, admission, first token, completion; plus
 //!   the `usage` payload (`prompt_tokens`, `completion_tokens`, `ttft_ms`,
@@ -22,12 +36,18 @@
 //!   quant MSE/NMSE, surfaced by `sinq analyze profile`, the serve startup
 //!   log, and `GET /v1/stats`.
 
+pub mod drift;
 pub mod hist;
+pub mod journal;
 pub mod profiler;
 pub mod quant;
 pub mod span;
+pub mod trace;
 
+pub use drift::DriftSnapshot;
 pub use hist::{AtomicHistogram, HistSnapshot};
+pub use journal::{Event, EventKind};
 pub use profiler::{Phase, ProfileSnapshot};
 pub use quant::{LayerQuantStats, QuantReport};
 pub use span::{RequestSpan, Usage};
+pub use trace::SeqSummary;

@@ -139,12 +139,20 @@ pub fn start() -> Option<Instant> {
 }
 
 /// Close a phase timer opened by [`start`]; no-op when it returned `None`.
+/// When the flight-recorder journal is also on, the scope is mirrored
+/// there as a [`crate::obs::journal::EventKind::PhaseScope`] event so the
+/// Chrome-trace export can nest phase timing under decode steps.
 #[inline]
 pub fn stop(phase: Phase, t0: Option<Instant>) {
     if let Some(t0) = t0 {
         let i = phase.index();
-        NANOS[i].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let nanos = t0.elapsed().as_nanos() as u64;
+        NANOS[i].fetch_add(nanos, Ordering::Relaxed);
         CALLS[i].fetch_add(1, Ordering::Relaxed);
+        if crate::obs::journal::enabled() {
+            use crate::obs::journal::{record_dur, EventKind};
+            record_dur(EventKind::PhaseScope, 0, nanos / 1_000, i as u64);
+        }
     }
 }
 

@@ -1100,6 +1100,76 @@ pub fn quant_profile_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
     Ok(t)
 }
 
+/// `sinq analyze trace` — drive a miniature serving scenario through the
+/// batch decoder with the flight-recorder journal on, then fold the event
+/// stream into per-request timelines: queue wait, prefix reuse, preemption
+/// count and stall time, and total latency. The page pool is sized so two
+/// concurrent requests cannot share it, guaranteeing the journal captures a
+/// preempt → resume cycle and not just the happy path.
+pub fn trace_table(ctx: &Ctx, model: &str) -> anyhow::Result<Table> {
+    use crate::backend::{BatchDecoder, EngineConfig};
+    use crate::obs::{journal, trace};
+    anyhow::ensure!(
+        ctx.backend == BackendKind::Native,
+        "the flight-recorder study steps the native batch decoder; rerun with --backend native"
+    );
+    let mw = ctx.load_model(model)?;
+    let be = NativeBackend::from_weights(&mw);
+    // Two 7-page requests through an 8-page pool: the pool runs dry
+    // mid-decode and the younger sequence is preempted; the third request
+    // queues behind the two slots for a visible queue-wait.
+    let cfg = EngineConfig::new()
+        .with_max_batch(2)
+        .with_max_context(32)
+        .with_page_size(4)
+        .with_pages(Some(8));
+    // Id base far from the serving layer's request counter so the rows are
+    // attributable even if the process-global journal has other traffic.
+    const ID0: usize = 610_000;
+    let reqs: [(&[u8], usize); 3] =
+        [(b"first long request" as &[u8], 9), (b"second long one!!", 9), (b"third, queued", 5)];
+    let was_on = journal::enabled();
+    journal::set_enabled(true);
+    let mut dec = BatchDecoder::with_config(&be, &cfg)?;
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        dec.submit(ID0 + i, p, *n)?;
+    }
+    let run = dec.run();
+    journal::set_enabled(was_on);
+    run?;
+
+    let events: Vec<crate::obs::Event> = journal::snapshot(journal::JOURNAL_SLOTS)
+        .into_iter()
+        .filter(|e| (ID0..ID0 + reqs.len()).contains(&e.id))
+        .collect();
+    let mut t = Table::new(
+        "Flight recorder — per-request timelines from the event journal",
+        &[
+            "Request",
+            "Queue µs",
+            "Prefix reuse",
+            "Preempts",
+            "Preempted µs",
+            "Tokens",
+            "Total µs",
+            "Outcome",
+        ],
+    );
+    for s in trace::summarize(&events) {
+        t.row(vec![
+            (s.id - ID0).to_string(),
+            s.queue_us.to_string(),
+            s.prefix_reused.to_string(),
+            s.preempts.to_string(),
+            s.preempted_us.to_string(),
+            s.tokens.to_string(),
+            s.total_us.map(|u| u.to_string()).unwrap_or_else(|| "-".into()),
+            s.outcome.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::backend::batch::{ensure_fits, BatchDecoder, CancelOutcome};
 use crate::backend::{EngineConfig, NativeBackend, SampleCfg};
+use crate::obs::journal::{self, EventKind};
 use crate::obs::span::{request_log_line, RequestSpan, Usage};
 use crate::serve::metrics::ServeMetrics;
 
@@ -56,9 +57,18 @@ pub struct StreamHandle {
 }
 
 /// Why [`EngineClient::submit`] refused a request — mapped by the HTTP
-/// layer onto status codes.
+/// layer onto status codes. Carries the request span id minted for the
+/// attempt so the error envelope, the `X-Request-Id` header, logs, and the
+/// flight-recorder journal all join on one key even for refused requests.
 #[derive(Debug)]
-pub enum SubmitError {
+pub struct SubmitError {
+    /// Span id minted for this submission attempt.
+    pub id: usize,
+    pub kind: SubmitErrorKind,
+}
+
+#[derive(Debug)]
+pub enum SubmitErrorKind {
     /// `400`: the request can never run (empty prompt / beyond KV capacity).
     Invalid(String),
     /// `503` + `Retry-After`: the backlog is at the `--max-queue` bound.
@@ -69,13 +79,13 @@ pub enum SubmitError {
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::Invalid(msg) => write!(f, "{msg}"),
-            SubmitError::Busy { queued, max_queue } => write!(
+        match &self.kind {
+            SubmitErrorKind::Invalid(msg) => write!(f, "{msg}"),
+            SubmitErrorKind::Busy { queued, max_queue } => write!(
                 f,
                 "generation queue full ({queued} queued, --max-queue {max_queue}); retry later"
             ),
-            SubmitError::Unavailable(msg) => write!(f, "{msg}"),
+            SubmitErrorKind::Unavailable(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -134,12 +144,15 @@ impl EngineClient {
         max_new: usize,
         sample: Option<SampleCfg>,
     ) -> Result<StreamHandle, SubmitError> {
+        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         if self.shared.shutting_down.load(Ordering::SeqCst)
             || self.shared.dead.load(Ordering::SeqCst)
         {
-            return Err(SubmitError::Unavailable("server is shutting down".into()));
+            return Err(SubmitError {
+                id,
+                kind: SubmitErrorKind::Unavailable("server is shutting down".into()),
+            });
         }
-        let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         ensure_fits(
             self.shared.capacity,
             self.shared.page_size,
@@ -148,7 +161,7 @@ impl EngineClient {
             prompt.len(),
             max_new,
         )
-        .map_err(|e| SubmitError::Invalid(e.to_string()))?;
+        .map_err(|e| SubmitError { id, kind: SubmitErrorKind::Invalid(e.to_string()) })?;
         let metrics = &self.shared.metrics;
         if max_new == 0 {
             let (tx, rx) = channel();
@@ -156,6 +169,8 @@ impl EngineClient {
             if self.shared.log_json {
                 println!("{}", request_log_line(id, "length", &usage));
             }
+            journal::record(EventKind::Enqueue, id, 0);
+            journal::record(EventKind::Complete, id, 0);
             let _ = tx.send(StreamEvent::Done { finish_reason: "length", usage });
             metrics.requests_total.fetch_add(1, Ordering::Relaxed);
             metrics.completed_total.fetch_add(1, Ordering::Relaxed);
@@ -167,14 +182,24 @@ impl EngineClient {
         if queued >= self.shared.max_queue {
             metrics.queued.fetch_sub(1, Ordering::SeqCst);
             metrics.rejected_total.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::Busy { queued, max_queue: self.shared.max_queue });
+            return Err(SubmitError {
+                id,
+                kind: SubmitErrorKind::Busy { queued, max_queue: self.shared.max_queue },
+            });
         }
         let (tx, rx) = channel();
         let sub = Submission { id, prompt, max_new, sample, tx, enqueued: Instant::now() };
         if self.tx.send(EngineMsg::Submit(sub)).is_err() {
             metrics.queued.fetch_sub(1, Ordering::SeqCst);
-            return Err(SubmitError::Unavailable("generation engine stopped".into()));
+            return Err(SubmitError {
+                id,
+                kind: SubmitErrorKind::Unavailable("generation engine stopped".into()),
+            });
         }
+        // The accept-side enqueue stamp: the decoder stamps its own when
+        // the engine thread hands the request over, and the trace exporter
+        // keeps the earliest — so queue wait includes the channel hop.
+        journal::record(EventKind::Enqueue, id, 0);
         metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         Ok(StreamHandle { id, rx })
     }
@@ -506,7 +531,7 @@ mod tests {
             GenEngine::start(be, engine_cfg(1, 8), 4, Arc::new(ServeMetrics::new())).unwrap();
         let client = eng.client();
         match client.submit(vec![b'x'; 32], 4, None) {
-            Err(SubmitError::Invalid(msg)) => {
+            Err(SubmitError { kind: SubmitErrorKind::Invalid(msg), .. }) => {
                 assert!(msg.contains("KV"), "unclear capacity error: {msg}")
             }
             other => panic!("expected Invalid, got {other:?}"),
@@ -526,7 +551,7 @@ mod tests {
         let metrics = Arc::new(ServeMetrics::new());
         let eng = GenEngine::start(be, engine_cfg(1, 16), 0, metrics.clone()).unwrap();
         match eng.client().submit(b"hi".to_vec(), 2, None) {
-            Err(SubmitError::Busy { max_queue: 0, .. }) => {}
+            Err(SubmitError { kind: SubmitErrorKind::Busy { max_queue: 0, .. }, .. }) => {}
             other => panic!("expected Busy, got {other:?}"),
         }
         assert_eq!(metrics.rejected_total.load(Ordering::Relaxed), 1);
@@ -583,7 +608,7 @@ mod tests {
         }
         assert!(matches!(
             client.submit(b"late".to_vec(), 1, None),
-            Err(SubmitError::Unavailable(_))
+            Err(SubmitError { kind: SubmitErrorKind::Unavailable(_), .. })
         ));
         assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 3);
     }

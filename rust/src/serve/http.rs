@@ -195,6 +195,23 @@ pub fn error_body(code: u16, msg: &str) -> String {
     .to_string_compact()
 }
 
+/// [`error_body`] plus a `request_id` field, for errors that occur after a
+/// request id has been minted (engine submission refusals): clients can
+/// correlate the envelope with the `X-Request-Id` header and the
+/// `--log-json` line carrying the same id.
+pub fn error_body_with_id(code: u16, msg: &str, request_id: usize) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("message", Json::Str(msg.to_string())),
+            ("request_id", Json::Num(request_id as f64)),
+            ("type", Json::Str(error_kind(code).to_string())),
+        ]),
+    )])
+    .to_string_compact()
+}
+
 /// Write the unified error envelope ([`error_body`]) with `code`.
 pub fn write_error(
     w: &mut impl Write,
@@ -216,10 +233,23 @@ pub fn write_error(
 /// events follow via [`write_sse_event`] until the server closes the
 /// connection after the terminal event.
 pub fn write_sse_header(w: &mut impl Write) -> std::io::Result<()> {
+    write_sse_header_with(w, &[])
+}
+
+/// [`write_sse_header`] with extra response headers (e.g. `X-Request-Id`),
+/// written before the blank line that opens the event stream.
+pub fn write_sse_header_with(
+    w: &mut impl Write,
+    extra_headers: &[(&str, &str)],
+) -> std::io::Result<()> {
     w.write_all(
         b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\n\
-          Connection: close\r\n\r\n",
+          Connection: close\r\n",
     )?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
     w.flush()
 }
 
@@ -365,6 +395,34 @@ mod tests {
         let mut ok = BufReader::new(&b"GET /healthz HTTP/1.1\r\n\r\n"[..]);
         assert!(poll_request_start(&mut ok).unwrap());
         assert_eq!(read_request(&mut ok).unwrap().path, "/healthz");
+    }
+
+    #[test]
+    fn error_body_with_id_carries_request_id() {
+        assert_eq!(
+            error_body_with_id(503, "busy", 7),
+            "{\"error\":{\"message\":\"busy\",\"request_id\":7,\"type\":\"overloaded_error\"}}"
+        );
+        // The id-less envelope is unchanged by the new variant.
+        assert_eq!(
+            error_body(503, "busy"),
+            "{\"error\":{\"message\":\"busy\",\"type\":\"overloaded_error\"}}"
+        );
+    }
+
+    #[test]
+    fn sse_header_with_extra_headers() {
+        let mut out = Vec::new();
+        write_sse_header_with(&mut out, &[("X-Request-Id", "42")]).unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("Content-Type: text/event-stream\r\n"), "{s}");
+        assert!(s.contains("X-Request-Id: 42\r\n"), "{s}");
+        assert!(s.ends_with("\r\n\r\n"), "{s}");
+        // The plain variant stays byte-compatible with the old header.
+        let mut plain = Vec::new();
+        write_sse_header(&mut plain).unwrap();
+        assert!(!String::from_utf8(plain).unwrap().contains("X-Request-Id"));
     }
 
     #[test]

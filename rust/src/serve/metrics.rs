@@ -278,6 +278,17 @@ impl ServeMetrics {
         );
         let _ = writeln!(s, "# TYPE sinq_serve_prefix_hit_rate gauge");
         let _ = writeln!(s, "sinq_serve_prefix_hit_rate {:.3}", self.prefix_hit_rate());
+        // Drift-sentinel families (all zero while `--drift-sample` is off):
+        // sampled fast-vs-scalar logit comparisons from the decode loop.
+        let drift = crate::obs::drift::snapshot();
+        let _ = writeln!(s, "# TYPE sinq_drift_samples_total counter");
+        let _ = writeln!(s, "sinq_drift_samples_total {}", drift.samples);
+        let _ = writeln!(s, "# TYPE sinq_drift_argmax_flips_total counter");
+        let _ = writeln!(s, "sinq_drift_argmax_flips_total {}", drift.argmax_flips);
+        let _ = writeln!(s, "# TYPE sinq_drift_max_abs_diff gauge");
+        let _ = writeln!(s, "sinq_drift_max_abs_diff {:e}", drift.max_abs_diff);
+        let _ = writeln!(s, "# TYPE sinq_drift_max_rel_err gauge");
+        let _ = writeln!(s, "sinq_drift_max_rel_err {:e}", drift.max_rel_err);
         self.ttft.render_prometheus("sinq_serve_ttft_seconds", &mut s);
         self.queue_wait.render_prometheus("sinq_serve_queue_wait_seconds", &mut s);
         self.step_latency.render_prometheus("sinq_serve_step_latency_seconds", &mut s);
@@ -368,6 +379,43 @@ mod tests {
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         let text = m.render();
         assert!(text.contains("sinq_serve_prefix_hit_rate 0.750"), "{text}");
+    }
+
+    #[test]
+    fn drift_families_always_render() {
+        // Values are global (other tests may be recording concurrently), so
+        // assert the families exist rather than their exact readings.
+        let text = ServeMetrics::new().render();
+        assert!(text.contains("# TYPE sinq_drift_samples_total counter"), "{text}");
+        assert!(text.contains("\nsinq_drift_samples_total "), "{text}");
+        assert!(text.contains("# TYPE sinq_drift_argmax_flips_total counter"), "{text}");
+        assert!(text.contains("# TYPE sinq_drift_max_abs_diff gauge"), "{text}");
+        assert!(text.contains("# TYPE sinq_drift_max_rel_err gauge"), "{text}");
+    }
+
+    #[test]
+    fn rate_ring_wraps_past_capacity_without_double_counting() {
+        let ring = RateRing::new(Instant::now());
+        for _ in 0..RATE_RING + 100 {
+            ring.record(1);
+        }
+        // The write cursor keeps counting, but the ring holds exactly
+        // RATE_RING live entries: wrapped writes overwrite the oldest slot
+        // instead of double-counting.
+        assert_eq!(ring.next.load(Ordering::Relaxed), RATE_RING + 100);
+        let mut tokens = 0u64;
+        for slot in &ring.slots {
+            let packed = slot.load(Ordering::Relaxed);
+            assert_ne!(packed, 0, "every slot is written after wraparound");
+            tokens += packed & 0xFFFF;
+        }
+        assert_eq!(tokens as usize, RATE_RING);
+        assert!(ring.rate() > 0.0);
+        // Oversized per-step token counts saturate the 16-bit field rather
+        // than bleeding into the timestamp bits.
+        let big = RateRing::new(Instant::now());
+        big.record(usize::MAX);
+        assert_eq!(big.slots[0].load(Ordering::Relaxed) & 0xFFFF, 0xFFFF);
     }
 
     #[test]

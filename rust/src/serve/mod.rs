@@ -27,7 +27,8 @@
 //! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
 //! | `GET /healthz` | — | liveness + engine identity/capacity + page-pool shape + model shape + build info + uptime |
 //! | `GET /metrics` | — | Prometheus text: live slots, queued requests, page-pool and prefix-cache gauges (`kv_pages_*`, `prefix_hit_rate`), tokens/sec (windowed + lifetime), TTFT/queue-wait/step-latency histograms |
-//! | `GET /v1/stats` | — | one JSON document: request/latency aggregates, throughput, page-pool + prefix-cache health, per-phase decode profile (`SINQ_PROFILE=1`), per-layer quantization-quality report |
+//! | `GET /v1/stats` | — | one JSON document: request/latency aggregates, throughput, page-pool + prefix-cache health, per-phase decode profile (`SINQ_PROFILE=1`), drift-sentinel summary (`--drift-sample`), per-layer quantization-quality report |
+//! | `GET /debug/trace?last=N` | — | the flight recorder's newest `N` events (default 512) rendered as Chrome-trace JSON — load it in Perfetto / `chrome://tracing` to see per-request queued/running/preempted lanes over the engine's step + phase timeline |
 //!
 //! Every generation response — the JSON body and the SSE `done` event —
 //! carries a `usage` object (prompt/completion token counts, queue-wait,
@@ -80,10 +81,11 @@ use crate::backend::{self, simd, BackendSpec, InferenceBackend, NativeBackend, S
 use crate::coordinator::server::{BatchServer, ScoreClient, ServerStats};
 use crate::eval::{log_prob, LogitsEngine};
 use crate::obs::span::Usage;
+use crate::obs::{drift, journal, trace};
 use crate::tensor::Matrix;
 use crate::util::json::Json;
 
-use engine::{EngineClient, GenEngine, StreamEvent, StreamHandle, SubmitError};
+use engine::{EngineClient, GenEngine, StreamEvent, StreamHandle, SubmitError, SubmitErrorKind};
 use metrics::ServeMetrics;
 
 /// Longest token sequence `/v1/score` accepts (the full forward is
@@ -95,6 +97,10 @@ pub const MAX_SCORE_TOKENS: usize = 4096;
 /// it anyway — bounds how long a single socket can monopolize a handler
 /// thread.
 pub const MAX_KEEPALIVE_REQUESTS: usize = 256;
+
+/// Flight-recorder events `GET /debug/trace` returns when the request does
+/// not pass `?last=N`.
+pub const DEFAULT_TRACE_EVENTS: usize = 512;
 
 /// Front-end configuration (the CLI flags of `sinq serve --listen`).
 #[derive(Debug, Clone)]
@@ -130,6 +136,11 @@ pub struct ServeOpts {
     pub keepalive_idle_ms: u64,
     /// `--log-json`: print one structured JSON line per completed request.
     pub log_json: bool,
+    /// `--drift-sample N`: every `N`th decode step recomputes one live
+    /// row's logits through the forced-scalar kernel path and feeds the
+    /// comparison into the drift sentinel (`/metrics`, `/v1/stats`). `0`
+    /// (the default) disables the sentinel.
+    pub drift_sample: usize,
 }
 
 impl Default for ServeOpts {
@@ -146,6 +157,7 @@ impl Default for ServeOpts {
             max_connections: 256,
             keepalive_idle_ms: 5_000,
             log_json: false,
+            drift_sample: 0,
         }
     }
 }
@@ -217,6 +229,9 @@ struct ConnState {
     slots: usize,
     capacity: usize,
     default_max_new: usize,
+    /// Drift-sentinel sampling rate the engine runs with (`0` = off), so
+    /// `/v1/stats` can report the rate next to the counters.
+    drift_sample: usize,
     /// Keep-alive idle timeout between requests on one connection.
     idle: Duration,
     /// Server shutdown flag (shared with the accept loop): once set,
@@ -252,6 +267,11 @@ impl Server {
         opts: &ServeOpts,
     ) -> anyhow::Result<Server> {
         let metrics = Arc::new(ServeMetrics::new());
+        // The flight recorder runs whenever the server does: its record
+        // path is a handful of relaxed atomics per lifecycle event, and
+        // `/debug/trace` is only useful if history already exists when an
+        // incident is noticed.
+        journal::set_enabled(true);
         // One engine configuration for the whole front-end: the backend's
         // spec-level defaults (KV precision, sampling) plus the serve
         // flags' concurrency/context/page geometry.
@@ -260,7 +280,8 @@ impl Server {
             .with_max_batch(opts.max_batch)
             .with_max_context(opts.max_context)
             .with_page_size(opts.page_size)
-            .with_pages(opts.kv_pages);
+            .with_pages(opts.kv_pages)
+            .with_drift_sample(opts.drift_sample);
         let slots = cfg.max_batch;
         let capacity = cfg.max_context;
         let gen_engine = GenEngine::start_with_logging(
@@ -293,6 +314,7 @@ impl Server {
             slots,
             capacity,
             default_max_new: opts.default_max_new,
+            drift_sample: opts.drift_sample,
             idle: Duration::from_millis(opts.keepalive_idle_ms.max(1)),
             stop: stop.clone(),
         });
@@ -428,9 +450,15 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
         let keep = req.wants_keep_alive()
             && served + 1 < MAX_KEEPALIVE_REQUESTS
             && !state.stop.load(Ordering::SeqCst);
+        // Split an optional query string off the path so parameterized GET
+        // routes (`/debug/trace?last=N`) match on the bare path.
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, Some(q)),
+            None => (req.path.as_str(), None),
+        };
         // Write failures (client hung up mid-stream) are not server errors;
         // they end the connection like any non-reusable response.
-        let reusable = match (req.method.as_str(), req.path.as_str()) {
+        let reusable = match (req.method.as_str(), path) {
             ("GET", "/healthz") => handle_health(&mut w, state, keep).map(|_| keep),
             ("GET", "/metrics") => http::write_response(
                 &mut w,
@@ -442,13 +470,14 @@ fn handle_connection(stream: TcpStream, state: &ConnState) {
             )
             .map(|_| keep),
             ("GET", "/v1/stats") => handle_stats(&mut w, state, keep).map(|_| keep),
+            ("GET", "/debug/trace") => handle_trace(&mut w, query, keep).map(|_| keep),
             ("POST", "/v1/generate") => handle_generate(&mut w, state, &req.body, keep),
             ("POST", "/v1/completions") => handle_completions(&mut w, state, &req.body, keep),
             ("POST", "/v1/score") => handle_score(&mut w, state, &req.body, keep).map(|_| keep),
             (
                 _,
-                "/healthz" | "/metrics" | "/v1/stats" | "/v1/generate" | "/v1/completions"
-                | "/v1/score",
+                "/healthz" | "/metrics" | "/v1/stats" | "/debug/trace" | "/v1/generate"
+                | "/v1/completions" | "/v1/score",
             ) => {
                 http::write_error(
                     &mut w,
@@ -582,8 +611,28 @@ fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::
         ("kv_pages", kv_pages),
         ("prefix_cache", prefix_cache),
         ("profile", crate::obs::profiler::snapshot().to_json()),
+        ("drift", drift::snapshot().to_json(state.drift_sample)),
         ("quant", quant),
     ]);
+    http::write_response(
+        w,
+        200,
+        "application/json",
+        &[],
+        body.to_string_compact().as_bytes(),
+        keep_alive,
+    )
+}
+
+/// `GET /debug/trace?last=N`: the flight recorder's newest `N` events
+/// (default [`DEFAULT_TRACE_EVENTS`]) rendered as Chrome-trace JSON —
+/// loadable directly in Perfetto or `chrome://tracing`.
+fn handle_trace(w: &mut TcpStream, query: Option<&str>, keep_alive: bool) -> std::io::Result<()> {
+    let last = query
+        .and_then(|q| q.split('&').find_map(|kv| kv.strip_prefix("last=")))
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_TRACE_EVENTS);
+    let body = trace::chrome_trace(&journal::snapshot(last));
     http::write_response(
         w,
         200,
@@ -707,24 +756,32 @@ fn handle_generate(
 
 /// Map a refused submission onto the wire: over-capacity prompts answer
 /// `400` with the decoder's own page-accounting text, saturation answers
-/// `503` + `Retry-After` — all in the unified error envelope.
+/// `503` + `Retry-After` — all in the unified error envelope, which (like
+/// the `X-Request-Id` header) carries the request id the engine minted
+/// before refusing, so rejected requests correlate with `--log-json` lines
+/// and flight-recorder events too.
 fn write_submit_error(
     w: &mut TcpStream,
     e: &SubmitError,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    match e {
-        SubmitError::Invalid(msg) => http::write_error(w, 400, msg, keep_alive),
-        SubmitError::Busy { .. } => http::write_response(
-            w,
-            503,
-            "application/json",
-            &[("Retry-After", "1")],
-            http::error_body(503, &e.to_string()).as_bytes(),
-            keep_alive,
-        ),
-        SubmitError::Unavailable(_) => http::write_error(w, 503, &e.to_string(), keep_alive),
+    let code: u16 = match &e.kind {
+        SubmitErrorKind::Invalid(_) => 400,
+        SubmitErrorKind::Busy { .. } | SubmitErrorKind::Unavailable(_) => 503,
+    };
+    let rid = e.id.to_string();
+    let mut headers: Vec<(&str, &str)> = vec![("X-Request-Id", &rid)];
+    if matches!(e.kind, SubmitErrorKind::Busy { .. }) {
+        headers.push(("Retry-After", "1"));
     }
+    http::write_response(
+        w,
+        code,
+        "application/json",
+        &headers,
+        http::error_body_with_id(code, &e.to_string(), e.id).as_bytes(),
+        keep_alive,
+    )
 }
 
 /// `POST /v1/completions`: the OpenAI completion shape over the same
@@ -822,9 +879,9 @@ fn stream_completions(
     state: &ConnState,
     handle: StreamHandle,
 ) -> std::io::Result<()> {
-    http::write_sse_header(w)?;
-    let created = unix_now();
     let id = handle.id;
+    http::write_sse_header_with(w, &[("X-Request-Id", &id.to_string())])?;
+    let created = unix_now();
     for ev in handle.rx.iter() {
         match ev {
             StreamEvent::Token(tok) => {
@@ -856,6 +913,7 @@ fn respond_completions(
     keep_alive: bool,
 ) -> std::io::Result<()> {
     let id = handle.id;
+    let rid = id.to_string();
     let mut text = Vec::new();
     for ev in handle.rx.iter() {
         match ev {
@@ -873,7 +931,7 @@ fn respond_completions(
                     w,
                     200,
                     "application/json",
-                    &[],
+                    &[("X-Request-Id", &rid)],
                     body.to_string_compact().as_bytes(),
                     keep_alive,
                 );
@@ -887,7 +945,7 @@ fn respond_completions(
 /// Streamed generation: one SSE `token` event per decoded token as the
 /// engine emits it, then a terminal `done` (or `error`) event.
 fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<()> {
-    http::write_sse_header(w)?;
+    http::write_sse_header_with(w, &[("X-Request-Id", &handle.id.to_string())])?;
     let mut text = Vec::new();
     for ev in handle.rx.iter() {
         match ev {
@@ -926,6 +984,7 @@ fn respond_generate(
     handle: StreamHandle,
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    let rid = handle.id.to_string();
     let mut tokens: Vec<u8> = Vec::new();
     for ev in handle.rx.iter() {
         match ev {
@@ -946,7 +1005,7 @@ fn respond_generate(
                     w,
                     200,
                     "application/json",
-                    &[],
+                    &[("X-Request-Id", &rid)],
                     body.to_string_compact().as_bytes(),
                     keep_alive,
                 );
@@ -1072,6 +1131,13 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     if crate::obs::profiler::enabled() {
         println!("per-phase decode profiling enabled (SINQ_PROFILE=1): see /v1/stats");
     }
+    if opts.drift_sample > 0 {
+        println!(
+            "drift sentinel enabled: recomputing 1 in {} decode steps on the scalar path \
+             (see /metrics and /v1/stats)",
+            opts.drift_sample
+        );
+    }
     let server = Server::start_with_backend(be, opts)?;
     println!(
         "listening on http://{} ({} slots x {} KV positions, page pool {} x {}-position pages, \
@@ -1085,7 +1151,7 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     );
     println!(
         "endpoints: POST /v1/generate  POST /v1/completions  POST /v1/score  GET /healthz  \
-         GET /metrics  GET /v1/stats"
+         GET /metrics  GET /v1/stats  GET /debug/trace"
     );
 
     install_interrupt_handler();

@@ -7,8 +7,12 @@
 # headline), the scalar-vs-SIMD fields (`tokens_per_sec_scalar`,
 # `simd_speedup`, top-level `kernel`), and the KV-cache fields
 # (`tokens_per_sec_kv8` per row; top-level `kv_bytes_per_slot_f32/q8`
-# with `kv_reduction` ≥ 3x) and a `profiling_overhead_pct` ≤ 3 (the
-# per-phase decode timers must stay near-free); the serve report needs
+# with `kv_reduction` ≥ 3x), a `profiling_overhead_pct` ≤ 3 (the
+# per-phase decode timers must stay near-free), a `drift_overhead_pct`
+# ≤ 3 with `drift_samples` > 0 (the numerical drift sentinel at its
+# 1-in-16 default must be near-free), and `journal_tokens_identical`
+# (the flight-recorder journal must not perturb decode); the serve
+# report needs
 # per-concurrency requests/sec plus a median TTFT, and the shared-prefix
 # fields (`prefix_tokens`, `ttft_cold_prefix_ms`, `ttft_hit_prefix_ms`).
 # Fails loudly so a silently-broken bench cannot upload garbage artifacts.
@@ -81,6 +85,17 @@ if bench == "decode":
     )
     assert overhead <= 3.0, (
         f"{path}: per-phase profiling costs {overhead:.2f}% throughput (gate: ≤ 3%)"
+    )
+    drift = doc.get("drift_overhead_pct")
+    assert isinstance(drift, (int, float)) and math.isfinite(drift), (
+        f"{path}: missing 'drift_overhead_pct'"
+    )
+    assert drift <= 3.0, (
+        f"{path}: drift sentinel at 1-in-16 costs {drift:.2f}% throughput (gate: ≤ 3%)"
+    )
+    assert doc.get("drift_samples", 0) > 0, f"{path}: drift sentinel recorded no samples"
+    assert doc.get("journal_tokens_identical") is True, (
+        f"{path}: decode tokens changed with the event journal on"
     )
     want = os.environ.get("CHECK_BENCH_SIMD_SPEEDUP", "")
     if want and kernel != "scalar":
