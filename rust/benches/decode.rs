@@ -17,6 +17,7 @@
 //! Run with `cargo bench --bench decode`; set `BENCH_QUICK=1` (or pass
 //! `--quick`) for the reduced-iteration CI smoke mode.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use sinq::backend::simd::{self, Isa};
@@ -25,6 +26,8 @@ use sinq::coordinator::scheduler::{load_or_synthetic, quantize_simple};
 use sinq::data::Corpus;
 use sinq::obs::{drift, journal, profiler};
 use sinq::quant::{Method, QuantConfig};
+use sinq::serve::engine::{GenEngine, StreamEvent};
+use sinq::serve::metrics::ServeMetrics;
 use sinq::util::json::Json;
 
 /// Decode `reqs` through `slots` KV slots; returns (secs, sequence-tokens).
@@ -272,6 +275,57 @@ fn main() {
          q8 {kv_bytes_q8}B → {kv_reduction:.2}x smaller"
     );
 
+    // Supervised engine: catch_unwind panic isolation, the exactly-once
+    // terminal roster, and per-request deadline checks must not tax the
+    // decode path. With every fault point disarmed, tokens through the
+    // supervised GenEngine must be bit-identical to the bare BatchDecoder
+    // and the throughput gap ≤ 3% (gated by scripts/check_bench.sh).
+    let be = Arc::new(be);
+    let eng = GenEngine::start(
+        be.clone(),
+        EngineConfig::new().with_max_batch(16).with_max_context(capacity),
+        n_req,
+        Arc::new(ServeMetrics::new()),
+    )
+    .expect("supervised engine");
+    let client = eng.client();
+    let mut supervised_secs = f64::INFINITY;
+    let mut toks_supervised: Vec<Vec<u8>> = Vec::new();
+    for _ in 0..preps {
+        let t0 = Instant::now();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|(p, g)| client.submit(p.clone(), *g, None, None).expect("submit"))
+            .collect();
+        let mut toks: Vec<Vec<u8>> = Vec::new();
+        for h in handles {
+            let mut seq = Vec::new();
+            for ev in h.rx.iter() {
+                match ev {
+                    StreamEvent::Token(t) => seq.push(t),
+                    StreamEvent::Done { .. } => {}
+                    StreamEvent::Failed { message, .. } => {
+                        panic!("supervised decode failed: {message}")
+                    }
+                }
+            }
+            toks.push(seq);
+        }
+        supervised_secs = supervised_secs.min(t0.elapsed().as_secs_f64());
+        toks_supervised = toks;
+    }
+    eng.shutdown();
+    let supervised_tokens_identical = toks_supervised == toks_plain;
+    assert!(supervised_tokens_identical, "supervision changed decoded tokens");
+    let tps_supervised = flight_tokens as f64 / supervised_secs;
+    let supervised_overhead_pct =
+        ((tps_drift_off - tps_supervised) / tps_drift_off * 100.0).max(0.0);
+    println!(
+        "supervised engine (faults disarmed): bare {tps_drift_off:.0} tok/s, \
+         supervised {tps_supervised:.0} tok/s → {supervised_overhead_pct:.2}% overhead; \
+         tokens bit-identical"
+    );
+
     let report = Json::obj(vec![
         ("bench", Json::Str("decode".to_string())),
         ("model", Json::Str("tiny".to_string())),
@@ -290,6 +344,9 @@ fn main() {
         ("drift_samples", Json::Num(drift_snap.samples as f64)),
         ("drift_argmax_flips", Json::Num(drift_snap.argmax_flips as f64)),
         ("journal_tokens_identical", Json::Bool(journal_tokens_identical)),
+        ("supervised_tokens_identical", Json::Bool(supervised_tokens_identical)),
+        ("supervised_overhead_pct", Json::Num(supervised_overhead_pct)),
+        ("tokens_per_sec_supervised", Json::Num(tps_supervised)),
         ("results", Json::Arr(summary)),
     ]);
     // Repo root, resolved from the package dir so cwd does not matter.

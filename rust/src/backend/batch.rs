@@ -34,6 +34,7 @@
 //! [`NativeDecoder`]: crate::backend::NativeDecoder
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::backend::config::EngineConfig;
 use crate::backend::fwd::{
@@ -43,6 +44,7 @@ use crate::backend::native::{NativeBackend, ResolvedModel};
 use crate::backend::paged::{PagedKv, PrefixCache};
 use crate::backend::simd::{self, Isa};
 use crate::obs::drift;
+use crate::obs::fault::{self, Site};
 use crate::obs::journal::{self, EventKind};
 use crate::obs::profiler::{self, Phase};
 use crate::tensor::Matrix;
@@ -57,6 +59,10 @@ pub struct GenRequest {
     pub max_new: usize,
     /// Seeded sampling parameters; `None` decodes greedily.
     pub sample: Option<SampleCfg>,
+    /// Absolute wall-clock deadline; past it the request is retired with
+    /// `finish_reason: "timeout"` at the next step boundary (queue wait
+    /// counts — the clock starts where the caller computed the instant).
+    pub deadline: Option<Instant>,
 }
 
 /// Validate that a request can ever decode to completion: its positions
@@ -101,6 +107,9 @@ pub struct GenOutput {
     /// was never preempted and hit no cached prefix; less after a prefix
     /// hit, more after preemption replay).
     pub steps: usize,
+    /// Why the request retired: `"length"` (decoded to `max_new`) or
+    /// `"timeout"` (deadline expired; `tokens` holds the partial decode).
+    pub finish_reason: &'static str,
 }
 
 /// Aggregate engine counters for throughput reporting.
@@ -123,6 +132,9 @@ pub struct BatchStats {
     pub prefix_hits: usize,
     /// Prompt positions skipped through prefix-cache page reuse.
     pub prefix_tokens_reused: usize,
+    /// Requests retired with `finish_reason: "timeout"` (deadline expired
+    /// while queued or live).
+    pub timeouts: usize,
 }
 
 /// What [`BatchDecoder::cancel`] found for the id.
@@ -153,6 +165,8 @@ struct Active {
     picker: TokenPicker,
     /// Admission order; preemption victims are the youngest by birth.
     birth: u64,
+    /// Absolute deadline; checked at step boundaries (survives preemption).
+    deadline: Option<Instant>,
 }
 
 /// Queue entry: a fresh request, or a preempted sequence awaiting
@@ -298,6 +312,21 @@ impl<'a> BatchDecoder<'a> {
         max_new: usize,
         sample: Option<SampleCfg>,
     ) -> anyhow::Result<()> {
+        self.submit_deadline(id, prompt, max_new, sample, None)
+    }
+
+    /// [`BatchDecoder::submit_sampled`] with an absolute deadline: past it
+    /// the request retires with `finish_reason: "timeout"` at the next
+    /// step boundary instead of burning slots and pool pages. Pass the
+    /// *enqueue-time* instant plus the budget so queue wait counts.
+    pub fn submit_deadline(
+        &mut self,
+        id: usize,
+        prompt: &[u8],
+        max_new: usize,
+        sample: Option<SampleCfg>,
+        deadline: Option<Instant>,
+    ) -> anyhow::Result<()> {
         ensure_fits(
             self.capacity,
             self.kv.page_size(),
@@ -308,7 +337,12 @@ impl<'a> BatchDecoder<'a> {
         )?;
         journal::record(EventKind::Enqueue, id, 0);
         if max_new == 0 {
-            self.finished.push(GenOutput { id, tokens: Vec::new(), steps: 0 });
+            self.finished.push(GenOutput {
+                id,
+                tokens: Vec::new(),
+                steps: 0,
+                finish_reason: "length",
+            });
             self.stats.completed += 1;
             journal::record(EventKind::Complete, id, 0);
             return Ok(());
@@ -319,6 +353,7 @@ impl<'a> BatchDecoder<'a> {
             prompt: prompt.to_vec(),
             max_new,
             sample,
+            deadline,
         }));
         Ok(())
     }
@@ -393,6 +428,7 @@ impl<'a> BatchDecoder<'a> {
                         steps: 0,
                         picker: TokenPicker::new(req.sample),
                         birth: self.births,
+                        deadline: req.deadline,
                     }
                 }
                 Pending::Resume(mut a) => {
@@ -434,6 +470,7 @@ impl<'a> BatchDecoder<'a> {
                     break;
                 }
                 if self.kv.try_claim(si) {
+                    fault::check_hard(Site::PageClaim);
                     if journal::enabled() {
                         let id = self.slots[si].as_ref().map(|a| a.id).unwrap_or(0);
                         let pages = self.kv.table(si).len() as u64;
@@ -488,6 +525,7 @@ impl<'a> BatchDecoder<'a> {
                 id: done.id,
                 tokens: done.seq[done.prompt_len..].to_vec(),
                 steps: done.steps,
+                finish_reason: "length",
             };
             journal::record(EventKind::Complete, done.id, out.tokens.len() as u64);
             self.finished.push(out);
@@ -502,7 +540,9 @@ impl<'a> BatchDecoder<'a> {
     /// finished ones. Returns the number of sequences advanced; 0 means
     /// idle.
     pub fn step(&mut self) -> anyhow::Result<usize> {
+        fault::check(Site::DecodeStep)?;
         self.emitted.clear();
+        self.expire_deadlines();
         self.admit();
         self.claim_pages();
         let rows: Vec<StepRow> = self
@@ -533,6 +573,72 @@ impl<'a> BatchDecoder<'a> {
             self.advance(row.slot, logits.row(r));
         }
         Ok(b)
+    }
+
+    /// Retire every queued or live request whose deadline has passed,
+    /// before this step admits or decodes anything. Expired requests
+    /// produce a [`GenOutput`] with `finish_reason: "timeout"` carrying
+    /// whatever tokens they decoded; live victims free their slot and pool
+    /// pages (no prefix donation — a half-written tail page must not enter
+    /// the cache). Requests without deadlines never read the clock.
+    fn expire_deadlines(&mut self) {
+        let mut now: Option<Instant> = None;
+        let mut expired = |deadline: Option<Instant>| match deadline {
+            None => false,
+            Some(d) => *now.get_or_insert_with(Instant::now) >= d,
+        };
+        let mut i = 0;
+        while i < self.pending.len() {
+            let hit = match &self.pending[i] {
+                Pending::Fresh(r) => expired(r.deadline),
+                Pending::Resume(a) => expired(a.deadline),
+            };
+            if !hit {
+                i += 1;
+                continue;
+            }
+            match self.pending.remove(i).expect("index in range") {
+                Pending::Fresh(r) => {
+                    journal::record(EventKind::Timeout, r.id, 0);
+                    self.finished.push(GenOutput {
+                        id: r.id,
+                        tokens: Vec::new(),
+                        steps: 0,
+                        finish_reason: "timeout",
+                    });
+                }
+                Pending::Resume(a) => {
+                    journal::record(EventKind::Timeout, a.id, (a.seq.len() - a.prompt_len) as u64);
+                    self.finished.push(GenOutput {
+                        id: a.id,
+                        tokens: a.seq[a.prompt_len..].to_vec(),
+                        steps: a.steps,
+                        finish_reason: "timeout",
+                    });
+                }
+            }
+            self.stats.timeouts += 1;
+        }
+        for si in 0..self.slots.len() {
+            let hit = match self.slots[si].as_ref() {
+                Some(a) => expired(a.deadline),
+                None => false,
+            };
+            if !hit {
+                continue;
+            }
+            let a = self.slots[si].take().expect("checked live");
+            self.kv.release_slot(si);
+            let generated = (a.seq.len() - a.prompt_len) as u64;
+            journal::record(EventKind::Timeout, a.id, generated);
+            self.finished.push(GenOutput {
+                id: a.id,
+                tokens: a.seq[a.prompt_len..].to_vec(),
+                steps: a.steps,
+                finish_reason: "timeout",
+            });
+            self.stats.timeouts += 1;
+        }
     }
 
     /// Drift sentinel: recompute one sampled live row's logits through the
@@ -718,7 +824,10 @@ mod tests {
         let mut dec = BatchDecoder::new(&nb, 1, 8).unwrap();
         dec.submit(3, b"xy", 0).unwrap();
         let outs = dec.run().unwrap();
-        assert_eq!(outs, vec![GenOutput { id: 3, tokens: Vec::new(), steps: 0 }]);
+        assert_eq!(
+            outs,
+            vec![GenOutput { id: 3, tokens: Vec::new(), steps: 0, finish_reason: "length" }]
+        );
     }
 
     #[test]
@@ -845,6 +954,58 @@ mod tests {
         let mut dec = BatchDecoder::with_config(&nb, &cfg).unwrap();
         dec.submit(0, b"default sample", 8).unwrap();
         assert_eq!(dec.run().unwrap().remove(0).tokens, explicit);
+    }
+
+    #[test]
+    fn expired_deadline_retires_with_timeout_and_frees_the_slot() {
+        let nb = pico_backend();
+        let mut dec = BatchDecoder::new(&nb, 1, 64).unwrap();
+        // Already expired at submit: evicted from the queue at the first
+        // step boundary, before ever occupying the slot.
+        let past = Instant::now() - std::time::Duration::from_millis(1);
+        dec.submit_deadline(0, b"never runs", 8, None, Some(past)).unwrap();
+        assert_eq!(dec.step().unwrap(), 0, "expired request must not decode");
+        let outs = dec.take_finished();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish_reason, "timeout");
+        assert!(outs[0].tokens.is_empty());
+        assert_eq!(dec.stats().timeouts, 1);
+
+        // A live sequence keeps its partial tokens when the deadline hits
+        // mid-decode, and the freed slot admits the next request. The
+        // budget is generous enough that the decode steps below cannot
+        // plausibly exhaust it before the explicit sleep does.
+        let soon = Instant::now() + std::time::Duration::from_millis(300);
+        dec.submit_deadline(1, b"partial", 50, None, Some(soon)).unwrap();
+        for _ in 0..10 {
+            assert_eq!(dec.step().unwrap(), 1);
+        }
+        assert_eq!(dec.live(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(320));
+        assert_eq!(dec.step().unwrap(), 0, "expired live sequence is evicted, not decoded");
+        let outs = dec.take_finished();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish_reason, "timeout");
+        let n = outs[0].tokens.len();
+        assert!((1..50).contains(&n), "partial tokens survive the timeout (got {n})");
+        assert_eq!(dec.stats().timeouts, 2);
+        dec.submit(2, b"after", 3).unwrap();
+        let outs = dec.run().unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].finish_reason, "length");
+    }
+
+    #[test]
+    fn generous_deadline_changes_nothing() {
+        let nb = pico_backend();
+        let expected = nb.generate(b"hello", 6).unwrap();
+        let mut dec = BatchDecoder::new(&nb, 2, 32).unwrap();
+        let far = Instant::now() + std::time::Duration::from_secs(3600);
+        dec.submit_deadline(0, b"hello", 6, None, Some(far)).unwrap();
+        let outs = dec.run().unwrap();
+        assert_eq!(outs[0].tokens, expected, "an unexpired deadline must not perturb decode");
+        assert_eq!(outs[0].finish_reason, "length");
+        assert_eq!(dec.stats().timeouts, 0);
     }
 
     #[test]

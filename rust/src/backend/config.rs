@@ -35,6 +35,11 @@ pub struct EngineConfig {
     /// feeds the comparison into [`crate::obs::drift`]. `0` (the default)
     /// disables the sentinel entirely (`--drift-sample N`).
     pub drift_sample: usize,
+    /// Server-wide deadline ceiling in milliseconds
+    /// (`--request-timeout-ms`): every request's effective deadline is
+    /// clamped to this, whether or not it asked for its own `deadline_ms`.
+    /// `0` (the default) means no server-imposed deadline.
+    pub request_timeout_ms: u64,
 }
 
 /// Default serving concurrency: scoring batch size and generation slots.
@@ -53,6 +58,7 @@ impl Default for EngineConfig {
             pages: None,
             sample: None,
             drift_sample: 0,
+            request_timeout_ms: 0,
         }
     }
 }
@@ -100,6 +106,25 @@ impl EngineConfig {
     pub fn with_drift_sample(mut self, drift_sample: usize) -> EngineConfig {
         self.drift_sample = drift_sample;
         self
+    }
+
+    /// Server-wide deadline ceiling in milliseconds (`0` disables).
+    pub fn with_request_timeout_ms(mut self, request_timeout_ms: u64) -> EngineConfig {
+        self.request_timeout_ms = request_timeout_ms;
+        self
+    }
+
+    /// A request's effective deadline budget in milliseconds: its own
+    /// `deadline_ms` clamped by the server-wide `request_timeout_ms`
+    /// ceiling (either side `0`/`None` means "no bound from that side");
+    /// `None` when neither imposes one.
+    pub fn effective_deadline_ms(&self, deadline_ms: Option<u64>) -> Option<u64> {
+        match (deadline_ms.filter(|&d| d > 0), self.request_timeout_ms) {
+            (None, 0) => None,
+            (Some(d), 0) => Some(d),
+            (None, t) => Some(t),
+            (Some(d), t) => Some(d.min(t)),
+        }
     }
 
     /// Page size clamped to at least one position.
@@ -154,5 +179,18 @@ mod tests {
         assert_eq!(EngineConfig::new().drift_sample, 0);
         let cfg = EngineConfig::new().with_drift_sample(16);
         assert_eq!(cfg.drift_sample, 16);
+    }
+
+    #[test]
+    fn effective_deadline_clamps_per_request_by_server_ceiling() {
+        let open = EngineConfig::new();
+        assert_eq!(open.request_timeout_ms, 0);
+        assert_eq!(open.effective_deadline_ms(None), None);
+        assert_eq!(open.effective_deadline_ms(Some(0)), None, "0 means unset");
+        assert_eq!(open.effective_deadline_ms(Some(250)), Some(250));
+        let capped = EngineConfig::new().with_request_timeout_ms(1_000);
+        assert_eq!(capped.effective_deadline_ms(None), Some(1_000));
+        assert_eq!(capped.effective_deadline_ms(Some(250)), Some(250));
+        assert_eq!(capped.effective_deadline_ms(Some(5_000)), Some(1_000));
     }
 }

@@ -208,6 +208,7 @@ impl PagedKv {
 
 impl KvArena for PagedKv {
     fn write(&mut self, slot: usize, layer: usize, pos: usize, k: &[f32], v: &[f32]) {
+        crate::obs::fault::check_hard(crate::obs::fault::Site::KvWrite);
         let phys = self.phys(slot, pos);
         let (d, heads, hd) = (self.d, self.heads, self.hd);
         match &mut self.store {

@@ -76,6 +76,7 @@ fn print_help() {
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
          [--max-context N] [--max-new-tokens N] [--kv-bits 32|8] [--log-json]\n             \
          [--page-size N] [--kv-pages N] [--drift-sample N]\n             \
+         [--request-timeout-ms N] [--max-engine-restarts N]\n             \
          [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
          Serving endpoint (serve --listen): POST /v1/generate (SSE with \"stream\":true;\n  \
@@ -94,7 +95,16 @@ fn print_help() {
          --page-size-position pages (--kv-pages overrides the pool size) with prefix\n  \
          caching across shared prompt prefixes (prefix_hit_rate on /metrics);\n  \
          disconnected SSE clients are evicted at the next step boundary;\n  \
-         Connection: keep-alive reuses sockets (--keepalive-idle-ms, default 5000);\n  \
+         Connection: keep-alive reuses sockets (--keepalive-idle-ms, default 5000;\n  \
+         streams idle past it get SSE \": ping\" heartbeats);\n  \
+         the decode loop runs supervised: a panicking step fails in-flight requests\n  \
+         with a typed engine_error envelope, rebuilds the decoder, and restarts with\n  \
+         backoff (--max-engine-restarts, default 3; exhausted -> /healthz degraded +\n  \
+         503s); per-request \"deadline_ms\" (clamped by --request-timeout-ms) times\n  \
+         requests out with finish_reason \"timeout\", queue wait included;\n  \
+         SINQ_FAULTS=site:panic|delay:MS|error[@every=N|@once] arms deterministic\n  \
+         fault injection (sites: submit admit page_claim decode_step kv_write\n  \
+         sse_write) for chaos drills;\n  \
          Ctrl-C drains live slots.\n\n\
          SIMD: fused kernels dispatch to AVX2/NEON at runtime; SINQ_SIMD=scalar|avx2|neon|auto\n  \
          overrides (serve prints the active kernel; /healthz reports it as \"simd\").\n\n\
@@ -289,6 +299,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             keepalive_idle_ms: args.num("keepalive-idle-ms", 5_000),
             log_json: args.has("log-json"),
             drift_sample: args.num("drift-sample", 0),
+            request_timeout_ms: args.num("request-timeout-ms", 0),
+            max_engine_restarts: args.num("max-engine-restarts", 3),
         };
         return sinq::serve::run(&spec, &opts);
     }

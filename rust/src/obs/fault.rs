@@ -1,0 +1,373 @@
+//! Deterministic fault-injection registry for the serving stack.
+//!
+//! Production code threads named *fault points* through the paths that can
+//! actually fail in the field — request submission, batch admission, page
+//! claiming, the decode step, quantized KV writes, SSE socket writes — and
+//! tests/CI arm them to rehearse crashes, slowdowns, and error returns
+//! without touching the code under test. Disarmed — the default — every
+//! [`check`] costs a single relaxed atomic load (the same discipline as
+//! `SINQ_PROFILE` in [`crate::obs::profiler`]), so the sites stay compiled
+//! in release builds and in the bit-exactness gates.
+//!
+//! Arm via the `SINQ_FAULTS` environment variable or [`arm_str`]:
+//!
+//! ```text
+//! SINQ_FAULTS=site:action[@once|@every=N][,site:action...]
+//!   site   := submit | admit | page_claim | decode_step | kv_write | sse_write
+//!   action := panic | error | delay:MS
+//! ```
+//!
+//! `@once` fires on the first hit only (the hit counter persists across
+//! engine restarts, so a supervised engine that crashed on an injected
+//! panic decodes cleanly after its restart); `@every=N` fires on every
+//! N-th hit; with no modifier the fault fires on every hit.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Once;
+use std::time::Duration;
+
+/// One named injection site. `Test` is reserved for this module's unit
+/// tests — no production code checks it, so arming it cannot perturb
+/// concurrently running tests in the same binary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Site {
+    /// `EngineClient::submit`, before the request enters the queue.
+    Submit,
+    /// The engine loop's admission of a queued submission into the batch.
+    Admit,
+    /// `BatchDecoder` KV page claiming (the preemption pressure path).
+    PageClaim,
+    /// Top of `BatchDecoder::step` — a panic here exercises supervision.
+    DecodeStep,
+    /// `PagedKv::write`, the per-token KV append.
+    KvWrite,
+    /// SSE streaming writes in the HTTP layer.
+    SseWrite,
+    /// Unit-test-only site; never checked by production code.
+    Test,
+}
+
+pub const SITE_COUNT: usize = 7;
+
+pub const ALL_SITES: [Site; SITE_COUNT] = [
+    Site::Submit,
+    Site::Admit,
+    Site::PageClaim,
+    Site::DecodeStep,
+    Site::KvWrite,
+    Site::SseWrite,
+    Site::Test,
+];
+
+impl Site {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Site::Submit => "submit",
+            Site::Admit => "admit",
+            Site::PageClaim => "page_claim",
+            Site::DecodeStep => "decode_step",
+            Site::KvWrite => "kv_write",
+            Site::SseWrite => "sse_write",
+            Site::Test => "test",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Site> {
+        ALL_SITES.iter().copied().find(|s| s.name() == name)
+    }
+
+    #[inline]
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+// Per-site action codes. 0 = disarmed.
+const ACT_NONE: usize = 0;
+const ACT_PANIC: usize = 1;
+const ACT_ERROR: usize = 2;
+const ACT_DELAY: usize = 3;
+
+// `@every=N` is stored in EVERY (0 = fire on every hit); `@once` is the
+// special encoding EVERY = u64::MAX.
+const EVERY_ONCE: u64 = u64::MAX;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+// Interior mutability is the point: these consts exist only to const-init
+// the static atomic arrays.
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_USIZE: AtomicUsize = AtomicUsize::new(0);
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO_U64: AtomicU64 = AtomicU64::new(0);
+static ACTION: [AtomicUsize; SITE_COUNT] = [ZERO_USIZE; SITE_COUNT];
+static DELAY_MS: [AtomicU64; SITE_COUNT] = [ZERO_U64; SITE_COUNT];
+static EVERY: [AtomicU64; SITE_COUNT] = [ZERO_U64; SITE_COUNT];
+static HITS: [AtomicU64; SITE_COUNT] = [ZERO_U64; SITE_COUNT];
+static FIRED: [AtomicU64; SITE_COUNT] = [ZERO_U64; SITE_COUNT];
+
+/// Is any fault point armed? First call folds in the `SINQ_FAULTS`
+/// environment variable; after that it is one relaxed load — the entire
+/// disarmed-path cost of every [`check`] in the hot loops.
+#[inline]
+pub fn armed() -> bool {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("SINQ_FAULTS") {
+            if !spec.is_empty() {
+                if let Err(e) = arm_str(&spec) {
+                    eprintln!("SINQ_FAULTS ignored: {e}");
+                }
+            }
+        }
+    });
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm fault points from a `SINQ_FAULTS`-grammar spec. Additive: sites not
+/// named keep their current state. Returns an error (arming nothing from
+/// the offending entry) on unknown sites, actions, or modifiers.
+pub fn arm_str(spec: &str) -> Result<(), String> {
+    // Parse every entry before touching the registry so a bad tail entry
+    // cannot leave a half-armed spec behind.
+    let mut parsed: Vec<(Site, usize, u64, u64)> = Vec::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (body, every) = match entry.split_once('@') {
+            None => (entry, 0u64),
+            Some((body, "once")) => (body, EVERY_ONCE),
+            Some((body, modif)) => {
+                let n = modif
+                    .strip_prefix("every=")
+                    .and_then(|n| n.parse::<u64>().ok())
+                    .filter(|&n| n > 0)
+                    .ok_or_else(|| format!("bad modifier '@{modif}' in '{entry}'"))?;
+                (body, n)
+            }
+        };
+        let (site, action) = body
+            .split_once(':')
+            .ok_or_else(|| format!("missing ':' in fault entry '{entry}'"))?;
+        let site = Site::from_name(site).ok_or_else(|| format!("unknown fault site '{site}'"))?;
+        let (code, delay_ms) = match action {
+            "panic" => (ACT_PANIC, 0),
+            "error" => (ACT_ERROR, 0),
+            _ => {
+                let ms = action
+                    .strip_prefix("delay:")
+                    .and_then(|ms| ms.parse::<u64>().ok())
+                    .ok_or_else(|| format!("unknown fault action '{action}' in '{entry}'"))?;
+                (ACT_DELAY, ms)
+            }
+        };
+        parsed.push((site, code, delay_ms, every));
+    }
+    if parsed.is_empty() {
+        return Err(format!("no fault entries in '{spec}'"));
+    }
+    for (site, code, delay_ms, every) in parsed {
+        let i = site.index();
+        DELAY_MS[i].store(delay_ms, Ordering::Relaxed);
+        EVERY[i].store(every, Ordering::Relaxed);
+        HITS[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+        ACTION[i].store(code, Ordering::Relaxed);
+    }
+    ENV_INIT.call_once(|| {});
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm every site and zero the hit/fired counters.
+pub fn disarm_all() {
+    for i in 0..SITE_COUNT {
+        ACTION[i].store(ACT_NONE, Ordering::Relaxed);
+        DELAY_MS[i].store(0, Ordering::Relaxed);
+        EVERY[i].store(0, Ordering::Relaxed);
+        HITS[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+    }
+    ENV_INIT.call_once(|| {});
+    ARMED.store(false, Ordering::Relaxed);
+}
+
+/// How many times `site` has actually fired (panics count: the increment
+/// happens before the unwind, so a supervised restart can see it).
+pub fn fired(site: Site) -> u64 {
+    FIRED[site.index()].load(Ordering::Relaxed)
+}
+
+/// Armed sites rendered back in `SINQ_FAULTS` grammar (startup log line).
+pub fn list_armed() -> Vec<String> {
+    if !armed() {
+        return Vec::new();
+    }
+    ALL_SITES
+        .iter()
+        .filter_map(|s| {
+            let i = s.index();
+            let action = match ACTION[i].load(Ordering::Relaxed) {
+                ACT_PANIC => "panic".to_string(),
+                ACT_ERROR => "error".to_string(),
+                ACT_DELAY => format!("delay:{}", DELAY_MS[i].load(Ordering::Relaxed)),
+                _ => return None,
+            };
+            let modif = match EVERY[i].load(Ordering::Relaxed) {
+                0 => String::new(),
+                EVERY_ONCE => "@once".to_string(),
+                n => format!("@every={n}"),
+            };
+            Some(format!("{}:{action}{modif}", s.name()))
+        })
+        .collect()
+}
+
+/// Pass through a fault point. Disarmed this is one relaxed atomic load.
+/// Armed, it panics (`panic` action), sleeps (`delay:MS`), or returns an
+/// error (`error`) that the caller routes down its real failure path.
+#[inline]
+pub fn check(site: Site) -> anyhow::Result<()> {
+    if !armed() {
+        return Ok(());
+    }
+    trip(site, false)
+}
+
+/// Like [`check`] for sites with no `Result` plumbing (page claiming, KV
+/// writes): the `error` action escalates to a panic so the supervisor
+/// still sees the failure instead of it being silently swallowed.
+#[inline]
+pub fn check_hard(site: Site) {
+    if !armed() {
+        return;
+    }
+    let _ = trip(site, true);
+}
+
+#[cold]
+fn trip(site: Site, escalate_error: bool) -> anyhow::Result<()> {
+    let i = site.index();
+    let action = ACTION[i].load(Ordering::Relaxed);
+    if action == ACT_NONE {
+        return Ok(());
+    }
+    let hit = HITS[i].fetch_add(1, Ordering::Relaxed) + 1;
+    match EVERY[i].load(Ordering::Relaxed) {
+        0 => {}
+        EVERY_ONCE => {
+            if hit != 1 {
+                return Ok(());
+            }
+        }
+        n => {
+            if hit % n != 0 {
+                return Ok(());
+            }
+        }
+    }
+    FIRED[i].fetch_add(1, Ordering::Relaxed);
+    match action {
+        ACT_PANIC => panic!("injected fault: {} panic (hit {hit})", site.name()),
+        ACT_DELAY => {
+            std::thread::sleep(Duration::from_millis(DELAY_MS[i].load(Ordering::Relaxed)));
+            Ok(())
+        }
+        _ => {
+            if escalate_error {
+                panic!("injected fault: {} error (hit {hit})", site.name());
+            }
+            anyhow::bail!("injected fault: {} error (hit {hit})", site.name())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The registry is process-global; serialize the tests that arm it.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn site_names_round_trip_and_are_unique() {
+        let mut names: Vec<&str> = ALL_SITES.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SITE_COUNT);
+        for s in ALL_SITES {
+            assert_eq!(Site::from_name(s.name()), Some(s));
+        }
+        assert_eq!(Site::from_name("nope"), None);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_without_arming() {
+        let _g = LOCK.lock().unwrap();
+        disarm_all();
+        for bad in [
+            "",
+            "decode_step",
+            "nope:panic",
+            "test:explode",
+            "test:delay:abc",
+            "test:panic@every=0",
+            "test:panic@sometimes",
+        ] {
+            assert!(arm_str(bad).is_err(), "spec {bad:?} should be rejected");
+        }
+        assert!(!armed(), "rejected specs must not arm the registry");
+        // A bad tail entry rejects the whole spec, including the good head.
+        assert!(arm_str("test:error,oops").is_err());
+        assert!(list_armed().is_empty());
+    }
+
+    #[test]
+    fn error_once_and_every_modes_fire_deterministically() {
+        let _g = LOCK.lock().unwrap();
+        disarm_all();
+        assert!(check(Site::Test).is_ok(), "disarmed check must pass");
+
+        arm_str("test:error@once").unwrap();
+        assert_eq!(list_armed(), vec!["test:error@once".to_string()]);
+        let err = check(Site::Test).unwrap_err().to_string();
+        assert!(err.contains("injected fault: test error"), "{err}");
+        assert!(check(Site::Test).is_ok(), "@once must not fire twice");
+        assert_eq!(fired(Site::Test), 1);
+
+        arm_str("test:error@every=3").unwrap();
+        let fired_hits: Vec<bool> = (0..6).map(|_| check(Site::Test).is_err()).collect();
+        assert_eq!(fired_hits, [false, false, true, false, false, true]);
+        assert_eq!(fired(Site::Test), 2);
+
+        // Unconditional mode fires on every hit; delay mode returns Ok.
+        arm_str("test:delay:1").unwrap();
+        let t0 = std::time::Instant::now();
+        assert!(check(Site::Test).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(1));
+
+        disarm_all();
+        assert!(check(Site::Test).is_ok());
+        assert_eq!(fired(Site::Test), 0);
+    }
+
+    #[test]
+    fn panic_action_unwinds_and_hard_check_escalates_errors() {
+        let _g = LOCK.lock().unwrap();
+        disarm_all();
+        arm_str("test:panic").unwrap();
+        let caught = std::panic::catch_unwind(|| check(Site::Test));
+        assert!(caught.is_err(), "panic action must unwind");
+        assert_eq!(fired(Site::Test), 1);
+
+        arm_str("test:error").unwrap();
+        let caught = std::panic::catch_unwind(|| check_hard(Site::Test));
+        assert!(caught.is_err(), "check_hard must escalate 'error' to panic");
+
+        disarm_all();
+        check_hard(Site::Test); // disarmed hard check is a no-op
+    }
+}

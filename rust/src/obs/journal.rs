@@ -56,6 +56,15 @@ pub enum EventKind {
     /// One profiler phase scope (journal + profiler both on). `aux` = the
     /// [`crate::obs::profiler::Phase`] index; `id` is unused.
     PhaseScope,
+    /// Sequence evicted because its deadline expired. `aux` = tokens
+    /// generated before the timeout.
+    Timeout,
+    /// The supervised engine loop panicked (or failed). `aux` = in-flight
+    /// requests that received a terminal `Failed`; `id` is unused.
+    Crash,
+    /// The supervisor restarted the engine after a crash. `aux` = restart
+    /// ordinal (1-based); `id` is unused.
+    Restart,
 }
 
 impl EventKind {
@@ -71,6 +80,9 @@ impl EventKind {
             EventKind::Evict => "evict",
             EventKind::Complete => "complete",
             EventKind::PhaseScope => "phase",
+            EventKind::Timeout => "timeout",
+            EventKind::Crash => "crash",
+            EventKind::Restart => "restart",
         }
     }
 
@@ -86,6 +98,9 @@ impl EventKind {
             EventKind::Evict => 7,
             EventKind::Complete => 8,
             EventKind::PhaseScope => 9,
+            EventKind::Timeout => 10,
+            EventKind::Crash => 11,
+            EventKind::Restart => 12,
         }
     }
 
@@ -101,6 +116,9 @@ impl EventKind {
             7 => EventKind::Evict,
             8 => EventKind::Complete,
             9 => EventKind::PhaseScope,
+            10 => EventKind::Timeout,
+            11 => EventKind::Crash,
+            12 => EventKind::Restart,
             _ => return None,
         })
     }
@@ -326,6 +344,9 @@ mod tests {
             EventKind::Evict,
             EventKind::Complete,
             EventKind::PhaseScope,
+            EventKind::Timeout,
+            EventKind::Crash,
+            EventKind::Restart,
         ] {
             assert_eq!(EventKind::from_code(kind.code()), Some(kind));
             assert!(!kind.name().is_empty());

@@ -27,6 +27,12 @@
 //!   sampled fast-path vs scalar-path logit comparisons
 //!   (`EngineConfig::drift_sample`), surfaced via `/metrics` and
 //!   `/v1/stats`.
+//! * [`fault`] — the deterministic fault-injection registry: named sites
+//!   (`submit`, `admit`, `page_claim`, `decode_step`, `kv_write`,
+//!   `sse_write`) armed via `SINQ_FAULTS=site:panic|delay:MS|error`
+//!   (`@once` / `@every=N` modifiers), compiled in always but costing one
+//!   relaxed atomic load when disarmed. Tests and the CI chaos leg use it
+//!   to rehearse the supervisor's panic-recovery and timeout paths.
 //! * [`span::RequestSpan`] — per-request timing threaded serve → engine →
 //!   `BatchDecoder`: queue-wait, admission, first token, completion; plus
 //!   the `usage` payload (`prompt_tokens`, `completion_tokens`, `ttft_ms`,
@@ -37,6 +43,7 @@
 //!   log, and `GET /v1/stats`.
 
 pub mod drift;
+pub mod fault;
 pub mod hist;
 pub mod journal;
 pub mod profiler;

@@ -108,6 +108,20 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                 out.push(slice(name, ev.t_us, ev.dur_us, 0, vec![]));
                 continue;
             }
+            // Supervisor events belong to the engine lane, not a request.
+            EventKind::Crash => {
+                out.push(instant(
+                    "crash",
+                    ev.t_us,
+                    0,
+                    vec![("failed_requests", Json::Num(ev.aux as f64))],
+                ));
+                continue;
+            }
+            EventKind::Restart => {
+                out.push(instant("restart", ev.t_us, 0, vec![("attempt", Json::Num(ev.aux as f64))]));
+                continue;
+            }
             _ => {}
         }
 
@@ -157,7 +171,7 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                     vec![("tokens", Json::Num(ev.aux as f64))],
                 ));
             }
-            EventKind::Complete | EventKind::Evict => {
+            EventKind::Complete | EventKind::Evict | EventKind::Timeout => {
                 if let Some(t0) = lane.running_since_us.take() {
                     out.push(slice("running", t0, ev.t_us.saturating_sub(t0), lane.id, vec![]));
                 }
@@ -184,7 +198,9 @@ pub fn chrome_trace(events: &[Event]) -> Json {
                     vec![("pages", Json::Num(ev.aux as f64))],
                 ));
             }
-            EventKind::Step | EventKind::PhaseScope => unreachable!("handled above"),
+            EventKind::Step | EventKind::PhaseScope | EventKind::Crash | EventKind::Restart => {
+                unreachable!("handled above")
+            }
         }
     }
 
@@ -226,7 +242,10 @@ pub fn summarize(events: &[Event]) -> Vec<SeqSummary> {
     }
     let mut accs: Vec<Acc> = Vec::new();
     for ev in events {
-        if matches!(ev.kind, EventKind::Step | EventKind::PhaseScope) {
+        if matches!(
+            ev.kind,
+            EventKind::Step | EventKind::PhaseScope | EventKind::Crash | EventKind::Restart
+        ) {
             continue;
         }
         let acc = match accs.iter_mut().find(|a| a.summary.id == ev.id) {
@@ -271,13 +290,20 @@ pub fn summarize(events: &[Event]) -> Vec<SeqSummary> {
                     acc.summary.preempted_us += ev.t_us.saturating_sub(t0);
                 }
             }
-            EventKind::Complete | EventKind::Evict => {
+            EventKind::Complete | EventKind::Evict | EventKind::Timeout => {
                 acc.summary.tokens = ev.aux;
                 acc.summary.total_us = Some(ev.t_us.saturating_sub(acc.summary.start_us));
-                acc.summary.outcome =
-                    if ev.kind == EventKind::Complete { "complete" } else { "evict" };
+                acc.summary.outcome = match ev.kind {
+                    EventKind::Complete => "complete",
+                    EventKind::Timeout => "timeout",
+                    _ => "evict",
+                };
             }
-            EventKind::PageClaim | EventKind::Step | EventKind::PhaseScope => {}
+            EventKind::PageClaim
+            | EventKind::Step
+            | EventKind::PhaseScope
+            | EventKind::Crash
+            | EventKind::Restart => {}
         }
     }
     accs.into_iter().map(|a| a.summary).collect()

@@ -4,11 +4,11 @@
 //! mid-decode instead of waiting for run-to-completion.
 //!
 //! ```text
-//! EngineClient::submit ──channel──▶ engine thread
-//!      │ (validates KV fit,            │ admit into BatchDecoder slots
-//!      │  enforces --max-queue)        │ step() → per-token events
-//!      ▼                               ▼
-//!  StreamHandle ◀──Token/Done/Error── per-request mpsc channels
+//! EngineClient::submit ──channel──▶ supervisor thread
+//!      │ (validates KV fit,            │ catch_unwind(engine_loop)
+//!      │  enforces --max-queue)        │ admit into BatchDecoder slots
+//!      ▼                               ▼ step() → per-token events
+//!  StreamHandle ◀──Token/Done/Failed── per-request mpsc channels
 //! ```
 //!
 //! Admission control happens on the *caller's* thread in
@@ -19,19 +19,31 @@
 //! `Retry-After` without ever touching the decode loop. Token channels are
 //! unbounded: a slow SSE reader can never stall the fused decode step (the
 //! buffered cost is bounded by the request's own `max_new`).
+//!
+//! Fault tolerance: [`GenEngine::start`] runs [`engine_loop`] under the
+//! supervisor in [`crate::serve::supervisor`], which catches panics,
+//! delivers a terminal [`StreamEvent::Failed`] to every in-flight channel,
+//! rebuilds the decoder, and restarts with capped exponential backoff.
+//! Exactly-once terminal delivery is enforced by the [`Shared`] roster:
+//! every submission registers its channel before it can reach the engine,
+//! and every terminal send (`Done`, `Failed`) goes through a
+//! remove-then-send on that roster — a request can be completed, timed
+//! out, cancelled, or crash-failed, but never two of those and never zero.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::backend::batch::{ensure_fits, BatchDecoder, CancelOutcome};
 use crate::backend::{EngineConfig, NativeBackend, SampleCfg};
+use crate::obs::fault::{self, Site};
 use crate::obs::journal::{self, EventKind};
 use crate::obs::span::{request_log_line, RequestSpan, Usage};
 use crate::serve::metrics::ServeMetrics;
+use crate::serve::supervisor::{supervise, SupervisorCfg};
 
 /// One event on a generation stream.
 #[derive(Debug, Clone, PartialEq)]
@@ -40,12 +52,15 @@ pub enum StreamEvent {
     Token(u8),
     /// Terminal event: the request completed, with its closed span's
     /// `usage` accounting (token counts, queue wait, TTFT, totals).
+    /// `finish_reason` is `"length"`, `"timeout"`, or `"cancelled"`.
     Done {
         finish_reason: &'static str,
         usage: Usage,
     },
-    /// Terminal event: the request failed after admission.
-    Error(String),
+    /// Terminal event: the request failed (engine crash, admission error,
+    /// shutdown before decode). The HTTP layer renders it as an
+    /// `engine_error` envelope carrying the request id.
+    Failed { request_id: usize, message: String },
 }
 
 /// Receiving side of one request's event stream.
@@ -91,7 +106,7 @@ impl std::fmt::Display for SubmitError {
 }
 
 /// One admitted request travelling from a handler thread to the engine.
-struct Submission {
+pub(crate) struct Submission {
     id: usize,
     prompt: Vec<u8>,
     max_new: usize,
@@ -99,17 +114,29 @@ struct Submission {
     sample: Option<SampleCfg>,
     tx: Sender<StreamEvent>,
     enqueued: Instant,
+    /// Absolute wall-clock deadline (per-request `deadline_ms` clamped by
+    /// `--request-timeout-ms`); queue wait counts against it.
+    deadline: Option<Instant>,
 }
 
 /// What travels from handler threads to the engine thread.
-enum EngineMsg {
+pub(crate) enum EngineMsg {
     Submit(Submission),
     /// Client went away: evict the request's slot at the next step boundary.
     Cancel(usize),
 }
 
+/// One live entry in the exactly-once terminal roster.
+struct RosterEntry {
+    tx: Sender<StreamEvent>,
+    /// Still counted in the `queued` backlog gauge: flipped false when the
+    /// decoder admits the request into a KV slot. Crash/shutdown drains use
+    /// it to release exactly the gauge reservations still outstanding.
+    queued: bool,
+}
+
 /// State shared between the engine thread and every [`EngineClient`].
-struct Shared {
+pub(crate) struct Shared {
     capacity: usize,
     /// KV page granularity (positions) — admission checks charge requests
     /// by the pages they will claim, not a contiguous per-slot reservation.
@@ -117,13 +144,78 @@ struct Shared {
     /// Page-pool size the decoder was built with.
     pages_total: usize,
     max_queue: usize,
-    metrics: Arc<ServeMetrics>,
+    pub(crate) metrics: Arc<ServeMetrics>,
     /// `--log-json`: print one structured line per completed request.
     log_json: bool,
+    /// Server-wide deadline ceiling (ms) applied to every submission.
+    request_timeout_ms: u64,
     next_id: AtomicUsize,
     shutting_down: AtomicBool,
-    /// Set when the engine thread has exited (drain finished or fatal error).
+    /// Set when the supervisor has exited (drain finished or degraded).
     dead: AtomicBool,
+    /// Every submission that can still receive a terminal event, keyed by
+    /// request id. Terminal delivery is remove-then-send on this map, so a
+    /// second terminal for the same id is structurally impossible.
+    roster: Mutex<HashMap<usize, RosterEntry>>,
+}
+
+impl Shared {
+    pub(crate) fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    pub(crate) fn set_dead(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    /// Register a submission's channel before it can reach the engine.
+    fn register(&self, id: usize, tx: Sender<StreamEvent>) {
+        self.roster.lock().expect("roster").insert(id, RosterEntry { tx, queued: true });
+    }
+
+    /// The decoder admitted `id` into a KV slot: its backlog-gauge
+    /// reservation was released by the engine's count-based decrement.
+    fn mark_admitted(&self, id: usize) {
+        if let Some(e) = self.roster.lock().expect("roster").get_mut(&id) {
+            e.queued = false;
+        }
+    }
+
+    /// Deliver a terminal event exactly once: whoever removes the roster
+    /// entry sends; later callers for the same id are no-ops.
+    fn finish(&self, id: usize, ev: StreamEvent) {
+        let entry = self.roster.lock().expect("roster").remove(&id);
+        if let Some(e) = entry {
+            let _ = e.tx.send(ev);
+        }
+    }
+
+    /// Terminal `Failed` for a request that never completed, releasing its
+    /// backlog-gauge reservation if it was still queued.
+    pub(crate) fn fail(&self, id: usize, message: &str) {
+        let entry = self.roster.lock().expect("roster").remove(&id);
+        if let Some(e) = entry {
+            if e.queued {
+                self.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            let _ = e.tx.send(StreamEvent::Failed { request_id: id, message: message.into() });
+        }
+    }
+
+    /// Crash/shutdown drain: terminal `Failed` for every in-flight request.
+    /// Returns how many were failed.
+    pub(crate) fn fail_all(&self, message: &str) -> usize {
+        let drained: Vec<(usize, RosterEntry)> =
+            self.roster.lock().expect("roster").drain().collect();
+        let n = drained.len();
+        for (id, e) in drained {
+            if e.queued {
+                self.metrics.queued.fetch_sub(1, Ordering::SeqCst);
+            }
+            let _ = e.tx.send(StreamEvent::Failed { request_id: id, message: message.into() });
+        }
+        n
+    }
 }
 
 /// Cloneable submission handle used by connection handler threads.
@@ -138,20 +230,29 @@ impl EngineClient {
     /// per-token events. `max_new == 0` completes immediately without
     /// touching the engine. `sample` enables seeded temperature/top-k
     /// sampling; `None` keeps the bit-identical greedy default.
+    /// `deadline_ms` bounds the request's total wall-clock time (queue wait
+    /// included), clamped by the server-wide `--request-timeout-ms`; expired
+    /// requests finish with `finish_reason: "timeout"`.
     pub fn submit(
         &self,
         prompt: Vec<u8>,
         max_new: usize,
         sample: Option<SampleCfg>,
+        deadline_ms: Option<u64>,
     ) -> Result<StreamHandle, SubmitError> {
         let id = self.shared.next_id.fetch_add(1, Ordering::SeqCst);
         if self.shared.shutting_down.load(Ordering::SeqCst)
             || self.shared.dead.load(Ordering::SeqCst)
         {
-            return Err(SubmitError {
-                id,
-                kind: SubmitErrorKind::Unavailable("server is shutting down".into()),
-            });
+            let msg = if self.shared.metrics.engine_degraded.load(Ordering::Relaxed) != 0 {
+                "generation engine degraded: restart budget exhausted"
+            } else {
+                "server is shutting down"
+            };
+            return Err(SubmitError { id, kind: SubmitErrorKind::Unavailable(msg.into()) });
+        }
+        if let Err(e) = fault::check(Site::Submit) {
+            return Err(SubmitError { id, kind: SubmitErrorKind::Unavailable(e.to_string()) });
         }
         ensure_fits(
             self.shared.capacity,
@@ -188,13 +289,29 @@ impl EngineClient {
             });
         }
         let (tx, rx) = channel();
-        let sub = Submission { id, prompt, max_new, sample, tx, enqueued: Instant::now() };
+        let enqueued = Instant::now();
+        // Queue wait counts against the deadline: the budget starts at the
+        // accept-side enqueue stamp, not at slot admission.
+        let budget = EngineConfig::new()
+            .with_request_timeout_ms(self.shared.request_timeout_ms)
+            .effective_deadline_ms(deadline_ms);
+        let deadline = budget.map(|ms| enqueued + Duration::from_millis(ms));
+        self.shared.register(id, tx.clone());
+        let sub = Submission { id, prompt, max_new, sample, tx, enqueued, deadline };
         if self.tx.send(EngineMsg::Submit(sub)).is_err() {
+            self.shared.roster.lock().expect("roster").remove(&id);
             metrics.queued.fetch_sub(1, Ordering::SeqCst);
             return Err(SubmitError {
                 id,
                 kind: SubmitErrorKind::Unavailable("generation engine stopped".into()),
             });
+        }
+        // Close the race with a concurrently-exiting supervisor: if it went
+        // dead after the check at the top, its final drain may have run
+        // before our roster entry existed — self-deliver the terminal
+        // `Failed` (idempotent: whoever removes the entry sends).
+        if self.shared.dead.load(Ordering::SeqCst) {
+            self.shared.fail(id, "generation engine stopped");
         }
         // The accept-side enqueue stamp: the decoder stamps its own when
         // the engine thread hands the request over, and the trace exporter
@@ -248,6 +365,20 @@ impl GenEngine {
         metrics: Arc<ServeMetrics>,
         log_json: bool,
     ) -> anyhow::Result<GenEngine> {
+        GenEngine::start_supervised(be, cfg, max_queue, metrics, log_json, SupervisorCfg::default())
+    }
+
+    /// Full-control constructor: the supervisor policy (restart budget,
+    /// backoff curve) is explicit. [`GenEngine::start`] uses
+    /// [`SupervisorCfg::default`]; tests use a fast-backoff variant.
+    pub fn start_supervised(
+        be: Arc<NativeBackend>,
+        cfg: EngineConfig,
+        max_queue: usize,
+        metrics: Arc<ServeMetrics>,
+        log_json: bool,
+        sup: SupervisorCfg,
+    ) -> anyhow::Result<GenEngine> {
         // Probe construction on the caller's thread so bad weight sets fail
         // at startup, not on the first request — and publish the KV shape
         // (`/healthz` + `/metrics` report it) while the decoder exists.
@@ -267,15 +398,17 @@ impl GenEngine {
             max_queue,
             metrics,
             log_json,
+            request_timeout_ms: cfg.request_timeout_ms,
             next_id: AtomicUsize::new(0),
             shutting_down: AtomicBool::new(false),
             dead: AtomicBool::new(false),
+            roster: Mutex::new(HashMap::new()),
         });
         let (tx, rx) = channel::<EngineMsg>();
         let thread_shared = shared.clone();
         let thread = thread::Builder::new()
             .name("sinq-gen-engine".into())
-            .spawn(move || engine_loop(&be, cfg, rx, thread_shared))
+            .spawn(move || supervise(&be, &cfg, &sup, &rx, &thread_shared))
             .expect("spawn generation engine");
         Ok(GenEngine { client: EngineClient { tx, shared }, thread: Some(thread) })
     }
@@ -307,45 +440,63 @@ impl Drop for GenEngine {
 struct Session {
     tx: Sender<StreamEvent>,
     span: RequestSpan,
+    /// Tokens streamed so far — the completion count for cancelled requests.
+    emitted: usize,
 }
 
-fn engine_loop(
+/// How one run of [`engine_loop`] ended, as seen by the supervisor.
+pub(crate) enum ExitKind {
+    /// Graceful drain after the shutdown flag: do not restart.
+    Shutdown,
+    /// The decoder failed (init or step error): restart-eligible, like a
+    /// panic but without unwinding.
+    Failed(String),
+}
+
+/// One incarnation of the decode loop. The supervisor owns the channel
+/// receiver and the restart policy; this function owns exactly one
+/// [`BatchDecoder`] built fresh per incarnation, so a crashed decoder's
+/// state is discarded wholesale rather than repaired.
+pub(crate) fn engine_loop(
     be: &NativeBackend,
-    cfg: EngineConfig,
-    rx: Receiver<EngineMsg>,
-    shared: Arc<Shared>,
-) {
+    cfg: &EngineConfig,
+    rx: &Receiver<EngineMsg>,
+    shared: &Arc<Shared>,
+) -> ExitKind {
     let metrics = shared.metrics.clone();
     let mut sessions: HashMap<usize, Session> = HashMap::new();
-    let mut dec = match BatchDecoder::with_config(be, &cfg) {
+    let mut dec = match BatchDecoder::with_config(be, cfg) {
         Ok(d) => d,
-        Err(e) => {
-            fail_remaining(&rx, &shared, &format!("engine init failed: {e}"));
-            return;
-        }
+        Err(e) => return ExitKind::Failed(format!("engine init failed: {e}")),
     };
 
     let admit = |dec: &mut BatchDecoder,
                  sessions: &mut HashMap<usize, Session>,
                  sub: Submission| {
-        match dec.submit_sampled(sub.id, &sub.prompt, sub.max_new, sub.sample) {
+        if let Err(e) = fault::check(Site::Admit) {
+            shared.fail(sub.id, &format!("admission failed: {e}"));
+            return;
+        }
+        match dec.submit_deadline(sub.id, &sub.prompt, sub.max_new, sub.sample, sub.deadline) {
             Ok(()) => {
                 let span = RequestSpan::new(sub.id, sub.prompt.len(), sub.enqueued);
-                sessions.insert(sub.id, Session { tx: sub.tx, span });
+                sessions.insert(sub.id, Session { tx: sub.tx, span, emitted: 0 });
             }
             Err(e) => {
                 // Pre-validated in submit(); defensive only.
-                metrics.queued.fetch_sub(1, Ordering::SeqCst);
-                let _ = sub.tx.send(StreamEvent::Error(e.to_string()));
+                shared.fail(sub.id, &format!("admission failed: {e}"));
             }
         }
     };
     // Client-disconnect eviction: free the request's KV slot (or backlog
     // entry) at this step boundary; finished ids fall through harmlessly.
+    // The cancelled stream still gets its terminal event (`Done` with
+    // `finish_reason: "cancelled"`) so no channel ever closes silently.
     let cancel = |dec: &mut BatchDecoder, sessions: &mut HashMap<usize, Session>, id: usize| {
-        if sessions.remove(&id).is_none() {
-            return;
-        }
+        let s = match sessions.remove(&id) {
+            Some(s) => s,
+            None => return,
+        };
         match dec.cancel(id) {
             CancelOutcome::Pending => {
                 // Never decoded: release its --max-queue backlog entry but
@@ -357,6 +508,11 @@ fn engine_loop(
             }
             CancelOutcome::NotFound => {}
         }
+        let usage = s.span.finish(s.emitted);
+        if shared.log_json {
+            println!("{}", request_log_line(id, "cancelled", &usage));
+        }
+        shared.finish(id, StreamEvent::Done { finish_reason: "cancelled", usage });
     };
 
     loop {
@@ -366,7 +522,7 @@ fn engine_loop(
                 Ok(EngineMsg::Submit(sub)) => admit(&mut dec, &mut sessions, sub),
                 Ok(EngineMsg::Cancel(id)) => cancel(&mut dec, &mut sessions, id),
                 Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
-                    if shared.shutting_down.load(Ordering::SeqCst) {
+                    if shared.is_shutting_down() {
                         break;
                     }
                     continue;
@@ -388,28 +544,18 @@ fn engine_loop(
         let t_step = Instant::now();
         let stepped = match dec.step() {
             Ok(n) => n,
-            Err(e) => {
-                let msg = format!("decode step failed: {e}");
-                // Requests still in the decoder's pending queue were counted
-                // in the backlog gauge; release them so a dead engine does
-                // not report phantom queued work forever.
-                let stranded = dec.pending();
-                if stranded > 0 {
-                    metrics.queued.fetch_sub(stranded, Ordering::SeqCst);
-                }
-                for (_, s) in sessions.drain() {
-                    let _ = s.tx.send(StreamEvent::Error(msg.clone()));
-                }
-                break;
-            }
+            // In-flight channels get their terminal `Failed` from the
+            // supervisor's roster drain; local sessions just drop.
+            Err(e) => return ExitKind::Failed(format!("decode step failed: {e}")),
         };
-        // step() admitted pending requests into freed slots: those left the
-        // `--max-queue` backlog.
+        // step() admitted pending requests into freed slots (or expired
+        // them off the pending queue): those left the --max-queue backlog.
         let admitted = pending_before.saturating_sub(dec.pending());
         if admitted > 0 {
             metrics.queued.fetch_sub(admitted, Ordering::SeqCst);
         }
         for id in dec.drain_admitted() {
+            shared.mark_admitted(id);
             if let Some(s) = sessions.get_mut(&id) {
                 s.span.admitted = Some(t_step);
                 metrics.record_queue_wait(t_step.duration_since(s.span.enqueued));
@@ -427,17 +573,25 @@ fn engine_loop(
                     s.span.first_token = Some(now);
                     metrics.record_ttft(now.duration_since(s.span.enqueued));
                 }
+                s.emitted += 1;
                 let _ = s.tx.send(StreamEvent::Token(tok));
             }
         }
         for out in dec.take_finished() {
             if let Some(s) = sessions.remove(&out.id) {
-                metrics.completed_total.fetch_add(1, Ordering::Relaxed);
+                // A pending-queue expiry never counted as admitted above
+                // (it left `pending` in the same step-delta), so the gauge
+                // is already consistent; only the outcome counter differs.
+                if out.finish_reason == "timeout" {
+                    metrics.timeout_total.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    metrics.completed_total.fetch_add(1, Ordering::Relaxed);
+                }
                 let usage = s.span.finish(out.tokens.len());
                 if shared.log_json {
-                    println!("{}", request_log_line(out.id, "length", &usage));
+                    println!("{}", request_log_line(out.id, out.finish_reason, &usage));
                 }
-                let _ = s.tx.send(StreamEvent::Done { finish_reason: "length", usage });
+                shared.finish(out.id, StreamEvent::Done { finish_reason: out.finish_reason, usage });
             }
         }
         metrics.live_slots.store(dec.live(), Ordering::Relaxed);
@@ -453,19 +607,7 @@ fn engine_loop(
     }
 
     metrics.live_slots.store(0, Ordering::Relaxed);
-    fail_remaining(&rx, &shared, "server shut down before this request was decoded");
-}
-
-/// Terminal path: mark the engine dead and error out anything still queued
-/// (submissions that raced past the shutdown flag).
-fn fail_remaining(rx: &Receiver<EngineMsg>, shared: &Shared, msg: &str) {
-    shared.dead.store(true, Ordering::SeqCst);
-    while let Ok(m) = rx.try_recv() {
-        if let EngineMsg::Submit(sub) = m {
-            shared.metrics.queued.fetch_sub(1, Ordering::SeqCst);
-            let _ = sub.tx.send(StreamEvent::Error(msg.to_string()));
-        }
-    }
+    ExitKind::Shutdown
 }
 
 #[cfg(test)]
@@ -499,7 +641,7 @@ mod tests {
         let expected = be.generate(b"hello engine", 7).unwrap();
         let metrics = Arc::new(ServeMetrics::new());
         let eng = GenEngine::start(be, engine_cfg(2, 64), 16, metrics.clone()).unwrap();
-        let handle = eng.client().submit(b"hello engine".to_vec(), 7, None).unwrap();
+        let handle = eng.client().submit(b"hello engine".to_vec(), 7, None, None).unwrap();
         let (tokens, terminal) = collect(handle);
         assert_eq!(tokens, expected);
         match terminal {
@@ -530,13 +672,13 @@ mod tests {
         let eng =
             GenEngine::start(be, engine_cfg(1, 8), 4, Arc::new(ServeMetrics::new())).unwrap();
         let client = eng.client();
-        match client.submit(vec![b'x'; 32], 4, None) {
+        match client.submit(vec![b'x'; 32], 4, None, None) {
             Err(SubmitError { kind: SubmitErrorKind::Invalid(msg), .. }) => {
                 assert!(msg.contains("KV"), "unclear capacity error: {msg}")
             }
             other => panic!("expected Invalid, got {other:?}"),
         }
-        let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0, None).unwrap());
+        let (tokens, terminal) = collect(client.submit(b"ok".to_vec(), 0, None, None).unwrap());
         assert!(tokens.is_empty());
         assert!(matches!(
             terminal,
@@ -550,7 +692,7 @@ mod tests {
         let be = pico_arc();
         let metrics = Arc::new(ServeMetrics::new());
         let eng = GenEngine::start(be, engine_cfg(1, 16), 0, metrics.clone()).unwrap();
-        match eng.client().submit(b"hi".to_vec(), 2, None) {
+        match eng.client().submit(b"hi".to_vec(), 2, None, None) {
             Err(SubmitError { kind: SubmitErrorKind::Busy { max_queue: 0, .. }, .. }) => {}
             other => panic!("expected Busy, got {other:?}"),
         }
@@ -572,15 +714,21 @@ mod tests {
         assert_eq!(metrics.kv_pages_total.load(Ordering::Relaxed), 256);
         assert_eq!(metrics.kv_pages_free.load(Ordering::Relaxed), 256);
         let client = eng.client();
-        let handle = client.submit(b"evict me".to_vec(), 4000, None).unwrap();
+        let handle = client.submit(b"evict me".to_vec(), 4000, None, None).unwrap();
         // Wait until the request is actually decoding before cancelling.
         let first = handle.rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(matches!(first, StreamEvent::Token(_)));
         client.cancel(handle.id);
-        // The engine drops the session at the next step boundary: the
-        // channel ends without a terminal Done and far short of max_new.
+        // The engine evicts the slot at the next step boundary and still
+        // delivers a terminal event, far short of max_new.
         let (tokens, terminal) = collect(handle);
-        assert!(terminal.is_none(), "cancelled request must not complete: {terminal:?}");
+        match terminal {
+            Some(StreamEvent::Done { finish_reason: "cancelled", usage }) => {
+                // One token was consumed by recv_timeout above.
+                assert_eq!(usage.completion_tokens, tokens.len() + 1);
+            }
+            other => panic!("expected Done(cancelled), got {other:?}"),
+        }
         assert!(tokens.len() < 4000 - 1, "slot kept decoding after cancel");
         eng.shutdown();
         assert_eq!(metrics.evicted_total.load(Ordering::Relaxed), 1);
@@ -595,7 +743,7 @@ mod tests {
         let eng = GenEngine::start(be, engine_cfg(1, 32), 8, metrics.clone()).unwrap();
         let client = eng.client();
         let handles: Vec<StreamHandle> = (0..3)
-            .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4, None).unwrap())
+            .map(|i| client.submit(vec![b'a' + i as u8, b'b'], 4, None, None).unwrap())
             .collect();
         eng.shutdown();
         for h in handles {
@@ -607,9 +755,132 @@ mod tests {
             ));
         }
         assert!(matches!(
-            client.submit(b"late".to_vec(), 1, None),
+            client.submit(b"late".to_vec(), 1, None, None),
             Err(SubmitError { kind: SubmitErrorKind::Unavailable(_), .. })
         ));
         assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 3);
+    }
+
+    /// Consume a stream to the end: every event, in order, until the
+    /// channel closes. Exactly-once terminal delivery means the terminal
+    /// list must always have length 1 for an accepted request.
+    fn drain_all(h: StreamHandle) -> (Vec<u8>, Vec<StreamEvent>) {
+        let mut tokens = Vec::new();
+        let mut terminals = Vec::new();
+        for ev in h.rx.iter() {
+            match ev {
+                StreamEvent::Token(t) => tokens.push(t),
+                terminal => terminals.push(terminal),
+            }
+        }
+        (tokens, terminals)
+    }
+
+    #[test]
+    fn expired_deadline_times_out_with_terminal_done() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, engine_cfg(1, 4096), 8, metrics.clone()).unwrap();
+        // 4000 greedy decode steps cannot finish inside 1ms, so the
+        // deadline trips mid-decode and the request ends early.
+        let handle = eng.client().submit(b"deadline".to_vec(), 4000, None, Some(1)).unwrap();
+        let (tokens, terminals) = drain_all(handle);
+        assert!(tokens.len() < 4000, "deadline never enforced");
+        match &terminals[..] {
+            [StreamEvent::Done { finish_reason: "timeout", usage }] => {
+                assert_eq!(usage.completion_tokens, tokens.len());
+            }
+            other => panic!("expected one Done(timeout), got {other:?}"),
+        }
+        eng.shutdown();
+        assert_eq!(metrics.timeout_total.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn queue_wait_counts_against_deadline() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        // One slot: the first request occupies it, the second expires while
+        // still waiting in the pending queue.
+        let eng = GenEngine::start(be, engine_cfg(1, 4096), 8, metrics.clone()).unwrap();
+        let client = eng.client();
+        let hog = client.submit(b"occupy the only slot".to_vec(), 4000, None, None).unwrap();
+        // Ensure the hog is actually decoding before queueing behind it.
+        let first = hog.rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(matches!(first, StreamEvent::Token(_)));
+        let queued = client.submit(b"never admitted".to_vec(), 5, None, Some(1)).unwrap();
+        let (tokens, terminals) = drain_all(queued);
+        assert!(tokens.is_empty(), "expired in queue, before any decode");
+        assert!(matches!(
+            &terminals[..],
+            [StreamEvent::Done { finish_reason: "timeout", usage }] if usage.completion_tokens == 0
+        ));
+        client.cancel(hog.id);
+        let (_, hog_terminals) = drain_all(hog);
+        assert_eq!(hog_terminals.len(), 1, "exactly one terminal for the hog");
+        eng.shutdown();
+        assert_eq!(metrics.timeout_total.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn cancel_paths_deliver_exactly_one_terminal_event() {
+        let be = pico_arc();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start(be, engine_cfg(1, 4096), 8, metrics.clone()).unwrap();
+        let client = eng.client();
+        // A: live in the only slot. B: stuck pending behind it.
+        let a = client.submit(b"live request".to_vec(), 4000, None, None).unwrap();
+        let first = a.rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(matches!(first, StreamEvent::Token(_)));
+        let b = client.submit(b"pending request".to_vec(), 5, None, None).unwrap();
+        // Cancel the pending one first (backlog path), then the live one
+        // (eviction path), then the live one again (stale-id path).
+        client.cancel(b.id);
+        client.cancel(a.id);
+        client.cancel(a.id);
+        let (b_tokens, b_terminals) = drain_all(b);
+        assert!(b_tokens.is_empty(), "pending request never decoded");
+        assert!(matches!(
+            &b_terminals[..],
+            [StreamEvent::Done { finish_reason: "cancelled", usage }] if usage.completion_tokens == 0
+        ));
+        let (_, a_terminals) = drain_all(a);
+        assert!(
+            matches!(&a_terminals[..], [StreamEvent::Done { finish_reason: "cancelled", .. }]),
+            "double-cancel must still deliver exactly one terminal: {a_terminals:?}"
+        );
+        eng.shutdown();
+        assert_eq!(metrics.evicted_total.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn supervised_engine_streams_identical_tokens() {
+        // Supervision on, faults disarmed: bit-identical to the direct
+        // backend decode (the tentpole's parity requirement).
+        let be = pico_arc();
+        let expected = be.generate(b"supervised parity", 24).unwrap();
+        let metrics = Arc::new(ServeMetrics::new());
+        let eng = GenEngine::start_supervised(
+            be,
+            engine_cfg(2, 128),
+            16,
+            metrics.clone(),
+            false,
+            SupervisorCfg { max_restarts: 3, backoff_base_ms: 1, backoff_cap_ms: 4 },
+        )
+        .unwrap();
+        let handle = eng.client().submit(b"supervised parity".to_vec(), 24, None, None).unwrap();
+        let (tokens, terminals) = drain_all(handle);
+        assert_eq!(tokens, expected);
+        assert_eq!(terminals.len(), 1);
+        eng.shutdown();
+        assert_eq!(metrics.engine_panics_total.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.engine_restarts_total.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.engine_degraded.load(Ordering::Relaxed), 0);
     }
 }

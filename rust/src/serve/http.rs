@@ -212,6 +212,24 @@ pub fn error_body_with_id(code: u16, msg: &str, request_id: usize) -> String {
     .to_string_compact()
 }
 
+/// The envelope for a request the supervised engine failed (crash,
+/// admission fault, shutdown mid-queue): same shape as
+/// [`error_body_with_id`] but with the distinguished type `engine_error`,
+/// so clients and the chaos harness can tell "the engine died under you"
+/// from an ordinary 500.
+pub fn engine_error_body(msg: &str, request_id: usize) -> String {
+    use crate::util::json::Json;
+    Json::obj(vec![(
+        "error",
+        Json::obj(vec![
+            ("message", Json::Str(msg.to_string())),
+            ("request_id", Json::Num(request_id as f64)),
+            ("type", Json::Str("engine_error".to_string())),
+        ]),
+    )])
+    .to_string_compact()
+}
+
 /// Write the unified error envelope ([`error_body`]) with `code`.
 pub fn write_error(
     w: &mut impl Write,
@@ -253,8 +271,17 @@ pub fn write_sse_header_with(
     w.flush()
 }
 
+/// The `sse_write` fault point: an injected error renders as a socket
+/// error, which the handlers treat exactly like a client disconnect
+/// (cancel + evict). Disarmed cost: one relaxed atomic load.
+fn sse_fault() -> std::io::Result<()> {
+    crate::obs::fault::check(crate::obs::fault::Site::SseWrite)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))
+}
+
 /// Write one SSE event and flush, so tokens reach the client mid-decode.
 pub fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::Result<()> {
+    sse_fault()?;
     write!(w, "event: {event}\ndata: {data}\n\n")?;
     w.flush()
 }
@@ -263,7 +290,18 @@ pub fn write_sse_event(w: &mut impl Write, event: &str, data: &str) -> std::io::
 /// OpenAI streaming wire format `/v1/completions` uses, where the terminal
 /// frame is the literal `data: [DONE]`.
 pub fn write_sse_data(w: &mut impl Write, data: &str) -> std::io::Result<()> {
+    sse_fault()?;
     write!(w, "data: {data}\n\n")?;
+    w.flush()
+}
+
+/// Write one SSE comment line (`: text`) and flush. Comment lines are the
+/// spec's keep-alive mechanism: clients ignore them, proxies see bytes.
+/// Written only between events, never inside one, so heartbeats can never
+/// corrupt a token frame.
+pub fn write_sse_comment(w: &mut impl Write, text: &str) -> std::io::Result<()> {
+    sse_fault()?;
+    write!(w, ": {text}\n\n")?;
     w.flush()
 }
 
@@ -438,5 +476,24 @@ mod tests {
         write_sse_data(&mut out, "{\"text\":\"a\"}").unwrap();
         write_sse_data(&mut out, "[DONE]").unwrap();
         assert_eq!(out, b"data: {\"text\":\"a\"}\n\ndata: [DONE]\n\n");
+    }
+
+    #[test]
+    fn sse_comment_is_a_standalone_ping_frame() {
+        let mut out = Vec::new();
+        write_sse_comment(&mut out, "ping").unwrap();
+        write_sse_event(&mut out, "token", "{\"token\":65}").unwrap();
+        // The heartbeat is its own frame: it ends with a blank line before
+        // the next event begins, so it can never interleave mid-event.
+        assert_eq!(out, b": ping\n\nevent: token\ndata: {\"token\":65}\n\n");
+    }
+
+    #[test]
+    fn engine_error_body_is_typed_and_carries_the_id() {
+        assert_eq!(
+            engine_error_body("engine crashed: boom", 9),
+            "{\"error\":{\"message\":\"engine crashed: boom\",\"request_id\":9,\
+             \"type\":\"engine_error\"}}"
+        );
     }
 }

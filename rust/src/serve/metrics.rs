@@ -124,6 +124,16 @@ pub struct ServeMetrics {
     /// Live sequences preempted back to the queue when the page pool ran
     /// dry (they resume later; nothing is lost).
     pub preempted_total: AtomicUsize,
+    /// Requests evicted because their deadline (`deadline_ms` /
+    /// `--request-timeout-ms`) expired before completion.
+    pub timeout_total: AtomicUsize,
+    /// Engine-loop panics the supervisor caught.
+    pub engine_panics_total: AtomicUsize,
+    /// Supervisor restarts of the engine loop after a crash.
+    pub engine_restarts_total: AtomicUsize,
+    /// Gauge: 1 once the restart budget (`--max-engine-restarts`) is
+    /// exhausted — `/healthz` reports `degraded` and submits answer 503.
+    pub engine_degraded: AtomicUsize,
     /// Request time-to-first-token (accept → first streamed token).
     pub ttft: AtomicHistogram,
     /// Request queue wait (accept → KV-slot admission).
@@ -157,6 +167,10 @@ impl ServeMetrics {
             prefix_hits_total: AtomicUsize::new(0),
             prefix_tokens_reused_total: AtomicUsize::new(0),
             preempted_total: AtomicUsize::new(0),
+            timeout_total: AtomicUsize::new(0),
+            engine_panics_total: AtomicUsize::new(0),
+            engine_restarts_total: AtomicUsize::new(0),
+            engine_degraded: AtomicUsize::new(0),
             ttft: AtomicHistogram::new(&REQUEST_BUCKETS),
             queue_wait: AtomicHistogram::new(&REQUEST_BUCKETS),
             step_latency: AtomicHistogram::new(&STEP_BUCKETS),
@@ -205,11 +219,36 @@ impl ServeMetrics {
         hits / (self.requests_total.load(Ordering::Relaxed).max(1) as f64)
     }
 
+    /// Seconds a 503-rejected client should wait before retrying: the
+    /// current backlog (`queued` gauge) times the mean tokens per completed
+    /// request, divided by the rolling-window throughput. An idle or
+    /// freshly-started server (empty queue, or no rate signal yet) hints
+    /// the 1-second floor; a saturated one scales with its real drain time,
+    /// capped at 60s so a transient spike cannot park clients for minutes.
+    pub fn retry_after_secs(&self) -> u64 {
+        let queued = self.queued.load(Ordering::Relaxed);
+        if queued == 0 {
+            return 1;
+        }
+        let completed = self.completed_total.load(Ordering::Relaxed);
+        let mean_tokens = if completed > 0 {
+            (self.tokens_generated.load(Ordering::Relaxed) as f64 / completed as f64).max(1.0)
+        } else {
+            32.0
+        };
+        let rate = self.tokens_per_sec();
+        if rate <= 0.0 {
+            return 1;
+        }
+        let secs = (queued as f64 * mean_tokens / rate).ceil();
+        (secs as u64).clamp(1, 60)
+    }
+
     /// Render the Prometheus text exposition for `GET /metrics`.
     pub fn render(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::with_capacity(4096);
-        let counters: [(&str, &str, usize); 19] = [
+        let counters: [(&str, &str, usize); 23] = [
             ("sinq_serve_live_slots", "gauge", self.live_slots.load(Ordering::Relaxed)),
             ("sinq_serve_slots", "gauge", self.slots.load(Ordering::Relaxed)),
             ("sinq_serve_queued_requests", "gauge", self.queued.load(Ordering::Relaxed)),
@@ -261,6 +300,18 @@ impl ServeMetrics {
                 self.tokens_generated.load(Ordering::Relaxed),
             ),
             ("sinq_serve_decode_steps_total", "counter", self.decode_steps.load(Ordering::Relaxed)),
+            ("sinq_serve_timeout_total", "counter", self.timeout_total.load(Ordering::Relaxed)),
+            (
+                "sinq_engine_panics_total",
+                "counter",
+                self.engine_panics_total.load(Ordering::Relaxed),
+            ),
+            (
+                "sinq_engine_restarts_total",
+                "counter",
+                self.engine_restarts_total.load(Ordering::Relaxed),
+            ),
+            ("sinq_engine_degraded", "gauge", self.engine_degraded.load(Ordering::Relaxed)),
         ];
         for (name, kind, value) in counters {
             let _ = writeln!(s, "# TYPE {name} {kind}");
@@ -416,6 +467,44 @@ mod tests {
         let big = RateRing::new(Instant::now());
         big.record(usize::MAX);
         assert_eq!(big.slots[0].load(Ordering::Relaxed) & 0xFFFF, 0xFFFF);
+    }
+
+    #[test]
+    fn supervisor_and_timeout_families_render() {
+        let m = ServeMetrics::new();
+        m.engine_panics_total.fetch_add(1, Ordering::Relaxed);
+        m.engine_restarts_total.fetch_add(1, Ordering::Relaxed);
+        m.timeout_total.fetch_add(2, Ordering::Relaxed);
+        m.engine_degraded.store(1, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("# TYPE sinq_engine_panics_total counter"), "{text}");
+        assert!(text.contains("sinq_engine_panics_total 1"), "{text}");
+        assert!(text.contains("# TYPE sinq_engine_restarts_total counter"), "{text}");
+        assert!(text.contains("sinq_engine_restarts_total 1"), "{text}");
+        assert!(text.contains("sinq_serve_timeout_total 2"), "{text}");
+        assert!(text.contains("sinq_engine_degraded 1"), "{text}");
+    }
+
+    #[test]
+    fn retry_after_floors_on_empty_queue_and_scales_with_backlog() {
+        let m = ServeMetrics::new();
+        // Empty queue: immediate retry hint regardless of rate history.
+        assert_eq!(m.retry_after_secs(), 1);
+        // Backlog but no throughput signal yet (cold server): stay at the
+        // floor instead of dividing by zero.
+        m.queued.store(8, Ordering::Relaxed);
+        assert_eq!(m.retry_after_secs(), 1);
+        // 4 queued × (64 tokens/req) at ≥100 tok/s → a small finite hint.
+        m.queued.store(4, Ordering::Relaxed);
+        m.completed_total.store(10, Ordering::Relaxed);
+        m.tokens_generated.store(640, Ordering::Relaxed);
+        m.record_step(Duration::from_micros(100), 1000);
+        let hint = m.retry_after_secs();
+        assert!((1..=60).contains(&hint), "hint {hint}");
+        // Saturated: a deep queue against a trickle of throughput clamps
+        // at the 60s ceiling rather than quoting minutes.
+        m.queued.store(10_000, Ordering::Relaxed);
+        assert_eq!(m.retry_after_secs(), 60);
     }
 
     #[test]

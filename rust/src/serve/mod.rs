@@ -22,7 +22,7 @@
 //!
 //! | endpoint | body | behaviour |
 //! |---|---|---|
-//! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | greedy continuation by default (bit-identical to the decoder); `temperature > 0` switches to seeded top-k sampling, reproducible across runs and batch placements; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document |
+//! | `POST /v1/generate` | `{"prompt": str, "max_new_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s, "deadline_ms": ms}` | greedy continuation by default (bit-identical to the decoder); `temperature > 0` switches to seeded top-k sampling, reproducible across runs and batch placements; `"stream": true` answers `text/event-stream` with one `token` event per decoded token and a terminal `done` event (finish reason + token counts); otherwise one JSON document. `deadline_ms` bounds the request's total wall-clock time (queue wait included, clamped by `--request-timeout-ms`); expired requests finish with `finish_reason: "timeout"` |
 //! | `POST /v1/completions` | `{"prompt": str, "max_tokens": n, "stream": bool, "temperature": t, "top_k": k, "seed": s}` | OpenAI-compatible completion over the same engine: a `text_completion` document with `choices` and `usage` (including `total_tokens`); `"stream": true` answers bare `data:` SSE chunks terminated by `data: [DONE]` |
 //! | `POST /v1/score` | `{"text": str}` or `{"tokens": [u8…]}` | teacher-forced scoring through the existing `BatchServer` dynamic batcher; returns per-position log-probs, mean NLL, and perplexity |
 //! | `GET /healthz` | — | liveness + engine identity/capacity + page-pool shape + model shape + build info + uptime |
@@ -69,10 +69,12 @@
 pub mod engine;
 pub mod http;
 pub mod metrics;
+pub mod supervisor;
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
 use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
@@ -87,6 +89,7 @@ use crate::util::json::Json;
 
 use engine::{EngineClient, GenEngine, StreamEvent, StreamHandle, SubmitError, SubmitErrorKind};
 use metrics::ServeMetrics;
+use supervisor::SupervisorCfg;
 
 /// Longest token sequence `/v1/score` accepts (the full forward is
 /// quadratic in sequence length; unbounded request bodies must not be able
@@ -141,6 +144,13 @@ pub struct ServeOpts {
     /// comparison into the drift sentinel (`/metrics`, `/v1/stats`). `0`
     /// (the default) disables the sentinel.
     pub drift_sample: usize,
+    /// `--request-timeout-ms`: server-wide deadline ceiling applied to
+    /// every generation request (clamps any per-request `deadline_ms`).
+    /// `0` (the default) imposes none.
+    pub request_timeout_ms: u64,
+    /// `--max-engine-restarts`: engine crashes tolerated before `/healthz`
+    /// flips to `degraded` and submissions answer `503`.
+    pub max_engine_restarts: usize,
 }
 
 impl Default for ServeOpts {
@@ -158,6 +168,8 @@ impl Default for ServeOpts {
             keepalive_idle_ms: 5_000,
             log_json: false,
             drift_sample: 0,
+            request_timeout_ms: 0,
+            max_engine_restarts: 3,
         }
     }
 }
@@ -281,15 +293,17 @@ impl Server {
             .with_max_context(opts.max_context)
             .with_page_size(opts.page_size)
             .with_pages(opts.kv_pages)
-            .with_drift_sample(opts.drift_sample);
+            .with_drift_sample(opts.drift_sample)
+            .with_request_timeout_ms(opts.request_timeout_ms);
         let slots = cfg.max_batch;
         let capacity = cfg.max_context;
-        let gen_engine = GenEngine::start_with_logging(
+        let gen_engine = GenEngine::start_supervised(
             be.clone(),
             cfg,
             opts.max_queue,
             metrics.clone(),
             opts.log_json,
+            SupervisorCfg::with_max_restarts(opts.max_engine_restarts),
         )?;
         let score = BatchServer::spawn(
             {
@@ -522,8 +536,14 @@ fn model_shape(state: &ConnState) -> Json {
 
 fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::io::Result<()> {
     let m = &state.metrics;
+    // `degraded`: the supervised engine exhausted its restart budget; the
+    // process is alive (scoring, metrics, traces still work) but every
+    // generation submit answers 503.
+    let status = if m.engine_degraded.load(Ordering::Relaxed) != 0 { "degraded" } else { "ok" };
     let body = Json::obj(vec![
-        ("status", Json::Str("ok".into())),
+        ("status", Json::Str(status.into())),
+        ("engine_restarts", Json::Num(m.engine_restarts_total.load(Ordering::Relaxed) as f64)),
+        ("engine_panics", Json::Num(m.engine_panics_total.load(Ordering::Relaxed) as f64)),
         ("backend", Json::Str("native".into())),
         ("simd", Json::Str(simd::kernel_name().into())),
         ("model", Json::Str(state.model.clone())),
@@ -650,6 +670,9 @@ struct GenerateBody {
     stream: bool,
     /// Seeded sampling parameters; `None` decodes greedily.
     sample: Option<SampleCfg>,
+    /// Per-request wall-clock budget in milliseconds (queue wait counts);
+    /// clamped server-side by `--request-timeout-ms`.
+    deadline_ms: Option<u64>,
 }
 
 fn parse_generate(body: &[u8], default_max_new: usize) -> Result<GenerateBody, String> {
@@ -710,6 +733,18 @@ fn parse_gen_fields(
             .ok_or("'seed' must be a non-negative integer")? as u64,
         None => 0,
     };
+    let deadline_ms = match json.get("deadline_ms") {
+        Some(v) => {
+            let ms = v
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .ok_or("'deadline_ms' must be a non-negative integer")? as u64;
+            // 0 means "no per-request deadline" (the server ceiling, if
+            // any, still applies).
+            (ms > 0).then_some(ms)
+        }
+        None => None,
+    };
     // Greedy unless a positive temperature opts into sampling (top_k/seed
     // without one are inert), so the default stays bit-identical.
     let sample = if temperature > 0.0 {
@@ -717,7 +752,7 @@ fn parse_gen_fields(
     } else {
         None
     };
-    Ok(GenerateBody { prompt, max_new, stream, sample })
+    Ok(GenerateBody { prompt, max_new, stream, sample, deadline_ms })
 }
 
 /// Returns whether the connection is still reusable afterwards: every
@@ -734,12 +769,12 @@ fn handle_generate(
         Ok(p) => p,
         Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
     };
-    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample) {
-        Err(e) => write_submit_error(w, &e, keep_alive).map(|_| keep_alive),
+    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample, parsed.deadline_ms) {
+        Err(e) => write_submit_error(w, state, &e, keep_alive).map(|_| keep_alive),
         Ok(handle) => {
             if parsed.stream {
                 let id = handle.id;
-                let streamed = stream_generate(w, handle);
+                let streamed = stream_generate(w, state, handle);
                 if streamed.is_err() {
                     // The SSE write failed: the client disconnected
                     // mid-stream. Evict the slot at the next step boundary
@@ -759,9 +794,13 @@ fn handle_generate(
 /// `503` + `Retry-After` — all in the unified error envelope, which (like
 /// the `X-Request-Id` header) carries the request id the engine minted
 /// before refusing, so rejected requests correlate with `--log-json` lines
-/// and flight-recorder events too.
+/// and flight-recorder events too. The `Retry-After` hint is computed from
+/// the live backlog and recent throughput ([`ServeMetrics::retry_after_secs`])
+/// rather than a constant, so a saturated server sheds load for as long as
+/// its queue actually needs.
 fn write_submit_error(
     w: &mut TcpStream,
+    state: &ConnState,
     e: &SubmitError,
     keep_alive: bool,
 ) -> std::io::Result<()> {
@@ -770,9 +809,10 @@ fn write_submit_error(
         SubmitErrorKind::Busy { .. } | SubmitErrorKind::Unavailable(_) => 503,
     };
     let rid = e.id.to_string();
+    let retry_after = state.metrics.retry_after_secs().to_string();
     let mut headers: Vec<(&str, &str)> = vec![("X-Request-Id", &rid)];
     if matches!(e.kind, SubmitErrorKind::Busy { .. }) {
-        headers.push(("Retry-After", "1"));
+        headers.push(("Retry-After", &retry_after));
     }
     http::write_response(
         w,
@@ -797,8 +837,8 @@ fn handle_completions(
         Ok(p) => p,
         Err(msg) => return http::write_error(w, 400, &msg, keep_alive).map(|_| keep_alive),
     };
-    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample) {
-        Err(e) => write_submit_error(w, &e, keep_alive).map(|_| keep_alive),
+    match state.engine.submit(parsed.prompt, parsed.max_new, parsed.sample, parsed.deadline_ms) {
+        Err(e) => write_submit_error(w, state, &e, keep_alive).map(|_| keep_alive),
         Ok(handle) => {
             if parsed.stream {
                 let id = handle.id;
@@ -873,7 +913,10 @@ fn completion_json(
 
 /// Streamed `/v1/completions`: bare `data:` chunks in the OpenAI wire
 /// format, one per decoded token, then a final chunk with `finish_reason`
-/// + `usage` and the literal `data: [DONE]` terminator.
+/// + `usage` and the literal `data: [DONE]` terminator. While the request
+/// sits queued (or decode stalls) past the keep-alive idle window, an SSE
+/// comment line (`: ping`) keeps intermediaries from timing the stream out
+/// — comments are written only between events, never inside one.
 fn stream_completions(
     w: &mut TcpStream,
     state: &ConnState,
@@ -882,23 +925,25 @@ fn stream_completions(
     let id = handle.id;
     http::write_sse_header_with(w, &[("X-Request-Id", &id.to_string())])?;
     let created = unix_now();
-    for ev in handle.rx.iter() {
-        match ev {
-            StreamEvent::Token(tok) => {
+    loop {
+        match handle.rx.recv_timeout(state.idle) {
+            Ok(StreamEvent::Token(tok)) => {
                 let piece = String::from_utf8_lossy(&[tok]).into_owned();
                 let chunk = completion_json(id, &state.model, created, &piece, None, None);
                 http::write_sse_data(w, &chunk.to_string_compact())?;
             }
-            StreamEvent::Done { finish_reason, usage } => {
+            Ok(StreamEvent::Done { finish_reason, usage }) => {
                 let last =
                     completion_json(id, &state.model, created, "", Some(finish_reason), Some(&usage));
                 http::write_sse_data(w, &last.to_string_compact())?;
                 return http::write_sse_data(w, "[DONE]");
             }
-            StreamEvent::Error(msg) => {
-                http::write_sse_data(w, &http::error_body(500, &msg))?;
+            Ok(StreamEvent::Failed { request_id, message }) => {
+                http::write_sse_data(w, &http::engine_error_body(&message, request_id))?;
                 return http::write_sse_data(w, "[DONE]");
             }
+            Err(RecvTimeoutError::Timeout) => http::write_sse_comment(w, "ping")?,
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     http::write_sse_data(w, &http::error_body(500, "stream interrupted"))?;
@@ -936,20 +981,48 @@ fn respond_completions(
                     keep_alive,
                 );
             }
-            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg, keep_alive),
+            StreamEvent::Failed { request_id, message } => {
+                return write_engine_error(w, request_id, &message, keep_alive)
+            }
         }
     }
     http::write_error(w, 500, "stream interrupted", keep_alive)
 }
 
+/// One `500` with the typed `engine_error` envelope and the request id in
+/// both the body and the `X-Request-Id` header — the non-stream rendering
+/// of a terminal [`StreamEvent::Failed`].
+fn write_engine_error(
+    w: &mut TcpStream,
+    request_id: usize,
+    message: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let rid = request_id.to_string();
+    http::write_response(
+        w,
+        500,
+        "application/json",
+        &[("X-Request-Id", &rid)],
+        http::engine_error_body(message, request_id).as_bytes(),
+        keep_alive,
+    )
+}
+
 /// Streamed generation: one SSE `token` event per decoded token as the
-/// engine emits it, then a terminal `done` (or `error`) event.
-fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<()> {
+/// engine emits it, then a terminal `done` (or `error`) event. Idle gaps
+/// longer than the keep-alive window emit `: ping` comment lines between
+/// events (never inside one), so proxies keep queued streams open.
+fn stream_generate(
+    w: &mut TcpStream,
+    state: &ConnState,
+    handle: StreamHandle,
+) -> std::io::Result<()> {
     http::write_sse_header_with(w, &[("X-Request-Id", &handle.id.to_string())])?;
     let mut text = Vec::new();
-    for ev in handle.rx.iter() {
-        match ev {
-            StreamEvent::Token(tok) => {
+    loop {
+        match handle.rx.recv_timeout(state.idle) {
+            Ok(StreamEvent::Token(tok)) => {
                 text.push(tok);
                 let data = Json::obj(vec![
                     ("index", Json::Num((text.len() - 1) as f64)),
@@ -957,7 +1030,7 @@ fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<(
                 ]);
                 http::write_sse_event(w, "token", &data.to_string_compact())?;
             }
-            StreamEvent::Done { finish_reason, usage } => {
+            Ok(StreamEvent::Done { finish_reason, usage }) => {
                 let data = Json::obj(vec![
                     ("finish_reason", Json::Str(finish_reason.into())),
                     ("prompt_tokens", Json::Num(usage.prompt_tokens as f64)),
@@ -967,10 +1040,16 @@ fn stream_generate(w: &mut TcpStream, handle: StreamHandle) -> std::io::Result<(
                 ]);
                 return http::write_sse_event(w, "done", &data.to_string_compact());
             }
-            StreamEvent::Error(msg) => {
-                let data = Json::obj(vec![("error", Json::Str(msg))]);
+            Ok(StreamEvent::Failed { request_id, message }) => {
+                let data = Json::obj(vec![
+                    ("error", Json::Str(message)),
+                    ("type", Json::Str("engine_error".into())),
+                    ("request_id", Json::Num(request_id as f64)),
+                ]);
                 return http::write_sse_event(w, "error", &data.to_string_compact());
             }
+            Err(RecvTimeoutError::Timeout) => http::write_sse_comment(w, "ping")?,
+            Err(RecvTimeoutError::Disconnected) => break,
         }
     }
     let data = Json::obj(vec![("error", Json::Str("stream interrupted".into()))]);
@@ -989,6 +1068,9 @@ fn respond_generate(
     for ev in handle.rx.iter() {
         match ev {
             StreamEvent::Token(tok) => tokens.push(tok),
+            StreamEvent::Failed { request_id, message } => {
+                return write_engine_error(w, request_id, &message, keep_alive)
+            }
             StreamEvent::Done { finish_reason, usage } => {
                 let body = Json::obj(vec![
                     ("text", Json::Str(String::from_utf8_lossy(&tokens).into_owned())),
@@ -1010,7 +1092,6 @@ fn respond_generate(
                     keep_alive,
                 );
             }
-            StreamEvent::Error(msg) => return http::write_error(w, 500, &msg, keep_alive),
         }
     }
     http::write_error(w, 500, "stream interrupted", keep_alive)
@@ -1136,6 +1217,12 @@ pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
             "drift sentinel enabled: recomputing 1 in {} decode steps on the scalar path \
              (see /metrics and /v1/stats)",
             opts.drift_sample
+        );
+    }
+    if crate::obs::fault::armed() {
+        println!(
+            "fault injection armed (SINQ_FAULTS): {}",
+            crate::obs::fault::list_armed().join(",")
         );
     }
     let server = Server::start_with_backend(be, opts)?;

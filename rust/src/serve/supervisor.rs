@@ -1,0 +1,206 @@
+//! Panic isolation for the generation engine: run [`engine_loop`] under
+//! `catch_unwind`, fail every in-flight request with a terminal
+//! [`StreamEvent::Failed`], rebuild the decoder, and restart with capped
+//! exponential backoff — so one poisoned request (or an injected fault from
+//! [`crate::obs::fault`]) cannot take the whole server down.
+//!
+//! ```text
+//!            ┌────────────────────────────────────────────┐
+//!            │ supervise (owns Receiver<EngineMsg>)       │
+//!            │   loop {                                   │
+//!            │     catch_unwind(engine_loop)  ──ok──▶ drain + exit
+//!            │        │ panic / step error               │
+//!            │        ▼                                   │
+//!            │     fail_all roster (Failed events)        │
+//!            │     journal Crash → backoff → Restart      │
+//!            │   } until restart budget exhausted         │
+//!            │        ▼                                   │
+//!            │   degraded: /healthz flips, submits → 503  │
+//!            └────────────────────────────────────────────┘
+//! ```
+//!
+//! The supervisor — not the engine — owns the `EngineMsg` receiver, so the
+//! submission channel survives a crash: requests accepted during the
+//! backoff window queue up and are admitted by the next incarnation.
+//! Restart state (the roster of in-flight channels, the backlog gauge) lives
+//! in [`Shared`], outside the unwind boundary; the [`BatchDecoder`] is
+//! rebuilt from the shared backend each incarnation, never repaired.
+//!
+//! [`BatchDecoder`]: crate::backend::batch::BatchDecoder
+//! [`StreamEvent::Failed`]: crate::serve::engine::StreamEvent
+
+use std::any::Any;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::backend::{EngineConfig, NativeBackend};
+use crate::obs::journal::{self, EventKind};
+use crate::serve::engine::{engine_loop, EngineMsg, ExitKind, Shared};
+
+/// Restart policy for the supervised engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupervisorCfg {
+    /// Crashes tolerated before the engine goes degraded
+    /// (`--max-engine-restarts`); the N+1th crash is terminal.
+    pub max_restarts: usize,
+    /// First backoff delay; doubles per consecutive restart.
+    pub backoff_base_ms: u64,
+    /// Backoff ceiling.
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for SupervisorCfg {
+    fn default() -> SupervisorCfg {
+        SupervisorCfg { max_restarts: 3, backoff_base_ms: 100, backoff_cap_ms: 5_000 }
+    }
+}
+
+impl SupervisorCfg {
+    /// `--max-engine-restarts N` with the default backoff curve.
+    pub fn with_max_restarts(max_restarts: usize) -> SupervisorCfg {
+        SupervisorCfg { max_restarts, ..SupervisorCfg::default() }
+    }
+}
+
+/// Backoff before restart `attempt` (1-based): `base × 2^(attempt-1)`,
+/// capped. Deterministic — no jitter — so tests and the chaos harness can
+/// reason about exact recovery timing.
+pub fn backoff_delay(cfg: &SupervisorCfg, attempt: usize) -> Duration {
+    let shift = (attempt.max(1) - 1).min(20) as u32;
+    let ms = cfg.backoff_base_ms.saturating_mul(1u64 << shift);
+    Duration::from_millis(ms.min(cfg.backoff_cap_ms))
+}
+
+/// Best-effort text out of a panic payload (`panic!("...")` carries `&str`
+/// or `String`; anything else is opaque).
+pub fn panic_message(payload: &(dyn Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
+/// Run the engine until graceful shutdown or an exhausted restart budget.
+/// Every incarnation of [`engine_loop`] runs under `catch_unwind`; a panic
+/// or decoder error fails all in-flight requests (terminal `Failed` on each
+/// channel, exactly once via the roster) and, budget permitting, restarts a
+/// fresh decoder after backoff.
+pub(crate) fn supervise(
+    be: &NativeBackend,
+    cfg: &EngineConfig,
+    sup: &SupervisorCfg,
+    rx: &Receiver<EngineMsg>,
+    shared: &Arc<Shared>,
+) {
+    let metrics = shared.metrics.clone();
+    let mut restarts = 0usize;
+    let mut degraded = false;
+    loop {
+        let failure = match catch_unwind(AssertUnwindSafe(|| engine_loop(be, cfg, rx, shared))) {
+            Ok(ExitKind::Shutdown) => break,
+            Ok(ExitKind::Failed(msg)) => msg,
+            Err(payload) => {
+                metrics.engine_panics_total.fetch_add(1, Ordering::Relaxed);
+                format!("engine panicked: {}", panic_message(payload.as_ref()))
+            }
+        };
+        // Crash path. Discard queued messages first so the roster drain
+        // below is the single source of truth for in-flight channels (a
+        // queued Submission's roster entry was registered before the send).
+        discard_queued(rx);
+        let failed =
+            shared.fail_all(&format!("engine crashed: {failure}; request aborted"));
+        metrics.live_slots.store(0, Ordering::Relaxed);
+        journal::record(EventKind::Crash, 0, failed as u64);
+        eprintln!("engine crashed: {failure} ({failed} in-flight requests failed)");
+        if shared.is_shutting_down() {
+            break;
+        }
+        if restarts >= sup.max_restarts {
+            degraded = true;
+            metrics.engine_degraded.store(1, Ordering::Relaxed);
+            eprintln!(
+                "engine degraded: restart budget exhausted ({} restarts); serving 503",
+                sup.max_restarts
+            );
+            break;
+        }
+        restarts += 1;
+        metrics.engine_restarts_total.fetch_add(1, Ordering::Relaxed);
+        journal::record(EventKind::Restart, 0, restarts as u64);
+        let delay = backoff_delay(sup, restarts);
+        eprintln!(
+            "engine restarting (attempt {restarts}/{}) after {}ms backoff",
+            sup.max_restarts,
+            delay.as_millis()
+        );
+        thread::sleep(delay);
+    }
+    // Terminal: no further incarnation will run. Refuse new submissions,
+    // then fail anything that raced past the flags (the submit path
+    // re-checks `dead` after registering, so this drain cannot strand a
+    // channel).
+    shared.set_dead();
+    metrics.live_slots.store(0, Ordering::Relaxed);
+    discard_queued(rx);
+    let msg = if degraded {
+        "generation engine degraded: restart budget exhausted"
+    } else {
+        "server shut down before this request was decoded"
+    };
+    shared.fail_all(msg);
+}
+
+/// Drop every queued message. Submissions are NOT failed here — their
+/// roster entries are, by the caller, via [`Shared::fail_all`]; cancels for
+/// them are moot.
+fn discard_queued(rx: &Receiver<EngineMsg>) {
+    while rx.try_recv().is_ok() {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let cfg = SupervisorCfg { max_restarts: 5, backoff_base_ms: 100, backoff_cap_ms: 900 };
+        assert_eq!(backoff_delay(&cfg, 1), Duration::from_millis(100));
+        assert_eq!(backoff_delay(&cfg, 2), Duration::from_millis(200));
+        assert_eq!(backoff_delay(&cfg, 3), Duration::from_millis(400));
+        assert_eq!(backoff_delay(&cfg, 4), Duration::from_millis(800));
+        assert_eq!(backoff_delay(&cfg, 5), Duration::from_millis(900), "cap binds");
+        assert_eq!(backoff_delay(&cfg, 0), Duration::from_millis(100), "attempt clamps to 1");
+        // Huge attempts must not overflow the shift.
+        assert_eq!(backoff_delay(&cfg, 500), Duration::from_millis(900));
+    }
+
+    #[test]
+    fn panic_payloads_render_as_text() {
+        let p: Box<dyn Any + Send> = Box::new("static str payload");
+        assert_eq!(panic_message(p.as_ref()), "static str payload");
+        let p: Box<dyn Any + Send> = Box::new(String::from("owned payload"));
+        assert_eq!(panic_message(p.as_ref()), "owned payload");
+        let p: Box<dyn Any + Send> = Box::new(42usize);
+        assert_eq!(panic_message(p.as_ref()), "opaque panic payload");
+    }
+
+    #[test]
+    fn default_policy_matches_cli_defaults() {
+        let cfg = SupervisorCfg::default();
+        assert_eq!(cfg.max_restarts, 3);
+        assert_eq!(SupervisorCfg::with_max_restarts(0).max_restarts, 0);
+        assert_eq!(
+            SupervisorCfg::with_max_restarts(7).backoff_base_ms,
+            cfg.backoff_base_ms,
+            "custom budget keeps the default backoff curve"
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! Chaos tests for the supervised engine: arm real production fault sites
+//! via `sinq::obs::fault` and hold the supervisor to its contract — every
+//! in-flight request gets exactly one terminal `Failed`, the engine
+//! restarts on a fresh decoder, and post-restart decode is bit-identical
+//! to the unsupervised backend.
+//!
+//! The fault registry is process-global, so every test here serializes on
+//! one mutex and disarms before returning. Sites armed in this binary are
+//! never armed by the lib unit tests (which only use `Site::Test`), so the
+//! two binaries cannot perturb each other.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use sinq::backend::{self, BackendKind, BackendSpec, EngineConfig, NativeBackend};
+use sinq::obs::fault;
+use sinq::serve::engine::{GenEngine, StreamEvent, StreamHandle, SubmitError, SubmitErrorKind};
+use sinq::serve::metrics::ServeMetrics;
+use sinq::serve::supervisor::SupervisorCfg;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests that touch the global fault registry; a previous test
+/// that panicked mid-fault poisons the lock, which is fine — the registry
+/// is re-disarmed on entry.
+fn registry_guard() -> MutexGuard<'static, ()> {
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm_all();
+    guard
+}
+
+fn pico_arc() -> Arc<NativeBackend> {
+    let spec = BackendSpec::new(BackendKind::Native, "/nonexistent", "pico");
+    Arc::new(backend::build_native(&spec).expect("pico backend"))
+}
+
+/// Fast-backoff supervisor so crash-recovery tests finish in milliseconds.
+fn fast_sup(max_restarts: usize) -> SupervisorCfg {
+    SupervisorCfg { max_restarts, backoff_base_ms: 1, backoff_cap_ms: 4 }
+}
+
+fn engine_cfg() -> EngineConfig {
+    EngineConfig::new().with_max_batch(2).with_max_context(128)
+}
+
+/// Consume a stream to the very end, splitting tokens from terminals.
+fn drain_all(h: StreamHandle) -> (Vec<u8>, Vec<StreamEvent>) {
+    let mut tokens = Vec::new();
+    let mut terminals = Vec::new();
+    for ev in h.rx.iter() {
+        match ev {
+            StreamEvent::Token(t) => tokens.push(t),
+            terminal => terminals.push(terminal),
+        }
+    }
+    (tokens, terminals)
+}
+
+#[test]
+fn decode_panic_fails_inflight_once_then_engine_recovers_bit_identically() {
+    let _g = registry_guard();
+    let be = pico_arc();
+    let expected = be.generate(b"after the crash", 12).expect("reference tokens");
+    let metrics = Arc::new(ServeMetrics::new());
+    let eng = GenEngine::start_supervised(
+        be,
+        engine_cfg(),
+        8,
+        metrics.clone(),
+        false,
+        fast_sup(3),
+    )
+    .expect("engine start");
+    let client = eng.client();
+
+    // `@once`: the first decode step panics; the hit counter persists
+    // across the restart so the next incarnation decodes cleanly.
+    fault::arm_str("decode_step:panic@once").unwrap();
+
+    // The panic unwinds out of `BatchDecoder::step` with this request
+    // admitted, so the supervisor's roster drain must deliver exactly one
+    // terminal `Failed` carrying the request's own id.
+    let doomed = client.submit(b"doomed request".to_vec(), 6, None, None).expect("submit");
+    let doomed_id = doomed.id;
+    let (tokens, terminals) = drain_all(doomed);
+    assert!(tokens.is_empty(), "no token precedes the first (panicking) step");
+    match &terminals[..] {
+        [StreamEvent::Failed { request_id, message }] => {
+            assert_eq!(*request_id, doomed_id, "Failed must carry the submission's id");
+            assert!(message.contains("engine crashed"), "{message}");
+            assert!(message.contains("injected fault: decode_step panic"), "{message}");
+        }
+        other => panic!("expected exactly one Failed, got {other:?}"),
+    }
+    assert_eq!(fault::fired(fault::Site::DecodeStep), 1);
+
+    // Recovery: the next submission decodes on a rebuilt decoder and the
+    // tokens are bit-identical to the unsupervised backend path.
+    let handle = client.submit(b"after the crash".to_vec(), 12, None, None).expect("resubmit");
+    let (tokens, terminals) = drain_all(handle);
+    assert_eq!(tokens, expected, "post-restart decode diverged from backend::generate");
+    assert!(
+        matches!(&terminals[..], [StreamEvent::Done { finish_reason: "length", .. }]),
+        "{terminals:?}"
+    );
+
+    eng.shutdown();
+    assert_eq!(metrics.engine_panics_total.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.engine_restarts_total.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.engine_degraded.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.queued.load(Ordering::Relaxed), 0, "crash drain must release backlog");
+    fault::disarm_all();
+}
+
+#[test]
+fn exhausted_restart_budget_degrades_and_refuses_submissions() {
+    let _g = registry_guard();
+    let be = pico_arc();
+    let metrics = Arc::new(ServeMetrics::new());
+    // Zero restart budget: the very first crash is terminal.
+    let eng = GenEngine::start_supervised(
+        be,
+        engine_cfg(),
+        8,
+        metrics.clone(),
+        false,
+        fast_sup(0),
+    )
+    .expect("engine start");
+    let client = eng.client();
+    fault::arm_str("decode_step:panic").unwrap();
+
+    let doomed = client.submit(b"no budget".to_vec(), 6, None, None).expect("submit");
+    let (_, terminals) = drain_all(doomed);
+    assert!(
+        matches!(&terminals[..], [StreamEvent::Failed { .. }]),
+        "crash must fail the in-flight request: {terminals:?}"
+    );
+
+    // The supervisor flips degraded just after draining the roster; give
+    // it a moment, then every new submission must answer Unavailable with
+    // the degraded message (the HTTP layer maps this to 503).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match client.submit(b"too late".to_vec(), 2, None, None) {
+            Err(SubmitError { kind: SubmitErrorKind::Unavailable(msg), .. })
+                if msg.contains("degraded") =>
+            {
+                break;
+            }
+            Err(SubmitError { kind: SubmitErrorKind::Unavailable(_), .. }) => {
+                // Raced the drain: dead flag set, degraded store pending.
+            }
+            Ok(h) => {
+                // Accepted in the window before the supervisor exited; it
+                // must still get its terminal Failed, never a silent drop.
+                let (_, t) = drain_all(h);
+                assert!(matches!(&t[..], [StreamEvent::Failed { .. }]), "{t:?}");
+            }
+            Err(other) => panic!("expected Unavailable, got {other:?}"),
+        }
+        assert!(Instant::now() < deadline, "engine never reported degraded");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert_eq!(metrics.engine_degraded.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.engine_restarts_total.load(Ordering::Relaxed), 0, "budget was zero");
+    assert_eq!(metrics.engine_panics_total.load(Ordering::Relaxed), 1);
+    eng.shutdown();
+    fault::disarm_all();
+}
+
+#[test]
+fn submit_and_admit_error_actions_take_the_non_crash_paths() {
+    let _g = registry_guard();
+    let be = pico_arc();
+    let expected = be.generate(b"errors are soft", 5).expect("reference tokens");
+    let metrics = Arc::new(ServeMetrics::new());
+    let eng = GenEngine::start_supervised(
+        be,
+        engine_cfg(),
+        8,
+        metrics.clone(),
+        false,
+        fast_sup(3),
+    )
+    .expect("engine start");
+    let client = eng.client();
+
+    // `submit:error@once` is rejected synchronously as Unavailable — the
+    // request never reaches the queue, so nothing needs a terminal event.
+    fault::arm_str("submit:error@once").unwrap();
+    match client.submit(b"refused at the door".to_vec(), 3, None, None) {
+        Err(SubmitError { kind: SubmitErrorKind::Unavailable(msg), .. }) => {
+            assert!(msg.contains("injected fault: submit error"), "{msg}");
+        }
+        other => panic!("expected Unavailable, got {other:?}"),
+    }
+
+    // `admit:error@once` fires on the engine thread after acceptance: the
+    // accepted request must get a terminal Failed (exactly once), and the
+    // engine must keep running — no panic, no restart.
+    fault::arm_str("admit:error@once").unwrap();
+    let h = client.submit(b"refused at admission".to_vec(), 3, None, None).expect("submit");
+    let (tokens, terminals) = drain_all(h);
+    assert!(tokens.is_empty());
+    match &terminals[..] {
+        [StreamEvent::Failed { message, .. }] => {
+            assert!(message.contains("admission failed"), "{message}");
+            assert!(message.contains("injected fault: admit error"), "{message}");
+        }
+        other => panic!("expected exactly one Failed, got {other:?}"),
+    }
+
+    // Both faults were @once and are spent: the engine decodes normally.
+    let h = client.submit(b"errors are soft".to_vec(), 5, None, None).expect("submit");
+    let (tokens, terminals) = drain_all(h);
+    assert_eq!(tokens, expected);
+    assert!(matches!(&terminals[..], [StreamEvent::Done { .. }]));
+
+    eng.shutdown();
+    assert_eq!(metrics.engine_panics_total.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.engine_restarts_total.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.queued.load(Ordering::Relaxed), 0);
+    assert_eq!(metrics.completed_total.load(Ordering::Relaxed), 1);
+    fault::disarm_all();
+}

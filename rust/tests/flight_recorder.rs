@@ -182,6 +182,81 @@ fn chrome_trace_of_preempted_run_parses_with_lifecycle_slices() {
 }
 
 // =====================================================================
+// 2b. Preemption storm: repeated preempt/resume cycles stay exact
+// =====================================================================
+
+#[test]
+fn preemption_storm_keeps_tokens_exact_and_lifecycles_ordered() {
+    let _g = lock();
+    let nb = pico_backend(76);
+    // Four page-hungry requests through two slots and an 8-page pool:
+    // every overlapping pair runs the pool dry, so preemption recurs as
+    // each completion admits the next waiter — a storm, not a one-off.
+    let reqs: [(&[u8], usize); 4] = [
+        (b"storm request aa" as &[u8], 9),
+        (b"storm request bb!", 9),
+        (b"storm request cc!!", 9),
+        (b"storm request dd", 9),
+    ];
+    let want: Vec<Vec<u8>> = reqs.iter().map(|(p, n)| solo_tokens(&nb, p, *n)).collect();
+
+    journal::reset();
+    journal::set_enabled(true);
+    let mut dec = BatchDecoder::with_config(&nb, &preempting_config()).unwrap();
+    for (i, (p, n)) in reqs.iter().enumerate() {
+        dec.submit(i, p, *n).unwrap();
+    }
+    let outs = dec.run().unwrap();
+    journal::set_enabled(false);
+    let events = journal::snapshot(usize::MAX);
+
+    // Token-exact completion for every request despite the churn.
+    assert_eq!(outs.len(), reqs.len(), "the storm must re-queue, never drop");
+    for (i, out) in outs.iter().enumerate() {
+        assert_eq!(out.tokens, want[i], "request {i} diverged in the preemption storm");
+    }
+    let stats = dec.stats();
+    assert_eq!(stats.completed, reqs.len());
+    assert!(stats.preempted >= 2, "expected repeated preemptions, got {}", stats.preempted);
+
+    // Journal invariants across the whole storm: preempts and resumes
+    // pair up globally, and per request the lifecycle stays ordered —
+    // admit before the first preempt, each preempt answered by a resume,
+    // and a final Complete after the last resume.
+    let count = |k: EventKind| events.iter().filter(|e| e.kind == k).count();
+    assert_eq!(count(EventKind::Preempt), count(EventKind::Resume));
+    assert_eq!(count(EventKind::Complete), reqs.len());
+    for id in 0..reqs.len() {
+        let arc: Vec<EventKind> = kinds_for(&events, id)
+            .into_iter()
+            .filter(|k| !matches!(k, EventKind::PageClaim | EventKind::PrefixHit))
+            .collect();
+        assert_eq!(arc.first(), Some(&EventKind::Enqueue), "request {id}: {arc:?}");
+        assert_eq!(arc.last(), Some(&EventKind::Complete), "request {id}: {arc:?}");
+        let mut depth = 0i64; // +1 preempt, -1 resume; never negative, ends 0
+        let mut admitted = false;
+        for k in &arc {
+            match k {
+                EventKind::Admit => admitted = true,
+                EventKind::Preempt => {
+                    assert!(admitted, "request {id} preempted before admission: {arc:?}");
+                    depth += 1;
+                    assert_eq!(depth, 1, "request {id} preempted twice in a row: {arc:?}");
+                }
+                EventKind::Resume => {
+                    depth -= 1;
+                    assert_eq!(depth, 0, "request {id} resumed while running: {arc:?}");
+                }
+                EventKind::Complete => {
+                    assert_eq!(depth, 0, "request {id} completed while preempted: {arc:?}");
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+// =====================================================================
 // 3. Drift sentinel: samples accumulate, decode stays bit-identical
 // =====================================================================
 

@@ -317,7 +317,15 @@ fn backpressure_503_when_max_queue_saturated() {
     // Request C: the backlog (B) sits at --max-queue = 1 → 503 + Retry-After.
     let res = request(&addr, "POST", "/v1/generate", &generate_body("cccc", 5, false));
     assert_eq!(res.status, 503, "{}", String::from_utf8_lossy(&res.body));
-    assert_eq!(res.header("retry-after"), Some("1"));
+    let retry_after: u64 = res
+        .header("retry-after")
+        .expect("503 must carry Retry-After")
+        .parse()
+        .expect("Retry-After must be an integer number of seconds");
+    assert!(
+        (1..=60).contains(&retry_after),
+        "Retry-After must sit in the documented 1..=60s band, got {retry_after}"
+    );
     let err = error_message(&res);
     assert!(err.contains("queue"), "{err}");
     assert_eq!(error_type(&res), "overloaded_error");
@@ -332,6 +340,108 @@ fn backpressure_503_when_max_queue_saturated() {
     let b_events = parse_sse_events(&b_rest);
     assert_eq!(sse_tokens(&b_events).len(), 5, "queued request must still complete");
     assert!(b_events.iter().any(|(name, _)| name == "done"));
+    server.shutdown();
+}
+
+// =====================================================================
+// SSE keep-alive heartbeats while a stream sits queued behind a hog
+// =====================================================================
+
+#[test]
+fn queued_stream_receives_ping_heartbeats_without_corrupting_frames() {
+    let opts = ServeOpts {
+        max_batch: 1,       // one KV slot: the heartbeat request must queue
+        max_queue: 4,
+        max_context: 4096,
+        keepalive_idle_ms: 5, // force pings while the backlog waits
+        ..ServeOpts::default()
+    };
+    let spec = pico_spec(None);
+    let reference = backend::build_native(&spec).expect("reference backend");
+    let expected = reference.generate(b"heartbeat", 3).expect("reference tokens");
+    let server = start_server(&spec, &opts);
+    let addr = server.addr.to_string();
+
+    // Hog: a long streamed generation pinning the only slot.
+    let a = TcpStream::connect(&addr).expect("connect hog");
+    let mut a_writer = a.try_clone().unwrap();
+    let body = generate_body("aaaa", 4000, true);
+    write!(
+        a_writer,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut a_reader = BufReader::new(a);
+    let mut line = String::new();
+    a_reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 200"), "{line}");
+    loop {
+        line.clear();
+        a_reader.read_line(&mut line).unwrap();
+        if line.starts_with("event: token") {
+            break;
+        }
+    }
+
+    // Heartbeat request: queued behind the hog, its SSE stream idles past
+    // the 5ms keep-alive window, so the handler must emit `: ping`
+    // comment frames until tokens start flowing.
+    let b = TcpStream::connect(&addr).expect("connect queued");
+    let mut b_writer = b.try_clone().unwrap();
+    let body = generate_body("heartbeat", 3, true);
+    write!(
+        b_writer,
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut b_reader = BufReader::new(b);
+    let mut line = String::new();
+    b_reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("HTTP/1.1 200"), "queued stream must be accepted: {line}");
+    loop {
+        line.clear();
+        b_reader.read_line(&mut line).unwrap();
+        assert!(line.ends_with("\n"), "headers must not truncate");
+        if line == "\r\n" {
+            break; // end of response headers; SSE frames follow
+        }
+    }
+    let mut raw = Vec::new();
+    b_reader.read_to_end(&mut raw).unwrap();
+    let text = std::str::from_utf8(&raw).expect("utf8 SSE body");
+
+    // Heartbeats arrived, and every frame is either entirely a comment
+    // (`: ping`) or entirely an event — a ping must never split a token
+    // frame's `event:`/`data:` lines.
+    let chunks: Vec<&str> =
+        text.split("\n\n").filter(|c| !c.trim().is_empty()).collect();
+    let pings = chunks.iter().filter(|c| c.lines().all(|l| l.starts_with(':'))).count();
+    assert!(pings >= 1, "expected at least one `: ping` frame, body:\n{text}");
+    for chunk in &chunks {
+        let comment_lines = chunk.lines().filter(|l| l.starts_with(':')).count();
+        assert!(
+            comment_lines == 0 || comment_lines == chunk.lines().count(),
+            "heartbeat interleaved inside an event frame:\n{chunk}"
+        );
+    }
+
+    // Stripping comment frames leaves a well-formed, token-exact stream.
+    let event_body: String = chunks
+        .iter()
+        .filter(|c| !c.lines().all(|l| l.starts_with(':')))
+        .map(|c| format!("{c}\n\n"))
+        .collect();
+    let events = parse_sse_events(event_body.as_bytes());
+    assert_eq!(sse_tokens(&events), expected, "heartbeats must not perturb tokens");
+    let (last_name, last_data) = events.last().expect("terminal event");
+    assert_eq!(last_name, "done");
+    assert_eq!(last_data.get("finish_reason").and_then(Json::as_str), Some("length"));
+
+    // Drain the hog so shutdown is clean.
+    let mut rest = Vec::new();
+    a_reader.read_to_end(&mut rest).unwrap();
     server.shutdown();
 }
 

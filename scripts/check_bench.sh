@@ -10,9 +10,12 @@
 # with `kv_reduction` ≥ 3x), a `profiling_overhead_pct` ≤ 3 (the
 # per-phase decode timers must stay near-free), a `drift_overhead_pct`
 # ≤ 3 with `drift_samples` > 0 (the numerical drift sentinel at its
-# 1-in-16 default must be near-free), and `journal_tokens_identical`
-# (the flight-recorder journal must not perturb decode); the serve
-# report needs
+# 1-in-16 default must be near-free), `journal_tokens_identical`
+# (the flight-recorder journal must not perturb decode), and
+# `supervised_tokens_identical` with `supervised_overhead_pct` ≤ 3 (the
+# supervised engine — panic isolation + terminal roster + deadline
+# checks — must be bit-exact and near-free with faults disarmed); the
+# serve report needs
 # per-concurrency requests/sec plus a median TTFT, and the shared-prefix
 # fields (`prefix_tokens`, `ttft_cold_prefix_ms`, `ttft_hit_prefix_ms`).
 # Fails loudly so a silently-broken bench cannot upload garbage artifacts.
@@ -96,6 +99,16 @@ if bench == "decode":
     assert doc.get("drift_samples", 0) > 0, f"{path}: drift sentinel recorded no samples"
     assert doc.get("journal_tokens_identical") is True, (
         f"{path}: decode tokens changed with the event journal on"
+    )
+    assert doc.get("supervised_tokens_identical") is True, (
+        f"{path}: decode tokens changed under the supervised engine"
+    )
+    supervised = doc.get("supervised_overhead_pct")
+    assert isinstance(supervised, (int, float)) and math.isfinite(supervised), (
+        f"{path}: missing 'supervised_overhead_pct'"
+    )
+    assert supervised <= 3.0, (
+        f"{path}: engine supervision costs {supervised:.2f}% throughput (gate: ≤ 3%)"
     )
     want = os.environ.get("CHECK_BENCH_SIMD_SPEEDUP", "")
     if want and kernel != "scalar":
