@@ -175,6 +175,47 @@ fn main() {
         ]));
     }
 
+    // Thread scaling: decode batch 16 with the engine pinned to one worker
+    // and again at the resolved auto width. The persistent pool partitions
+    // fused-matmul row tiles and attention heads, never the within-row
+    // summation order, so tokens must be bit-identical at every width —
+    // asserted here before the ratio is recorded. Under a `SINQ_THREADS`
+    // CI leg the env override pins both runs to the same width, and on a
+    // single-core runner auto == 1, so the ratio degenerates to ~1.0 in
+    // both cases (which is why the check_bench gate is opt-in).
+    let threads_auto = EngineConfig::new().effective_threads();
+    let run_threads = |threads: usize| {
+        let cfg = EngineConfig::new()
+            .with_max_batch(16)
+            .with_max_context(capacity)
+            .with_threads(threads);
+        let mut best = f64::INFINITY;
+        let mut tokens = 0usize;
+        let mut outs: Vec<Vec<u8>> = Vec::new();
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            let mut dec = BatchDecoder::with_config(&be, &cfg).expect("batch decoder");
+            for (i, (prompt, g)) in reqs.iter().enumerate() {
+                dec.submit(i, prompt, *g).expect("submit");
+            }
+            let got = dec.run().expect("decode");
+            best = best.min(t0.elapsed().as_secs_f64());
+            tokens = dec.stats().tokens;
+            outs = got.into_iter().map(|o| o.tokens).collect();
+        }
+        (best, tokens, outs)
+    };
+    let (t1_secs, scale_tokens, toks_t1) = run_threads(1);
+    let (tn_secs, _, toks_tn) = run_threads(0);
+    assert_eq!(toks_t1, toks_tn, "thread count changed decoded tokens");
+    let tokens_per_sec_t1 = scale_tokens as f64 / t1_secs;
+    let tokens_per_sec_tn = scale_tokens as f64 / tn_secs;
+    let thread_scaling = tokens_per_sec_tn / tokens_per_sec_t1;
+    println!(
+        "threads: 1 worker → {tokens_per_sec_t1:.0} tok/s, {threads_auto} (auto) → \
+         {tokens_per_sec_tn:.0} tok/s → {thread_scaling:.2}x scaling; tokens bit-identical"
+    );
+
     // Profiling overhead: the per-phase timers in the decode core must be
     // ~free when disabled (one branch per phase) and cheap enough when
     // enabled that opting into SINQ_PROFILE does not distort what it
@@ -336,6 +377,10 @@ fn main() {
         ("prompt_len", Json::Num(prompt_len as f64)),
         ("gen_tokens", Json::Num(gen as f64)),
         ("quick", Json::Bool(quick)),
+        ("threads", Json::Num(threads_auto as f64)),
+        ("tokens_per_sec_t1", Json::Num(tokens_per_sec_t1)),
+        ("tokens_per_sec_tN", Json::Num(tokens_per_sec_tn)),
+        ("thread_scaling", Json::Num(thread_scaling)),
         ("kv_bytes_per_slot_f32", Json::Num(kv_bytes_f32 as f64)),
         ("kv_bytes_per_slot_q8", Json::Num(kv_bytes_q8 as f64)),
         ("kv_reduction", Json::Num(kv_reduction)),

@@ -237,8 +237,9 @@ impl KvArena for ReadOnlyKv<'_> {
         pos: usize,
         ctx: &mut [f32],
         s: &mut AttnScratch,
+        threads: usize,
     ) {
-        self.0.attend(slot, layer, q, pos, ctx, s);
+        self.0.attend(slot, layer, q, pos, ctx, s, threads);
     }
 }
 
@@ -263,7 +264,15 @@ impl<'a> BatchDecoder<'a> {
         cfg: &EngineConfig,
     ) -> anyhow::Result<BatchDecoder<'a>> {
         anyhow::ensure!(cfg.max_batch >= 1, "batch decoder needs at least one slot");
-        let model = ResolvedModel::new(be)?;
+        let mut model = ResolvedModel::new(be)?;
+        if cfg.threads > 0 {
+            // An explicit `--threads` on the engine config overrides the
+            // backend's resolved count for this decoder's tile workers.
+            model.threads = cfg.effective_threads();
+        }
+        // Size the persistent worker pool at engine start (first sizing
+        // wins; later decoders just reuse it).
+        crate::util::threadpool::init_global(model.threads);
         let cap = cfg.max_context.max(1);
         let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
         let kv = PagedKv::new(

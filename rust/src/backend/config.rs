@@ -40,6 +40,11 @@ pub struct EngineConfig {
     /// clamped to this, whether or not it asked for its own `deadline_ms`.
     /// `0` (the default) means no server-imposed deadline.
     pub request_timeout_ms: u64,
+    /// Worker-thread count for the persistent pool (`--threads`). `0`
+    /// (the default) auto-sizes to every available core; the
+    /// `SINQ_THREADS` environment variable overrides either setting (see
+    /// [`crate::util::threadpool::resolve_threads`]).
+    pub threads: usize,
 }
 
 /// Default serving concurrency: scoring batch size and generation slots.
@@ -59,6 +64,7 @@ impl Default for EngineConfig {
             sample: None,
             drift_sample: 0,
             request_timeout_ms: 0,
+            threads: 0,
         }
     }
 }
@@ -112,6 +118,18 @@ impl EngineConfig {
     pub fn with_request_timeout_ms(mut self, request_timeout_ms: u64) -> EngineConfig {
         self.request_timeout_ms = request_timeout_ms;
         self
+    }
+
+    /// Worker-thread count for the persistent pool (`0` = auto).
+    pub fn with_threads(mut self, threads: usize) -> EngineConfig {
+        self.threads = threads;
+        self
+    }
+
+    /// The thread count decode actually runs with: `threads` resolved
+    /// through the `SINQ_THREADS` override and the all-cores default.
+    pub fn effective_threads(&self) -> usize {
+        crate::util::threadpool::resolve_threads(self.threads)
     }
 
     /// A request's effective deadline budget in milliseconds: its own
@@ -179,6 +197,21 @@ mod tests {
         assert_eq!(EngineConfig::new().drift_sample, 0);
         let cfg = EngineConfig::new().with_drift_sample(16);
         assert_eq!(cfg.drift_sample, 16);
+    }
+
+    #[test]
+    fn threads_default_to_auto_and_resolve_through_env() {
+        let cfg = EngineConfig::new();
+        assert_eq!(cfg.threads, 0, "default is auto");
+        assert!(cfg.effective_threads() >= 1);
+        let two = EngineConfig::new().with_threads(2);
+        assert_eq!(two.threads, 2);
+        // Under a CI `SINQ_THREADS` matrix leg the env override wins;
+        // otherwise the explicit request is the effective count.
+        match std::env::var("SINQ_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(n) if n > 0 => assert_eq!(two.effective_threads(), n),
+            _ => assert_eq!(two.effective_threads(), 2),
+        }
     }
 
     #[test]

@@ -49,6 +49,12 @@ use crate::model::ModelConfig;
 use crate::obs::profiler::{self, Phase};
 use crate::tensor::matrix::dot;
 use crate::tensor::Matrix;
+use crate::util::threadpool;
+
+/// Below this many attention multiply-adds (`heads × kv_positions ×
+/// head_dim`) an attend stays single-threaded — even a persistent-pool
+/// hand-off costs more than the whole reduction at small contexts.
+pub(crate) const ATTEND_PARALLEL_THRESHOLD: usize = 1 << 15;
 
 // =====================================================================
 // Shared block math
@@ -215,8 +221,10 @@ pub trait LinearOp {
     fn matvec(&self, x: &[f32], scratch: &mut KernelScratch) -> Vec<f32>;
 
     /// `y = x · Wᵀ` for stacked decode rows, bitwise equal per row to
-    /// [`LinearOp::matvec`].
-    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix;
+    /// [`LinearOp::matvec`], with caller-owned kernel scratch holding the
+    /// folded activation rows (the f32 reference needs none and ignores
+    /// it).
+    fn decode_matmul(&self, x: &Matrix, threads: usize, scratch: &mut KernelScratch) -> Matrix;
 }
 
 /// The f32 reference implementation: a dense weight matrix.
@@ -233,7 +241,7 @@ impl LinearOp for Matrix {
         (0..self.rows).map(|r| dot(x, self.row(r), x.len())).collect()
     }
 
-    fn decode_matmul(&self, x: &Matrix, _threads: usize) -> Matrix {
+    fn decode_matmul(&self, x: &Matrix, _threads: usize, _scratch: &mut KernelScratch) -> Matrix {
         let mut y = Matrix::zeros(x.rows, self.rows);
         for r in 0..x.rows {
             let xr = x.row(r);
@@ -260,8 +268,8 @@ impl LinearOp for QuantizedTensor {
         self.dequant_matvec_with(x, scratch)
     }
 
-    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
-        self.dequant_matmul_shared(x, threads)
+    fn decode_matmul(&self, x: &Matrix, threads: usize, scratch: &mut KernelScratch) -> Matrix {
+        self.dequant_matmul_shared_with(x, threads, scratch)
     }
 }
 
@@ -524,20 +532,43 @@ impl KvBits {
     }
 }
 
-/// Reusable attention scratch shared by every [`KvStore`] implementation:
-/// the per-head score buffer plus an aligned row for dequantized K/V
-/// segments, so quantized attends allocate nothing per step.
+/// One head's worth of attend scratch: score buffer plus an aligned
+/// dequant row. Head-parallel attends hand each head its own lane so
+/// workers never share buffers.
 #[derive(Default)]
-pub struct AttnScratch {
+pub struct AttnLane {
     /// Attention score buffer (`pos + 1` entries).
     pub att: Vec<f32>,
     /// Dequantized K/V head-segment scratch (aligned for the SIMD kernels).
     pub row: AlignedF32,
 }
 
+/// Reusable attention scratch shared by every [`KvStore`] implementation:
+/// the per-head score buffer plus an aligned row for dequantized K/V
+/// segments, so quantized attends allocate nothing per step. Head-parallel
+/// attends additionally keep one [`AttnLane`] per head (grown on first
+/// use, reused across steps).
+#[derive(Default)]
+pub struct AttnScratch {
+    /// Attention score buffer (`pos + 1` entries) for serial attends.
+    pub att: Vec<f32>,
+    /// Dequantized K/V head-segment scratch (aligned for the SIMD kernels).
+    pub row: AlignedF32,
+    /// Per-head lanes for head-parallel attends.
+    lanes: Vec<AttnLane>,
+}
+
 impl AttnScratch {
     pub fn new(capacity: usize) -> AttnScratch {
-        AttnScratch { att: Vec::with_capacity(capacity), row: AlignedF32::new() }
+        AttnScratch { att: Vec::with_capacity(capacity), row: AlignedF32::new(), lanes: Vec::new() }
+    }
+
+    /// Per-head lanes for a head-parallel attend (grown on demand).
+    pub(crate) fn lanes(&mut self, n: usize) -> &mut [AttnLane] {
+        if self.lanes.len() < n {
+            self.lanes.resize_with(n, AttnLane::default);
+        }
+        &mut self.lanes[..n]
     }
 }
 
@@ -551,7 +582,18 @@ pub trait KvStore {
 
     /// Causal attention for one query over positions `0..=pos` of `layer`,
     /// accumulating per-head context into `ctx` (zeroed by the caller).
-    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch);
+    /// `threads` bounds the head-parallel fan-out; heads write disjoint
+    /// `ctx` segments with unchanged per-head arithmetic, so results never
+    /// depend on the thread count.
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+        threads: usize,
+    );
 
     /// Element precision of this store.
     fn kv_bits(&self) -> KvBits;
@@ -589,7 +631,17 @@ impl KvStore for KvF32 {
         self.v[layer].row_mut(pos).copy_from_slice(v);
     }
 
-    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+        _threads: usize,
+    ) {
+        // The f32 store is the bit-identical reference path; it stays
+        // serial so its loop order is exactly the seed's.
         causal_attend(q, &self.k[layer], &self.v[layer], pos, self.heads, self.hd, ctx, &mut s.att);
     }
 
@@ -673,6 +725,66 @@ impl KvQ8 {
             }
         }
     }
+
+    /// One head's attend: scores over K codes, softmax, weighted V
+    /// accumulation into this head's disjoint `ctx_h` segment. Both the
+    /// serial and the head-parallel attend run exactly this body per head,
+    /// so the thread count can never change results.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_head(
+        &self,
+        base: usize,
+        head: usize,
+        q: &[f32],
+        pos: usize,
+        scale: f32,
+        isa: simd::Isa,
+        ctx_h: &mut [f32],
+        att: &mut Vec<f32>,
+        row: &mut AlignedF32,
+    ) {
+        let (d, hd, heads) = (self.d, self.hd, self.heads);
+        let off = head * hd;
+        let qh = &q[off..off + hd];
+        att.clear();
+        att.resize(pos + 1, 0.0);
+        row.resize(hd);
+        let mut maxv = f32::NEG_INFINITY;
+        for ki in 0..=pos {
+            let idx = base + ki;
+            let codes = &self.k_codes[idx * d + off..idx * d + off + hd];
+            simd::dequant_u8_with(
+                isa,
+                codes,
+                self.k_scale[idx * heads + head],
+                self.k_min[idx * heads + head],
+                row.as_mut_slice(),
+            );
+            att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
+            maxv = maxv.max(att[ki]);
+        }
+        let mut denom = 0.0f32;
+        for a in att.iter_mut() {
+            *a = (*a - maxv).exp();
+            denom += *a;
+        }
+        for ki in 0..=pos {
+            let idx = base + ki;
+            let wgt = att[ki] / denom;
+            let codes = &self.v_codes[idx * d + off..idx * d + off + hd];
+            simd::dequant_u8_with(
+                isa,
+                codes,
+                self.v_scale[idx * heads + head],
+                self.v_min[idx * heads + head],
+                row.as_mut_slice(),
+            );
+            let vrow = row.as_slice();
+            for t in 0..hd {
+                ctx_h[t] += wgt * vrow[t];
+            }
+        }
+    }
 }
 
 impl KvStore for KvQ8 {
@@ -697,54 +809,53 @@ impl KvStore for KvQ8 {
         );
     }
 
-    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
-        let (d, hd, heads) = (self.d, self.hd, self.heads);
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+        threads: usize,
+    ) {
+        let (hd, heads) = (self.hd, self.heads);
         let scale = 1.0 / (hd as f32).sqrt();
         let isa = simd::active();
         let base = layer * self.capacity;
-        let AttnScratch { att, row } = s;
-        att.clear();
-        att.resize(pos + 1, 0.0);
-        row.resize(hd);
-        for head in 0..heads {
-            let off = head * hd;
-            let qh = &q[off..off + hd];
-            let mut maxv = f32::NEG_INFINITY;
-            for ki in 0..=pos {
-                let idx = base + ki;
-                let codes = &self.k_codes[idx * d + off..idx * d + off + hd];
-                simd::dequant_u8_with(
+        let work = heads * (pos + 1) * hd;
+        let par = if work < ATTEND_PARALLEL_THRESHOLD { 1 } else { threads.max(1).min(heads) };
+        if par <= 1 {
+            for head in 0..heads {
+                let off = head * hd;
+                self.attend_head(
+                    base,
+                    head,
+                    q,
+                    pos,
+                    scale,
                     isa,
-                    codes,
-                    self.k_scale[idx * heads + head],
-                    self.k_min[idx * heads + head],
-                    row.as_mut_slice(),
+                    &mut ctx[off..off + hd],
+                    &mut s.att,
+                    &mut s.row,
                 );
-                att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
-                maxv = maxv.max(att[ki]);
             }
-            let mut denom = 0.0f32;
-            for a in att.iter_mut() {
-                *a = (*a - maxv).exp();
-                denom += *a;
-            }
-            for ki in 0..=pos {
-                let idx = base + ki;
-                let wgt = att[ki] / denom;
-                let codes = &self.v_codes[idx * d + off..idx * d + off + hd];
-                simd::dequant_u8_with(
-                    isa,
-                    codes,
-                    self.v_scale[idx * heads + head],
-                    self.v_min[idx * heads + head],
-                    row.as_mut_slice(),
-                );
-                let vrow = row.as_slice();
-                for t in 0..hd {
-                    ctx[off + t] += wgt * vrow[t];
-                }
-            }
+            return;
         }
+        // Head-parallel: each head writes only its own disjoint ctx
+        // segment and its own scratch lane, running the identical
+        // `attend_head` body — bitwise-equal to the serial loop.
+        let lanes = s.lanes(heads);
+        let ctx_ptr = threadpool::SendPtr(ctx.as_mut_ptr());
+        let lane_ptr = threadpool::SendPtr(lanes.as_mut_ptr());
+        threadpool::global().for_each_index(heads, par, &|head| {
+            // SAFETY: `for_each_index` hands out each index exactly once,
+            // and head `h` touches only `ctx[h*hd..(h+1)*hd]` and
+            // `lanes[h]` — disjoint ranges of live allocations that outlive
+            // the scoped loop.
+            let ctx_h = unsafe { std::slice::from_raw_parts_mut(ctx_ptr.0.add(head * hd), hd) };
+            let lane = unsafe { &mut *lane_ptr.0.add(head) };
+            self.attend_head(base, head, q, pos, scale, isa, ctx_h, &mut lane.att, &mut lane.row);
+        });
     }
 
     fn kv_bits(&self) -> KvBits {
@@ -781,10 +892,18 @@ impl KvStore for KvCache {
         }
     }
 
-    fn attend(&self, layer: usize, q: &[f32], pos: usize, ctx: &mut [f32], s: &mut AttnScratch) {
+    fn attend(
+        &self,
+        layer: usize,
+        q: &[f32],
+        pos: usize,
+        ctx: &mut [f32],
+        s: &mut AttnScratch,
+        threads: usize,
+    ) {
         match self {
-            KvCache::F32(c) => c.attend(layer, q, pos, ctx, s),
-            KvCache::Q8(c) => c.attend(layer, q, pos, ctx, s),
+            KvCache::F32(c) => c.attend(layer, q, pos, ctx, s, threads),
+            KvCache::Q8(c) => c.attend(layer, q, pos, ctx, s, threads),
         }
     }
 
@@ -816,7 +935,9 @@ pub(crate) trait KvArena {
 
     /// Causal attention for one query of `slot` over positions `0..=pos`
     /// of `layer`, accumulating per-head context into `ctx` (zeroed by
-    /// the caller).
+    /// the caller). `threads` bounds the head-parallel fan-out (results
+    /// never depend on it).
+    #[allow(clippy::too_many_arguments)]
     fn attend(
         &self,
         slot: usize,
@@ -825,6 +946,7 @@ pub(crate) trait KvArena {
         pos: usize,
         ctx: &mut [f32],
         s: &mut AttnScratch,
+        threads: usize,
     );
 }
 
@@ -841,8 +963,9 @@ impl<K: KvStore> KvArena for [K] {
         pos: usize,
         ctx: &mut [f32],
         s: &mut AttnScratch,
+        threads: usize,
     ) {
-        self[slot].attend(layer, q, pos, ctx, s);
+        self[slot].attend(layer, q, pos, ctx, s, threads);
     }
 }
 
@@ -915,7 +1038,7 @@ fn decode_linear<L: LinearOp + ?Sized>(
         let cols = y.len();
         Matrix::from_vec(1, cols, y)
     } else {
-        w.decode_matmul(x, threads)
+        w.decode_matmul(x, threads, kernel)
     };
     profiler::stop(phase, t0);
     y
@@ -972,7 +1095,7 @@ pub(crate) fn decode_rows<A: KvArena + ?Sized>(
             kv.write(row.slot, l, row.pos, k.row(r), v.row(r));
             profiler::stop(Phase::KvWrite, t0);
             let t0 = profiler::start();
-            kv.attend(row.slot, l, q.row(r), row.pos, ctx.row_mut(r), attn);
+            kv.attend(row.slot, l, q.row(r), row.pos, ctx.row_mut(r), attn, model.threads);
             profiler::stop(Phase::KvAttend, t0);
         }
         let o = decode_linear(layer.wo, ctx, model.threads, kernel, Phase::LinWo);
@@ -1140,7 +1263,7 @@ mod tests {
         let mut ctx = vec![0.0f32; d];
         let mut s = AttnScratch::new(2);
         let q = vec![1.0f32; d];
-        store.attend(0, &q, 0, &mut ctx, &mut s);
+        store.attend(0, &q, 0, &mut ctx, &mut s, 1);
         assert!(ctx.iter().all(|v| v.is_finite()));
     }
 
@@ -1170,11 +1293,37 @@ mod tests {
         let mut s = AttnScratch::new(cap);
         let mut ctx_f = vec![0.0f32; d];
         let mut ctx_q = vec![0.0f32; d];
-        f32s.attend(0, &q, cap - 1, &mut ctx_f, &mut s);
-        q8s.attend(0, &q, cap - 1, &mut ctx_q, &mut s);
+        f32s.attend(0, &q, cap - 1, &mut ctx_f, &mut s, 1);
+        q8s.attend(0, &q, cap - 1, &mut ctx_q, &mut s, 1);
         let max_diff = ctx_f.iter().zip(&ctx_q).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
         assert!(max_diff < 0.1, "q8 attention drifted {max_diff} from f32");
         assert!(max_diff > 0.0, "q8 attention suspiciously exact");
+    }
+
+    #[test]
+    fn kv_q8_attend_is_threadcount_invariant() {
+        let mut rng = Rng::new(23);
+        let (layers, cap, d, heads) = (1usize, 128usize, 256usize, 8usize);
+        // heads × positions × head_dim = 32768 ≥ the parallel threshold,
+        // so multi-thread calls actually take the head-parallel path.
+        assert!(heads * cap * (d / heads) >= ATTEND_PARALLEL_THRESHOLD);
+        let mut store = KvQ8::new(layers, cap, d, heads);
+        for pos in 0..cap {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+            store.write(0, pos, &k, &v);
+        }
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut base = vec![0.0f32; d];
+        let mut s = AttnScratch::new(cap);
+        store.attend(0, &q, cap - 1, &mut base, &mut s, 1);
+        for threads in [2usize, 8] {
+            let mut ctx = vec![0.0f32; d];
+            let mut s = AttnScratch::new(cap);
+            store.attend(0, &q, cap - 1, &mut ctx, &mut s, threads);
+            let same = base.iter().zip(&ctx).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads={threads} changed kv8 attend bits");
+        }
     }
 
     #[test]

@@ -76,10 +76,10 @@ impl LinearOp for LayerWeight {
         }
     }
 
-    fn decode_matmul(&self, x: &Matrix, threads: usize) -> Matrix {
+    fn decode_matmul(&self, x: &Matrix, threads: usize, scratch: &mut KernelScratch) -> Matrix {
         match self {
-            LayerWeight::Dense(w) => LinearOp::decode_matmul(w, x, threads),
-            LayerWeight::Quant(q) => LinearOp::decode_matmul(q, x, threads),
+            LayerWeight::Dense(w) => LinearOp::decode_matmul(w, x, threads, scratch),
+            LayerWeight::Quant(q) => LinearOp::decode_matmul(q, x, threads, scratch),
         }
     }
 }
@@ -103,8 +103,12 @@ pub struct NativeBackend {
     quant_report: Option<crate::obs::QuantReport>,
 }
 
+/// Default tile-worker count: [`threadpool::resolve_threads`]`(0)` —
+/// `SINQ_THREADS` when set, otherwise every available core. The former
+/// `.min(8)` cap is gone: workers are persistent and condvar-parked, so
+/// unused ones cost nothing, and capping silently wasted big machines.
 fn default_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+    threadpool::resolve_threads(0)
 }
 
 impl NativeBackend {
@@ -166,6 +170,14 @@ impl NativeBackend {
     /// inherits — the one typed builder that replaced the per-knob
     /// `with_max_batch`/`with_kv_bits` sprawl.
     pub fn with_engine(mut self, engine: EngineConfig) -> NativeBackend {
+        if engine.threads > 0 {
+            // `--threads` (resolved through `SINQ_THREADS`) overrides the
+            // all-cores default for every kernel this backend runs.
+            self.threads = engine.effective_threads();
+        }
+        // Size the persistent worker pool at engine start (first sizing
+        // wins); decoders and tiled matmuls reuse it from here on.
+        threadpool::init_global(self.threads);
         self.engine = engine;
         self
     }
@@ -486,7 +498,11 @@ impl<'a> NativeDecoder<'a> {
         be: &'a NativeBackend,
         cfg: &EngineConfig,
     ) -> anyhow::Result<NativeDecoder<'a>> {
-        let model = ResolvedModel::new(be)?;
+        let mut model = ResolvedModel::new(be)?;
+        if cfg.threads > 0 {
+            model.threads = cfg.effective_threads();
+        }
+        threadpool::init_global(model.threads);
         let cap = cfg.max_context.max(1);
         let (layers, d, heads) = (model.cfg.layers, model.cfg.d, model.cfg.heads);
         Ok(NativeDecoder {
@@ -703,6 +719,20 @@ mod tests {
         let diff = max_abs_diff(&l32, &l8);
         assert!(diff < 0.5, "kv8 logits drifted {diff} from f32");
         assert!(l8.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn engine_threads_override_flows_into_backend() {
+        let mw = pico();
+        let nb = NativeBackend::from_weights(&mw)
+            .with_engine(EngineConfig::new().with_threads(2).with_max_batch(2));
+        // A CI `SINQ_THREADS` matrix leg outranks the explicit request.
+        match std::env::var("SINQ_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(n) if n > 0 => assert_eq!(nb.threads, n),
+            _ => assert_eq!(nb.threads, 2),
+        }
+        // Generation still runs end to end with an explicit thread count.
+        assert_eq!(nb.generate(b"abc", 4).unwrap().len(), 4);
     }
 
     #[test]

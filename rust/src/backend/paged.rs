@@ -21,9 +21,10 @@
 //! (refcounted) and skips prefill for the shared span. Eviction is
 //! LRU over leaf entries, so a chain of pages is released deepest-first.
 
-use crate::backend::fwd::{AttnScratch, KvArena, KvBits, KvQ8};
+use crate::backend::fwd::{AttnScratch, KvArena, KvBits, KvQ8, ATTEND_PARALLEL_THRESHOLD};
 use crate::backend::simd;
 use crate::tensor::Matrix;
+use crate::util::threadpool;
 
 /// Backing storage for the page pool, at the engine's KV precision. Row
 /// layout matches the contiguous stores with `capacity` replaced by the
@@ -247,97 +248,234 @@ impl KvArena for PagedKv {
         pos: usize,
         ctx: &mut [f32],
         s: &mut AttnScratch,
+        threads: usize,
     ) {
         let (d, hd, heads, ps) = (self.d, self.hd, self.heads, self.page_size);
         let table = &self.tables[slot];
         let scale = 1.0 / (hd as f32).sqrt();
+        let work = heads * (pos + 1) * hd;
+        let par = if work < ATTEND_PARALLEL_THRESHOLD { 1 } else { threads.max(1).min(heads) };
         match &self.store {
             PagedStore::F32 { k, v } => {
                 // `causal_attend` with the row index routed through the
-                // page table; float-op order is untouched, so this is
-                // bit-identical to the contiguous f32 store.
+                // page table; per-head float-op order is untouched, so this
+                // is bit-identical to the contiguous f32 store at any
+                // thread count (heads write disjoint ctx segments).
                 let (kc, vc) = (&k[layer], &v[layer]);
-                let att = &mut s.att;
-                att.clear();
-                att.resize(pos + 1, 0.0);
-                for head in 0..heads {
-                    let off = head * hd;
-                    let qh = &q[off..off + hd];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for ki in 0..=pos {
-                        let phys = table[ki / ps] as usize * ps + ki % ps;
-                        let krow = &kc.row(phys)[off..off + hd];
-                        let mut dotv = 0.0f32;
-                        for t in 0..hd {
-                            dotv += qh[t] * krow[t];
-                        }
-                        att[ki] = dotv * scale;
-                        maxv = maxv.max(att[ki]);
+                if par <= 1 {
+                    for head in 0..heads {
+                        let off = head * hd;
+                        attend_head_f32(
+                            kc,
+                            vc,
+                            table,
+                            ps,
+                            head,
+                            hd,
+                            q,
+                            pos,
+                            scale,
+                            &mut ctx[off..off + hd],
+                            &mut s.att,
+                        );
                     }
-                    let mut denom = 0.0f32;
-                    for a in att.iter_mut() {
-                        *a = (*a - maxv).exp();
-                        denom += *a;
-                    }
-                    for ki in 0..=pos {
-                        let phys = table[ki / ps] as usize * ps + ki % ps;
-                        let wgt = att[ki] / denom;
-                        let vrow = &vc.row(phys)[off..off + hd];
-                        for t in 0..hd {
-                            ctx[off + t] += wgt * vrow[t];
-                        }
-                    }
+                } else {
+                    let lanes = s.lanes(heads);
+                    let ctx_ptr = threadpool::SendPtr(ctx.as_mut_ptr());
+                    let lane_ptr = threadpool::SendPtr(lanes.as_mut_ptr());
+                    threadpool::global().for_each_index(heads, par, &|head| {
+                        // SAFETY: each index is claimed exactly once; head
+                        // `h` touches only `ctx[h*hd..(h+1)*hd]` and
+                        // `lanes[h]`, both alive for the scoped loop.
+                        let ctx_h =
+                            unsafe { std::slice::from_raw_parts_mut(ctx_ptr.0.add(head * hd), hd) };
+                        let lane = unsafe { &mut *lane_ptr.0.add(head) };
+                        attend_head_f32(
+                            kc, vc, table, ps, head, hd, q, pos, scale, ctx_h, &mut lane.att,
+                        );
+                    });
                 }
             }
             PagedStore::Q8 { rows, k_codes, v_codes, k_scale, k_min, v_scale, v_min } => {
                 // `KvQ8::attend` with the same index translation; the
-                // SIMD dequant + dot sequence is unchanged.
+                // per-head SIMD dequant + dot sequence is unchanged, so
+                // results never depend on the thread count.
                 let isa = simd::active();
                 let base = layer * *rows;
-                let AttnScratch { att, row } = s;
-                att.clear();
-                att.resize(pos + 1, 0.0);
-                row.resize(hd);
-                for head in 0..heads {
-                    let off = head * hd;
-                    let qh = &q[off..off + hd];
-                    let mut maxv = f32::NEG_INFINITY;
-                    for ki in 0..=pos {
-                        let idx = base + table[ki / ps] as usize * ps + ki % ps;
-                        let codes = &k_codes[idx * d + off..idx * d + off + hd];
-                        simd::dequant_u8_with(
+                let s8 = Q8Slices { k_codes, v_codes, k_scale, k_min, v_scale, v_min };
+                if par <= 1 {
+                    for head in 0..heads {
+                        let off = head * hd;
+                        attend_head_q8(
+                            &s8,
+                            d,
+                            heads,
+                            base,
+                            table,
+                            ps,
+                            head,
+                            hd,
+                            q,
+                            pos,
+                            scale,
                             isa,
-                            codes,
-                            k_scale[idx * heads + head],
-                            k_min[idx * heads + head],
-                            row.as_mut_slice(),
+                            &mut ctx[off..off + hd],
+                            &mut s.att,
+                            &mut s.row,
                         );
-                        att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
-                        maxv = maxv.max(att[ki]);
                     }
-                    let mut denom = 0.0f32;
-                    for a in att.iter_mut() {
-                        *a = (*a - maxv).exp();
-                        denom += *a;
-                    }
-                    for ki in 0..=pos {
-                        let idx = base + table[ki / ps] as usize * ps + ki % ps;
-                        let wgt = att[ki] / denom;
-                        let codes = &v_codes[idx * d + off..idx * d + off + hd];
-                        simd::dequant_u8_with(
+                } else {
+                    let lanes = s.lanes(heads);
+                    let ctx_ptr = threadpool::SendPtr(ctx.as_mut_ptr());
+                    let lane_ptr = threadpool::SendPtr(lanes.as_mut_ptr());
+                    threadpool::global().for_each_index(heads, par, &|head| {
+                        // SAFETY: as in the F32 arm — disjoint ctx segment
+                        // and scratch lane per claimed head index.
+                        let ctx_h =
+                            unsafe { std::slice::from_raw_parts_mut(ctx_ptr.0.add(head * hd), hd) };
+                        let lane = unsafe { &mut *lane_ptr.0.add(head) };
+                        attend_head_q8(
+                            &s8,
+                            d,
+                            heads,
+                            base,
+                            table,
+                            ps,
+                            head,
+                            hd,
+                            q,
+                            pos,
+                            scale,
                             isa,
-                            codes,
-                            v_scale[idx * heads + head],
-                            v_min[idx * heads + head],
-                            row.as_mut_slice(),
+                            ctx_h,
+                            &mut lane.att,
+                            &mut lane.row,
                         );
-                        let vrow = row.as_slice();
-                        for t in 0..hd {
-                            ctx[off + t] += wgt * vrow[t];
-                        }
-                    }
+                    });
                 }
             }
+        }
+    }
+}
+
+/// Borrowed views over one [`PagedStore::Q8`] pool, so the per-head attend
+/// helper stays below a screenful of parameters.
+#[derive(Clone, Copy)]
+struct Q8Slices<'a> {
+    k_codes: &'a [u8],
+    v_codes: &'a [u8],
+    k_scale: &'a [f32],
+    k_min: &'a [f32],
+    v_scale: &'a [f32],
+    v_min: &'a [f32],
+}
+
+/// One head of the paged f32 attend (`causal_attend` with the row index
+/// routed through the page table). Serial and head-parallel callers run
+/// exactly this body, so the thread count can never change results.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_f32(
+    kc: &Matrix,
+    vc: &Matrix,
+    table: &[u32],
+    ps: usize,
+    head: usize,
+    hd: usize,
+    q: &[f32],
+    pos: usize,
+    scale: f32,
+    ctx_h: &mut [f32],
+    att: &mut Vec<f32>,
+) {
+    let off = head * hd;
+    let qh = &q[off..off + hd];
+    att.clear();
+    att.resize(pos + 1, 0.0);
+    let mut maxv = f32::NEG_INFINITY;
+    for ki in 0..=pos {
+        let phys = table[ki / ps] as usize * ps + ki % ps;
+        let krow = &kc.row(phys)[off..off + hd];
+        let mut dotv = 0.0f32;
+        for t in 0..hd {
+            dotv += qh[t] * krow[t];
+        }
+        att[ki] = dotv * scale;
+        maxv = maxv.max(att[ki]);
+    }
+    let mut denom = 0.0f32;
+    for a in att.iter_mut() {
+        *a = (*a - maxv).exp();
+        denom += *a;
+    }
+    for ki in 0..=pos {
+        let phys = table[ki / ps] as usize * ps + ki % ps;
+        let wgt = att[ki] / denom;
+        let vrow = &vc.row(phys)[off..off + hd];
+        for t in 0..hd {
+            ctx_h[t] += wgt * vrow[t];
+        }
+    }
+}
+
+/// One head of the paged q8 attend (`KvQ8::attend_head` with the row index
+/// routed through the page table); see [`attend_head_f32`] for the
+/// serial ≡ parallel contract.
+#[allow(clippy::too_many_arguments)]
+fn attend_head_q8(
+    s8: &Q8Slices<'_>,
+    d: usize,
+    heads: usize,
+    base: usize,
+    table: &[u32],
+    ps: usize,
+    head: usize,
+    hd: usize,
+    q: &[f32],
+    pos: usize,
+    scale: f32,
+    isa: simd::Isa,
+    ctx_h: &mut [f32],
+    att: &mut Vec<f32>,
+    row: &mut simd::AlignedF32,
+) {
+    let off = head * hd;
+    let qh = &q[off..off + hd];
+    att.clear();
+    att.resize(pos + 1, 0.0);
+    row.resize(hd);
+    let mut maxv = f32::NEG_INFINITY;
+    for ki in 0..=pos {
+        let idx = base + table[ki / ps] as usize * ps + ki % ps;
+        let codes = &s8.k_codes[idx * d + off..idx * d + off + hd];
+        simd::dequant_u8_with(
+            isa,
+            codes,
+            s8.k_scale[idx * heads + head],
+            s8.k_min[idx * heads + head],
+            row.as_mut_slice(),
+        );
+        att[ki] = simd::dot_with(isa, qh, row.as_slice()) * scale;
+        maxv = maxv.max(att[ki]);
+    }
+    let mut denom = 0.0f32;
+    for a in att.iter_mut() {
+        *a = (*a - maxv).exp();
+        denom += *a;
+    }
+    for ki in 0..=pos {
+        let idx = base + table[ki / ps] as usize * ps + ki % ps;
+        let wgt = att[ki] / denom;
+        let codes = &s8.v_codes[idx * d + off..idx * d + off + hd];
+        simd::dequant_u8_with(
+            isa,
+            codes,
+            s8.v_scale[idx * heads + head],
+            s8.v_min[idx * heads + head],
+            row.as_mut_slice(),
+        );
+        let vrow = row.as_slice();
+        for t in 0..hd {
+            ctx_h[t] += wgt * vrow[t];
         }
     }
 }

@@ -42,7 +42,7 @@ use crate::util::threadpool;
 const ROW_BLOCK: usize = 8;
 
 /// Below this many multiply-accumulates the kernel stays single-threaded
-/// (thread scope setup costs more than the work).
+/// (even a persistent-pool hand-off costs more than the work).
 const PARALLEL_THRESHOLD: usize = 1 << 18;
 
 /// A linear layer kept in its packed on-disk representation at runtime.
@@ -169,9 +169,11 @@ impl QuantizedTensor {
     /// The cache-blocked tile iterator every fused matmul entry point
     /// drives: partitions the `n` output rows into [`ROW_BLOCK`]-row tiles,
     /// runs `body(r0, r1, out)` per tile (with `out` holding `m × (r1-r0)`
-    /// partials, activation-major), in parallel across the thread pool, and
-    /// scatters the partials into the `(m, n)` result. Tiles are
-    /// independent, so results are deterministic regardless of `threads`.
+    /// partials, activation-major), in parallel across the **persistent**
+    /// worker pool ([`crate::util::threadpool::global`] — a condvar wake
+    /// per call, not a thread spawn), and scatters the partials into the
+    /// `(m, n)` result. Tiles are independent and scattered by block
+    /// index, so results are deterministic regardless of `threads`.
     fn tiled_rows<F>(&self, m: usize, threads: usize, body: F) -> Matrix
     where
         F: Fn(usize, usize, &mut [f32]) + Sync,
@@ -312,28 +314,130 @@ impl QuantizedTensor {
         y
     }
 
+    /// Two-row variant of [`QuantizedTensor::row_accum`]: one pass over
+    /// row `i`'s decoded levels reduced against two folded activation rows
+    /// through the 2-row microkernel ([`simd::dot2_with`]). Each lane's
+    /// arithmetic — group order, scale/shift application, accumulator —
+    /// is exactly `row_accum`'s, so each returned value is bitwise-equal
+    /// to the corresponding single-row call.
+    fn row_accum2(
+        &self,
+        isa: Isa,
+        i: usize,
+        levels: &[f32],
+        x0: (&[f32], &[f32]),
+        x1: (&[f32], &[f32]),
+    ) -> (f32, f32) {
+        let g = self.group_size;
+        let (xt0, gsum0) = x0;
+        let (xt1, gsum1) = x1;
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        for gi in 0..gsum0.len() {
+            let j0 = gi * g;
+            let j1 = ((gi + 1) * g).min(self.cols);
+            let (d0, d1) = simd::dot2_with(isa, &levels[j0..j1], &xt0[j0..j1], &xt1[j0..j1]);
+            let s = self.scales.at(i, gi);
+            let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
+            acc0 += s * d0 + s * z * gsum0[gi];
+            acc1 += s * d1 + s * z * gsum1[gi];
+        }
+        (acc0, acc1)
+    }
+
+    /// Four-row variant of [`QuantizedTensor::row_accum`]; see
+    /// [`QuantizedTensor::row_accum2`] for the per-lane bitwise contract.
+    #[allow(clippy::too_many_arguments)]
+    fn row_accum4(
+        &self,
+        isa: Isa,
+        i: usize,
+        levels: &[f32],
+        x0: (&[f32], &[f32]),
+        x1: (&[f32], &[f32]),
+        x2: (&[f32], &[f32]),
+        x3: (&[f32], &[f32]),
+    ) -> [f32; 4] {
+        let g = self.group_size;
+        let mut acc = [0.0f32; 4];
+        for gi in 0..x0.1.len() {
+            let j0 = gi * g;
+            let j1 = ((gi + 1) * g).min(self.cols);
+            let d = simd::dot4_with(
+                isa,
+                &levels[j0..j1],
+                &x0.0[j0..j1],
+                &x1.0[j0..j1],
+                &x2.0[j0..j1],
+                &x3.0[j0..j1],
+            );
+            let s = self.scales.at(i, gi);
+            let z = self.shifts.as_ref().map(|m| m.at(i, gi)).unwrap_or(0.0);
+            acc[0] += s * d[0] + s * z * x0.1[gi];
+            acc[1] += s * d[1] + s * z * x1.1[gi];
+            acc[2] += s * d[2] + s * z * x2.1[gi];
+            acc[3] += s * d[3] + s * z * x3.1[gi];
+        }
+        acc
+    }
+
     /// Fused dequantize-matmul for the batched decode path: `y = x · Wᵀ`
-    /// with `x` holding one activation row per live sequence.
+    /// with `x` holding one activation row per live sequence. Allocates
+    /// its own scratch — decoders use
+    /// [`QuantizedTensor::dequant_matmul_shared_with`] to reuse theirs.
+    pub fn dequant_matmul_shared(&self, x: &Matrix, threads: usize) -> Matrix {
+        let mut scratch = KernelScratch::new();
+        self.dequant_matmul_shared_with(x, threads, &mut scratch)
+    }
+
+    /// Fused dequantize-matmul for the batched decode path with
+    /// caller-owned scratch: `y = x · Wᵀ` with `x` holding one activation
+    /// row per live sequence.
     ///
     /// Each weight row's packed codes are unpacked and decoded to grid
     /// levels **once per step** and reduced against every activation row —
     /// the continuous-batching amortization (one unpack, many sequences).
-    /// Per activation row it runs exactly
-    /// [`QuantizedTensor::dequant_matvec`]'s arithmetic, so batched decode
-    /// reproduces single-sequence decode bit-for-bit at any batch size, and
-    /// results are deterministic regardless of `threads`.
-    pub fn dequant_matmul_shared(&self, x: &Matrix, threads: usize) -> Matrix {
+    /// Batches of ≥ 2 rows go through the 4-/2-row SIMD microkernels,
+    /// which share the decoded-level loads across activation rows while
+    /// keeping a separate accumulator set and the single-row reduction
+    /// order per row. Per activation row the arithmetic is therefore
+    /// exactly [`QuantizedTensor::dequant_matvec`]'s, so batched decode
+    /// reproduces single-sequence decode bit-for-bit at any batch size,
+    /// and results are deterministic regardless of `threads`.
+    ///
+    /// The folded activation rows (`xt = x ⊙ t` plus per-group sums) live
+    /// in `scratch.xt_rows`/`scratch.gsum_rows`, so steady-state decode
+    /// steps perform no fold allocations (mirroring the matvec path).
+    pub fn dequant_matmul_shared_with(
+        &self,
+        x: &Matrix,
+        threads: usize,
+        scratch: &mut KernelScratch,
+    ) -> Matrix {
         assert_eq!(x.cols, self.cols, "dequant_matmul_shared shape mismatch");
         let (m, n, k) = (x.rows, self.rows, self.cols);
         let isa = simd::active();
-        let folded: Vec<_> = (0..m)
-            .map(|r| {
-                let mut xt = vec![0.0f32; k];
-                let mut gsum = vec![0.0f32; self.n_groups()];
-                self.fold_input_into(x.row(r), &mut xt, &mut gsum);
-                (xt, gsum)
-            })
-            .collect();
+        let groups = self.n_groups();
+        // Row stride padded to a full 16-lane chunk so every folded row
+        // starts cache-line aligned.
+        let stride = k.div_ceil(16) * 16;
+        scratch.xt_rows.resize(m * stride);
+        scratch.gsum_rows.resize(m * groups, 0.0);
+        {
+            let xt_rows = scratch.xt_rows.as_mut_slice();
+            for r in 0..m {
+                let (xt, gsum) = (
+                    &mut xt_rows[r * stride..r * stride + k],
+                    &mut scratch.gsum_rows[r * groups..(r + 1) * groups],
+                );
+                self.fold_input_into(x.row(r), xt, gsum);
+            }
+        }
+        let xt_rows = scratch.xt_rows.as_slice();
+        let gsum_rows = &scratch.gsum_rows[..];
+        let fold = |r: usize| {
+            (&xt_rows[r * stride..r * stride + k], &gsum_rows[r * groups..(r + 1) * groups])
+        };
         let threads = if m * n * k < PARALLEL_THRESHOLD { 1 } else { threads.max(1) };
         self.tiled_rows(m, threads, |r0, r1, out| {
             let rb = r1 - r0;
@@ -348,7 +452,34 @@ impl QuantizedTensor {
                     &mut codes,
                     &mut levels,
                 );
-                for (xi, (xt, gsum)) in folded.iter().enumerate() {
+                // Multi-row microkernels: 4-row, then 2-row, then the
+                // single-row closer — every lane bitwise-equal to
+                // `row_accum` (and therefore to `dequant_matvec`).
+                let mut xi = 0;
+                while xi + 4 <= m {
+                    let y = self.row_accum4(
+                        isa,
+                        i,
+                        &levels,
+                        fold(xi),
+                        fold(xi + 1),
+                        fold(xi + 2),
+                        fold(xi + 3),
+                    );
+                    out[xi * rb + ti] = y[0];
+                    out[(xi + 1) * rb + ti] = y[1];
+                    out[(xi + 2) * rb + ti] = y[2];
+                    out[(xi + 3) * rb + ti] = y[3];
+                    xi += 4;
+                }
+                if xi + 2 <= m {
+                    let (y0, y1) = self.row_accum2(isa, i, &levels, fold(xi), fold(xi + 1));
+                    out[xi * rb + ti] = y0;
+                    out[(xi + 1) * rb + ti] = y1;
+                    xi += 2;
+                }
+                if xi < m {
+                    let (xt, gsum) = fold(xi);
                     out[xi * rb + ti] = self.row_accum(isa, i, &levels, xt, gsum);
                 }
             }

@@ -12,6 +12,15 @@
 //!   differs from scalar: results agree to float tolerance, not bitwise.
 //!   Every decode entry point routes through this same `dot`, so batched
 //!   and single-sequence decode remain bit-identical to each other.
+//! * [`dot2`] / [`dot4`] are the multi-row microkernels behind the batched
+//!   shared decode: each activation row keeps its own 4-accumulator set
+//!   and the exact [`dot`] reduction order (bitwise-equal per row), while
+//!   the weight-level loads are shared across rows. With the optional
+//!   `avx512` cargo feature, [`dot_best`]/[`dot2_best`]/[`dot4_best`]
+//!   upgrade all three consistently to AVX-512 kernels behind runtime
+//!   `avx512f` detection — consistently, because mixing widths across the
+//!   single-row and multi-row paths would break the bitwise parity
+//!   contract between them.
 //!
 //! All loads/stores are unaligned (`loadu`/`storeu`): the decoder scratch
 //! is cache-line aligned for the fast case, but the kernels stay correct
@@ -167,14 +176,333 @@ pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc0);
         i += 8;
     }
-    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
-    let quad = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
-    let pair = _mm_add_ps(quad, _mm_movehl_ps(quad, quad));
-    let one = _mm_add_ss(pair, _mm_shuffle_ps::<1>(pair, pair));
-    let mut s = _mm_cvtss_f32(one);
+    let mut s = hsum4(acc0, acc1, acc2, acc3);
     while i < n {
         s += a[i] * b[i];
         i += 1;
     }
     s
+}
+
+/// Horizontal reduction of a 4-accumulator set — the exact sequence
+/// [`dot`] has always used ((acc0+acc1)+(acc2+acc3), 128-bit fold, movehl,
+/// shuffle). The multi-row kernels call this per row so each row's
+/// reduction order is bitwise-identical to the single-row dot.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn hsum4(acc0: __m256, acc1: __m256, acc2: __m256, acc3: __m256) -> f32 {
+    let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+    let quad = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let pair = _mm_add_ps(quad, _mm_movehl_ps(quad, quad));
+    let one = _mm_add_ss(pair, _mm_shuffle_ps::<1>(pair, pair));
+    _mm_cvtss_f32(one)
+}
+
+/// Two dot products against one shared left operand (the decoded weight
+/// levels): one pass over `a`, two independent 4-accumulator sets. Each
+/// row's arithmetic — accumulator assignment, cleanup loop, horizontal
+/// reduction, scalar tail — is exactly [`dot`]'s, so per-row results are
+/// bitwise-equal to two single-row calls; only the `a` loads are shared.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot2(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    let n = a.len().min(b0.len()).min(b1.len());
+    let (pa, p0, p1) = (a.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut r0a = _mm256_setzero_ps();
+    let mut r0b = _mm256_setzero_ps();
+    let mut r0c = _mm256_setzero_ps();
+    let mut r0d = _mm256_setzero_ps();
+    let mut r1a = _mm256_setzero_ps();
+    let mut r1b = _mm256_setzero_ps();
+    let mut r1c = _mm256_setzero_ps();
+    let mut r1d = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 32 <= n {
+        let va0 = _mm256_loadu_ps(pa.add(i));
+        let va1 = _mm256_loadu_ps(pa.add(i + 8));
+        let va2 = _mm256_loadu_ps(pa.add(i + 16));
+        let va3 = _mm256_loadu_ps(pa.add(i + 24));
+        r0a = _mm256_fmadd_ps(va0, _mm256_loadu_ps(p0.add(i)), r0a);
+        r0b = _mm256_fmadd_ps(va1, _mm256_loadu_ps(p0.add(i + 8)), r0b);
+        r0c = _mm256_fmadd_ps(va2, _mm256_loadu_ps(p0.add(i + 16)), r0c);
+        r0d = _mm256_fmadd_ps(va3, _mm256_loadu_ps(p0.add(i + 24)), r0d);
+        r1a = _mm256_fmadd_ps(va0, _mm256_loadu_ps(p1.add(i)), r1a);
+        r1b = _mm256_fmadd_ps(va1, _mm256_loadu_ps(p1.add(i + 8)), r1b);
+        r1c = _mm256_fmadd_ps(va2, _mm256_loadu_ps(p1.add(i + 16)), r1c);
+        r1d = _mm256_fmadd_ps(va3, _mm256_loadu_ps(p1.add(i + 24)), r1d);
+        i += 32;
+    }
+    while i + 8 <= n {
+        let va = _mm256_loadu_ps(pa.add(i));
+        r0a = _mm256_fmadd_ps(va, _mm256_loadu_ps(p0.add(i)), r0a);
+        r1a = _mm256_fmadd_ps(va, _mm256_loadu_ps(p1.add(i)), r1a);
+        i += 8;
+    }
+    let mut s0 = hsum4(r0a, r0b, r0c, r0d);
+    let mut s1 = hsum4(r1a, r1b, r1c, r1d);
+    while i < n {
+        s0 += a[i] * b0[i];
+        s1 += a[i] * b1[i];
+        i += 1;
+    }
+    (s0, s1)
+}
+
+/// Four dot products against one shared left operand, composed as two
+/// [`dot2`] passes: a true single-pass 4-row kernel needs 16 accumulator
+/// registers plus the shared loads, which spills the 16-register AVX2
+/// file. Two passes keep `a` hot in L1 while preserving the per-row
+/// bitwise contract. (The AVX-512 build gets the genuine single-pass
+/// 4-row kernel — 32 registers.)
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dot4(
+    a: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) -> [f32; 4] {
+    let (s0, s1) = dot2(a, b0, b1);
+    let (s2, s3) = dot2(a, b2, b3);
+    [s0, s1, s2, s3]
+}
+
+/// Is the optional AVX-512 dot path live? Compiled only with the `avx512`
+/// cargo feature; runtime-gated on `avx512f` so the binary stays correct
+/// on CPUs without it. Cached after the first probe.
+#[cfg(feature = "avx512")]
+pub fn avx512_available() -> bool {
+    use std::sync::OnceLock;
+    static OK: OnceLock<bool> = OnceLock::new();
+    *OK.get_or_init(|| is_x86_feature_detected!("avx512f"))
+}
+
+/// Single-row dot for the dispatcher: the AVX-512 kernel when compiled in
+/// and detected, else [`dot`]. The `*_best` trio switches together so the
+/// single-row and multi-row paths always share one reduction family.
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[inline]
+pub unsafe fn dot_best(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(feature = "avx512")]
+    if avx512_available() {
+        return avx512::dot(a, b);
+    }
+    dot(a, b)
+}
+
+/// Two-row dot for the dispatcher; see [`dot_best`].
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[inline]
+pub unsafe fn dot2_best(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    #[cfg(feature = "avx512")]
+    if avx512_available() {
+        return avx512::dot2(a, b0, b1);
+    }
+    dot2(a, b0, b1)
+}
+
+/// Four-row dot for the dispatcher; see [`dot_best`].
+///
+/// # Safety
+/// The CPU must support AVX2 and FMA (see [`super::supported`]).
+#[inline]
+pub unsafe fn dot4_best(
+    a: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) -> [f32; 4] {
+    #[cfg(feature = "avx512")]
+    if avx512_available() {
+        return avx512::dot4(a, b0, b1, b2, b3);
+    }
+    dot4(a, b0, b1, b2, b3)
+}
+
+/// Optional AVX-512 dot kernels (`--features avx512`, runtime-gated on
+/// `avx512f`). 16-lane zmm accumulators; the 32-register file fits the
+/// genuine single-pass 4-row kernel that AVX2 cannot hold. Per-row
+/// reduction order is shared across `dot`/`dot2`/`dot4` here exactly as in
+/// the AVX2 family, so the matvec ≡ shared-matmul bitwise contract holds
+/// whichever family the runtime probe picks — as long as it picks one
+/// family for all three, which `*_best` guarantees.
+#[cfg(feature = "avx512")]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    /// Shared 4-accumulator reduction: pairwise combine, then the fixed
+    /// `_mm512_reduce_add_ps` tree. Deterministic for a fixed length.
+    ///
+    /// # Safety
+    /// The CPU must support AVX512F (see [`super::avx512_available`]).
+    #[target_feature(enable = "avx512f")]
+    #[inline]
+    unsafe fn hsum4(acc0: __m512, acc1: __m512, acc2: __m512, acc3: __m512) -> f32 {
+        let acc = _mm512_add_ps(_mm512_add_ps(acc0, acc1), _mm512_add_ps(acc2, acc3));
+        _mm512_reduce_add_ps(acc)
+    }
+
+    /// 4×16-lane FMA dot (64 floats per iteration), 16-lane cleanup,
+    /// scalar tail — the AVX-512 analogue of [`super::dot`].
+    ///
+    /// # Safety
+    /// The CPU must support AVX512F (see [`super::avx512_available`]).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm512_setzero_ps();
+        let mut acc1 = _mm512_setzero_ps();
+        let mut acc2 = _mm512_setzero_ps();
+        let mut acc3 = _mm512_setzero_ps();
+        let mut i = 0;
+        while i + 64 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)), acc0);
+            acc1 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i + 16)),
+                _mm512_loadu_ps(pb.add(i + 16)),
+                acc1,
+            );
+            acc2 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i + 32)),
+                _mm512_loadu_ps(pb.add(i + 32)),
+                acc2,
+            );
+            acc3 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i + 48)),
+                _mm512_loadu_ps(pb.add(i + 48)),
+                acc3,
+            );
+            i += 64;
+        }
+        while i + 16 <= n {
+            acc0 = _mm512_fmadd_ps(_mm512_loadu_ps(pa.add(i)), _mm512_loadu_ps(pb.add(i)), acc0);
+            i += 16;
+        }
+        let mut s = hsum4(acc0, acc1, acc2, acc3);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Two-row AVX-512 dot: shared `a` loads, independent accumulator
+    /// sets, per-row arithmetic identical to [`dot`].
+    ///
+    /// # Safety
+    /// The CPU must support AVX512F (see [`super::avx512_available`]).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot2(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+        let n = a.len().min(b0.len()).min(b1.len());
+        let (pa, p0, p1) = (a.as_ptr(), b0.as_ptr(), b1.as_ptr());
+        let mut r0a = _mm512_setzero_ps();
+        let mut r0b = _mm512_setzero_ps();
+        let mut r0c = _mm512_setzero_ps();
+        let mut r0d = _mm512_setzero_ps();
+        let mut r1a = _mm512_setzero_ps();
+        let mut r1b = _mm512_setzero_ps();
+        let mut r1c = _mm512_setzero_ps();
+        let mut r1d = _mm512_setzero_ps();
+        let mut i = 0;
+        while i + 64 <= n {
+            let va0 = _mm512_loadu_ps(pa.add(i));
+            let va1 = _mm512_loadu_ps(pa.add(i + 16));
+            let va2 = _mm512_loadu_ps(pa.add(i + 32));
+            let va3 = _mm512_loadu_ps(pa.add(i + 48));
+            r0a = _mm512_fmadd_ps(va0, _mm512_loadu_ps(p0.add(i)), r0a);
+            r0b = _mm512_fmadd_ps(va1, _mm512_loadu_ps(p0.add(i + 16)), r0b);
+            r0c = _mm512_fmadd_ps(va2, _mm512_loadu_ps(p0.add(i + 32)), r0c);
+            r0d = _mm512_fmadd_ps(va3, _mm512_loadu_ps(p0.add(i + 48)), r0d);
+            r1a = _mm512_fmadd_ps(va0, _mm512_loadu_ps(p1.add(i)), r1a);
+            r1b = _mm512_fmadd_ps(va1, _mm512_loadu_ps(p1.add(i + 16)), r1b);
+            r1c = _mm512_fmadd_ps(va2, _mm512_loadu_ps(p1.add(i + 32)), r1c);
+            r1d = _mm512_fmadd_ps(va3, _mm512_loadu_ps(p1.add(i + 48)), r1d);
+            i += 64;
+        }
+        while i + 16 <= n {
+            let va = _mm512_loadu_ps(pa.add(i));
+            r0a = _mm512_fmadd_ps(va, _mm512_loadu_ps(p0.add(i)), r0a);
+            r1a = _mm512_fmadd_ps(va, _mm512_loadu_ps(p1.add(i)), r1a);
+            i += 16;
+        }
+        let mut s0 = hsum4(r0a, r0b, r0c, r0d);
+        let mut s1 = hsum4(r1a, r1b, r1c, r1d);
+        while i < n {
+            s0 += a[i] * b0[i];
+            s1 += a[i] * b1[i];
+            i += 1;
+        }
+        (s0, s1)
+    }
+
+    /// Genuine single-pass 4-row AVX-512 dot (16 zmm accumulators + 4
+    /// shared loads fit the 32-register file); per-row arithmetic
+    /// identical to [`dot`].
+    ///
+    /// # Safety
+    /// The CPU must support AVX512F (see [`super::avx512_available`]).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot4(
+        a: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> [f32; 4] {
+        let n = a.len().min(b0.len()).min(b1.len()).min(b2.len()).min(b3.len());
+        let (pa, p0, p1, p2, p3) =
+            (a.as_ptr(), b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+        let mut acc = [[_mm512_setzero_ps(); 4]; 4];
+        let mut i = 0;
+        while i + 64 <= n {
+            let va = [
+                _mm512_loadu_ps(pa.add(i)),
+                _mm512_loadu_ps(pa.add(i + 16)),
+                _mm512_loadu_ps(pa.add(i + 32)),
+                _mm512_loadu_ps(pa.add(i + 48)),
+            ];
+            for (r, pr) in [p0, p1, p2, p3].into_iter().enumerate() {
+                for (k, &vak) in va.iter().enumerate() {
+                    acc[r][k] =
+                        _mm512_fmadd_ps(vak, _mm512_loadu_ps(pr.add(i + k * 16)), acc[r][k]);
+                }
+            }
+            i += 64;
+        }
+        while i + 16 <= n {
+            let va = _mm512_loadu_ps(pa.add(i));
+            for (r, pr) in [p0, p1, p2, p3].into_iter().enumerate() {
+                acc[r][0] = _mm512_fmadd_ps(va, _mm512_loadu_ps(pr.add(i)), acc[r][0]);
+            }
+            i += 16;
+        }
+        let mut s = [
+            hsum4(acc[0][0], acc[0][1], acc[0][2], acc[0][3]),
+            hsum4(acc[1][0], acc[1][1], acc[1][2], acc[1][3]),
+            hsum4(acc[2][0], acc[2][1], acc[2][2], acc[2][3]),
+            hsum4(acc[3][0], acc[3][1], acc[3][2], acc[3][3]),
+        ];
+        while i < n {
+            s[0] += a[i] * b0[i];
+            s[1] += a[i] * b1[i];
+            s[2] += a[i] * b2[i];
+            s[3] += a[i] * b3[i];
+            i += 1;
+        }
+        s
+    }
 }

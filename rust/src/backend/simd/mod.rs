@@ -259,8 +259,9 @@ pub fn dot_with(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
     match isa {
         Isa::Scalar => scalar::dot(a, b),
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: avx2+fma verified by `supported`.
-        Isa::Avx2 => unsafe { avx2::dot(a, b) },
+        // SAFETY: avx2+fma verified by `supported`; the optional AVX-512
+        // upgrade inside `dot_best` re-checks avx512f at runtime.
+        Isa::Avx2 => unsafe { avx2::dot_best(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         Isa::Avx2 => scalar::dot(a, b),
         #[cfg(target_arch = "aarch64")]
@@ -268,6 +269,59 @@ pub fn dot_with(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
         Isa::Neon => unsafe { neon::dot(a, b) },
         #[cfg(not(target_arch = "aarch64"))]
         Isa::Neon => scalar::dot(a, b),
+    }
+}
+
+/// Two dot products of `b0`/`b1` against one shared `a` (the decoded
+/// weight levels) — the 2-row microkernel behind the batched shared
+/// decode. Contract: each returned value is **bitwise-equal** to
+/// `dot_with(isa, a, bN)` — the multi-row kernels keep one accumulator set
+/// and the single-row reduction order per row, sharing only the `a` loads
+/// (`tests/simd_kernels.rs` asserts this per ISA).
+pub fn dot2_with(isa: Isa, a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(a.len(), b0.len());
+    debug_assert_eq!(a.len(), b1.len());
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    match isa {
+        Isa::Scalar => scalar::dot2(a, b0, b1),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `supported`.
+        Isa::Avx2 => unsafe { avx2::dot2_best(a, b0, b1) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::dot2(a, b0, b1),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        Isa::Neon => unsafe { neon::dot2(a, b0, b1) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::dot2(a, b0, b1),
+    }
+}
+
+/// Four dot products against one shared `a` — the 4-row microkernel; same
+/// per-row bitwise contract as [`dot2_with`].
+pub fn dot4_with(
+    isa: Isa,
+    a: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) -> [f32; 4] {
+    debug_assert_eq!(a.len(), b0.len());
+    debug_assert_eq!(a.len(), b3.len());
+    let isa = if supported(isa) { isa } else { Isa::Scalar };
+    match isa {
+        Isa::Scalar => scalar::dot4(a, b0, b1, b2, b3),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: avx2+fma verified by `supported`.
+        Isa::Avx2 => unsafe { avx2::dot4_best(a, b0, b1, b2, b3) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Isa::Avx2 => scalar::dot4(a, b0, b1, b2, b3),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is an aarch64 baseline feature.
+        Isa::Neon => unsafe { neon::dot4(a, b0, b1, b2, b3) },
+        #[cfg(not(target_arch = "aarch64"))]
+        Isa::Neon => scalar::dot4(a, b0, b1, b2, b3),
     }
 }
 
@@ -356,6 +410,13 @@ pub struct KernelScratch {
     pub xt: AlignedF32,
     /// Per-group sums of `xt` (carries the shift term).
     pub gsum: Vec<f32>,
+    /// Folded activation rows for the batched shared kernel (aligned; row
+    /// stride padded to a full 16-lane chunk so every row starts
+    /// cache-line aligned).
+    pub xt_rows: AlignedF32,
+    /// Per-group sums for each batched activation row (row-major,
+    /// `n_groups` per row).
+    pub gsum_rows: Vec<f32>,
 }
 
 impl KernelScratch {

@@ -146,3 +146,109 @@ pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
     }
     s
 }
+
+/// Two dot products against one shared left operand (the decoded weight
+/// levels): one pass over `a`, two independent 4-accumulator sets. Each
+/// row's arithmetic — accumulator assignment, cleanup loop, `vaddvq`
+/// reduction, scalar tail — is exactly [`dot`]'s, so per-row results are
+/// bitwise-equal to two single-row calls; only the `a` loads are shared.
+///
+/// # Safety
+/// NEON must be available (always true on aarch64).
+pub unsafe fn dot2(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    let n = a.len().min(b0.len()).min(b1.len());
+    let (pa, p0, p1) = (a.as_ptr(), b0.as_ptr(), b1.as_ptr());
+    let mut r0a = vdupq_n_f32(0.0);
+    let mut r0b = vdupq_n_f32(0.0);
+    let mut r0c = vdupq_n_f32(0.0);
+    let mut r0d = vdupq_n_f32(0.0);
+    let mut r1a = vdupq_n_f32(0.0);
+    let mut r1b = vdupq_n_f32(0.0);
+    let mut r1c = vdupq_n_f32(0.0);
+    let mut r1d = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let va0 = vld1q_f32(pa.add(i));
+        let va1 = vld1q_f32(pa.add(i + 4));
+        let va2 = vld1q_f32(pa.add(i + 8));
+        let va3 = vld1q_f32(pa.add(i + 12));
+        r0a = vfmaq_f32(r0a, va0, vld1q_f32(p0.add(i)));
+        r0b = vfmaq_f32(r0b, va1, vld1q_f32(p0.add(i + 4)));
+        r0c = vfmaq_f32(r0c, va2, vld1q_f32(p0.add(i + 8)));
+        r0d = vfmaq_f32(r0d, va3, vld1q_f32(p0.add(i + 12)));
+        r1a = vfmaq_f32(r1a, va0, vld1q_f32(p1.add(i)));
+        r1b = vfmaq_f32(r1b, va1, vld1q_f32(p1.add(i + 4)));
+        r1c = vfmaq_f32(r1c, va2, vld1q_f32(p1.add(i + 8)));
+        r1d = vfmaq_f32(r1d, va3, vld1q_f32(p1.add(i + 12)));
+        i += 16;
+    }
+    while i + 4 <= n {
+        let va = vld1q_f32(pa.add(i));
+        r0a = vfmaq_f32(r0a, va, vld1q_f32(p0.add(i)));
+        r1a = vfmaq_f32(r1a, va, vld1q_f32(p1.add(i)));
+        i += 4;
+    }
+    let mut s0 = vaddvq_f32(vaddq_f32(vaddq_f32(r0a, r0b), vaddq_f32(r0c, r0d)));
+    let mut s1 = vaddvq_f32(vaddq_f32(vaddq_f32(r1a, r1b), vaddq_f32(r1c, r1d)));
+    while i < n {
+        s0 += a[i] * b0[i];
+        s1 += a[i] * b1[i];
+        i += 1;
+    }
+    (s0, s1)
+}
+
+/// Genuine single-pass 4-row dot: 16 accumulator registers plus 4 shared
+/// loads fit aarch64's 32-register vector file (unlike AVX2's 16). Per-row
+/// arithmetic is exactly [`dot`]'s, so each lane of the result is
+/// bitwise-equal to the corresponding single-row call.
+///
+/// # Safety
+/// NEON must be available (always true on aarch64).
+pub unsafe fn dot4(
+    a: &[f32],
+    b0: &[f32],
+    b1: &[f32],
+    b2: &[f32],
+    b3: &[f32],
+) -> [f32; 4] {
+    let n = a.len().min(b0.len()).min(b1.len()).min(b2.len()).min(b3.len());
+    let (pa, p0, p1, p2, p3) = (a.as_ptr(), b0.as_ptr(), b1.as_ptr(), b2.as_ptr(), b3.as_ptr());
+    let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+    let mut i = 0;
+    while i + 16 <= n {
+        let va = [
+            vld1q_f32(pa.add(i)),
+            vld1q_f32(pa.add(i + 4)),
+            vld1q_f32(pa.add(i + 8)),
+            vld1q_f32(pa.add(i + 12)),
+        ];
+        for (r, pr) in [p0, p1, p2, p3].into_iter().enumerate() {
+            for (k, &vak) in va.iter().enumerate() {
+                acc[r][k] = vfmaq_f32(acc[r][k], vak, vld1q_f32(pr.add(i + k * 4)));
+            }
+        }
+        i += 16;
+    }
+    while i + 4 <= n {
+        let va = vld1q_f32(pa.add(i));
+        for (r, pr) in [p0, p1, p2, p3].into_iter().enumerate() {
+            acc[r][0] = vfmaq_f32(acc[r][0], va, vld1q_f32(pr.add(i)));
+        }
+        i += 4;
+    }
+    let mut s = [
+        vaddvq_f32(vaddq_f32(vaddq_f32(acc[0][0], acc[0][1]), vaddq_f32(acc[0][2], acc[0][3]))),
+        vaddvq_f32(vaddq_f32(vaddq_f32(acc[1][0], acc[1][1]), vaddq_f32(acc[1][2], acc[1][3]))),
+        vaddvq_f32(vaddq_f32(vaddq_f32(acc[2][0], acc[2][1]), vaddq_f32(acc[2][2], acc[2][3]))),
+        vaddvq_f32(vaddq_f32(vaddq_f32(acc[3][0], acc[3][1]), vaddq_f32(acc[3][2], acc[3][3]))),
+    ];
+    while i < n {
+        s[0] += a[i] * b0[i];
+        s[1] += a[i] * b1[i];
+        s[2] += a[i] * b2[i];
+        s[3] += a[i] * b3[i];
+        i += 1;
+    }
+    s
+}

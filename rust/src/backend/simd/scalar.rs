@@ -69,6 +69,19 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     crate::tensor::matrix::dot(a, b, k)
 }
 
+/// Two dot products against one shared left operand. The scalar oracle
+/// defines the multi-row contract: each row is *exactly* [`dot`], so every
+/// SIMD 2-/4-row microkernel must be bitwise-equal to its single-row dot
+/// per row — amortization may only come from sharing loads of `a`.
+pub fn dot2(a: &[f32], b0: &[f32], b1: &[f32]) -> (f32, f32) {
+    (dot(a, b0), dot(a, b1))
+}
+
+/// Four dot products against one shared left operand; see [`dot2`].
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    [dot(a, b0), dot(a, b1), dot(a, b2), dot(a, b3)]
+}
+
 /// Dequantize u8 codes with an affine (`out[j] = min + scale * codes[j]`) —
 /// the quantized KV-cache read path. The SIMD variants use FMA, so their
 /// roundings may differ from this by one ULP; kv8 consumers are

@@ -75,7 +75,7 @@ fn print_help() {
          [--max-batch N] [--max-new-tokens N]\n  \
          sinq serve --listen ADDR:PORT [--model <name>] [--max-batch N] [--max-queue N]\n             \
          [--max-context N] [--max-new-tokens N] [--kv-bits 32|8] [--log-json]\n             \
-         [--page-size N] [--kv-pages N] [--drift-sample N]\n             \
+         [--threads N] [--page-size N] [--kv-pages N] [--drift-sample N]\n             \
          [--request-timeout-ms N] [--max-engine-restarts N]\n             \
          [--method <m> --bits <b> | --quantized f.stz]\n  \
          sinq table <1|2|3|4|5|6|7|8|9|10|16|17|18|19|pareto|ablations|figs|all> [--fast]\n\n\
@@ -91,7 +91,9 @@ fn print_help() {
          --log-json prints one JSON line per request; errors use one JSON envelope\n  \
          {{\"error\":{{\"message\",\"type\"}}}}; 503 + Retry-After past --max-queue;\n  \
          --kv-bits 8 packs decode KV caches to u8 with per-head scales (~4x less\n  \
-         memory per page; 32 = bit-identical default); KV memory is a shared pool of\n  \
+         memory per page; 32 = bit-identical default); --threads N sizes the\n  \
+         persistent kernel worker pool (0/absent = all cores; SINQ_THREADS env\n  \
+         overrides; tokens are bit-identical at any count); KV memory is a shared pool of\n  \
          --page-size-position pages (--kv-pages overrides the pool size) with prefix\n  \
          caching across shared prompt prefixes (prefix_hit_rate on /metrics);\n  \
          disconnected SSE clients are evicted at the next step boundary;\n  \
@@ -262,7 +264,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         kv_bits == KvBits::F32 || spec.kind == BackendKind::Native,
         "--kv-bits 8 quantizes the native decoders' KV caches; rerun with --backend native"
     );
-    spec.engine = spec.engine.with_max_batch(max_batch).with_kv_bits(kv_bits);
+    spec.engine = spec
+        .engine
+        .with_max_batch(max_batch)
+        .with_kv_bits(kv_bits)
+        // 0 = auto (all cores); `SINQ_THREADS` overrides either way.
+        .with_threads(args.num("threads", 0));
     let wants_quantize = args.opt("method").is_some() || args.opt("bits").is_some();
     if wants_quantize {
         // `serve --backend native --method sinq --bits 4`: quantize

@@ -40,9 +40,16 @@ pub enum Phase {
     Attend,
     Activation,
     TokenPick,
+    /// Worker-pool hand-off + join time inside
+    /// [`crate::util::threadpool::ThreadPool::for_each_index`]. Unlike the
+    /// other phases this one *nests* inside whichever phase dispatched the
+    /// parallel loop (a linear phase or `KvAttend`), so its share answers
+    /// "how much of decode is parallel overhead vs kernel time" rather
+    /// than adding a disjoint slice of wall-clock.
+    ParDispatch,
 }
 
-pub const PHASE_COUNT: usize = 17;
+pub const PHASE_COUNT: usize = 18;
 
 pub const ALL_PHASES: [Phase; PHASE_COUNT] = [
     Phase::Embed,
@@ -62,6 +69,7 @@ pub const ALL_PHASES: [Phase; PHASE_COUNT] = [
     Phase::Attend,
     Phase::Activation,
     Phase::TokenPick,
+    Phase::ParDispatch,
 ];
 
 impl Phase {
@@ -84,6 +92,7 @@ impl Phase {
             Phase::Attend => "attend",
             Phase::Activation => "activation",
             Phase::TokenPick => "token_pick",
+            Phase::ParDispatch => "par_dispatch",
         }
     }
 

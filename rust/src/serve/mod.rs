@@ -546,6 +546,7 @@ fn handle_health(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std:
         ("engine_panics", Json::Num(m.engine_panics_total.load(Ordering::Relaxed) as f64)),
         ("backend", Json::Str("native".into())),
         ("simd", Json::Str(simd::kernel_name().into())),
+        ("threads", Json::Num(state.be.threads as f64)),
         ("model", Json::Str(state.model.clone())),
         ("model_shape", model_shape(state)),
         ("build", build_info()),
@@ -623,6 +624,7 @@ fn handle_stats(w: &mut TcpStream, state: &ConnState, keep_alive: bool) -> std::
     let body = Json::obj(vec![
         ("uptime_secs", Json::Num(m.uptime_secs())),
         ("kernel", Json::Str(simd::kernel_name().into())),
+        ("threads", Json::Num(state.be.threads as f64)),
         ("model", model_shape(state)),
         ("build", build_info()),
         ("requests", requests),
@@ -1200,10 +1202,12 @@ fn install_interrupt_handler() {
 pub fn run(spec: &BackendSpec, opts: &ServeOpts) -> anyhow::Result<()> {
     let be = Arc::new(backend::build_native(spec)?);
     println!(
-        "native engine ready: model '{}', {} quantized linears, simd kernel '{}', kv-bits {}",
+        "native engine ready: model '{}', {} quantized linears, simd kernel '{}', \
+         {} worker threads, kv-bits {}",
         be.cfg.name,
         be.quantized_layer_count(),
         simd::kernel_name(),
+        be.threads,
         be.kv_bits().bits()
     );
     if let Some(report) = be.quant_report() {

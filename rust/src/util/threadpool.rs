@@ -1,12 +1,36 @@
-//! Fixed-size worker pool (std-only; no rayon in the offline environment).
+//! Persistent fixed-size worker pool (std-only; no rayon in the offline
+//! environment).
 //!
-//! The quantization coordinator submits one job per model layer; workers pull
-//! from a shared queue so large layers do not serialize the pipeline. A scoped
-//! `map_indexed` helper preserves output order without allocation games.
+//! Workers are spawned once and condvar-parked between jobs, so parallel
+//! callers pay a queue push + wake instead of a `thread::spawn` per call.
+//! Two entry points share the pool:
+//!
+//! * [`ThreadPool::submit`] / [`ThreadPool::wait_idle`] — fire-and-forget
+//!   jobs (the quantization coordinator submits one per model layer).
+//! * [`ThreadPool::for_each_index`] — a *scoped* parallel-for: the caller
+//!   hands out indices `0..n` to itself plus up to `width - 1` pool
+//!   workers and blocks until every shard has finished, so the shard
+//!   closure may borrow from the caller's stack. [`map_indexed`] builds an
+//!   order-preserving map on top of it.
+//!
+//! The process-wide pool behind [`global`] is created on first use (or
+//! explicitly sized by [`init_global`] at engine start) with
+//! [`resolve_threads`] worker threads. Shard and job panics are isolated:
+//! a panicking job can neither kill a worker nor hang a waiting caller —
+//! the caller observes the panic after all shards have drained.
+//!
+//! Nested parallelism runs inline: a `for_each_index` issued *from* a pool
+//! worker executes single-threaded on that worker. Workers therefore never
+//! block waiting on other workers, which makes caller-blocks-on-latch
+//! deadlock-free by construction.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
+
+use crate::obs::profiler::{self, Phase};
 
 /// A pool of `n` OS threads executing boxed jobs from a FIFO queue.
 pub struct ThreadPool {
@@ -23,6 +47,48 @@ struct Inner {
 struct Queue {
     jobs: std::collections::VecDeque<Box<dyn FnOnce() + Send + 'static>>,
     shutdown: bool,
+}
+
+thread_local! {
+    /// True while the current thread is a pool worker running a job; used
+    /// to run nested parallel-fors inline instead of deadlocking on the
+    /// queue (see module docs).
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Effective worker count for a requested thread setting: the
+/// `SINQ_THREADS` environment override wins when set to a positive
+/// integer, then an explicit non-zero `requested`, then every available
+/// core. The old `.min(8)` cap is gone on purpose — parked workers cost
+/// nothing while idle, so there is no reason to leave cores on the table.
+pub fn resolve_threads(requested: usize) -> usize {
+    if let Ok(v) = std::env::var("SINQ_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    if requested > 0 {
+        return requested;
+    }
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide persistent pool, created on first use with
+/// [`resolve_threads`]`(0)` workers (every core, unless `SINQ_THREADS`
+/// says otherwise).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(resolve_threads(0)))
+}
+
+/// Size the process-wide pool explicitly (engine start calls this with
+/// the resolved `EngineConfig::threads`). The first sizing wins — the
+/// pool is persistent — so later calls just report the existing size.
+pub fn init_global(n: usize) -> usize {
+    GLOBAL.get_or_init(|| ThreadPool::new(n)).size()
 }
 
 impl ThreadPool {
@@ -72,6 +138,132 @@ impl ThreadPool {
     pub fn size(&self) -> usize {
         self.handles.len()
     }
+
+    /// Scoped parallel-for: run `f(i)` for every `i in 0..n` across the
+    /// calling thread plus up to `width - 1` pool workers, returning once
+    /// every index has completed. Indices are handed out through a shared
+    /// atomic counter, so shards load-balance; `f` may borrow from the
+    /// caller's stack because the caller blocks on a completion latch
+    /// before returning.
+    ///
+    /// Panic contract: if any shard panics, the remaining shards still
+    /// drain (workers survive), and the panic surfaces on the calling
+    /// thread after the latch releases — never a hang, never a dead
+    /// worker.
+    ///
+    /// Called from a pool worker (nested parallelism), this runs inline
+    /// single-threaded; the outer parallel level already owns the cores.
+    pub fn for_each_index(&self, n: usize, width: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        let width = width.max(1).min(self.size() + 1).min(n);
+        if width == 1 || IN_POOL_WORKER.with(|w| w.get()) {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let helpers = width - 1;
+        let scope = Arc::new(ParFor {
+            f: f as *const (dyn Fn(usize) + Sync),
+            n,
+            next: AtomicUsize::new(0),
+            pending: Mutex::new(helpers),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        // Hand-off: queue one shard-runner job per helper.
+        let t0 = profiler::start();
+        for _ in 0..helpers {
+            let s = scope.clone();
+            self.submit(move || {
+                if catch_unwind(AssertUnwindSafe(|| run_shards(&s))).is_err() {
+                    s.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut left = s.pending.lock().unwrap();
+                *left -= 1;
+                if *left == 0 {
+                    s.done.notify_all();
+                }
+            });
+        }
+        profiler::stop(Phase::ParDispatch, t0);
+        // The caller is a full participant in the shard loop.
+        let caller = catch_unwind(AssertUnwindSafe(|| run_shards(&scope)));
+        // Join: wait for every helper before touching the panic state —
+        // this latch is what makes the borrow of `f` sound.
+        let t1 = profiler::start();
+        {
+            let mut left = scope.pending.lock().unwrap();
+            while *left != 0 {
+                left = scope.done.wait(left).unwrap();
+            }
+        }
+        profiler::stop(Phase::ParDispatch, t1);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if scope.panicked.load(Ordering::SeqCst) {
+            panic!("worker shard panicked in ThreadPool::for_each_index");
+        }
+    }
+}
+
+/// Shared state of one `for_each_index` call. `f` is a raw pointer (not a
+/// transmuted `'static` reference) so the copies still held by worker-job
+/// closures after the caller returns are inert, not dangling references.
+struct ParFor {
+    f: *const (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `f` is only dereferenced inside `run_shards`, which can only
+// execute while the originating `for_each_index` call is blocked on the
+// completion latch — the closure it points at is alive for every deref.
+unsafe impl Send for ParFor {}
+unsafe impl Sync for ParFor {}
+
+fn run_shards(s: &ParFor) {
+    // SAFETY: see the `Send`/`Sync` impls above — the caller outlives
+    // every shard by construction of the latch.
+    let f = unsafe { &*s.f };
+    loop {
+        let i = s.next.fetch_add(1, Ordering::SeqCst);
+        if i >= s.n {
+            break;
+        }
+        f(i);
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    IN_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = inner.cond.wait(q).unwrap();
+            }
+        };
+        inner.active.fetch_add(1, Ordering::SeqCst);
+        // Isolate job panics: a poisoned closure must not take the worker
+        // (and with it every future parallel caller) down with it.
+        if catch_unwind(AssertUnwindSafe(job)).is_err() {
+            eprintln!("sinq-worker: job panicked (worker kept alive)");
+        }
+        inner.active.fetch_sub(1, Ordering::SeqCst);
+    }
 }
 
 impl Drop for ThreadPool {
@@ -87,52 +279,43 @@ impl Drop for ThreadPool {
     }
 }
 
-fn worker_loop(inner: &Inner) {
-    loop {
-        let job = {
-            let mut q = inner.queue.lock().unwrap();
-            loop {
-                if let Some(j) = q.jobs.pop_front() {
-                    break j;
-                }
-                if q.shutdown {
-                    return;
-                }
-                q = inner.cond.wait(q).unwrap();
-            }
-        };
-        inner.active.fetch_add(1, Ordering::SeqCst);
-        job();
-        inner.active.fetch_sub(1, Ordering::SeqCst);
-    }
-}
+/// Raw-pointer wrapper that asserts cross-thread use is externally
+/// synchronized (each parallel shard touches a disjoint slot). Shared
+/// with the kernel layer so scoped parallel loops can write disjoint
+/// output ranges without `'static` gymnastics.
+pub struct SendPtr<T>(pub *mut T);
+// SAFETY: callers guarantee disjoint access per index; see `map_indexed`.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
 
-/// Apply `f` to each item of `items` across `threads` scoped threads,
-/// returning outputs in input order. Uses `std::thread::scope`, so `f` may
-/// borrow from the caller.
+/// Apply `f` to each item of `items` across up to `threads` lanes of the
+/// persistent [`global`] pool, returning outputs in input order. `f` may
+/// borrow from the caller (the call is scoped — see
+/// [`ThreadPool::for_each_index`]). `threads <= 1` runs inline with no
+/// pool traffic at all.
 pub fn map_indexed<T, U, F>(items: &[T], threads: usize, f: F) -> Vec<U>
 where
     T: Sync,
     U: Send,
     F: Fn(usize, &T) -> U + Sync,
 {
-    let threads = threads.max(1).min(items.len().max(1));
-    let next = AtomicUsize::new(0);
-    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
-    let slots: Vec<Mutex<&mut Option<U>>> = out.iter_mut().map(Mutex::new).collect();
-    thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::SeqCst);
-                if i >= items.len() {
-                    break;
-                }
-                let v = f(i, &items[i]);
-                **slots[i].lock().unwrap() = Some(v);
-            });
-        }
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out: Vec<Option<U>> = (0..n).map(|_| None).collect();
+    let slots = SendPtr(out.as_mut_ptr());
+    global().for_each_index(n, threads, &|i| {
+        let v = f(i, &items[i]);
+        // SAFETY: `for_each_index` hands each index to exactly one shard,
+        // so this is the only access to slot `i` for the whole call, and
+        // the latch orders it before the caller reads `out` back.
+        unsafe { *slots.0.add(i) = Some(v) };
     });
-    drop(slots);
     out.into_iter().map(|o| o.expect("worker produced value")).collect()
 }
 
@@ -177,5 +360,105 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.submit(|| thread::sleep(std::time::Duration::from_millis(5)));
         drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn pool_drop_joins_workers_after_task_panic() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("injected job panic"));
+        let c = counter.clone();
+        // The worker that ate the panic (or its sibling) must still be
+        // alive to run this.
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        drop(pool); // must not hang or panic
+    }
+
+    #[test]
+    fn for_each_index_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..101).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each_index(hits.len(), 8, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i} hit count");
+        }
+    }
+
+    #[test]
+    fn for_each_index_propagates_shard_panic_without_hanging() {
+        let pool = ThreadPool::new(2);
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each_index(64, 3, &|i| {
+                if i == 17 {
+                    panic!("injected shard panic");
+                }
+            });
+        }));
+        assert!(err.is_err(), "shard panic must reach the caller");
+        // Pool must still work afterwards: the panicking shard may have
+        // run on a worker (kept alive) or on the caller (caught above).
+        let n = AtomicU64::new(0);
+        pool.for_each_index(10, 3, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 10);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn map_indexed_panic_reaches_caller() {
+        let items: Vec<u32> = (0..40).collect();
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            map_indexed(&items, 4, |i, &x| {
+                if i == 11 {
+                    panic!("injected map panic");
+                }
+                x
+            })
+        }));
+        assert!(err.is_err());
+        // The global pool survives for the next caller.
+        let ok = map_indexed(&items, 4, |_, &x| x + 1);
+        assert_eq!(ok.len(), items.len());
+    }
+
+    #[test]
+    fn nested_for_each_index_runs_inline_and_completes() {
+        let items: Vec<u32> = (0..12).collect();
+        // Outer map uses the global pool; the inner parallel-for issued
+        // from worker threads must run inline rather than deadlock.
+        let out = map_indexed(&items, 4, |_, &x| {
+            let acc = AtomicU64::new(0);
+            global().for_each_index(8, 4, &|j| {
+                acc.fetch_add(j as u64, Ordering::SeqCst);
+            });
+            acc.load(Ordering::SeqCst) + x as u64
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 28 + i as u64);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_precedence() {
+        // The suite may itself run under a CI `SINQ_THREADS` matrix leg,
+        // so assert the override when present and the fallback when not
+        // (never mutate the process environment from a test).
+        match std::env::var("SINQ_THREADS").ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(n) if n > 0 => {
+                assert_eq!(resolve_threads(0), n);
+                assert_eq!(resolve_threads(3), n, "env override beats explicit request");
+            }
+            _ => {
+                assert_eq!(resolve_threads(3), 3);
+                assert!(resolve_threads(0) >= 1, "auto resolves to at least one core");
+            }
+        }
     }
 }

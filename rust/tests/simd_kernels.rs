@@ -6,7 +6,9 @@
 //!   every supported ISA, for every bit width 2..=8 and awkward shapes
 //!   (lengths not divisible by the lane width, 0/1 rows, group-boundary
 //!   straddles);
-//! * dot reductions agree to float tolerance and are deterministic;
+//! * dot reductions agree to float tolerance and are deterministic, and
+//!   the 2-/4-row dot microkernels are **bit-identical** per lane to the
+//!   single-row `dot` within every ISA;
 //! * the tensor-level entry points (`to_dense`, `dequant_matmul`,
 //!   `dequant_matvec`, `dequant_matmul_shared`) agree across ISAs, and the
 //!   matvec ≡ shared-row bitwise contract holds *within* each ISA;
@@ -19,7 +21,7 @@
 
 use std::sync::{Mutex, MutexGuard, OnceLock};
 
-use sinq::backend::simd::{self, Isa};
+use sinq::backend::simd::{self, Isa, KernelScratch};
 use sinq::backend::{BatchDecoder, NativeBackend, QuantizedTensor};
 use sinq::coordinator::scheduler::quantize_simple;
 use sinq::fmt::pack;
@@ -214,6 +216,110 @@ fn forced_isa_handles_zero_and_one_row_activations() {
         assert_eq!(y1.row(0), qt.dequant_matvec(x1.row(0)).as_slice(), "{isa:?}");
         let y0 = qt.dequant_matmul(&x0, 1);
         assert_eq!((y0.rows, y0.cols), (0, 9), "{isa:?}");
+    }
+}
+
+// =====================================================================
+// Multi-row microkernels: bitwise parity with the single-row oracle
+// =====================================================================
+
+/// The 2-/4-row dot kernels amortize the shared `a` operand but must keep
+/// each lane's accumulator structure identical to the single-row `dot` —
+/// bit-for-bit, per ISA — or batched decode drifts from single-sequence.
+#[test]
+fn multi_row_dots_bitwise_equal_single_row_dot() {
+    let mut rng = Rng::new(41);
+    for n in [1usize, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 64, 100, 257] {
+        let a: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()).collect();
+        for isa in std::iter::once(Isa::Scalar).chain(simd_isas()) {
+            let want: Vec<u32> = xs.iter().map(|x| simd::dot_with(isa, &a, x).to_bits()).collect();
+            let (d0, d1) = simd::dot2_with(isa, &a, &xs[0], &xs[1]);
+            assert_eq!(d0.to_bits(), want[0], "{isa:?} n={n} dot2 lane 0");
+            assert_eq!(d1.to_bits(), want[1], "{isa:?} n={n} dot2 lane 1");
+            let d4 = simd::dot4_with(isa, &a, &xs[0], &xs[1], &xs[2], &xs[3]);
+            for (lane, d) in d4.iter().enumerate() {
+                assert_eq!(d.to_bits(), want[lane], "{isa:?} n={n} dot4 lane {lane}");
+            }
+        }
+    }
+}
+
+/// The batched-decode contract across the whole dispatch surface: shared
+/// matmul ≡ per-row matvec bit-for-bit at every forced ISA, thread count,
+/// and batch size, on ragged shapes (cols=100 → tail group at g=64,
+/// rows=37 → ragged row tile, batches 1/2/3/5 → 4-/2-/1-row microkernel
+/// mixes).
+#[test]
+fn shared_matmul_bitwise_equals_matvec_across_threads_and_batches() {
+    let mut rng = Rng::new(42);
+    let w = Matrix::randn(37, 100, 0.05, &mut rng);
+    let q = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+    let qt = QuantizedTensor::from_linear(&q).unwrap();
+    for isa in std::iter::once(Isa::Scalar).chain(simd_isas()) {
+        let _guard = force_isa(isa);
+        for batch in [1usize, 2, 3, 5] {
+            let x = Matrix::randn(batch, 100, 1.0, &mut rng);
+            for threads in [1usize, 2, 8] {
+                let y = qt.dequant_matmul_shared(&x, threads);
+                for r in 0..batch {
+                    assert_eq!(
+                        y.row(r),
+                        qt.dequant_matvec(x.row(r)).as_slice(),
+                        "{isa:?} batch={batch} threads={threads} row {r}: \
+                         shared kernel drifted from matvec"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Same contract on a shape big enough (8·256·128 = 2^18) to cross the
+/// parallel threshold, so the row tiles really run on the persistent
+/// worker pool rather than inline.
+#[test]
+fn pooled_shared_matmul_bitwise_equals_matvec() {
+    let mut rng = Rng::new(43);
+    let w = Matrix::randn(256, 128, 0.05, &mut rng);
+    let q = quantize_matrix(&w, &QuantConfig::new(Method::Sinq, 4), None).unwrap();
+    let qt = QuantizedTensor::from_linear(&q).unwrap();
+    let x = Matrix::randn(8, 128, 1.0, &mut rng);
+    let want = qt.dequant_matmul_shared(&x, 1);
+    for threads in [2usize, 8] {
+        let y = qt.dequant_matmul_shared(&x, threads);
+        assert_eq!(y.data, want.data, "threads={threads} changed pooled tiling results");
+    }
+    for r in 0..x.rows {
+        assert_eq!(want.row(r), qt.dequant_matvec(x.row(r)).as_slice(), "row {r}");
+    }
+}
+
+/// Scratch reuse across interleaved shapes must not change results (the
+/// batch decoder threads one `KernelScratch` through every layer's shared
+/// matmul each step).
+#[test]
+fn shared_matmul_scratch_reuse_is_bitwise_stable() {
+    let mut rng = Rng::new(44);
+    let w_wide = Matrix::randn(19, 96, 0.05, &mut rng);
+    let w_narrow = Matrix::randn(23, 48, 0.05, &mut rng);
+    let qw = QuantizedTensor::from_linear(
+        &quantize_matrix(&w_wide, &QuantConfig::new(Method::Sinq, 4), None).unwrap(),
+    )
+    .unwrap();
+    let qn = QuantizedTensor::from_linear(
+        &quantize_matrix(&w_narrow, &QuantConfig::new(Method::Rtn, 3), None).unwrap(),
+    )
+    .unwrap();
+    let xw = Matrix::randn(5, 96, 1.0, &mut rng);
+    let xn = Matrix::randn(3, 48, 1.0, &mut rng);
+    let mut scratch = KernelScratch::new();
+    for _ in 0..3 {
+        let got = qw.dequant_matmul_shared_with(&xw, 2, &mut scratch);
+        assert_eq!(got.data, qw.dequant_matmul_shared(&xw, 2).data, "wide layer");
+        let got = qn.dequant_matmul_shared_with(&xn, 1, &mut scratch);
+        assert_eq!(got.data, qn.dequant_matmul_shared(&xn, 1).data, "narrow layer");
     }
 }
 

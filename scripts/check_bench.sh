@@ -24,7 +24,13 @@
 # decode report's SIMD path to be ≥ x× scalar tokens/sec at batch 1 and
 # 16 — CI's bench-smoke sets this on runners whose dispatcher selects a
 # non-scalar kernel, so the SIMD paths cannot silently regress to parity
-# with the fallback. Set CHECK_BENCH_PREFIX_TTFT=1 to additionally require
+# with the fallback. Set CHECK_BENCH_THREAD_SCALING=<x> (e.g. 1.3) to
+# additionally require the decode report's auto-width worker pool to be
+# ≥ x× the single-thread tokens/sec at batch 16 — CI's bench-smoke sets
+# this on multi-core runners without a SINQ_THREADS pin, so the pool
+# cannot silently regress to serial throughput (skipped automatically
+# when the report shows only one resolved worker, where the ratio is
+# ~1.0 by construction). Set CHECK_BENCH_PREFIX_TTFT=1 to additionally require
 # the serve report's prefix-hit TTFT to beat its cold TTFT (the prefix
 # cache must actually skip prefill; off by default because quick-mode
 # wall-clocks are noisy).
@@ -122,6 +128,28 @@ if bench == "decode":
                 f"(kernel '{kernel}')"
             )
         print(f"check_bench: {path} SIMD gate ok (kernel '{kernel}', ≥{need}x)")
+    threads = doc.get("threads", 0)
+    assert threads >= 1, f"{path}: missing resolved 'threads' count"
+    tps_t1 = doc.get("tokens_per_sec_t1", 0)
+    tps_tn = doc.get("tokens_per_sec_tN", 0)
+    scaling = doc.get("thread_scaling", 0)
+    assert tps_t1 > 0, f"{path}: missing 'tokens_per_sec_t1'"
+    assert tps_tn > 0, f"{path}: missing 'tokens_per_sec_tN'"
+    assert isinstance(scaling, (int, float)) and math.isfinite(scaling) and scaling > 0, (
+        f"{path}: missing 'thread_scaling'"
+    )
+    want_scaling = os.environ.get("CHECK_BENCH_THREAD_SCALING", "")
+    if want_scaling and threads > 1 and not os.environ.get("SINQ_THREADS", ""):
+        need = float(want_scaling)
+        assert scaling >= need, (
+            f"{path}: thread scaling {scaling:.2f}x at batch 16 "
+            f"({tps_t1:.0f} → {tps_tn:.0f} tok/s over {threads:.0f} workers) "
+            f"< required {need}x"
+        )
+        print(
+            f"check_bench: {path} thread gate ok "
+            f"({threads:.0f} workers, ≥{need}x, got {scaling:.2f}x)"
+        )
 
 if bench == "serve":
     import os
